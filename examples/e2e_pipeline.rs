@@ -1,0 +1,192 @@
+//! End-to-end driver: the full three-layer system on a real small workload.
+//!
+//!     cargo run --release --example e2e_pipeline [workers] [seconds]
+//!
+//! Pipeline (per worker): an open-loop source replays a synthetic text
+//! corpus at a constant rate with quantized-nanosecond timestamps →
+//! exchange by word → rolling word count → tumbling 50 ms windowed
+//! statistics whose batch aggregation runs on the **AOT-compiled
+//! JAX/Pallas kernel via PJRT** (Layer 1/2), orchestrated by the
+//! token-coordinated Rust engine (Layer 3). The run reports the paper's
+//! headline metric — end-to-end completion latency (p50/p999/max) — plus
+//! sustained throughput and the number of PJRT kernel executions,
+//! demonstrating that all layers compose on the request path with Python
+//! nowhere in sight.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+use timestamp_tokens::harness::histogram::{fmt_ns, LatencyHistogram};
+use timestamp_tokens::operators::window::WindowBackend;
+use timestamp_tokens::prelude::*;
+use timestamp_tokens::runtime::XlaWindowBackend;
+
+/// A tiny real corpus (public-domain snippets) replayed in a loop.
+const CORPUS: &str = "it was the best of times it was the worst of times it was the age \
+of wisdom it was the age of foolishness it was the epoch of belief it was the epoch of \
+incredulity call me ishmael some years ago never mind how long precisely having little \
+or no money in my purse and nothing particular to interest me on shore i thought i would \
+sail about a little and see the watery part of the world";
+
+fn main() {
+    let workers: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seconds: u64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let rate_per_worker: u64 = 200_000; // words/s/worker
+    let quantum_ns: u64 = 1 << 16; // 65.5 µs timestamps
+    let window_ns: u64 = 50_000_000; // 50 ms stats windows
+
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // Hash the corpus words once; the sources replay ids.
+    let words: Vec<u64> = CORPUS
+        .split_whitespace()
+        .map(|w| timestamp_tokens::operators::wordcount::fnv1a(w.as_bytes()))
+        .collect();
+    println!(
+        "e2e: {workers} workers, {rate_per_worker} words/s/worker, quantum {}, window {}, {}s",
+        fmt_ns(quantum_ns),
+        fmt_ns(window_ns),
+        seconds
+    );
+
+    let epoch = Instant::now() + Duration::from_millis(100);
+    let results = execute::<u64, _, _>(
+        Config { workers, ..Config::default() },
+        move |worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+
+            // Stage 1: exchanged rolling word count (tokens, oblivious).
+            let counted = stream.word_count();
+
+            // Stage 2: windowed statistics over the counts, aggregated by
+            // the PJRT data plane. Count per window + mean count value.
+            let xla = Rc::new(RefCell::new(
+                XlaWindowBackend::new("artifacts").expect("artifacts compiled"),
+            ));
+            let xla2 = xla.clone();
+            let stats = Rc::new(RefCell::new(Vec::new()));
+            let stats2 = stats.clone();
+            let windowed = counted.unary_frontier(
+                Pact::Pipeline,
+                "window_stats_xla",
+                move |tok, _info| {
+                    drop(tok);
+                    let mut windows: std::collections::BTreeMap<
+                        u64,
+                        (TimestampToken<u64>, Vec<(u64, u64)>),
+                    > = std::collections::BTreeMap::new();
+                    move |input: &mut _, output: &mut _| {
+                        while let Some((token, data)) = input.next() {
+                            let w = (*token.time() / window_ns + 1) * window_ns;
+                            let entry = windows.entry(w).or_insert_with(|| {
+                                let mut t = token.retain();
+                                t.downgrade(&w);
+                                (t, Vec::new())
+                            });
+                            entry.1.extend(data.iter().map(|&(_, c)| (w, c)));
+                        }
+                        let bound = input
+                            .frontier()
+                            .frontier()
+                            .first()
+                            .cloned()
+                            .unwrap_or(u64::MAX);
+                        let sealed: Vec<u64> =
+                            windows.range(..bound).map(|(&w, _)| w).collect();
+                        for w in sealed {
+                            let (token, items) = windows.remove(&w).unwrap();
+                            // Layer 1/2: segmented aggregation on PJRT.
+                            let agg = xla2.borrow_mut().aggregate(&items);
+                            let mut session = output.session(&token);
+                            for (window, sum, count) in agg {
+                                session.give((window, sum, count));
+                            }
+                        }
+                    }
+                },
+            );
+            let probe = windowed
+                .inspect(move |_t, &(w, sum, count)| {
+                    stats2.borrow_mut().push((w, sum, count));
+                })
+                .probe();
+
+            // Open-loop source.
+            let total_ns = seconds * 1_000_000_000;
+            let mut histogram = LatencyHistogram::new();
+            let mut pending: std::collections::VecDeque<u64> = Default::default();
+            let mut sent = 0u64;
+            let mut last_q = 0u64;
+            let mut cursor = worker.index(); // stagger corpus positions
+            while Instant::now() < epoch {
+                std::thread::yield_now();
+            }
+            loop {
+                let now = epoch.elapsed().as_nanos() as u64;
+                if now >= total_ns {
+                    break;
+                }
+                let q = now / quantum_ns * quantum_ns;
+                if q > last_q {
+                    input.advance_to(q);
+                    last_q = q;
+                    pending.push_back(q);
+                }
+                let target = (now as u128 * rate_per_worker as u128 / 1_000_000_000) as u64;
+                while sent < target {
+                    input.send(words[cursor % words.len()]);
+                    cursor += 1;
+                    sent += 1;
+                }
+                worker.step();
+                let now2 = epoch.elapsed().as_nanos() as u64;
+                while let Some(&oldest) = pending.front() {
+                    if !probe.less_equal(&oldest) {
+                        histogram.record(now2.saturating_sub(oldest));
+                        pending.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            let executions = xla.borrow().executions();
+            let n_windows = stats.borrow().len();
+            (histogram, sent, executions, n_windows)
+        },
+    );
+
+    let mut merged = LatencyHistogram::new();
+    let mut total_sent = 0;
+    let mut total_exec = 0;
+    let mut total_windows = 0;
+    for (h, sent, executions, windows) in results {
+        merged.merge(&h);
+        total_sent += sent;
+        total_exec += executions;
+        total_windows += windows;
+    }
+    println!("throughput: {:.2} M words/s sustained", total_sent as f64 / seconds as f64 / 1e6);
+    println!(
+        "completion latency: p50 {}  p999 {}  max {}  ({} stamps)",
+        fmt_ns(merged.p50()),
+        fmt_ns(merged.p999()),
+        fmt_ns(merged.max()),
+        merged.count()
+    );
+    println!("PJRT kernel executions: {total_exec} (windows sealed: {total_windows})");
+    assert!(merged.count() > 0, "no stamps completed");
+    assert!(total_exec > 0, "the XLA data plane was never exercised");
+    assert!(
+        merged.max() < 1_000_000_000,
+        "end-to-end latency exceeded the paper's 1 s DNF bound"
+    );
+    println!("e2e_pipeline OK");
+}

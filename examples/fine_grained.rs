@@ -1,0 +1,121 @@
+//! Fine-grained timestamps (paper §6.2, the DD batching pattern).
+//!
+//!     cargo run --release --example fine_grained
+//!
+//! Events arrive with potentially *unique* nanosecond timestamps. Naiad
+//! would force one system interaction per distinct timestamp; with tokens
+//! the operator batches events into intervals itself: it retains only the
+//! LEAST timestamp token for its un-batched events, seals batches as its
+//! input frontier advances, and downgrades that one token — interacting
+//! with the system at a granularity *it* chooses, independent of the
+//! timestamp granularity.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use timestamp_tokens::prelude::*;
+
+fn main() {
+    let (batches, system_updates) = execute_single::<u64, _, _>(|worker| {
+        let (mut input, stream) = worker.new_input::<(u64, u64)>();
+        let sealed = Rc::new(RefCell::new(Vec::new()));
+        let sealed2 = sealed.clone();
+
+        // The DD-style batcher: one held token, downgraded as the frontier
+        // advances; emits (interval_end, batch_size) per sealed batch.
+        let batched = stream.unary_frontier(
+            Pact::Pipeline,
+            "dd_batcher",
+            move |tok, _info| {
+                // Hold the initial token as "the least timestamp token for
+                // the times of unbatched messages" (§6.2).
+                let mut held: Option<TimestampToken<u64>> = Some(tok);
+                let mut unbatched: Vec<(u64, u64)> = Vec::new();
+                let mut downgrades = 0u64;
+                move |input: &mut _, output: &mut _| {
+                    while let Some((_token, data)) = input.next() {
+                        // NB: per-event tokens are NOT retained — that is
+                        // the whole point. Events buffer locally.
+                        unbatched.extend(data);
+                    }
+                    let frontier_first =
+                        input.frontier().frontier().first().cloned();
+                    if let Some(token) = held.as_mut() {
+                        match frontier_first {
+                            Some(bound) if bound > *token.time() => {
+                                // Seal everything below the new frontier
+                                // into ONE batch, emitted at the token.
+                                let ready: Vec<(u64, u64)> = {
+                                    let (sealed, rest): (Vec<_>, Vec<_>) =
+                                        unbatched.drain(..).partition(|(t, _)| *t < bound);
+                                    unbatched = rest;
+                                    sealed
+                                };
+                                if !ready.is_empty() {
+                                    output
+                                        .session(&*token)
+                                        .give((bound, ready.len() as u64));
+                                }
+                                // ONE system interaction for the whole
+                                // interval, however many distinct
+                                // timestamps it contained.
+                                token.downgrade(&bound);
+                                downgrades += 1;
+                            }
+                            Some(_) => {}
+                            None => {
+                                // Input closed: seal the tail and release.
+                                if !unbatched.is_empty() {
+                                    output
+                                        .session(&*token)
+                                        .give((u64::MAX, unbatched.len() as u64));
+                                    unbatched.clear();
+                                }
+                                let _ = downgrades;
+                                held = None;
+                            }
+                        }
+                    }
+                }
+            },
+        );
+        let probe = batched
+            .inspect(move |_t, (bound, size)| sealed2.borrow_mut().push((*bound, *size)))
+            .probe();
+
+        // 10,000 events with unique ns timestamps, input advancing every
+        // 1000 events (the input chooses ITS granularity too).
+        let mut sent = 0u64;
+        for burst in 0..10u64 {
+            for i in 0..1000u64 {
+                let ns = burst * 1_000_000 + i * 997; // unique ns stamps
+                input.send((ns, i));
+                sent += 1;
+            }
+            input.advance_to((burst + 1) * 1_000_000);
+            // Let the frontier advance so the batcher seals per interval.
+            for _ in 0..4 {
+                worker.step();
+            }
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let got = (sealed.borrow().clone(), sent);
+        got
+    });
+
+    println!("sealed {} batches from {} unique-timestamp events:", batches.len(), system_updates);
+    for (bound, size) in &batches {
+        if *bound == u64::MAX {
+            println!("  final batch: {size} events");
+        } else {
+            println!("  interval up to {bound:>9} ns: {size} events");
+        }
+    }
+    let total: u64 = batches.iter().map(|(_, s)| s).sum();
+    assert_eq!(total, 10_000, "every event lands in exactly one batch");
+    assert!(
+        batches.len() <= 11,
+        "coordination happened per interval, not per distinct timestamp"
+    );
+    println!("fine_grained OK: 10000 distinct timestamps, {} batches", batches.len());
+}

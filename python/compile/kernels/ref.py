@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracle for the window-aggregation kernel.
+
+This is the reference semantics the Pallas kernel (and therefore the AOT
+artifact the Rust runtime executes) must match. pytest asserts allclose
+between :func:`window_agg_ref` and ``window_agg.window_agg`` across
+hypothesis-generated shapes, dtypes-in-range, and value distributions.
+"""
+
+import jax.numpy as jnp
+
+from .window_agg import MAX_INIT, MIN_INIT
+
+
+def window_agg_ref(values, ids, *, n_windows):
+    """Reference segmented aggregation.
+
+    Same contract as ``window_agg.window_agg``: negative ids are padding;
+    outputs are ``(sums, counts, maxs, mins)``, each ``f32[n_windows]``,
+    with empty windows reporting sum 0, count 0, max MAX_INIT, min MIN_INIT.
+    """
+    values = jnp.asarray(values, dtype=jnp.float32)
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    valid = ids >= 0
+    onehot = (ids[:, None] == jnp.arange(n_windows, dtype=jnp.int32)[None, :]) & valid[:, None]
+
+    sums = jnp.sum(jnp.where(onehot, values[:, None], 0.0), axis=0)
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
+    maxs = jnp.max(jnp.where(onehot, values[:, None], MAX_INIT), axis=0)
+    mins = jnp.min(jnp.where(onehot, values[:, None], MIN_INIT), axis=0)
+    return sums, counts, maxs, mins

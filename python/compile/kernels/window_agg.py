@@ -1,0 +1,100 @@
+"""Layer 1: the segmented window-aggregation Pallas kernel.
+
+The data-plane hot spot of the reproduction's workloads (the §5 windowed
+average, the §7.2 word-count tallies, NEXMark Q4/Q7 window maxima) is a
+*segmented reduction*: fold a batch of ``(window_id, value)`` pairs into
+per-window statistics. On GPUs this is idiomatically a scatter-add with
+atomics into shared memory; TPUs have neither. The kernel therefore
+reformulates the reduction as a **one-hot matmul** so the sum/count land on
+the MXU systolic array, with the max/min handled by masked VPU reductions
+(see DESIGN.md §Hardware-Adaptation):
+
+    onehot[N, W] = (ids[:, None] == arange(W)) & (ids >= 0)
+    sums   = onehot^T @ values          # MXU
+    counts = onehot^T @ ones            # MXU
+    maxs   = max_n where(onehot, v, -inf)   # VPU
+    mins   = min_n where(onehot, v, +inf)   # VPU
+
+The grid walks the batch dimension in ``block_n`` chunks, accumulating into
+the full ``[W]`` outputs, so arbitrarily large batches stream through a
+fixed VMEM footprint (block_n * (W + 2) * 4 bytes of live values).
+
+Negative ids mark padding lanes and contribute to nothing.
+
+The kernel is always lowered with ``interpret=True``: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute; interpret
+mode lowers to plain HLO with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel initial values for the max/min accumulators (plain Python floats
+# so the kernel does not capture tracer constants). Finite (rather than
+# +-inf) so that empty windows produce well-defined artifacts; the Rust side
+# treats windows with count == 0 as empty and ignores their max/min lanes.
+MAX_INIT = -3.0e38
+MIN_INIT = 3.0e38
+
+
+def _window_agg_kernel(values_ref, ids_ref, sums_ref, counts_ref, maxs_ref, mins_ref, *, n_windows):
+    """One grid step: fold a block of (value, id) lanes into the accumulators."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        maxs_ref[...] = jnp.full_like(maxs_ref, MAX_INIT)
+        mins_ref[...] = jnp.full_like(mins_ref, MIN_INIT)
+
+    values = values_ref[...]  # [block_n] f32
+    ids = ids_ref[...]  # [block_n] i32
+    valid = ids >= 0
+    # One-hot routing matrix: [block_n, W]. The equality broadcast is cheap
+    # on the VPU; the transposed matmuls below are the MXU work.
+    onehot_bool = (ids[:, None] == jnp.arange(n_windows, dtype=jnp.int32)[None, :]) & valid[:, None]
+    onehot = onehot_bool.astype(jnp.float32)
+
+    sums_ref[...] += onehot.T @ values
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+    masked_max = jnp.where(onehot_bool, values[:, None], MAX_INIT)
+    maxs_ref[...] = jnp.maximum(maxs_ref[...], jnp.max(masked_max, axis=0))
+    masked_min = jnp.where(onehot_bool, values[:, None], MIN_INIT)
+    mins_ref[...] = jnp.minimum(mins_ref[...], jnp.min(masked_min, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_windows", "block_n"))
+def window_agg(values, ids, *, n_windows, block_n=256):
+    """Segmented per-window aggregation.
+
+    Args:
+      values: ``f32[N]`` batch of values (padding lanes arbitrary).
+      ids: ``i32[N]`` window slot per lane, ``-1`` (any negative) = padding.
+      n_windows: number of window slots ``W``.
+      block_n: grid block along the batch dimension.
+
+    Returns:
+      ``(sums f32[W], counts f32[W], maxs f32[W], mins f32[W])``.
+    """
+    n = values.shape[0]
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    out_shape = [jax.ShapeDtypeStruct((n_windows,), jnp.float32) for _ in range(4)]
+    kernel = functools.partial(_window_agg_kernel, n_windows=n_windows)
+    out_spec = pl.BlockSpec((n_windows,), lambda i: (0,))
+    sums, counts, maxs, mins = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(values, ids)
+    return sums, counts, maxs, mins

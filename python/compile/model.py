@@ -1,0 +1,73 @@
+"""Layer 2: the JAX compute graphs lowered to AOT artifacts.
+
+Each entry in :data:`ARTIFACTS` is one fixed-shape computation built on the
+Layer-1 Pallas kernel (``kernels.window_agg``), lowered once by ``aot.py``
+to HLO text and executed from the Rust runtime via PJRT. Shapes are static
+because PJRT executables are shape-specialized; the Rust side pads batches
+to the artifact's batch size (negative ids = padding lanes).
+
+Variants:
+  * ``window_agg_{N}x{W}`` — full four-statistic aggregation used by the
+    windowed-average operator and the e2e pipeline example.
+  * ``window_max_{N}x{W}`` — max-only projection for NEXMark Q7's
+    windowed-highest-bid (smaller module, faster execution).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.window_agg import window_agg
+
+
+def make_window_agg(n, w, block_n=256):
+    """Full aggregation: (values f32[n], ids i32[n]) -> 4 x f32[w]."""
+
+    def fn(values, ids):
+        return window_agg(values, ids, n_windows=w, block_n=min(block_n, n))
+
+    args = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return fn, args
+
+
+def make_window_max(n, w, block_n=256):
+    """Max-only aggregation: (values f32[n], ids i32[n]) -> (maxs, counts)."""
+
+    def fn(values, ids):
+        sums, counts, maxs, _mins = window_agg(
+            values, ids, n_windows=w, block_n=min(block_n, n)
+        )
+        del sums
+        return maxs, counts
+
+    args = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return fn, args
+
+
+# name -> (builder, metadata). Metadata is copied into the manifest that the
+# Rust runtime reads (artifacts/manifest.txt).
+ARTIFACTS = {
+    "window_agg_1024x64": {
+        "build": lambda: make_window_agg(1024, 64),
+        "n": 1024,
+        "w": 64,
+        "outputs": 4,
+    },
+    "window_agg_256x16": {
+        "build": lambda: make_window_agg(256, 16),
+        "n": 256,
+        "w": 16,
+        "outputs": 4,
+    },
+    "window_max_1024x64": {
+        "build": lambda: make_window_max(1024, 64),
+        "n": 1024,
+        "w": 64,
+        "outputs": 2,
+    },
+}

@@ -1,0 +1,110 @@
+"""Layer-1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the AOT data plane: the artifact
+the Rust runtime executes is the lowered form of exactly the function under
+test here. Hypothesis sweeps batch sizes, window counts, block sizes, id
+distributions (including all-padding), and value ranges.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import window_agg_ref
+from compile.kernels.window_agg import MAX_INIT, MIN_INIT, window_agg
+
+
+def assert_matches_ref(values, ids, n_windows, block_n):
+    got = window_agg(
+        jnp.asarray(values, jnp.float32),
+        jnp.asarray(ids, jnp.int32),
+        n_windows=n_windows,
+        block_n=block_n,
+    )
+    want = window_agg_ref(values, ids, n_windows=n_windows)
+    for g, w, name in zip(got, want, ["sums", "counts", "maxs", "mins"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4, err_msg=name
+        )
+
+
+def test_simple_two_windows():
+    values = [1.0, 2.0, 3.0, 4.0]
+    ids = [0, 1, 0, 1]
+    sums, counts, maxs, mins = window_agg(
+        jnp.asarray(values, jnp.float32),
+        jnp.asarray(ids, jnp.int32),
+        n_windows=2,
+        block_n=4,
+    )
+    np.testing.assert_allclose(np.asarray(sums), [4.0, 6.0])
+    np.testing.assert_allclose(np.asarray(counts), [2.0, 2.0])
+    np.testing.assert_allclose(np.asarray(maxs), [3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(mins), [1.0, 2.0])
+
+
+def test_padding_lanes_ignored():
+    values = [5.0, 100.0, 7.0, -100.0]
+    ids = [0, -1, 0, -1]
+    sums, counts, maxs, mins = window_agg(
+        jnp.asarray(values, jnp.float32),
+        jnp.asarray(ids, jnp.int32),
+        n_windows=1,
+        block_n=4,
+    )
+    assert float(sums[0]) == 12.0
+    assert float(counts[0]) == 2.0
+    assert float(maxs[0]) == 7.0
+    assert float(mins[0]) == 5.0
+
+
+def test_empty_windows_report_sentinels():
+    values = [1.0] * 4
+    ids = [0] * 4
+    sums, counts, maxs, mins = window_agg(
+        jnp.asarray(values, jnp.float32),
+        jnp.asarray(ids, jnp.int32),
+        n_windows=3,
+        block_n=4,
+    )
+    assert float(counts[1]) == 0.0 and float(counts[2]) == 0.0
+    assert float(maxs[1]) == pytest.approx(float(MAX_INIT))
+    assert float(mins[2]) == pytest.approx(float(MIN_INIT))
+
+
+def test_accumulates_across_grid_blocks():
+    # N = 512 with block_n = 128: 4 grid steps must accumulate.
+    rng = np.random.default_rng(0)
+    values = rng.normal(size=512).astype(np.float32)
+    ids = rng.integers(0, 8, size=512).astype(np.int32)
+    assert_matches_ref(values, ids, n_windows=8, block_n=128)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([8, 32, 128]),
+    n_windows=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    padding_frac=st.floats(0.0, 1.0),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_hypothesis_matches_ref(n_blocks, block_n, n_windows, seed, padding_frac, scale):
+    n = n_blocks * block_n
+    rng = np.random.default_rng(seed)
+    values = (rng.normal(size=n) * scale).astype(np.float32)
+    ids = rng.integers(0, n_windows, size=n).astype(np.int32)
+    pad = rng.random(size=n) < padding_frac
+    ids = np.where(pad, -1, ids).astype(np.int32)
+    assert_matches_ref(values, ids, n_windows=n_windows, block_n=block_n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_all_padding_batch(seed):
+    rng = np.random.default_rng(seed)
+    values = rng.normal(size=64).astype(np.float32)
+    ids = np.full(64, -1, dtype=np.int32)
+    assert_matches_ref(values, ids, n_windows=4, block_n=32)

@@ -1,0 +1,42 @@
+"""Layer-2 checks: artifact registry shapes and AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.model import ARTIFACTS, make_window_agg, make_window_max
+
+
+@pytest.mark.parametrize("name", sorted(ARTIFACTS))
+def test_artifact_builds_and_lowers(name):
+    spec = ARTIFACTS[name]
+    fn, args = spec["build"]()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text, "expected HLO text with an entry computation"
+    # The entry returns a tuple with the declared number of outputs.
+    assert text.count("f32[%d]" % spec["w"]) >= spec["outputs"]
+
+
+def test_window_agg_outputs_match_registry_shapes():
+    fn, _ = make_window_agg(256, 16)
+    values = jnp.zeros(256, jnp.float32)
+    ids = jnp.zeros(256, jnp.int32)
+    outs = fn(values, ids)
+    assert len(outs) == 4
+    for o in outs:
+        assert o.shape == (16,)
+
+
+def test_window_max_is_projection_of_full_agg():
+    rng = np.random.default_rng(7)
+    values = jnp.asarray(rng.normal(size=1024), jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, 64, size=1024), jnp.int32)
+    full_fn, _ = make_window_agg(1024, 64)
+    max_fn, _ = make_window_max(1024, 64)
+    _, counts_full, maxs_full, _ = full_fn(values, ids)
+    maxs, counts = max_fn(values, ids)
+    np.testing.assert_allclose(np.asarray(maxs), np.asarray(maxs_full))
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_full))

@@ -1,0 +1,89 @@
+//! Shared bench-harness plumbing (criterion is unavailable offline; each
+//! bench is a `harness = false` binary printing paper-format tables).
+
+use std::time::Duration;
+
+/// Sweep scaling knobs, settable from the command line:
+/// `cargo bench --bench fig6_granularity -- [--quick] [--duration-ms N]
+/// [--workers N] [--scale F]`.
+#[derive(Clone, Debug)]
+pub struct BenchArgs {
+    /// Shrinks sweeps to smoke-test size.
+    pub quick: bool,
+    /// Measured duration per experiment.
+    pub duration: Duration,
+    /// Warmup per experiment.
+    pub warmup: Duration,
+    /// Worker cap (defaults to the paper's 8, bounded by cores).
+    pub workers: usize,
+    /// Load multiplier relative to the bench's scaled-down defaults.
+    pub scale: f64,
+    /// Extra positional selector (e.g. `weak` / `strong`, `q4` / `q7`).
+    pub selector: Option<String>,
+}
+
+impl BenchArgs {
+    /// Parses `std::env::args`, ignoring flags cargo-bench injects.
+    pub fn parse() -> Self {
+        let mut args = BenchArgs {
+            quick: false,
+            duration: Duration::from_millis(1500),
+            warmup: Duration::from_millis(500),
+            workers: available_workers().min(8),
+            scale: 1.0,
+            selector: None,
+        };
+        let mut iter = std::env::args().skip(1);
+        while let Some(arg) = iter.next() {
+            match arg.as_str() {
+                "--quick" => {
+                    args.quick = true;
+                    args.duration = Duration::from_millis(300);
+                    args.warmup = Duration::from_millis(100);
+                }
+                "--duration-ms" => {
+                    if let Some(v) = iter.next().and_then(|s| s.parse().ok()) {
+                        args.duration = Duration::from_millis(v);
+                    }
+                }
+                "--workers" => {
+                    if let Some(v) = iter.next().and_then(|s| s.parse().ok()) {
+                        args.workers = v;
+                    }
+                }
+                "--scale" => {
+                    if let Some(v) = iter.next().and_then(|s| s.parse().ok()) {
+                        args.scale = v;
+                    }
+                }
+                "--bench" | "--nocapture" => {} // cargo-bench artifacts
+                other if !other.starts_with('-') => {
+                    args.selector = Some(other.to_string());
+                }
+                _ => {}
+            }
+        }
+        args
+    }
+
+    /// Applies the load multiplier.
+    pub fn rate(&self, base: u64) -> u64 {
+        ((base as f64) * self.scale).max(1.0) as u64
+    }
+}
+
+/// Physical parallelism available to the bench.
+pub fn available_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Formats a tuples/s rate like the paper ("4M", "250K").
+pub fn fmt_rate(rate: u64) -> String {
+    if rate >= 1_000_000 {
+        format!("{}M", rate / 1_000_000)
+    } else if rate >= 1_000 {
+        format!("{}K", rate / 1_000)
+    } else {
+        format!("{rate}")
+    }
+}

@@ -1,0 +1,65 @@
+//! Figure 6: word-count latency vs timestamp quantum, per mechanism.
+//!
+//! Paper setup: single-operator word-count dataflow on 8 cores; offered
+//! loads below and above saturation; timestamp quanta 2^8..2^16 ns; report
+//! p50 / p999 / max, DNF when end-to-end latency exceeds 1 s.
+//!
+//! Expected shape (paper §7.2.1): notifications collapse below ~2^13 ns
+//! (one system interaction per distinct timestamp); tokens and watermarks
+//! handle every quantum; at overload watermarks show slightly higher
+//! median. Loads here are scaled to this testbed (the paper's 32 M/64 M
+//! tuples/s ran on a 32-core EPYC with a hand-tuned engine); override with
+//! `--scale`.
+
+mod common;
+
+use common::{fmt_rate, BenchArgs};
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::harness::openloop::{run, Params, Workload};
+use timestamp_tokens::harness::report::{latency_cells, print_table};
+
+fn main() {
+    let args = BenchArgs::parse();
+    // Scaled stand-ins for the paper's 32 M (below saturation) and 64 M
+    // (overload) tuples/s total.
+    let loads: Vec<u64> = if args.quick {
+        vec![args.rate(200_000)]
+    } else {
+        vec![args.rate(1_000_000), args.rate(2_000_000), args.rate(4_000_000)]
+    };
+    let quanta: Vec<u32> = if args.quick { vec![12, 16] } else { vec![8, 10, 12, 14, 16] };
+    let mechanisms =
+        [Mechanism::Tokens, Mechanism::Notifications, Mechanism::WatermarksX];
+
+    println!(
+        "Figure 6 reproduction: word-count latency vs timestamp quantum ({} workers, {:?}/point)",
+        args.workers, args.duration
+    );
+    for &load in &loads {
+        let mut rows = Vec::new();
+        for &q in &quanta {
+            for mechanism in mechanisms {
+                let mut params = Params::new(mechanism, Workload::WordCount);
+                params.workers = args.workers;
+                params.rate_per_worker = load / args.workers as u64;
+                params.quantum_ns = 1 << q;
+                params.duration = args.duration;
+                params.warmup = args.warmup;
+                let outcome = run(params);
+                let lat = latency_cells(&outcome);
+                rows.push(vec![
+                    format!("2^{q}"),
+                    mechanism.label().to_string(),
+                    lat[0].clone(),
+                    lat[1].clone(),
+                    lat[2].clone(),
+                ]);
+            }
+        }
+        print_table(
+            &format!("word-count @ {} tuples/s total", fmt_rate(load)),
+            &["quantum", "mechanism", "p50(ms)", "p999(ms)", "max(ms)"],
+            &rows,
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Figure 7: weak and strong scaling of the word-count workload.
+//!
+//! * Weak (7a): offered load fixed per worker, workers swept; paper uses
+//!   2 M tuples/s/worker with quanta 2^16 and 2^8 — notifications fail at
+//!   2^8 for any scale.
+//! * Strong (7b): total load fixed, workers swept; with few workers all
+//!   mechanisms fail, then recover as workers are added (notifications
+//!   never recover at 2^8).
+//!
+//! Run one half with `-- weak` or `-- strong`; default runs both.
+
+mod common;
+
+use common::{fmt_rate, BenchArgs};
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::harness::openloop::{run, Params, Workload};
+use timestamp_tokens::harness::report::{latency_cells, print_table};
+
+fn sweep(
+    args: &BenchArgs,
+    title: &str,
+    worker_counts: &[usize],
+    rate_for: impl Fn(usize) -> u64,
+    quanta: &[u32],
+) {
+    let mechanisms =
+        [Mechanism::Tokens, Mechanism::Notifications, Mechanism::WatermarksX];
+    let mut rows = Vec::new();
+    for &q in quanta {
+        for &workers in worker_counts {
+            for mechanism in mechanisms {
+                let mut params = Params::new(mechanism, Workload::WordCount);
+                params.workers = workers;
+                params.rate_per_worker = rate_for(workers);
+                params.quantum_ns = 1 << q;
+                params.duration = args.duration;
+                params.warmup = args.warmup;
+                let outcome = run(params);
+                let lat = latency_cells(&outcome);
+                rows.push(vec![
+                    format!("2^{q}"),
+                    workers.to_string(),
+                    fmt_rate(rate_for(workers) * workers as u64),
+                    mechanism.label().to_string(),
+                    lat[0].clone(),
+                    lat[1].clone(),
+                    lat[2].clone(),
+                ]);
+            }
+        }
+    }
+    print_table(
+        title,
+        &["quantum", "workers", "total rate", "mechanism", "p50(ms)", "p999(ms)", "max(ms)"],
+        &rows,
+    );
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let worker_counts: Vec<usize> = if args.quick {
+        vec![1, 2]
+    } else {
+        [1, 2, 4, 6, 8].iter().cloned().filter(|&w| w <= args.workers).collect()
+    };
+    let quanta: Vec<u32> = if args.quick { vec![16] } else { vec![16, 8] };
+    // Scaled stand-ins for the paper's 2 M/worker (weak) and 20 M (strong).
+    let weak_rate = args.rate(250_000);
+    let strong_total = args.rate(2_000_000);
+
+    let which = args.selector.as_deref().unwrap_or("both");
+    println!("Figure 7 reproduction ({} max workers, {:?}/point)", args.workers, args.duration);
+    if which == "weak" || which == "both" {
+        sweep(
+            &args,
+            &format!("7a weak scaling: {} tuples/s per worker", fmt_rate(weak_rate)),
+            &worker_counts,
+            |_w| weak_rate,
+            &quanta,
+        );
+    }
+    if which == "strong" || which == "both" {
+        sweep(
+            &args,
+            &format!("7b strong scaling: {} tuples/s total", fmt_rate(strong_total)),
+            &worker_counts,
+            |w| strong_total / w as u64,
+            &quanta,
+        );
+    }
+}

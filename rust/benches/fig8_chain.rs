@@ -1,0 +1,104 @@
+//! Figure 8: idle no-op operator chains — the cost of retiring timestamps
+//! through inactive dataflow fragments.
+//!
+//! * (8a) chain length 8..256 × tick rate: watermarks-X degrades with
+//!   chain length (every operator is invoked for every watermark, marks
+//!   broadcast at every stage); tokens / notifications / watermarks-P stay
+//!   flat (frontiers advance inside the tracker without scheduling a
+//!   single operator).
+//! * (8b) weak scaling at chain = 256.
+//!
+//! Run one half with `-- length` or `-- scaling`; default runs both.
+
+mod common;
+
+use common::{fmt_rate, BenchArgs};
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::harness::openloop::{run, Params, Workload};
+use timestamp_tokens::harness::report::{latency_cells, print_table};
+
+const MECHANISMS: [Mechanism; 4] = [
+    Mechanism::Tokens,
+    Mechanism::Notifications,
+    Mechanism::WatermarksX,
+    Mechanism::WatermarksP,
+];
+
+fn run_point(
+    args: &BenchArgs,
+    workers: usize,
+    chain: usize,
+    ticks_per_sec: u64,
+    mechanism: Mechanism,
+) -> Vec<String> {
+    let mut params = Params::new(mechanism, Workload::NoopChain(chain));
+    params.workers = workers;
+    params.quantum_ns = 1_000_000_000 / ticks_per_sec.max(1);
+    params.duration = args.duration;
+    params.warmup = args.warmup;
+    let outcome = run(params);
+    let lat = latency_cells(&outcome);
+    vec![
+        chain.to_string(),
+        fmt_rate(ticks_per_sec),
+        workers.to_string(),
+        mechanism.label().to_string(),
+        lat[0].clone(),
+        lat[1].clone(),
+        lat[2].clone(),
+    ]
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let which = args.selector.as_deref().unwrap_or("both");
+    println!(
+        "Figure 8 reproduction: idle operator chains ({} workers, {:?}/point)",
+        args.workers, args.duration
+    );
+
+    if which == "length" || which == "both" {
+        let chains: Vec<usize> = if args.quick { vec![8, 32] } else { vec![8, 32, 64, 128, 256] };
+        let tick_rates: Vec<u64> = if args.quick {
+            vec![args.rate(15_000)]
+        } else {
+            vec![args.rate(15_000), args.rate(100_000)]
+        };
+        let mut rows = Vec::new();
+        for &rate in &tick_rates {
+            for &chain in &chains {
+                for mechanism in MECHANISMS {
+                    rows.push(run_point(&args, args.workers, chain, rate, mechanism));
+                }
+            }
+        }
+        print_table(
+            "8a: latency vs chain length (timestamps/sec offered)",
+            &["chain", "ticks/s", "workers", "mechanism", "p50(ms)", "p999(ms)", "max(ms)"],
+            &rows,
+        );
+    }
+
+    if which == "scaling" || which == "both" {
+        let chain = if args.quick { 32 } else { 256 };
+        let worker_counts: Vec<usize> = if args.quick {
+            vec![1, 2]
+        } else {
+            [1, 2, 4, 6, 8].iter().cloned().filter(|&w| w <= args.workers).collect()
+        };
+        let tick_rates = [args.rate(15_000), args.rate(100_000)];
+        let mut rows = Vec::new();
+        for &rate in &tick_rates {
+            for &workers in &worker_counts {
+                for mechanism in MECHANISMS {
+                    rows.push(run_point(&args, workers, chain, rate, mechanism));
+                }
+            }
+        }
+        print_table(
+            &format!("8b: weak scaling at chain = {chain} (ticks/s per worker)"),
+            &["chain", "ticks/s", "workers", "mechanism", "p50(ms)", "p999(ms)", "max(ms)"],
+            &rows,
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Figure 9: NEXMark Q4 and Q7 end-to-end latency tables.
+//!
+//! Paper shape: Q4's data-dependent windows (one distinct closing
+//! timestamp per auction) make Naiad-style notifications DNF in *every*
+//! configuration, while tokens and watermarks remain competitive; Q7's
+//! coarse shared windows keep all three mechanisms comparable. Rates are
+//! scaled stand-ins for the paper's 4/6/8 M tuples/s (override with
+//! `--scale`); worker counts follow the paper's 4/8/12 bounded by cores.
+//!
+//! Run one query with `-- q4` or `-- q7`; default runs both.
+
+mod common;
+
+use common::{fmt_rate, BenchArgs};
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::harness::report::{latency_cells, print_table};
+use timestamp_tokens::nexmark::bench::{run_nexmark, NexmarkParams, Query};
+
+const MECHANISMS: [Mechanism; 3] =
+    [Mechanism::Tokens, Mechanism::Notifications, Mechanism::WatermarksX];
+
+fn sweep(args: &BenchArgs, query: Query, title: &str) {
+    let rates: Vec<u64> = if args.quick {
+        vec![args.rate(100_000)]
+    } else {
+        vec![args.rate(500_000), args.rate(750_000), args.rate(1_000_000)]
+    };
+    let worker_counts: Vec<usize> = if args.quick {
+        vec![2]
+    } else {
+        [4, 8, 12]
+            .iter()
+            .cloned()
+            .filter(|&w| w <= common::available_workers())
+            .collect()
+    };
+    let mut rows = Vec::new();
+    for &rate in &rates {
+        for &workers in &worker_counts {
+            let mut cells = vec![fmt_rate(rate), workers.to_string()];
+            for mechanism in MECHANISMS {
+                let mut params = NexmarkParams::new(mechanism, query);
+                params.workers = workers;
+                params.rate_per_worker = rate / workers as u64;
+                params.duration = args.duration;
+                params.warmup = args.warmup;
+                // Auction lifetimes bounded well under the DNF threshold.
+                params.generator.expiry_max_ns = 100_000_000;
+                let outcome = run_nexmark(params);
+                cells.extend(latency_cells(&outcome));
+            }
+            rows.push(cells);
+        }
+    }
+    print_table(
+        title,
+        &[
+            "tuples/s",
+            "workers",
+            "tok p50",
+            "tok p999",
+            "tok max",
+            "not p50",
+            "not p999",
+            "not max",
+            "wm p50",
+            "wm p999",
+            "wm max",
+        ],
+        &rows,
+    );
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let which = args.selector.as_deref().unwrap_or("both");
+    println!(
+        "Figure 9 reproduction: NEXMark end-to-end latency (ms; {:?}/point)",
+        args.duration
+    );
+    if which == "q4" || which == "both" {
+        sweep(&args, Query::Q4, "NEXMark Q4 (average closing price per category)");
+    }
+    if which == "q7" || which == "both" {
+        sweep(
+            &args,
+            Query::Q7 { window_ns: 100_000_000 },
+            "NEXMark Q7 (highest bid per 100ms window)",
+        );
+    }
+}

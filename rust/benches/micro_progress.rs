@@ -1,0 +1,129 @@
+//! Microbenchmarks of the coordination substrate itself — the inputs to
+//! the performance pass (EXPERIMENTS.md §Perf): how fast can the engine
+//! move pointstamp updates end to end?
+//!
+//! Reports tokens-operations/s for: ChangeBatch accumulation,
+//! MutableAntichain churn, Tracker::apply on a pipeline topology, the
+//! sequenced ProgressLog, and a whole-engine step loop.
+
+mod common;
+
+use common::BenchArgs;
+use std::time::Instant;
+use timestamp_tokens::dataflow::token::BookkeepingHandle;
+use timestamp_tokens::progress::antichain::MutableAntichain;
+use timestamp_tokens::progress::change_batch::ChangeBatch;
+use timestamp_tokens::progress::exchange::ProgressLog;
+use timestamp_tokens::progress::location::Location;
+use timestamp_tokens::progress::reachability::{GraphTopology, NodeTopology};
+use timestamp_tokens::progress::tracker::Tracker;
+
+fn rate(label: &str, ops: u64, start: Instant) {
+    let secs = start.elapsed().as_secs_f64();
+    println!("{label:>42}: {:>8.2} M ops/s  ({ops} ops in {secs:.3}s)", ops as f64 / secs / 1e6);
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let n: u64 = if args.quick { 200_000 } else { 5_000_000 };
+
+    // ChangeBatch: the token bookkeeping hot path.
+    {
+        let mut batch = ChangeBatch::new();
+        let start = Instant::now();
+        for i in 0..n {
+            batch.update((Location::source(0, 0), i % 1024), 1);
+            batch.update((Location::source(0, 0), i % 1024), -1);
+        }
+        let _ = batch.is_empty();
+        rate("ChangeBatch update (+1/-1 pairs)", 2 * n, start);
+    }
+
+    // MutableAntichain: frontier churn with monotone timestamps.
+    {
+        let mut ma = MutableAntichain::new();
+        ma.update_iter(vec![(0u64, 1)]);
+        let start = Instant::now();
+        for t in 0..n {
+            ma.update_iter(vec![(t + 1, 1), (t, -1)]);
+        }
+        rate("MutableAntichain monotone downgrade", n, start);
+    }
+
+    // Tracker::apply on a 16-operator pipeline: downgrade storms.
+    {
+        let mut g = GraphTopology::<u64>::default();
+        g.nodes.push(NodeTopology::identity("input", 0, 1));
+        for i in 0..16 {
+            g.nodes.push(NodeTopology::identity(&format!("op{i}"), 1, 1));
+        }
+        g.nodes.push(NodeTopology::identity("probe", 1, 0));
+        for i in 0..17 {
+            g.edges.push((Location::source(i, 0), Location::target(i + 1, 0)));
+        }
+        let mut tracker = Tracker::new(&g, 1);
+        // Drop operator tokens so only the input token remains.
+        tracker.apply((1..17).map(|i| ((Location::source(i, 0), 0u64), -1)));
+        let m = n / 10;
+        let start = Instant::now();
+        for t in 0..m {
+            tracker.apply(vec![
+                ((Location::source(0, 0), t + 1), 1),
+                ((Location::source(0, 0), t), -1),
+            ]);
+        }
+        rate("Tracker::apply 17-stage downgrade", m, start);
+    }
+
+    // ProgressLog: sequenced append+read, single worker.
+    {
+        let log = ProgressLog::<u64>::new(1);
+        let mut buf = Vec::new();
+        let m = n / 5;
+        let start = Instant::now();
+        for t in 0..m {
+            log.append_and_read(0, vec![((Location::source(0, 0), t), 1)], &mut buf);
+            buf.clear();
+        }
+        rate("ProgressLog append+read", m, start);
+    }
+
+    // Bookkeeping handle: the per-token-action cost seen by operators.
+    {
+        let bookkeeping = BookkeepingHandle::<u64>::new();
+        let mut sink = Vec::new();
+        let start = Instant::now();
+        for t in 0..n {
+            bookkeeping.update(Location::source(0, 0), t % 512, 1);
+            bookkeeping.update(Location::source(0, 0), t % 512, -1);
+        }
+        bookkeeping.drain_into(&mut sink);
+        rate("BookkeepingHandle token churn", 2 * n, start);
+    }
+
+    // Whole-engine: single-worker step loop with an advancing input.
+    {
+        use timestamp_tokens::dataflow::probe::ProbeExt;
+        use timestamp_tokens::operators::noop::NoopExt;
+        use timestamp_tokens::worker::execute::execute_single;
+        let m = if args.quick { 20_000 } else { 400_000 };
+        let (steps, secs) = execute_single::<u64, _, _>(move |worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let probe = stream.noop_chain(4).probe();
+            worker.finalize();
+            let start = Instant::now();
+            for t in 0..m {
+                input.advance_to(t + 1);
+                worker.step();
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            (m, start.elapsed().as_secs_f64())
+        });
+        println!(
+            "{:>42}: {:>8.2} K epochs/s  ({steps} epochs in {secs:.3}s)",
+            "engine epoch advance (4-op chain)",
+            steps as f64 / secs / 1e3
+        );
+    }
+}

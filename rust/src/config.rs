@@ -1,0 +1,82 @@
+//! Runtime configuration.
+//!
+//! The launcher (`ttd`) and the bench harness construct [`Config`] from
+//! command-line flags (the crate environment has no CLI dependency, so
+//! parsing is hand-rolled in `cli.rs`); library users construct it
+//! directly.
+
+/// Records buffered per output session before a message batch is posted.
+/// Bounded so that latency stays low even under bursty sessions.
+pub const SEND_BATCH: usize = 1024;
+
+/// Which data-plane backend windowed aggregations use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggBackend {
+    /// Plain Rust aggregation in operator logic.
+    Native,
+    /// The AOT-compiled JAX/Pallas kernel, executed via PJRT
+    /// (`runtime::WindowAggregator`).
+    Xla,
+}
+
+impl std::str::FromStr for AggBackend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(AggBackend::Native),
+            "xla" => Ok(AggBackend::Xla),
+            other => Err(format!("unknown aggregation backend: {other}")),
+        }
+    }
+}
+
+/// Top-level runtime configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of worker threads.
+    pub workers: usize,
+    /// Pin worker threads to physical cores (paper §7.1 pins each timely
+    /// worker to a distinct physical core).
+    pub pin_workers: bool,
+    /// Aggregation backend for windowing operators that support both.
+    pub agg_backend: AggBackend,
+    /// Directory holding AOT artifacts (`*.hlo.txt`).
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: 1,
+            pin_workers: true,
+            agg_backend: AggBackend::Native,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// A default config with `workers` workers.
+    pub fn default_with_workers(workers: usize) -> Self {
+        Config { workers, ..Config::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_backend_parses() {
+        assert_eq!("native".parse::<AggBackend>().unwrap(), AggBackend::Native);
+        assert_eq!("xla".parse::<AggBackend>().unwrap(), AggBackend::Xla);
+        assert!("cuda".parse::<AggBackend>().is_err());
+    }
+
+    #[test]
+    fn default_config() {
+        let c = Config::default();
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.agg_backend, AggBackend::Native);
+    }
+}

@@ -1,0 +1,69 @@
+//! The three coordination mechanisms the paper evaluates (§7), all built on
+//! the same substrate — exactly the methodology of §7: "In order to compare
+//! with Flink-style watermarks without the confounding factor of running on
+//! a different platform ... we re-implemented Flink's watermarks technique
+//! on the same communication and scheduling framework."
+//!
+//! * **tokens** — the native idiom: operators hold/downgrade/drop
+//!   [`crate::dataflow::TimestampToken`]s directly (nothing extra needed).
+//! * [`notificator`] — Naiad-style notifications *as library operator
+//!   logic* (§4: "we have implemented Naiad notifications in library
+//!   operator logic"), including Naiad's unsorted pending list and
+//!   one-notification-per-invocation contract.
+//! * [`watermark`] — Flink-style watermarks: in-stream control records;
+//!   each operator holds exactly one token per output, downgraded as its
+//!   output watermark advances (§4: "operators that explicitly hold
+//!   timestamp tokens for their output watermarks and downgrade them
+//!   whenever these watermarks advance").
+
+pub mod notificator;
+pub mod watermark;
+
+/// Which coordination mechanism a workload runs with (bench configuration).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    /// Timestamp tokens (the paper's contribution).
+    Tokens,
+    /// Naiad-style notifications.
+    Notifications,
+    /// Flink-style watermarks, cross-worker exchange at every stage
+    /// (watermarks-X in §7.3).
+    WatermarksX,
+    /// Flink-style watermarks, worker-local pipelines (watermarks-P).
+    WatermarksP,
+}
+
+impl Mechanism {
+    /// All mechanisms, in the paper's reporting order.
+    pub fn all() -> [Mechanism; 4] {
+        [
+            Mechanism::Tokens,
+            Mechanism::Notifications,
+            Mechanism::WatermarksX,
+            Mechanism::WatermarksP,
+        ]
+    }
+
+    /// The label used in tables and plots.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mechanism::Tokens => "tokens",
+            Mechanism::Notifications => "notifications",
+            Mechanism::WatermarksX => "watermarks-X",
+            Mechanism::WatermarksP => "watermarks-P",
+        }
+    }
+}
+
+impl std::str::FromStr for Mechanism {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "tokens" => Ok(Mechanism::Tokens),
+            "notifications" => Ok(Mechanism::Notifications),
+            "watermarks-x" | "watermarks-X" => Ok(Mechanism::WatermarksX),
+            "watermarks-p" | "watermarks-P" => Ok(Mechanism::WatermarksP),
+            other => Err(format!("unknown mechanism: {other}")),
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! Flink-style watermarks, re-implemented on the token substrate (§7).
+//!
+//! Watermarks are *in-stream control records*: every operator must be
+//! scheduled to observe, merge (min across upstream instances), and
+//! re-emit them — even when it has no data — which is exactly the cost the
+//! paper's Figure 8 measures. Under the hood each watermark operator holds
+//! exactly one timestamp token per output and downgrades it as its output
+//! watermark advances (§4), so the engine's progress tracking stays sound
+//! without the operator ever reading a frontier.
+//!
+//! Two wirings, as in §7.3:
+//! * [`WmWiring::Exchanged`] (watermarks-X): data routed by key, marks
+//!   broadcast to every worker at every stage;
+//! * [`WmWiring::Pipelined`] (watermarks-P): operators form worker-local
+//!   pipelines (the paper's "unrealistic" best case for watermarks).
+
+use crate::dataflow::channels::{Data, Pact, Route};
+use crate::dataflow::input::InputSession;
+use crate::dataflow::operator::OperatorExt;
+use crate::dataflow::stream::Stream;
+use crate::dataflow::token::TimestampToken;
+use crate::worker::Worker;
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// The watermark value that signals a closed stream.
+pub const WM_CLOSED: u64 = u64::MAX;
+
+/// A record on a watermark-coordinated stream: event-time data or a
+/// watermark from one upstream operator instance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WmRecord<D> {
+    /// A data record with its event time (nanoseconds).
+    Data(u64, D),
+    /// "Upstream instance `from` will send no data with event time < `wm`."
+    Mark {
+        /// Sending worker's index.
+        from: usize,
+        /// The watermark.
+        wm: u64,
+    },
+}
+
+/// Channel wiring for watermark operators (§7.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WmWiring {
+    /// Cross-worker exchange at every stage; marks broadcast (watermarks-X).
+    Exchanged,
+    /// Worker-local pipelines; marks stay local (watermarks-P).
+    Pipelined,
+}
+
+/// Operator logic under watermark coordination.
+pub trait WmLogic<D, D2>: 'static {
+    /// Called per data record; emissions are `(event_time, record)` pairs.
+    fn on_data(&mut self, event_time: u64, record: D, out: &mut Vec<(u64, D2)>);
+    /// Called when the operator's *input* watermark advances.
+    fn on_watermark(&mut self, wm: u64, out: &mut Vec<(u64, D2)>);
+}
+
+/// A pass-through (no-op) watermark operator: the idle-pipeline workload of
+/// Figure 8.
+pub struct WmNoop;
+impl<D> WmLogic<D, D> for WmNoop {
+    fn on_data(&mut self, event_time: u64, record: D, out: &mut Vec<(u64, D)>) {
+        out.push((event_time, record));
+    }
+    fn on_watermark(&mut self, _wm: u64, _out: &mut Vec<(u64, D)>) {}
+}
+
+/// Tracks the minimum watermark across the expected upstream instances.
+pub struct WmMerger {
+    senders: Vec<u64>,
+    merged: u64,
+}
+
+impl WmMerger {
+    /// A merger expecting marks from `expected` upstream instances (slots
+    /// are worker indices for exchanged wirings).
+    pub fn new(expected: usize) -> Self {
+        WmMerger { senders: vec![0; expected.max(1)], merged: 0 }
+    }
+
+    /// Folds in a mark; returns the new merged watermark if it advanced.
+    pub fn observe(&mut self, from: usize, wm: u64) -> Option<u64> {
+        let slot = from % self.senders.len();
+        if wm > self.senders[slot] {
+            self.senders[slot] = wm;
+        }
+        let min = *self.senders.iter().min().expect("nonempty");
+        if min > self.merged {
+            self.merged = min;
+            Some(min)
+        } else {
+            None
+        }
+    }
+
+    /// The current merged watermark.
+    pub fn current(&self) -> u64 {
+        self.merged
+    }
+}
+
+/// Watermark-coordinated operators on streams of [`WmRecord`]s.
+pub trait WatermarkExt<D: Data> {
+    /// A unary watermark operator: routes data by `key` (under
+    /// [`WmWiring::Exchanged`]), merges upstream marks, invokes `logic`,
+    /// forwards its output watermark downstream, and downgrades its held
+    /// token accordingly.
+    fn wm_unary<D2: Data, K, L>(
+        &self,
+        wiring: WmWiring,
+        name: &str,
+        key: K,
+        logic: L,
+    ) -> Stream<u64, WmRecord<D2>>
+    where
+        K: Fn(&D) -> u64 + 'static,
+        L: WmLogic<D, D2>;
+
+    /// A chain of `n` no-op watermark operators (Figure 8's workload).
+    fn wm_noop_chain(&self, wiring: WmWiring, n: usize) -> Stream<u64, WmRecord<D>>;
+
+    /// A terminal watermark observer: `on_advance` fires with each merged
+    /// watermark advance; the returned probe reports the sink watermark.
+    fn wm_probe<F: FnMut(u64) + 'static>(&self, on_advance: F) -> WmProbeHandle;
+}
+
+impl<D: Data> WatermarkExt<D> for Stream<u64, WmRecord<D>> {
+    fn wm_unary<D2: Data, K, L>(
+        &self,
+        wiring: WmWiring,
+        name: &str,
+        key: K,
+        mut logic: L,
+    ) -> Stream<u64, WmRecord<D2>>
+    where
+        K: Fn(&D) -> u64 + 'static,
+        L: WmLogic<D, D2>,
+    {
+        let peers = self.scope().peers();
+        let pact = match wiring {
+            WmWiring::Exchanged => Pact::routed(move |rec: &WmRecord<D>| match rec {
+                WmRecord::Data(_, d) => Route::Worker(key(d)),
+                WmRecord::Mark { .. } => Route::All,
+            }),
+            WmWiring::Pipelined => Pact::Pipeline,
+        };
+        let expected = match wiring {
+            WmWiring::Exchanged => peers,
+            WmWiring::Pipelined => 1,
+        };
+        self.unary(pact, name, move |tok, info| {
+            // The operator's single held token, tracking its output
+            // watermark; dropped once the stream closes.
+            let mut held: Option<TimestampToken<u64>> = Some(tok);
+            let mut merger = WmMerger::new(expected);
+            let mut scratch: Vec<(u64, D2)> = Vec::new();
+            let mut outgoing: Vec<WmRecord<D2>> = Vec::new();
+            let my_index = info.worker;
+            move |input: &mut _, output: &mut _| {
+                let mut advanced: Option<u64> = None;
+                while let Some((_token, data)) = input.next() {
+                    // NB: the engine's token ref is ignored — watermark
+                    // operators coordinate through marks alone.
+                    for rec in data {
+                        match rec {
+                            WmRecord::Data(te, d) => {
+                                logic.on_data(te, d, &mut scratch);
+                                outgoing
+                                    .extend(scratch.drain(..).map(|(t, d)| WmRecord::Data(t, d)));
+                            }
+                            WmRecord::Mark { from, wm } => {
+                                if let Some(new_wm) = merger.observe(from, wm) {
+                                    logic.on_watermark(new_wm, &mut scratch);
+                                    outgoing.extend(
+                                        scratch.drain(..).map(|(t, d)| WmRecord::Data(t, d)),
+                                    );
+                                    // One mark per advance: downstream
+                                    // operators pay per watermark, as in
+                                    // Flink (Figure 8's cost model).
+                                    outgoing.push(WmRecord::Mark { from: my_index, wm: new_wm });
+                                    advanced = Some(new_wm);
+                                }
+                            }
+                        }
+                    }
+                }
+                // Emit everything under the currently held token, then
+                // downgrade (or release) it to the new output watermark.
+                if let Some(token) = held.as_mut() {
+                    if !outgoing.is_empty() {
+                        let mut session = output.session(&*token);
+                        for rec in outgoing.drain(..) {
+                            session.give(rec);
+                        }
+                    }
+                    match advanced {
+                        Some(WM_CLOSED) => {
+                            held = None; // closed: release the token
+                        }
+                        Some(wm) => token.downgrade(&wm),
+                        None => {}
+                    }
+                }
+            }
+        })
+    }
+
+    fn wm_noop_chain(&self, wiring: WmWiring, n: usize) -> Stream<u64, WmRecord<D>> {
+        let mut stream = self.clone();
+        for i in 0..n {
+            stream = stream.wm_unary(wiring, &format!("wm_noop_{i}"), |_d| 0, WmNoop);
+        }
+        stream
+    }
+
+    fn wm_probe<F: FnMut(u64) + 'static>(&self, mut on_advance: F) -> WmProbeHandle {
+        let wm = Rc::new(Cell::new(0u64));
+        let wm2 = wm.clone();
+        self.sink(Pact::Pipeline, "wm_probe", move |_info| {
+            let mut merger = WmMerger::new(1);
+            move |input: &mut _| {
+                while let Some((_token, data)) = input.next() {
+                    for rec in data {
+                        if let WmRecord::Mark { from, wm } = rec {
+                            if let Some(new_wm) = merger.observe(from, wm) {
+                                wm2.set(new_wm);
+                                on_advance(new_wm);
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        WmProbeHandle { wm }
+    }
+}
+
+/// Observed sink watermark (the watermark analogue of a frontier probe).
+#[derive(Clone)]
+pub struct WmProbeHandle {
+    wm: Rc<Cell<u64>>,
+}
+
+impl WmProbeHandle {
+    /// The sink's merged watermark.
+    pub fn watermark(&self) -> u64 {
+        self.wm.get()
+    }
+
+    /// True iff the stream has closed.
+    pub fn done(&self) -> bool {
+        self.wm.get() == WM_CLOSED
+    }
+}
+
+/// An input adapter for watermark-coordinated dataflows: wraps an
+/// [`InputSession`], interleaving watermarks with data and keeping the
+/// engine epoch in lockstep with the source watermark.
+pub struct WmInput<D: Data> {
+    session: InputSession<u64, WmRecord<D>>,
+    index: usize,
+    wm: u64,
+}
+
+impl<D: Data> WmInput<D> {
+    /// Creates the watermark input for `worker`.
+    pub fn new(worker: &mut Worker<u64>) -> (Self, Stream<u64, WmRecord<D>>) {
+        let index = worker.index();
+        let (session, stream) = worker.new_input::<WmRecord<D>>();
+        (WmInput { session, index, wm: 0 }, stream)
+    }
+
+    /// Sends a data record with event time `te ≥ watermark()`.
+    pub fn send(&mut self, te: u64, record: D) {
+        debug_assert!(te >= self.wm, "event time {te} below watermark {}", self.wm);
+        self.session.send(WmRecord::Data(te, record));
+    }
+
+    /// The current source watermark.
+    pub fn watermark(&self) -> u64 {
+        self.wm
+    }
+
+    /// Advances the source watermark, emitting a mark in-stream and moving
+    /// the engine epoch along with it.
+    pub fn advance_watermark(&mut self, wm: u64) {
+        assert!(wm >= self.wm, "watermarks must advance");
+        if wm > self.wm {
+            self.wm = wm;
+            self.session.send(WmRecord::Mark { from: self.index, wm });
+            if wm != WM_CLOSED {
+                self.session.advance_to(wm);
+            }
+        }
+    }
+
+    /// Closes the input: emits the closing mark and drops the session token.
+    pub fn close(&mut self) {
+        if self.wm != WM_CLOSED {
+            self.wm = WM_CLOSED;
+            self.session.send(WmRecord::Mark { from: self.index, wm: WM_CLOSED });
+            self.session.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::worker::execute::{execute, execute_single};
+
+    /// Rolling count under watermark coordination (the §7.2 workload).
+    struct WmCount {
+        counts: std::collections::HashMap<u64, u64>,
+    }
+    impl WmLogic<u64, (u64, u64)> for WmCount {
+        fn on_data(&mut self, te: u64, word: u64, out: &mut Vec<(u64, (u64, u64))>) {
+            let c = self.counts.entry(word).or_insert(0);
+            *c += 1;
+            out.push((te, (word, *c)));
+        }
+        fn on_watermark(&mut self, _wm: u64, _out: &mut Vec<(u64, (u64, u64))>) {}
+    }
+
+    #[test]
+    fn merger_takes_min_across_senders() {
+        let mut m = WmMerger::new(2);
+        assert_eq!(m.observe(0, 5), None); // sender 1 still at 0
+        assert_eq!(m.observe(1, 3), Some(3));
+        assert_eq!(m.observe(1, 10), Some(5));
+        assert_eq!(m.current(), 5);
+        // Stale marks are ignored.
+        assert_eq!(m.observe(1, 4), None);
+    }
+
+    #[test]
+    fn single_worker_wordcount_with_watermarks() {
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = WmInput::<u64>::new(worker);
+            let out = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            let out2 = out.clone();
+            let counted = stream.wm_unary(
+                WmWiring::Exchanged,
+                "wm_wordcount",
+                |w: &u64| *w,
+                WmCount { counts: Default::default() },
+            );
+            let probe = counted.wm_probe(move |wm| out2.borrow_mut().push(wm));
+            input.send(10, 7);
+            input.send(11, 7);
+            input.advance_watermark(20);
+            input.close();
+            worker.step_while(|| !probe.done());
+            let marks = out.borrow().clone();
+            marks
+        });
+        assert_eq!(got, vec![20, WM_CLOSED]);
+    }
+
+    #[test]
+    fn chain_propagates_watermarks_across_workers() {
+        let results = execute::<u64, _, _>(
+            Config { workers: 2, pin_workers: false, ..Default::default() },
+            |worker| {
+                let (mut input, stream) = WmInput::<u64>::new(worker);
+                let probe = stream
+                    .wm_noop_chain(WmWiring::Exchanged, 4)
+                    .wm_probe(|_| {});
+                input.send(5, worker.index() as u64);
+                input.advance_watermark(100);
+                input.close();
+                worker.step_while(|| !probe.done());
+                probe.watermark()
+            },
+        );
+        assert_eq!(results, vec![WM_CLOSED, WM_CLOSED]);
+    }
+
+    #[test]
+    fn pipelined_wiring_stays_local() {
+        // With pipelined wiring each worker's chain closes independently.
+        let results = execute::<u64, _, _>(
+            Config { workers: 2, pin_workers: false, ..Default::default() },
+            |worker| {
+                let (mut input, stream) = WmInput::<u64>::new(worker);
+                let probe = stream
+                    .wm_noop_chain(WmWiring::Pipelined, 8)
+                    .wm_probe(|_| {});
+                input.send(1, 42);
+                input.advance_watermark(50);
+                input.close();
+                worker.step_while(|| !probe.done());
+                probe.watermark()
+            },
+        );
+        assert_eq!(results, vec![WM_CLOSED, WM_CLOSED]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Data channels: how timestamped message batches move between operators
+//! (and workers).
+//!
+//! Each graph edge (a *channel*) connects one operator output port to one
+//! input port, instantiated on every worker. A channel has a *pact*
+//! (parallelization contract): [`Pact::Pipeline`] keeps data on the sending
+//! worker, [`Pact::Exchange`] routes each record by key (or broadcasts it).
+//!
+//! Accounting: a message batch sent at timestamp `t` counts `+1` at the
+//! channel's target location, recorded by the sender *before* the batch is
+//! visible to the receiver; the receiver records `-1` when it consumes the
+//! batch. Remote sends are therefore staged and only released by the worker
+//! after it has appended its progress batch to the sequenced log (see
+//! `worker::Worker::step`), which is what makes every log prefix a
+//! conservative view of the outstanding pointstamps.
+
+use crate::progress::location::Location;
+use crate::progress::timestamp::Timestamp;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+/// Records that can travel on dataflow edges.
+pub trait Data: Clone + Send + 'static {}
+impl<D: Clone + Send + 'static> Data for D {}
+
+/// A batch of records bearing one timestamp.
+#[derive(Clone, Debug)]
+pub struct Message<T, D> {
+    /// The logical timestamp of every record in the batch.
+    pub time: T,
+    /// The records.
+    pub data: Vec<D>,
+    /// The index of the sending worker (diagnostics / tests).
+    pub from: usize,
+}
+
+/// Where an exchanged record should go.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// To the worker `hash % peers`.
+    Worker(u64),
+    /// To every worker (used for control records, e.g. Flink-style
+    /// watermarks in the `-X` configuration).
+    All,
+}
+
+/// Parallelization contract for a channel.
+#[derive(Clone)]
+pub enum Pact<D> {
+    /// Records stay on the worker that produced them.
+    Pipeline,
+    /// Records are routed between workers by the given function.
+    Exchange(Rc<dyn Fn(&D) -> Route>),
+}
+
+impl<D> Pact<D> {
+    /// An exchange pact routing by a hash of the record.
+    pub fn exchange<F: Fn(&D) -> u64 + 'static>(key: F) -> Self {
+        Pact::Exchange(Rc::new(move |d| Route::Worker(key(d))))
+    }
+
+    /// An exchange pact with full routing control (per-record broadcast).
+    pub fn routed<F: Fn(&D) -> Route + 'static>(route: F) -> Self {
+        Pact::Exchange(Rc::new(route))
+    }
+}
+
+impl<D> std::fmt::Debug for Pact<D> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        match self {
+            Pact::Pipeline => write!(f, "Pipeline"),
+            Pact::Exchange(_) => write!(f, "Exchange"),
+        }
+    }
+}
+
+/// The shared local mailbox of a channel instance on one worker: both
+/// same-worker sends and the drainers of remote receivers push here; the
+/// owning operator's input handle pops.
+pub type LocalQueue<T, D> = Rc<RefCell<VecDeque<Message<T, D>>>>;
+
+/// The send side of one channel on one worker.
+pub struct ChannelSend<T: Timestamp, D: Data> {
+    /// Channel identifier (same on every worker).
+    pub channel: usize,
+    /// The input port this channel feeds.
+    pub target: Location,
+    /// Parallelization contract.
+    pub pact: Pact<D>,
+    /// This worker's index.
+    pub my_index: usize,
+    /// Total workers.
+    pub peers: usize,
+    /// Staged remote messages, released by `flush_remote`.
+    staged: Vec<(usize, Message<T, D>)>,
+    /// Remote senders, one per peer (`None` at `my_index`).
+    remote: Vec<Option<Sender<Message<T, D>>>>,
+    /// The local mailbox on this worker (for self-sends).
+    local: LocalQueue<T, D>,
+    /// Worker-wide flag: set when remote data is staged, so the worker
+    /// knows it must append its progress batch (with the corresponding
+    /// `+1` produce counts) before releasing the fabric this step.
+    staged_flag: Rc<Cell<bool>>,
+}
+
+impl<T: Timestamp, D: Data> ChannelSend<T, D> {
+    /// Assembles the send side from its parts (done by `Stream::connect_to`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        channel: usize,
+        target: Location,
+        pact: Pact<D>,
+        my_index: usize,
+        peers: usize,
+        remote: Vec<Option<Sender<Message<T, D>>>>,
+        local: LocalQueue<T, D>,
+        staged_flag: Rc<Cell<bool>>,
+    ) -> Self {
+        debug_assert_eq!(remote.len(), peers);
+        ChannelSend {
+            channel,
+            target,
+            pact,
+            my_index,
+            peers,
+            staged: Vec::new(),
+            remote,
+            local,
+            staged_flag,
+        }
+    }
+
+    /// Enqueues a message batch for worker `dest`.
+    ///
+    /// Local deliveries are immediate (the consume accounting flows through
+    /// the same worker's later atomic batches, so ordering is preserved);
+    /// remote deliveries are staged until [`flush_remote`].
+    ///
+    /// [`flush_remote`]: ChannelSend::flush_remote
+    pub fn push(&mut self, dest: usize, message: Message<T, D>) {
+        if dest == self.my_index {
+            self.local.borrow_mut().push_back(message);
+        } else {
+            self.staged.push((dest, message));
+            self.staged_flag.set(true);
+        }
+    }
+
+    /// Releases staged remote messages into the fabric. Called by the worker
+    /// after its progress batch (containing the `+1` produce counts) has
+    /// been appended to the sequenced log.
+    pub fn flush_remote(&mut self) {
+        for (dest, message) in self.staged.drain(..) {
+            if let Some(sender) = &self.remote[dest] {
+                // A closed receiver means the peer worker has shut down; at
+                // that point progress tracking is already complete for the
+                // messages it cared about, so dropping is benign.
+                let _ = sender.send(message);
+            }
+        }
+    }
+
+    /// True iff remote messages are staged.
+    pub fn has_staged(&self) -> bool {
+        !self.staged.is_empty()
+    }
+}
+
+/// Shared handle to a channel's send side.
+pub type ChannelSendHandle<T, D> = Rc<RefCell<ChannelSend<T, D>>>;
+
+/// The list of channels attached to one output port (filled lazily as
+/// downstream consumers connect).
+pub type TeeHandle<T, D> = Rc<RefCell<Vec<ChannelSendHandle<T, D>>>>;
+
+/// Builds a drainer closure that moves messages from a remote receiver into
+/// the channel's local mailbox; returns whether any message moved.
+pub fn drainer<T: Timestamp, D: Data>(
+    receiver: Receiver<Message<T, D>>,
+    queue: LocalQueue<T, D>,
+) -> Box<dyn FnMut() -> bool> {
+    Box::new(move || {
+        let mut any = false;
+        loop {
+            match receiver.try_recv() {
+                Ok(message) => {
+                    queue.borrow_mut().push_back(message);
+                    any = true;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        any
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn msg(t: u64, data: Vec<u32>) -> Message<u64, u32> {
+        Message { time: t, data, from: 0 }
+    }
+
+    #[test]
+    fn local_push_is_immediate() {
+        let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
+        let mut send = ChannelSend::new(
+            0,
+            Location::target(1, 0),
+            Pact::Pipeline,
+            0,
+            1,
+            vec![None],
+            local.clone(),
+            Rc::new(Cell::new(false)),
+        );
+        send.push(0, msg(3, vec![1, 2]));
+        assert_eq!(local.borrow().len(), 1);
+        assert!(!send.has_staged());
+    }
+
+    #[test]
+    fn remote_push_staged_until_flush() {
+        let (tx, rx) = channel();
+        let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
+        let flag = Rc::new(Cell::new(false));
+        let mut send = ChannelSend::new(
+            0,
+            Location::target(1, 0),
+            Pact::Pipeline,
+            0,
+            2,
+            vec![None, Some(tx)],
+            local,
+            flag.clone(),
+        );
+        send.push(1, msg(3, vec![7]));
+        assert!(send.has_staged());
+        assert!(flag.get(), "staged flag must be raised for remote pushes");
+        assert!(rx.try_recv().is_err());
+        send.flush_remote();
+        assert_eq!(rx.try_recv().unwrap().data, vec![7]);
+        assert!(!send.has_staged());
+    }
+
+    #[test]
+    fn drainer_moves_messages() {
+        let (tx, rx) = channel();
+        let queue: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
+        let mut drain = drainer(rx, queue.clone());
+        assert!(!drain());
+        tx.send(msg(1, vec![1])).unwrap();
+        tx.send(msg(2, vec![2])).unwrap();
+        assert!(drain());
+        assert_eq!(queue.borrow().len(), 2);
+        // Disconnect is handled quietly.
+        drop(tx);
+        assert!(!drain());
+    }
+
+    #[test]
+    fn pact_exchange_routes() {
+        let pact = Pact::exchange(|d: &u64| *d);
+        if let Pact::Exchange(route) = &pact {
+            assert_eq!(route(&5), Route::Worker(5));
+        } else {
+            panic!("not exchange");
+        }
+        let pact = Pact::<u64>::routed(|_| Route::All);
+        if let Pact::Exchange(route) = &pact {
+            assert_eq!(route(&5), Route::All);
+        } else {
+            panic!("not exchange");
+        }
+    }
+}

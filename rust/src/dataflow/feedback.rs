@@ -1,0 +1,78 @@
+//! Cyclic dataflow: feedback edges with strictly advancing summaries.
+//!
+//! Timestamp tokens "avoid restrictions on dataflow structure, for example
+//! the requirement (seen in Spark and Flink) that dataflow graphs be
+//! acyclic" (§5.2). A feedback node forwards records while advancing their
+//! timestamps by a declared summary; reachability requires the summary to
+//! strictly advance, which keeps frontier computation well-founded.
+
+use super::channels::{Data, Pact};
+use super::operator::{InputHandle, OperatorBuilder, OutputHandle};
+use super::scope::Scope;
+use super::stream::Stream;
+use crate::progress::location::Location;
+use crate::progress::timestamp::{PartialOrder, PathSummary, Timestamp};
+
+/// The write end of a feedback edge: connect a stream to close the loop.
+pub struct LoopHandle<T: Timestamp, D: Data> {
+    node: usize,
+    queue: super::channels::LocalQueue<T, D>,
+    connected: std::cell::Cell<bool>,
+}
+
+/// Creates a feedback node whose output stream carries records re-entering
+/// the loop with timestamps advanced by `summary`. Returns the handle used
+/// to close the loop and the output stream.
+///
+/// Panics if `summary` does not strictly advance timestamps.
+pub fn feedback<T: Timestamp, D: Data>(
+    scope: &Scope<T>,
+    summary: T::Summary,
+) -> (LoopHandle<T, D>, Stream<T, D>) {
+    let min = T::minimum();
+    let advanced = summary.results_in(&min).expect("summary applies to minimum");
+    assert!(
+        min.less_than(&advanced),
+        "feedback summary must strictly advance timestamps"
+    );
+
+    let mut builder = OperatorBuilder::new(scope, "feedback");
+    let (queue, frontier, _port) = builder.new_input_deferred::<D>();
+    let (tee, stream) = builder.new_output::<D>();
+    builder.set_summary(0, 0, summary.clone());
+    let (info, activation) = builder.info();
+    let node = builder.node();
+    let bookkeeping = scope.bookkeeping();
+    // Drop the initial token: the feedback node only echoes its input.
+    drop(builder.initial_tokens());
+    let mut input: InputHandle<T, D> = InputHandle::new(
+        queue.clone(),
+        frontier,
+        Location::target(node, 0),
+        Some(Location::source(node, 0)),
+        summary,
+        bookkeeping.clone(),
+    );
+    let mut output: OutputHandle<T, D> =
+        OutputHandle::new(Location::source(node, 0), tee, bookkeeping, info.worker, info.peers);
+    builder.build(
+        activation,
+        Box::new(move || {
+            while let Some((token, data)) = input.next() {
+                // The token ref's capability time is the summary-advanced
+                // message time, so the records re-enter one iteration later.
+                output.session(&token).give_vec(data);
+            }
+        }),
+    );
+    (LoopHandle { node, queue, connected: std::cell::Cell::new(false) }, stream)
+}
+
+impl<T: Timestamp, D: Data> LoopHandle<T, D> {
+    /// Closes the loop: `stream`'s records flow back through the feedback
+    /// node. May only be called once.
+    pub fn connect(&self, stream: &Stream<T, D>, pact: Pact<D>) {
+        assert!(!self.connected.replace(true), "loop already connected");
+        stream.connect_to(self.node, 0, pact, self.queue.clone());
+    }
+}

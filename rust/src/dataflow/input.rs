@@ -1,0 +1,127 @@
+//! Feeding data into a dataflow from outside operator logic.
+//!
+//! An [`InputSession`] holds a [`TimestampToken`] for the input node's
+//! output port and uses it to send timestamped records; `advance_to`
+//! downgrades the token (releasing earlier timestamps system-wide) and
+//! `close` drops it. This is the paper's §4.2 case of tokens "used outside
+//! the operators their pointstamps reference ... especially useful for
+//! manual control of inputs to a dataflow": the worker drains the shared
+//! bookkeeping at the start of every step, picking up input actions taken
+//! between steps.
+
+use super::channels::Data;
+use super::operator::{OperatorBuilder, OutputHandle};
+use super::scope::Scope;
+use super::stream::Stream;
+use super::token::TimestampToken;
+use crate::progress::location::Location;
+use crate::progress::timestamp::{PartialOrder, Timestamp};
+
+/// A handle for introducing timestamped records into a dataflow.
+pub struct InputSession<T: Timestamp, D: Data> {
+    /// The input's timestamp token; `None` once closed.
+    token: Option<TimestampToken<T>>,
+    output: OutputHandle<T, D>,
+    /// Records buffered at the current epoch.
+    buffer: Vec<D>,
+    time: T,
+}
+
+impl<T: Timestamp, D: Data> InputSession<T, D> {
+    /// Builds the input node and returns the session and its stream.
+    /// (Reached through `Worker::new_input`.)
+    pub(crate) fn new(scope: &Scope<T>) -> (Self, Stream<T, D>) {
+        let mut builder = OperatorBuilder::new(scope, "input");
+        let (tee, stream) = builder.new_output::<D>();
+        let (info, activation) = builder.info();
+        let node = builder.node();
+        let mut tokens = builder.initial_tokens();
+        let token = tokens.pop().expect("input has one output");
+        let output = OutputHandle::new(
+            Location::source(node, 0),
+            tee,
+            scope.bookkeeping(),
+            info.worker,
+            info.peers,
+        );
+        // The input node has no operator logic: its messages originate here.
+        builder.build(activation, Box::new(|| {}));
+        (
+            InputSession { token: Some(token), output, buffer: Vec::new(), time: T::minimum() },
+            stream,
+        )
+    }
+
+    /// The current epoch.
+    pub fn time(&self) -> &T {
+        &self.time
+    }
+
+    /// Buffers one record at the current epoch.
+    pub fn send(&mut self, record: D) {
+        assert!(self.token.is_some(), "send on closed input");
+        self.buffer.push(record);
+        if self.buffer.len() >= crate::config::SEND_BATCH {
+            self.flush();
+        }
+    }
+
+    /// Buffers many records at the current epoch.
+    pub fn send_batch(&mut self, records: &mut Vec<D>) {
+        assert!(self.token.is_some(), "send on closed input");
+        if self.buffer.is_empty() {
+            std::mem::swap(&mut self.buffer, records);
+        } else {
+            self.buffer.append(records);
+        }
+        if self.buffer.len() >= crate::config::SEND_BATCH {
+            self.flush();
+        }
+    }
+
+    /// Flushes buffered records as a message batch at the current epoch.
+    pub fn flush(&mut self) {
+        if !self.buffer.is_empty() {
+            let token = self.token.as_ref().expect("flush on closed input");
+            let mut session = self.output.session(token);
+            session.give_vec(std::mem::take(&mut self.buffer));
+        }
+    }
+
+    /// Advances the epoch to `time`, flushing buffered records and
+    /// downgrading the input's token so the system can advance frontiers.
+    pub fn advance_to(&mut self, time: T) {
+        assert!(
+            self.token.is_some(),
+            "advance_to on closed input"
+        );
+        assert!(
+            self.time.less_equal(&time),
+            "input epochs must advance: {:?} -> {:?}",
+            self.time,
+            time
+        );
+        self.flush();
+        self.token.as_mut().unwrap().downgrade(&time);
+        self.time = time;
+    }
+
+    /// Closes the input: flushes and drops the token. Idempotent.
+    pub fn close(&mut self) {
+        if self.token.is_some() {
+            self.flush();
+            self.token = None;
+        }
+    }
+
+    /// True iff the input has been closed.
+    pub fn is_closed(&self) -> bool {
+        self.token.is_none()
+    }
+}
+
+impl<T: Timestamp, D: Data> Drop for InputSession<T, D> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}

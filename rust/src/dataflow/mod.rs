@@ -1,0 +1,20 @@
+//! The dataflow layer: graph construction, streams, channels, the timestamp
+//! token API (paper §4, Figure 3), and the operator builder (Figure 5).
+
+pub mod channels;
+pub mod feedback;
+pub mod input;
+pub mod operator;
+pub mod probe;
+pub mod scope;
+pub mod stream;
+pub mod token;
+
+pub use channels::{Data, Message, Pact, Route};
+pub use feedback::{feedback, LoopHandle};
+pub use input::InputSession;
+pub use operator::{InputHandle, OperatorBuilder, OperatorExt, OperatorInfo, OutputHandle, Session};
+pub use probe::{ProbeExt, ProbeHandle};
+pub use scope::{Activator, Scope};
+pub use stream::Stream;
+pub use token::{BookkeepingHandle, TimestampToken, TimestampTokenRef, TokenTrait};

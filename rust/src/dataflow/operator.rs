@@ -1,0 +1,545 @@
+//! Operator construction: the API of the paper's Figure 5.
+//!
+//! [`OperatorBuilder`] is the low-level interface; [`OperatorExt`] provides
+//! `unary`, `unary_frontier`, and `binary_frontier`, whose constructors
+//! receive the operator's initial [`TimestampToken`] (§3.1: "each dataflow
+//! operator is initially provided with a timestamp token for each of its
+//! output edges") and return the repeatedly invoked operator logic.
+
+use super::channels::{Data, LocalQueue, Message, Pact, Route, TeeHandle};
+use super::scope::{Activator, OpCore, Scope};
+use super::stream::Stream;
+use super::token::{BookkeepingHandle, TimestampToken, TimestampTokenRef, TokenTrait};
+use crate::progress::antichain::MutableAntichain;
+use crate::progress::location::Location;
+use crate::progress::reachability::NodeTopology;
+use crate::progress::timestamp::{PathSummary, Timestamp};
+use crate::progress::tracker::{FrontierHandle, SharedFrontier};
+use std::cell::{Cell, Ref, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Static facts about an operator instance, handed to its constructor.
+#[derive(Clone)]
+pub struct OperatorInfo {
+    /// The node index in the dataflow graph.
+    pub node: usize,
+    /// This worker's index.
+    pub worker: usize,
+    /// Total number of workers.
+    pub peers: usize,
+    /// Re-scheduling handle (co-operative flow control, §6.1).
+    pub activator: Activator,
+}
+
+/// The read side of one operator input port.
+///
+/// Yields `(TimestampTokenRef, batch)` pairs — each message batch arrives
+/// "bearing a timestamp token that can be used by the recipient" (§4.1) —
+/// and exposes the port's frontier as maintained by the tracker.
+pub struct InputHandle<T: Timestamp, D: Data> {
+    queue: LocalQueue<T, D>,
+    frontier: FrontierHandle<T>,
+    target: Location,
+    /// Where a retained token would live (`None` for output-less operators).
+    retain_location: Option<Location>,
+    /// The internal summary from this input to output 0 (identity for
+    /// ordinary operators; strictly advancing for feedback).
+    retain_summary: T::Summary,
+    bookkeeping: BookkeepingHandle<T>,
+}
+
+impl<T: Timestamp, D: Data> InputHandle<T, D> {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        queue: LocalQueue<T, D>,
+        frontier: FrontierHandle<T>,
+        target: Location,
+        retain_location: Option<Location>,
+        retain_summary: T::Summary,
+        bookkeeping: BookkeepingHandle<T>,
+    ) -> Self {
+        InputHandle { queue, frontier, target, retain_location, retain_summary, bookkeeping }
+    }
+
+    /// Pops the next message batch, recording its consumption with the
+    /// system. The returned token reference cannot outlive the read — call
+    /// [`TimestampTokenRef::retain`] to keep a token.
+    pub fn next(&mut self) -> Option<(TimestampTokenRef<'_, T>, Vec<D>)> {
+        let message = self.queue.borrow_mut().pop_front()?;
+        let Message { time, data, .. } = message;
+        self.bookkeeping.update(self.target, time.clone(), -1);
+        let cap_time = self
+            .retain_summary
+            .results_in(&time)
+            .expect("internal summary overflowed the timestamp domain");
+        Some((
+            TimestampTokenRef::new(time, cap_time, self.retain_location, &self.bookkeeping),
+            data,
+        ))
+    }
+
+    /// Applies `logic` to every queued batch.
+    pub fn for_each<L: FnMut(TimestampTokenRef<'_, T>, Vec<D>)>(&mut self, mut logic: L) {
+        while let Some((token, data)) = self.next() {
+            logic(token, data);
+        }
+    }
+
+    /// The port's current frontier — the lower bound on timestamps that may
+    /// still appear on this input (§3.2).
+    pub fn frontier(&self) -> Ref<'_, MutableAntichain<T>> {
+        Ref::map(self.frontier.borrow(), |shared| &shared.antichain)
+    }
+
+    /// True iff the frontier has passed `t` (no more data at `t` or earlier
+    /// can arrive).
+    pub fn frontier_beyond(&self, t: &T) -> bool {
+        !self.frontier.borrow().antichain.less_equal(t)
+    }
+
+    /// True iff the input is complete (closed frontier, empty queue).
+    pub fn is_done(&self) -> bool {
+        self.frontier.borrow().antichain.is_empty() && self.queue.borrow().is_empty()
+    }
+}
+
+/// The write side of one operator output port (Ⓗ in the paper's Figure 3).
+pub struct OutputHandle<T: Timestamp, D: Data> {
+    source: Location,
+    tee: TeeHandle<T, D>,
+    bookkeeping: BookkeepingHandle<T>,
+    peers: usize,
+    worker: usize,
+    /// Per-channel, per-destination buffers reused across sessions.
+    buffers: Vec<Vec<Vec<D>>>,
+    /// Pact snapshot aligned with `tee` (channels only ever append).
+    pacts: Vec<Pact<D>>,
+}
+
+impl<T: Timestamp, D: Data> OutputHandle<T, D> {
+    pub(crate) fn new(
+        source: Location,
+        tee: TeeHandle<T, D>,
+        bookkeeping: BookkeepingHandle<T>,
+        worker: usize,
+        peers: usize,
+    ) -> Self {
+        OutputHandle { source, tee, bookkeeping, peers, worker, buffers: Vec::new(), pacts: Vec::new() }
+    }
+
+    /// Obtains a session that can send data at the timestamp associated with
+    /// timestamp token `tok` (Ⓘ). Accepts owned tokens and token references
+    /// alike ([`TokenTrait`]); the token's location is checked against this
+    /// output.
+    ///
+    /// The borrow of `tok` ensures at compile time that the token cannot be
+    /// modified or dropped while the session is active.
+    pub fn session<'a>(&'a mut self, tok: &'a impl TokenTrait<T>) -> Session<'a, T, D> {
+        if let Some(location) = tok.session_location() {
+            assert_eq!(
+                location, self.source,
+                "timestamp token is not valid for this output"
+            );
+        }
+        let time = tok.session_time().clone();
+        Session { output: self, time }
+    }
+
+    /// Refreshes the pact snapshot (channels may attach after construction).
+    fn ensure_buffers(&mut self) {
+        let tee = self.tee.borrow();
+        while self.pacts.len() < tee.len() {
+            self.pacts.push(tee[self.pacts.len()].borrow().pact.clone());
+            self.buffers.push(vec![Vec::new(); self.peers]);
+        }
+    }
+
+    /// Routes one record into the per-channel/per-destination buffers.
+    fn give(&mut self, time: &T, record: D) {
+        self.ensure_buffers();
+        for ci in 0..self.pacts.len() {
+            match &self.pacts[ci] {
+                Pact::Pipeline => {
+                    let dest = self.worker;
+                    self.buffers[ci][dest].push(record.clone());
+                    if self.buffers[ci][dest].len() >= crate::config::SEND_BATCH {
+                        self.post(ci, dest, time);
+                    }
+                }
+                Pact::Exchange(route) => match route(&record) {
+                    Route::Worker(hash) => {
+                        let dest = (hash % self.peers as u64) as usize;
+                        self.buffers[ci][dest].push(record.clone());
+                        if self.buffers[ci][dest].len() >= crate::config::SEND_BATCH {
+                            self.post(ci, dest, time);
+                        }
+                    }
+                    Route::All => {
+                        for dest in 0..self.peers {
+                            self.buffers[ci][dest].push(record.clone());
+                            if self.buffers[ci][dest].len() >= crate::config::SEND_BATCH {
+                                self.post(ci, dest, time);
+                            }
+                        }
+                    }
+                },
+            }
+        }
+    }
+
+    /// Finalizes a batch: records `+1` at the channel target and enqueues
+    /// the message (local mailboxes immediately; remote staged until the
+    /// worker's progress append).
+    fn post(&mut self, ci: usize, dest: usize, time: &T) {
+        let data = std::mem::take(&mut self.buffers[ci][dest]);
+        if data.is_empty() {
+            return;
+        }
+        let tee = self.tee.borrow();
+        let mut channel = tee[ci].borrow_mut();
+        self.bookkeeping.update(channel.target, time.clone(), 1);
+        channel.push(dest, Message { time: time.clone(), data, from: self.worker });
+    }
+
+    /// Flushes all buffered records at `time`.
+    fn flush(&mut self, time: &T) {
+        self.ensure_buffers();
+        for ci in 0..self.pacts.len() {
+            for dest in 0..self.peers {
+                if !self.buffers[ci][dest].is_empty() {
+                    self.post(ci, dest, time);
+                }
+            }
+        }
+    }
+}
+
+/// An active output session at a fixed timestamp; created from a timestamp
+/// token by [`OutputHandle::session`]. Buffers records and flushes them as
+/// message batches when dropped.
+pub struct Session<'a, T: Timestamp, D: Data> {
+    output: &'a mut OutputHandle<T, D>,
+    time: T,
+}
+
+impl<'a, T: Timestamp, D: Data> Session<'a, T, D> {
+    /// Sends one record at the session timestamp.
+    #[inline]
+    pub fn give(&mut self, record: D) {
+        self.output.give(&self.time, record);
+    }
+
+    /// Sends every record of an iterator.
+    pub fn give_iterator<I: Iterator<Item = D>>(&mut self, iter: I) {
+        for record in iter {
+            self.give(record);
+        }
+    }
+
+    /// Sends a vector of records.
+    pub fn give_vec(&mut self, mut records: Vec<D>) {
+        for record in records.drain(..) {
+            self.give(record);
+        }
+    }
+
+    /// The session timestamp.
+    pub fn time(&self) -> &T {
+        &self.time
+    }
+}
+
+impl<'a, T: Timestamp, D: Data> Drop for Session<'a, T, D> {
+    fn drop(&mut self) {
+        self.output.flush(&self.time);
+    }
+}
+
+/// Low-level operator construction.
+pub struct OperatorBuilder<T: Timestamp> {
+    scope: Scope<T>,
+    node: usize,
+    inputs: usize,
+    outputs: usize,
+    /// Input queues (for the scheduler's work hint).
+    queues: Vec<Box<dyn Fn() -> bool>>,
+    /// Input frontier handles (scheduling triggers + tracker adoption).
+    frontiers: Vec<FrontierHandle<T>>,
+    /// Deferred internal-summary overrides: (input, output, summary).
+    summaries: Vec<(usize, usize, T::Summary)>,
+}
+
+impl<T: Timestamp> OperatorBuilder<T> {
+    /// Registers a new node named `name` and returns its builder.
+    pub fn new(scope: &Scope<T>, name: &str) -> Self {
+        let mut state = scope.state.borrow_mut();
+        assert!(!state.finalized, "cannot add operators after the dataflow started");
+        let node = state.topology.nodes.len();
+        state.topology.nodes.push(NodeTopology::identity(name, 0, 0));
+        drop(state);
+        OperatorBuilder {
+            scope: scope.clone(),
+            node,
+            inputs: 0,
+            outputs: 0,
+            queues: Vec::new(),
+            frontiers: Vec::new(),
+            summaries: Vec::new(),
+        }
+    }
+
+    /// The node index of the operator under construction.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Adds an input port fed by `stream` under `pact`; returns the local
+    /// mailbox and the port's frontier handle.
+    pub fn new_input<D: Data>(
+        &mut self,
+        stream: &Stream<T, D>,
+        pact: Pact<D>,
+    ) -> (LocalQueue<T, D>, FrontierHandle<T>, usize) {
+        let (queue, frontier, port) = self.new_input_deferred::<D>();
+        stream.connect_to(self.node, port, pact, queue.clone());
+        (queue, frontier, port)
+    }
+
+    /// Adds an input port with no producer yet (feedback edges connect
+    /// later); returns the mailbox, frontier handle, and port index.
+    pub fn new_input_deferred<D: Data>(
+        &mut self,
+    ) -> (LocalQueue<T, D>, FrontierHandle<T>, usize) {
+        let port = self.inputs;
+        self.inputs += 1;
+        let queue: LocalQueue<T, D> = Rc::new(RefCell::new(VecDeque::new()));
+        let frontier: FrontierHandle<T> = Rc::new(RefCell::new(SharedFrontier {
+            antichain: MutableAntichain::new(),
+            changed: false,
+        }));
+        let mut state = self.scope.state.borrow_mut();
+        state.frontier_handles.push((self.node, port, frontier.clone()));
+        drop(state);
+        let q = queue.clone();
+        self.queues.push(Box::new(move || !q.borrow().is_empty()));
+        self.frontiers.push(frontier.clone());
+        (queue, frontier, port)
+    }
+
+    /// Adds an output port; returns its tee and the downstream stream.
+    pub fn new_output<D: Data>(&mut self) -> (TeeHandle<T, D>, Stream<T, D>) {
+        let port = self.outputs;
+        self.outputs += 1;
+        let tee: TeeHandle<T, D> = Rc::new(RefCell::new(Vec::new()));
+        let stream = Stream::new(Location::source(self.node, port), tee.clone(), self.scope.clone());
+        (tee, stream)
+    }
+
+    /// Overrides the internal summary from `input` to `output` (the default
+    /// is the identity for every pair). Feedback uses a strictly advancing
+    /// summary.
+    pub fn set_summary(&mut self, input: usize, output: usize, summary: T::Summary) {
+        self.summaries.push((input, output, summary));
+    }
+
+    /// Mints the operator's initial timestamp tokens — one per output port
+    /// at `T::minimum()`, pre-counted by the tracker's seed.
+    pub fn initial_tokens(&self) -> Vec<TimestampToken<T>> {
+        let bookkeeping = self.scope.bookkeeping();
+        (0..self.outputs)
+            .map(|port| {
+                TimestampToken::mint_preseeded(
+                    T::minimum(),
+                    Location::source(self.node, port),
+                    bookkeeping.clone(),
+                )
+            })
+            .collect()
+    }
+
+    /// The activator and info for the operator under construction.
+    pub fn info(&self) -> (OperatorInfo, Rc<Cell<bool>>) {
+        let flag = Rc::new(Cell::new(true)); // run once at startup
+        let info = OperatorInfo {
+            node: self.node,
+            worker: self.scope.index(),
+            peers: self.scope.peers(),
+            activator: Activator::new(flag.clone()),
+        };
+        (info, flag)
+    }
+
+    /// Registers the operator logic with the worker's scheduler.
+    pub fn build(self, activation: Rc<Cell<bool>>, logic: Box<dyn FnMut()>) {
+        let mut state = self.scope.state.borrow_mut();
+        // Fix up the node topology with the real port counts and summaries.
+        let mut topo = NodeTopology::<T>::identity(
+            &state.topology.nodes[self.node].name.clone(),
+            self.inputs,
+            self.outputs,
+        );
+        for (i, o, s) in self.summaries {
+            topo.internal[i][o] = crate::progress::antichain::Antichain::from_elem(s);
+        }
+        let name = topo.name.clone();
+        state.topology.nodes[self.node] = topo;
+        let queues = self.queues;
+        state.ops.push(OpCore {
+            name,
+            node: self.node,
+            logic,
+            work_hint: Box::new(move || queues.iter().any(|q| q())),
+            activation,
+            frontiers: self.frontiers,
+        });
+    }
+}
+
+/// High-level operator constructors on streams.
+pub trait OperatorExt<T: Timestamp, D: Data> {
+    /// A unary operator that only reacts to data (map/filter-like): the
+    /// constructor receives the initial token and operator info, and returns
+    /// logic invoked with the input and output handles.
+    fn unary<D2: Data, B, L>(&self, pact: Pact<D>, name: &str, constructor: B) -> Stream<T, D2>
+    where
+        B: FnOnce(TimestampToken<T>, OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>, &mut OutputHandle<T, D2>) + 'static;
+
+    /// Like [`unary`](OperatorExt::unary); the name matches the paper's
+    /// Figure 5 (`unary_frontier`) — the input handle exposes
+    /// `input.frontier()` and the operator is scheduled on frontier changes.
+    fn unary_frontier<D2: Data, B, L>(
+        &self,
+        pact: Pact<D>,
+        name: &str,
+        constructor: B,
+    ) -> Stream<T, D2>
+    where
+        B: FnOnce(TimestampToken<T>, OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>, &mut OutputHandle<T, D2>) + 'static,
+    {
+        self.unary(pact, name, constructor)
+    }
+
+    /// A two-input operator.
+    fn binary_frontier<D2: Data, D3: Data, B, L>(
+        &self,
+        other: &Stream<T, D2>,
+        pact1: Pact<D>,
+        pact2: Pact<D2>,
+        name: &str,
+        constructor: B,
+    ) -> Stream<T, D3>
+    where
+        B: FnOnce(TimestampToken<T>, OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>, &mut InputHandle<T, D2>, &mut OutputHandle<T, D3>)
+            + 'static;
+
+    /// A terminal operator: consumes batches, produces nothing.
+    fn sink<B, L>(&self, pact: Pact<D>, name: &str, constructor: B)
+    where
+        B: FnOnce(OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>) + 'static;
+}
+
+impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
+    fn unary<D2: Data, B, L>(&self, pact: Pact<D>, name: &str, constructor: B) -> Stream<T, D2>
+    where
+        B: FnOnce(TimestampToken<T>, OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>, &mut OutputHandle<T, D2>) + 'static,
+    {
+        let scope = self.scope();
+        let mut builder = OperatorBuilder::new(&scope, name);
+        let (queue, frontier, _port) = builder.new_input(self, pact);
+        let (tee, stream) = builder.new_output::<D2>();
+        let (info, activation) = builder.info();
+        let node = builder.node();
+        let bookkeeping = scope.bookkeeping();
+        let mut init = builder.initial_tokens();
+        let mut logic = constructor(init.pop().expect("one output"), info.clone());
+        let mut input = InputHandle::new(
+            queue,
+            frontier,
+            Location::target(node, 0),
+            Some(Location::source(node, 0)),
+            T::Summary::default(),
+            bookkeeping.clone(),
+        );
+        let mut output =
+            OutputHandle::new(Location::source(node, 0), tee, bookkeeping, info.worker, info.peers);
+        builder.build(activation, Box::new(move || logic(&mut input, &mut output)));
+        stream
+    }
+
+    fn binary_frontier<D2: Data, D3: Data, B, L>(
+        &self,
+        other: &Stream<T, D2>,
+        pact1: Pact<D>,
+        pact2: Pact<D2>,
+        name: &str,
+        constructor: B,
+    ) -> Stream<T, D3>
+    where
+        B: FnOnce(TimestampToken<T>, OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>, &mut InputHandle<T, D2>, &mut OutputHandle<T, D3>)
+            + 'static,
+    {
+        let scope = self.scope();
+        let mut builder = OperatorBuilder::new(&scope, name);
+        let (queue1, frontier1, _p1) = builder.new_input(self, pact1);
+        let (queue2, frontier2, _p2) = builder.new_input(other, pact2);
+        let (tee, stream) = builder.new_output::<D3>();
+        let (info, activation) = builder.info();
+        let node = builder.node();
+        let bookkeeping = scope.bookkeeping();
+        let mut init = builder.initial_tokens();
+        let mut logic = constructor(init.pop().expect("one output"), info.clone());
+        let mut input1 = InputHandle::new(
+            queue1,
+            frontier1,
+            Location::target(node, 0),
+            Some(Location::source(node, 0)),
+            T::Summary::default(),
+            bookkeeping.clone(),
+        );
+        let mut input2 = InputHandle::new(
+            queue2,
+            frontier2,
+            Location::target(node, 1),
+            Some(Location::source(node, 0)),
+            T::Summary::default(),
+            bookkeeping.clone(),
+        );
+        let mut output =
+            OutputHandle::new(Location::source(node, 0), tee, bookkeeping, info.worker, info.peers);
+        builder.build(
+            activation,
+            Box::new(move || logic(&mut input1, &mut input2, &mut output)),
+        );
+        stream
+    }
+
+    fn sink<B, L>(&self, pact: Pact<D>, name: &str, constructor: B)
+    where
+        B: FnOnce(OperatorInfo) -> L,
+        L: FnMut(&mut InputHandle<T, D>) + 'static,
+    {
+        let scope = self.scope();
+        let mut builder = OperatorBuilder::new(&scope, name);
+        let (queue, frontier, _port) = builder.new_input(self, pact);
+        let (info, activation) = builder.info();
+        let node = builder.node();
+        let bookkeeping = scope.bookkeeping();
+        let mut logic = constructor(info);
+        let mut input = InputHandle::new(
+            queue,
+            frontier,
+            Location::target(node, 0),
+            None,
+            T::Summary::default(),
+            bookkeeping,
+        );
+        builder.build(activation, Box::new(move || logic(&mut input)));
+    }
+}

@@ -1,0 +1,81 @@
+//! Probes: observing a stream's frontier from outside the dataflow.
+//!
+//! A probe is an output-less operator that consumes (and discards) the
+//! stream's records; its input frontier — maintained by the tracker with no
+//! operator involvement — tells the driving loop how far the stream has
+//! progressed. The open-loop harness uses probes to detect when all results
+//! for a timestamp have been produced.
+
+use super::channels::{Data, Pact};
+use super::operator::{OperatorExt, OperatorInfo};
+use super::stream::Stream;
+use crate::progress::antichain::Antichain;
+use crate::progress::timestamp::Timestamp;
+use crate::progress::tracker::FrontierHandle;
+
+/// A cloneable handle on a probe's observed frontier.
+pub struct ProbeHandle<T: Timestamp> {
+    frontier: FrontierHandle<T>,
+}
+
+impl<T: Timestamp> Clone for ProbeHandle<T> {
+    fn clone(&self) -> Self {
+        ProbeHandle { frontier: self.frontier.clone() }
+    }
+}
+
+impl<T: Timestamp> ProbeHandle<T> {
+    /// True iff the probed stream may still produce data at `time`.
+    pub fn less_equal(&self, time: &T) -> bool {
+        self.frontier.borrow().antichain.less_equal(time)
+    }
+
+    /// True iff the probed stream may still produce data at some `t < time`.
+    pub fn less_than(&self, time: &T) -> bool {
+        self.frontier.borrow().antichain.less_than(time)
+    }
+
+    /// True iff the probed stream is complete (closed frontier).
+    pub fn done(&self) -> bool {
+        self.frontier.borrow().antichain.is_empty()
+    }
+
+    /// A snapshot of the probed frontier.
+    pub fn frontier(&self) -> Antichain<T> {
+        self.frontier.borrow().antichain.to_antichain()
+    }
+}
+
+/// Attaches probes to streams.
+pub trait ProbeExt<T: Timestamp, D: Data> {
+    /// Consumes the stream (pipeline pact) and exposes its frontier.
+    fn probe(&self) -> ProbeHandle<T>;
+
+    /// Probes while passing data through to an inspection closure.
+    fn probe_with<F: FnMut(&T, &[D]) + 'static>(&self, logic: F) -> ProbeHandle<T>;
+}
+
+impl<T: Timestamp, D: Data> ProbeExt<T, D> for Stream<T, D> {
+    fn probe(&self) -> ProbeHandle<T> {
+        self.probe_with(|_, _| {})
+    }
+
+    fn probe_with<F: FnMut(&T, &[D]) + 'static>(&self, mut logic: F) -> ProbeHandle<T> {
+        self.sink(Pact::Pipeline, "probe", move |_info: OperatorInfo| {
+            move |input| {
+                while let Some((token, data)) = input.next() {
+                    logic(token.time(), &data);
+                }
+            }
+        });
+        // `sink` hides the frontier handle; the probe's input port is the
+        // most recently registered frontier request in the build state.
+        let scope = self.scope();
+        let state = scope.state.borrow();
+        let (_, _, frontier) = state
+            .frontier_handles
+            .last()
+            .expect("probe registered an input port");
+        ProbeHandle { frontier: frontier.clone() }
+    }
+}

@@ -1,0 +1,147 @@
+//! The per-worker dataflow build state.
+//!
+//! Every worker runs the same construction code and produces an identical
+//! graph; node and channel identifiers are assigned in construction order,
+//! which is how matching communication channels are claimed across workers
+//! without coordination.
+
+use super::channels::Data;
+use super::token::BookkeepingHandle;
+use crate::progress::reachability::GraphTopology;
+use crate::progress::timestamp::Timestamp;
+use crate::progress::tracker::FrontierHandle;
+use crate::worker::allocator::Fabric;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// One registered operator, as the worker's scheduler sees it.
+pub struct OpCore<T: Timestamp> {
+    /// Operator name (diagnostics).
+    pub name: String,
+    /// Node index in the dataflow graph.
+    pub node: usize,
+    /// The operator logic; invoked when the operator is scheduled.
+    pub logic: Box<dyn FnMut()>,
+    /// True iff the operator has queued input.
+    pub work_hint: Box<dyn Fn() -> bool>,
+    /// Explicit re-scheduling request (see [`Activator`]).
+    pub activation: Rc<Cell<bool>>,
+    /// The operator's input-port frontier handles (scheduling triggers).
+    pub frontiers: Vec<FrontierHandle<T>>,
+}
+
+/// A handle operators can use to request re-invocation even without new
+/// input or frontier movement — the mechanism behind co-operative flow
+/// control (§6.1: an operator "yields control without yielding the right to
+/// resume execution").
+#[derive(Clone)]
+pub struct Activator {
+    flag: Rc<Cell<bool>>,
+}
+
+impl Activator {
+    pub(crate) fn new(flag: Rc<Cell<bool>>) -> Self {
+        Activator { flag }
+    }
+
+    /// Requests that the operator be scheduled again.
+    pub fn activate(&self) {
+        self.flag.set(true);
+    }
+}
+
+/// The mutable state accumulated while a worker builds its dataflow.
+pub struct BuildState<T: Timestamp> {
+    /// This worker's index.
+    pub index: usize,
+    /// Total number of workers.
+    pub peers: usize,
+    /// The cross-worker communication fabric.
+    pub fabric: Arc<Fabric>,
+    /// The worker-wide shared bookkeeping that all tokens write to.
+    pub bookkeeping: BookkeepingHandle<T>,
+    /// The graph topology under construction.
+    pub topology: GraphTopology<T>,
+    /// Registered operators (moved into the worker at finalization).
+    pub ops: Vec<OpCore<T>>,
+    /// Frontier handles created during construction, adopted by the tracker.
+    pub frontier_handles: Vec<(usize, usize, FrontierHandle<T>)>,
+    /// Drainers that move remote messages into local mailboxes.
+    pub drainers: Vec<Box<dyn FnMut() -> bool>>,
+    /// Flushers that release staged remote messages post-log-append.
+    pub flushers: Vec<Box<dyn FnMut()>>,
+    /// Channel id counter.
+    pub channels: usize,
+    /// Set once the worker has built its tracker; no more graph mutation.
+    pub finalized: bool,
+    /// Raised by any channel that stages remote data this step (forces the
+    /// worker to append its progress batch before releasing the fabric).
+    pub remote_staged: Rc<Cell<bool>>,
+}
+
+impl<T: Timestamp> BuildState<T> {
+    /// Fresh build state for one worker.
+    pub fn new(index: usize, peers: usize, fabric: Arc<Fabric>) -> Self {
+        BuildState {
+            index,
+            peers,
+            fabric,
+            bookkeeping: BookkeepingHandle::new(),
+            topology: GraphTopology::default(),
+            ops: Vec::new(),
+            frontier_handles: Vec::new(),
+            drainers: Vec::new(),
+            flushers: Vec::new(),
+            channels: 0,
+            finalized: false,
+            remote_staged: Rc::new(Cell::new(false)),
+        }
+    }
+
+    /// Allocates the next channel id.
+    pub fn next_channel(&mut self) -> usize {
+        assert!(!self.finalized, "cannot add channels after the dataflow started");
+        let id = self.channels;
+        self.channels += 1;
+        id
+    }
+}
+
+/// A cloneable handle on the build state; held by [`super::stream::Stream`]s
+/// and operator builders.
+pub struct Scope<T: Timestamp> {
+    pub(crate) state: Rc<RefCell<BuildState<T>>>,
+}
+
+impl<T: Timestamp> Clone for Scope<T> {
+    fn clone(&self) -> Self {
+        Scope { state: self.state.clone() }
+    }
+}
+
+impl<T: Timestamp> Scope<T> {
+    /// Wraps freshly created build state.
+    pub fn new(state: BuildState<T>) -> Self {
+        Scope { state: Rc::new(RefCell::new(state)) }
+    }
+
+    /// This worker's index.
+    pub fn index(&self) -> usize {
+        self.state.borrow().index
+    }
+
+    /// Total number of workers.
+    pub fn peers(&self) -> usize {
+        self.state.borrow().peers
+    }
+
+    /// The worker-wide bookkeeping handle.
+    pub fn bookkeeping(&self) -> BookkeepingHandle<T> {
+        self.state.borrow().bookkeeping.clone()
+    }
+}
+
+/// Marker alias so signatures read naturally.
+pub trait ScopeData: Data {}
+impl<D: Data> ScopeData for D {}

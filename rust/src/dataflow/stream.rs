@@ -1,0 +1,78 @@
+//! Streams: handles to an operator output, from which downstream operators
+//! are built.
+
+use super::channels::{
+    drainer, ChannelSend, ChannelSendHandle, Data, LocalQueue, Message, Pact, TeeHandle,
+};
+use super::scope::Scope;
+use crate::progress::location::Location;
+use crate::progress::timestamp::Timestamp;
+
+/// A stream of `(T, D)` message batches flowing out of one operator output
+/// port, instantiated on every worker.
+pub struct Stream<T: Timestamp, D: Data> {
+    /// The output port that produces this stream.
+    pub source: Location,
+    /// The send sides of channels attached to the port (grows as consumers
+    /// connect).
+    tee: TeeHandle<T, D>,
+    /// The dataflow build state.
+    scope: Scope<T>,
+}
+
+impl<T: Timestamp, D: Data> Clone for Stream<T, D> {
+    fn clone(&self) -> Self {
+        Stream { source: self.source, tee: self.tee.clone(), scope: self.scope.clone() }
+    }
+}
+
+impl<T: Timestamp, D: Data> Stream<T, D> {
+    /// Wraps an output port (done by `OperatorBuilder::new_output`).
+    pub fn new(source: Location, tee: TeeHandle<T, D>, scope: Scope<T>) -> Self {
+        Stream { source, tee, scope }
+    }
+
+    /// The dataflow scope this stream belongs to.
+    pub fn scope(&self) -> Scope<T> {
+        self.scope.clone()
+    }
+
+    /// Connects this stream to input port `port` of node `node` with the
+    /// given pact, delivering messages into `queue`.
+    ///
+    /// Allocates the channel (same id on every worker), claims the matching
+    /// cross-worker endpoints from the fabric, records the graph edge, and
+    /// registers the drainers/flushers with the worker.
+    pub fn connect_to(&self, node: usize, port: usize, pact: Pact<D>, queue: LocalQueue<T, D>) {
+        let mut state = self.scope.state.borrow_mut();
+        assert!(!state.finalized, "cannot connect streams after the dataflow started");
+        let channel = state.channels;
+        state.channels += 1;
+        let index = state.index;
+        let peers = state.peers;
+        let target = Location::target(node, port);
+        state.topology.edges.push((self.source, target));
+
+        // Claim remote endpoints: we send on (channel, index, w) and receive
+        // on (channel, w, index) for every peer w != index.
+        let mut remote = Vec::with_capacity(peers);
+        for w in 0..peers {
+            if w == index {
+                remote.push(None);
+            } else {
+                remote.push(Some(state.fabric.sender::<Message<T, D>>(channel, index, w)));
+                let receiver = state.fabric.receiver::<Message<T, D>>(channel, w, index);
+                state.drainers.push(drainer(receiver, queue.clone()));
+            }
+        }
+
+        let staged_flag = state.remote_staged.clone();
+        let send: ChannelSendHandle<T, D> = std::rc::Rc::new(std::cell::RefCell::new(
+            ChannelSend::new(channel, target, pact, index, peers, remote, queue, staged_flag),
+        ));
+        let flush = send.clone();
+        state.flushers.push(Box::new(move || flush.borrow_mut().flush_remote()));
+        drop(state);
+        self.tee.borrow_mut().push(send);
+    }
+}

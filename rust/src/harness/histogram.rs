@@ -1,0 +1,234 @@
+//! Log-binned latency histograms (paper §7.1: "we record the observed
+//! latency in units of nanoseconds in a histogram of logarithmically-sized
+//! bins").
+//!
+//! HDR-style binning: values are grouped by magnitude (the position of the
+//! highest set bit) with 16 linear sub-buckets per magnitude, giving a
+//! worst-case quantization error of 1/16 ≈ 6% — ample for reporting p50 /
+//! p999 / max as the paper does.
+
+/// Linear sub-buckets per power of two (log2).
+const SUB_BITS: u32 = 4;
+const SUB_BUCKETS: u64 = 1 << SUB_BITS;
+
+/// A latency histogram over `u64` nanosecond values.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    max: u64,
+    min: u64,
+    sum: u128,
+}
+
+fn bucket_index(value: u64) -> usize {
+    let v = value | 1;
+    let magnitude = 63 - v.leading_zeros();
+    if magnitude < SUB_BITS {
+        value as usize
+    } else {
+        let shift = magnitude - SUB_BITS;
+        (((magnitude - SUB_BITS + 1) as u64 * SUB_BUCKETS) as usize) + ((v >> shift) as usize
+            - SUB_BUCKETS as usize)
+    }
+}
+
+/// Upper bound of the bucket with the given index (inverse of
+/// `bucket_index`, up to quantization).
+fn bucket_upper(index: usize) -> u64 {
+    if index < SUB_BUCKETS as usize {
+        index as u64
+    } else {
+        let index = index as u64 - SUB_BUCKETS;
+        let magnitude = index / SUB_BUCKETS;
+        let sub = index % SUB_BUCKETS;
+        ((SUB_BUCKETS + sub + 1) << magnitude) - 1
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; bucket_index(u64::MAX) + 1],
+            total: 0,
+            max: 0,
+            min: u64::MAX,
+            sum: 0,
+        }
+    }
+
+    /// Records one value.
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.counts[bucket_index(value)] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        if value > self.max {
+            self.max = value;
+        }
+        if value < self.min {
+            self.min = value;
+        }
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact maximum recorded value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact minimum recorded value (0 if empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Mean of recorded values.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]` (bucket upper bound; exact max for
+    /// the top).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 99.9th percentile (the paper's tail metric).
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Merges another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Formats nanoseconds the way the paper's tables do (milliseconds with two
+/// decimals).
+pub fn fmt_ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+/// Formats nanoseconds adaptively (µs / ms / s) for plots and logs.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_error_bounded() {
+        // Quantization error of the (index -> upper bound) mapping is < 1/16.
+        for shift in 0..60 {
+            for off in [0u64, 1, 7] {
+                let v = (1u64 << shift) + off;
+                let ub = bucket_upper(bucket_index(v));
+                assert!(ub >= v, "upper bound {ub} below value {v}");
+                assert!(ub as f64 <= v as f64 * (1.0 + 1.0 / 8.0) + 1.0, "{ub} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_of_uniform_range() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000); // 1µs .. 1ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50();
+        assert!((450_000..=560_000).contains(&p50), "p50 = {p50}");
+        let p999 = h.p999();
+        assert!(p999 >= 990_000, "p999 = {p999}");
+        assert_eq!(h.max(), 1_000_000);
+        assert_eq!(h.min(), 1000);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut c = LatencyHistogram::new();
+        for i in 0..500u64 {
+            a.record(i * 37 + 5);
+            c.record(i * 37 + 5);
+        }
+        for i in 0..300u64 {
+            b.record(i * 91 + 11);
+            c.record(i * 91 + 11);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.max(), c.max());
+        assert_eq!(a.p50(), c.p50());
+        assert_eq!(a.p999(), c.p999());
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ms(1_250_000), "1.25");
+        assert_eq!(fmt_ns(512), "512ns");
+        assert_eq!(fmt_ns(2_500), "2.5µs");
+        assert_eq!(fmt_ns(3_000_000), "3.00ms");
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's evaluation harness: open-loop load generation, log-binned
+//! latency histograms, DNF detection, and the benchmark workloads (§7.1).
+
+pub mod histogram;
+pub mod openloop;
+pub mod report;
+pub mod workloads;
+
+pub use histogram::LatencyHistogram;
+pub use openloop::{run, Outcome, Params, Workload};
+pub use workloads::{CompletionProbe, WorkloadInput};

@@ -1,0 +1,292 @@
+//! The open-loop evaluation harness (paper §7.1).
+//!
+//! "Our open-loop testing harness supplies the input at a specified rate,
+//! even if the system itself becomes less responsive. We record the
+//! observed latency in units of nanoseconds in a histogram of
+//! logarithmically-sized bins. If the system becomes overloaded and
+//! end-to-end latency becomes greater than 1 second, the testing harness
+//! regards the experiment as failed [DNF]."
+//!
+//! Timestamps are wall-clock nanoseconds since the experiment epoch,
+//! quantized to the configured power-of-two quantum (§7.2): a quantum of
+//! `2^x` ns admits at most `1e9 / 2^x` distinct timestamps per second. A
+//! stamp `t` completes when the sink proves no more data `≤ t` can arrive;
+//! its latency is `completion_wall_time - t`.
+
+use super::histogram::LatencyHistogram;
+use super::workloads::{build_noop_chain, build_word_count, CompletionProbe, WorkloadInput};
+use crate::config::Config;
+use crate::coordination::Mechanism;
+use crate::worker::execute::execute;
+use crate::worker::Worker;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Which benchmark dataflow to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// §7.2 word count: data at `rate_per_worker` tuples/s.
+    WordCount,
+    /// §7.3 idle pipeline of `n` no-ops: timestamp ticks only, no data.
+    NoopChain(usize),
+}
+
+/// Open-loop experiment parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    /// Worker threads.
+    pub workers: usize,
+    /// Coordination mechanism under test.
+    pub mechanism: Mechanism,
+    /// Benchmark dataflow.
+    pub workload: Workload,
+    /// Offered load per worker: tuples/s (word count) — ignored for no-op
+    /// chains, whose load is set by `quantum_ns` (ticks/s = 1e9 / quantum).
+    pub rate_per_worker: u64,
+    /// Timestamp quantum in nanoseconds (power of two for word count; for
+    /// no-op chains this is the tick period).
+    pub quantum_ns: u64,
+    /// Measured duration.
+    pub duration: Duration,
+    /// Warm-up (latencies not recorded).
+    pub warmup: Duration,
+    /// Distinct words fed to the word count.
+    pub vocab: u64,
+    /// Latency above which the experiment is declared failed.
+    pub dnf_after: Duration,
+    /// Pin workers to cores.
+    pub pin_workers: bool,
+}
+
+impl Params {
+    /// Paper-like defaults (scaled to this testbed); see the bench binaries
+    /// for the per-figure sweeps.
+    pub fn new(mechanism: Mechanism, workload: Workload) -> Self {
+        Params {
+            workers: 4,
+            mechanism,
+            workload,
+            rate_per_worker: 250_000,
+            quantum_ns: 1 << 13,
+            duration: Duration::from_secs(2),
+            warmup: Duration::from_millis(500),
+            vocab: 1 << 14,
+            dnf_after: Duration::from_secs(1),
+            pin_workers: true,
+        }
+    }
+}
+
+/// The outcome of one experiment.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Completed within the latency bound.
+    Completed {
+        /// Merged latency histogram across workers.
+        histogram: LatencyHistogram,
+        /// Tuples/s actually offered (all workers).
+        achieved_rate: f64,
+    },
+    /// Overloaded: end-to-end latency exceeded the bound (paper: "DNF").
+    Dnf,
+}
+
+impl Outcome {
+    /// True iff the experiment failed.
+    pub fn is_dnf(&self) -> bool {
+        matches!(self, Outcome::Dnf)
+    }
+}
+
+/// Per-worker driver result.
+enum WorkerOutcome {
+    Completed { histogram: LatencyHistogram, sent: u64 },
+    Dnf,
+}
+
+/// Runs one open-loop experiment.
+pub fn run(params: Params) -> Outcome {
+    let epoch = Instant::now() + Duration::from_millis(50); // build headroom
+    let config = Config {
+        workers: params.workers,
+        pin_workers: params.pin_workers,
+        ..Config::default()
+    };
+    let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
+
+    let mut histogram = LatencyHistogram::new();
+    let mut sent_total = 0u64;
+    for result in results {
+        match result {
+            WorkerOutcome::Dnf => return Outcome::Dnf,
+            WorkerOutcome::Completed { histogram: h, sent } => {
+                histogram.merge(&h);
+                sent_total += sent;
+            }
+        }
+    }
+    let achieved_rate = sent_total as f64 / params.duration.as_secs_f64();
+    Outcome::Completed { histogram, achieved_rate }
+}
+
+/// The per-worker open-loop driving loop.
+fn drive(worker: &mut Worker<u64>, params: Params, epoch: Instant) -> WorkerOutcome {
+    let (mut input, probe) = match params.workload {
+        Workload::WordCount => build_word_count(worker, params.mechanism),
+        Workload::NoopChain(n) => build_noop_chain(worker, params.mechanism, n),
+    };
+    worker.finalize();
+
+    let quantum = params.quantum_ns.max(1);
+    let data_rate = match params.workload {
+        Workload::WordCount => params.rate_per_worker,
+        Workload::NoopChain(_) => 0,
+    };
+    let warmup_ns = params.warmup.as_nanos() as u64;
+    let total_ns = (params.warmup + params.duration).as_nanos() as u64;
+    let dnf_ns = params.dnf_after.as_nanos() as u64;
+
+    // Deterministic per-worker word generator (xorshift64*).
+    let mut rng_state = 0x9e3779b97f4a7c15u64 ^ ((worker.index() as u64 + 1) << 32);
+    let mut next_word = move || {
+        rng_state ^= rng_state << 13;
+        rng_state ^= rng_state >> 7;
+        rng_state ^= rng_state << 17;
+        rng_state.wrapping_mul(0x2545f4914f6cdd1d)
+    };
+
+    let mut histogram = LatencyHistogram::new();
+    let mut pending: VecDeque<u64> = VecDeque::new();
+    let mut sent = 0u64;
+    let mut measured_sent = 0u64;
+    let mut last_quantum = 0u64;
+
+    // Wait for the shared epoch so workers agree on wall-clock stamps.
+    while Instant::now() < epoch {
+        std::thread::yield_now();
+    }
+
+    let mut dnf = false;
+    loop {
+        let now = epoch.elapsed().as_nanos() as u64;
+        if now >= total_ns {
+            break;
+        }
+
+        // Advance the source to the current quantum and emit its due data.
+        let q = now / quantum * quantum;
+        if q > last_quantum {
+            input.advance(q);
+            last_quantum = q;
+            pending.push_back(q);
+        }
+        if data_rate > 0 {
+            let target = (now as u128 * data_rate as u128 / 1_000_000_000) as u64;
+            let due = target.saturating_sub(sent);
+            for _ in 0..due {
+                input.send(q, next_word() % params.vocab);
+            }
+            sent += due;
+            if now >= warmup_ns {
+                measured_sent += due;
+            }
+        }
+
+        worker.step();
+
+        // Retire completed stamps; check the overload bound on the oldest.
+        let now2 = epoch.elapsed().as_nanos() as u64;
+        while let Some(&oldest) = pending.front() {
+            if probe.complete(oldest) {
+                if oldest >= warmup_ns {
+                    histogram.record(now2.saturating_sub(oldest));
+                }
+                pending.pop_front();
+            } else {
+                if now2.saturating_sub(oldest) > dnf_ns {
+                    // Overloaded. Do NOT stop stepping: peers depend on
+                    // this worker's operator instances to drain their own
+                    // dataflow — fall through to cooperative teardown.
+                    dnf = true;
+                }
+                break;
+            }
+        }
+        if dnf {
+            break;
+        }
+    }
+
+    // Cooperative teardown: close the input and KEEP STEPPING until the
+    // whole dataflow drains (bounded by a hard deadline so an engine bug
+    // surfaces as DNF, never as a hang). Remaining stamps still count
+    // toward the histogram and the DNF verdict.
+    input.close();
+    let teardown_deadline =
+        Instant::now() + params.dnf_after + Duration::from_secs(5);
+    while !probe.done() {
+        worker.step();
+        let now = epoch.elapsed().as_nanos() as u64;
+        while let Some(&oldest) = pending.front() {
+            if probe.complete(oldest) {
+                if oldest >= warmup_ns {
+                    histogram.record(now.saturating_sub(oldest));
+                }
+                pending.pop_front();
+            } else {
+                if now.saturating_sub(oldest) > dnf_ns {
+                    dnf = true;
+                    pending.pop_front();
+                }
+                break;
+            }
+        }
+        if Instant::now() > teardown_deadline {
+            dnf = true;
+            break;
+        }
+    }
+    if dnf || !pending.is_empty() {
+        return WorkerOutcome::Dnf;
+    }
+    WorkerOutcome::Completed { histogram, sent: measured_sent }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_word_count_completes_at_modest_load() {
+        let mut params = Params::new(Mechanism::Tokens, Workload::WordCount);
+        params.workers = 2;
+        params.pin_workers = false;
+        params.rate_per_worker = 20_000;
+        params.quantum_ns = 1 << 16;
+        params.duration = Duration::from_millis(400);
+        params.warmup = Duration::from_millis(100);
+        match run(params) {
+            Outcome::Completed { histogram, achieved_rate } => {
+                assert!(histogram.count() > 0, "no latencies recorded");
+                assert!(achieved_rate > 10_000.0, "rate {achieved_rate}");
+                // Sane latencies: under the DNF bound by construction.
+                assert!(histogram.max() < 1_000_000_000);
+            }
+            Outcome::Dnf => panic!("DNF at trivial load"),
+        }
+    }
+
+    #[test]
+    fn noop_chain_all_mechanisms_complete_at_low_tick_rate() {
+        for mechanism in Mechanism::all() {
+            let mut params = Params::new(mechanism, Workload::NoopChain(8));
+            params.workers = 2;
+            params.pin_workers = false;
+            params.quantum_ns = 1_000_000; // 1k ticks/s
+            params.duration = Duration::from_millis(300);
+            params.warmup = Duration::from_millis(100);
+            let outcome = run(params);
+            assert!(!outcome.is_dnf(), "{mechanism:?} DNF at 1k ticks/s");
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Table formatting for the bench binaries: rows shaped like the paper's
+//! tables (p50 / p999 / max in milliseconds, `DNF` for overload).
+
+use super::histogram::fmt_ms;
+use super::openloop::Outcome;
+
+/// One table row: a configuration label and its outcome.
+pub struct Row {
+    /// Configuration cells (e.g. rate, workers, quantum, mechanism).
+    pub cells: Vec<String>,
+    /// The measured outcome.
+    pub outcome: Outcome,
+}
+
+/// Formats the latency triple of an outcome the way Figure 9 does.
+pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
+    match outcome {
+        Outcome::Dnf => ["DNF".into(), "DNF".into(), "DNF".into()],
+        Outcome::Completed { histogram, .. } => [
+            fmt_ms(histogram.p50()),
+            fmt_ms(histogram.p999()),
+            fmt_ms(histogram.max()),
+        ],
+    }
+}
+
+/// Prints a table with a header; column widths auto-fit.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::LatencyHistogram;
+
+    #[test]
+    fn dnf_rows_say_dnf() {
+        let cells = latency_cells(&Outcome::Dnf);
+        assert_eq!(cells, ["DNF", "DNF", "DNF"]);
+    }
+
+    #[test]
+    fn completed_rows_are_milliseconds() {
+        let mut h = LatencyHistogram::new();
+        h.record(1_500_000);
+        let cells = latency_cells(&Outcome::Completed { histogram: h, achieved_rate: 0.0 });
+        assert_eq!(cells[0], "1.50");
+    }
+}

@@ -1,0 +1,312 @@
+//! The paper's benchmark dataflows, one per coordination mechanism.
+//!
+//! Each builder returns a mechanism-agnostic `(input, probe)` pair so the
+//! open-loop driver ([`super::openloop`]) can run any `(workload,
+//! mechanism)` combination. Latency semantics are aligned: a timestamp `t`
+//! is *complete* when the sink can prove no more data at `≤ t` will arrive
+//! (frontier passed `t` for tokens/notifications, sink watermark `> t` for
+//! watermarks).
+
+use crate::coordination::notificator::Notificator;
+use crate::coordination::watermark::{
+    WatermarkExt, WmInput, WmLogic, WmProbeHandle, WmRecord, WmWiring, WM_CLOSED,
+};
+use crate::coordination::Mechanism;
+use crate::dataflow::channels::Pact;
+use crate::dataflow::input::InputSession;
+use crate::dataflow::operator::OperatorExt;
+use crate::dataflow::probe::{ProbeExt, ProbeHandle};
+use crate::operators::noop::NoopExt;
+use crate::operators::wordcount::WordCountExt;
+use crate::worker::Worker;
+use std::collections::HashMap;
+
+/// Mechanism-agnostic input handle for the benchmark workloads, generic
+/// over the record type (`u64` words for §7.2/§7.3, `nexmark::Event` for
+/// §7.4).
+pub enum WorkloadInput<D: crate::dataflow::channels::Data = u64> {
+    /// Token/notification workloads feed a plain engine input.
+    Engine(InputSession<u64, D>),
+    /// Watermark workloads feed data + in-stream marks.
+    Wm(WmInput<D>),
+}
+
+impl<D: crate::dataflow::channels::Data> WorkloadInput<D> {
+    /// Sends one record with event time `te` (the current quantized stamp).
+    #[inline]
+    pub fn send(&mut self, te: u64, record: D) {
+        match self {
+            WorkloadInput::Engine(input) => input.send(record),
+            WorkloadInput::Wm(input) => input.send(te, record),
+        }
+    }
+
+    /// Advances the source to quantized time `t` (engine epoch or
+    /// watermark).
+    pub fn advance(&mut self, t: u64) {
+        match self {
+            WorkloadInput::Engine(input) => input.advance_to(t),
+            WorkloadInput::Wm(input) => input.advance_watermark(t),
+        }
+    }
+
+    /// The source's current time.
+    pub fn time(&self) -> u64 {
+        match self {
+            WorkloadInput::Engine(input) => *input.time(),
+            WorkloadInput::Wm(input) => input.watermark(),
+        }
+    }
+
+    /// Closes the input.
+    pub fn close(&mut self) {
+        match self {
+            WorkloadInput::Engine(input) => input.close(),
+            WorkloadInput::Wm(input) => input.close(),
+        }
+    }
+}
+
+/// Mechanism-agnostic completion probe.
+#[derive(Clone)]
+pub enum CompletionProbe {
+    /// Engine frontier (tokens / notifications).
+    Engine(ProbeHandle<u64>),
+    /// Sink watermark.
+    Wm(WmProbeHandle),
+}
+
+impl CompletionProbe {
+    /// True iff no more data at timestamps `≤ t` can arrive at the sink.
+    #[inline]
+    pub fn complete(&self, t: u64) -> bool {
+        match self {
+            CompletionProbe::Engine(probe) => !probe.less_equal(&t),
+            CompletionProbe::Wm(probe) => probe.watermark() > t,
+        }
+    }
+
+    /// True iff the dataflow has fully drained.
+    pub fn done(&self) -> bool {
+        match self {
+            CompletionProbe::Engine(probe) => probe.done(),
+            CompletionProbe::Wm(probe) => probe.done(),
+        }
+    }
+}
+
+/// The Naiad-notification word count: buffers words per timestamp, requests
+/// a notification per *distinct* timestamp, and emits each tally only when
+/// its notification is delivered — one system interaction per timestamp,
+/// which is exactly what collapses for fine-grained quanta (§7.2).
+fn word_count_notify(
+    stream: &crate::dataflow::stream::Stream<u64, u64>,
+) -> crate::dataflow::stream::Stream<u64, (u64, u64)> {
+    stream.unary_frontier(
+        Pact::exchange(|w: &u64| *w),
+        "word_count_notify",
+        |tok, info| {
+            drop(tok);
+            let mut notificator = Notificator::new(info.activator.clone());
+            let mut stash: HashMap<u64, Vec<u64>> = HashMap::new();
+            let mut counts: HashMap<u64, u64> = HashMap::new();
+            let mut frontier_buf: Vec<u64> = Vec::new();
+            move |input: &mut _, output: &mut _| {
+                while let Some((token, data)) = input.next() {
+                    let t = *token.time();
+                    stash.entry(t).or_insert_with(|| {
+                        notificator.notify_at(token.retain());
+                        Vec::new()
+                    });
+                    stash.get_mut(&t).expect("stashed").extend(data);
+                }
+                frontier_buf.clear();
+                frontier_buf.extend_from_slice(input.frontier().frontier());
+                // ONE notification per invocation (Naiad's contract).
+                if let Some(token) = notificator.next(&frontier_buf) {
+                    if let Some(words) = stash.remove(token.time()) {
+                        let mut session = output.session(&token);
+                        for word in words {
+                            let count = counts.entry(word).or_insert(0);
+                            *count += 1;
+                            session.give((word, *count));
+                        }
+                    }
+                }
+            }
+        },
+    )
+}
+
+/// The Flink-watermark word count logic (counts are emitted immediately;
+/// marks drive only completion).
+struct WmWordCount {
+    counts: HashMap<u64, u64>,
+}
+impl WmLogic<u64, (u64, u64)> for WmWordCount {
+    fn on_data(&mut self, te: u64, word: u64, out: &mut Vec<(u64, (u64, u64))>) {
+        let count = self.counts.entry(word).or_insert(0);
+        *count += 1;
+        out.push((te, (word, *count)));
+    }
+    fn on_watermark(&mut self, _wm: u64, _out: &mut Vec<(u64, (u64, u64))>) {}
+}
+
+/// Builds the §7.2 word-count dataflow under `mechanism`.
+pub fn build_word_count(
+    worker: &mut Worker<u64>,
+    mechanism: Mechanism,
+) -> (WorkloadInput, CompletionProbe) {
+    match mechanism {
+        Mechanism::Tokens => {
+            let (input, stream) = worker.new_input::<u64>();
+            let probe = stream.word_count().probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::Notifications => {
+            let (input, stream) = worker.new_input::<u64>();
+            let probe = word_count_notify(&stream).probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::WatermarksX | Mechanism::WatermarksP => {
+            // The word count must aggregate globally, so data is exchanged
+            // in both wirings; -P is only meaningful for pipelines (Fig 8).
+            let (input, stream) = WmInput::<u64>::new(worker);
+            let counted = stream.wm_unary(
+                WmWiring::Exchanged,
+                "wm_word_count",
+                |w: &u64| *w,
+                WmWordCount { counts: HashMap::new() },
+            );
+            let probe = counted.wm_probe(|_| {});
+            (WorkloadInput::Wm(input), CompletionProbe::Wm(probe))
+        }
+    }
+}
+
+/// Builds the §7.3 idle-pipeline dataflow: one exchange off the input, then
+/// `chain` no-op operators, under `mechanism`.
+///
+/// Tokens and notifications share the no-op implementation: a Naiad no-op
+/// forwards data on receipt and requests no notifications, so the two
+/// mechanisms coincide on idle fragments — as the paper's Figure 8 shows
+/// (both flat). Watermarks differ by wiring: `-X` broadcasts marks at every
+/// stage, `-P` keeps the chain worker-local.
+pub fn build_noop_chain(
+    worker: &mut Worker<u64>,
+    mechanism: Mechanism,
+    chain: usize,
+) -> (WorkloadInput, CompletionProbe) {
+    match mechanism {
+        Mechanism::Tokens | Mechanism::Notifications => {
+            let (input, stream) = worker.new_input::<u64>();
+            let probe = stream
+                .unary(Pact::exchange(|w: &u64| *w), "head_exchange", |tok, _| {
+                    drop(tok);
+                    move |input: &mut _, output: &mut _| {
+                        while let Some((token, data)) = input.next() {
+                            output.session(&token).give_vec(data);
+                        }
+                    }
+                })
+                .noop_chain(chain)
+                .probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::WatermarksX => {
+            let (input, stream) = WmInput::<u64>::new(worker);
+            let probe = stream
+                .wm_noop_chain(WmWiring::Exchanged, chain)
+                .wm_probe(|_| {});
+            (WorkloadInput::Wm(input), CompletionProbe::Wm(probe))
+        }
+        Mechanism::WatermarksP => {
+            let (input, stream) = WmInput::<u64>::new(worker);
+            let probe = stream
+                .wm_noop_chain(WmWiring::Pipelined, chain)
+                .wm_probe(|_| {});
+            (WorkloadInput::Wm(input), CompletionProbe::Wm(probe))
+        }
+    }
+}
+
+/// Closes a workload and steps the worker until fully drained.
+pub fn drain<D: crate::dataflow::channels::Data>(
+    worker: &mut Worker<u64>,
+    input: &mut WorkloadInput<D>,
+    probe: &CompletionProbe,
+) {
+    input.close();
+    worker.step_while(|| !probe.done());
+}
+
+/// The closing timestamp used by watermark workloads.
+pub const CLOSED: u64 = WM_CLOSED;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::worker::execute::execute;
+
+    /// All mechanisms produce a complete signal for every fed timestamp.
+    #[test]
+    fn all_mechanisms_complete_word_count() {
+        for mechanism in Mechanism::all() {
+            let results = execute::<u64, _, _>(
+                Config { workers: 2, pin_workers: false, ..Default::default() },
+                move |worker| {
+                    let (mut input, probe) = build_word_count(worker, mechanism);
+                    for step in 1..=5u64 {
+                        let t = step * 1000;
+                        for w in 0..16u64 {
+                            input.send(t, w);
+                        }
+                        input.advance(t + 1000);
+                        let deadline = std::time::Instant::now()
+                            + std::time::Duration::from_secs(5);
+                        while !probe.complete(t) {
+                            worker.step();
+                            assert!(
+                                std::time::Instant::now() < deadline,
+                                "{mechanism:?} stuck at t={t}"
+                            );
+                        }
+                    }
+                    drain(worker, &mut input, &probe);
+                    true
+                },
+            );
+            assert_eq!(results, vec![true, true], "{mechanism:?}");
+        }
+    }
+
+    /// All mechanisms drain an idle no-op chain.
+    #[test]
+    fn all_mechanisms_complete_noop_chain() {
+        for mechanism in Mechanism::all() {
+            let results = execute::<u64, _, _>(
+                Config { workers: 2, pin_workers: false, ..Default::default() },
+                move |worker| {
+                    let (mut input, probe) = build_noop_chain(worker, mechanism, 16);
+                    for step in 1..=5u64 {
+                        let t = step * 1000;
+                        input.advance(t);
+                        let deadline = std::time::Instant::now()
+                            + std::time::Duration::from_secs(5);
+                        while !probe.complete(t.saturating_sub(1)) {
+                            worker.step();
+                            assert!(
+                                std::time::Instant::now() < deadline,
+                                "{mechanism:?} stuck at t={t}"
+                            );
+                        }
+                    }
+                    drain(worker, &mut input, &probe);
+                    true
+                },
+            );
+            assert_eq!(results, vec![true, true], "{mechanism:?}");
+        }
+    }
+}

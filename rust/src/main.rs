@@ -1,0 +1,160 @@
+//! `ttd` — the timestamp-tokens dataflow launcher.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! ttd wordcount  [--workers N] [--rate R] [--quantum-bits B]
+//!                [--mechanism tokens|notifications|watermarks-x]
+//!                [--duration-ms D]           the §7.2 microbenchmark
+//! ttd noop       [--chain N] [--ticks R] ...  the §7.3 idle pipeline
+//! ttd nexmark    [--query q4|q7] [--window-ms W] ...   the §7.4 queries
+//! ttd artifacts  [--dir PATH]                 verify the PJRT data plane
+//! ttd info                                    engine / environment info
+//! ```
+
+use std::time::Duration;
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::harness::openloop::{run, Outcome, Params, Workload};
+use timestamp_tokens::harness::report::latency_cells;
+use timestamp_tokens::nexmark::bench::{run_nexmark, NexmarkParams, Query};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut iter = args.iter();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some(value) = iter.next() {
+                    flags.insert(key.to_string(), value.clone());
+                }
+            }
+        }
+        Args { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn mechanism(&self) -> Mechanism {
+        self.flags
+            .get("mechanism")
+            .map(|m| m.parse().expect("tokens|notifications|watermarks-x|watermarks-p"))
+            .unwrap_or(Mechanism::Tokens)
+    }
+}
+
+fn print_outcome(label: &str, outcome: &Outcome) {
+    let lat = latency_cells(outcome);
+    match outcome {
+        Outcome::Dnf => println!("{label}: DNF (end-to-end latency exceeded 1s)"),
+        Outcome::Completed { achieved_rate, histogram } => println!(
+            "{label}: p50 {} ms  p999 {} ms  max {} ms  ({:.2} M tuples/s, {} stamps)",
+            lat[0],
+            lat[1],
+            lat[2],
+            achieved_rate / 1e6,
+            histogram.count()
+        ),
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let command = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[argv.len().min(1)..]);
+
+    match command {
+        "wordcount" | "noop" => {
+            let workers = args.get("workers", 4usize);
+            let mechanism = args.mechanism();
+            let workload = if command == "wordcount" {
+                Workload::WordCount
+            } else {
+                Workload::NoopChain(args.get("chain", 64usize))
+            };
+            let mut params = Params::new(mechanism, workload);
+            params.workers = workers;
+            params.rate_per_worker = args.get("rate", 1_000_000u64) / workers as u64;
+            params.quantum_ns = match workload {
+                Workload::WordCount => 1u64 << args.get("quantum-bits", 13u32),
+                Workload::NoopChain(_) => {
+                    1_000_000_000 / args.get("ticks", 15_000u64).max(1)
+                }
+            };
+            params.duration = Duration::from_millis(args.get("duration-ms", 2000u64));
+            params.warmup = Duration::from_millis(args.get("warmup-ms", 500u64));
+            println!(
+                "{command}: {mechanism:?}, {workers} workers, quantum {} ns, {:?}",
+                params.quantum_ns, params.duration
+            );
+            let outcome = run(params);
+            print_outcome(command, &outcome);
+        }
+        "nexmark" => {
+            let workers = args.get("workers", 4usize);
+            let query = match args.flags.get("query").map(|s| s.as_str()).unwrap_or("q7") {
+                "q4" => Query::Q4,
+                "q7" => Query::Q7 {
+                    window_ns: args.get("window-ms", 100u64) * 1_000_000,
+                },
+                other => panic!("unknown query {other} (q4|q7)"),
+            };
+            let mut params = NexmarkParams::new(args.mechanism(), query);
+            params.workers = workers;
+            params.rate_per_worker = args.get("rate", 500_000u64) / workers as u64;
+            params.duration = Duration::from_millis(args.get("duration-ms", 2000u64));
+            params.warmup = Duration::from_millis(args.get("warmup-ms", 500u64));
+            println!("nexmark {query:?}: {:?}, {workers} workers", params.mechanism);
+            let outcome = run_nexmark(params);
+            print_outcome("nexmark", &outcome);
+        }
+        "artifacts" => {
+            let dir = args
+                .flags
+                .get("dir")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".to_string());
+            match timestamp_tokens::runtime::PjrtRuntime::new(&dir) {
+                Err(e) => {
+                    eprintln!("artifacts check failed: {e:#}");
+                    std::process::exit(1);
+                }
+                Ok(mut runtime) => {
+                    for name in runtime.artifact_names() {
+                        let meta = runtime.meta(&name).unwrap().clone();
+                        match runtime.load(&name) {
+                            Ok(_) => println!(
+                                "  {name}: OK (n={}, w={}, outputs={})",
+                                meta.n, meta.w, meta.outputs
+                            ),
+                            Err(e) => {
+                                eprintln!("  {name}: FAILED: {e:#}");
+                                std::process::exit(1);
+                            }
+                        }
+                    }
+                    println!("artifacts OK");
+                }
+            }
+        }
+        "info" => {
+            println!("timestamp-tokens {}", env!("CARGO_PKG_VERSION"));
+            println!(
+                "cores available: {}",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+            );
+            println!("mechanisms: tokens | notifications | watermarks-x | watermarks-p");
+            println!("artifacts dir: artifacts/ (run `make artifacts`)");
+        }
+        _ => {
+            println!("usage: ttd <wordcount|noop|nexmark|artifacts|info> [--flags]");
+            println!("see `ttd info` and the module docs for details");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Open-loop driver for the NEXMark queries (the Figure 9 experiments).
+//!
+//! Same methodology as [`crate::harness::openloop`] — constant offered
+//! rate, quantized wall-clock timestamps, log-binned latencies, >1 s ⇒ DNF
+//! — but feeding generated NEXMark events instead of words.
+
+use super::generator::{GeneratorConfig, NexmarkGenerator};
+use super::q4::build_q4;
+use super::q7::build_q7;
+use crate::config::Config;
+use crate::coordination::Mechanism;
+use crate::harness::histogram::LatencyHistogram;
+use crate::harness::openloop::Outcome;
+use crate::worker::execute::execute;
+use crate::worker::Worker;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Which NEXMark query to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Query {
+    /// Average closing price per category.
+    Q4,
+    /// Highest bid per fixed window (window size in ns).
+    Q7 {
+        /// Tumbling window size (ns).
+        window_ns: u64,
+    },
+}
+
+/// NEXMark experiment parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NexmarkParams {
+    /// Worker threads.
+    pub workers: usize,
+    /// Coordination mechanism under test.
+    pub mechanism: Mechanism,
+    /// The query.
+    pub query: Query,
+    /// Offered events/s per worker.
+    pub rate_per_worker: u64,
+    /// Timestamp quantum (ns).
+    pub quantum_ns: u64,
+    /// Measured duration.
+    pub duration: Duration,
+    /// Warm-up.
+    pub warmup: Duration,
+    /// Generator tuning.
+    pub generator: GeneratorConfig,
+    /// Overload bound.
+    pub dnf_after: Duration,
+    /// Pin workers to cores.
+    pub pin_workers: bool,
+}
+
+impl NexmarkParams {
+    /// Defaults scaled to this testbed.
+    pub fn new(mechanism: Mechanism, query: Query) -> Self {
+        NexmarkParams {
+            workers: 4,
+            mechanism,
+            query,
+            rate_per_worker: 250_000,
+            quantum_ns: 1 << 16,
+            duration: Duration::from_secs(2),
+            warmup: Duration::from_millis(500),
+            generator: GeneratorConfig::default(),
+            dnf_after: Duration::from_secs(1),
+            pin_workers: true,
+        }
+    }
+}
+
+enum WorkerOutcome {
+    Completed { histogram: LatencyHistogram, sent: u64 },
+    Dnf,
+}
+
+/// Runs one NEXMark experiment.
+pub fn run_nexmark(params: NexmarkParams) -> Outcome {
+    let epoch = Instant::now() + Duration::from_millis(50);
+    let config = Config {
+        workers: params.workers,
+        pin_workers: params.pin_workers,
+        ..Config::default()
+    };
+    let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
+
+    let mut histogram = LatencyHistogram::new();
+    let mut sent_total = 0u64;
+    for result in results {
+        match result {
+            WorkerOutcome::Dnf => return Outcome::Dnf,
+            WorkerOutcome::Completed { histogram: h, sent } => {
+                histogram.merge(&h);
+                sent_total += sent;
+            }
+        }
+    }
+    Outcome::Completed {
+        histogram,
+        achieved_rate: sent_total as f64 / params.duration.as_secs_f64(),
+    }
+}
+
+fn drive(worker: &mut Worker<u64>, params: NexmarkParams, epoch: Instant) -> WorkerOutcome {
+    let (mut input, probe) = match params.query {
+        Query::Q4 => build_q4(worker, params.mechanism),
+        Query::Q7 { window_ns } => build_q7(worker, params.mechanism, window_ns),
+    };
+    worker.finalize();
+
+    let quantum = params.quantum_ns.max(1);
+    let warmup_ns = params.warmup.as_nanos() as u64;
+    let total_ns = (params.warmup + params.duration).as_nanos() as u64;
+    let dnf_ns = params.dnf_after.as_nanos() as u64;
+    let mut generator = NexmarkGenerator::with_stride(
+        0xdeadbeef ^ ((worker.index() as u64 + 1) << 17),
+        params.generator,
+        worker.index() as u64,
+        worker.peers() as u64,
+    );
+
+    let mut histogram = LatencyHistogram::new();
+    let mut pending: VecDeque<u64> = VecDeque::new();
+    let mut sent = 0u64;
+    let mut measured_sent = 0u64;
+    let mut last_quantum = 0u64;
+
+    while Instant::now() < epoch {
+        std::thread::yield_now();
+    }
+
+    let mut dnf = false;
+    loop {
+        let now = epoch.elapsed().as_nanos() as u64;
+        if now >= total_ns {
+            break;
+        }
+        let q = now / quantum * quantum;
+        if q > last_quantum {
+            input.advance(q);
+            last_quantum = q;
+            pending.push_back(q);
+        }
+        let target = (now as u128 * params.rate_per_worker as u128 / 1_000_000_000) as u64;
+        let due = target.saturating_sub(sent);
+        for _ in 0..due {
+            input.send(q, generator.next_event(q));
+        }
+        sent += due;
+        if now >= warmup_ns {
+            measured_sent += due;
+        }
+
+        worker.step();
+
+        let now2 = epoch.elapsed().as_nanos() as u64;
+        while let Some(&oldest) = pending.front() {
+            if probe.complete(oldest) {
+                if oldest >= warmup_ns {
+                    histogram.record(now2.saturating_sub(oldest));
+                }
+                pending.pop_front();
+            } else {
+                if now2.saturating_sub(oldest) > dnf_ns {
+                    // Overloaded — but keep stepping: peers depend on this
+                    // worker's operator instances (cooperative teardown).
+                    dnf = true;
+                }
+                break;
+            }
+        }
+        if dnf {
+            break;
+        }
+    }
+
+    // Cooperative teardown (see harness::openloop::drive).
+    input.close();
+    let teardown_deadline = Instant::now() + params.dnf_after + Duration::from_secs(5);
+    while !probe.done() {
+        worker.step();
+        let now = epoch.elapsed().as_nanos() as u64;
+        while let Some(&oldest) = pending.front() {
+            if probe.complete(oldest) {
+                if oldest >= warmup_ns {
+                    histogram.record(now.saturating_sub(oldest));
+                }
+                pending.pop_front();
+            } else {
+                if now.saturating_sub(oldest) > dnf_ns {
+                    dnf = true;
+                    pending.pop_front();
+                }
+                break;
+            }
+        }
+        if Instant::now() > teardown_deadline {
+            dnf = true;
+            break;
+        }
+    }
+    if dnf || !pending.is_empty() {
+        return WorkerOutcome::Dnf;
+    }
+    WorkerOutcome::Completed { histogram, sent: measured_sent }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q7_tokens_completes_at_modest_load() {
+        let mut params = NexmarkParams::new(
+            Mechanism::Tokens,
+            Query::Q7 { window_ns: 50_000_000 },
+        );
+        params.workers = 2;
+        params.pin_workers = false;
+        params.rate_per_worker = 20_000;
+        params.duration = Duration::from_millis(400);
+        params.warmup = Duration::from_millis(100);
+        let outcome = run_nexmark(params);
+        assert!(!outcome.is_dnf(), "Q7 tokens DNF at trivial load");
+    }
+
+    #[test]
+    fn q4_tokens_completes_at_modest_load() {
+        let mut params = NexmarkParams::new(Mechanism::Tokens, Query::Q4);
+        params.workers = 2;
+        params.pin_workers = false;
+        params.rate_per_worker = 20_000;
+        params.duration = Duration::from_millis(400);
+        params.warmup = Duration::from_millis(100);
+        // Auction lifetimes must fit under the DNF bound.
+        params.generator.expiry_max_ns = 50_000_000;
+        let outcome = run_nexmark(params);
+        assert!(!outcome.is_dnf(), "Q4 tokens DNF at trivial load");
+    }
+}

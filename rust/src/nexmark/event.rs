@@ -1,0 +1,80 @@
+//! NEXMark event model (the fields the evaluated queries consume).
+
+/// A registered user (source of sellers and bidders).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Person {
+    /// Person id.
+    pub id: u64,
+    /// Hashed name.
+    pub name: u64,
+    /// Hashed city.
+    pub city: u64,
+    /// Event time (ns).
+    pub date_time: u64,
+}
+
+/// An auction listing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Auction {
+    /// Auction id.
+    pub id: u64,
+    /// Hashed item description.
+    pub item: u64,
+    /// Seller (person id).
+    pub seller: u64,
+    /// Category (Q4 groups by this).
+    pub category: u64,
+    /// Opening price.
+    pub initial_bid: u64,
+    /// Reserve price.
+    pub reserve: u64,
+    /// Event time (ns).
+    pub date_time: u64,
+    /// Closing time (ns) — the data-dependent window boundary of Q4.
+    pub expires: u64,
+}
+
+/// A bid on an auction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bid {
+    /// The auction being bid on.
+    pub auction: u64,
+    /// Bidder (person id).
+    pub bidder: u64,
+    /// Price.
+    pub price: u64,
+    /// Event time (ns).
+    pub date_time: u64,
+}
+
+/// One event of the interleaved NEXMark stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A new person.
+    Person(Person),
+    /// A new auction.
+    Auction(Auction),
+    /// A new bid.
+    Bid(Bid),
+}
+
+impl Event {
+    /// The event time.
+    pub fn date_time(&self) -> u64 {
+        match self {
+            Event::Person(p) => p.date_time,
+            Event::Auction(a) => a.date_time,
+            Event::Bid(b) => b.date_time,
+        }
+    }
+
+    /// The exchange key the queries route by: auction id for auctions and
+    /// bids, person id otherwise.
+    pub fn auction_key(&self) -> u64 {
+        match self {
+            Event::Person(p) => p.id,
+            Event::Auction(a) => a.id,
+            Event::Bid(b) => b.auction,
+        }
+    }
+}

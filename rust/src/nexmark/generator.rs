@@ -1,0 +1,200 @@
+//! The NEXMark event generator.
+//!
+//! Standard NEXMark event proportions (per 50 events: 1 person, 3
+//! auctions, 46 bids), monotone ids, and bids skewed toward recently
+//! opened auctions. Auction expiry times are drawn uniformly from a
+//! configurable range — for Q4 this range controls how many *distinct*
+//! closing timestamps are in flight, the pressure that makes notifications
+//! collapse in Figure 9.
+
+use super::event::{Auction, Bid, Event, Person};
+
+/// Generator tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct GeneratorConfig {
+    /// Minimum auction lifetime (ns).
+    pub expiry_min_ns: u64,
+    /// Maximum auction lifetime (ns).
+    pub expiry_max_ns: u64,
+    /// Number of auction categories (Q4 grouping key space).
+    pub categories: u64,
+    /// How many recent auctions bids target.
+    pub hot_auctions: u64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            expiry_min_ns: 1_000_000,    // 1 ms
+            expiry_max_ns: 100_000_000,  // 100 ms
+            categories: 16,
+            hot_auctions: 128,
+        }
+    }
+}
+
+/// Deterministic (seeded) NEXMark event source.
+///
+/// Multi-worker runs give each worker a disjoint id space via
+/// `offset`/`stride` (as the reference NEXMark generator does), so events
+/// from different workers never collide on auction or person ids.
+pub struct NexmarkGenerator {
+    config: GeneratorConfig,
+    rng: u64,
+    serial: u64,
+    offset: u64,
+    stride: u64,
+    persons: u64,
+    auctions: u64,
+}
+
+/// Events per "epoch" of the standard proportions.
+const PROPORTION_TOTAL: u64 = 50;
+const PERSON_PROPORTION: u64 = 1;
+const AUCTION_PROPORTION: u64 = 3;
+
+impl NexmarkGenerator {
+    /// A single-source generator with the given seed.
+    pub fn new(seed: u64, config: GeneratorConfig) -> Self {
+        Self::with_stride(seed, config, 0, 1)
+    }
+
+    /// A generator producing ids `offset, offset+stride, ...` — worker `w`
+    /// of `n` uses `(w, n)` so id spaces are disjoint across workers.
+    pub fn with_stride(seed: u64, config: GeneratorConfig, offset: u64, stride: u64) -> Self {
+        NexmarkGenerator {
+            config,
+            rng: seed | 1,
+            serial: 0,
+            offset,
+            stride: stride.max(1),
+            persons: 0,
+            auctions: 0,
+        }
+    }
+
+    #[inline]
+    fn person_id(&self, index: u64) -> u64 {
+        self.offset + index * self.stride
+    }
+
+    #[inline]
+    fn auction_id(&self, index: u64) -> u64 {
+        self.offset + index * self.stride
+    }
+
+    #[inline]
+    fn rand(&mut self) -> u64 {
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        self.rng.wrapping_mul(0x2545f4914f6cdd1d)
+    }
+
+    /// Produces the next event with event time `now_ns`.
+    pub fn next_event(&mut self, now_ns: u64) -> Event {
+        let slot = self.serial % PROPORTION_TOTAL;
+        self.serial += 1;
+        if slot < PERSON_PROPORTION {
+            let id = self.person_id(self.persons);
+            self.persons += 1;
+            Event::Person(Person {
+                id,
+                name: self.rand(),
+                city: self.rand() % 1000,
+                date_time: now_ns,
+            })
+        } else if slot < PERSON_PROPORTION + AUCTION_PROPORTION {
+            let id = self.auction_id(self.auctions);
+            self.auctions += 1;
+            let lifetime = self.config.expiry_min_ns
+                + self.rand() % (self.config.expiry_max_ns - self.config.expiry_min_ns).max(1);
+            let initial = 100 + self.rand() % 1000;
+            Event::Auction(Auction {
+                id,
+                item: self.rand(),
+                seller: {
+                    let pick = self.rand() % self.persons.max(1);
+                    self.person_id(pick)
+                },
+                category: self.rand() % self.config.categories,
+                initial_bid: initial,
+                reserve: initial + self.rand() % 1000,
+                date_time: now_ns,
+                expires: now_ns + lifetime,
+            })
+        } else {
+            // Bids target recent ("hot") auctions, skewed toward the newest.
+            let window = self.config.hot_auctions.min(self.auctions.max(1));
+            let back = (self.rand() % window).min(self.rand() % window); // triangular skew
+            let auction = self.auction_id(self.auctions.saturating_sub(1 + back).min(self.auctions.saturating_sub(1)));
+            Event::Bid(Bid {
+                auction,
+                bidder: {
+                    let pick = self.rand() % self.persons.max(1);
+                    self.person_id(pick)
+                },
+                price: 100 + self.rand() % 10_000,
+                date_time: now_ns,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportions_are_standard() {
+        let mut g = NexmarkGenerator::new(42, GeneratorConfig::default());
+        let mut people = 0;
+        let mut auctions = 0;
+        let mut bids = 0;
+        for i in 0..5000 {
+            match g.next_event(i) {
+                Event::Person(_) => people += 1,
+                Event::Auction(_) => auctions += 1,
+                Event::Bid(_) => bids += 1,
+            }
+        }
+        assert_eq!(people, 100);
+        assert_eq!(auctions, 300);
+        assert_eq!(bids, 4600);
+    }
+
+    #[test]
+    fn auctions_expire_in_configured_range() {
+        let config = GeneratorConfig { expiry_min_ns: 10, expiry_max_ns: 20, ..Default::default() };
+        let mut g = NexmarkGenerator::new(7, config);
+        for i in 0..1000u64 {
+            if let Event::Auction(a) = g.next_event(i) {
+                assert!(a.expires > a.date_time);
+                assert!(a.expires <= a.date_time + 20);
+                assert!(a.category < config.categories);
+            }
+        }
+    }
+
+    #[test]
+    fn bids_reference_existing_auctions() {
+        let mut g = NexmarkGenerator::new(3, GeneratorConfig::default());
+        let mut max_auction = 0u64;
+        for i in 0..5000u64 {
+            match g.next_event(i) {
+                Event::Auction(a) => max_auction = max_auction.max(a.id),
+                Event::Bid(b) => assert!(b.auction <= max_auction),
+                Event::Person(_) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = NexmarkGenerator::new(9, GeneratorConfig::default());
+        let mut b = NexmarkGenerator::new(9, GeneratorConfig::default());
+        for i in 0..200 {
+            assert_eq!(a.next_event(i), b.next_event(i));
+        }
+    }
+}

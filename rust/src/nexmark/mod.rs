@@ -1,0 +1,25 @@
+//! The NEXMark workload (paper §7.4): an auction site with high-volume
+//! streams of people, auctions, and bids, over which standing relational
+//! queries are maintained.
+//!
+//! The paper evaluates the two multi-operator queries:
+//!
+//! * **Q4** — average closing price per category: a two-stage dataflow
+//!   where the first operator computes a *data-dependent windowed maximum*
+//!   (the winning bid of each auction, closing at the auction's expiry —
+//!   an effectively unbounded set of distinct timestamps, which is what
+//!   makes Naiad-style notifications DNF across the board in Figure 9);
+//! * **Q7** — highest bid per fixed window: two stateful operators with
+//!   two consecutive data exchanges.
+//!
+//! Each query is implemented under all three coordination mechanisms on
+//! the same operators and generator.
+
+pub mod bench;
+pub mod event;
+pub mod generator;
+pub mod q4;
+pub mod q7;
+
+pub use event::{Auction, Bid, Event, Person};
+pub use generator::{GeneratorConfig, NexmarkGenerator};

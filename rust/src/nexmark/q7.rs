@@ -1,0 +1,339 @@
+//! NEXMark Q7: highest bid per fixed tumbling window.
+//!
+//! "Q7 has two stateful operators with two consecutive data exchanges"
+//! (§7.4): stage 1 partitions bids by bidder and pre-aggregates the
+//! per-worker window maximum; stage 2 exchanges the partial maxima by
+//! window and emits the global maximum when the window closes. Unlike Q4,
+//! window boundaries are coarse and shared, so all mechanisms remain
+//! competitive — which Figure 9 confirms.
+
+use super::event::Event;
+use crate::coordination::notificator::Notificator;
+use crate::coordination::watermark::{WatermarkExt, WmLogic, WmWiring};
+use crate::coordination::Mechanism;
+use crate::dataflow::channels::Pact;
+use crate::dataflow::operator::OperatorExt;
+use crate::dataflow::probe::ProbeExt;
+use crate::dataflow::stream::Stream;
+use crate::dataflow::TimestampToken;
+use crate::harness::workloads::{CompletionProbe, WorkloadInput};
+use crate::operators::window::{round_up_to_multiple, singleton_frontier};
+use crate::worker::Worker;
+use std::collections::BTreeMap;
+
+/// A windowed-max stage under tokens: generic over the keying function so
+/// both Q7 stages share it.
+fn window_max_tokens<D: crate::dataflow::channels::Data>(
+    stream: &Stream<u64, D>,
+    name: &str,
+    window_ns: u64,
+    key: impl Fn(&D) -> u64 + 'static,
+    price: impl Fn(&D) -> Option<(u64, u64)> + 'static, // (event_time, price)
+) -> Stream<u64, (u64, u64)> {
+    stream.unary_frontier(Pact::exchange(key), name, move |tok, _info| {
+        drop(tok);
+        let mut windows: BTreeMap<u64, (TimestampToken<u64>, u64)> = BTreeMap::new();
+        move |input: &mut _, output: &mut _| {
+            while let Some((token, data)) = input.next() {
+                for d in &data {
+                    if let Some((te, p)) = price(d) {
+                        // The window containing `te`; if the token cannot
+                        // reach it (late data), fold into the earliest
+                        // window the token still covers.
+                        let mut window = round_up_to_multiple(te, window_ns);
+                        if window < *token.time() {
+                            window = round_up_to_multiple(*token.time(), window_ns);
+                        }
+                        let entry = windows.entry(window).or_insert_with(|| {
+                            let mut t = token.retain();
+                            t.downgrade(&window);
+                            (t, 0)
+                        });
+                        entry.1 = entry.1.max(p);
+                    }
+                }
+            }
+            let bound = singleton_frontier(&input.frontier());
+            let closed: Vec<u64> = windows.range(..bound).map(|(&w, _)| w).collect();
+            for w in closed {
+                let (token, max) = windows.remove(&w).expect("window exists");
+                output.session(&token).give((w, max));
+            }
+        }
+    })
+}
+
+/// A windowed-max stage under notifications: one notification per window.
+fn window_max_notify<D: crate::dataflow::channels::Data>(
+    stream: &Stream<u64, D>,
+    name: &str,
+    window_ns: u64,
+    key: impl Fn(&D) -> u64 + 'static,
+    price: impl Fn(&D) -> Option<(u64, u64)> + 'static,
+) -> Stream<u64, (u64, u64)> {
+    stream.unary_frontier(Pact::exchange(key), name, move |tok, info| {
+        drop(tok);
+        let mut notificator = Notificator::new(info.activator.clone());
+        let mut windows: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut frontier_buf = Vec::new();
+        move |input: &mut _, output: &mut _| {
+            while let Some((token, data)) = input.next() {
+                for d in &data {
+                    if let Some((te, p)) = price(d) {
+                        let mut window = round_up_to_multiple(te, window_ns);
+                        if window < *token.time() {
+                            window = round_up_to_multiple(*token.time(), window_ns);
+                        }
+                        if !windows.contains_key(&window) {
+                            let mut t = token.retain();
+                            t.downgrade(&window);
+                            notificator.notify_at(t);
+                            windows.insert(window, 0);
+                        }
+                        let entry = windows.get_mut(&window).expect("window");
+                        *entry = (*entry).max(p);
+                    }
+                }
+            }
+            frontier_buf.clear();
+            frontier_buf.extend_from_slice(input.frontier().frontier());
+            if let Some(token) = notificator.next(&frontier_buf) {
+                if let Some(max) = windows.remove(token.time()) {
+                    output.session(&token).give((*token.time(), max));
+                }
+            }
+        }
+    })
+}
+
+/// Watermark windowed max over bids (stage 1).
+struct WmBidMax {
+    window_ns: u64,
+    windows: BTreeMap<u64, u64>,
+}
+impl WmLogic<Event, (u64, u64)> for WmBidMax {
+    fn on_data(&mut self, te: u64, event: Event, _out: &mut Vec<(u64, (u64, u64))>) {
+        if let Event::Bid(b) = event {
+            let window = round_up_to_multiple(te.max(b.date_time), self.window_ns);
+            let entry = self.windows.entry(window).or_insert(0);
+            *entry = (*entry).max(b.price);
+        }
+    }
+    fn on_watermark(&mut self, wm: u64, out: &mut Vec<(u64, (u64, u64))>) {
+        let closed: Vec<u64> = self.windows.range(..wm).map(|(&w, _)| w).collect();
+        for w in closed {
+            let max = self.windows.remove(&w).expect("window");
+            out.push((w, (w, max)));
+        }
+    }
+}
+
+/// Watermark windowed max over partials (stage 2).
+struct WmPartialMax {
+    windows: BTreeMap<u64, u64>,
+}
+impl WmLogic<(u64, u64), (u64, u64)> for WmPartialMax {
+    fn on_data(&mut self, _te: u64, (window, partial): (u64, u64), _out: &mut Vec<(u64, (u64, u64))>) {
+        let entry = self.windows.entry(window).or_insert(0);
+        *entry = (*entry).max(partial);
+    }
+    fn on_watermark(&mut self, wm: u64, out: &mut Vec<(u64, (u64, u64))>) {
+        let closed: Vec<u64> = self.windows.range(..wm).map(|(&w, _)| w).collect();
+        for w in closed {
+            let max = self.windows.remove(&w).expect("window");
+            out.push((w, (w, max)));
+        }
+    }
+}
+
+/// Builds the full Q7 dataflow under `mechanism`.
+pub fn build_q7(
+    worker: &mut Worker<u64>,
+    mechanism: Mechanism,
+    window_ns: u64,
+) -> (WorkloadInput<Event>, CompletionProbe) {
+    let bid_price = |e: &Event| match e {
+        Event::Bid(b) => Some((b.date_time, b.price)),
+        _ => None,
+    };
+    let partial_price = |&(window, partial): &(u64, u64)| Some((window.saturating_sub(1), partial));
+    match mechanism {
+        Mechanism::Tokens => {
+            let (input, stream) = worker.new_input::<Event>();
+            let partials = window_max_tokens(
+                &stream,
+                "q7_local_max",
+                window_ns,
+                |e: &Event| e.auction_key(),
+                bid_price,
+            );
+            // Stage 2: exchange partials by window; global max per window.
+            let probe = window_max_tokens(
+                &partials,
+                "q7_global_max",
+                window_ns,
+                |&(window, _): &(u64, u64)| window,
+                partial_price,
+            )
+            .probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::Notifications => {
+            let (input, stream) = worker.new_input::<Event>();
+            let partials = window_max_notify(
+                &stream,
+                "q7_local_max",
+                window_ns,
+                |e: &Event| e.auction_key(),
+                bid_price,
+            );
+            let probe = window_max_notify(
+                &partials,
+                "q7_global_max",
+                window_ns,
+                |&(window, _): &(u64, u64)| window,
+                partial_price,
+            )
+            .probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::WatermarksX | Mechanism::WatermarksP => {
+            let (input, stream) =
+                crate::coordination::watermark::WmInput::<Event>::new(worker);
+            let partials = stream.wm_unary(
+                WmWiring::Exchanged,
+                "q7_local_max_wm",
+                |e: &Event| e.auction_key(),
+                WmBidMax { window_ns, windows: BTreeMap::new() },
+            );
+            let probe = partials
+                .wm_unary(
+                    WmWiring::Exchanged,
+                    "q7_global_max_wm",
+                    |&(window, _): &(u64, u64)| window,
+                    WmPartialMax { windows: BTreeMap::new() },
+                )
+                .wm_probe(|_| {});
+            (WorkloadInput::Wm(input), CompletionProbe::Wm(probe))
+        }
+    }
+}
+
+
+/// Like [`build_q7`], additionally invoking `on_window(window_end, max)`
+/// for every *global* window maximum observed on this worker.
+pub fn build_q7_observed(
+    worker: &mut Worker<u64>,
+    mechanism: Mechanism,
+    window_ns: u64,
+    mut on_window: impl FnMut(u64, u64) + 'static,
+) -> (WorkloadInput<Event>, CompletionProbe) {
+    use crate::dataflow::operator::InputHandle;
+    let bid_price = |e: &Event| match e {
+        Event::Bid(b) => Some((b.date_time, b.price)),
+        _ => None,
+    };
+    let partial_price =
+        |&(window, partial): &(u64, u64)| Some((window.saturating_sub(1), partial));
+    match mechanism {
+        Mechanism::Tokens => {
+            let (input, stream) = worker.new_input::<Event>();
+            let partials = window_max_tokens(
+                &stream,
+                "q7_local_max",
+                window_ns,
+                |e: &Event| e.auction_key(),
+                bid_price,
+            );
+            let globals = window_max_tokens(
+                &partials,
+                "q7_global_max",
+                window_ns,
+                |&(window, _): &(u64, u64)| window,
+                partial_price,
+            );
+            globals.sink(Pact::Pipeline, "q7_observe", move |_info| {
+                move |input: &mut InputHandle<u64, (u64, u64)>| {
+                    while let Some((_t, data)) = input.next() {
+                        for (window, max) in data {
+                            on_window(window, max);
+                        }
+                    }
+                }
+            });
+            let probe = globals.probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::Notifications => {
+            let (input, stream) = worker.new_input::<Event>();
+            let partials = window_max_notify(
+                &stream,
+                "q7_local_max",
+                window_ns,
+                |e: &Event| e.auction_key(),
+                bid_price,
+            );
+            let globals = window_max_notify(
+                &partials,
+                "q7_global_max",
+                window_ns,
+                |&(window, _): &(u64, u64)| window,
+                partial_price,
+            );
+            globals.sink(Pact::Pipeline, "q7_observe", move |_info| {
+                move |input: &mut InputHandle<u64, (u64, u64)>| {
+                    while let Some((_t, data)) = input.next() {
+                        for (window, max) in data {
+                            on_window(window, max);
+                        }
+                    }
+                }
+            });
+            let probe = globals.probe();
+            (WorkloadInput::Engine(input), CompletionProbe::Engine(probe))
+        }
+        Mechanism::WatermarksX | Mechanism::WatermarksP => {
+            use crate::coordination::watermark::WmRecord;
+            let (input, stream) =
+                crate::coordination::watermark::WmInput::<Event>::new(worker);
+            let partials = stream.wm_unary(
+                WmWiring::Exchanged,
+                "q7_local_max_wm",
+                |e: &Event| e.auction_key(),
+                WmBidMax { window_ns, windows: BTreeMap::new() },
+            );
+            let globals = partials.wm_unary(
+                WmWiring::Exchanged,
+                "q7_global_max_wm",
+                |&(window, _): &(u64, u64)| window,
+                WmPartialMax { windows: BTreeMap::new() },
+            );
+            globals.sink(Pact::Pipeline, "q7_observe", move |_info| {
+                move |input: &mut InputHandle<u64, WmRecord<(u64, u64)>>| {
+                    while let Some((_t, data)) = input.next() {
+                        for rec in data {
+                            if let WmRecord::Data(_, (window, max)) = rec {
+                                on_window(window, max);
+                            }
+                        }
+                    }
+                }
+            });
+            let probe = globals.wm_probe(|_| {});
+            (WorkloadInput::Wm(input), CompletionProbe::Wm(probe))
+        }
+    }
+}
+
+/// Sequential oracle: `(window_end, max_price)` for every non-empty window.
+pub fn q7_oracle(events: &[Event], window_ns: u64) -> Vec<(u64, u64)> {
+    let mut windows: BTreeMap<u64, u64> = BTreeMap::new();
+    for event in events {
+        if let Event::Bid(b) = event {
+            let window = round_up_to_multiple(b.date_time, window_ns);
+            let entry = windows.entry(window).or_insert(0);
+            *entry = (*entry).max(b.price);
+        }
+    }
+    windows.into_iter().collect()
+}

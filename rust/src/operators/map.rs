@@ -1,0 +1,178 @@
+//! Streaming record-at-a-time operators: map, filter, inspect, exchange,
+//! concat.
+//!
+//! These are the paper's "oblivious" operators (§3.2): they "can be
+//! oblivious to [frontier] information and process data as it arrives",
+//! sending output with the timestamp token reference that accompanies each
+//! input batch — no retained tokens, no system interaction beyond message
+//! accounting.
+
+use crate::dataflow::channels::{Data, Pact};
+use crate::dataflow::operator::{OperatorBuilder, OperatorExt};
+use crate::dataflow::stream::Stream;
+use crate::dataflow::InputHandle;
+use crate::progress::location::Location;
+use crate::progress::timestamp::Timestamp;
+
+/// Record-at-a-time transforms.
+pub trait MapExt<T: Timestamp, D: Data> {
+    /// Applies `logic` to each record.
+    fn map<D2: Data, F: FnMut(D) -> D2 + 'static>(&self, logic: F) -> Stream<T, D2>;
+
+    /// Keeps records satisfying `predicate`.
+    fn filter<F: FnMut(&D) -> bool + 'static>(&self, predicate: F) -> Stream<T, D>;
+
+    /// Passes records through, applying `logic` to each (for debugging).
+    fn inspect<F: FnMut(&T, &D) + 'static>(&self, logic: F) -> Stream<T, D>;
+
+    /// Re-routes records between workers by `key`.
+    fn exchange<F: Fn(&D) -> u64 + 'static>(&self, key: F) -> Stream<T, D>;
+
+    /// Merges this stream with `other` (both pipeline pacts).
+    fn concat(&self, other: &Stream<T, D>) -> Stream<T, D>;
+}
+
+impl<T: Timestamp, D: Data> MapExt<T, D> for Stream<T, D> {
+    fn map<D2: Data, F: FnMut(D) -> D2 + 'static>(&self, mut logic: F) -> Stream<T, D2> {
+        self.unary(Pact::Pipeline, "map", move |tok, _info| {
+            drop(tok); // oblivious operator: no unprompted output
+            move |input: &mut _, output: &mut _| {
+                while let Some((token, data)) = input.next() {
+                    output.session(&token).give_iterator(data.into_iter().map(&mut logic));
+                }
+            }
+        })
+    }
+
+    fn filter<F: FnMut(&D) -> bool + 'static>(&self, mut predicate: F) -> Stream<T, D> {
+        self.unary(Pact::Pipeline, "filter", move |tok, _info| {
+            drop(tok);
+            move |input: &mut _, output: &mut _| {
+                while let Some((token, data)) = input.next() {
+                    output
+                        .session(&token)
+                        .give_iterator(data.into_iter().filter(|d| predicate(d)));
+                }
+            }
+        })
+    }
+
+    fn inspect<F: FnMut(&T, &D) + 'static>(&self, mut logic: F) -> Stream<T, D> {
+        self.unary(Pact::Pipeline, "inspect", move |tok, _info| {
+            drop(tok);
+            move |input: &mut _, output: &mut _| {
+                while let Some((token, data)) = input.next() {
+                    let time = token.time().clone();
+                    for d in &data {
+                        logic(&time, d);
+                    }
+                    output.session(&token).give_vec(data);
+                }
+            }
+        })
+    }
+
+    fn exchange<F: Fn(&D) -> u64 + 'static>(&self, key: F) -> Stream<T, D> {
+        self.unary(Pact::exchange(key), "exchange", move |tok, _info| {
+            drop(tok);
+            move |input: &mut _, output: &mut _| {
+                while let Some((token, data)) = input.next() {
+                    output.session(&token).give_vec(data);
+                }
+            }
+        })
+    }
+
+    fn concat(&self, other: &Stream<T, D>) -> Stream<T, D> {
+        // Both streams feed the SAME input port: one queue, one frontier
+        // (the tracker merges the two edges' constraints automatically).
+        let scope = self.scope();
+        let mut builder = OperatorBuilder::new(&scope, "concat");
+        let (queue, frontier, port) = builder.new_input(self, Pact::Pipeline);
+        other.connect_to(builder.node(), port, Pact::Pipeline, queue.clone());
+        let (tee, stream) = builder.new_output::<D>();
+        let (info, activation) = builder.info();
+        let node = builder.node();
+        let bookkeeping = scope.bookkeeping();
+        drop(builder.initial_tokens());
+        let mut input: InputHandle<T, D> = InputHandle::new(
+            queue,
+            frontier,
+            Location::target(node, 0),
+            Some(Location::source(node, 0)),
+            T::Summary::default(),
+            bookkeeping.clone(),
+        );
+        let mut output = crate::dataflow::OutputHandle::new(
+            Location::source(node, 0),
+            tee,
+            bookkeeping,
+            info.worker,
+            info.peers,
+        );
+        builder.build(
+            activation,
+            Box::new(move || {
+                while let Some((token, data)) = input.next() {
+                    output.session(&token).give_vec(data);
+                }
+            }),
+        );
+        stream
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::probe::ProbeExt;
+    use crate::worker::execute::execute_single;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn map_filter_roundtrip() {
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = seen.clone();
+            let probe = stream
+                .map(|x| x * 2)
+                .filter(|x| x % 4 == 0)
+                .inspect(move |t, x| seen2.borrow_mut().push((*t, *x)))
+                .probe();
+            for t in 0..4u64 {
+                input.advance_to(t);
+                input.send(t);
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            let got = seen.borrow().clone(); got
+        });
+        // x*2 for x in 0..4 = [0,2,4,6]; keep multiples of 4: 0 (t=0), 4 (t=2).
+        assert_eq!(got, vec![(0, 0), (2, 4)]);
+    }
+
+    #[test]
+    fn concat_merges_streams() {
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut in1, s1) = worker.new_input::<u64>();
+            let (mut in2, s2) = worker.new_input::<u64>();
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = seen.clone();
+            let probe = s1
+                .concat(&s2)
+                .inspect(move |_t, x| seen2.borrow_mut().push(*x))
+                .probe();
+            in1.send(1);
+            in2.send(2);
+            in1.close();
+            in2.close();
+            worker.step_while(|| !probe.done());
+            let mut v = seen.borrow().clone();
+            v.sort();
+            v
+        });
+        assert_eq!(got, vec![1, 2]);
+    }
+}

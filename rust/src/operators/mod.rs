@@ -1,0 +1,15 @@
+//! Stock operators, written against the public token API — exactly the code
+//! a "system implementor" writes once so end users can invoke it (§5).
+
+pub mod map;
+pub mod noop;
+pub mod window;
+pub mod wordcount;
+
+/// Convenience re-exports.
+pub mod prelude {
+    pub use super::map::MapExt;
+    pub use super::noop::NoopExt;
+    pub use super::window::{WindowAverageExt, WindowBackend};
+    pub use super::wordcount::{GeneralWordCountExt, WordCountExt};
+}

@@ -1,0 +1,236 @@
+//! The tumbling windowed average of the paper's §5 / Figure 5.
+//!
+//! The operator receives timestamped integer-valued messages and reports
+//! the average every `WINDOW_SIZE` timestamp units, at the timestamp of the
+//! start of the next window, producing no output for empty windows. The
+//! implementation below mirrors the paper's listing: an ordered map from
+//! end-of-window timestamp to `(TimestampToken, WindowData)`, tokens
+//! captured from input with `retain` and immediately downgraded to the
+//! window end, and window retirement driven by `input.frontier()`.
+//!
+//! The per-batch accumulation step is pluggable ([`WindowBackend`]): the
+//! native backend folds in Rust; the XLA backend
+//! (`runtime::XlaWindowBackend`) runs the AOT-compiled JAX/Pallas
+//! segmented-aggregation kernel via PJRT.
+
+use crate::dataflow::channels::Pact;
+use crate::dataflow::operator::OperatorExt;
+use crate::dataflow::stream::Stream;
+use crate::progress::antichain::MutableAntichain;
+use std::collections::BTreeMap;
+
+/// User-defined structure to maintain window data (Ⓐ in Figure 5).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowData {
+    /// Sum of values observed in the window.
+    pub sum: u64,
+    /// Number of values observed in the window.
+    pub count: u64,
+}
+
+/// The paper's `singleton_frontier` helper: the sole element of a totally
+/// ordered frontier, or `u64::MAX` when the frontier is closed.
+pub fn singleton_frontier(frontier: &MutableAntichain<u64>) -> u64 {
+    frontier.frontier().first().cloned().unwrap_or(u64::MAX)
+}
+
+/// Pluggable batch-accumulation backend for windowing operators.
+///
+/// Given a batch of `(window_end, value)` pairs, returns per-window partial
+/// aggregates `(window_end, sum, count)`.
+pub trait WindowBackend: 'static {
+    /// Aggregates one input batch into per-window partials.
+    fn aggregate(&mut self, items: &[(u64, u64)]) -> Vec<(u64, u64, u64)>;
+    /// Backend name (diagnostics).
+    fn name(&self) -> &'static str;
+}
+
+/// Plain Rust accumulation.
+pub struct NativeWindowBackend;
+
+impl WindowBackend for NativeWindowBackend {
+    fn aggregate(&mut self, items: &[(u64, u64)]) -> Vec<(u64, u64, u64)> {
+        let mut partials: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        for &(window, value) in items {
+            let entry = partials.entry(window).or_insert((0, 0));
+            entry.0 += value;
+            entry.1 += 1;
+        }
+        partials.into_iter().map(|(w, (s, c))| (w, s, c)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Rounds `ts` up to the next multiple of `window_size` (the Ⓙ helper:
+/// the end-of-window timestamp of the window containing `ts`).
+pub fn round_up_to_multiple(ts: u64, window_size: u64) -> u64 {
+    (ts / window_size + 1) * window_size
+}
+
+/// Tumbling windowed averages.
+pub trait WindowAverageExt {
+    /// The paper's Figure 5 operator: averages per `window_size` tumbling
+    /// window, emitted at the end-of-window timestamp; empty windows
+    /// produce nothing.
+    fn window_average(
+        &self,
+        window_size: u64,
+        backend: Box<dyn WindowBackend>,
+    ) -> Stream<u64, f64>;
+}
+
+impl WindowAverageExt for Stream<u64, u64> {
+    fn window_average(
+        &self,
+        window_size: u64,
+        mut backend: Box<dyn WindowBackend>,
+    ) -> Stream<u64, f64> {
+        let peers = self.scope().peers() as u64;
+        // Figure 5 Ⓑ: the outer function, invoked once with the initial
+        // timestamp token Ⓒ.
+        self.unary_frontier(
+            Pact::exchange(move |x: &u64| *x % peers),
+            "tumbling_window",
+            move |tok, _info| {
+                // Ⓓ, Ⓔ: the initial token is at time zero and is dropped
+                // immediately — this operator produces no unprompted output.
+                assert!(*tok.time() == 0);
+                std::mem::drop(tok);
+                // Ⓕ: ordered map from end-of-window timestamp to the held
+                // token and partial window data.
+                let mut windows: BTreeMap<
+                    u64,
+                    (crate::dataflow::TimestampToken<u64>, WindowData),
+                > = BTreeMap::new();
+                let mut batch_scratch: Vec<(u64, u64)> = Vec::new();
+                // Ⓖ: the operator logic, invoked per scheduling.
+                move |input: &mut _, output: &mut _| {
+                    // Ⓘ: per-batch input processing.
+                    while let Some((tok_ref, data)) = input.next() {
+                        // Ⓙ: the window this batch belongs to.
+                        let window_ts = round_up_to_multiple(*tok_ref.time(), window_size);
+                        // Ⓚ, Ⓛ: first data for this window — capture the
+                        // token and downgrade it to the window end.
+                        if !windows.contains_key(&window_ts) {
+                            let mut window_tok = tok_ref.retain();
+                            window_tok.downgrade(&window_ts);
+                            windows.insert(window_ts, (window_tok, WindowData::default()));
+                        }
+                        // Ⓜ: fold the batch into the window partials via
+                        // the configured backend.
+                        batch_scratch.clear();
+                        batch_scratch.extend(data.iter().map(|&v| (window_ts, v)));
+                        for (w, sum, count) in backend.aggregate(&batch_scratch) {
+                            let (_, window_data) =
+                                windows.get_mut(&w).expect("window exists");
+                            window_data.sum += sum;
+                            window_data.count += count;
+                        }
+                    }
+                    // Ⓝ: the frontier tells us which windows can close.
+                    let target_ts = singleton_frontier(&input.frontier());
+                    // Ⓟ, Ⓠ, Ⓡ: retire all closed windows at once, using
+                    // the tokens stored alongside the window data.
+                    for (_, (tok, window)) in windows.range(0..target_ts) {
+                        output
+                            .session(tok)
+                            .give(window.sum as f64 / window.count as f64);
+                    }
+                    // Ⓢ: drop retired windows; token drops update the
+                    // system automatically (and eagerly).
+                    let retired: Vec<u64> =
+                        windows.range(0..target_ts).map(|(k, _)| *k).collect();
+                    for k in retired {
+                        windows.remove(&k);
+                    }
+                }
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::probe::ProbeExt;
+    use crate::worker::execute::execute_single;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn run_window(values: Vec<(u64, u64)>, window: u64) -> Vec<(u64, f64)> {
+        execute_single::<u64, _, _>(move |worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let out = Rc::new(RefCell::new(Vec::new()));
+            let out2 = out.clone();
+            let probe = stream
+                .window_average(window, Box::new(NativeWindowBackend))
+                .probe_with(move |t, data| {
+                    for d in data {
+                        out2.borrow_mut().push((*t, *d));
+                    }
+                });
+            for (t, v) in values.clone() {
+                input.advance_to(t);
+                input.send(v);
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            let mut v = out.borrow().clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        })
+    }
+
+    #[test]
+    fn averages_per_window() {
+        // Window [0,10): values 2, 4 -> avg 3 at ts 10.
+        // Window [10,20): value 10  -> avg 10 at ts 20.
+        let got = run_window(vec![(1, 2), (3, 4), (12, 10)], 10);
+        assert_eq!(got, vec![(10, 3.0), (20, 10.0)]);
+    }
+
+    #[test]
+    fn empty_windows_produce_nothing() {
+        // Data only in [0,10) and [30,40): two outputs, none for the gap.
+        let got = run_window(vec![(5, 6), (35, 8)], 10);
+        assert_eq!(got, vec![(10, 6.0), (40, 8.0)]);
+    }
+
+    #[test]
+    fn burst_retires_multiple_windows_at_once() {
+        // All data arrives before the input advances: when the frontier
+        // jumps to 100, three windows retire in one invocation.
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let out = Rc::new(RefCell::new(Vec::new()));
+            let out2 = out.clone();
+            let probe = stream
+                .window_average(10, Box::new(NativeWindowBackend))
+                .probe_with(move |t, data| {
+                    for d in data {
+                        out2.borrow_mut().push((*t, *d));
+                    }
+                });
+            for (t, v) in [(1u64, 10u64), (11, 20), (21, 30)] {
+                input.advance_to(t);
+                input.send(v);
+            }
+            input.advance_to(100);
+            input.close();
+            worker.step_while(|| !probe.done());
+            let mut v = out.borrow().clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        });
+        assert_eq!(got, vec![(10, 10.0), (20, 20.0), (30, 30.0)]);
+    }
+
+    #[test]
+    fn round_up() {
+        assert_eq!(round_up_to_multiple(0, 10), 10);
+        assert_eq!(round_up_to_multiple(9, 10), 10);
+        assert_eq!(round_up_to_multiple(10, 10), 20);
+    }
+}

@@ -1,0 +1,430 @@
+//! Antichains: sets of mutually incomparable timestamps, used to represent
+//! frontiers ("lower bounds on the timestamps that operators may yet observe
+//! in their inputs", §3).
+
+use super::change_batch::ChangeBatch;
+use super::timestamp::PartialOrder;
+use std::fmt::Debug;
+
+/// A set of mutually incomparable elements, representing a lower bound.
+///
+/// A frontier `F` *permits* a timestamp `t` iff some `f ∈ F` has
+/// `f.less_equal(t)`. The empty antichain permits nothing — it is the
+/// frontier of a complete (closed) input.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Antichain<T> {
+    elements: Vec<T>,
+}
+
+impl<T: PartialOrder + Clone> Antichain<T> {
+    /// An empty antichain (the "complete" frontier: permits no timestamps).
+    pub fn new() -> Self {
+        Antichain { elements: Vec::new() }
+    }
+
+    /// An antichain containing a single element.
+    pub fn from_elem(t: T) -> Self {
+        Antichain { elements: vec![t] }
+    }
+
+    /// Builds an antichain from arbitrary elements, retaining the minimal ones.
+    pub fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        let mut result = Antichain::new();
+        for t in iter {
+            result.insert(t);
+        }
+        result
+    }
+
+    /// Inserts `t`, returning true iff it was not already dominated.
+    ///
+    /// Elements of the antichain dominated by `t` are removed.
+    pub fn insert(&mut self, t: T) -> bool {
+        if self.elements.iter().any(|e| e.less_equal(&t)) {
+            false
+        } else {
+            self.elements.retain(|e| !t.less_equal(e));
+            self.elements.push(t);
+            true
+        }
+    }
+
+    /// True iff some element of the antichain is `≤ t` (the frontier permits `t`).
+    #[inline]
+    pub fn less_equal(&self, t: &T) -> bool {
+        self.elements.iter().any(|e| e.less_equal(t))
+    }
+
+    /// True iff some element of the antichain is `< t`.
+    #[inline]
+    pub fn less_than(&self, t: &T) -> bool {
+        self.elements.iter().any(|e| e.less_than(t))
+    }
+
+    /// True iff every element of `other` is permitted by `self` — i.e.
+    /// `self` is a (weakly) earlier bound than `other`.
+    pub fn dominates(&self, other: &Antichain<T>) -> bool {
+        other.elements.iter().all(|t| self.less_equal(t))
+    }
+
+    /// The elements of the antichain.
+    #[inline]
+    pub fn elements(&self) -> &[T] {
+        &self.elements
+    }
+
+    /// True iff the antichain is empty (a closed frontier).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.elements.is_empty()
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.elements.len()
+    }
+
+    /// Clears the antichain.
+    pub fn clear(&mut self) {
+        self.elements.clear()
+    }
+
+    /// Sorts the elements (by the container order), for canonical comparison.
+    pub fn sort(&mut self)
+    where
+        T: Ord,
+    {
+        self.elements.sort()
+    }
+
+    /// Consumes the antichain, returning its elements.
+    pub fn into_vec(self) -> Vec<T> {
+        self.elements
+    }
+}
+
+impl<T: PartialOrder + Clone> Default for Antichain<T> {
+    fn default() -> Self {
+        Antichain::new()
+    }
+}
+
+impl<T: Debug> Debug for Antichain<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        f.debug_set().entries(self.elements.iter()).finish()
+    }
+}
+
+/// An antichain derived from signed counts of elements: the frontier of the
+/// multiset of elements with positive accumulated count.
+///
+/// This is the structure the tracker keeps per pointstamp location and per
+/// operator input port. `update_iter` applies a batch of `(T, i64)` changes
+/// *atomically* (all counts first, then one frontier recomputation) and
+/// reports the resulting frontier changes as `(T, i64)` diffs, which is what
+/// lets frontier changes be *projected* through path summaries downstream.
+#[derive(Clone)]
+pub struct MutableAntichain<T: Ord> {
+    /// Accumulated counts per element; zero-count entries are purged.
+    counts: std::collections::BTreeMap<T, i64>,
+    /// Current frontier: minimal elements among those with positive count.
+    frontier: Vec<T>,
+    /// Scratch buffer for frontier diffs.
+    changes: Vec<(T, i64)>,
+    /// Scratch buffer reused across `rebuild` calls (hot path: message
+    /// send/consume at distinct timestamps rebuilds constantly).
+    scratch: Vec<T>,
+}
+
+impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
+    /// Creates an empty `MutableAntichain`.
+    pub fn new() -> Self {
+        MutableAntichain {
+            counts: std::collections::BTreeMap::new(),
+            frontier: Vec::new(),
+            changes: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Creates a `MutableAntichain` seeded with count `updates`.
+    pub fn from_updates<I: IntoIterator<Item = (T, i64)>>(updates: I) -> Self {
+        let mut result = Self::new();
+        result.update_iter(updates);
+        result
+    }
+
+    /// The current frontier.
+    #[inline]
+    pub fn frontier(&self) -> &[T] {
+        &self.frontier
+    }
+
+    /// The current frontier as an [`Antichain`].
+    pub fn to_antichain(&self) -> Antichain<T> {
+        Antichain { elements: self.frontier.clone() }
+    }
+
+    /// True iff the frontier permits `t`.
+    #[inline]
+    pub fn less_equal(&self, t: &T) -> bool {
+        self.frontier.iter().any(|e| e.less_equal(t))
+    }
+
+    /// True iff some frontier element is strictly less than `t`.
+    #[inline]
+    pub fn less_than(&self, t: &T) -> bool {
+        self.frontier.iter().any(|e| e.less_than(t))
+    }
+
+    /// True iff no element has positive count (closed frontier).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.frontier.is_empty()
+    }
+
+    /// Total number of distinct elements tracked.
+    #[inline]
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Applies a batch of count updates atomically and returns the frontier
+    /// changes (`-1` for elements leaving the frontier, `+1` for entering).
+    ///
+    /// Counts may be transiently negative *within* a batch; accumulated
+    /// counts after a batch must be non-negative (checked in debug builds),
+    /// which the sequenced progress log guarantees for tracker updates.
+    pub fn update_iter<I>(&mut self, updates: I) -> std::vec::Drain<'_, (T, i64)>
+    where
+        I: IntoIterator<Item = (T, i64)>,
+    {
+        self.changes.clear();
+        // Apply all count changes first; track whether the frontier can have
+        // changed to avoid recomputation in the (very common) case where
+        // updates only touch dominated or still-positive elements.
+        let mut dirty = false;
+        for (t, diff) in updates {
+            if diff == 0 {
+                continue;
+            }
+            let entry = self.counts.entry(t.clone()).or_insert(0);
+            let old = *entry;
+            *entry += diff;
+            let new = *entry;
+            if new == 0 {
+                self.counts.remove(&t);
+            }
+            debug_assert!(
+                new >= 0 || old >= 0,
+                "pointstamp count went negative: {t:?} {old} -> {new}"
+            );
+            if old <= 0 && new > 0 {
+                // Element appeared: frontier changes unless `t` is strictly
+                // dominated by an existing frontier element.
+                if !self.frontier.iter().any(|f| f.less_equal(&t) && f != &t) {
+                    dirty = true;
+                }
+            } else if old > 0 && new <= 0 {
+                // Element vanished: frontier changes only if it was on it.
+                if self.frontier.iter().any(|f| f == &t) {
+                    dirty = true;
+                }
+            }
+        }
+        if dirty {
+            self.rebuild();
+        }
+        self.changes.drain(..)
+    }
+
+    /// Rebuilds the frontier from the counts, appending diffs to `changes`.
+    fn rebuild(&mut self) {
+        let mut new_frontier = std::mem::take(&mut self.scratch);
+        new_frontier.clear();
+        for (t, &count) in self.counts.iter() {
+            debug_assert!(count > 0, "zero-count entry survived in counts");
+            if !new_frontier.iter().any(|f: &T| f.less_equal(t)) {
+                new_frontier.retain(|f| !t.less_equal(f));
+                new_frontier.push(t.clone());
+            }
+        }
+        for old in self.frontier.iter() {
+            if !new_frontier.contains(old) {
+                self.changes.push((old.clone(), -1));
+            }
+        }
+        for new in new_frontier.iter() {
+            if !self.frontier.contains(new) {
+                self.changes.push((new.clone(), 1));
+            }
+        }
+        self.scratch = std::mem::replace(&mut self.frontier, new_frontier);
+    }
+
+    /// Frontier recomputed naively from counts — used by tests to validate
+    /// the incremental maintenance.
+    pub fn naive_frontier(&self) -> Antichain<T> {
+        Antichain::from_iter(
+            self.counts
+                .iter()
+                .filter(|(_, &c)| c > 0)
+                .map(|(t, _)| t.clone()),
+        )
+    }
+}
+
+impl<T: PartialOrder + Ord + Clone + Debug> Default for MutableAntichain<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Ord + Debug> Debug for MutableAntichain<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        f.debug_struct("MutableAntichain")
+            .field("frontier", &self.frontier)
+            .field("counts", &self.counts)
+            .finish()
+    }
+}
+
+/// Accumulates frontier progress changes for several input ports, retaining
+/// only net effects. A convenience used by operators that track multiple
+/// inputs.
+pub type FrontierChanges<T> = ChangeBatch<T>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::progress::timestamp::Product;
+
+    #[test]
+    fn antichain_insert_retains_minimal() {
+        let mut a = Antichain::new();
+        assert!(a.insert(Product::new(2u64, 1u64)));
+        assert!(a.insert(Product::new(1u64, 2u64)));
+        assert_eq!(a.len(), 2);
+        // Dominated by (1,2).
+        assert!(!a.insert(Product::new(3u64, 3u64)));
+        assert_eq!(a.len(), 2);
+        // Dominates both.
+        assert!(a.insert(Product::new(1u64, 1u64)));
+        assert_eq!(a.elements(), &[Product::new(1, 1)]);
+    }
+
+    #[test]
+    fn antichain_less_equal() {
+        let a = Antichain::from_iter(vec![Product::new(1u64, 2u64), Product::new(2u64, 1u64)]);
+        assert!(a.less_equal(&Product::new(1, 2)));
+        assert!(a.less_equal(&Product::new(5, 1)));
+        assert!(!a.less_equal(&Product::new(0, 0)));
+        assert!(!a.less_than(&Product::new(1, 2)));
+        assert!(a.less_than(&Product::new(1, 3)));
+    }
+
+    #[test]
+    fn antichain_empty_permits_nothing() {
+        let a = Antichain::<u64>::new();
+        assert!(!a.less_equal(&0));
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn mutable_antichain_basic() {
+        let mut ma = MutableAntichain::new();
+        let changes: Vec<_> = ma.update_iter(vec![(3u64, 1)]).collect();
+        assert_eq!(changes, vec![(3, 1)]);
+        assert_eq!(ma.frontier(), &[3]);
+
+        // A later element does not move the frontier.
+        let changes: Vec<_> = ma.update_iter(vec![(5u64, 1)]).collect();
+        assert!(changes.is_empty());
+
+        // An earlier element does.
+        let changes: Vec<_> = ma.update_iter(vec![(1u64, 1)]).collect();
+        assert_eq!(changes, vec![(3, -1), (1, 1)]);
+
+        // Removing the minimum advances to the next.
+        let changes: Vec<_> = ma.update_iter(vec![(1u64, -1)]).collect();
+        assert_eq!(changes, vec![(1, -1), (3, 1)]);
+
+        // Draining everything empties the frontier.
+        let changes: Vec<_> = ma.update_iter(vec![(3u64, -1), (5, -1)]).collect();
+        assert_eq!(changes, vec![(3, -1)]);
+        assert!(ma.is_empty());
+    }
+
+    #[test]
+    fn mutable_antichain_same_element_count_churn() {
+        let mut ma = MutableAntichain::new();
+        ma.update_iter(vec![(2u64, 1)]);
+        // More counts at the frontier element: no frontier change.
+        let changes: Vec<_> = ma.update_iter(vec![(2u64, 3)]).collect();
+        assert!(changes.is_empty());
+        let changes: Vec<_> = ma.update_iter(vec![(2u64, -3)]).collect();
+        assert!(changes.is_empty());
+        assert_eq!(ma.frontier(), &[2]);
+    }
+
+    #[test]
+    fn mutable_antichain_atomic_batch() {
+        let mut ma = MutableAntichain::new();
+        ma.update_iter(vec![(4u64, 1)]);
+        // Atomic swap 4 -> 2: single rebuild, net diff reported.
+        let changes: Vec<_> = ma.update_iter(vec![(2u64, 1), (4, -1)]).collect();
+        assert_eq!(changes, vec![(4, -1), (2, 1)]);
+    }
+
+    #[test]
+    fn mutable_antichain_transient_negative_within_batch() {
+        let mut ma = MutableAntichain::new();
+        ma.update_iter(vec![(7u64, 1)]);
+        // -1 then +1 for the same element within one batch nets to zero.
+        let changes: Vec<_> = ma.update_iter(vec![(7u64, -1), (7, 1)]).collect();
+        assert!(changes.is_empty());
+        assert_eq!(ma.frontier(), &[7]);
+    }
+
+    #[test]
+    fn mutable_antichain_partial_order_multiple_minima() {
+        let mut ma = MutableAntichain::new();
+        let a = Product::new(1u64, 2u64);
+        let b = Product::new(2u64, 1u64);
+        ma.update_iter(vec![(a, 1), (b, 1)]);
+        assert_eq!(ma.frontier().len(), 2);
+        let changes: Vec<_> = ma.update_iter(vec![(a, -1)]).collect();
+        assert_eq!(changes, vec![(a, -1)]);
+        assert_eq!(ma.frontier(), &[b]);
+    }
+
+    #[test]
+    fn mutable_antichain_matches_naive() {
+        // Randomized check (seeded): incremental frontier == naive frontier.
+        let mut state = 0x853c49e6748fea9bu64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        let mut ma = MutableAntichain::new();
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..2000 {
+            if live.is_empty() || rng() % 2 == 0 {
+                let t = (rng() % 16) as u64;
+                live.push(t);
+                ma.update_iter(vec![(t, 1)]);
+            } else {
+                let idx = rng() % live.len();
+                let t = live.swap_remove(idx);
+                ma.update_iter(vec![(t, -1)]);
+            }
+            let naive = ma.naive_frontier();
+            let mut got = ma.to_antichain();
+            got.sort();
+            let mut want = naive;
+            want.sort();
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Compacting batches of `(element, i64)` count updates.
+//!
+//! `ChangeBatch` is the "shared bookkeeping data structure" of §4: timestamp
+//! token methods (`clone`, `downgrade`, `drop`) and message send/consume
+//! accounting all record integer changes here, and the worker drains the
+//! batch *after* operator logic yields, so the drained prefix reflects
+//! atomic operator actions.
+
+use std::fmt::Debug;
+
+/// An accumulation of `(T, i64)` updates that compacts lazily.
+///
+/// Updates are appended in O(1); when the buffer exceeds twice the size of
+/// its last compaction it is sorted and coalesced, dropping zero-count
+/// entries. This keeps the structure linear in the number of *net* changes.
+#[derive(Clone)]
+pub struct ChangeBatch<T: Ord> {
+    updates: Vec<(T, i64)>,
+    /// Number of compacted (sorted, coalesced) prefix entries.
+    clean: usize,
+}
+
+impl<T: Ord + Clone + Debug> ChangeBatch<T> {
+    /// Creates an empty batch.
+    pub fn new() -> Self {
+        ChangeBatch { updates: Vec::new(), clean: 0 }
+    }
+
+    /// Creates a batch containing a single update.
+    pub fn new_from(t: T, diff: i64) -> Self {
+        let mut batch = Self::new();
+        batch.update(t, diff);
+        batch
+    }
+
+    /// Records `diff` copies of `t`.
+    #[inline]
+    pub fn update(&mut self, t: T, diff: i64) {
+        if diff != 0 {
+            self.updates.push((t, diff));
+            self.maybe_compact();
+        }
+    }
+
+    /// Records all updates in `iter`.
+    pub fn extend<I: IntoIterator<Item = (T, i64)>>(&mut self, iter: I) {
+        for (t, diff) in iter {
+            if diff != 0 {
+                self.updates.push((t, diff));
+            }
+        }
+        self.maybe_compact();
+    }
+
+    /// Drains the batch, yielding compacted net updates.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, (T, i64)> {
+        self.compact();
+        self.clean = 0;
+        self.updates.drain(..)
+    }
+
+    /// Drains the batch into `other`.
+    pub fn drain_into(&mut self, other: &mut ChangeBatch<T>) {
+        if !self.updates.is_empty() {
+            other.extend(self.drain());
+        }
+    }
+
+    /// True iff the batch accumulates to no net updates.
+    pub fn is_empty(&mut self) -> bool {
+        self.compact();
+        self.updates.is_empty()
+    }
+
+    /// Number of net updates currently held.
+    pub fn len(&mut self) -> usize {
+        self.compact();
+        self.updates.len()
+    }
+
+    /// Immutable view of the (possibly uncompacted) updates.
+    pub fn unstable_updates(&self) -> &[(T, i64)] {
+        &self.updates
+    }
+
+    /// Sorts and coalesces the updates, removing zero-count entries.
+    pub fn compact(&mut self) {
+        if self.clean < self.updates.len() {
+            self.updates.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut write = 0;
+            let mut read = 0;
+            while read < self.updates.len() {
+                let mut sum = self.updates[read].1;
+                let mut next = read + 1;
+                while next < self.updates.len() && self.updates[next].0 == self.updates[read].0 {
+                    sum += self.updates[next].1;
+                    next += 1;
+                }
+                if sum != 0 {
+                    self.updates.swap(write, read);
+                    self.updates[write].1 = sum;
+                    write += 1;
+                }
+                read = next;
+            }
+            self.updates.truncate(write);
+            self.clean = self.updates.len();
+        }
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.updates.len() > 32 && self.updates.len() > 2 * self.clean {
+            self.compact();
+        }
+    }
+}
+
+impl<T: Ord + Clone + Debug> Default for ChangeBatch<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Ord + Debug> Debug for ChangeBatch<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        f.debug_list().entries(self.updates.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesces_and_drops_zeros() {
+        let mut b = ChangeBatch::new();
+        b.update(3u64, 1);
+        b.update(3u64, -1);
+        b.update(5u64, 2);
+        b.update(5u64, 3);
+        let drained: Vec<_> = b.drain().collect();
+        assert_eq!(drained, vec![(5, 5)]);
+    }
+
+    #[test]
+    fn zero_updates_ignored() {
+        let mut b = ChangeBatch::new();
+        b.update(1u64, 0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_into_accumulates() {
+        let mut a = ChangeBatch::new_from(1u64, 2);
+        let mut b = ChangeBatch::new_from(1u64, -2);
+        a.drain_into(&mut b);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn matches_naive_hashmap_accumulation() {
+        // Seeded randomized equivalence with a HashMap accumulator.
+        let mut state = 0x2545f4914f6cdd1du64;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut batch = ChangeBatch::new();
+        let mut naive = std::collections::HashMap::new();
+        for _ in 0..10_000 {
+            let t = (rng() % 50) as u64;
+            let diff = (rng() % 7) as i64 - 3;
+            batch.update(t, diff);
+            *naive.entry(t).or_insert(0i64) += diff;
+        }
+        let mut got: Vec<_> = batch.drain().collect();
+        got.sort();
+        let mut want: Vec<_> = naive.into_iter().filter(|&(_, d)| d != 0).collect();
+        want.sort();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,210 @@
+//! The sequenced progress log: how workers share pointstamp updates.
+//!
+//! Following Naiad's progress protocol (paper §4: "these collected changes
+//! are broadcast among unsynchronized workers. Any subset of atomic updates
+//! forms a conservative view of the coordination state"), each worker
+//! appends *atomic batches* of `((Location, T), i64)` updates to a shared,
+//! totally ordered log, and every worker applies the log in order.
+//!
+//! The total order makes prefix-safety immediate: a `-1` (message consumed,
+//! token dropped) can only be appended after the action it reflects, which
+//! happens after the corresponding `+1` batch was appended (workers append
+//! their produce counts *before* handing messages to the data fabric), so
+//! every prefix of the log over-approximates the outstanding pointstamps.
+//!
+//! The log self-compacts: batches ack'd by every worker are dropped.
+
+use super::location::Location;
+use super::timestamp::Timestamp;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One atomic batch of pointstamp updates from one worker.
+pub type ProgressBatch<T> = Vec<((Location, T), i64)>;
+
+struct LogInner<T> {
+    /// Batches not yet read by every worker; `base` is the global sequence
+    /// number of `batches[0]`.
+    batches: VecDeque<Arc<ProgressBatch<T>>>,
+    base: usize,
+    /// Per-worker read cursors (global sequence numbers).
+    cursors: Vec<usize>,
+}
+
+/// A shared, totally ordered log of atomic progress batches.
+pub struct ProgressLog<T> {
+    inner: Mutex<LogInner<T>>,
+    /// Total batches ever appended — lets readers skip the lock entirely
+    /// when they are already caught up (the hot-loop fast path).
+    tail: AtomicUsize,
+}
+
+impl<T: Timestamp> ProgressLog<T> {
+    /// Creates a log shared by `peers` workers.
+    pub fn new(peers: usize) -> Arc<Self> {
+        Arc::new(ProgressLog {
+            inner: Mutex::new(LogInner {
+                batches: VecDeque::new(),
+                base: 0,
+                cursors: vec![0; peers],
+            }),
+            tail: AtomicUsize::new(0),
+        })
+    }
+
+    /// Appends an atomic batch (no-op if empty).
+    pub fn append(&self, batch: ProgressBatch<T>) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.batches.push_back(Arc::new(batch));
+        self.tail.store(inner.base + inner.batches.len(), Ordering::Release);
+    }
+
+    /// The global sequence number of the next batch to be appended.
+    #[inline]
+    pub fn tail(&self) -> usize {
+        self.tail.load(Ordering::Acquire)
+    }
+
+    /// Appends a batch and reads everything new for `worker` in one
+    /// critical section (the common per-step call). Returns the worker's
+    /// new cursor; a caller holding that cursor can skip the next call
+    /// entirely while `tail()` has not moved and it has nothing to append.
+    pub fn append_and_read(
+        &self,
+        worker: usize,
+        batch: ProgressBatch<T>,
+        read_into: &mut Vec<Arc<ProgressBatch<T>>>,
+    ) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        if !batch.is_empty() {
+            inner.batches.push_back(Arc::new(batch));
+            self.tail.store(inner.base + inner.batches.len(), Ordering::Release);
+        }
+        let base = inner.base;
+        let cursor = inner.cursors[worker];
+        let start = cursor.saturating_sub(base);
+        for i in start..inner.batches.len() {
+            read_into.push(inner.batches[i].clone());
+        }
+        let new_cursor = base + inner.batches.len();
+        inner.cursors[worker] = new_cursor;
+        // Compact: drop batches read by all workers.
+        let min_cursor = *inner.cursors.iter().min().unwrap();
+        while inner.base < min_cursor {
+            inner.batches.pop_front();
+            inner.base += 1;
+        }
+        new_cursor
+    }
+
+    /// Reads all batches `worker` has not yet seen.
+    pub fn read(&self, worker: usize, read_into: &mut Vec<Arc<ProgressBatch<T>>>) {
+        self.append_and_read(worker, Vec::new(), read_into);
+    }
+
+    /// Number of unread batches pending for `worker` (for idle detection).
+    pub fn pending(&self, worker: usize) -> usize {
+        let inner = self.inner.lock().unwrap();
+        (inner.base + inner.batches.len()).saturating_sub(inner.cursors[worker])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn update(n: usize, t: u64, d: i64) -> ((Location, u64), i64) {
+        ((Location::source(n, 0), t), d)
+    }
+
+    #[test]
+    fn all_workers_see_all_batches_in_order() {
+        let log = ProgressLog::<u64>::new(2);
+        log.append(vec![update(0, 1, 1)]);
+        log.append(vec![update(1, 2, 1)]);
+
+        let mut got0 = Vec::new();
+        log.read(0, &mut got0);
+        assert_eq!(got0.len(), 2);
+        assert_eq!(got0[0][0], update(0, 1, 1));
+        assert_eq!(got0[1][0], update(1, 2, 1));
+
+        // Worker 0 re-reading sees nothing new.
+        let mut again = Vec::new();
+        log.read(0, &mut again);
+        assert!(again.is_empty());
+
+        // Worker 1 still sees both.
+        let mut got1 = Vec::new();
+        log.read(1, &mut got1);
+        assert_eq!(got1.len(), 2);
+    }
+
+    #[test]
+    fn compaction_drops_fully_read_prefix() {
+        let log = ProgressLog::<u64>::new(2);
+        for i in 0..10 {
+            log.append(vec![update(0, i, 1)]);
+        }
+        let mut sink = Vec::new();
+        log.read(0, &mut sink);
+        assert_eq!(log.inner.lock().unwrap().batches.len(), 10);
+        sink.clear();
+        log.read(1, &mut sink);
+        assert_eq!(log.inner.lock().unwrap().batches.len(), 0);
+        // New appends still delivered after compaction.
+        log.append(vec![update(0, 99, 1)]);
+        sink.clear();
+        log.read(0, &mut sink);
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink[0][0], update(0, 99, 1));
+    }
+
+    #[test]
+    fn append_and_read_sees_own_batch() {
+        let log = ProgressLog::<u64>::new(1);
+        let mut sink = Vec::new();
+        log.append_and_read(0, vec![update(0, 5, 1)], &mut sink);
+        assert_eq!(sink.len(), 1);
+    }
+
+    #[test]
+    fn empty_batches_ignored() {
+        let log = ProgressLog::<u64>::new(1);
+        log.append(vec![]);
+        assert_eq!(log.pending(0), 0);
+    }
+
+    #[test]
+    fn concurrent_appends_totally_ordered() {
+        let log = ProgressLog::<u64>::new(3);
+        let threads: Vec<_> = (0..3)
+            .map(|w| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        log.append(vec![update(w, i, 1)]);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // Every worker reads the same sequence.
+        let mut seqs = Vec::new();
+        for w in 0..3 {
+            let mut sink = Vec::new();
+            log.read(w, &mut sink);
+            let flat: Vec<_> = sink.iter().flat_map(|b| b.iter().cloned()).collect();
+            assert_eq!(flat.len(), 300);
+            seqs.push(flat);
+        }
+        assert_eq!(seqs[0], seqs[1]);
+        assert_eq!(seqs[1], seqs[2]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Pointstamp locations: where in the dataflow graph a timestamp token or an
+//! in-flight message "lives".
+//!
+//! Following Naiad (and the paper's §3), a *pointstamp* is a pair of a
+//! timestamp and a location. Locations are operator ports:
+//!
+//! * a **source** (output) port holds the counts of live timestamp tokens
+//!   that grant the ability to send on the edges leaving that port;
+//! * a **target** (input) port holds the counts of message batches that have
+//!   been produced for, but not yet consumed by, that port.
+
+/// The direction of a port: operator output (`Source`) or input (`Target`).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Port {
+    /// An operator output port (tokens / capabilities live here).
+    Source(usize),
+    /// An operator input port (queued messages are counted here).
+    Target(usize),
+}
+
+/// A location in the dataflow graph: a port of a node.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct Location {
+    /// The node (operator) index in the dataflow graph.
+    pub node: usize,
+    /// The port and its direction.
+    pub port: Port,
+}
+
+impl Location {
+    /// A source (output-port) location.
+    pub fn source(node: usize, port: usize) -> Self {
+        Location { node, port: Port::Source(port) }
+    }
+
+    /// A target (input-port) location.
+    pub fn target(node: usize, port: usize) -> Self {
+        Location { node, port: Port::Target(port) }
+    }
+
+    /// True iff this is a source (output) location.
+    pub fn is_source(&self) -> bool {
+        matches!(self.port, Port::Source(_))
+    }
+
+    /// The port index, disregarding direction.
+    pub fn port_index(&self) -> usize {
+        match self.port {
+            Port::Source(p) | Port::Target(p) => p,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn location_constructors() {
+        let s = Location::source(3, 1);
+        assert!(s.is_source());
+        assert_eq!(s.port_index(), 1);
+        let t = Location::target(3, 0);
+        assert!(!t.is_source());
+        assert_eq!(t.node, 3);
+        assert_ne!(s, t);
+    }
+
+    #[test]
+    fn location_is_ordered_and_hashable() {
+        use std::collections::{BTreeSet, HashSet};
+        let mut b = BTreeSet::new();
+        let mut h = HashSet::new();
+        for node in 0..3 {
+            for port in 0..2 {
+                b.insert(Location::source(node, port));
+                b.insert(Location::target(node, port));
+                h.insert(Location::source(node, port));
+                h.insert(Location::target(node, port));
+            }
+        }
+        assert_eq!(b.len(), 12);
+        assert_eq!(h.len(), 12);
+    }
+}

@@ -1,0 +1,32 @@
+//! Progress tracking: the substrate that turns timestamp-token counts into
+//! per-port frontiers.
+//!
+//! The coordination state of the system is a multiset of *pointstamps*
+//! `(Location, T)` (§3.2 of the paper): live timestamp tokens are counted at
+//! operator *source* (output) ports, and undelivered message batches are
+//! counted at *target* (input) ports. This module provides:
+//!
+//! * [`timestamp`] — partial orders, the `Timestamp` trait, path summaries;
+//! * [`antichain`] — `Antichain` and count-backed `MutableAntichain`;
+//! * [`change_batch`] — compacting `(T, i64)` update batches (the "shared
+//!   bookkeeping data structure" of §4);
+//! * [`location`] — pointstamp locations (node/port/direction);
+//! * [`reachability`] — path-summary closure over the dataflow graph;
+//! * [`tracker`] — the per-worker tracker that folds pointstamp updates into
+//!   per-port frontier antichains by projection through path summaries;
+//! * [`exchange`] — the sequenced progress log that broadcasts atomic update
+//!   batches between workers (Naiad's protocol: any prefix of the log is a
+//!   conservative view of the coordination state).
+
+pub mod antichain;
+pub mod change_batch;
+pub mod exchange;
+pub mod location;
+pub mod reachability;
+pub mod timestamp;
+pub mod tracker;
+
+pub use antichain::{Antichain, MutableAntichain};
+pub use change_batch::ChangeBatch;
+pub use location::{Location, Port};
+pub use timestamp::{PartialOrder, PathSummary, Timestamp};

@@ -1,0 +1,338 @@
+//! Path-summary reachability over the dataflow graph.
+//!
+//! Progress tracking needs, for every location `l` and every operator input
+//! (target) port `p`, the set of *minimal path summaries* from `l` to `p`:
+//! if a pointstamp `(l, t)` is outstanding, then `p` may yet observe any
+//! timestamp `≥ s.results_in(t)` for a summary `s` of a path `l → p`.
+//!
+//! The closure is computed once at dataflow construction (no runtime
+//! fixpoint): a worklist propagates summaries backwards across channel edges
+//! (identity summaries) and operator-internal connections (declared
+//! summaries; the feedback operator declares a strictly advancing one, which
+//! is what makes cyclic dataflows — supported here, unlike Spark/Flink —
+//! terminate).
+
+use super::antichain::Antichain;
+use super::location::Location;
+use super::timestamp::{PartialOrder, PathSummary, Timestamp};
+use std::collections::HashMap;
+
+/// Static description of one node (operator) in the dataflow graph.
+#[derive(Clone, Debug)]
+pub struct NodeTopology<T: Timestamp> {
+    /// Operator name, for diagnostics.
+    pub name: String,
+    /// Number of input (target) ports.
+    pub inputs: usize,
+    /// Number of output (source) ports.
+    pub outputs: usize,
+    /// `internal[i][o]`: minimal summaries from input port `i` to output
+    /// port `o`. An empty antichain means "input `i` can never cause output
+    /// on `o`".
+    pub internal: Vec<Vec<Antichain<T::Summary>>>,
+}
+
+impl<T: Timestamp> NodeTopology<T> {
+    /// A node whose every input connects to every output with the identity
+    /// summary — the default for ordinary operators, which may produce
+    /// output at the timestamp of any input they receive.
+    pub fn identity(name: &str, inputs: usize, outputs: usize) -> Self {
+        let internal = (0..inputs)
+            .map(|_| {
+                (0..outputs)
+                    .map(|_| Antichain::from_elem(T::Summary::default()))
+                    .collect()
+            })
+            .collect();
+        NodeTopology { name: name.to_string(), inputs, outputs, internal }
+    }
+}
+
+/// Static description of the dataflow graph, sufficient for reachability.
+#[derive(Clone, Debug)]
+pub struct GraphTopology<T: Timestamp> {
+    /// Per-node port counts and internal summaries.
+    pub nodes: Vec<NodeTopology<T>>,
+    /// Channels: each connects a source (output) port to a target (input)
+    /// port, with the identity summary.
+    pub edges: Vec<(Location, Location)>,
+}
+
+impl<T: Timestamp> Default for GraphTopology<T> {
+    fn default() -> Self {
+        GraphTopology { nodes: Vec::new(), edges: Vec::new() }
+    }
+}
+
+impl<T: Timestamp> GraphTopology<T> {
+    /// All locations (every port of every node), in a canonical order.
+    pub fn locations(&self) -> Vec<Location> {
+        let mut locs = Vec::new();
+        for (n, node) in self.nodes.iter().enumerate() {
+            for i in 0..node.inputs {
+                locs.push(Location::target(n, i));
+            }
+            for o in 0..node.outputs {
+                locs.push(Location::source(n, o));
+            }
+        }
+        locs
+    }
+
+    /// Panics if the graph contains a cycle that does not pass through a
+    /// strictly advancing internal summary (such a cycle would let progress
+    /// tracking livelock / the closure be unsound).
+    pub fn validate_cycles(&self) {
+        // Build adjacency over locations, *excluding* strictly advancing
+        // internal connections, and look for a cycle (DFS colors).
+        let locs = self.locations();
+        let index: HashMap<Location, usize> = locs.iter().cloned().enumerate().map(|(i, l)| (l, i)).collect();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); locs.len()];
+        for (src, tgt) in &self.edges {
+            adj[index[src]].push(index[tgt]);
+        }
+        let default = T::Summary::default();
+        for (n, node) in self.nodes.iter().enumerate() {
+            for i in 0..node.inputs {
+                for o in 0..node.outputs {
+                    let summaries = &node.internal[i][o];
+                    // Non-strict iff some summary does not strictly advance.
+                    let non_strict = summaries
+                        .elements()
+                        .iter()
+                        .any(|s| s.less_equal(&default));
+                    if !summaries.is_empty() && non_strict {
+                        adj[index[&Location::target(n, i)]].push(index[&Location::source(n, o)]);
+                    }
+                }
+            }
+        }
+        // Iterative DFS cycle detection.
+        let mut color = vec![0u8; locs.len()]; // 0 white, 1 gray, 2 black
+        for start in 0..locs.len() {
+            if color[start] != 0 {
+                continue;
+            }
+            let mut stack = vec![(start, 0usize)];
+            color[start] = 1;
+            while let Some(&mut (u, ref mut next)) = stack.last_mut() {
+                if *next < adj[u].len() {
+                    let v = adj[u][*next];
+                    *next += 1;
+                    if color[v] == 0 {
+                        color[v] = 1;
+                        stack.push((v, 0));
+                    } else if color[v] == 1 {
+                        panic!(
+                            "dataflow graph contains a cycle without a strictly \
+                             advancing summary (through {:?}); cycles must go \
+                             through `feedback`",
+                            locs[v]
+                        );
+                    }
+                } else {
+                    color[u] = 2;
+                    stack.pop();
+                }
+            }
+        }
+    }
+}
+
+/// The reachability closure: minimal path summaries from every location to
+/// every *target* location.
+pub struct Summaries<T: Timestamp> {
+    /// Canonical location order (targets and sources interleaved per node).
+    pub locations: Vec<Location>,
+    /// `index[loc]` = position in `locations`.
+    pub index: HashMap<Location, usize>,
+    /// `targets[k]` = location indices that are target ports.
+    pub targets: Vec<usize>,
+    /// `forward[l]` = list of `(target location index, minimal summaries)`
+    /// for targets reachable from location `l`.
+    pub forward: Vec<Vec<(usize, Vec<T::Summary>)>>,
+}
+
+impl<T: Timestamp> Summaries<T> {
+    /// Computes the closure for `topology`. Panics on invalid cycles.
+    pub fn build(topology: &GraphTopology<T>) -> Self {
+        topology.validate_cycles();
+
+        let locations = topology.locations();
+        let index: HashMap<Location, usize> =
+            locations.iter().cloned().enumerate().map(|(i, l)| (l, i)).collect();
+        let targets: Vec<usize> = locations
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.is_source())
+            .map(|(i, _)| i)
+            .collect();
+
+        // Reverse adjacency: for each location `b`, the predecessors `a`
+        // with the summaries of the single hop `a -> b`.
+        let mut preds: Vec<Vec<(usize, T::Summary)>> = vec![Vec::new(); locations.len()];
+        for (src, tgt) in &topology.edges {
+            preds[index[tgt]].push((index[src], T::Summary::default()));
+        }
+        for (n, node) in topology.nodes.iter().enumerate() {
+            for i in 0..node.inputs {
+                for o in 0..node.outputs {
+                    for s in node.internal[i][o].elements() {
+                        preds[index[&Location::source(n, o)]]
+                            .push((index[&Location::target(n, i)], s.clone()));
+                    }
+                }
+            }
+        }
+
+        // Worklist closure: results[(l, p)] = antichain of summaries l -> p.
+        let mut results: HashMap<(usize, usize), Antichain<T::Summary>> = HashMap::new();
+        let mut worklist: Vec<(usize, usize)> = Vec::new();
+        for &p in &targets {
+            results
+                .entry((p, p))
+                .or_insert_with(Antichain::new)
+                .insert(T::Summary::default());
+            worklist.push((p, p));
+        }
+        while let Some((b, p)) = worklist.pop() {
+            let summaries: Vec<T::Summary> = results[&(b, p)].elements().to_vec();
+            for &(a, ref hop) in &preds[b] {
+                for s in &summaries {
+                    if let Some(composed) = hop.followed_by(s) {
+                        let entry = results.entry((a, p)).or_insert_with(Antichain::new);
+                        if entry.insert(composed) {
+                            worklist.push((a, p));
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut forward: Vec<Vec<(usize, Vec<T::Summary>)>> = vec![Vec::new(); locations.len()];
+        for ((l, p), antichain) in results {
+            if !antichain.is_empty() {
+                forward[l].push((p, antichain.into_vec()));
+            }
+        }
+        // Deterministic order helps tests and debugging.
+        for list in &mut forward {
+            list.sort_by_key(|&(p, _)| p);
+        }
+
+        Summaries { locations, index, targets, forward }
+    }
+
+    /// The summaries from `l` to targets, as `(Location, summaries)` pairs.
+    pub fn reachable_from(&self, l: Location) -> impl Iterator<Item = (Location, &[T::Summary])> {
+        let idx = self.index[&l];
+        self.forward[idx]
+            .iter()
+            .map(move |(p, s)| (self.locations[*p], s.as_slice()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Builds the linear topology `input -> a -> b` (3 nodes: node 0 is an
+    /// input with 1 output, nodes 1 and 2 are unary operators).
+    fn linear() -> GraphTopology<u64> {
+        let mut g = GraphTopology::default();
+        g.nodes.push(NodeTopology::identity("input", 0, 1));
+        g.nodes.push(NodeTopology::identity("a", 1, 1));
+        g.nodes.push(NodeTopology::identity("b", 1, 1));
+        g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+        g.edges.push((Location::source(1, 0), Location::target(2, 0)));
+        g
+    }
+
+    #[test]
+    fn linear_reachability() {
+        let s = Summaries::build(&linear());
+        // The input's output reaches both target ports with identity.
+        let from_input: Vec<_> = s.reachable_from(Location::source(0, 0)).collect();
+        assert_eq!(from_input.len(), 2);
+        for (_, summaries) in from_input {
+            assert_eq!(summaries, &[0u64]);
+        }
+        // b's input reaches only itself.
+        let from_b: Vec<_> = s.reachable_from(Location::target(2, 0)).collect();
+        assert_eq!(from_b.len(), 1);
+        assert_eq!(from_b[0].0, Location::target(2, 0));
+    }
+
+    #[test]
+    fn disconnected_ports_unreachable() {
+        let s = Summaries::build(&linear());
+        // Nothing reaches the input's (nonexistent) targets; b's source
+        // reaches nothing (no outgoing edge).
+        assert_eq!(s.reachable_from(Location::source(2, 0)).count(), 0);
+    }
+
+    #[test]
+    fn feedback_cycle_summaries() {
+        // input(0) -> op(1) -> feedback(2) -> op(1): the feedback node
+        // declares a +1 internal summary, so op's input sees itself at +1.
+        let mut g = GraphTopology::<u64>::default();
+        g.nodes.push(NodeTopology::identity("input", 0, 1));
+        g.nodes.push(NodeTopology::identity("op", 2, 1));
+        let mut fb = NodeTopology::identity("feedback", 1, 1);
+        fb.internal[0][0] = Antichain::from_elem(1u64);
+        g.nodes.push(fb);
+        g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+        g.edges.push((Location::source(1, 0), Location::target(2, 0)));
+        g.edges.push((Location::source(2, 0), Location::target(1, 1)));
+        let s = Summaries::build(&g);
+        // op's input port 0 reaches itself only via identity (p == p), and
+        // reaches input port 1 via the cycle with summary +1.
+        let from: Vec<_> = s.reachable_from(Location::target(1, 0)).collect();
+        let to_self: Vec<_> =
+            from.iter().filter(|(l, _)| *l == Location::target(1, 0)).collect();
+        assert_eq!(to_self[0].1, &[0u64]);
+        let to_loop: Vec<_> =
+            from.iter().filter(|(l, _)| *l == Location::target(1, 1)).collect();
+        assert_eq!(to_loop[0].1, &[1u64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn non_advancing_cycle_panics() {
+        let mut g = GraphTopology::<u64>::default();
+        g.nodes.push(NodeTopology::identity("a", 1, 1));
+        g.nodes.push(NodeTopology::identity("b", 1, 1));
+        g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+        g.edges.push((Location::source(1, 0), Location::target(0, 0)));
+        Summaries::build(&g);
+    }
+
+    #[test]
+    fn diamond_keeps_minimal_summaries() {
+        // input -> {a, b} -> join; via a the summary is +0, via b it's +5
+        // (b advances timestamps): both paths end at join's two ports.
+        let mut g = GraphTopology::<u64>::default();
+        g.nodes.push(NodeTopology::identity("input", 0, 1));
+        g.nodes.push(NodeTopology::identity("a", 1, 1));
+        let mut b = NodeTopology::identity("b", 1, 1);
+        b.internal[0][0] = Antichain::from_elem(5u64);
+        g.nodes.push(b);
+        g.nodes.push(NodeTopology::identity("join", 2, 1));
+        g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+        g.edges.push((Location::source(0, 0), Location::target(2, 0)));
+        g.edges.push((Location::source(1, 0), Location::target(3, 0)));
+        g.edges.push((Location::source(2, 0), Location::target(3, 1)));
+        let s = Summaries::build(&g);
+        let from_input: Vec<_> = s.reachable_from(Location::source(0, 0)).collect();
+        let port0: Vec<_> = from_input
+            .iter()
+            .filter(|(l, _)| *l == Location::target(3, 0))
+            .collect();
+        assert_eq!(port0[0].1, &[0u64]);
+        let port1: Vec<_> = from_input
+            .iter()
+            .filter(|(l, _)| *l == Location::target(3, 1))
+            .collect();
+        assert_eq!(port1[0].1, &[5u64]);
+    }
+}

@@ -1,0 +1,248 @@
+//! Timestamps, partial orders, and path summaries.
+//!
+//! Timestamps in this engine may be partially ordered (§5.1: "timestamps in
+//! timely dataflow can be multidimensional and result in frontiers defined by
+//! multiple minima"). The engine is generic over any [`Timestamp`]; the
+//! evaluation workloads use `u64` nanoseconds, and [`Product`] provides the
+//! multidimensional case exercised by the test suite.
+
+use std::fmt::Debug;
+use std::hash::Hash;
+
+/// A partial order. `less_equal` need not relate all pairs of elements.
+///
+/// This is deliberately separate from `Ord`: `Timestamp` also requires a
+/// *total* order (`Ord`) for use in ordered containers (e.g. the `BTreeMap`
+/// of the paper's Figure 5), which for partially ordered types like
+/// [`Product`] is an arbitrary linear extension (lexicographic).
+pub trait PartialOrder: PartialEq {
+    /// Returns true iff `self` is less than or equal to `other` in the
+    /// partial order.
+    fn less_equal(&self, other: &Self) -> bool;
+    /// Returns true iff `self` is strictly less than `other`.
+    fn less_than(&self, other: &Self) -> bool {
+        self.less_equal(other) && self != other
+    }
+}
+
+/// A summary of the minimal effect a path through the dataflow graph has on
+/// a timestamp that traverses it.
+///
+/// Summaries compose (`followed_by`) and act on timestamps (`results_in`);
+/// both return `None` on overflow, which progress tracking treats as "this
+/// path can never produce a timestamp" (a conservative fiction that is safe
+/// because larger timestamps impose weaker constraints).
+pub trait PathSummary<T>: Clone + Eq + PartialOrder + Debug + Hash + Send + 'static {
+    /// The timestamp that results from a timestamp `src` crossing this path.
+    fn results_in(&self, src: &T) -> Option<T>;
+    /// The summary of this path followed by `other`.
+    fn followed_by(&self, other: &Self) -> Option<Self>;
+}
+
+/// A logical timestamp.
+///
+/// `Ord` is a total order used only for containers and canonicalization; the
+/// semantically meaningful order is [`PartialOrder`]. `Summary::default()`
+/// must be the identity ("no advancement") summary.
+pub trait Timestamp:
+    Clone + Eq + Ord + PartialOrder + Debug + Hash + Send + Sync + 'static
+{
+    /// Path summaries for this timestamp type.
+    type Summary: PathSummary<Self> + Default;
+    /// The least timestamp; initial timestamp tokens carry this (§3.1's
+    /// "minimal zero timestamp").
+    fn minimum() -> Self;
+}
+
+// ---------------------------------------------------------------------------
+// Total orders: unsigned integers (nanosecond timestamps in the evaluation).
+// ---------------------------------------------------------------------------
+
+macro_rules! impl_uint_timestamp {
+    ($t:ty) => {
+        impl PartialOrder for $t {
+            #[inline]
+            fn less_equal(&self, other: &Self) -> bool {
+                self <= other
+            }
+            #[inline]
+            fn less_than(&self, other: &Self) -> bool {
+                self < other
+            }
+        }
+        // The summary for an integer timestamp is an integer increment.
+        impl PathSummary<$t> for $t {
+            #[inline]
+            fn results_in(&self, src: &$t) -> Option<$t> {
+                self.checked_add(*src)
+            }
+            #[inline]
+            fn followed_by(&self, other: &Self) -> Option<Self> {
+                self.checked_add(*other)
+            }
+        }
+        impl Timestamp for $t {
+            type Summary = $t;
+            #[inline]
+            fn minimum() -> Self {
+                0
+            }
+        }
+    };
+}
+
+impl_uint_timestamp!(u8);
+impl_uint_timestamp!(u16);
+impl_uint_timestamp!(u32);
+impl_uint_timestamp!(u64);
+impl_uint_timestamp!(usize);
+
+// ---------------------------------------------------------------------------
+// The trivial timestamp: a dataflow with a single logical batch.
+// ---------------------------------------------------------------------------
+
+impl PartialOrder for () {
+    #[inline]
+    fn less_equal(&self, _other: &Self) -> bool {
+        true
+    }
+}
+impl PathSummary<()> for () {
+    #[inline]
+    fn results_in(&self, _src: &()) -> Option<()> {
+        Some(())
+    }
+    #[inline]
+    fn followed_by(&self, _other: &Self) -> Option<Self> {
+        Some(())
+    }
+}
+impl Timestamp for () {
+    type Summary = ();
+    #[inline]
+    fn minimum() -> Self {}
+}
+
+// ---------------------------------------------------------------------------
+// Product: partially ordered pairs (multidimensional timestamps).
+// ---------------------------------------------------------------------------
+
+/// A pair of timestamps ordered *componentwise* — the classic partially
+/// ordered product timestamp of Naiad / Timely Dataflow.
+///
+/// `(a1, b1) ≤ (a2, b2)` iff `a1 ≤ a2` and `b1 ≤ b2`. The derived `Ord` is a
+/// lexicographic linear extension used only by ordered containers.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Product<A, B> {
+    /// The outer component.
+    pub outer: A,
+    /// The inner component.
+    pub inner: B,
+}
+
+impl<A, B> Product<A, B> {
+    /// Creates a new product timestamp from its components.
+    pub fn new(outer: A, inner: B) -> Self {
+        Product { outer, inner }
+    }
+}
+
+impl<A: Debug, B: Debug> Debug for Product<A, B> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        write!(f, "({:?}, {:?})", self.outer, self.inner)
+    }
+}
+
+impl<A: PartialOrder, B: PartialOrder> PartialOrder for Product<A, B> {
+    #[inline]
+    fn less_equal(&self, other: &Self) -> bool {
+        self.outer.less_equal(&other.outer) && self.inner.less_equal(&other.inner)
+    }
+}
+
+impl<A: Timestamp, B: Timestamp> PathSummary<Product<A, B>>
+    for Product<A::Summary, B::Summary>
+{
+    #[inline]
+    fn results_in(&self, src: &Product<A, B>) -> Option<Product<A, B>> {
+        Some(Product::new(
+            self.outer.results_in(&src.outer)?,
+            self.inner.results_in(&src.inner)?,
+        ))
+    }
+    #[inline]
+    fn followed_by(&self, other: &Self) -> Option<Self> {
+        Some(Product::new(
+            self.outer.followed_by(&other.outer)?,
+            self.inner.followed_by(&other.inner)?,
+        ))
+    }
+}
+
+impl<A: Timestamp, B: Timestamp> Timestamp for Product<A, B> {
+    type Summary = Product<A::Summary, B::Summary>;
+    #[inline]
+    fn minimum() -> Self {
+        Product::new(A::minimum(), B::minimum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uint_partial_order_is_total() {
+        assert!(3u64.less_equal(&3));
+        assert!(3u64.less_than(&4));
+        assert!(!4u64.less_than(&4));
+        assert!(!4u64.less_equal(&3));
+    }
+
+    #[test]
+    fn uint_summary_acts_by_addition() {
+        let s: u64 = 5;
+        assert_eq!(s.results_in(&10), Some(15));
+        assert_eq!(s.followed_by(&7), Some(12));
+        assert_eq!(u64::MAX.results_in(&1), None);
+    }
+
+    #[test]
+    fn uint_summary_default_is_identity() {
+        let s = <u64 as Timestamp>::Summary::default();
+        assert_eq!(s.results_in(&42), Some(42));
+    }
+
+    #[test]
+    fn product_is_partially_ordered() {
+        let a = Product::new(1u64, 2u64);
+        let b = Product::new(2u64, 1u64);
+        assert!(!a.less_equal(&b));
+        assert!(!b.less_equal(&a));
+        assert!(a.less_equal(&Product::new(1, 2)));
+        assert!(a.less_equal(&Product::new(2, 2)));
+        assert!(Product::<u64, u64>::minimum().less_equal(&a));
+    }
+
+    #[test]
+    fn product_summary_composes_componentwise() {
+        let s = Product::new(1u64, 0u64);
+        let t = Product::new(0u64, 3u64);
+        // `followed_by` is ambiguous without naming the timestamp type the
+        // summary acts on (u64 summaries serve any uint timestamp).
+        let composed =
+            <Product<u64, u64> as PathSummary<Product<u64, u64>>>::followed_by(&s, &t);
+        assert_eq!(composed, Some(Product::new(1, 3)));
+        assert_eq!(
+            s.results_in(&Product::new(10u64, 20u64)),
+            Some(Product::new(11, 20))
+        );
+    }
+
+    #[test]
+    fn unit_timestamp_is_trivial() {
+        assert!(().less_equal(&()));
+        assert_eq!(<() as Timestamp>::minimum(), ());
+        assert_eq!(().results_in(&()), Some(()));
+    }
+}

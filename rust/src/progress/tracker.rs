@@ -1,0 +1,368 @@
+//! The per-worker progress tracker.
+//!
+//! The tracker folds pointstamp count updates (from the sequenced progress
+//! log) into per-input-port frontier antichains. It is *projection based*:
+//! reachability (computed once, [`super::reachability`]) gives the minimal
+//! path summaries from every location to every target port; each location
+//! keeps a [`MutableAntichain`] of its pointstamp counts, and when a
+//! location's frontier changes the diffs are projected through each summary
+//! into the affected ports' frontier antichains. There is no runtime
+//! fixpoint, and — the paper's central point — no operator is involved:
+//! frontiers propagate through idle dataflow fragments without scheduling a
+//! single operator (§5.2, §7.3).
+
+use super::antichain::{Antichain, MutableAntichain};
+use super::location::Location;
+use super::reachability::{GraphTopology, Summaries};
+use super::timestamp::{PathSummary, Timestamp};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A frontier shared between the tracker (which maintains it) and an
+/// operator input handle (which reads it).
+pub struct SharedFrontier<T: Timestamp> {
+    /// The frontier itself.
+    pub antichain: MutableAntichain<T>,
+    /// Set by the tracker when the frontier changes; cleared by the reader.
+    pub changed: bool,
+}
+
+/// Shared handle to a port frontier.
+pub type FrontierHandle<T> = Rc<RefCell<SharedFrontier<T>>>;
+
+/// The per-worker progress tracker.
+pub struct Tracker<T: Timestamp> {
+    summaries: Summaries<T>,
+    /// Pointstamp counts per location (indexed as in `summaries.locations`).
+    counts: Vec<MutableAntichain<T>>,
+    /// Frontier handles per location (populated for target ports only).
+    frontiers: Vec<Option<FrontierHandle<T>>>,
+    /// Nodes whose input frontier changed since last drained.
+    dirty_nodes: Vec<usize>,
+    dirty_flag: Vec<bool>,
+    /// Scratch: per-location update staging.
+    staged: Vec<Vec<(T, i64)>>,
+    staged_dirty: Vec<usize>,
+    /// Scratch: per-target projected diffs.
+    projected: Vec<Vec<(T, i64)>>,
+    projected_dirty: Vec<usize>,
+}
+
+impl<T: Timestamp> Tracker<T> {
+    /// Builds a tracker for `topology`, seeding every source (output) port
+    /// with `peers` initial pointstamps at `T::minimum()` — one initial
+    /// timestamp token per output per worker (§3.1: "each dataflow operator
+    /// is initially provided with a timestamp token for each of its output
+    /// edges").
+    pub fn new(topology: &GraphTopology<T>, peers: usize) -> Self {
+        Self::new_with(topology, peers, Vec::new())
+    }
+
+    /// Like [`Tracker::new`], but adopts externally created frontier handles
+    /// for the given `(node, port)` target ports — operators receive their
+    /// handles during graph construction, before the tracker exists.
+    pub fn new_with(
+        topology: &GraphTopology<T>,
+        peers: usize,
+        provided: Vec<(usize, usize, FrontierHandle<T>)>,
+    ) -> Self {
+        let summaries = Summaries::build(topology);
+        let n_locs = summaries.locations.len();
+        let n_nodes = topology.nodes.len();
+        let mut frontiers: Vec<Option<FrontierHandle<T>>> = vec![None; n_locs];
+        for (node, port, handle) in provided {
+            let idx = summaries.index[&Location::target(node, port)];
+            frontiers[idx] = Some(handle);
+        }
+        for &t in &summaries.targets {
+            if frontiers[t].is_none() {
+                frontiers[t] = Some(Rc::new(RefCell::new(SharedFrontier {
+                    antichain: MutableAntichain::new(),
+                    changed: false,
+                })));
+            }
+        }
+        let mut tracker = Tracker {
+            counts: (0..n_locs).map(|_| MutableAntichain::new()).collect(),
+            frontiers,
+            dirty_nodes: Vec::new(),
+            dirty_flag: vec![false; n_nodes],
+            staged: vec![Vec::new(); n_locs],
+            staged_dirty: Vec::new(),
+            projected: vec![Vec::new(); n_locs],
+            projected_dirty: Vec::new(),
+            summaries,
+        };
+        // Seed initial tokens: one per output port per worker.
+        let seed: Vec<((Location, T), i64)> = tracker
+            .summaries
+            .locations
+            .iter()
+            .filter(|l| l.is_source())
+            .map(|&l| ((l, T::minimum()), peers as i64))
+            .collect();
+        tracker.apply(seed.iter().cloned());
+        tracker
+    }
+
+    /// The frontier handle for input port `port` of node `node`.
+    ///
+    /// The same handle is shared with the operator's input; the tracker
+    /// updates it in place and sets its `changed` flag.
+    pub fn frontier_handle(&self, node: usize, port: usize) -> FrontierHandle<T> {
+        let idx = self.summaries.index[&Location::target(node, port)];
+        self.frontiers[idx]
+            .as_ref()
+            .expect("target port has a frontier")
+            .clone()
+    }
+
+    /// Applies a batch of pointstamp updates atomically.
+    ///
+    /// All count changes for a location are applied in one step (so paired
+    /// `-old/+new` downgrades can never transiently release a frontier), and
+    /// all projected diffs for a port are applied in one step (so paired
+    /// `consume/retain` actions can never transiently advance a downstream
+    /// frontier).
+    pub fn apply<I>(&mut self, updates: I)
+    where
+        I: IntoIterator<Item = ((Location, T), i64)>,
+    {
+        // Stage updates per location.
+        for ((loc, t), diff) in updates {
+            let idx = self.summaries.index[&loc];
+            if self.staged[idx].is_empty() {
+                self.staged_dirty.push(idx);
+            }
+            self.staged[idx].push((t, diff));
+        }
+        // Per location: fold into counts, project frontier diffs.
+        for si in 0..self.staged_dirty.len() {
+            let lidx = self.staged_dirty[si];
+            let batch = std::mem::take(&mut self.staged[lidx]);
+            for (t, diff) in self.counts[lidx].update_iter(batch) {
+                for (tgt, summaries) in &self.summaries.forward[lidx] {
+                    for s in summaries {
+                        if let Some(projected_t) = s.results_in(&t) {
+                            if self.projected[*tgt].is_empty() {
+                                self.projected_dirty.push(*tgt);
+                            }
+                            self.projected[*tgt].push((projected_t, diff));
+                        }
+                    }
+                }
+            }
+        }
+        self.staged_dirty.clear();
+        // Per target port: fold projected diffs into the shared frontier.
+        for pi in 0..self.projected_dirty.len() {
+            let tgt = self.projected_dirty[pi];
+            let batch = std::mem::take(&mut self.projected[tgt]);
+            let handle = self.frontiers[tgt].as_ref().expect("target frontier");
+            let mut shared = handle.borrow_mut();
+            let changed = shared.antichain.update_iter(batch).count() > 0;
+            if changed {
+                shared.changed = true;
+                let node = self.summaries.locations[tgt].node;
+                if !self.dirty_flag[node] {
+                    self.dirty_flag[node] = true;
+                    self.dirty_nodes.push(node);
+                }
+            }
+        }
+        self.projected_dirty.clear();
+    }
+
+    /// Drains the set of nodes whose input frontiers changed since the last
+    /// call (the worker uses this to schedule frontier-interested operators).
+    pub fn drain_dirty_nodes(&mut self, into: &mut Vec<usize>) {
+        for &n in &self.dirty_nodes {
+            self.dirty_flag[n] = false;
+        }
+        into.extend(self.dirty_nodes.drain(..));
+    }
+
+    /// True iff no location holds any outstanding pointstamp — the dataflow
+    /// is complete.
+    pub fn is_complete(&self) -> bool {
+        self.counts.iter().all(|c| c.is_empty())
+    }
+
+    /// The current frontier at a *source* location (used by probes on
+    /// outputs and by diagnostics).
+    pub fn source_counts(&self, node: usize, port: usize) -> &MutableAntichain<T> {
+        let idx = self.summaries.index[&Location::source(node, port)];
+        &self.counts[idx]
+    }
+
+    /// Recomputes the frontier of `(node, port)` from scratch, from the raw
+    /// counts — an oracle used by the property-test suite to validate the
+    /// incremental projection machinery.
+    pub fn naive_target_frontier(&self, node: usize, port: usize) -> Antichain<T> {
+        let want = Location::target(node, port);
+        let mut result = Antichain::new();
+        for (lidx, counts) in self.counts.iter().enumerate() {
+            for (tgt, summaries) in &self.summaries.forward[lidx] {
+                if self.summaries.locations[*tgt] == want {
+                    for t in counts.frontier() {
+                        for s in summaries {
+                            if let Some(projected) = s.results_in(t) {
+                                result.insert(projected);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::progress::reachability::NodeTopology;
+
+    /// input(0) -> op(1) -> probe(2)
+    fn linear() -> GraphTopology<u64> {
+        let mut g = GraphTopology::default();
+        g.nodes.push(NodeTopology::identity("input", 0, 1));
+        g.nodes.push(NodeTopology::identity("op", 1, 1));
+        g.nodes.push(NodeTopology::identity("probe", 1, 0));
+        g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+        g.edges.push((Location::source(1, 0), Location::target(2, 0)));
+        g
+    }
+
+    #[test]
+    fn initial_frontiers_at_minimum() {
+        let tracker = Tracker::new(&linear(), 1);
+        let f1 = tracker.frontier_handle(1, 0);
+        assert_eq!(f1.borrow().antichain.frontier(), &[0]);
+        let f2 = tracker.frontier_handle(2, 0);
+        assert_eq!(f2.borrow().antichain.frontier(), &[0]);
+    }
+
+    #[test]
+    fn downgrade_advances_downstream_frontier() {
+        let mut tracker = Tracker::new(&linear(), 1);
+        // The input's token moves 0 -> 5; op's token is dropped.
+        tracker.apply(vec![
+            ((Location::source(0, 0), 5u64), 1),
+            ((Location::source(0, 0), 0u64), -1),
+            ((Location::source(1, 0), 0u64), -1),
+        ]);
+        let f1 = tracker.frontier_handle(1, 0);
+        assert_eq!(f1.borrow().antichain.frontier(), &[5]);
+        let f2 = tracker.frontier_handle(2, 0);
+        assert_eq!(f2.borrow().antichain.frontier(), &[5]);
+    }
+
+    #[test]
+    fn op_token_holds_downstream_but_not_own_input() {
+        let mut tracker = Tracker::new(&linear(), 1);
+        // Input advances to 10, op still holds its token at 0.
+        tracker.apply(vec![
+            ((Location::source(0, 0), 10u64), 1),
+            ((Location::source(0, 0), 0u64), -1),
+        ]);
+        // Op's own input frontier advances (its token is at its OUTPUT)...
+        let f1 = tracker.frontier_handle(1, 0);
+        assert_eq!(f1.borrow().antichain.frontier(), &[10]);
+        // ...but the probe's frontier is held at 0 by the op's token.
+        let f2 = tracker.frontier_handle(2, 0);
+        assert_eq!(f2.borrow().antichain.frontier(), &[0]);
+    }
+
+    #[test]
+    fn messages_hold_frontier_until_consumed() {
+        let mut tracker = Tracker::new(&linear(), 1);
+        // Drop all initial tokens but leave a message at op's input at 3.
+        tracker.apply(vec![
+            ((Location::target(1, 0), 3u64), 1),
+            ((Location::source(0, 0), 0u64), -1),
+            ((Location::source(1, 0), 0u64), -1),
+        ]);
+        let f1 = tracker.frontier_handle(1, 0);
+        assert_eq!(f1.borrow().antichain.frontier(), &[3]);
+        let f2 = tracker.frontier_handle(2, 0);
+        // The message could still cause output at 3.
+        assert_eq!(f2.borrow().antichain.frontier(), &[3]);
+        // Consuming it completes the dataflow.
+        tracker.apply(vec![((Location::target(1, 0), 3u64), -1)]);
+        assert!(f1.borrow().antichain.is_empty());
+        assert!(f2.borrow().antichain.is_empty());
+        assert!(tracker.is_complete());
+    }
+
+    #[test]
+    fn atomic_downgrade_produces_single_transition() {
+        let mut tracker = Tracker::new(&linear(), 1);
+        tracker.apply(vec![((Location::source(1, 0), 0u64), -1)]);
+        let f2 = tracker.frontier_handle(2, 0);
+        f2.borrow_mut().changed = false;
+        // -old/+new in one atomic batch: frontier goes 0 -> 7 exactly.
+        tracker.apply(vec![
+            ((Location::source(0, 0), 7u64), 1),
+            ((Location::source(0, 0), 0u64), -1),
+        ]);
+        assert!(f2.borrow().changed);
+        assert_eq!(f2.borrow().antichain.frontier(), &[7]);
+    }
+
+    #[test]
+    fn dirty_nodes_reported_once() {
+        let mut tracker = Tracker::new(&linear(), 1);
+        tracker.apply(vec![
+            ((Location::source(0, 0), 2u64), 1),
+            ((Location::source(0, 0), 0u64), -1),
+        ]);
+        let mut dirty = Vec::new();
+        tracker.drain_dirty_nodes(&mut dirty);
+        // Node 1 and node 2 changed (in some order), node 0 has no inputs.
+        dirty.sort();
+        assert_eq!(dirty, vec![1, 2]);
+        let mut again = Vec::new();
+        tracker.drain_dirty_nodes(&mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn multi_worker_seed_counts() {
+        let mut tracker = Tracker::new(&linear(), 3);
+        // One worker dropping its token does not advance the frontier...
+        tracker.apply(vec![((Location::source(0, 0), 0u64), -1)]);
+        let f1 = tracker.frontier_handle(1, 0);
+        assert_eq!(f1.borrow().antichain.frontier(), &[0]);
+        // ...all three do.
+        tracker.apply(vec![
+            ((Location::source(0, 0), 0u64), -1),
+            ((Location::source(0, 0), 0u64), -1),
+        ]);
+        assert!(f1.borrow().antichain.is_empty());
+    }
+
+    #[test]
+    fn incremental_matches_naive_oracle() {
+        let mut tracker = Tracker::new(&linear(), 2);
+        let steps: Vec<Vec<((Location, u64), i64)>> = vec![
+            vec![((Location::source(0, 0), 4), 1), ((Location::source(0, 0), 0), -1)],
+            vec![((Location::target(1, 0), 4), 1)],
+            vec![((Location::source(0, 0), 9), 1), ((Location::source(0, 0), 4), -1)],
+            vec![((Location::target(1, 0), 4), -1), ((Location::source(1, 0), 4), 1)],
+            vec![((Location::source(1, 0), 0), -2)],
+            vec![((Location::source(1, 0), 4), -1)],
+        ];
+        for step in steps {
+            tracker.apply(step);
+            for (node, port) in [(1, 0), (2, 0)] {
+                let handle = tracker.frontier_handle(node, port);
+                let mut got = handle.borrow().antichain.to_antichain();
+                got.sort();
+                let mut want = tracker.naive_target_frontier(node, port);
+                want.sort();
+                assert_eq!(got, want, "node {node} port {port}");
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Typed aggregation entry points over the PJRT runtime.
+//!
+//! [`WindowAggregator`] adapts arbitrary-size batches to the artifact's
+//! static `(N, W)` shape: batches are chunked to `N` lanes (padding with
+//! `id = -1`), window keys are mapped to dense slots per call, and the
+//! per-slot statistics are mapped back to window keys. Windows with
+//! count 0 are dropped (their max/min lanes hold sentinels).
+//!
+//! [`XlaWindowBackend`] plugs the aggregator into the windowing operators'
+//! [`WindowBackend`](crate::operators::window::WindowBackend) hook, giving
+//! the dataflow an XLA data plane behind `--agg xla`.
+
+use super::pjrt::PjrtRuntime;
+use crate::operators::window::WindowBackend;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Per-window aggregation results (dense, keyed by caller-provided key).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowStats {
+    /// Window key (e.g. end-of-window timestamp).
+    pub window: u64,
+    /// Sum of values.
+    pub sum: f64,
+    /// Number of values.
+    pub count: u64,
+    /// Maximum value.
+    pub max: f64,
+    /// Minimum value.
+    pub min: f64,
+}
+
+/// Batched segmented aggregation through one AOT artifact.
+pub struct WindowAggregator {
+    runtime: PjrtRuntime,
+    artifact: String,
+    n: usize,
+    w: usize,
+    /// Scratch buffers reused across calls (hot path: no allocation).
+    values_buf: Vec<f32>,
+    ids_buf: Vec<i32>,
+    executions: u64,
+}
+
+impl WindowAggregator {
+    /// Opens `artifacts_dir` and prepares artifact `name` (e.g.
+    /// `window_agg_1024x64`).
+    pub fn new(artifacts_dir: &str, name: &str) -> Result<Self> {
+        let mut runtime = PjrtRuntime::new(artifacts_dir)?;
+        let meta = runtime.meta(name)?.clone();
+        anyhow::ensure!(meta.outputs == 4, "{name} is not a full-agg artifact");
+        runtime.load(name)?; // compile eagerly, off the hot path
+        Ok(WindowAggregator {
+            runtime,
+            artifact: name.to_string(),
+            n: meta.n,
+            w: meta.w,
+            values_buf: Vec::new(),
+            ids_buf: Vec::new(),
+            executions: 0,
+        })
+    }
+
+    /// The artifact's static batch size.
+    pub fn batch_size(&self) -> usize {
+        self.n
+    }
+
+    /// Number of PJRT executions so far (diagnostics / perf accounting).
+    pub fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    /// Aggregates `(window, value)` pairs into per-window statistics.
+    ///
+    /// Handles arbitrary batch sizes and arbitrary numbers of distinct
+    /// windows by chunking to the artifact's `(N, W)` shape.
+    pub fn aggregate(&mut self, items: &[(u64, f64)]) -> Result<Vec<WindowStats>> {
+        let mut merged: BTreeMap<u64, WindowStats> = BTreeMap::new();
+        for chunk in items.chunks(self.n) {
+            // Dense slot assignment for this chunk, capped at W windows per
+            // execution (overflow spills into additional executions).
+            let mut start = 0;
+            while start < chunk.len() {
+                let mut slots: BTreeMap<u64, usize> = BTreeMap::new();
+                let mut end = start;
+                while end < chunk.len() {
+                    let window = chunk[end].0;
+                    if !slots.contains_key(&window) {
+                        if slots.len() == self.w {
+                            break;
+                        }
+                        let next = slots.len();
+                        slots.insert(window, next);
+                    }
+                    end += 1;
+                }
+                self.values_buf.clear();
+                self.ids_buf.clear();
+                for &(window, value) in &chunk[start..end] {
+                    self.values_buf.push(value as f32);
+                    self.ids_buf.push(slots[&window] as i32);
+                }
+                self.values_buf.resize(self.n, 0.0);
+                self.ids_buf.resize(self.n, -1);
+                let outputs =
+                    self.runtime
+                        .execute_agg(&self.artifact, &self.values_buf, &self.ids_buf)?;
+                self.executions += 1;
+                let (sums, counts, maxs, mins) =
+                    (&outputs[0], &outputs[1], &outputs[2], &outputs[3]);
+                for (&window, &slot) in &slots {
+                    let count = counts[slot] as u64;
+                    if count == 0 {
+                        continue;
+                    }
+                    let entry = merged.entry(window).or_insert(WindowStats {
+                        window,
+                        sum: 0.0,
+                        count: 0,
+                        max: f64::NEG_INFINITY,
+                        min: f64::INFINITY,
+                    });
+                    entry.sum += sums[slot] as f64;
+                    entry.count += count;
+                    entry.max = entry.max.max(maxs[slot] as f64);
+                    entry.min = entry.min.min(mins[slot] as f64);
+                }
+                start = end;
+            }
+        }
+        Ok(merged.into_values().collect())
+    }
+}
+
+/// [`WindowBackend`] adapter: the windowing operators' XLA data plane.
+pub struct XlaWindowBackend {
+    aggregator: WindowAggregator,
+    scratch: Vec<(u64, f64)>,
+}
+
+impl XlaWindowBackend {
+    /// Uses the default full-agg artifact from `artifacts_dir`.
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        Ok(XlaWindowBackend {
+            aggregator: WindowAggregator::new(artifacts_dir, "window_agg_1024x64")?,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Number of PJRT executions so far.
+    pub fn executions(&self) -> u64 {
+        self.aggregator.executions()
+    }
+}
+
+impl WindowBackend for XlaWindowBackend {
+    fn aggregate(&mut self, items: &[(u64, u64)]) -> Vec<(u64, u64, u64)> {
+        self.scratch.clear();
+        self.scratch.extend(items.iter().map(|&(w, v)| (w, v as f64)));
+        self.aggregator
+            .aggregate(&self.scratch)
+            .expect("XLA aggregation failed")
+            .into_iter()
+            .map(|s| (s.window, s.sum as u64, s.count))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,14 @@
+//! The PJRT runtime: loading and executing the AOT-compiled JAX/Pallas data
+//! plane from Rust.
+//!
+//! `make artifacts` (build-time Python, never on the request path) lowers
+//! the Layer-2 computations to HLO *text* under `artifacts/`; this module
+//! loads them with `HloModuleProto::from_text_file`, compiles each once on
+//! the PJRT CPU client, and exposes typed entry points the dataflow
+//! operators call from the hot path.
+
+pub mod aggregator;
+pub mod pjrt;
+
+pub use aggregator::{WindowAggregator, XlaWindowBackend};
+pub use pjrt::{ArtifactMeta, PjrtRuntime};

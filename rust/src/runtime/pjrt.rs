@@ -1,0 +1,169 @@
+//! PJRT client wrapper: artifact manifest, lazy compilation, execution.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry of `artifacts/manifest.txt` (written by `python -m
+/// compile.aot`): the artifact's static shapes and file name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Artifact name (e.g. `window_agg_1024x64`).
+    pub name: String,
+    /// Batch size `N` the module was lowered for.
+    pub n: usize,
+    /// Window-slot count `W`.
+    pub w: usize,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    /// Parses a manifest line: `name n=.. w=.. outputs=.. file=..`.
+    pub fn parse(line: &str) -> Result<ArtifactMeta> {
+        let mut parts = line.split_whitespace();
+        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?.to_string();
+        let mut n = None;
+        let mut w = None;
+        let mut outputs = None;
+        let mut file = None;
+        for part in parts {
+            let (key, value) =
+                part.split_once('=').ok_or_else(|| anyhow!("bad manifest field: {part}"))?;
+            match key {
+                "n" => n = Some(value.parse()?),
+                "w" => w = Some(value.parse()?),
+                "outputs" => outputs = Some(value.parse()?),
+                "file" => file = Some(value.to_string()),
+                other => return Err(anyhow!("unknown manifest key: {other}")),
+            }
+        }
+        Ok(ArtifactMeta {
+            name,
+            n: n.ok_or_else(|| anyhow!("manifest line missing n"))?,
+            w: w.ok_or_else(|| anyhow!("manifest line missing w"))?,
+            outputs: outputs.ok_or_else(|| anyhow!("manifest line missing outputs"))?,
+            file: file.ok_or_else(|| anyhow!("manifest line missing file"))?,
+        })
+    }
+}
+
+/// A PJRT CPU client plus the compiled executables of the artifact set.
+///
+/// One runtime per worker thread (PJRT handles are not shared across
+/// workers; compilation is once per worker and off the hot path).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Opens the artifacts directory and reads its manifest.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let mut manifest = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let meta = ArtifactMeta::parse(line)?;
+            manifest.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime { client, dir, manifest, executables: HashMap::new() })
+    }
+
+    /// Artifact metadata by name.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<_> = self.manifest.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Compiles (once) and returns the executable for `name`.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self.meta(name)?.clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let computation = xla::XlaComputation::from_proto(&proto);
+            let executable = self
+                .client
+                .compile(&computation)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), executable);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Executes `name` on f32/i32 input vectors, returning the tuple of f32
+    /// output vectors.
+    pub fn execute_agg(
+        &mut self,
+        name: &str,
+        values: &[f32],
+        ids: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let meta = self.meta(name)?.clone();
+        anyhow::ensure!(values.len() == meta.n, "values len {} != n {}", values.len(), meta.n);
+        anyhow::ensure!(ids.len() == meta.n, "ids len {} != n {}", ids.len(), meta.n);
+        let executable = self.load(name)?;
+        let values_lit = xla::Literal::vec1(values);
+        let ids_lit = xla::Literal::vec1(ids);
+        let result = executable
+            .execute::<xla::Literal>(&[values_lit, ids_lit])
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        anyhow::ensure!(parts.len() == meta.outputs, "expected {} outputs", meta.outputs);
+        parts
+            .iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let meta =
+            ArtifactMeta::parse("window_agg_1024x64 n=1024 w=64 outputs=4 file=x.hlo.txt")
+                .unwrap();
+        assert_eq!(meta.n, 1024);
+        assert_eq!(meta.w, 64);
+        assert_eq!(meta.outputs, 4);
+        assert_eq!(meta.file, "x.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_line_rejects_garbage() {
+        assert!(ArtifactMeta::parse("name n=x w=1 outputs=1 file=f").is_err());
+        assert!(ArtifactMeta::parse("name w=1 outputs=1 file=f").is_err());
+        assert!(ArtifactMeta::parse("").is_err());
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_roundtrip.rs (they
+    // need `make artifacts` to have run).
+}

@@ -1,0 +1,97 @@
+//! A small seeded property-testing harness.
+//!
+//! The build environment is fully offline and `proptest` is not in the
+//! vendored crate set, so this module provides the two pieces the test
+//! suite needs: a deterministic PRNG ([`Rng`]) and a check runner
+//! ([`property`]) that reports the failing seed/case for reproduction.
+
+/// xorshift64* PRNG: small, fast, deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded PRNG (seed is mixed so 0 is fine).
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(0x853c49e6748fea9b) | 1)
+    }
+
+    /// The next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545f4914f6cdd1d)
+    }
+
+    /// Uniform in `[0, bound)` (bound > 0).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        self.next_u64() % bound
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Coin flip with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.unit_f64() < p
+    }
+
+    /// Picks a random element of a slice.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+}
+
+/// Runs `check(case_index, rng)` for `cases` seeded cases; panics with the
+/// failing seed on error so the case can be replayed exactly.
+pub fn property<F: FnMut(u64, &mut Rng)>(name: &str, cases: u64, mut check: F) {
+    for case in 0..cases {
+        let seed = 0xa076_1d64_78bd_642f ^ case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(case, &mut rng);
+        }));
+        if let Err(err) = result {
+            eprintln!("property `{name}` failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_range_respects_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let v = rng.range(10, 20);
+            assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_reports_failures() {
+        property("always_fails", 3, |case, _rng| {
+            assert!(case < 2, "case 2 fails");
+        });
+    }
+}

@@ -1,0 +1,150 @@
+//! The cross-worker communication fabric.
+//!
+//! Workers build identical dataflow graphs in the same order, so channel
+//! identifiers agree without coordination. Each directed channel instance
+//! `(channel, from, to)` is one `std::sync::mpsc` pair; whichever side asks
+//! first creates the pair and parks the counterpart half for the other
+//! worker to claim.
+//!
+//! Both pending maps live under ONE mutex: claiming involves looking in one
+//! map and inserting into the other, and taking two locks in
+//! caller-dependent order deadlocks (worker A resolving a sender while
+//! worker B resolves the matching receiver).
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+type Key = (usize, usize, usize); // (channel, from, to)
+
+#[derive(Default)]
+struct Pending {
+    senders: HashMap<Key, Box<dyn Any + Send>>,
+    receivers: HashMap<Key, Box<dyn Any + Send>>,
+}
+
+/// The shared endpoint registry.
+pub struct Fabric {
+    peers: usize,
+    pending: Mutex<Pending>,
+}
+
+impl Fabric {
+    /// A fabric for `peers` workers.
+    pub fn new(peers: usize) -> std::sync::Arc<Self> {
+        std::sync::Arc::new(Fabric { peers, pending: Mutex::new(Pending::default()) })
+    }
+
+    /// Number of workers sharing this fabric.
+    pub fn peers(&self) -> usize {
+        self.peers
+    }
+
+    /// Claims the send half of `(channel, from, to)`. Called by worker
+    /// `from` exactly once per key.
+    pub fn sender<M: Send + 'static>(&self, chan: usize, from: usize, to: usize) -> Sender<M> {
+        let key = (chan, from, to);
+        let mut pending = self.pending.lock().unwrap();
+        if let Some(tx) = pending.senders.remove(&key) {
+            *tx.downcast::<Sender<M>>().expect("channel type mismatch")
+        } else {
+            let (tx, rx) = channel::<M>();
+            pending.receivers.insert(key, Box::new(rx));
+            tx
+        }
+    }
+
+    /// Claims the receive half of `(channel, from, to)`. Called by worker
+    /// `to` exactly once per key.
+    pub fn receiver<M: Send + 'static>(&self, chan: usize, from: usize, to: usize) -> Receiver<M> {
+        let key = (chan, from, to);
+        let mut pending = self.pending.lock().unwrap();
+        if let Some(rx) = pending.receivers.remove(&key) {
+            *rx.downcast::<Receiver<M>>().expect("channel type mismatch")
+        } else {
+            let (tx, rx) = channel::<M>();
+            pending.senders.insert(key, Box::new(tx));
+            rx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sender_first_then_receiver() {
+        let fabric = Fabric::new(2);
+        let tx = fabric.sender::<u32>(0, 0, 1);
+        let rx = fabric.receiver::<u32>(0, 0, 1);
+        tx.send(42).unwrap();
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn receiver_first_then_sender() {
+        let fabric = Fabric::new(2);
+        let rx = fabric.receiver::<u32>(3, 1, 0);
+        let tx = fabric.sender::<u32>(3, 1, 0);
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_channels() {
+        let fabric = Fabric::new(2);
+        let tx_a = fabric.sender::<u32>(0, 0, 1);
+        let tx_b = fabric.sender::<u32>(1, 0, 1);
+        let rx_a = fabric.receiver::<u32>(0, 0, 1);
+        let rx_b = fabric.receiver::<u32>(1, 0, 1);
+        tx_a.send(1).unwrap();
+        tx_b.send(2).unwrap();
+        assert_eq!(rx_a.recv().unwrap(), 1);
+        assert_eq!(rx_b.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn cross_thread_claiming() {
+        let fabric = Fabric::new(2);
+        let f2 = fabric.clone();
+        let handle = std::thread::spawn(move || {
+            let rx = f2.receiver::<String>(9, 0, 1);
+            rx.recv().unwrap()
+        });
+        let tx = fabric.sender::<String>(9, 0, 1);
+        tx.send("hello".to_string()).unwrap();
+        assert_eq!(handle.join().unwrap(), "hello");
+    }
+
+    /// Regression: concurrent sender/receiver resolution across many keys
+    /// must not deadlock (the two pending maps once lived under separate
+    /// locks, acquired in opposite orders by the two claim paths).
+    #[test]
+    fn concurrent_claims_do_not_deadlock() {
+        for _ in 0..50 {
+            let fabric = Fabric::new(2);
+            let f2 = fabric.clone();
+            let a = std::thread::spawn(move || {
+                for chan in 0..64 {
+                    let _tx = f2.sender::<u64>(chan, 0, 1);
+                    let _rx = f2.receiver::<u64>(chan, 1, 0);
+                }
+            });
+            for chan in 0..64 {
+                let _rx = fabric.receiver::<u64>(chan, 0, 1);
+                let _tx = fabric.sender::<u64>(chan, 1, 0);
+            }
+            a.join().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "type mismatch")]
+    fn type_mismatch_panics() {
+        let fabric = Fabric::new(2);
+        let _tx = fabric.sender::<u32>(0, 0, 1);
+        let _rx = fabric.receiver::<String>(0, 0, 1);
+    }
+}

@@ -1,0 +1,78 @@
+//! Launching a multi-worker computation.
+//!
+//! `execute(config, build)` spawns one thread per worker (optionally pinned
+//! to physical cores, as in the paper's §7.1 setup), runs the same
+//! construction-and-driving closure on each, and returns the per-worker
+//! results in index order.
+
+use super::allocator::Fabric;
+use super::Worker;
+use crate::config::Config;
+use crate::progress::exchange::ProgressLog;
+use crate::progress::timestamp::Timestamp;
+use std::sync::Arc;
+
+/// Pins the calling thread to core `index` (best-effort; ignored if the
+/// affinity call fails, e.g. in restricted containers).
+pub fn pin_to_core(index: usize) {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        let cores = libc::sysconf(libc::_SC_NPROCESSORS_ONLN) as usize;
+        if cores > 0 {
+            libc::CPU_SET(index % cores, &mut set);
+            let _ = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        }
+    }
+}
+
+/// Runs `build` on `config.workers` worker threads; each invocation builds
+/// the (identical) dataflow and drives its worker. Returns each worker's
+/// result, in worker-index order.
+pub fn execute<T, R, F>(config: Config, build: F) -> Vec<R>
+where
+    T: Timestamp,
+    R: Send + 'static,
+    F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
+{
+    let peers = config.workers.max(1);
+    let fabric = Fabric::new(peers);
+    let log = ProgressLog::<T>::new(peers);
+    let build = Arc::new(build);
+    let pin = config.pin_workers;
+
+    let mut handles = Vec::with_capacity(peers);
+    for index in 0..peers {
+        let fabric = fabric.clone();
+        let log = log.clone();
+        let build = build.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{index}"))
+                .spawn(move || {
+                    if pin {
+                        pin_to_core(index);
+                    }
+                    let mut worker = Worker::new(index, peers, fabric, log);
+                    build(&mut worker)
+                })
+                .expect("spawn worker thread"),
+        );
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("worker thread panicked"))
+        .collect()
+}
+
+/// Single-worker convenience wrapper: returns the sole worker's result.
+pub fn execute_single<T, R, F>(build: F) -> R
+where
+    T: Timestamp,
+    R: Send + 'static,
+    F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
+{
+    execute(Config { workers: 1, ..Config::default() }, build)
+        .pop()
+        .expect("one worker")
+}

@@ -1,0 +1,276 @@
+//! The worker: one thread, one instance of the dataflow graph, one tracker.
+//!
+//! Each step the worker (1) drains remote messages into local mailboxes,
+//! (2) schedules operators that have queued input, changed frontiers, or an
+//! activation request, draining the shared token bookkeeping after each so
+//! the drained changes reflect atomic operator actions (§4), (3) appends
+//! its accumulated atomic batch to the sequenced progress log and reads
+//! everything new, (4) folds the read batches into its tracker, and (5)
+//! releases staged remote data messages (whose `+1` produce counts are now
+//! in the log — the ordering that makes every log prefix conservative).
+
+pub mod allocator;
+pub mod execute;
+
+use crate::dataflow::channels::Data;
+use crate::dataflow::input::InputSession;
+use crate::dataflow::scope::{BuildState, OpCore, Scope};
+use crate::dataflow::stream::Stream;
+use crate::progress::exchange::{ProgressBatch, ProgressLog};
+use crate::progress::location::Location;
+use crate::progress::timestamp::Timestamp;
+use crate::progress::tracker::Tracker;
+use allocator::Fabric;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Base progress-flush cadence: how long a worker may sit on pending
+/// progress updates (token downgrades, message accounting) and staged
+/// remote data before pushing them to the sequenced log and fabric.
+/// Coalescing is what keeps fine timestamp quanta (2^8 ns in Figure 6/7)
+/// from turning every scheduling step into a contended log append; the
+/// cost is a bounded addition to the completion-latency floor. The cadence
+/// adapts upward (to [`PROGRESS_FLUSH_MAX`]) under contention — many
+/// workers all flushing at the base rate saturate the log's total order.
+pub const PROGRESS_FLUSH: std::time::Duration = std::time::Duration::from_micros(20);
+
+/// Upper bound for the adaptive flush cadence.
+pub const PROGRESS_FLUSH_MAX: std::time::Duration = std::time::Duration::from_micros(320);
+
+/// A dataflow worker. Generic over the dataflow's timestamp type.
+pub struct Worker<T: Timestamp> {
+    scope: Scope<T>,
+    log: Arc<ProgressLog<T>>,
+    tracker: Option<Tracker<T>>,
+    ops: Vec<OpCore<T>>,
+    drainers: Vec<Box<dyn FnMut() -> bool>>,
+    flushers: Vec<Box<dyn FnMut()>>,
+    local_batch: Vec<((Location, T), i64)>,
+    read_buf: Vec<Arc<ProgressBatch<T>>>,
+    steps: u64,
+    /// This worker's read cursor into the progress log (fast-path skip).
+    cursor: usize,
+    /// Remote data staged since the last flush (must be released together
+    /// with — after — the append carrying its produce counts).
+    remote_pending: bool,
+    /// When this worker last flushed (append + fabric release).
+    last_flush: Instant,
+    /// Adaptive flush cadence (see [`PROGRESS_FLUSH`]).
+    flush_interval: std::time::Duration,
+}
+
+impl<T: Timestamp> Worker<T> {
+    /// Creates a worker bound to a fabric and progress log. Most users go
+    /// through [`execute::execute`].
+    pub fn new(index: usize, peers: usize, fabric: Arc<Fabric>, log: Arc<ProgressLog<T>>) -> Self {
+        Worker {
+            scope: Scope::new(BuildState::new(index, peers, fabric)),
+            log,
+            tracker: None,
+            ops: Vec::new(),
+            drainers: Vec::new(),
+            flushers: Vec::new(),
+            local_batch: Vec::new(),
+            read_buf: Vec::new(),
+            steps: 0,
+            cursor: 0,
+            remote_pending: false,
+            last_flush: Instant::now(),
+            flush_interval: PROGRESS_FLUSH,
+        }
+    }
+
+    /// This worker's index.
+    pub fn index(&self) -> usize {
+        self.scope.index()
+    }
+
+    /// Total number of workers.
+    pub fn peers(&self) -> usize {
+        self.scope.peers()
+    }
+
+    /// The dataflow build scope (for operator builders).
+    pub fn scope(&self) -> Scope<T> {
+        self.scope.clone()
+    }
+
+    /// Creates a new dataflow input; returns the session used to feed and
+    /// advance it, and the stream of its records.
+    pub fn new_input<D: Data>(&mut self) -> (InputSession<T, D>, Stream<T, D>) {
+        assert!(self.tracker.is_none(), "cannot add inputs after the dataflow started");
+        InputSession::new(&self.scope)
+    }
+
+    /// Number of steps taken.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Finalizes graph construction: builds the tracker (seeding initial
+    /// token counts) and takes ownership of the registered operators.
+    /// Called automatically by the first `step`.
+    pub fn finalize(&mut self) {
+        if self.tracker.is_some() {
+            return;
+        }
+        let mut state = self.scope.state.borrow_mut();
+        state.finalized = true;
+        let peers = state.peers;
+        let topology = std::mem::take(&mut state.topology);
+        let handles = std::mem::take(&mut state.frontier_handles);
+        self.ops = std::mem::take(&mut state.ops);
+        self.drainers = std::mem::take(&mut state.drainers);
+        self.flushers = std::mem::take(&mut state.flushers);
+        drop(state);
+        let tracker = Tracker::new_with(&topology, peers, handles);
+        // Restore topology for diagnostics.
+        self.scope.state.borrow_mut().topology = topology;
+        self.tracker = Some(tracker);
+    }
+
+    /// Runs one scheduling step; returns true iff any work happened.
+    pub fn step(&mut self) -> bool {
+        self.finalize();
+        self.steps += 1;
+        let mut active = false;
+
+        // (1) Remote messages into local mailboxes.
+        for drain in &mut self.drainers {
+            active |= drain();
+        }
+
+        // (2a) Input-session (and other out-of-band) token actions.
+        let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
+        bookkeeping.drain_into(&mut self.local_batch);
+
+        // (2b) Schedule operators.
+        for op in &mut self.ops {
+            let frontier_changed = op.frontiers.iter().any(|f| f.borrow().changed);
+            let should_run = op.activation.get() || frontier_changed || (op.work_hint)();
+            if should_run {
+                op.activation.set(false);
+                for f in &op.frontiers {
+                    f.borrow_mut().changed = false;
+                }
+                (op.logic)();
+                bookkeeping.drain_into(&mut self.local_batch);
+                active = true;
+            }
+        }
+
+        // (3) Flush policy. Progress batches and staged remote data move on
+        // one cadence: every PROGRESS_FLUSH the worker appends its batch to
+        // the sequenced log and THEN releases staged fabric messages, so a
+        // batch's `+1` produce counts always precede the data they cover.
+        // Coalescing across steps lets produce/consume pairs cancel inside
+        // the ChangeBatch before ever touching the shared log — without it,
+        // fine timestamp quanta (2^8 ns, Figures 6/7) turn every scheduling
+        // step into a contended append. An empty-handed worker skips the
+        // log lock entirely while the atomic tail shows nothing new.
+        self.remote_pending |= {
+            let state = self.scope.state.borrow();
+            state.remote_staged.replace(false)
+        };
+        let have_work = !self.local_batch.is_empty() || self.remote_pending;
+        let big = self.local_batch.len() >= 4096;
+        let due = big || (have_work && self.last_flush.elapsed() >= self.flush_interval);
+        if due {
+            let batch = std::mem::take(&mut self.local_batch);
+            self.cursor = self.log.append_and_read(self.index(), batch, &mut self.read_buf);
+            // Adapt the cadence to the observed log traffic: a backlog of
+            // whole-fleet batches per flush means everyone is hammering the
+            // total order — back off; an idle log invites lower latency.
+            let peers = self.peers();
+            if self.read_buf.len() > 4 * peers {
+                self.flush_interval = (self.flush_interval * 2).min(PROGRESS_FLUSH_MAX);
+            } else if self.read_buf.len() <= peers {
+                self.flush_interval = (self.flush_interval / 2).max(PROGRESS_FLUSH);
+            }
+            // (4) Fold everything new into the tracker.
+            let tracker = self.tracker.as_mut().expect("finalized");
+            for batch in self.read_buf.drain(..) {
+                tracker.apply(batch.iter().cloned());
+            }
+            // (5) Release staged remote messages (their +1s are now logged).
+            for flush in &mut self.flushers {
+                flush();
+            }
+            self.remote_pending = false;
+            self.last_flush = Instant::now();
+            active = true;
+        } else if self.cursor != self.log.tail() {
+            self.cursor =
+                self.log.append_and_read(self.index(), Vec::new(), &mut self.read_buf);
+            let tracker = self.tracker.as_mut().expect("finalized");
+            for batch in self.read_buf.drain(..) {
+                tracker.apply(batch.iter().cloned());
+            }
+            active = true;
+        }
+
+        active
+    }
+
+    /// Forces the pending progress batch into the sequenced log and
+    /// releases any staged remote data.
+    ///
+    /// MUST run before a worker stops stepping (and runs automatically at
+    /// the end of [`step_while`](Worker::step_while) and on drop): with the
+    /// coalesced flush cadence, a worker can observe its own completion
+    /// while still holding staged messages — e.g. the final broadcast
+    /// watermarks — that its peers need in order to complete themselves.
+    pub fn flush_now(&mut self) {
+        if self.tracker.is_none() {
+            return;
+        }
+        let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
+        bookkeeping.drain_into(&mut self.local_batch);
+        self.remote_pending |= {
+            let state = self.scope.state.borrow();
+            state.remote_staged.replace(false)
+        };
+        if !self.local_batch.is_empty() || self.remote_pending {
+            let batch = std::mem::take(&mut self.local_batch);
+            self.cursor = self.log.append_and_read(self.index(), batch, &mut self.read_buf);
+            let tracker = self.tracker.as_mut().expect("finalized");
+            for batch in self.read_buf.drain(..) {
+                tracker.apply(batch.iter().cloned());
+            }
+            for flush in &mut self.flushers {
+                flush();
+            }
+            self.remote_pending = false;
+            self.last_flush = Instant::now();
+        }
+    }
+
+    /// Steps until `done` returns true.
+    ///
+    /// Finalizes first: probe frontiers are only meaningful once the
+    /// tracker has seeded the initial token counts. Flushes on exit so
+    /// peers never wait on updates this worker is still holding.
+    pub fn step_while<F: FnMut() -> bool>(&mut self, mut more: F) {
+        self.finalize();
+        while more() {
+            if !self.step() {
+                // Idle: give the OS scheduler a chance (many workers may
+                // share cores, e.g. under `cargo test`).
+                std::thread::yield_now();
+            }
+        }
+        self.flush_now();
+    }
+
+    /// True iff no pointstamps remain anywhere (the dataflow is complete).
+    pub fn is_complete(&self) -> bool {
+        self.tracker.as_ref().map(|t| t.is_complete()).unwrap_or(false)
+    }
+}
+
+impl<T: Timestamp> Drop for Worker<T> {
+    fn drop(&mut self) {
+        // Covers custom driving loops that exit without `step_while`.
+        self.flush_now();
+    }
+}

@@ -1,0 +1,204 @@
+//! All three coordination mechanisms must produce the SAME results on the
+//! same input — they differ in coordination cost, not semantics. This is
+//! the precondition for the paper's §7 comparisons being meaningful.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use timestamp_tokens::config::Config;
+use timestamp_tokens::coordination::notificator::Notificator;
+use timestamp_tokens::coordination::watermark::{
+    WatermarkExt, WmInput, WmLogic, WmRecord, WmWiring,
+};
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::dataflow::channels::Pact;
+use timestamp_tokens::dataflow::operator::OperatorExt;
+use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::harness::workloads::{build_word_count, drain};
+use timestamp_tokens::operators::wordcount::WordCountExt;
+use timestamp_tokens::worker::execute::execute;
+
+fn config() -> Config {
+    Config { workers: 2, pin_workers: false, ..Config::default() }
+}
+
+/// Deterministic feed of (time, word) pairs.
+fn feed() -> Vec<(u64, u64)> {
+    (1..=200u64).map(|i| (i * 100, (i * 13) % 8)).collect()
+}
+
+/// Expected per-word totals when both workers send `feed()` once.
+fn expected_totals() -> HashMap<u64, u64> {
+    let mut m = HashMap::new();
+    for (_, w) in feed() {
+        *m.entry(w).or_insert(0u64) += 2;
+    }
+    m
+}
+
+/// Merges per-worker "highest count seen per word" maps.
+fn merge(results: Vec<HashMap<u64, u64>>) -> HashMap<u64, u64> {
+    let mut merged = HashMap::new();
+    for m in results {
+        for (w, c) in m {
+            let slot = merged.entry(w).or_insert(0u64);
+            *slot = (*slot).max(c);
+        }
+    }
+    merged
+}
+
+fn observe(maxes: &Rc<RefCell<HashMap<u64, u64>>>, w: u64, c: u64) {
+    let mut borrow = maxes.borrow_mut();
+    let slot = borrow.entry(w).or_insert(0);
+    *slot = (*slot).max(c);
+}
+
+#[test]
+fn all_mechanisms_retire_all_timestamps() {
+    // Every mechanism must retire every timestamp of a deterministic feed.
+    for mechanism in Mechanism::all() {
+        let results = execute::<u64, _, _>(config(), move |worker| {
+            let (mut input, probe) = build_word_count(worker, mechanism);
+            for t in 1..=20u64 {
+                let time = t * 1_000;
+                for w in 0..32u64 {
+                    input.send(time, (w * 7 + t) % 16);
+                }
+                input.advance(time);
+                let deadline =
+                    std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while !probe.complete(time.saturating_sub(1_000)) {
+                    worker.step();
+                    assert!(std::time::Instant::now() < deadline, "{mechanism:?} stuck");
+                }
+            }
+            drain(worker, &mut input, &probe);
+            true
+        });
+        assert_eq!(results, vec![true, true], "{mechanism:?}");
+    }
+}
+
+#[test]
+fn word_totals_tokens() {
+    let feed = feed();
+    let results = execute::<u64, _, _>(config(), move |worker| {
+        let (mut input, stream) = worker.new_input::<u64>();
+        let maxes = Rc::new(RefCell::new(HashMap::new()));
+        let maxes2 = maxes.clone();
+        let probe = stream.word_count().probe_with(move |_t, data| {
+            for &(w, c) in data {
+                observe(&maxes2, w, c);
+            }
+        });
+        for &(t, w) in &feed {
+            input.advance_to(t);
+            input.send(w);
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let got = maxes.borrow().clone();
+        got
+    });
+    assert_eq!(merge(results), expected_totals());
+}
+
+#[test]
+fn word_totals_notifications() {
+    let feed = feed();
+    let results = execute::<u64, _, _>(config(), move |worker| {
+        let (mut input, stream) = worker.new_input::<u64>();
+        let maxes = Rc::new(RefCell::new(HashMap::new()));
+        let maxes2 = maxes.clone();
+        let counted = stream.unary_frontier(
+            Pact::exchange(|w: &u64| *w),
+            "wc_notify",
+            |tok, info| {
+                drop(tok);
+                let mut notificator = Notificator::new(info.activator.clone());
+                let mut stash: HashMap<u64, Vec<u64>> = HashMap::new();
+                let mut counts: HashMap<u64, u64> = HashMap::new();
+                let mut frontier_buf = Vec::new();
+                move |input: &mut _, output: &mut _| {
+                    while let Some((token, data)) = input.next() {
+                        let t = *token.time();
+                        stash.entry(t).or_insert_with(|| {
+                            notificator.notify_at(token.retain());
+                            Vec::new()
+                        });
+                        stash.get_mut(&t).unwrap().extend(data);
+                    }
+                    frontier_buf.clear();
+                    frontier_buf.extend_from_slice(input.frontier().frontier());
+                    if let Some(token) = notificator.next(&frontier_buf) {
+                        if let Some(words) = stash.remove(token.time()) {
+                            let mut session = output.session(&token);
+                            for w in words {
+                                let c = counts.entry(w).or_insert(0);
+                                *c += 1;
+                                session.give((w, *c));
+                            }
+                        }
+                    }
+                }
+            },
+        );
+        let probe = counted.probe_with(move |_t, data| {
+            for &(w, c) in data {
+                observe(&maxes2, w, c);
+            }
+        });
+        for &(t, w) in &feed {
+            input.advance_to(t);
+            input.send(w);
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let got = maxes.borrow().clone();
+        got
+    });
+    assert_eq!(merge(results), expected_totals());
+}
+
+#[test]
+fn word_totals_watermarks() {
+    struct Count(HashMap<u64, u64>);
+    impl WmLogic<u64, (u64, u64)> for Count {
+        fn on_data(&mut self, te: u64, w: u64, out: &mut Vec<(u64, (u64, u64))>) {
+            let c = self.0.entry(w).or_insert(0);
+            *c += 1;
+            out.push((te, (w, *c)));
+        }
+        fn on_watermark(&mut self, _wm: u64, _out: &mut Vec<(u64, (u64, u64))>) {}
+    }
+    let feed = feed();
+    let results = execute::<u64, _, _>(config(), move |worker| {
+        let (mut input, stream) = WmInput::<u64>::new(worker);
+        let maxes = Rc::new(RefCell::new(HashMap::new()));
+        let maxes2 = maxes.clone();
+        let counted =
+            stream.wm_unary(WmWiring::Exchanged, "wc_wm", |w: &u64| *w, Count(HashMap::new()));
+        let probe = counted.wm_probe(|_| {});
+        counted.sink(Pact::Pipeline, "observe", move |_info| {
+            move |input: &mut _| {
+                while let Some((_t, data)) = input.next() {
+                    for rec in data {
+                        if let WmRecord::Data(_, (w, c)) = rec {
+                            observe(&maxes2, w, c);
+                        }
+                    }
+                }
+            }
+        });
+        for &(t, w) in &feed {
+            input.advance_watermark(t);
+            input.send(t, w);
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let got = maxes.borrow().clone();
+        got
+    });
+    assert_eq!(merge(results), expected_totals());
+}

@@ -1,0 +1,251 @@
+//! Property tests over the coordination substrate (seeded, reproducible —
+//! see `timestamp_tokens::testing` for why not proptest).
+//!
+//! The central invariants:
+//!
+//! 1. **Frontier safety** — the tracker's reported frontier at any input
+//!    port never passes an outstanding pointstamp (for random graphs and
+//!    random update sequences, checked against a from-scratch oracle).
+//! 2. **Order independence** — applying atomic update batches in any
+//!    interleaving yields the same final frontiers (the property that makes
+//!    Naiad-style asynchronous broadcast correct, §4).
+//! 3. **End-to-end conservation** — random multi-worker dataflows deliver
+//!    every record exactly once and always drain.
+
+use timestamp_tokens::config::Config;
+use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::operators::map::MapExt;
+use timestamp_tokens::progress::antichain::MutableAntichain;
+use timestamp_tokens::progress::location::Location;
+use timestamp_tokens::progress::reachability::{GraphTopology, NodeTopology};
+use timestamp_tokens::progress::tracker::Tracker;
+use timestamp_tokens::testing::{property, Rng};
+use timestamp_tokens::worker::execute::execute;
+
+/// A random linear-ish DAG topology: input -> ops (random extra skip
+/// edges) -> probe. Returns the topology and its target ports.
+fn random_topology(rng: &mut Rng) -> (GraphTopology<u64>, Vec<(usize, usize)>) {
+    let n_ops = rng.range(1, 6) as usize;
+    let mut g = GraphTopology::default();
+    g.nodes.push(NodeTopology::identity("input", 0, 1));
+    for i in 0..n_ops {
+        g.nodes.push(NodeTopology::identity(&format!("op{i}"), 1, 1));
+    }
+    g.nodes.push(NodeTopology::identity("probe", 1, 0));
+    // Chain edges.
+    for i in 0..n_ops {
+        g.edges.push((Location::source(i, 0), Location::target(i + 1, 0)));
+    }
+    g.edges.push((Location::source(n_ops, 0), Location::target(n_ops + 1, 0)));
+    // Random skip edges (forward only, keeps the graph acyclic).
+    for _ in 0..rng.below(3) {
+        let from = rng.below(n_ops as u64 + 1) as usize;
+        let to = rng.range(from as u64 + 1, n_ops as u64 + 2) as usize;
+        g.edges.push((Location::source(from, 0), Location::target(to, 0)));
+    }
+    let mut targets = Vec::new();
+    for (n, node) in g.nodes.iter().enumerate() {
+        for p in 0..node.inputs {
+            targets.push((n, p));
+        }
+    }
+    (g, targets)
+}
+
+/// Generates a random, *legal* update sequence: tokens only move forward,
+/// messages are produced under live tokens and consumed after production.
+/// Returns the atomic batches.
+fn random_batches(
+    rng: &mut Rng,
+    topology: &GraphTopology<u64>,
+) -> Vec<Vec<((Location, u64), i64)>> {
+    let mut batches = Vec::new();
+    // Track live token times per source, pending messages per target.
+    let mut tokens: Vec<(Location, u64)> = Vec::new();
+    for (n, node) in topology.nodes.iter().enumerate() {
+        for p in 0..node.outputs {
+            tokens.push((Location::source(n, p), 0));
+        }
+    }
+    let mut messages: Vec<(Location, u64)> = Vec::new();
+    for _ in 0..rng.range(5, 40) {
+        let mut batch = Vec::new();
+        match rng.below(4) {
+            // Downgrade a token.
+            0 if !tokens.is_empty() => {
+                let i = rng.below(tokens.len() as u64) as usize;
+                let (loc, t) = tokens[i];
+                let t2 = t + rng.range(1, 10);
+                batch.push(((loc, t), -1));
+                batch.push(((loc, t2), 1));
+                tokens[i].1 = t2;
+            }
+            // Drop a token.
+            1 if tokens.len() > 1 => {
+                let i = rng.below(tokens.len() as u64) as usize;
+                let (loc, t) = tokens.swap_remove(i);
+                batch.push(((loc, t), -1));
+            }
+            // Send a message from a live token to a downstream target.
+            2 if !tokens.is_empty() => {
+                let i = rng.below(tokens.len() as u64) as usize;
+                let (loc, t) = tokens[i];
+                let outgoing: Vec<Location> = topology
+                    .edges
+                    .iter()
+                    .filter(|(src, _)| *src == loc)
+                    .map(|(_, tgt)| *tgt)
+                    .collect();
+                if let Some(&target) = outgoing.first() {
+                    batch.push(((target, t), 1));
+                    messages.push((target, t));
+                }
+            }
+            // Consume a message (token-ref use without retain).
+            _ if !messages.is_empty() => {
+                let i = rng.below(messages.len() as u64) as usize;
+                let (loc, t) = messages.swap_remove(i);
+                batch.push(((loc, t), -1));
+            }
+            _ => {}
+        }
+        if !batch.is_empty() {
+            batches.push(batch);
+        }
+    }
+    // Cleanup: drop all remaining tokens and consume all messages so the
+    // final state is "complete".
+    let mut cleanup = Vec::new();
+    for (loc, t) in tokens.drain(..) {
+        cleanup.push(((loc, t), -1));
+    }
+    for (loc, t) in messages.drain(..) {
+        cleanup.push(((loc, t), -1));
+    }
+    if !cleanup.is_empty() {
+        batches.push(cleanup);
+    }
+    batches
+}
+
+#[test]
+fn frontier_never_passes_outstanding_pointstamps() {
+    property("frontier_safety", 150, |_case, rng| {
+        let (topology, targets) = random_topology(rng);
+        let mut tracker = Tracker::new(&topology, 1);
+        let batches = random_batches(rng, &topology);
+        for batch in batches {
+            tracker.apply(batch.iter().cloned());
+            for &(node, port) in &targets {
+                let handle = tracker.frontier_handle(node, port);
+                let mut got = handle.borrow().antichain.to_antichain();
+                got.sort();
+                let mut want = tracker.naive_target_frontier(node, port);
+                want.sort();
+                assert_eq!(got, want, "node {node} port {port}");
+            }
+        }
+        assert!(tracker.is_complete(), "cleanup must drain all pointstamps");
+    });
+}
+
+#[test]
+fn batch_order_independence() {
+    property("order_independence", 100, |_case, rng| {
+        let (topology, targets) = random_topology(rng);
+        let batches = random_batches(rng, &topology);
+
+        // Apply in order.
+        let mut a = Tracker::new(&topology, 1);
+        for batch in &batches {
+            a.apply(batch.iter().cloned());
+        }
+        // Apply with batches grouped into random super-batches (a coarser
+        // interleaving — what a worker sees when it reads several log
+        // entries at once).
+        let mut b = Tracker::new(&topology, 1);
+        let mut i = 0;
+        while i < batches.len() {
+            let take = 1 + rng.below(3) as usize;
+            let merged: Vec<_> = batches[i..(i + take).min(batches.len())]
+                .iter()
+                .flatten()
+                .cloned()
+                .collect();
+            b.apply(merged);
+            i += take;
+        }
+        for &(node, port) in &targets {
+            let ha = a.frontier_handle(node, port);
+            let hb = b.frontier_handle(node, port);
+            let mut fa = ha.borrow().antichain.to_antichain();
+            let mut fb = hb.borrow().antichain.to_antichain();
+            fa.sort();
+            fb.sort();
+            assert_eq!(fa, fb, "node {node} port {port}");
+        }
+    });
+}
+
+#[test]
+fn mutable_antichain_randomized_against_naive() {
+    property("mutable_antichain", 200, |_case, rng| {
+        let mut ma = MutableAntichain::new();
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..rng.range(10, 200) {
+            if live.is_empty() || rng.chance(0.6) {
+                let t = rng.below(32);
+                live.push(t);
+                ma.update_iter(vec![(t, 1)]);
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let t = live.swap_remove(i);
+                ma.update_iter(vec![(t, -1)]);
+            }
+            let mut got = ma.to_antichain();
+            got.sort();
+            let mut want = ma.naive_frontier();
+            want.sort();
+            assert_eq!(got, want);
+        }
+    });
+}
+
+#[test]
+fn random_dataflows_conserve_records_and_drain() {
+    property("dataflow_conservation", 12, |case, rng| {
+        let workers = 1 + (case % 3) as usize;
+        let epochs = rng.range(1, 8);
+        let per_epoch = rng.range(1, 300);
+        let chain = rng.range(0, 5) as usize;
+        let results = execute::<u64, _, _>(
+            Config { workers, pin_workers: false, ..Config::default() },
+            move |worker| {
+                use std::cell::RefCell;
+                use std::rc::Rc;
+                let (mut input, stream) = worker.new_input::<u64>();
+                let count = Rc::new(RefCell::new(0u64));
+                let count2 = count.clone();
+                let mut mid = stream.exchange(|v| *v);
+                for _ in 0..chain {
+                    mid = mid.map(|x| x);
+                }
+                let probe = mid
+                    .inspect(move |_, _| *count2.borrow_mut() += 1)
+                    .probe();
+                for e in 0..epochs {
+                    input.advance_to(e * 17);
+                    for v in 0..per_epoch {
+                        input.send(v * 31 + e);
+                    }
+                }
+                input.close();
+                worker.step_while(|| !probe.done());
+                let got = *count.borrow();
+                got
+            },
+        );
+        let total: u64 = results.iter().sum();
+        assert_eq!(total, workers as u64 * epochs * per_epoch);
+    });
+}

@@ -1,0 +1,133 @@
+//! Integration: the full AOT bridge — HLO-text artifacts produced by the
+//! JAX/Pallas compile path, loaded and executed via PJRT, validated against
+//! a Rust-native oracle.
+//!
+//! Requires `make artifacts` (skips gracefully if artifacts are missing, so
+//! `cargo test` stays runnable in a fresh checkout).
+
+use timestamp_tokens::runtime::{PjrtRuntime, WindowAggregator, XlaWindowBackend};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+/// Native oracle for the aggregation contract.
+fn native_agg(items: &[(u64, f64)]) -> Vec<(u64, f64, u64, f64, f64)> {
+    let mut map: std::collections::BTreeMap<u64, (f64, u64, f64, f64)> =
+        std::collections::BTreeMap::new();
+    for &(w, v) in items {
+        let e = map.entry(w).or_insert((0.0, 0, f64::NEG_INFINITY, f64::INFINITY));
+        e.0 += v;
+        e.1 += 1;
+        e.2 = e.2.max(v);
+        e.3 = e.3.min(v);
+    }
+    map.into_iter().map(|(w, (s, c, mx, mn))| (w, s, c, mx, mn)).collect()
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let runtime = PjrtRuntime::new("artifacts").unwrap();
+    let names = runtime.artifact_names();
+    assert!(names.iter().any(|n| n == "window_agg_1024x64"), "{names:?}");
+    assert!(names.iter().any(|n| n == "window_agg_256x16"), "{names:?}");
+    assert!(names.iter().any(|n| n == "window_max_1024x64"), "{names:?}");
+}
+
+#[test]
+fn raw_execute_matches_oracle() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut runtime = PjrtRuntime::new("artifacts").unwrap();
+    let meta = runtime.meta("window_agg_256x16").unwrap().clone();
+    let mut values = vec![0f32; meta.n];
+    let mut ids = vec![-1i32; meta.n];
+    // Three windows with known stats; rest padding.
+    let data = [(0, 1.5f32), (0, 2.5), (1, -3.0), (2, 7.0), (2, 1.0), (2, 4.0)];
+    for (i, &(slot, v)) in data.iter().enumerate() {
+        values[i] = v;
+        ids[i] = slot;
+    }
+    let out = runtime.execute_agg("window_agg_256x16", &values, &ids).unwrap();
+    let (sums, counts, maxs, mins) = (&out[0], &out[1], &out[2], &out[3]);
+    assert_eq!(&sums[..3], &[4.0, -3.0, 12.0]);
+    assert_eq!(&counts[..3], &[2.0, 1.0, 3.0]);
+    assert_eq!(&maxs[..3], &[2.5, -3.0, 7.0]);
+    assert_eq!(&mins[..3], &[1.5, -3.0, 1.0]);
+    // Padding slots report zero counts.
+    assert!(counts[3..].iter().all(|&c| c == 0.0));
+}
+
+#[test]
+fn aggregator_handles_oversized_batches_and_window_overflow() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut agg = WindowAggregator::new("artifacts", "window_agg_256x16").unwrap();
+    // 1000 items (4 chunks of 256) over 40 windows (> W=16: slot spill).
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let mut rng = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    let items: Vec<(u64, f64)> = (0..1000)
+        .map(|_| {
+            let w = rng() % 40;
+            let v = (rng() % 1000) as f64 / 10.0;
+            (w, v)
+        })
+        .collect();
+    let got = agg.aggregate(&items).unwrap();
+    let want = native_agg(&items);
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.window, w.0);
+        assert!((g.sum - w.1).abs() < 1e-3, "sum {} vs {}", g.sum, w.1);
+        assert_eq!(g.count, w.2);
+        assert!((g.max - w.3).abs() < 1e-3); // f32 data plane vs f64 oracle
+        assert!((g.min - w.4).abs() < 1e-3);
+    }
+    assert!(agg.executions() >= 4, "expected chunked executions");
+}
+
+#[test]
+fn windowed_average_dataflow_on_xla_backend() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use timestamp_tokens::dataflow::probe::ProbeExt;
+    use timestamp_tokens::operators::window::WindowAverageExt;
+    use timestamp_tokens::worker::execute::execute_single;
+
+    // Same scenario as the native-backend unit test: results must agree.
+    let got = execute_single::<u64, _, _>(|worker| {
+        let (mut input, stream) = worker.new_input::<u64>();
+        let out = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let out2 = out.clone();
+        let backend = Box::new(XlaWindowBackend::new("artifacts").unwrap());
+        let probe = stream.window_average(10, backend).probe_with(move |t, data| {
+            for d in data {
+                out2.borrow_mut().push((*t, *d));
+            }
+        });
+        for (t, v) in [(1u64, 2u64), (3, 4), (12, 10)] {
+            input.advance_to(t);
+            input.send(v);
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let result = out.borrow().clone();
+        result
+    });
+    assert_eq!(got, vec![(10, 3.0), (20, 10.0)]);
+}
