@@ -1,6 +1,10 @@
 //! Shared bench-harness plumbing (criterion is unavailable offline; each
 //! bench is a `harness = false` binary printing paper-format tables).
 
+// Each bench binary compiles this module separately and uses a different
+// subset of it; unused-item lints would otherwise differ per binary.
+#![allow(dead_code)]
+
 use std::time::Duration;
 
 /// Sweep scaling knobs, settable from the command line:

@@ -1,26 +1,158 @@
 //! Microbenchmarks of the coordination substrate itself — the inputs to
-//! the performance pass (EXPERIMENTS.md §Perf): how fast can the engine
-//! move pointstamp updates end to end?
+//! the performance pass: how fast can the engine move pointstamp updates
+//! end to end?
 //!
-//! Reports tokens-operations/s for: ChangeBatch accumulation,
-//! MutableAntichain churn, Tracker::apply on a pipeline topology, the
-//! sequenced ProgressLog, and a whole-engine step loop.
+//! Two parts:
+//!
+//! 1. Throughput rates for the substrate pieces (ChangeBatch accumulation,
+//!    MutableAntichain churn, Tracker::apply on a pipeline topology, the
+//!    exchange primitives, a whole-engine step loop), printed as tables.
+//! 2. A **centralized-vs-decentralized exchange comparison**: per-step
+//!    progress-exchange latency (one atomic downgrade batch broadcast +
+//!    drain) for 1/2/4/8 workers through (a) the retained mutex-log
+//!    baseline (`ProgressLog`) and (b) the per-peer mailbox fabric
+//!    (`Progcaster`). Results (p50/p99/mean ns) are printed AND written as
+//!    machine-readable JSON to `BENCH_progress.json`, so future PRs have a
+//!    trajectory to compare against instead of asserting wins.
 
 mod common;
 
 use common::BenchArgs;
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 use timestamp_tokens::dataflow::token::BookkeepingHandle;
 use timestamp_tokens::progress::antichain::MutableAntichain;
 use timestamp_tokens::progress::change_batch::ChangeBatch;
-use timestamp_tokens::progress::exchange::ProgressLog;
+use timestamp_tokens::progress::exchange::{Progcaster, ProgressLog};
 use timestamp_tokens::progress::location::Location;
 use timestamp_tokens::progress::reachability::{GraphTopology, NodeTopology};
 use timestamp_tokens::progress::tracker::Tracker;
+use timestamp_tokens::worker::allocator::Fabric;
 
 fn rate(label: &str, ops: u64, start: Instant) {
     let secs = start.elapsed().as_secs_f64();
     println!("{label:>42}: {:>8.2} M ops/s  ({ops} ops in {secs:.3}s)", ops as f64 / secs / 1e6);
+}
+
+/// Percentile (nearest-rank on a sorted slice).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Summary statistics of one (path, workers) latency population.
+struct LatencyStats {
+    workers: usize,
+    p50_ns: u64,
+    p99_ns: u64,
+    mean_ns: u64,
+    samples: usize,
+}
+
+fn summarize(workers: usize, mut samples: Vec<u64>) -> LatencyStats {
+    samples.sort_unstable();
+    let sum: u128 = samples.iter().map(|&v| v as u128).sum();
+    LatencyStats {
+        workers,
+        p50_ns: percentile(&samples, 50.0),
+        p99_ns: percentile(&samples, 99.0),
+        mean_ns: if samples.is_empty() { 0 } else { (sum / samples.len() as u128) as u64 },
+        samples: samples.len(),
+    }
+}
+
+/// One per-step exchange through the centralized mutex log: append own
+/// atomic batch and read everything new, as the old worker step did.
+fn bench_centralized(workers: usize, steps: u64) -> Vec<u64> {
+    let log = ProgressLog::<u64>::new(workers);
+    let barrier = Arc::new(Barrier::new(workers));
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let log = log.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut latencies = Vec::with_capacity(steps as usize);
+                let mut buf = Vec::new();
+                barrier.wait();
+                for t in 0..steps {
+                    let start = Instant::now();
+                    let batch = vec![
+                        ((Location::source(w, 0), t + 1), 1i64),
+                        ((Location::source(w, 0), t), -1i64),
+                    ];
+                    log.append_and_read(w, batch, &mut buf);
+                    latencies.push(start.elapsed().as_nanos() as u64);
+                    buf.clear();
+                }
+                latencies
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+}
+
+/// One per-step exchange through the decentralized fabric: coalesce the
+/// same atomic batch, broadcast it into the per-peer mailboxes, drain all
+/// inbound streams — the live worker flush path.
+fn bench_decentralized(workers: usize, steps: u64) -> Vec<u64> {
+    let fabric = Fabric::new(workers);
+    let barrier = Arc::new(Barrier::new(workers));
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let fabric = fabric.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut caster = Progcaster::<u64>::new(w, workers, &fabric);
+                let mut latencies = Vec::with_capacity(steps as usize);
+                let mut buf = Vec::new();
+                barrier.wait();
+                for t in 0..steps {
+                    let start = Instant::now();
+                    caster.update(Location::source(w, 0), t + 1, 1);
+                    caster.update(Location::source(w, 0), t, -1);
+                    caster.send();
+                    caster.recv_into(&mut buf);
+                    latencies.push(start.elapsed().as_nanos() as u64);
+                    buf.clear();
+                }
+                latencies
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+}
+
+fn write_json(steps: u64, results: &[(&str, Vec<LatencyStats>)]) {
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"micro_progress\",\n");
+    json.push_str("  \"unit\": \"ns\",\n");
+    json.push_str(&format!("  \"steps_per_worker\": {steps},\n"));
+    json.push_str("  \"paths\": {\n");
+    for (pi, (path, stats)) in results.iter().enumerate() {
+        // Keys are fixed alphanumeric identifiers; no escaping needed.
+        json.push_str(&format!("    \"{path}\": {{\n"));
+        for (si, s) in stats.iter().enumerate() {
+            json.push_str(&format!(
+                "      \"{}\": {{\"p50_ns\": {}, \"p99_ns\": {}, \"mean_ns\": {}, \"samples\": {}}}{}\n",
+                s.workers,
+                s.p50_ns,
+                s.p99_ns,
+                s.mean_ns,
+                s.samples,
+                if si + 1 < stats.len() { "," } else { "" }
+            ));
+        }
+        json.push_str(&format!("    }}{}\n", if pi + 1 < results.len() { "," } else { "" }));
+    }
+    json.push_str("  }\n}\n");
+    match std::fs::write("BENCH_progress.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_progress.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_progress.json: {e}"),
+    }
 }
 
 fn main() {
@@ -75,7 +207,7 @@ fn main() {
         rate("Tracker::apply 17-stage downgrade", m, start);
     }
 
-    // ProgressLog: sequenced append+read, single worker.
+    // Exchange primitives, single worker (uncontended floor).
     {
         let log = ProgressLog::<u64>::new(1);
         let mut buf = Vec::new();
@@ -85,7 +217,21 @@ fn main() {
             log.append_and_read(0, vec![((Location::source(0, 0), t), 1)], &mut buf);
             buf.clear();
         }
-        rate("ProgressLog append+read", m, start);
+        rate("ProgressLog append+read (baseline)", m, start);
+    }
+    {
+        let fabric = Fabric::new(1);
+        let mut caster = Progcaster::<u64>::new(0, 1, &fabric);
+        let mut buf = Vec::new();
+        let m = n / 5;
+        let start = Instant::now();
+        for t in 0..m {
+            caster.update(Location::source(0, 0), t, 1);
+            caster.send();
+            caster.recv_into(&mut buf);
+            buf.clear();
+        }
+        rate("Progcaster send+recv", m, start);
     }
 
     // Bookkeeping handle: the per-token-action cost seen by operators.
@@ -125,5 +271,34 @@ fn main() {
             "engine epoch advance (4-op chain)",
             steps as f64 / secs / 1e3
         );
+    }
+
+    // Centralized vs decentralized per-step exchange latency, 1/2/4/8
+    // workers (the tentpole's measured claim, not an asserted one).
+    {
+        let steps: u64 = if args.quick { 5_000 } else { 50_000 };
+        let worker_counts = [1usize, 2, 4, 8];
+        println!("\nprogress-exchange per-step latency (ns), {steps} steps/worker:");
+        println!(
+            "{:>15} {:>8} {:>10} {:>10} {:>10}",
+            "path", "workers", "p50", "p99", "mean"
+        );
+        let mut results: Vec<(&str, Vec<LatencyStats>)> = Vec::new();
+        for (name, bench) in [
+            ("centralized", bench_centralized as fn(usize, u64) -> Vec<u64>),
+            ("decentralized", bench_decentralized as fn(usize, u64) -> Vec<u64>),
+        ] {
+            let mut stats = Vec::new();
+            for &workers in &worker_counts {
+                let s = summarize(workers, bench(workers, steps));
+                println!(
+                    "{:>15} {:>8} {:>10} {:>10} {:>10}",
+                    name, s.workers, s.p50_ns, s.p99_ns, s.mean_ns
+                );
+                stats.push(s);
+            }
+            results.push((name, stats));
+        }
+        write_json(steps, &results);
     }
 }

@@ -27,7 +27,9 @@
 //! * [`dataflow`] — graph construction, streams, channels, the token API of
 //!   the paper's Figure 3, the operator builder of Figure 5.
 //! * [`worker`] — the multi-threaded runtime: one graph instance per
-//!   worker, atomic progress batches through a sequenced log.
+//!   worker, atomic progress batches broadcast worker-to-worker over
+//!   per-peer FIFO mailboxes (no central sequencer), park/unpark wakeups
+//!   while idle.
 //! * [`operators`] — stock operators (map/filter/exchange, rolling word
 //!   count, tumbling windows, no-op chains).
 //! * [`coordination`] — the three mechanisms above.
@@ -39,6 +41,18 @@
 //!   Python never executes on the request path.
 //! * [`testing`] — a small seeded property-testing harness (this build
 //!   environment is offline; proptest is unavailable).
+//!
+//! ## Cargo features
+//!
+//! The default build has **zero dependencies**, so it resolves and builds
+//! fully offline. Two opt-in features gate code that needs external
+//! crates (add the crate to `rust/Cargo.toml` when enabling):
+//!
+//! * `affinity` — worker core pinning via `libc::sched_setaffinity`
+//!   (requires `libc`); the default build makes pinning a no-op.
+//! * `xla` — the PJRT/XLA data plane in [`runtime`] (requires the `xla`
+//!   crate, i.e. xla-rs). Without it the runtime API still compiles, but
+//!   constructors return a descriptive error.
 //!
 //! ## Quickstart
 //!

@@ -193,9 +193,15 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
     /// Applies a batch of count updates atomically and returns the frontier
     /// changes (`-1` for elements leaving the frontier, `+1` for entering).
     ///
-    /// Counts may be transiently negative *within* a batch; accumulated
-    /// counts after a batch must be non-negative (checked in debug builds),
-    /// which the sequenced progress log guarantees for tracker updates.
+    /// Accumulated counts may be *negative* between batches, not just
+    /// within one: under the decentralized progress fabric an observer can
+    /// apply a consumer's `-1` (heard on one peer's FIFO mailbox) before
+    /// the matching producer's `+1` (still queued on another's). Negative
+    /// entries are retained until canceled but never contribute to the
+    /// frontier; conservatism is preserved because the producer's
+    /// authorizing pointstamp — ordered *before* the produce count in the
+    /// producer's own update stream — is still counted here (see
+    /// [`super::exchange`]).
     pub fn update_iter<I>(&mut self, updates: I) -> std::vec::Drain<'_, (T, i64)>
     where
         I: IntoIterator<Item = (T, i64)>,
@@ -216,10 +222,6 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
             if new == 0 {
                 self.counts.remove(&t);
             }
-            debug_assert!(
-                new >= 0 || old >= 0,
-                "pointstamp count went negative: {t:?} {old} -> {new}"
-            );
             if old <= 0 && new > 0 {
                 // Element appeared: frontier changes unless `t` is strictly
                 // dominated by an existing frontier element.
@@ -244,7 +246,11 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
         let mut new_frontier = std::mem::take(&mut self.scratch);
         new_frontier.clear();
         for (t, &count) in self.counts.iter() {
-            debug_assert!(count > 0, "zero-count entry survived in counts");
+            // Negative entries (consume observed before its produce) hold
+            // nothing: only positive counts define the frontier.
+            if count <= 0 {
+                continue;
+            }
             if !new_frontier.iter().any(|f: &T| f.less_equal(t)) {
                 new_frontier.retain(|f| !t.less_equal(f));
                 new_frontier.push(t.clone());
@@ -385,6 +391,26 @@ mod tests {
         let changes: Vec<_> = ma.update_iter(vec![(7u64, -1), (7, 1)]).collect();
         assert!(changes.is_empty());
         assert_eq!(ma.frontier(), &[7]);
+    }
+
+    #[test]
+    fn mutable_antichain_negative_across_batches() {
+        // Decentralized exchange: a consume can be observed before the
+        // matching produce. The negative entry must not affect the
+        // frontier, and the late produce must cancel it exactly.
+        let mut ma = MutableAntichain::new();
+        ma.update_iter(vec![(2u64, 1)]); // the authorizing pointstamp
+        let changes: Vec<_> = ma.update_iter(vec![(5u64, -1)]).collect();
+        assert!(changes.is_empty(), "negative entry must not move the frontier");
+        assert_eq!(ma.frontier(), &[2]);
+        // The produce arrives: nets to zero, frontier unchanged.
+        let changes: Vec<_> = ma.update_iter(vec![(5u64, 1)]).collect();
+        assert!(changes.is_empty());
+        assert_eq!(ma.frontier(), &[2]);
+        // Dropping the authorizing pointstamp closes the frontier.
+        ma.update_iter(vec![(2u64, -1)]);
+        assert!(ma.is_empty());
+        assert_eq!(ma.distinct(), 0, "canceled entries must not leak");
     }
 
     #[test]

@@ -59,6 +59,28 @@ impl<T: Ord + Clone + Debug> ChangeBatch<T> {
         self.updates.drain(..)
     }
 
+    /// Compacts and takes the accumulated net updates as an owned `Vec` in
+    /// one move (no per-element copy).
+    ///
+    /// This is the broadcast hot path of the decentralized progress plane:
+    /// the returned `Vec` becomes the shared atomic batch handed to every
+    /// peer mailbox, so coalescing happens exactly once, at send time.
+    /// Returns an empty `Vec` when the updates net to nothing.
+    pub fn take_coalesced(&mut self) -> Vec<(T, i64)> {
+        self.compact();
+        self.clean = 0;
+        std::mem::take(&mut self.updates)
+    }
+
+    /// Number of updates currently buffered, *without* compacting — an
+    /// upper bound on the net updates. `0` means definitely empty, which
+    /// makes this a cheap emptiness hint for per-step flush policies
+    /// (unlike [`ChangeBatch::is_empty`], which sorts).
+    #[inline]
+    pub fn raw_len(&self) -> usize {
+        self.updates.len()
+    }
+
     /// Drains the batch into `other`.
     pub fn drain_into(&mut self, other: &mut ChangeBatch<T>) {
         if !self.updates.is_empty() {
@@ -147,6 +169,25 @@ mod tests {
         let mut b = ChangeBatch::new();
         b.update(1u64, 0);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn take_coalesced_moves_net_updates() {
+        let mut b = ChangeBatch::new();
+        b.update(3u64, 1);
+        b.update(3u64, -1);
+        b.update(7u64, 2);
+        assert!(b.raw_len() >= 1);
+        let taken = b.take_coalesced();
+        assert_eq!(taken, vec![(7, 2)]);
+        assert_eq!(b.raw_len(), 0);
+        // The batch is reusable after the take.
+        b.update(1u64, 1);
+        assert_eq!(b.take_coalesced(), vec![(1, 1)]);
+        // A fully canceling batch takes to empty.
+        b.update(5u64, 4);
+        b.update(5u64, -4);
+        assert!(b.take_coalesced().is_empty());
     }
 
     #[test]

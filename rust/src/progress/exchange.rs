@@ -1,27 +1,194 @@
-//! The sequenced progress log: how workers share pointstamp updates.
+//! The decentralized progress fabric: how workers share pointstamp updates.
 //!
-//! Following Naiad's progress protocol (paper §4: "these collected changes
-//! are broadcast among unsynchronized workers. Any subset of atomic updates
-//! forms a conservative view of the coordination state"), each worker
-//! appends *atomic batches* of `((Location, T), i64)` updates to a shared,
-//! totally ordered log, and every worker applies the log in order.
+//! Following the paper's §4 protocol ("these collected changes are broadcast
+//! among unsynchronized workers. Any subset of atomic updates forms a
+//! conservative view of the coordination state"), each worker owns a
+//! [`Progcaster`] that coalesces its atomic batches of
+//! `((Location, T), i64)` updates in a [`ChangeBatch`] and broadcasts them
+//! over per-peer SPSC FIFO mailboxes allocated through the worker fabric
+//! ([`crate::worker::allocator::Fabric`]). There is **no global sequencer**:
+//! workers apply each other's streams in whatever interleaving delivery
+//! produces.
 //!
-//! The total order makes prefix-safety immediate: a `-1` (message consumed,
-//! token dropped) can only be appended after the action it reflects, which
-//! happens after the corresponding `+1` batch was appended (workers append
-//! their produce counts *before* handing messages to the data fabric), so
-//! every prefix of the log over-approximates the outstanding pointstamps.
+//! # Why prefix safety survives without a total order
 //!
-//! The log self-compacts: batches ack'd by every worker are dropped.
+//! The conservatism invariant — no frontier ever advances past an
+//! outstanding pointstamp — needs only two ordering guarantees, both local:
+//!
+//! 1. **Per-sender FIFO.** A worker pushes the *same* batch sequence into
+//!    every peer mailbox, and mailboxes preserve order, so every observer
+//!    sees a prefix of each sender's atomic-action history. Batches are
+//!    drained from the shared bookkeeping after each operator action, so a
+//!    sender's stream reflects its real action order: the `+1` produce
+//!    count for a message appears at or before any later drop/downgrade of
+//!    the token that authorized producing it.
+//! 2. **Produce-before-data-release.** A worker flushes its progress batch
+//!    into the peer mailboxes *before* releasing staged data messages to
+//!    the data fabric (`worker::Worker` flush path). A consumer can
+//!    therefore only record `-1` for a message whose `+1` already sits in
+//!    every observer's mailbox.
+//!
+//! Together these cover every partial view. If an observer has applied the
+//! producer's `+1`, the in-flight message is counted directly. If it has
+//! not, then — by per-sender FIFO — it also has not applied any later
+//! retirement of the authorizing token, so an earlier-or-equal pointstamp
+//! from the same sender still holds the frontier. A consumer's `-1`
+//! arriving "early" on another mailbox merely drives that location's count
+//! transiently negative ([`MutableAntichain`](super::antichain) retains
+//! negative entries without letting them shape the frontier). Any subset of
+//! delivered batches is therefore a conservative view, exactly as the paper
+//! states — the global total order the previous implementation imposed was
+//! sufficient but never necessary, and it serialized every worker through
+//! one mutex.
+//!
+//! The centralized, totally ordered [`ProgressLog`] is retained below as
+//! the measured baseline for `benches/micro_progress.rs` (centralized vs
+//! decentralized per-step latency); the runtime itself no longer uses it.
 
+use super::change_batch::ChangeBatch;
 use super::location::Location;
 use super::timestamp::Timestamp;
+use crate::worker::allocator::Fabric;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 /// One atomic batch of pointstamp updates from one worker.
 pub type ProgressBatch<T> = Vec<((Location, T), i64)>;
+
+/// The reserved fabric channel id of the progress plane. Data channels are
+/// allocated from 0 upward, so the top id can never collide.
+pub const PROGRESS_CHANNEL: usize = usize::MAX;
+
+/// One worker's endpoint of the decentralized progress plane.
+///
+/// Accumulates the worker's pointstamp updates in a [`ChangeBatch`] (so
+/// produce/consume churn cancels locally before ever crossing a thread
+/// boundary) and, on [`Progcaster::send`], broadcasts the coalesced batch —
+/// one shared `Arc`, no per-peer copy — into every peer's FIFO mailbox. The
+/// worker's own batch loops back through an internal queue so the owning
+/// tracker applies exactly the same stream as every peer.
+pub struct Progcaster<T: Timestamp> {
+    index: usize,
+    peers: usize,
+    /// Coalesces this worker's updates between flushes.
+    pending: ChangeBatch<(Location, T)>,
+    /// Per-peer mailbox send halves (`None` at `index`).
+    senders: Vec<Option<Sender<Arc<ProgressBatch<T>>>>>,
+    /// Per-peer mailbox receive halves (`None` at `index`).
+    receivers: Vec<Option<Receiver<Arc<ProgressBatch<T>>>>>,
+    /// Loopback of this worker's own batches, in send order.
+    own: VecDeque<Arc<ProgressBatch<T>>>,
+}
+
+impl<T: Timestamp> Progcaster<T> {
+    /// Claims worker `index`'s progress mailboxes from `fabric`.
+    ///
+    /// Every worker sharing the fabric must construct its `Progcaster`
+    /// exactly once; the SPSC pairs match up by `(PROGRESS_CHANNEL, from,
+    /// to)` key, in any claim order.
+    pub fn new(index: usize, peers: usize, fabric: &Fabric) -> Self {
+        assert!(index < peers, "worker index {index} out of range for {peers} peers");
+        Progcaster {
+            index,
+            peers,
+            pending: ChangeBatch::new(),
+            senders: fabric.broadcast_senders(PROGRESS_CHANNEL, index),
+            receivers: fabric.broadcast_receivers(PROGRESS_CHANNEL, index),
+            own: VecDeque::new(),
+        }
+    }
+
+    /// The owning worker's index.
+    #[inline]
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Total number of workers on this progress plane.
+    #[inline]
+    pub fn peers(&self) -> usize {
+        self.peers
+    }
+
+    /// Records one pointstamp update into the pending batch.
+    #[inline]
+    pub fn update(&mut self, location: Location, time: T, diff: i64) {
+        self.pending.update((location, time), diff);
+    }
+
+    /// Records many pointstamp updates into the pending batch.
+    pub fn extend<I: IntoIterator<Item = ((Location, T), i64)>>(&mut self, updates: I) {
+        self.pending.extend(updates);
+    }
+
+    /// Cheap hint: true iff updates are buffered (they may still net to
+    /// zero at [`Progcaster::send`]; `false` means definitely nothing).
+    #[inline]
+    pub fn has_updates(&self) -> bool {
+        self.pending.raw_len() > 0
+    }
+
+    /// Upper bound on the pending updates (flush-policy "big batch" check).
+    #[inline]
+    pub fn pending_len(&self) -> usize {
+        self.pending.raw_len()
+    }
+
+    /// Coalesces and broadcasts the pending batch to every peer mailbox
+    /// (and the loopback queue), returning the batch that went out — or
+    /// `None` if the updates netted to nothing.
+    ///
+    /// The caller (the worker flush path) must invoke this *before*
+    /// releasing any staged data messages covered by the batch's produce
+    /// counts; that ordering is what keeps every partial view conservative.
+    pub fn send(&mut self) -> Option<Arc<ProgressBatch<T>>> {
+        let batch = self.pending.take_coalesced();
+        if batch.is_empty() {
+            return None;
+        }
+        let batch = Arc::new(batch);
+        for sender in self.senders.iter().flatten() {
+            // A disconnected peer has shut down; it no longer needs
+            // progress (its tracker is gone), so dropping is benign.
+            let _ = sender.send(batch.clone());
+        }
+        self.own.push_back(batch.clone());
+        Some(batch)
+    }
+
+    /// Pops the next undelivered batch from one sender's stream (`from ==
+    /// index` pops the loopback queue). Exposes per-sender delivery at the
+    /// finest grain — the seeded-interleaving tests use this to exercise
+    /// adversarial delivery schedules.
+    pub fn recv_one(&mut self, from: usize) -> Option<Arc<ProgressBatch<T>>> {
+        if from == self.index {
+            return self.own.pop_front();
+        }
+        self.receivers[from].as_ref().and_then(|rx| rx.try_recv().ok())
+    }
+
+    /// Drains every undelivered batch (loopback first, then each peer
+    /// stream in index order, each in FIFO order) into `into`. Returns
+    /// true iff anything arrived.
+    pub fn recv_into(&mut self, into: &mut Vec<Arc<ProgressBatch<T>>>) -> bool {
+        let start = into.len();
+        while let Some(batch) = self.own.pop_front() {
+            into.push(batch);
+        }
+        for receiver in self.receivers.iter().flatten() {
+            while let Ok(batch) = receiver.try_recv() {
+                into.push(batch);
+            }
+        }
+        into.len() > start
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The centralized baseline (bench-only).
+// ---------------------------------------------------------------------------
 
 struct LogInner<T> {
     /// Batches not yet read by every worker; `base` is the global sequence
@@ -33,10 +200,16 @@ struct LogInner<T> {
 }
 
 /// A shared, totally ordered log of atomic progress batches.
+///
+/// This was the engine's progress plane before the decentralized
+/// [`Progcaster`] replaced it: every worker's batches funneled through one
+/// `Mutex` to obtain a global sequence — a serialization point the
+/// protocol never required. It is kept as the measured baseline for the
+/// `micro_progress` benchmark's centralized-vs-decentralized comparison.
 pub struct ProgressLog<T> {
     inner: Mutex<LogInner<T>>,
     /// Total batches ever appended — lets readers skip the lock entirely
-    /// when they are already caught up (the hot-loop fast path).
+    /// when they are already caught up.
     tail: AtomicUsize,
 }
 
@@ -70,9 +243,7 @@ impl<T: Timestamp> ProgressLog<T> {
     }
 
     /// Appends a batch and reads everything new for `worker` in one
-    /// critical section (the common per-step call). Returns the worker's
-    /// new cursor; a caller holding that cursor can skip the next call
-    /// entirely while `tail()` has not moved and it has nothing to append.
+    /// critical section. Returns the worker's new cursor.
     pub fn append_and_read(
         &self,
         worker: usize,
@@ -120,6 +291,121 @@ mod tests {
     fn update(n: usize, t: u64, d: i64) -> ((Location, u64), i64) {
         ((Location::source(n, 0), t), d)
     }
+
+    // -- Progcaster (the live path) --
+
+    #[test]
+    fn all_peers_receive_identical_batch_sequences() {
+        let fabric = Fabric::new(3);
+        let mut casters: Vec<Progcaster<u64>> =
+            (0..3).map(|w| Progcaster::new(w, 3, &fabric)).collect();
+
+        casters[0].update(Location::source(0, 0), 1, 1);
+        casters[0].send().unwrap();
+        casters[0].update(Location::source(0, 0), 2, 1);
+        casters[0].update(Location::source(0, 0), 1, -1);
+        casters[0].send().unwrap();
+
+        // Workers 1 and 2 (and 0's loopback) see the same two batches, in
+        // the same order.
+        let mut views = Vec::new();
+        for caster in casters.iter_mut() {
+            let mut got = Vec::new();
+            caster.recv_into(&mut got);
+            assert_eq!(got.len(), 2);
+            views.push(got.iter().map(|b| (**b).clone()).collect::<Vec<_>>());
+        }
+        assert_eq!(views[0], views[1]);
+        assert_eq!(views[1], views[2]);
+        assert_eq!(views[0][0], vec![update(0, 1, 1)]);
+    }
+
+    #[test]
+    fn coalescing_cancels_churn_before_broadcast() {
+        let fabric = Fabric::new(2);
+        let mut a = Progcaster::<u64>::new(0, 2, &fabric);
+        let mut b = Progcaster::<u64>::new(1, 2, &fabric);
+        // A retain immediately followed by a drop nets to zero: nothing
+        // must cross the thread boundary.
+        a.update(Location::source(3, 0), 7, 1);
+        a.update(Location::source(3, 0), 7, -1);
+        assert!(a.has_updates(), "raw hint is conservative");
+        assert!(a.send().is_none(), "net-zero batch must not be sent");
+        let mut got = Vec::new();
+        assert!(!b.recv_into(&mut got));
+        assert!(!a.recv_into(&mut got), "no loopback for net-zero batches");
+    }
+
+    #[test]
+    fn per_sender_fifo_with_partial_draining() {
+        let fabric = Fabric::new(2);
+        let mut a = Progcaster::<u64>::new(0, 2, &fabric);
+        let mut b = Progcaster::<u64>::new(1, 2, &fabric);
+        for t in 0..5u64 {
+            a.update(Location::source(0, 0), t, 1);
+            a.send().unwrap();
+        }
+        // Partial draining via recv_one preserves FIFO order.
+        for t in 0..5u64 {
+            let batch = b.recv_one(0).expect("batch pending");
+            assert_eq!(*batch, vec![update(0, t, 1)]);
+        }
+        assert!(b.recv_one(0).is_none());
+        assert!(b.recv_one(1).is_none(), "own loopback empty");
+    }
+
+    #[test]
+    fn own_batches_loop_back_exactly_once() {
+        let fabric = Fabric::new(1);
+        let mut solo = Progcaster::<u64>::new(0, 1, &fabric);
+        solo.update(Location::source(0, 0), 5, 1);
+        solo.send().unwrap();
+        let mut got = Vec::new();
+        assert!(solo.recv_into(&mut got));
+        assert_eq!(got.len(), 1);
+        got.clear();
+        assert!(!solo.recv_into(&mut got));
+    }
+
+    #[test]
+    fn concurrent_broadcast_preserves_per_sender_order() {
+        let fabric = Fabric::new(3);
+        let mut handles = Vec::new();
+        for w in 0..3usize {
+            let fabric = fabric.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut caster = Progcaster::<u64>::new(w, 3, &fabric);
+                for t in 0..100u64 {
+                    caster.update(Location::source(w, 0), t, 1);
+                    caster.send().unwrap();
+                }
+                // Drain until every peer's 100 batches (plus our own 100)
+                // have arrived, checking per-sender monotonicity.
+                let mut next = [0u64; 3];
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+                let mut buf = Vec::new();
+                while next.iter().sum::<u64>() < 300 {
+                    assert!(std::time::Instant::now() < deadline, "delivery stalled");
+                    buf.clear();
+                    caster.recv_into(&mut buf);
+                    for batch in &buf {
+                        let ((loc, t), diff) = batch[0];
+                        assert_eq!(diff, 1);
+                        assert_eq!(t, next[loc.node], "per-sender FIFO violated");
+                        next[loc.node] += 1;
+                    }
+                    if buf.is_empty() {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for handle in handles {
+            handle.join().unwrap();
+        }
+    }
+
+    // -- ProgressLog (the retained centralized baseline) --
 
     #[test]
     fn all_workers_see_all_batches_in_order() {

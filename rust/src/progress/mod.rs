@@ -14,8 +14,9 @@
 //! * [`reachability`] — path-summary closure over the dataflow graph;
 //! * [`tracker`] — the per-worker tracker that folds pointstamp updates into
 //!   per-port frontier antichains by projection through path summaries;
-//! * [`exchange`] — the sequenced progress log that broadcasts atomic update
-//!   batches between workers (Naiad's protocol: any prefix of the log is a
+//! * [`exchange`] — the decentralized progress fabric: per-worker
+//!   `Progcaster`s broadcast atomic update batches over per-peer FIFO
+//!   mailboxes, no global sequencer (§4: any subset of atomic updates is a
 //!   conservative view of the coordination state).
 
 pub mod antichain;

@@ -1,7 +1,9 @@
 //! The per-worker progress tracker.
 //!
-//! The tracker folds pointstamp count updates (from the sequenced progress
-//! log) into per-input-port frontier antichains. It is *projection based*:
+//! The tracker folds pointstamp count updates — the atomic batches arriving
+//! on the worker's per-sender progress mailboxes (see
+//! [`super::exchange::Progcaster`]) — into per-input-port frontier
+//! antichains. It is *projection based*:
 //! reachability (computed once, [`super::reachability`]) gives the minimal
 //! path summaries from every location to every target port; each location
 //! keeps a [`MutableAntichain`] of its pointstamp counts, and when a
@@ -117,13 +119,27 @@ impl<T: Timestamp> Tracker<T> {
             .clone()
     }
 
+    /// Applies one sender's atomic batch of pointstamp updates.
+    ///
+    /// The worker calls this once per batch drained from its progress
+    /// mailboxes, preserving each sender's FIFO order; batches from
+    /// different senders may be applied in any interleaving (any subset of
+    /// atomic updates is a conservative view — §4). Convenience wrapper
+    /// over [`Tracker::apply`] for the shared-`Arc` batches the mailboxes
+    /// carry.
+    pub fn apply_batch(&mut self, batch: &[((Location, T), i64)]) {
+        self.apply(batch.iter().cloned());
+    }
+
     /// Applies a batch of pointstamp updates atomically.
     ///
     /// All count changes for a location are applied in one step (so paired
     /// `-old/+new` downgrades can never transiently release a frontier), and
     /// all projected diffs for a port are applied in one step (so paired
     /// `consume/retain` actions can never transiently advance a downstream
-    /// frontier).
+    /// frontier). Counts may accumulate negative between batches (a
+    /// consume heard before its produce, legitimate under decentralized
+    /// exchange); see [`super::antichain::MutableAntichain::update_iter`].
     pub fn apply<I>(&mut self, updates: I)
     where
         I: IntoIterator<Item = ((Location, T), i64)>,

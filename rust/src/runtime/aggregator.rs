@@ -11,8 +11,8 @@
 //! the dataflow an XLA data plane behind `--agg xla`.
 
 use super::pjrt::PjrtRuntime;
+use super::{Result, RuntimeError};
 use crate::operators::window::WindowBackend;
-use anyhow::Result;
 use std::collections::BTreeMap;
 
 /// Per-window aggregation results (dense, keyed by caller-provided key).
@@ -48,7 +48,9 @@ impl WindowAggregator {
     pub fn new(artifacts_dir: &str, name: &str) -> Result<Self> {
         let mut runtime = PjrtRuntime::new(artifacts_dir)?;
         let meta = runtime.meta(name)?.clone();
-        anyhow::ensure!(meta.outputs == 4, "{name} is not a full-agg artifact");
+        if meta.outputs != 4 {
+            return Err(RuntimeError::msg(format!("{name} is not a full-agg artifact")));
+        }
         runtime.load(name)?; // compile eagerly, off the hot path
         Ok(WindowAggregator {
             runtime,

@@ -6,9 +6,45 @@
 //! loads them with `HloModuleProto::from_text_file`, compiles each once on
 //! the PJRT CPU client, and exposes typed entry points the dataflow
 //! operators call from the hot path.
+//!
+//! The PJRT client itself lives behind the `xla` cargo feature (the `xla`
+//! crate — xla-rs — is not part of the offline dependency set). Without
+//! the feature the whole API surface still compiles — manifest parsing and
+//! metadata work — but constructing a [`PjrtRuntime`] returns a
+//! descriptive [`RuntimeError`], and callers fall back to the native Rust
+//! backends.
 
 pub mod aggregator;
 pub mod pjrt;
 
 pub use aggregator::{WindowAggregator, XlaWindowBackend};
 pub use pjrt::{ArtifactMeta, PjrtRuntime};
+
+/// Error type of the PJRT data plane (a message; PJRT failure modes are
+/// not recoverable distinctions for callers).
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Wraps a message.
+    pub fn msg(message: impl Into<String>) -> Self {
+        RuntimeError(message.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::num::ParseIntError> for RuntimeError {
+    fn from(e: std::num::ParseIntError) -> Self {
+        RuntimeError(format!("invalid integer: {e}"))
+    }
+}
+
+/// Result alias for the PJRT data plane.
+pub type Result<T> = std::result::Result<T, RuntimeError>;

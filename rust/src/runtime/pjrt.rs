@@ -1,6 +1,10 @@
 //! PJRT client wrapper: artifact manifest, lazy compilation, execution.
+//!
+//! Manifest handling is dependency-free and always available; everything
+//! touching the PJRT client is gated behind the `xla` cargo feature (see
+//! [`super`] module docs).
 
-use anyhow::{anyhow, Context, Result};
+use super::{Result, RuntimeError};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -24,28 +28,32 @@ impl ArtifactMeta {
     /// Parses a manifest line: `name n=.. w=.. outputs=.. file=..`.
     pub fn parse(line: &str) -> Result<ArtifactMeta> {
         let mut parts = line.split_whitespace();
-        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?.to_string();
+        let name = parts
+            .next()
+            .ok_or_else(|| RuntimeError::msg("empty manifest line"))?
+            .to_string();
         let mut n = None;
         let mut w = None;
         let mut outputs = None;
         let mut file = None;
         for part in parts {
-            let (key, value) =
-                part.split_once('=').ok_or_else(|| anyhow!("bad manifest field: {part}"))?;
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| RuntimeError::msg(format!("bad manifest field: {part}")))?;
             match key {
                 "n" => n = Some(value.parse()?),
                 "w" => w = Some(value.parse()?),
                 "outputs" => outputs = Some(value.parse()?),
                 "file" => file = Some(value.to_string()),
-                other => return Err(anyhow!("unknown manifest key: {other}")),
+                other => return Err(RuntimeError::msg(format!("unknown manifest key: {other}"))),
             }
         }
         Ok(ArtifactMeta {
             name,
-            n: n.ok_or_else(|| anyhow!("manifest line missing n"))?,
-            w: w.ok_or_else(|| anyhow!("manifest line missing w"))?,
-            outputs: outputs.ok_or_else(|| anyhow!("manifest line missing outputs"))?,
-            file: file.ok_or_else(|| anyhow!("manifest line missing file"))?,
+            n: n.ok_or_else(|| RuntimeError::msg("manifest line missing n"))?,
+            w: w.ok_or_else(|| RuntimeError::msg("manifest line missing w"))?,
+            outputs: outputs.ok_or_else(|| RuntimeError::msg("manifest line missing outputs"))?,
+            file: file.ok_or_else(|| RuntimeError::msg("manifest line missing file"))?,
         })
     }
 }
@@ -55,37 +63,54 @@ impl ArtifactMeta {
 /// One runtime per worker thread (PJRT handles are not shared across
 /// workers; compilation is once per worker and off the hot path).
 pub struct PjrtRuntime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: HashMap<String, ArtifactMeta>,
+    #[cfg(feature = "xla")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl PjrtRuntime {
     /// Opens the artifacts directory and reads its manifest.
+    ///
+    /// Without the `xla` feature this fails with a descriptive error after
+    /// validating the manifest (so misconfiguration surfaces first).
     pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "reading {} — run `make artifacts` first",
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError::msg(format!(
+                "reading {}: {e} — run `make artifacts` first",
                 manifest_path.display()
-            )
+            ))
         })?;
         let mut manifest = HashMap::new();
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             let meta = ArtifactMeta::parse(line)?;
             manifest.insert(meta.name.clone(), meta);
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(PjrtRuntime { client, dir, manifest, executables: HashMap::new() })
+        #[cfg(feature = "xla")]
+        {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::msg(format!("PJRT CPU client: {e:?}")))?;
+            Ok(PjrtRuntime { client, dir, manifest, executables: HashMap::new() })
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = (dir, manifest);
+            Err(RuntimeError::msg(
+                "XLA data plane not compiled in: rebuild with `--features xla` \
+                 (requires the xla crate; the default build is dependency-free)",
+            ))
+        }
     }
 
     /// Artifact metadata by name.
     pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
         self.manifest
             .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+            .ok_or_else(|| RuntimeError::msg(format!("artifact {name} not in manifest")))
     }
 
     /// Names of all artifacts in the manifest.
@@ -95,20 +120,28 @@ impl PjrtRuntime {
         names
     }
 
+    /// The artifacts directory this runtime reads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(feature = "xla")]
+impl PjrtRuntime {
     /// Compiles (once) and returns the executable for `name`.
     pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.executables.contains_key(name) {
             let meta = self.meta(name)?.clone();
             let path = self.dir.join(&meta.file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| RuntimeError::msg("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            .map_err(|e| RuntimeError::msg(format!("parsing {}: {e:?}", path.display())))?;
             let computation = xla::XlaComputation::from_proto(&proto);
             let executable = self
                 .client
                 .compile(&computation)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                .map_err(|e| RuntimeError::msg(format!("compiling {name}: {e:?}")))?;
             self.executables.insert(name.to_string(), executable);
         }
         Ok(&self.executables[name])
@@ -123,22 +156,55 @@ impl PjrtRuntime {
         ids: &[i32],
     ) -> Result<Vec<Vec<f32>>> {
         let meta = self.meta(name)?.clone();
-        anyhow::ensure!(values.len() == meta.n, "values len {} != n {}", values.len(), meta.n);
-        anyhow::ensure!(ids.len() == meta.n, "ids len {} != n {}", ids.len(), meta.n);
+        if values.len() != meta.n {
+            return Err(RuntimeError::msg(format!(
+                "values len {} != n {}",
+                values.len(),
+                meta.n
+            )));
+        }
+        if ids.len() != meta.n {
+            return Err(RuntimeError::msg(format!("ids len {} != n {}", ids.len(), meta.n)));
+        }
         let executable = self.load(name)?;
         let values_lit = xla::Literal::vec1(values);
         let ids_lit = xla::Literal::vec1(ids);
         let result = executable
             .execute::<xla::Literal>(&[values_lit, ids_lit])
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .map_err(|e| RuntimeError::msg(format!("executing {name}: {e:?}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
-        anyhow::ensure!(parts.len() == meta.outputs, "expected {} outputs", meta.outputs);
+            .map_err(|e| RuntimeError::msg(format!("fetching {name} result: {e:?}")))?;
+        let parts =
+            result.to_tuple().map_err(|e| RuntimeError::msg(format!("untupling: {e:?}")))?;
+        if parts.len() != meta.outputs {
+            return Err(RuntimeError::msg(format!("expected {} outputs", meta.outputs)));
+        }
         parts
             .iter()
-            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .map(|lit| {
+                lit.to_vec::<f32>().map_err(|e| RuntimeError::msg(format!("to_vec: {e:?}")))
+            })
             .collect()
+    }
+}
+
+/// Stubs keeping the API surface identical without the `xla` feature.
+/// Unreachable in practice: [`PjrtRuntime::new`] already fails without it.
+#[cfg(not(feature = "xla"))]
+impl PjrtRuntime {
+    /// Compiles (once) the executable for `name` (stub: always errors).
+    pub fn load(&mut self, _name: &str) -> Result<()> {
+        Err(RuntimeError::msg("XLA data plane not compiled in (enable the `xla` feature)"))
+    }
+
+    /// Executes `name` (stub: always errors).
+    pub fn execute_agg(
+        &mut self,
+        _name: &str,
+        _values: &[f32],
+        _ids: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        Err(RuntimeError::msg("XLA data plane not compiled in (enable the `xla` feature)"))
     }
 }
 
@@ -162,6 +228,15 @@ mod tests {
         assert!(ArtifactMeta::parse("name n=x w=1 outputs=1 file=f").is_err());
         assert!(ArtifactMeta::parse("name w=1 outputs=1 file=f").is_err());
         assert!(ArtifactMeta::parse("").is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        // Point at a real manifest-free dir: the error must be about the
+        // manifest, not a panic; with a manifest it must name the feature.
+        let err = PjrtRuntime::new("/nonexistent-artifacts-dir").unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err}");
     }
 
     // PJRT-dependent tests live in rust/tests/runtime_roundtrip.rs (they

@@ -1,0 +1,347 @@
+//! Seeded-interleaving tests of the decentralized progress plane's prefix
+//! safety.
+//!
+//! The decentralized protocol ([`crate::progress::exchange`]) relies on two
+//! local orderings only — per-sender FIFO and produce-before-data-release —
+//! so its load-bearing claim is: *any* interleaving of per-peer mailbox
+//! deliveries yields a conservative view. These tests simulate a
+//! multi-worker run over real [`Progcaster`]s on one thread, where a seeded
+//! scheduler adversarially delays and reorders delivery *between* senders
+//! (never within one sender's FIFO stream, which the mailboxes themselves
+//! guarantee), and after every single delivery checks each observer's
+//! frontiers against an emission-order ground truth:
+//!
+//! * **conservatism** — no observer frontier ever advances past the ground
+//!   truth's outstanding pointstamps (the frontier never passes work that
+//!   is still in flight);
+//! * **emission-order non-negativity** — accumulating batches in the order
+//!   workers emit them never drives any pointstamp count negative (the
+//!   produce-before-release rule at work; observers may still see
+//!   transient negatives, which is exactly what the conservatism check
+//!   exercises);
+//! * **convergence** — once every mailbox drains, all observers agree with
+//!   the ground truth and the dataflow completes.
+
+use crate::progress::exchange::Progcaster;
+use crate::progress::location::Location;
+use crate::progress::reachability::{GraphTopology, NodeTopology};
+use crate::progress::tracker::Tracker;
+use crate::testing::{property, Rng};
+use crate::worker::allocator::Fabric;
+use std::collections::HashMap;
+
+/// input(0) -> op(1) -> probe(2): two token-bearing sources, two targets.
+fn linear_topology() -> GraphTopology<u64> {
+    let mut g = GraphTopology::default();
+    g.nodes.push(NodeTopology::identity("input", 0, 1));
+    g.nodes.push(NodeTopology::identity("op", 1, 1));
+    g.nodes.push(NodeTopology::identity("probe", 1, 0));
+    g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+    g.edges.push((Location::source(1, 0), Location::target(2, 0)));
+    g
+}
+
+/// The downstream target of each token-bearing source in the topology.
+fn downstream(source: Location) -> Location {
+    if source == Location::source(0, 0) {
+        Location::target(1, 0)
+    } else {
+        Location::target(2, 0)
+    }
+}
+
+/// One simulated worker: its progress endpoint, its live tokens, the
+/// messages it may consume (already covered by a flushed produce count),
+/// and the messages it produced but has not flushed cover for yet.
+struct SimWorker {
+    caster: Progcaster<u64>,
+    /// Live token time per source port (`None` once dropped).
+    tokens: Vec<(Location, Option<u64>)>,
+    /// Deliverable messages: (location, time).
+    inbox: Vec<(Location, u64)>,
+    /// Produced messages staged until the next flush: (dest, loc, time).
+    staged: Vec<(usize, Location, u64)>,
+}
+
+/// The full simulation state.
+struct Sim {
+    workers: Vec<SimWorker>,
+    /// Per-observer trackers, fed only by delivered batches.
+    observers: Vec<Tracker<u64>>,
+    /// Ground truth: every batch applied at emission, in emission order.
+    truth: Tracker<u64>,
+    /// Raw emission-order counts (the non-negativity witness).
+    truth_counts: HashMap<(Location, u64), i64>,
+}
+
+impl Sim {
+    fn new(peers: usize) -> Self {
+        let topology = linear_topology();
+        let fabric = Fabric::new(peers);
+        let workers = (0..peers)
+            .map(|w| SimWorker {
+                caster: Progcaster::new(w, peers, &fabric),
+                tokens: vec![
+                    (Location::source(0, 0), Some(0)),
+                    (Location::source(1, 0), Some(0)),
+                ],
+                inbox: Vec::new(),
+                staged: Vec::new(),
+            })
+            .collect();
+        let mut truth_counts = HashMap::new();
+        // The trackers pre-seed one token per source per worker; mirror
+        // that in the raw-count witness.
+        for source in [Location::source(0, 0), Location::source(1, 0)] {
+            truth_counts.insert((source, 0u64), peers as i64);
+        }
+        Sim {
+            workers,
+            observers: (0..peers).map(|_| Tracker::new(&topology, peers)).collect(),
+            truth: Tracker::new(&topology, peers),
+            truth_counts,
+        }
+    }
+
+    /// Downgrades one of `w`'s live tokens by a random positive amount.
+    fn downgrade(&mut self, w: usize, which: usize, delta: u64) {
+        let (loc, time) = self.workers[w].tokens[which];
+        if let Some(t) = time {
+            self.workers[w].caster.update(loc, t + delta, 1);
+            self.workers[w].caster.update(loc, t, -1);
+            self.workers[w].tokens[which].1 = Some(t + delta);
+        }
+    }
+
+    /// Drops one of `w`'s live tokens.
+    fn drop_token(&mut self, w: usize, which: usize) {
+        let (loc, time) = self.workers[w].tokens[which];
+        if let Some(t) = time {
+            self.workers[w].caster.update(loc, t, -1);
+            self.workers[w].tokens[which].1 = None;
+        }
+    }
+
+    /// Produces a message under one of `w`'s live tokens, staged for
+    /// `dest`. The produce count enters `w`'s pending batch NOW; the
+    /// message becomes consumable only after `w`'s next flush broadcasts
+    /// that count (produce-before-data-release).
+    fn produce(&mut self, w: usize, which: usize, dest: usize) {
+        let (loc, time) = self.workers[w].tokens[which];
+        if let Some(t) = time {
+            let target = downstream(loc);
+            self.workers[w].caster.update(target, t, 1);
+            self.workers[w].staged.push((dest, target, t));
+        }
+    }
+
+    /// Consumes one deliverable message from `w`'s inbox.
+    fn consume(&mut self, w: usize, slot: usize) {
+        let (loc, t) = self.workers[w].inbox.swap_remove(slot);
+        self.workers[w].caster.update(loc, t, -1);
+    }
+
+    /// Flushes `w`: broadcast the pending batch (feeding the ground truth
+    /// in emission order), then release staged messages to their inboxes.
+    fn flush(&mut self, w: usize) {
+        let batch = self.workers[w].caster.send();
+        if let Some(batch) = &batch {
+            for &((loc, t), diff) in batch.iter() {
+                let count = self.truth_counts.entry((loc, t)).or_insert(0);
+                *count += diff;
+                assert!(
+                    *count >= 0,
+                    "emission-order count went negative at {loc:?} t={t}: {count}"
+                );
+            }
+            self.truth.apply_batch(batch);
+        }
+        // Release staged messages unconditionally: a `None` batch with
+        // staged data means the produce counts canceled against consumes
+        // of *already-covered* messages at the same pointstamps (the
+        // standard ChangeBatch cancellation), so the cover is transitive —
+        // the consumed message's own produce count is already broadcast.
+        let staged = std::mem::take(&mut self.workers[w].staged);
+        for (dest, loc, t) in staged {
+            self.workers[dest].inbox.push((loc, t));
+        }
+    }
+
+    /// Delivers (at most) one batch from sender `s`'s stream to observer
+    /// `r`, then checks `r`'s frontiers stayed conservative.
+    fn deliver(&mut self, r: usize, s: usize) -> bool {
+        let Some(batch) = self.workers[r].caster.recv_one(s) else {
+            return false;
+        };
+        self.observers[r].apply_batch(&batch);
+        self.check_conservative(r);
+        true
+    }
+
+    /// No observer frontier may advance past the ground truth's (u64
+    /// timestamps: single-minimum frontiers; the truth minimum is the
+    /// earliest timestamp outstanding work could still reach the port at).
+    fn check_conservative(&self, r: usize) {
+        for (node, port) in [(1usize, 0usize), (2, 0)] {
+            let truth_handle = self.truth.frontier_handle(node, port);
+            let truth_frontier = truth_handle.borrow();
+            let Some(&truth_min) = truth_frontier.antichain.frontier().first() else {
+                // Ground truth complete at this port: observers may lag
+                // behind (conservative), never ahead.
+                continue;
+            };
+            let obs_handle = self.observers[r].frontier_handle(node, port);
+            let obs_frontier = obs_handle.borrow();
+            let obs_min = obs_frontier.antichain.frontier().first().copied();
+            assert!(
+                obs_min.is_some_and(|o| o <= truth_min),
+                "observer {r} frontier {obs_min:?} passed outstanding \
+                 pointstamp at t={truth_min} (node {node}, port {port})"
+            );
+        }
+    }
+
+    /// Drains every mailbox into every observer (checking conservatism at
+    /// each delivery), in a randomized round-robin.
+    fn deliver_all(&mut self, rng: &mut Rng) {
+        let peers = self.workers.len();
+        loop {
+            let mut any = false;
+            // Randomize the (receiver, sender) visit order each pass.
+            let mut pairs: Vec<(usize, usize)> = Vec::new();
+            for r in 0..peers {
+                for s in 0..peers {
+                    pairs.push((r, s));
+                }
+            }
+            for _ in 0..pairs.len() {
+                let i = rng.below(pairs.len() as u64) as usize;
+                let (r, s) = pairs.swap_remove(i);
+                while self.deliver(r, s) {
+                    any = true;
+                }
+            }
+            if !any {
+                return;
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_safety_under_random_interleavings() {
+    property("prefix_safety_under_random_interleavings", 25, |case, rng| {
+        let peers = 2 + (case % 3) as usize;
+        let mut sim = Sim::new(peers);
+        let rounds = rng.range(80, 250);
+
+        for _ in 0..rounds {
+            let w = rng.below(peers as u64) as usize;
+            match rng.below(10) {
+                // Downgrades dominate: they are the frontier-moving action.
+                0..=3 => {
+                    let which = rng.below(2) as usize;
+                    let delta = rng.range(1, 6);
+                    sim.downgrade(w, which, delta);
+                }
+                4..=5 => {
+                    let which = rng.below(2) as usize;
+                    let dest = rng.below(peers as u64) as usize;
+                    sim.produce(w, which, dest);
+                }
+                6 => {
+                    if !sim.workers[w].inbox.is_empty() {
+                        let slot = rng.below(sim.workers[w].inbox.len() as u64) as usize;
+                        sim.consume(w, slot);
+                    }
+                }
+                7 => sim.flush(w),
+                // Deliveries are rarer than actions, so mailboxes build up
+                // genuine backlogs and observers run far behind the truth.
+                _ => {
+                    let r = rng.below(peers as u64) as usize;
+                    let s = rng.below(peers as u64) as usize;
+                    sim.deliver(r, s);
+                }
+            }
+        }
+
+        // Wind down: drop all tokens, flush the drops and release staged
+        // messages, consume everything deliverable, flush the consumes.
+        for w in 0..peers {
+            sim.drop_token(w, 0);
+            sim.drop_token(w, 1);
+        }
+        for w in 0..peers {
+            sim.flush(w);
+        }
+        for w in 0..peers {
+            while !sim.workers[w].inbox.is_empty() {
+                let last = sim.workers[w].inbox.len() - 1;
+                sim.consume(w, last);
+            }
+        }
+        for w in 0..peers {
+            sim.flush(w);
+        }
+
+        // Every delivery schedule must converge to the (complete) truth.
+        sim.deliver_all(rng);
+        assert!(sim.truth.is_complete(), "ground truth must drain");
+        assert!(
+            sim.truth_counts.values().all(|&c| c == 0),
+            "emission-order counts must cancel exactly: {:?}",
+            sim.truth_counts.iter().filter(|(_, &c)| c != 0).collect::<Vec<_>>()
+        );
+        for (r, observer) in sim.observers.iter().enumerate() {
+            assert!(observer.is_complete(), "observer {r} must converge to completion");
+        }
+    });
+}
+
+#[test]
+fn consume_heard_before_produce_stays_conservative() {
+    // The sharpest corner of the protocol, pinned deterministically:
+    // worker 0 produces a message for worker 1 and flushes; worker 1
+    // consumes it and flushes; observer 2 hears worker 1's consume BEFORE
+    // worker 0's produce. Its count at the target goes transiently
+    // negative, but worker 0's un-delivered token keeps every frontier
+    // held — and delivery of worker 0's stream reconciles exactly.
+    let peers = 3;
+    let mut sim = Sim::new(peers);
+
+    sim.produce(0, 0, 1); // +1 at target(1,0) t=0, staged for worker 1
+    sim.flush(0); // broadcast the produce, release the message
+    sim.consume(1, 0); // worker 1 consumes it
+    sim.flush(1); // broadcast the consume
+
+    // Observer 2 hears ONLY worker 1's stream: the consume without the
+    // produce. Frontiers must hold at 0 (worker 0's tokens unseen).
+    assert!(sim.deliver(2, 1));
+    for (node, port) in [(1usize, 0usize), (2, 0)] {
+        let handle = sim.observers[2].frontier_handle(node, port);
+        let frontier = handle.borrow();
+        assert_eq!(
+            frontier.antichain.frontier(),
+            &[0],
+            "frontier must hold at the unseen authorizing tokens"
+        );
+    }
+
+    // Now deliver worker 0's stream: the negative entry cancels.
+    assert!(sim.deliver(2, 0));
+    assert!(!sim.deliver(2, 0));
+
+    // Wind down completely; observer 2 must converge.
+    for w in 0..peers {
+        sim.drop_token(w, 0);
+        sim.drop_token(w, 1);
+        sim.flush(w);
+    }
+    let mut rng = Rng::new(7);
+    sim.deliver_all(&mut rng);
+    for observer in &sim.observers {
+        assert!(observer.is_complete());
+    }
+    assert!(sim.truth.is_complete());
+}

@@ -4,6 +4,13 @@
 //! vendored crate set, so this module provides the two pieces the test
 //! suite needs: a deterministic PRNG ([`Rng`]) and a check runner
 //! ([`property`]) that reports the failing seed/case for reproduction.
+//!
+//! The `interleave` submodule (test builds only) uses the harness to drive
+//! the decentralized progress plane through adversarial per-peer delivery
+//! schedules, checking prefix safety.
+
+#[cfg(test)]
+mod interleave;
 
 /// xorshift64* PRNG: small, fast, deterministic across platforms.
 #[derive(Clone, Debug)]

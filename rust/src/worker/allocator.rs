@@ -10,11 +10,27 @@
 //! map and inserting into the other, and taking two locks in
 //! caller-dependent order deadlocks (worker A resolving a sender while
 //! worker B resolves the matching receiver).
+//!
+//! Beyond point-to-point channels the fabric provides:
+//!
+//! * a **typed broadcast family** ([`Fabric::broadcast_senders`] /
+//!   [`Fabric::broadcast_receivers`]): the per-peer SPSC mailbox fan used
+//!   by the decentralized progress plane
+//!   ([`crate::progress::exchange::Progcaster`]) — one FIFO channel per
+//!   ordered worker pair, `None` at the self index;
+//! * **park/unpark handles** ([`Fabric::register_worker_thread`] /
+//!   [`Fabric::unpark_peers`]): idle workers park their thread instead of
+//!   busy-spinning, and any worker that pushes progress batches or data
+//!   messages into the fabric wakes its peers. The `std::thread` unpark
+//!   token makes this race-free: an unpark delivered between a worker's
+//!   "nothing to do" check and its park causes the park to return
+//!   immediately, so no wakeup is lost.
 
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
+use std::thread::Thread;
 
 type Key = (usize, usize, usize); // (channel, from, to)
 
@@ -28,17 +44,77 @@ struct Pending {
 pub struct Fabric {
     peers: usize,
     pending: Mutex<Pending>,
+    /// Per-worker thread handles for park/unpark wakeups. Write-once per
+    /// slot (each worker registers from its own thread, before any flush
+    /// traffic), so wakeups read them lock-free — no shared lock on the
+    /// flush hot path.
+    threads: Vec<OnceLock<Thread>>,
 }
 
 impl Fabric {
     /// A fabric for `peers` workers.
     pub fn new(peers: usize) -> std::sync::Arc<Self> {
-        std::sync::Arc::new(Fabric { peers, pending: Mutex::new(Pending::default()) })
+        std::sync::Arc::new(Fabric {
+            peers,
+            pending: Mutex::new(Pending::default()),
+            threads: (0..peers).map(|_| OnceLock::new()).collect(),
+        })
     }
 
     /// Number of workers sharing this fabric.
     pub fn peers(&self) -> usize {
         self.peers
+    }
+
+    /// Registers the *calling* thread as worker `index`'s thread, making it
+    /// a wakeup target for [`Fabric::unpark_peers`]. Called by the worker
+    /// during construction (workers are built on their own threads); only
+    /// the first registration per slot takes effect.
+    pub fn register_worker_thread(&self, index: usize) {
+        let _ = self.threads[index].set(std::thread::current());
+    }
+
+    /// Unparks every registered worker thread except `except` (the caller).
+    ///
+    /// Called after pushing progress batches or releasing data messages
+    /// into the fabric, so parked peers observe them promptly. Unparking a
+    /// running (or finished) thread is harmless; a not-yet-registered
+    /// worker cannot have parked, so skipping its empty slot loses nothing.
+    pub fn unpark_peers(&self, except: usize) {
+        for (index, slot) in self.threads.iter().enumerate() {
+            if index == except {
+                continue;
+            }
+            if let Some(thread) = slot.get() {
+                thread.unpark();
+            }
+        }
+    }
+
+    /// Claims the send halves of channel `chan` from `from` to every other
+    /// worker, in peer order (`None` at `from`): the fan-out half of a
+    /// broadcast family. Each `(chan, from, to)` pair is an SPSC FIFO.
+    pub fn broadcast_senders<M: Send + 'static>(
+        &self,
+        chan: usize,
+        from: usize,
+    ) -> Vec<Option<Sender<M>>> {
+        (0..self.peers)
+            .map(|to| if to == from { None } else { Some(self.sender(chan, from, to)) })
+            .collect()
+    }
+
+    /// Claims the receive halves of channel `chan` from every other worker
+    /// to `to`, in peer order (`None` at `to`): the fan-in half of a
+    /// broadcast family.
+    pub fn broadcast_receivers<M: Send + 'static>(
+        &self,
+        chan: usize,
+        to: usize,
+    ) -> Vec<Option<Receiver<M>>> {
+        (0..self.peers)
+            .map(|from| if from == to { None } else { Some(self.receiver(chan, from, to)) })
+            .collect()
     }
 
     /// Claims the send half of `(channel, from, to)`. Called by worker
@@ -146,5 +222,52 @@ mod tests {
         let fabric = Fabric::new(2);
         let _tx = fabric.sender::<u32>(0, 0, 1);
         let _rx = fabric.receiver::<String>(0, 0, 1);
+    }
+
+    #[test]
+    fn broadcast_family_matches_pairwise_endpoints() {
+        let fabric = Fabric::new(3);
+        let senders0 = fabric.broadcast_senders::<u64>(9, 0);
+        assert_eq!(senders0.len(), 3);
+        assert!(senders0[0].is_none(), "no self channel");
+        let rx1 = fabric.broadcast_receivers::<u64>(9, 1);
+        let rx2 = fabric.broadcast_receivers::<u64>(9, 2);
+        senders0[1].as_ref().unwrap().send(11).unwrap();
+        senders0[2].as_ref().unwrap().send(22).unwrap();
+        assert_eq!(rx1[0].as_ref().unwrap().recv().unwrap(), 11);
+        assert_eq!(rx2[0].as_ref().unwrap().recv().unwrap(), 22);
+        assert!(rx1[1].is_none() && rx2[2].is_none());
+    }
+
+    #[test]
+    fn unpark_wakes_a_parked_registered_worker() {
+        let fabric = Fabric::new(2);
+        let f2 = fabric.clone();
+        let worker = std::thread::spawn(move || {
+            f2.register_worker_thread(1);
+            // Park for up to 5s; the unpark below must cut this short (or
+            // land first, making park return immediately via the token).
+            let start = std::time::Instant::now();
+            std::thread::park_timeout(std::time::Duration::from_secs(5));
+            start.elapsed()
+        });
+        // Give the worker a moment to register and park, then wake it.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        fabric.unpark_peers(0);
+        let parked_for = worker.join().unwrap();
+        assert!(
+            parked_for < std::time::Duration::from_secs(4),
+            "worker should have been unparked early, parked {parked_for:?}"
+        );
+    }
+
+    #[test]
+    fn unpark_peers_skips_caller_and_unregistered_slots() {
+        let fabric = Fabric::new(4);
+        fabric.register_worker_thread(2);
+        // Workers 0,1,3 never registered; this must not panic and must not
+        // unpark the caller's own slot.
+        fabric.unpark_peers(2);
+        fabric.unpark_peers(0);
     }
 }

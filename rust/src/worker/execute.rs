@@ -3,17 +3,23 @@
 //! `execute(config, build)` spawns one thread per worker (optionally pinned
 //! to physical cores, as in the paper's §7.1 setup), runs the same
 //! construction-and-driving closure on each, and returns the per-worker
-//! results in index order.
+//! results in index order. Workers share only the communication fabric;
+//! each claims its own progress mailboxes from it (there is no central
+//! progress structure to hand out).
 
 use super::allocator::Fabric;
 use super::Worker;
 use crate::config::Config;
-use crate::progress::exchange::ProgressLog;
 use crate::progress::timestamp::Timestamp;
 use std::sync::Arc;
 
 /// Pins the calling thread to core `index` (best-effort; ignored if the
 /// affinity call fails, e.g. in restricted containers).
+///
+/// Compiled only with the `affinity` feature, which expects the `libc`
+/// crate to be added to the build (the default build keeps the dependency
+/// set empty so it resolves fully offline).
+#[cfg(feature = "affinity")]
 pub fn pin_to_core(index: usize) {
     unsafe {
         let mut set: libc::cpu_set_t = std::mem::zeroed();
@@ -26,6 +32,10 @@ pub fn pin_to_core(index: usize) {
     }
 }
 
+/// No-op fallback: core pinning requires the `affinity` feature.
+#[cfg(not(feature = "affinity"))]
+pub fn pin_to_core(_index: usize) {}
+
 /// Runs `build` on `config.workers` worker threads; each invocation builds
 /// the (identical) dataflow and drives its worker. Returns each worker's
 /// result, in worker-index order.
@@ -37,14 +47,12 @@ where
 {
     let peers = config.workers.max(1);
     let fabric = Fabric::new(peers);
-    let log = ProgressLog::<T>::new(peers);
     let build = Arc::new(build);
     let pin = config.pin_workers;
 
     let mut handles = Vec::with_capacity(peers);
     for index in 0..peers {
         let fabric = fabric.clone();
-        let log = log.clone();
         let build = build.clone();
         handles.push(
             std::thread::Builder::new()
@@ -53,7 +61,7 @@ where
                     if pin {
                         pin_to_core(index);
                     }
-                    let mut worker = Worker::new(index, peers, fabric, log);
+                    let mut worker = Worker::new(index, peers, fabric);
                     build(&mut worker)
                 })
                 .expect("spawn worker thread"),

@@ -3,11 +3,32 @@
 //! Each step the worker (1) drains remote messages into local mailboxes,
 //! (2) schedules operators that have queued input, changed frontiers, or an
 //! activation request, draining the shared token bookkeeping after each so
-//! the drained changes reflect atomic operator actions (§4), (3) appends
-//! its accumulated atomic batch to the sequenced progress log and reads
-//! everything new, (4) folds the read batches into its tracker, and (5)
-//! releases staged remote data messages (whose `+1` produce counts are now
-//! in the log — the ordering that makes every log prefix conservative).
+//! the accumulated changes reflect atomic operator actions (§4), (3) when
+//! the flush cadence is due, broadcasts its coalesced atomic batch through
+//! its [`Progcaster`]'s per-peer FIFO mailboxes and THEN releases staged
+//! remote data messages, and (4) folds every batch arriving on its own
+//! mailboxes (its loopback included) into its tracker.
+//!
+//! # Step ordering and conservatism
+//!
+//! There is no sequenced log and no global order on progress batches. The
+//! two orderings the step loop *does* enforce are exactly the ones prefix
+//! safety needs (see [`crate::progress::exchange`] for the full argument):
+//!
+//! * **per-sender FIFO** — one worker's batches enter every peer mailbox
+//!   in the same order, and bookkeeping is drained after each operator
+//!   action, so each stream reflects that worker's true action order;
+//! * **produce-before-data-release** — the progress batch carrying a
+//!   message's `+1` produce count is broadcast *before* the staged message
+//!   is released to the data fabric, so no consumer can account a message
+//!   whose produce count is not already in every observer's mailbox.
+//!
+//! Any interleaving of deliveries is then a conservative view, which is
+//! why workers never contend: appends are wait-free pushes into SPSC
+//! mailboxes, and the adaptive-cadence workaround the old mutex log needed
+//! under contention is gone. Idle workers no longer busy-spin either:
+//! [`Worker::step_or_park`] parks the thread, and peers unpark it whenever
+//! they push progress or data into the fabric.
 
 pub mod allocator;
 pub mod execute;
@@ -16,67 +37,73 @@ use crate::dataflow::channels::Data;
 use crate::dataflow::input::InputSession;
 use crate::dataflow::scope::{BuildState, OpCore, Scope};
 use crate::dataflow::stream::Stream;
-use crate::progress::exchange::{ProgressBatch, ProgressLog};
+use crate::progress::exchange::{Progcaster, ProgressBatch};
 use crate::progress::location::Location;
 use crate::progress::timestamp::Timestamp;
 use crate::progress::tracker::Tracker;
 use allocator::Fabric;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// Base progress-flush cadence: how long a worker may sit on pending
-/// progress updates (token downgrades, message accounting) and staged
-/// remote data before pushing them to the sequenced log and fabric.
-/// Coalescing is what keeps fine timestamp quanta (2^8 ns in Figure 6/7)
-/// from turning every scheduling step into a contended log append; the
-/// cost is a bounded addition to the completion-latency floor. The cadence
-/// adapts upward (to [`PROGRESS_FLUSH_MAX`]) under contention — many
-/// workers all flushing at the base rate saturate the log's total order.
-pub const PROGRESS_FLUSH: std::time::Duration = std::time::Duration::from_micros(20);
+/// Progress-flush cadence: how long a worker may sit on pending progress
+/// updates (token downgrades, message accounting) and staged remote data
+/// before broadcasting them and releasing the fabric. Coalescing is what
+/// keeps fine timestamp quanta (2^8 ns in Figure 6/7) from turning every
+/// scheduling step into a broadcast; the cost is a bounded addition to the
+/// completion-latency floor. With per-peer SPSC mailboxes there is no
+/// contention to adapt to, so the cadence is a constant.
+pub const PROGRESS_FLUSH: Duration = Duration::from_micros(20);
 
-/// Upper bound for the adaptive flush cadence.
-pub const PROGRESS_FLUSH_MAX: std::time::Duration = std::time::Duration::from_micros(320);
+/// Pending updates beyond this force an immediate flush (bounds memory and
+/// peer latency under bursts, independent of the cadence).
+const FLUSH_BATCH_LIMIT: usize = 4096;
+
+/// Default park bound for [`Worker::step_or_park`] as used by
+/// [`Worker::step_while`]: an upper bound only — peers unpark the worker
+/// the moment they push progress or data for it.
+pub const PARK_TIMEOUT: Duration = Duration::from_micros(500);
 
 /// A dataflow worker. Generic over the dataflow's timestamp type.
 pub struct Worker<T: Timestamp> {
     scope: Scope<T>,
-    log: Arc<ProgressLog<T>>,
+    fabric: Arc<Fabric>,
+    /// This worker's endpoint of the decentralized progress plane.
+    progcaster: Progcaster<T>,
     tracker: Option<Tracker<T>>,
     ops: Vec<OpCore<T>>,
     drainers: Vec<Box<dyn FnMut() -> bool>>,
     flushers: Vec<Box<dyn FnMut()>>,
-    local_batch: Vec<((Location, T), i64)>,
+    /// Scratch: bookkeeping drain target, moved into the progcaster.
+    scratch: Vec<((Location, T), i64)>,
     read_buf: Vec<Arc<ProgressBatch<T>>>,
     steps: u64,
-    /// This worker's read cursor into the progress log (fast-path skip).
-    cursor: usize,
     /// Remote data staged since the last flush (must be released together
-    /// with — after — the append carrying its produce counts).
+    /// with — after — the broadcast carrying its produce counts).
     remote_pending: bool,
-    /// When this worker last flushed (append + fabric release).
+    /// When this worker last flushed (broadcast + fabric release).
     last_flush: Instant,
-    /// Adaptive flush cadence (see [`PROGRESS_FLUSH`]).
-    flush_interval: std::time::Duration,
 }
 
 impl<T: Timestamp> Worker<T> {
-    /// Creates a worker bound to a fabric and progress log. Most users go
+    /// Creates a worker bound to a fabric, claiming its progress mailboxes
+    /// and registering the calling thread for peer wakeups. Most users go
     /// through [`execute::execute`].
-    pub fn new(index: usize, peers: usize, fabric: Arc<Fabric>, log: Arc<ProgressLog<T>>) -> Self {
+    pub fn new(index: usize, peers: usize, fabric: Arc<Fabric>) -> Self {
+        fabric.register_worker_thread(index);
+        let progcaster = Progcaster::new(index, peers, &fabric);
         Worker {
-            scope: Scope::new(BuildState::new(index, peers, fabric)),
-            log,
+            scope: Scope::new(BuildState::new(index, peers, fabric.clone())),
+            fabric,
+            progcaster,
             tracker: None,
             ops: Vec::new(),
             drainers: Vec::new(),
             flushers: Vec::new(),
-            local_batch: Vec::new(),
+            scratch: Vec::new(),
             read_buf: Vec::new(),
             steps: 0,
-            cursor: 0,
             remote_pending: false,
             last_flush: Instant::now(),
-            flush_interval: PROGRESS_FLUSH,
         }
     }
 
@@ -130,6 +157,7 @@ impl<T: Timestamp> Worker<T> {
     }
 
     /// Runs one scheduling step; returns true iff any work happened.
+    /// Never blocks (see [`Worker::step_or_park`] for the parking variant).
     pub fn step(&mut self) -> bool {
         self.finalize();
         self.steps += 1;
@@ -141,78 +169,99 @@ impl<T: Timestamp> Worker<T> {
         }
 
         // (2a) Input-session (and other out-of-band) token actions.
+        self.stage_pending();
         let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
-        bookkeeping.drain_into(&mut self.local_batch);
 
-        // (2b) Schedule operators.
+        // (2b) Schedule operators. The run decision is fully lazy: an
+        // activation request suffices on its own, the frontier scan runs
+        // only without one, and the (potentially costly) work hint is
+        // consulted only when neither already forces a run. `changed`
+        // flags are cleared only for operators that actually run, so a
+        // frontier change observed while an operator is skipped for other
+        // reasons is never silently absorbed.
         for op in &mut self.ops {
-            let frontier_changed = op.frontiers.iter().any(|f| f.borrow().changed);
-            let should_run = op.activation.get() || frontier_changed || (op.work_hint)();
+            let should_run = op.activation.get()
+                || op.frontiers.iter().any(|f| f.borrow().changed)
+                || (op.work_hint)();
             if should_run {
                 op.activation.set(false);
                 for f in &op.frontiers {
                     f.borrow_mut().changed = false;
                 }
                 (op.logic)();
-                bookkeeping.drain_into(&mut self.local_batch);
+                bookkeeping.drain_into(&mut self.scratch);
+                self.progcaster.extend(self.scratch.drain(..));
                 active = true;
             }
         }
 
-        // (3) Flush policy. Progress batches and staged remote data move on
-        // one cadence: every PROGRESS_FLUSH the worker appends its batch to
-        // the sequenced log and THEN releases staged fabric messages, so a
-        // batch's `+1` produce counts always precede the data they cover.
+        // (3) Flush policy. Progress batches and staged remote data move
+        // on one cadence: every PROGRESS_FLUSH the worker broadcasts its
+        // coalesced batch into the per-peer mailboxes and THEN releases
+        // staged fabric messages, so a batch's `+1` produce counts always
+        // precede the data they cover (produce-before-data-release).
         // Coalescing across steps lets produce/consume pairs cancel inside
-        // the ChangeBatch before ever touching the shared log — without it,
-        // fine timestamp quanta (2^8 ns, Figures 6/7) turn every scheduling
-        // step into a contended append. An empty-handed worker skips the
-        // log lock entirely while the atomic tail shows nothing new.
-        self.remote_pending |= {
-            let state = self.scope.state.borrow();
-            state.remote_staged.replace(false)
-        };
-        let have_work = !self.local_batch.is_empty() || self.remote_pending;
-        let big = self.local_batch.len() >= 4096;
-        let due = big || (have_work && self.last_flush.elapsed() >= self.flush_interval);
-        if due {
-            let batch = std::mem::take(&mut self.local_batch);
-            self.cursor = self.log.append_and_read(self.index(), batch, &mut self.read_buf);
-            // Adapt the cadence to the observed log traffic: a backlog of
-            // whole-fleet batches per flush means everyone is hammering the
-            // total order — back off; an idle log invites lower latency.
-            let peers = self.peers();
-            if self.read_buf.len() > 4 * peers {
-                self.flush_interval = (self.flush_interval * 2).min(PROGRESS_FLUSH_MAX);
-            } else if self.read_buf.len() <= peers {
-                self.flush_interval = (self.flush_interval / 2).max(PROGRESS_FLUSH);
-            }
-            // (4) Fold everything new into the tracker.
-            let tracker = self.tracker.as_mut().expect("finalized");
-            for batch in self.read_buf.drain(..) {
-                tracker.apply(batch.iter().cloned());
-            }
-            // (5) Release staged remote messages (their +1s are now logged).
-            for flush in &mut self.flushers {
-                flush();
-            }
-            self.remote_pending = false;
-            self.last_flush = Instant::now();
-            active = true;
-        } else if self.cursor != self.log.tail() {
-            self.cursor =
-                self.log.append_and_read(self.index(), Vec::new(), &mut self.read_buf);
-            let tracker = self.tracker.as_mut().expect("finalized");
-            for batch in self.read_buf.drain(..) {
-                tracker.apply(batch.iter().cloned());
-            }
-            active = true;
+        // the ChangeBatch before ever crossing a thread boundary.
+        self.stage_pending();
+        let have_work = self.progcaster.has_updates() || self.remote_pending;
+        let big = self.progcaster.pending_len() >= FLUSH_BATCH_LIMIT;
+        if big || (have_work && self.last_flush.elapsed() >= PROGRESS_FLUSH) {
+            active |= self.flush();
         }
+
+        // (4) Fold everything newly arrived (loopback included) into the
+        // tracker, one atomic batch at a time.
+        active |= self.apply_inbound();
 
         active
     }
 
-    /// Forces the pending progress batch into the sequenced log and
+    /// The staging protocol's single entry point: drains out-of-band token
+    /// actions from the shared bookkeeping into the progcaster's pending
+    /// batch and latches the remote-staged flag. Idempotent; called before
+    /// every flush decision (and once before operators run, so input
+    /// actions taken between steps join this step's batch).
+    fn stage_pending(&mut self) {
+        let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
+        bookkeeping.drain_into(&mut self.scratch);
+        self.progcaster.extend(self.scratch.drain(..));
+        self.remote_pending |= {
+            let state = self.scope.state.borrow();
+            state.remote_staged.replace(false)
+        };
+    }
+
+    /// Broadcasts the pending batch, releases staged remote data, and wakes
+    /// parked peers if anything went out. Returns true iff anything did.
+    fn flush(&mut self) -> bool {
+        let sent = self.progcaster.send().is_some();
+        // Release staged remote messages (their +1s are now in every
+        // peer's mailbox, strictly before this data).
+        for flush in &mut self.flushers {
+            flush();
+        }
+        let released = std::mem::replace(&mut self.remote_pending, false);
+        self.last_flush = Instant::now();
+        if sent || released {
+            self.fabric.unpark_peers(self.progcaster.index());
+        }
+        sent || released
+    }
+
+    /// Applies every batch waiting on this worker's mailboxes to the
+    /// tracker. Returns true iff any batch arrived.
+    fn apply_inbound(&mut self) -> bool {
+        if !self.progcaster.recv_into(&mut self.read_buf) {
+            return false;
+        }
+        let tracker = self.tracker.as_mut().expect("finalized");
+        for batch in self.read_buf.drain(..) {
+            tracker.apply_batch(&batch);
+        }
+        true
+    }
+
+    /// Forces the pending progress batch into the peer mailboxes and
     /// releases any staged remote data.
     ///
     /// MUST run before a worker stops stepping (and runs automatically at
@@ -224,28 +273,37 @@ impl<T: Timestamp> Worker<T> {
         if self.tracker.is_none() {
             return;
         }
-        let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
-        bookkeeping.drain_into(&mut self.local_batch);
-        self.remote_pending |= {
-            let state = self.scope.state.borrow();
-            state.remote_staged.replace(false)
-        };
-        if !self.local_batch.is_empty() || self.remote_pending {
-            let batch = std::mem::take(&mut self.local_batch);
-            self.cursor = self.log.append_and_read(self.index(), batch, &mut self.read_buf);
-            let tracker = self.tracker.as_mut().expect("finalized");
-            for batch in self.read_buf.drain(..) {
-                tracker.apply(batch.iter().cloned());
-            }
-            for flush in &mut self.flushers {
-                flush();
-            }
-            self.remote_pending = false;
-            self.last_flush = Instant::now();
+        self.stage_pending();
+        if self.progcaster.has_updates() || self.remote_pending {
+            self.flush();
         }
+        self.apply_inbound();
     }
 
-    /// Steps until `done` returns true.
+    /// Like [`Worker::step`], but parks the thread (up to `timeout`) when
+    /// the step found nothing to do and nothing is pending, instead of
+    /// returning immediately. Peers unpark this worker whenever they push
+    /// progress batches or release data messages for it, so the timeout is
+    /// a robustness bound, not the wakeup mechanism. Pending-but-unflushed
+    /// work is flushed rather than slept on. Returns true iff work
+    /// happened.
+    pub fn step_or_park(&mut self, timeout: Duration) -> bool {
+        if self.step() {
+            return true;
+        }
+        if self.progcaster.has_updates() || self.remote_pending {
+            // Never park on coalesced work peers may be waiting for.
+            self.flush_now();
+            return true;
+        }
+        // Safe against lost wakeups: an unpark issued since the (empty)
+        // mailbox drain in `step` left a token, making this return
+        // immediately.
+        std::thread::park_timeout(timeout);
+        false
+    }
+
+    /// Steps until `done` returns true, parking while idle.
     ///
     /// Finalizes first: probe frontiers are only meaningful once the
     /// tracker has seeded the initial token counts. Flushes on exit so
@@ -253,11 +311,7 @@ impl<T: Timestamp> Worker<T> {
     pub fn step_while<F: FnMut() -> bool>(&mut self, mut more: F) {
         self.finalize();
         while more() {
-            if !self.step() {
-                // Idle: give the OS scheduler a chance (many workers may
-                // share cores, e.g. under `cargo test`).
-                std::thread::yield_now();
-            }
+            self.step_or_park(PARK_TIMEOUT);
         }
         self.flush_now();
     }
