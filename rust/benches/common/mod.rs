@@ -24,6 +24,9 @@ pub struct BenchArgs {
     pub scale: f64,
     /// Extra positional selector (e.g. `weak` / `strong`, `q4` / `q7`).
     pub selector: Option<String>,
+    /// `micro_progress` only: sweep the progress-flush cadence instead of
+    /// running the standard suite (ROADMAP cadence-tuning item).
+    pub sweep_cadence: bool,
 }
 
 impl BenchArgs {
@@ -36,6 +39,7 @@ impl BenchArgs {
             workers: available_workers().min(8),
             scale: 1.0,
             selector: None,
+            sweep_cadence: false,
         };
         let mut iter = std::env::args().skip(1);
         while let Some(arg) = iter.next() {
@@ -60,6 +64,7 @@ impl BenchArgs {
                         args.scale = v;
                     }
                 }
+                "--sweep-cadence" => args.sweep_cadence = true,
                 "--bench" | "--nocapture" => {} // cargo-bench artifacts
                 other if !other.starts_with('-') => {
                     args.selector = Some(other.to_string());
@@ -90,4 +95,14 @@ pub fn fmt_rate(rate: u64) -> String {
     } else {
         format!("{rate}")
     }
+}
+
+/// Nearest-rank percentile on a sorted slice (shared by the micro benches;
+/// the harness's `LatencyHistogram` serves the open-loop binaries).
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }

@@ -1,0 +1,509 @@
+//! Data-plane transport microbenchmark: the seed path (per-batch `Vec`
+//! allocation + per-peer record clones over `std::sync::mpsc`) vs. the
+//! pooled path (recycled `Lease`/`Arc` batches over the fabric's SPSC
+//! rings) — records/sec and per-batch delivery latency for the three
+//! pacts, at 1/2/4/8 workers.
+//!
+//! Run: `cargo bench --bench micro_exchange -- [--quick]`.
+//! Emits `BENCH_exchange.json` next to the tables so future PRs compare
+//! against a trajectory instead of re-asserting the win.
+
+mod common;
+
+use common::{percentile, BenchArgs};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+use timestamp_tokens::buffer::{BufferPool, Lease, SharedPool};
+use timestamp_tokens::worker::allocator::Fabric;
+use timestamp_tokens::worker::ring::RingSendError;
+
+/// Records per batch (the engine's default `SEND_BATCH`).
+const BATCH: usize = 1024;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PactKind {
+    Pipeline,
+    Exchange,
+    Broadcast,
+}
+
+impl PactKind {
+    fn name(self) -> &'static str {
+        match self {
+            PactKind::Pipeline => "pipeline",
+            PactKind::Exchange => "exchange",
+            PactKind::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// Per-worker result: records consumed, seconds from barrier to drained,
+/// per-batch delivery latencies (ns).
+struct WorkerResult {
+    records: u64,
+    secs: f64,
+    latencies: Vec<u64>,
+}
+
+/// Routes record `i` produced by worker `w` to a destination (splits load
+/// evenly, like a hash exchange).
+#[inline]
+fn route(i: usize, w: usize, workers: usize) -> usize {
+    (i.wrapping_mul(2654435761).wrapping_add(w)) % workers
+}
+
+// ---------------------------------------------------------------------------
+// Seed path: fresh Vec per batch, record clones per peer, std mpsc.
+// ---------------------------------------------------------------------------
+
+/// Seed message: send instant + batch; an empty batch is the done marker.
+type SeedMsg = (Instant, Vec<u64>);
+
+fn run_seed(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResult> {
+    // mpsc pair per ordered (from, to), to != from.
+    let mut senders: Vec<Vec<Option<mpsc::Sender<SeedMsg>>>> =
+        (0..workers).map(|_| (0..workers).map(|_| None).collect()).collect();
+    let mut receivers: Vec<Vec<Option<mpsc::Receiver<SeedMsg>>>> =
+        (0..workers).map(|_| (0..workers).map(|_| None).collect()).collect();
+    for from in 0..workers {
+        for to in 0..workers {
+            if from != to {
+                let (tx, rx) = mpsc::channel();
+                senders[from][to] = Some(tx);
+                receivers[to][from] = Some(rx);
+            }
+        }
+    }
+    let barrier = Arc::new(Barrier::new(workers));
+    let mut handles = Vec::new();
+    for w in (0..workers).rev() {
+        let txs = std::mem::take(&mut senders[w]);
+        let rxs = std::mem::take(&mut receivers[w]);
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut local: VecDeque<SeedMsg> = VecDeque::new();
+            let mut latencies = Vec::with_capacity(batches * 2);
+            let mut records = 0u64;
+            let mut dones_expected = rxs.iter().flatten().count();
+            let consume = |msg: SeedMsg,
+                               latencies: &mut Vec<u64>,
+                               records: &mut u64,
+                               dones: &mut usize| {
+                let (sent_at, batch) = msg;
+                if batch.is_empty() {
+                    *dones -= 1;
+                    return;
+                }
+                latencies.push(sent_at.elapsed().as_nanos() as u64);
+                let mut sum = 0u64;
+                for r in &batch {
+                    sum = sum.wrapping_add(*r);
+                }
+                *records += batch.len() as u64;
+                std::hint::black_box(sum);
+            };
+            barrier.wait();
+            let start = Instant::now();
+            // Per-destination buffers, filled record-by-record with clones
+            // (the seed engine's OutputHandle::give) and posted as freshly
+            // taken Vecs.
+            let mut buffers: Vec<Vec<u64>> = (0..workers).map(|_| Vec::new()).collect();
+            for b in 0..batches {
+                for i in 0..BATCH {
+                    let record = (b * BATCH + i) as u64;
+                    match pact {
+                        PactKind::Pipeline => buffers[w].push(record),
+                        PactKind::Exchange => buffers[route(i, w, workers)].push(record),
+                        PactKind::Broadcast => {
+                            for buffer in buffers.iter_mut() {
+                                buffer.push(record);
+                            }
+                        }
+                    }
+                }
+                for dest in 0..workers {
+                    if buffers[dest].len() >= BATCH {
+                        let data = std::mem::take(&mut buffers[dest]);
+                        if dest == w {
+                            local.push_back((Instant::now(), data));
+                        } else if let Some(tx) = &txs[dest] {
+                            let _ = tx.send((Instant::now(), data));
+                        }
+                    }
+                }
+                // Opportunistic drain keeps queues shallow, as a worker
+                // step would.
+                while let Some(msg) = local.pop_front() {
+                    consume(msg, &mut latencies, &mut records, &mut dones_expected);
+                }
+                for rx in rxs.iter().flatten() {
+                    while let Ok(msg) = rx.try_recv() {
+                        consume(msg, &mut latencies, &mut records, &mut dones_expected);
+                    }
+                }
+            }
+            // Flush remainders and send done markers.
+            for dest in 0..workers {
+                let data = std::mem::take(&mut buffers[dest]);
+                if !data.is_empty() {
+                    if dest == w {
+                        local.push_back((Instant::now(), data));
+                    } else if let Some(tx) = &txs[dest] {
+                        let _ = tx.send((Instant::now(), data));
+                    }
+                }
+            }
+            for tx in txs.iter().flatten() {
+                let _ = tx.send((Instant::now(), Vec::new()));
+            }
+            drop(txs);
+            while let Some(msg) = local.pop_front() {
+                consume(msg, &mut latencies, &mut records, &mut dones_expected);
+            }
+            while dones_expected > 0 {
+                let mut any = false;
+                for rx in rxs.iter().flatten() {
+                    while let Ok(msg) = rx.try_recv() {
+                        consume(msg, &mut latencies, &mut records, &mut dones_expected);
+                        any = true;
+                    }
+                }
+                if !any {
+                    std::thread::yield_now();
+                }
+            }
+            WorkerResult { records, secs: start.elapsed().as_secs_f64(), latencies }
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Pooled path: recycled leases / shared Arcs over fabric SPSC rings.
+// ---------------------------------------------------------------------------
+
+/// Pooled message: owned lease, shared broadcast Arc, or done marker.
+enum PooledMsg {
+    Owned(Instant, Lease<Vec<u64>>),
+    Shared(Instant, Arc<Vec<u64>>),
+    Done,
+}
+
+fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResult> {
+    let fabric = Fabric::new(workers);
+    let barrier = Arc::new(Barrier::new(workers));
+    let mut handles = Vec::new();
+    for w in (0..workers).rev() {
+        let fabric = fabric.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut txs = fabric.broadcast_senders::<PooledMsg>(0, w);
+            let mut rxs = fabric.broadcast_receivers::<PooledMsg>(0, w);
+            let pool = BufferPool::<Vec<u64>>::new(64);
+            let mut shared_pool = SharedPool::<Vec<u64>>::new(64);
+            let mut local: VecDeque<PooledMsg> = VecDeque::new();
+            let mut latencies = Vec::with_capacity(batches * 2);
+            let mut records = 0u64;
+            let mut dones_expected = rxs.iter().flatten().count();
+            let consume = |msg: PooledMsg,
+                               latencies: &mut Vec<u64>,
+                               records: &mut u64,
+                               dones: &mut usize| {
+                let (sent_at, len, sum) = match &msg {
+                    PooledMsg::Done => {
+                        *dones -= 1;
+                        return;
+                    }
+                    PooledMsg::Owned(at, lease) => {
+                        let mut sum = 0u64;
+                        for r in lease.iter() {
+                            sum = sum.wrapping_add(*r);
+                        }
+                        (*at, lease.len(), sum)
+                    }
+                    PooledMsg::Shared(at, arc) => {
+                        let mut sum = 0u64;
+                        for r in arc.iter() {
+                            sum = sum.wrapping_add(*r);
+                        }
+                        (*at, arc.len(), sum)
+                    }
+                };
+                latencies.push(sent_at.elapsed().as_nanos() as u64);
+                *records += len as u64;
+                std::hint::black_box(sum);
+                // Dropping `msg` returns the lease to its pool (or the Arc
+                // clone to its producer's reclamation window).
+            };
+            barrier.wait();
+            let start = Instant::now();
+            let mut buffers: Vec<Option<Lease<Vec<u64>>>> = (0..workers).map(|_| None).collect();
+            let mut all: Option<Arc<Vec<u64>>> = None;
+            for b in 0..batches {
+                for i in 0..BATCH {
+                    let record = (b * BATCH + i) as u64;
+                    match pact {
+                        PactKind::Pipeline => {
+                            buffers[w].get_or_insert_with(|| pool.checkout()).push(record)
+                        }
+                        PactKind::Exchange => buffers[route(i, w, workers)]
+                            .get_or_insert_with(|| pool.checkout())
+                            .push(record),
+                        PactKind::Broadcast => Arc::get_mut(
+                            all.get_or_insert_with(|| shared_pool.checkout()),
+                        )
+                        .expect("unique while buffered")
+                        .push(record),
+                    }
+                }
+                // Post full batches.
+                for dest in 0..workers {
+                    let full = buffers[dest].as_ref().is_some_and(|l| l.len() >= BATCH);
+                    if full {
+                        let lease = buffers[dest].take().expect("full batch");
+                        let msg = PooledMsg::Owned(Instant::now(), lease);
+                        if dest == w {
+                            local.push_back(msg);
+                        } else {
+                            send_with_backpressure(&mut txs, dest, msg, &mut rxs, &mut local);
+                        }
+                    }
+                }
+                let broadcast_full = all.as_ref().is_some_and(|a| a.len() >= BATCH);
+                if broadcast_full {
+                    let arc = all.take().expect("full broadcast batch");
+                    shared_pool.track(&arc);
+                    let at = Instant::now();
+                    local.push_back(PooledMsg::Shared(at, arc.clone()));
+                    for dest in 0..workers {
+                        if dest != w {
+                            send_with_backpressure(
+                                &mut txs,
+                                dest,
+                                PooledMsg::Shared(at, arc.clone()),
+                                &mut rxs,
+                                &mut local,
+                            );
+                        }
+                    }
+                }
+                while let Some(msg) = local.pop_front() {
+                    consume(msg, &mut latencies, &mut records, &mut dones_expected);
+                }
+                for rx in rxs.iter_mut().flatten() {
+                    while let Ok(msg) = rx.try_recv() {
+                        consume(msg, &mut latencies, &mut records, &mut dones_expected);
+                    }
+                }
+            }
+            // Flush remainders, then done markers.
+            for dest in 0..workers {
+                if let Some(lease) = buffers[dest].take() {
+                    if lease.is_empty() {
+                        continue;
+                    }
+                    let msg = PooledMsg::Owned(Instant::now(), lease);
+                    if dest == w {
+                        local.push_back(msg);
+                    } else {
+                        send_with_backpressure(&mut txs, dest, msg, &mut rxs, &mut local);
+                    }
+                }
+            }
+            if let Some(arc) = all.take() {
+                if !arc.is_empty() {
+                    shared_pool.track(&arc);
+                    let at = Instant::now();
+                    local.push_back(PooledMsg::Shared(at, arc.clone()));
+                    for dest in 0..workers {
+                        if dest != w {
+                            send_with_backpressure(
+                                &mut txs,
+                                dest,
+                                PooledMsg::Shared(at, arc.clone()),
+                                &mut rxs,
+                                &mut local,
+                            );
+                        }
+                    }
+                }
+            }
+            for dest in 0..workers {
+                if dest != w {
+                    send_with_backpressure(&mut txs, dest, PooledMsg::Done, &mut rxs, &mut local);
+                }
+            }
+            drop(txs);
+            while let Some(msg) = local.pop_front() {
+                consume(msg, &mut latencies, &mut records, &mut dones_expected);
+            }
+            while dones_expected > 0 {
+                let mut any = false;
+                for rx in rxs.iter_mut().flatten() {
+                    while let Ok(msg) = rx.try_recv() {
+                        consume(msg, &mut latencies, &mut records, &mut dones_expected);
+                        any = true;
+                    }
+                }
+                if !any {
+                    std::thread::yield_now();
+                }
+            }
+            WorkerResult { records, secs: start.elapsed().as_secs_f64(), latencies }
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Pushes into a bounded ring, draining own inbound (and local) queues
+/// while the destination is full so mutual backpressure cannot deadlock.
+fn send_with_backpressure(
+    txs: &mut [Option<timestamp_tokens::worker::ring::RingSender<PooledMsg>>],
+    dest: usize,
+    msg: PooledMsg,
+    rxs: &mut [Option<timestamp_tokens::worker::ring::RingReceiver<PooledMsg>>],
+    overflow: &mut VecDeque<PooledMsg>,
+) {
+    let Some(tx) = txs[dest].as_mut() else { return };
+    let mut msg = msg;
+    loop {
+        match tx.send(msg) {
+            Ok(()) => return,
+            Err(RingSendError::Full(back)) => {
+                msg = back;
+                // Pull inbound traffic into the local queue so peers can
+                // make matching progress; consumption happens upstream.
+                for rx in rxs.iter_mut().flatten() {
+                    while let Ok(inbound) = rx.try_recv() {
+                        overflow.push_back(inbound);
+                    }
+                }
+                std::thread::yield_now();
+            }
+            Err(RingSendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reporting.
+// ---------------------------------------------------------------------------
+
+struct Measurement {
+    records_per_sec: u64,
+    p50_ns: u64,
+    p99_ns: u64,
+    batches: usize,
+}
+
+fn measure(results: Vec<WorkerResult>) -> Measurement {
+    let records: u64 = results.iter().map(|r| r.records).sum();
+    let secs = results.iter().map(|r| r.secs).fold(0.0f64, f64::max).max(1e-9);
+    let mut latencies: Vec<u64> =
+        results.iter().flat_map(|r| r.latencies.iter().copied()).collect();
+    latencies.sort_unstable();
+    Measurement {
+        records_per_sec: (records as f64 / secs) as u64,
+        p50_ns: percentile(&latencies, 50.0),
+        p99_ns: percentile(&latencies, 99.0),
+        batches: latencies.len(),
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let batches: usize = if args.quick { 128 } else { 1024 };
+    let worker_counts = [1usize, 2, 4, 8];
+    let pacts = [PactKind::Pipeline, PactKind::Exchange, PactKind::Broadcast];
+
+    println!(
+        "data-plane transport: {batches} batches/worker x {BATCH} records, seed (Vec+clone+mpsc) vs pooled (lease+Arc+ring)"
+    );
+    println!(
+        "{:>10} {:>8} {:>8} {:>14} {:>10} {:>10} {:>9}",
+        "pact", "path", "workers", "records/s", "p50 ns", "p99 ns", "batches"
+    );
+
+    // results[pact][path][workers] -> Measurement
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"micro_exchange\",\n");
+    json.push_str(&format!("  \"batch_records\": {BATCH},\n"));
+    json.push_str(&format!("  \"batches_per_worker\": {batches},\n"));
+    json.push_str("  \"pacts\": {\n");
+    let mut wins = Vec::new();
+    for (pi, &pact) in pacts.iter().enumerate() {
+        json.push_str(&format!("    \"{}\": {{\n", pact.name()));
+        let mut per_path: Vec<(&str, Vec<(usize, Measurement)>)> = Vec::new();
+        for path in ["seed", "pooled"] {
+            let mut measurements = Vec::new();
+            for &workers in &worker_counts {
+                let m = match path {
+                    "seed" => measure(run_seed(pact, workers, batches)),
+                    _ => measure(run_pooled(pact, workers, batches)),
+                };
+                println!(
+                    "{:>10} {:>8} {:>8} {:>14} {:>10} {:>10} {:>9}",
+                    pact.name(),
+                    path,
+                    workers,
+                    m.records_per_sec,
+                    m.p50_ns,
+                    m.p99_ns,
+                    m.batches
+                );
+                measurements.push((workers, m));
+            }
+            per_path.push((path, measurements));
+        }
+        for (qi, (path, measurements)) in per_path.iter().enumerate() {
+            json.push_str(&format!("      \"{path}\": {{\n"));
+            for (mi, (workers, m)) in measurements.iter().enumerate() {
+                json.push_str(&format!(
+                    "        \"{}\": {{\"records_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"batches\": {}}}{}\n",
+                    workers,
+                    m.records_per_sec,
+                    m.p50_ns,
+                    m.p99_ns,
+                    m.batches,
+                    if mi + 1 < measurements.len() { "," } else { "" }
+                ));
+            }
+            json.push_str(&format!(
+                "      }}{}\n",
+                if qi + 1 < per_path.len() { "," } else { "" }
+            ));
+        }
+        json.push_str(&format!(
+            "    }}{}\n",
+            if pi + 1 < pacts.len() { "," } else { "" }
+        ));
+        // Acceptance summary: pooled vs seed at 4 and 8 workers.
+        if pact != PactKind::Pipeline {
+            for target in [4usize, 8] {
+                let seed = per_path[0].1.iter().find(|(w, _)| *w == target);
+                let pooled = per_path[1].1.iter().find(|(w, _)| *w == target);
+                if let (Some((_, s)), Some((_, p))) = (seed, pooled) {
+                    wins.push(format!(
+                        "{} @ {target} workers: pooled {} rec/s vs seed {} rec/s ({})",
+                        pact.name(),
+                        p.records_per_sec,
+                        s.records_per_sec,
+                        if p.records_per_sec > s.records_per_sec { "WIN" } else { "LOSS" }
+                    ));
+                }
+            }
+        }
+    }
+    json.push_str("  }\n}\n");
+
+    println!();
+    for line in &wins {
+        println!("{line}");
+    }
+    match std::fs::write("BENCH_exchange.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_exchange.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_exchange.json: {e}"),
+    }
+}

@@ -17,7 +17,7 @@
 
 mod common;
 
-use common::BenchArgs;
+use common::{percentile, BenchArgs};
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 use timestamp_tokens::dataflow::token::BookkeepingHandle;
@@ -32,15 +32,6 @@ use timestamp_tokens::worker::allocator::Fabric;
 fn rate(label: &str, ops: u64, start: Instant) {
     let secs = start.elapsed().as_secs_f64();
     println!("{label:>42}: {:>8.2} M ops/s  ({ops} ops in {secs:.3}s)", ops as f64 / secs / 1e6);
-}
-
-/// Percentile (nearest-rank on a sorted slice).
-fn percentile(sorted: &[u64], p: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Summary statistics of one (path, workers) latency population.
@@ -155,8 +146,57 @@ fn write_json(steps: u64, results: &[(&str, Vec<LatencyStats>)]) {
     }
 }
 
+/// Sweeps the progress-flush cadence (`Config::progress_flush`) on a
+/// 2-worker noop-chain epoch loop: the ROADMAP cadence-tuning mode,
+/// enabled with `--sweep-cadence`.
+fn sweep_cadence(args: &BenchArgs) {
+    use std::time::Duration;
+    use timestamp_tokens::config::Config;
+    use timestamp_tokens::dataflow::probe::ProbeExt;
+    use timestamp_tokens::operators::noop::NoopExt;
+    use timestamp_tokens::worker::execute::execute;
+
+    let epochs: u64 = if args.quick { 5_000 } else { 50_000 };
+    let workers = 2usize;
+    println!("progress-flush cadence sweep: {workers} workers, {epochs} epochs, 4-op chain");
+    println!("{:>12} {:>14} {:>12}", "cadence us", "epochs/s", "wall s");
+    for cadence_us in [0u64, 5, 20, 50, 200, 1000] {
+        let config = Config {
+            workers,
+            pin_workers: false,
+            progress_flush: Duration::from_micros(cadence_us),
+            ..Config::default()
+        };
+        let secs = execute::<u64, _, _>(config, move |worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let probe = stream.noop_chain(4).probe();
+            worker.finalize();
+            let start = Instant::now();
+            for t in 0..epochs {
+                input.advance_to(t + 1);
+                worker.step();
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            start.elapsed().as_secs_f64()
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        println!(
+            "{:>12} {:>14.0} {:>12.3}",
+            cadence_us,
+            epochs as f64 / secs,
+            secs
+        );
+    }
+}
+
 fn main() {
     let args = BenchArgs::parse();
+    if args.sweep_cadence {
+        sweep_cadence(&args);
+        return;
+    }
     let n: u64 = if args.quick { 200_000 } else { 5_000_000 };
 
     // ChangeBatch: the token bookkeeping hot path.

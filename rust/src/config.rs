@@ -5,8 +5,11 @@
 //! parsing is hand-rolled in `cli.rs`); library users construct it
 //! directly.
 
-/// Records buffered per output session before a message batch is posted.
-/// Bounded so that latency stays low even under bursty sessions.
+use std::time::Duration;
+
+/// Default records buffered per output session before a message batch is
+/// posted. Bounded so that latency stays low even under bursty sessions.
+/// Configurable per run through [`Config::send_batch`].
 pub const SEND_BATCH: usize = 1024;
 
 /// Which data-plane backend windowed aggregations use.
@@ -42,6 +45,14 @@ pub struct Config {
     pub agg_backend: AggBackend,
     /// Directory holding AOT artifacts (`*.hlo.txt`).
     pub artifacts_dir: String,
+    /// Progress-flush cadence: how long a worker may coalesce pointstamp
+    /// updates (and hold staged remote data) before broadcasting. Defaults
+    /// to [`crate::worker::PROGRESS_FLUSH`]; swept by
+    /// `micro_progress --sweep-cadence`.
+    pub progress_flush: Duration,
+    /// Records buffered per output session before a message batch is
+    /// posted. Defaults to [`SEND_BATCH`].
+    pub send_batch: usize,
 }
 
 impl Default for Config {
@@ -51,6 +62,8 @@ impl Default for Config {
             pin_workers: true,
             agg_backend: AggBackend::Native,
             artifacts_dir: "artifacts".to_string(),
+            progress_flush: crate::worker::PROGRESS_FLUSH,
+            send_batch: SEND_BATCH,
         }
     }
 }
@@ -78,5 +91,7 @@ mod tests {
         let c = Config::default();
         assert_eq!(c.workers, 1);
         assert_eq!(c.agg_backend, AggBackend::Native);
+        assert_eq!(c.progress_flush, crate::worker::PROGRESS_FLUSH);
+        assert_eq!(c.send_batch, SEND_BATCH);
     }
 }

@@ -6,24 +6,183 @@
 //! (parallelization contract): [`Pact::Pipeline`] keeps data on the sending
 //! worker, [`Pact::Exchange`] routes each record by key (or broadcasts it).
 //!
-//! Accounting: a message batch sent at timestamp `t` counts `+1` at the
-//! channel's target location, recorded by the sender *before* the batch is
-//! visible to the receiver; the receiver records `-1` when it consumes the
-//! batch. Remote sends are therefore staged and only released by the worker
-//! after it has appended its progress batch to the sequenced log (see
-//! `worker::Worker::step`), which is what makes every log prefix a
-//! conservative view of the outstanding pointstamps.
+//! Accounting (PR 1's per-worker broadcast protocol): a message batch sent
+//! at timestamp `t` counts `+1` at the channel's target location, recorded
+//! in the sender's pending progress batch *before* the batch is visible to
+//! the receiver; the receiver records `-1` when it consumes the batch.
+//! Remote sends are therefore staged here and only released by the worker
+//! after it has broadcast that progress batch into every peer's FIFO
+//! mailbox (`worker::Worker::step`'s produce-before-data-release rule) —
+//! together with per-sender FIFO delivery, this is what makes any
+//! interleaving of mailbox deliveries a conservative view of the
+//! outstanding pointstamps (see [`crate::progress::exchange`] for the full
+//! argument; there is no sequenced log and no global order).
+//!
+//! The transport is the same bounded SPSC ring family the progress plane
+//! uses ([`crate::worker::ring`], claimed through the
+//! [`Fabric`](crate::worker::allocator::Fabric)), and batch payloads are
+//! pooled [`Batch`]es rather than per-send `Vec`s: point-to-point batches
+//! are [`Lease`]s that return their capacity to the producing output's
+//! [`BufferPool`](crate::buffer::BufferPool) when the consumer drops them,
+//! and broadcast batches are one shared `Arc` cloned per peer instead of
+//! `peers` record-by-record copies. A full ring is backpressure, not an
+//! error: messages stay staged (per destination, FIFO) and are retried on
+//! the next flush, after the peer drains.
 
+use crate::buffer::Lease;
 use crate::progress::location::Location;
 use crate::progress::timestamp::Timestamp;
+use crate::worker::allocator::WorkerStats;
+use crate::worker::ring::{RingReceiver, RingSendError, RingSender};
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::rc::Rc;
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
 
 /// Records that can travel on dataflow edges.
 pub trait Data: Clone + Send + 'static {}
 impl<D: Clone + Send + 'static> Data for D {}
+
+/// The payload of one message batch.
+///
+/// `Owned` batches are exclusively held pooled buffers: consuming them
+/// (by-value iteration) moves the records out without cloning, and the
+/// buffer's capacity returns to the producing pool on drop — from whichever
+/// worker thread consumed it. `Shared` batches back broadcast deliveries:
+/// one `Arc`d buffer is cloned per peer (reference count only), and each
+/// consumer clones records out as it iterates.
+pub enum Batch<D> {
+    /// Exclusively owned (point-to-point) batch.
+    Owned(Lease<Vec<D>>),
+    /// Shared (broadcast) batch.
+    Shared(Arc<Vec<D>>),
+}
+
+impl<D> Batch<D> {
+    /// Wraps a plain vector (un-pooled) — tests and one-off sends.
+    pub fn from_vec(records: Vec<D>) -> Self {
+        Batch::Owned(Lease::unpooled(records))
+    }
+
+    /// The records, as a slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[D] {
+        match self {
+            Batch::Owned(lease) => lease.as_slice(),
+            Batch::Shared(arc) => arc.as_slice(),
+        }
+    }
+
+    /// Number of records in the batch.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// True iff the batch holds no records.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// True iff this batch is shared with other consumers (broadcast).
+    pub fn is_shared(&self) -> bool {
+        matches!(self, Batch::Shared(_))
+    }
+}
+
+impl<D> std::ops::Deref for Batch<D> {
+    type Target = [D];
+    #[inline]
+    fn deref(&self) -> &[D] {
+        self.as_slice()
+    }
+}
+
+impl<D: Clone> Clone for Batch<D> {
+    fn clone(&self) -> Self {
+        match self {
+            // An owned batch is deep-copied (un-pooled): cloning is rare
+            // and must not alias the exclusively held buffer.
+            Batch::Owned(lease) => Batch::Owned(Lease::unpooled(lease.to_vec())),
+            Batch::Shared(arc) => Batch::Shared(arc.clone()),
+        }
+    }
+}
+
+impl<D: std::fmt::Debug> std::fmt::Debug for Batch<D> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice().iter()).finish()
+    }
+}
+
+impl<'a, D> IntoIterator for &'a Batch<D> {
+    type Item = &'a D;
+    type IntoIter = std::slice::Iter<'a, D>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<D: Clone> IntoIterator for Batch<D> {
+    type Item = D;
+    type IntoIter = BatchIntoIter<D>;
+
+    /// By-value iteration: moves records out of an `Owned` batch (no
+    /// clone; the emptied buffer returns to its pool when the iterator
+    /// drops), clones them out of a `Shared` one.
+    fn into_iter(self) -> BatchIntoIter<D> {
+        match self {
+            Batch::Owned(mut lease) => {
+                // Reverse once so by-value draining is `pop` (O(1), keeps
+                // the buffer's capacity in place for recycling).
+                lease.reverse();
+                BatchIntoIter::Owned(lease)
+            }
+            Batch::Shared(arc) => BatchIntoIter::Shared { arc, next: 0 },
+        }
+    }
+}
+
+/// By-value iterator over a batch (see `Batch::into_iter`).
+pub enum BatchIntoIter<D> {
+    /// Draining an exclusively owned batch (stored reversed; `pop` yields
+    /// original order).
+    Owned(Lease<Vec<D>>),
+    /// Cloning out of a shared batch.
+    Shared {
+        /// The shared buffer.
+        arc: Arc<Vec<D>>,
+        /// Next index to yield.
+        next: usize,
+    },
+}
+
+impl<D: Clone> Iterator for BatchIntoIter<D> {
+    type Item = D;
+
+    fn next(&mut self) -> Option<D> {
+        match self {
+            BatchIntoIter::Owned(lease) => lease.pop(),
+            BatchIntoIter::Shared { arc, next } => {
+                let item = arc.get(*next).cloned();
+                if item.is_some() {
+                    *next += 1;
+                }
+                item
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let remaining = match self {
+            BatchIntoIter::Owned(lease) => lease.len(),
+            BatchIntoIter::Shared { arc, next } => arc.len() - *next,
+        };
+        (remaining, Some(remaining))
+    }
+}
 
 /// A batch of records bearing one timestamp.
 #[derive(Clone, Debug)]
@@ -31,7 +190,7 @@ pub struct Message<T, D> {
     /// The logical timestamp of every record in the batch.
     pub time: T,
     /// The records.
-    pub data: Vec<D>,
+    pub data: Batch<D>,
     /// The index of the sending worker (diagnostics / tests).
     pub from: usize,
 }
@@ -93,16 +252,19 @@ pub struct ChannelSend<T: Timestamp, D: Data> {
     pub my_index: usize,
     /// Total workers.
     pub peers: usize,
-    /// Staged remote messages, released by `flush_remote`.
-    staged: Vec<(usize, Message<T, D>)>,
-    /// Remote senders, one per peer (`None` at `my_index`).
-    remote: Vec<Option<Sender<Message<T, D>>>>,
+    /// Staged remote messages, per destination (FIFO within each), released
+    /// by `flush_remote`.
+    staged: Vec<VecDeque<Message<T, D>>>,
+    /// Remote ring senders, one per peer (`None` at `my_index`).
+    remote: Vec<Option<RingSender<Message<T, D>>>>,
     /// The local mailbox on this worker (for self-sends).
     local: LocalQueue<T, D>,
     /// Worker-wide flag: set when remote data is staged, so the worker
-    /// knows it must append its progress batch (with the corresponding
+    /// knows it must broadcast its progress batch (with the corresponding
     /// `+1` produce counts) before releasing the fabric this step.
     staged_flag: Rc<Cell<bool>>,
+    /// This worker's fabric counters (ring-full stalls).
+    stats: Arc<WorkerStats>,
 }
 
 impl<T: Timestamp, D: Data> ChannelSend<T, D> {
@@ -114,9 +276,10 @@ impl<T: Timestamp, D: Data> ChannelSend<T, D> {
         pact: Pact<D>,
         my_index: usize,
         peers: usize,
-        remote: Vec<Option<Sender<Message<T, D>>>>,
+        remote: Vec<Option<RingSender<Message<T, D>>>>,
         local: LocalQueue<T, D>,
         staged_flag: Rc<Cell<bool>>,
+        stats: Arc<WorkerStats>,
     ) -> Self {
         debug_assert_eq!(remote.len(), peers);
         ChannelSend {
@@ -125,10 +288,11 @@ impl<T: Timestamp, D: Data> ChannelSend<T, D> {
             pact,
             my_index,
             peers,
-            staged: Vec::new(),
+            staged: (0..peers).map(|_| VecDeque::new()).collect(),
             remote,
             local,
             staged_flag,
+            stats,
         }
     }
 
@@ -143,28 +307,51 @@ impl<T: Timestamp, D: Data> ChannelSend<T, D> {
         if dest == self.my_index {
             self.local.borrow_mut().push_back(message);
         } else {
-            self.staged.push((dest, message));
+            self.staged[dest].push_back(message);
             self.staged_flag.set(true);
         }
     }
 
-    /// Releases staged remote messages into the fabric. Called by the worker
-    /// after its progress batch (containing the `+1` produce counts) has
-    /// been appended to the sequenced log.
-    pub fn flush_remote(&mut self) {
-        for (dest, message) in self.staged.drain(..) {
-            if let Some(sender) = &self.remote[dest] {
-                // A closed receiver means the peer worker has shut down; at
-                // that point progress tracking is already complete for the
-                // messages it cared about, so dropping is benign.
-                let _ = sender.send(message);
+    /// Releases staged remote messages into the fabric rings. Called by the
+    /// worker after its progress batch (containing the `+1` produce counts)
+    /// has been broadcast into every peer mailbox.
+    ///
+    /// Returns `(sent_any, remaining)`: whether any message entered a ring,
+    /// and whether any stayed staged behind a full ring (the worker keeps
+    /// its remote-pending latch set and retries next flush — holding a
+    /// message *longer* is always conservative).
+    pub fn flush_remote(&mut self) -> (bool, bool) {
+        let mut sent = false;
+        let mut remaining = false;
+        for dest in 0..self.peers {
+            let Some(sender) = self.remote[dest].as_mut() else { continue };
+            while let Some(message) = self.staged[dest].pop_front() {
+                match sender.send(message) {
+                    Ok(()) => sent = true,
+                    Err(RingSendError::Full(message)) => {
+                        // Preserve FIFO: the rejected message goes back to
+                        // the front; retry after the peer drains.
+                        self.staged[dest].push_front(message);
+                        self.stats.note_ring_full();
+                        remaining = true;
+                        break;
+                    }
+                    Err(RingSendError::Disconnected(_)) => {
+                        // The peer worker has shut down; at that point
+                        // progress tracking is already complete for the
+                        // messages it cared about, so dropping is benign.
+                        self.staged[dest].clear();
+                        break;
+                    }
+                }
             }
         }
+        (sent, remaining)
     }
 
     /// True iff remote messages are staged.
     pub fn has_staged(&self) -> bool {
-        !self.staged.is_empty()
+        self.staged.iter().any(|q| !q.is_empty())
     }
 }
 
@@ -175,10 +362,10 @@ pub type ChannelSendHandle<T, D> = Rc<RefCell<ChannelSend<T, D>>>;
 /// downstream consumers connect).
 pub type TeeHandle<T, D> = Rc<RefCell<Vec<ChannelSendHandle<T, D>>>>;
 
-/// Builds a drainer closure that moves messages from a remote receiver into
+/// Builds a drainer closure that moves messages from a remote ring into
 /// the channel's local mailbox; returns whether any message moved.
 pub fn drainer<T: Timestamp, D: Data>(
-    receiver: Receiver<Message<T, D>>,
+    mut receiver: RingReceiver<Message<T, D>>,
     queue: LocalQueue<T, D>,
 ) -> Box<dyn FnMut() -> bool> {
     Box::new(move || {
@@ -199,10 +386,14 @@ pub fn drainer<T: Timestamp, D: Data>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::worker::ring;
 
     fn msg(t: u64, data: Vec<u32>) -> Message<u64, u32> {
-        Message { time: t, data, from: 0 }
+        Message { time: t, data: Batch::from_vec(data), from: 0 }
+    }
+
+    fn stats() -> Arc<WorkerStats> {
+        Arc::new(WorkerStats::default())
     }
 
     #[test]
@@ -217,6 +408,7 @@ mod tests {
             vec![None],
             local.clone(),
             Rc::new(Cell::new(false)),
+            stats(),
         );
         send.push(0, msg(3, vec![1, 2]));
         assert_eq!(local.borrow().len(), 1);
@@ -225,7 +417,7 @@ mod tests {
 
     #[test]
     fn remote_push_staged_until_flush() {
-        let (tx, rx) = channel();
+        let (tx, mut rx) = ring::channel(8);
         let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
         let flag = Rc::new(Cell::new(false));
         let mut send = ChannelSend::new(
@@ -237,19 +429,76 @@ mod tests {
             vec![None, Some(tx)],
             local,
             flag.clone(),
+            stats(),
         );
         send.push(1, msg(3, vec![7]));
         assert!(send.has_staged());
         assert!(flag.get(), "staged flag must be raised for remote pushes");
         assert!(rx.try_recv().is_err());
-        send.flush_remote();
-        assert_eq!(rx.try_recv().unwrap().data, vec![7]);
+        let (sent, remaining) = send.flush_remote();
+        assert!(sent && !remaining);
+        assert_eq!(&rx.try_recv().unwrap().data[..], &[7]);
+        assert!(!send.has_staged());
+    }
+
+    #[test]
+    fn full_ring_keeps_messages_staged_in_order() {
+        let (tx, mut rx) = ring::channel(2);
+        let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
+        let counters = stats();
+        let mut send = ChannelSend::new(
+            0,
+            Location::target(1, 0),
+            Pact::Pipeline,
+            0,
+            2,
+            vec![None, Some(tx)],
+            local,
+            Rc::new(Cell::new(false)),
+            counters.clone(),
+        );
+        for t in 0..4u64 {
+            send.push(1, msg(t, vec![t as u32]));
+        }
+        // Ring holds 2: the rest stays staged, in order.
+        let (sent, remaining) = send.flush_remote();
+        assert!(sent && remaining);
+        assert!(send.has_staged());
+        assert_eq!(rx.try_recv().unwrap().time, 0);
+        assert_eq!(rx.try_recv().unwrap().time, 1);
+        // Retry delivers the remainder, still in order.
+        let (sent, remaining) = send.flush_remote();
+        assert!(sent && !remaining);
+        assert_eq!(rx.try_recv().unwrap().time, 2);
+        assert_eq!(rx.try_recv().unwrap().time, 3);
+        assert!(!send.has_staged());
+    }
+
+    #[test]
+    fn disconnected_peer_discards_staged() {
+        let (tx, rx) = ring::channel::<Message<u64, u32>>(4);
+        drop(rx);
+        let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
+        let mut send = ChannelSend::new(
+            0,
+            Location::target(1, 0),
+            Pact::Pipeline,
+            0,
+            2,
+            vec![None, Some(tx)],
+            local,
+            Rc::new(Cell::new(false)),
+            stats(),
+        );
+        send.push(1, msg(1, vec![9]));
+        let (sent, remaining) = send.flush_remote();
+        assert!(!sent && !remaining);
         assert!(!send.has_staged());
     }
 
     #[test]
     fn drainer_moves_messages() {
-        let (tx, rx) = channel();
+        let (mut tx, rx) = ring::channel(8);
         let queue: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
         let mut drain = drainer(rx, queue.clone());
         assert!(!drain());
@@ -276,5 +525,39 @@ mod tests {
         } else {
             panic!("not exchange");
         }
+    }
+
+    #[test]
+    fn owned_batch_drains_by_value_in_order() {
+        let batch = Batch::from_vec(vec![1u32, 2, 3]);
+        assert_eq!(batch.len(), 3);
+        let collected: Vec<u32> = batch.into_iter().collect();
+        assert_eq!(collected, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn shared_batch_clones_out_in_order() {
+        let arc = Arc::new(vec![4u32, 5, 6]);
+        let a = Batch::Shared(arc.clone());
+        let b = Batch::Shared(arc);
+        assert!(a.is_shared());
+        assert_eq!(a.into_iter().collect::<Vec<_>>(), vec![4, 5, 6]);
+        // The other clone is unaffected.
+        assert_eq!(&b[..], &[4, 5, 6]);
+    }
+
+    #[test]
+    fn owned_batch_returns_buffer_to_pool_after_drain() {
+        let pool = crate::buffer::BufferPool::<Vec<u32>>::new(2);
+        let mut lease = pool.checkout();
+        lease.extend([7u32, 8, 9]);
+        let batch = Batch::Owned(lease);
+        let collected: Vec<u32> = batch.into_iter().collect();
+        assert_eq!(collected, vec![7, 8, 9]);
+        // The drained buffer went back to the pool.
+        assert_eq!(pool.stats().reused + pool.stats().overflowed, 0);
+        let recycled = pool.checkout();
+        assert!(recycled.capacity() >= 3);
+        assert_eq!(pool.stats().reused, 1);
     }
 }

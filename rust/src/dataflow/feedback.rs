@@ -53,15 +53,21 @@ pub fn feedback<T: Timestamp, D: Data>(
         summary,
         bookkeeping.clone(),
     );
-    let mut output: OutputHandle<T, D> =
-        OutputHandle::new(Location::source(node, 0), tee, bookkeeping, info.worker, info.peers);
+    let mut output: OutputHandle<T, D> = OutputHandle::new(
+        Location::source(node, 0),
+        tee,
+        bookkeeping,
+        info.worker,
+        info.peers,
+        scope.send_batch(),
+    );
     builder.build(
         activation,
         Box::new(move || {
             while let Some((token, data)) = input.next() {
                 // The token ref's capability time is the summary-advanced
                 // message time, so the records re-enter one iteration later.
-                output.session(&token).give_vec(data);
+                output.session(&token).give_batch(data);
             }
         }),
     );

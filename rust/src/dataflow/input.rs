@@ -22,8 +22,11 @@ pub struct InputSession<T: Timestamp, D: Data> {
     /// The input's timestamp token; `None` once closed.
     token: Option<TimestampToken<T>>,
     output: OutputHandle<T, D>,
-    /// Records buffered at the current epoch.
+    /// Records buffered at the current epoch (capacity reused across
+    /// flushes — the steady-state feed path does not allocate).
     buffer: Vec<D>,
+    /// Records per flush (the configured `SEND_BATCH`).
+    send_batch: usize,
     time: T,
 }
 
@@ -37,17 +40,25 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
         let node = builder.node();
         let mut tokens = builder.initial_tokens();
         let token = tokens.pop().expect("input has one output");
+        let send_batch = scope.send_batch();
         let output = OutputHandle::new(
             Location::source(node, 0),
             tee,
             scope.bookkeeping(),
             info.worker,
             info.peers,
+            send_batch,
         );
         // The input node has no operator logic: its messages originate here.
         builder.build(activation, Box::new(|| {}));
         (
-            InputSession { token: Some(token), output, buffer: Vec::new(), time: T::minimum() },
+            InputSession {
+                token: Some(token),
+                output,
+                buffer: Vec::new(),
+                send_batch,
+                time: T::minimum(),
+            },
             stream,
         )
     }
@@ -61,7 +72,7 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
     pub fn send(&mut self, record: D) {
         assert!(self.token.is_some(), "send on closed input");
         self.buffer.push(record);
-        if self.buffer.len() >= crate::config::SEND_BATCH {
+        if self.buffer.len() >= self.send_batch {
             self.flush();
         }
     }
@@ -74,7 +85,7 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
         } else {
             self.buffer.append(records);
         }
-        if self.buffer.len() >= crate::config::SEND_BATCH {
+        if self.buffer.len() >= self.send_batch {
             self.flush();
         }
     }
@@ -84,7 +95,9 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
         if !self.buffer.is_empty() {
             let token = self.token.as_ref().expect("flush on closed input");
             let mut session = self.output.session(token);
-            session.give_vec(std::mem::take(&mut self.buffer));
+            // Drain in place: the buffer keeps its capacity for the next
+            // epoch instead of handing it to the allocator every flush.
+            session.give_iterator(self.buffer.drain(..));
         }
     }
 

@@ -10,7 +10,7 @@ pub mod scope;
 pub mod stream;
 pub mod token;
 
-pub use channels::{Data, Message, Pact, Route};
+pub use channels::{Batch, Data, Message, Pact, Route};
 pub use feedback::{feedback, LoopHandle};
 pub use input::InputSession;
 pub use operator::{InputHandle, OperatorBuilder, OperatorExt, OperatorInfo, OutputHandle, Session};

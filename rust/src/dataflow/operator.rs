@@ -5,11 +5,20 @@
 //! receive the operator's initial [`TimestampToken`] (§3.1: "each dataflow
 //! operator is initially provided with a timestamp token for each of its
 //! output edges") and return the repeatedly invoked operator logic.
+//!
+//! Output batching is allocation-free in the steady state: each
+//! [`OutputHandle`] checks its per-destination buffers out of a recycling
+//! [`BufferPool`] (consumers return them on drop, even across worker
+//! threads), shares broadcast batches through one `Arc` per batch (a
+//! [`SharedPool`] recycles buffer *and* control block once every peer has
+//! dropped its clone), and moves — rather than clones — each record into
+//! the last channel attached to the port.
 
-use super::channels::{Data, LocalQueue, Message, Pact, Route, TeeHandle};
+use super::channels::{Batch, Data, LocalQueue, Message, Pact, Route, TeeHandle};
 use super::scope::{Activator, OpCore, Scope};
 use super::stream::Stream;
 use super::token::{BookkeepingHandle, TimestampToken, TimestampTokenRef, TokenTrait};
+use crate::buffer::{BufferPool, Lease, SharedPool};
 use crate::progress::antichain::MutableAntichain;
 use crate::progress::location::Location;
 use crate::progress::reachability::NodeTopology;
@@ -18,6 +27,15 @@ use crate::progress::tracker::{FrontierHandle, SharedFrontier};
 use std::cell::{Cell, Ref, RefCell};
 use std::collections::VecDeque;
 use std::rc::Rc;
+use std::sync::Arc;
+
+/// Idle buffers retained per output pool. Bounds pool memory at
+/// `POOL_SLOTS × send_batch × size_of::<D>()` per output port while easily
+/// covering the buffers simultaneously in flight across peers.
+const POOL_SLOTS: usize = 32;
+
+/// In-flight broadcast batches tracked for reclamation per output.
+const SHARED_POOL_WINDOW: usize = 16;
 
 /// Static facts about an operator instance, handed to its constructor.
 #[derive(Clone)]
@@ -65,7 +83,11 @@ impl<T: Timestamp, D: Data> InputHandle<T, D> {
     /// Pops the next message batch, recording its consumption with the
     /// system. The returned token reference cannot outlive the read — call
     /// [`TimestampTokenRef::retain`] to keep a token.
-    pub fn next(&mut self) -> Option<(TimestampTokenRef<'_, T>, Vec<D>)> {
+    ///
+    /// The batch iterates by value (moving records out of point-to-point
+    /// batches, cloning them out of shared broadcast ones); dropping it
+    /// returns the pooled buffer to the producing output's pool.
+    pub fn next(&mut self) -> Option<(TimestampTokenRef<'_, T>, Batch<D>)> {
         let message = self.queue.borrow_mut().pop_front()?;
         let Message { time, data, .. } = message;
         self.bookkeeping.update(self.target, time.clone(), -1);
@@ -80,7 +102,7 @@ impl<T: Timestamp, D: Data> InputHandle<T, D> {
     }
 
     /// Applies `logic` to every queued batch.
-    pub fn for_each<L: FnMut(TimestampTokenRef<'_, T>, Vec<D>)>(&mut self, mut logic: L) {
+    pub fn for_each<L: FnMut(TimestampTokenRef<'_, T>, Batch<D>)>(&mut self, mut logic: L) {
         while let Some((token, data)) = self.next() {
             logic(token, data);
         }
@@ -104,6 +126,22 @@ impl<T: Timestamp, D: Data> InputHandle<T, D> {
     }
 }
 
+/// Per-channel output buffering state (one entry per attached channel).
+struct ChannelBuffers<D> {
+    /// Per-destination batches under construction (`None` until the first
+    /// record; the lease comes from the output's pool).
+    per_dest: Vec<Option<Lease<Vec<D>>>>,
+    /// Broadcast batch under construction (uniquely referenced until
+    /// posted; shared across peers at post time).
+    all: Option<Arc<Vec<D>>>,
+}
+
+/// Where one record of one channel should be buffered.
+enum Disposition {
+    ToWorker(usize),
+    Broadcast,
+}
+
 /// The write side of one operator output port (Ⓗ in the paper's Figure 3).
 pub struct OutputHandle<T: Timestamp, D: Data> {
     source: Location,
@@ -111,8 +149,15 @@ pub struct OutputHandle<T: Timestamp, D: Data> {
     bookkeeping: BookkeepingHandle<T>,
     peers: usize,
     worker: usize,
-    /// Per-channel, per-destination buffers reused across sessions.
-    buffers: Vec<Vec<Vec<D>>>,
+    /// Records per batch before it is posted.
+    batch_size: usize,
+    /// Recycling pool behind the per-destination buffers; consumers return
+    /// buffers here when they drop drained batches.
+    pool: BufferPool<Vec<D>>,
+    /// Recycler for shared broadcast batches.
+    shared_pool: SharedPool<Vec<D>>,
+    /// Per-channel buffers, aligned with `pacts`.
+    buffers: Vec<ChannelBuffers<D>>,
     /// Pact snapshot aligned with `tee` (channels only ever append).
     pacts: Vec<Pact<D>>,
 }
@@ -124,8 +169,20 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
         bookkeeping: BookkeepingHandle<T>,
         worker: usize,
         peers: usize,
+        batch_size: usize,
     ) -> Self {
-        OutputHandle { source, tee, bookkeeping, peers, worker, buffers: Vec::new(), pacts: Vec::new() }
+        OutputHandle {
+            source,
+            tee,
+            bookkeeping,
+            peers,
+            worker,
+            batch_size: batch_size.max(1),
+            pool: BufferPool::new(POOL_SLOTS),
+            shared_pool: SharedPool::new(SHARED_POOL_WINDOW),
+            buffers: Vec::new(),
+            pacts: Vec::new(),
+        }
     }
 
     /// Obtains a session that can send data at the timestamp associated with
@@ -151,63 +208,122 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
         let tee = self.tee.borrow();
         while self.pacts.len() < tee.len() {
             self.pacts.push(tee[self.pacts.len()].borrow().pact.clone());
-            self.buffers.push(vec![Vec::new(); self.peers]);
+            self.buffers.push(ChannelBuffers {
+                per_dest: (0..self.peers).map(|_| None).collect(),
+                all: None,
+            });
         }
     }
 
-    /// Routes one record into the per-channel/per-destination buffers.
+    /// Routes one record into the buffers of every attached channel,
+    /// cloning for all but the last channel and *moving* it into the last —
+    /// the single-consumer case (by far the common one) never clones.
     fn give(&mut self, time: &T, record: D) {
         self.ensure_buffers();
-        for ci in 0..self.pacts.len() {
-            match &self.pacts[ci] {
-                Pact::Pipeline => {
-                    let dest = self.worker;
-                    self.buffers[ci][dest].push(record.clone());
-                    if self.buffers[ci][dest].len() >= crate::config::SEND_BATCH {
+        let channels = self.pacts.len();
+        if channels == 0 {
+            return; // no consumers attached: the record has nowhere to go
+        }
+        for ci in 0..channels - 1 {
+            self.give_to(ci, time, record.clone());
+        }
+        self.give_to(channels - 1, time, record);
+    }
+
+    /// Buffers one record on channel `ci`, posting batches as they fill.
+    fn give_to(&mut self, ci: usize, time: &T, record: D) {
+        let disposition = match &self.pacts[ci] {
+            Pact::Pipeline => Disposition::ToWorker(self.worker),
+            Pact::Exchange(route) => match route(&record) {
+                Route::Worker(hash) => {
+                    Disposition::ToWorker((hash % self.peers as u64) as usize)
+                }
+                Route::All => Disposition::Broadcast,
+            },
+        };
+        match disposition {
+            Disposition::ToWorker(dest) => {
+                // Order barrier: a pending broadcast batch was given first
+                // and must be delivered first.
+                if self.buffers[ci].all.is_some() {
+                    self.post_broadcast(ci, time);
+                }
+                let pool = &self.pool;
+                let lease = self.buffers[ci].per_dest[dest]
+                    .get_or_insert_with(|| pool.checkout());
+                lease.push(record);
+                if lease.len() >= self.batch_size {
+                    self.post(ci, dest, time);
+                }
+            }
+            Disposition::Broadcast => {
+                // Order barrier: flush per-destination batches given first.
+                for dest in 0..self.peers {
+                    if self.buffers[ci].per_dest[dest].is_some() {
                         self.post(ci, dest, time);
                     }
                 }
-                Pact::Exchange(route) => match route(&record) {
-                    Route::Worker(hash) => {
-                        let dest = (hash % self.peers as u64) as usize;
-                        self.buffers[ci][dest].push(record.clone());
-                        if self.buffers[ci][dest].len() >= crate::config::SEND_BATCH {
-                            self.post(ci, dest, time);
-                        }
-                    }
-                    Route::All => {
-                        for dest in 0..self.peers {
-                            self.buffers[ci][dest].push(record.clone());
-                            if self.buffers[ci][dest].len() >= crate::config::SEND_BATCH {
-                                self.post(ci, dest, time);
-                            }
-                        }
-                    }
-                },
+                let shared_pool = &mut self.shared_pool;
+                let arc = self.buffers[ci].all.get_or_insert_with(|| shared_pool.checkout());
+                let buffer = Arc::get_mut(arc).expect("buffered broadcast batch is unique");
+                buffer.push(record);
+                if buffer.len() >= self.batch_size {
+                    self.post_broadcast(ci, time);
+                }
             }
         }
     }
 
-    /// Finalizes a batch: records `+1` at the channel target and enqueues
-    /// the message (local mailboxes immediately; remote staged until the
-    /// worker's progress append).
+    /// Finalizes a point-to-point batch: records `+1` at the channel target
+    /// and enqueues the message (local mailboxes immediately; remote staged
+    /// until the worker's progress broadcast).
     fn post(&mut self, ci: usize, dest: usize, time: &T) {
-        let data = std::mem::take(&mut self.buffers[ci][dest]);
-        if data.is_empty() {
+        let Some(lease) = self.buffers[ci].per_dest[dest].take() else { return };
+        if lease.is_empty() {
+            self.buffers[ci].per_dest[dest] = Some(lease);
             return;
         }
         let tee = self.tee.borrow();
         let mut channel = tee[ci].borrow_mut();
         self.bookkeeping.update(channel.target, time.clone(), 1);
-        channel.push(dest, Message { time: time.clone(), data, from: self.worker });
+        channel.push(
+            dest,
+            Message { time: time.clone(), data: Batch::Owned(lease), from: self.worker },
+        );
+    }
+
+    /// Finalizes a broadcast batch: one shared `Arc` clone per peer (no
+    /// record copies), one `+1` produce count per delivery.
+    fn post_broadcast(&mut self, ci: usize, time: &T) {
+        let Some(arc) = self.buffers[ci].all.take() else { return };
+        if arc.is_empty() {
+            self.buffers[ci].all = Some(arc);
+            return;
+        }
+        // Track for reclamation once every peer drops its clone.
+        self.shared_pool.track(&arc);
+        let tee = self.tee.borrow();
+        let mut channel = tee[ci].borrow_mut();
+        for dest in 0..self.peers {
+            self.bookkeeping.update(channel.target, time.clone(), 1);
+            channel.push(
+                dest,
+                Message { time: time.clone(), data: Batch::Shared(arc.clone()), from: self.worker },
+            );
+        }
     }
 
     /// Flushes all buffered records at `time`.
+    ///
+    /// Per channel, at most one kind of buffer is pending (the give-order
+    /// barriers in `give_to` post the other kind eagerly), so flush order
+    /// here cannot reorder deliveries.
     fn flush(&mut self, time: &T) {
         self.ensure_buffers();
         for ci in 0..self.pacts.len() {
+            self.post_broadcast(ci, time);
             for dest in 0..self.peers {
-                if !self.buffers[ci][dest].is_empty() {
+                if self.buffers[ci].per_dest[dest].is_some() {
                     self.post(ci, dest, time);
                 }
             }
@@ -240,6 +356,15 @@ impl<'a, T: Timestamp, D: Data> Session<'a, T, D> {
     /// Sends a vector of records.
     pub fn give_vec(&mut self, mut records: Vec<D>) {
         for record in records.drain(..) {
+            self.give(record);
+        }
+    }
+
+    /// Sends an incoming message batch onward (the forwarding idiom of
+    /// no-op and map-like operators): owned batches move their records,
+    /// shared ones clone them out.
+    pub fn give_batch(&mut self, batch: Batch<D>) {
+        for record in batch {
             self.give(record);
         }
     }
@@ -456,6 +581,7 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
         let (info, activation) = builder.info();
         let node = builder.node();
         let bookkeeping = scope.bookkeeping();
+        let batch_size = scope.send_batch();
         let mut init = builder.initial_tokens();
         let mut logic = constructor(init.pop().expect("one output"), info.clone());
         let mut input = InputHandle::new(
@@ -466,8 +592,14 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
             T::Summary::default(),
             bookkeeping.clone(),
         );
-        let mut output =
-            OutputHandle::new(Location::source(node, 0), tee, bookkeeping, info.worker, info.peers);
+        let mut output = OutputHandle::new(
+            Location::source(node, 0),
+            tee,
+            bookkeeping,
+            info.worker,
+            info.peers,
+            batch_size,
+        );
         builder.build(activation, Box::new(move || logic(&mut input, &mut output)));
         stream
     }
@@ -493,6 +625,7 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
         let (info, activation) = builder.info();
         let node = builder.node();
         let bookkeeping = scope.bookkeeping();
+        let batch_size = scope.send_batch();
         let mut init = builder.initial_tokens();
         let mut logic = constructor(init.pop().expect("one output"), info.clone());
         let mut input1 = InputHandle::new(
@@ -511,8 +644,14 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
             T::Summary::default(),
             bookkeeping.clone(),
         );
-        let mut output =
-            OutputHandle::new(Location::source(node, 0), tee, bookkeeping, info.worker, info.peers);
+        let mut output = OutputHandle::new(
+            Location::source(node, 0),
+            tee,
+            bookkeeping,
+            info.worker,
+            info.peers,
+            batch_size,
+        );
         builder.build(
             activation,
             Box::new(move || logic(&mut input1, &mut input2, &mut output)),

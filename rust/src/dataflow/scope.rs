@@ -69,8 +69,13 @@ pub struct BuildState<T: Timestamp> {
     pub frontier_handles: Vec<(usize, usize, FrontierHandle<T>)>,
     /// Drainers that move remote messages into local mailboxes.
     pub drainers: Vec<Box<dyn FnMut() -> bool>>,
-    /// Flushers that release staged remote messages post-log-append.
-    pub flushers: Vec<Box<dyn FnMut()>>,
+    /// Flushers that release staged remote messages after the worker's
+    /// progress broadcast; each returns `(sent_any, remaining)` so the
+    /// worker can keep its remote-pending latch set behind full rings.
+    pub flushers: Vec<Box<dyn FnMut() -> (bool, bool)>>,
+    /// Records buffered per output session before a batch is posted
+    /// (settable through `Config::send_batch` before construction).
+    pub send_batch: usize,
     /// Channel id counter.
     pub channels: usize,
     /// Set once the worker has built its tracker; no more graph mutation.
@@ -93,6 +98,7 @@ impl<T: Timestamp> BuildState<T> {
             frontier_handles: Vec::new(),
             drainers: Vec::new(),
             flushers: Vec::new(),
+            send_batch: crate::config::SEND_BATCH,
             channels: 0,
             finalized: false,
             remote_staged: Rc::new(Cell::new(false)),
@@ -139,6 +145,11 @@ impl<T: Timestamp> Scope<T> {
     /// The worker-wide bookkeeping handle.
     pub fn bookkeeping(&self) -> BookkeepingHandle<T> {
         self.state.borrow().bookkeeping.clone()
+    }
+
+    /// Records per output batch (the configured `SEND_BATCH`).
+    pub fn send_batch(&self) -> usize {
+        self.state.borrow().send_batch
     }
 }
 

@@ -41,7 +41,7 @@ impl<T: Timestamp, D: Data> Stream<T, D> {
     /// given pact, delivering messages into `queue`.
     ///
     /// Allocates the channel (same id on every worker), claims the matching
-    /// cross-worker endpoints from the fabric, records the graph edge, and
+    /// cross-worker SPSC rings from the fabric, records the graph edge, and
     /// registers the drainers/flushers with the worker.
     pub fn connect_to(&self, node: usize, port: usize, pact: Pact<D>, queue: LocalQueue<T, D>) {
         let mut state = self.scope.state.borrow_mut();
@@ -67,8 +67,19 @@ impl<T: Timestamp, D: Data> Stream<T, D> {
         }
 
         let staged_flag = state.remote_staged.clone();
+        let stats = state.fabric.stats(index);
         let send: ChannelSendHandle<T, D> = std::rc::Rc::new(std::cell::RefCell::new(
-            ChannelSend::new(channel, target, pact, index, peers, remote, queue, staged_flag),
+            ChannelSend::new(
+                channel,
+                target,
+                pact,
+                index,
+                peers,
+                remote,
+                queue,
+                staged_flag,
+                stats,
+            ),
         ));
         let flush = send.clone();
         state.flushers.push(Box::new(move || flush.borrow_mut().flush_remote()));

@@ -17,6 +17,7 @@ use super::histogram::LatencyHistogram;
 use super::workloads::{build_noop_chain, build_word_count, CompletionProbe, WorkloadInput};
 use crate::config::Config;
 use crate::coordination::Mechanism;
+use crate::worker::allocator::WorkerTelemetry;
 use crate::worker::execute::execute;
 use crate::worker::Worker;
 use std::collections::VecDeque;
@@ -86,6 +87,8 @@ pub enum Outcome {
         histogram: LatencyHistogram,
         /// Tuples/s actually offered (all workers).
         achieved_rate: f64,
+        /// Per-worker fabric telemetry (parks, unparks, ring-full stalls).
+        telemetry: Vec<WorkerTelemetry>,
     },
     /// Overloaded: end-to-end latency exceeded the bound (paper: "DNF").
     Dnf,
@@ -100,7 +103,7 @@ impl Outcome {
 
 /// Per-worker driver result.
 enum WorkerOutcome {
-    Completed { histogram: LatencyHistogram, sent: u64 },
+    Completed { histogram: LatencyHistogram, sent: u64, telemetry: WorkerTelemetry },
     Dnf,
 }
 
@@ -116,17 +119,19 @@ pub fn run(params: Params) -> Outcome {
 
     let mut histogram = LatencyHistogram::new();
     let mut sent_total = 0u64;
+    let mut telemetry = Vec::new();
     for result in results {
         match result {
             WorkerOutcome::Dnf => return Outcome::Dnf,
-            WorkerOutcome::Completed { histogram: h, sent } => {
+            WorkerOutcome::Completed { histogram: h, sent, telemetry: t } => {
                 histogram.merge(&h);
                 sent_total += sent;
+                telemetry.push(t);
             }
         }
     }
     let achieved_rate = sent_total as f64 / params.duration.as_secs_f64();
-    Outcome::Completed { histogram, achieved_rate }
+    Outcome::Completed { histogram, achieved_rate, telemetry }
 }
 
 /// The per-worker open-loop driving loop.
@@ -249,7 +254,7 @@ fn drive(worker: &mut Worker<u64>, params: Params, epoch: Instant) -> WorkerOutc
     if dnf || !pending.is_empty() {
         return WorkerOutcome::Dnf;
     }
-    WorkerOutcome::Completed { histogram, sent: measured_sent }
+    WorkerOutcome::Completed { histogram, sent: measured_sent, telemetry: worker.telemetry() }
 }
 
 #[cfg(test)]
@@ -266,11 +271,12 @@ mod tests {
         params.duration = Duration::from_millis(400);
         params.warmup = Duration::from_millis(100);
         match run(params) {
-            Outcome::Completed { histogram, achieved_rate } => {
+            Outcome::Completed { histogram, achieved_rate, telemetry } => {
                 assert!(histogram.count() > 0, "no latencies recorded");
                 assert!(achieved_rate > 10_000.0, "rate {achieved_rate}");
                 // Sane latencies: under the DNF bound by construction.
                 assert!(histogram.max() < 1_000_000_000);
+                assert_eq!(telemetry.len(), 2, "one telemetry row per worker");
             }
             Outcome::Dnf => panic!("DNF at trivial load"),
         }

@@ -1,8 +1,10 @@
 //! Table formatting for the bench binaries: rows shaped like the paper's
-//! tables (p50 / p999 / max in milliseconds, `DNF` for overload).
+//! tables (p50 / p999 / max in milliseconds, `DNF` for overload), plus the
+//! per-worker fabric telemetry table (parks / unparks / ring-full stalls).
 
 use super::histogram::fmt_ms;
 use super::openloop::Outcome;
+use crate::worker::allocator::WorkerTelemetry;
 
 /// One table row: a configuration label and its outcome.
 pub struct Row {
@@ -22,6 +24,34 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
             fmt_ms(histogram.max()),
         ],
     }
+}
+
+/// Formats per-worker fabric telemetry as table rows.
+pub fn telemetry_rows(telemetry: &[WorkerTelemetry]) -> Vec<Vec<String>> {
+    telemetry
+        .iter()
+        .map(|t| {
+            vec![
+                t.worker.to_string(),
+                t.parks.to_string(),
+                t.unparks.to_string(),
+                t.ring_full_stalls.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// Prints the per-worker parking / backpressure telemetry of a completed
+/// run (no-op for an empty snapshot, e.g. from old outcomes).
+pub fn print_worker_telemetry(telemetry: &[WorkerTelemetry]) {
+    if telemetry.is_empty() {
+        return;
+    }
+    print_table(
+        "worker telemetry",
+        &["worker", "parks", "unparks", "ring-full stalls"],
+        &telemetry_rows(telemetry),
+    );
 }
 
 /// Prints a table with a header; column widths auto-fit.
@@ -68,7 +98,24 @@ mod tests {
     fn completed_rows_are_milliseconds() {
         let mut h = LatencyHistogram::new();
         h.record(1_500_000);
-        let cells = latency_cells(&Outcome::Completed { histogram: h, achieved_rate: 0.0 });
+        let cells = latency_cells(&Outcome::Completed {
+            histogram: h,
+            achieved_rate: 0.0,
+            telemetry: Vec::new(),
+        });
         assert_eq!(cells[0], "1.50");
+    }
+
+    #[test]
+    fn telemetry_rows_format() {
+        let rows = telemetry_rows(&[WorkerTelemetry {
+            worker: 3,
+            parks: 10,
+            unparks: 7,
+            ring_full_stalls: 2,
+        }]);
+        let want: Vec<Vec<String>> =
+            vec![["3", "10", "7", "2"].iter().map(|s| s.to_string()).collect()];
+        assert_eq!(rows, want);
     }
 }

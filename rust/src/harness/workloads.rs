@@ -205,7 +205,7 @@ pub fn build_noop_chain(
                     drop(tok);
                     move |input: &mut _, output: &mut _| {
                         while let Some((token, data)) = input.next() {
-                            output.session(&token).give_vec(data);
+                            output.session(&token).give_batch(data);
                         }
                     }
                 })

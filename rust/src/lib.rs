@@ -22,6 +22,9 @@
 //!
 //! Layers:
 //!
+//! * [`buffer`] — recycling buffer pools ([`buffer::BufferPool`] leases,
+//!   [`buffer::SharedPool`] `Arc` batches): the allocation-free steady
+//!   state of both fabric planes.
 //! * [`progress`] — partial orders, antichains, change batches, pointstamp
 //!   tracking, graph reachability: token counts in, per-port frontiers out.
 //! * [`dataflow`] — graph construction, streams, channels, the token API of
@@ -74,6 +77,7 @@
 //! });
 //! ```
 
+pub mod buffer;
 pub mod config;
 pub mod coordination;
 pub mod dataflow;
@@ -91,7 +95,7 @@ pub mod prelude {
     pub use crate::coordination::notificator::Notificator;
     pub use crate::coordination::watermark::{WatermarkExt, WmInput, WmRecord, WmWiring};
     pub use crate::coordination::Mechanism;
-    pub use crate::dataflow::channels::{Data, Pact, Route};
+    pub use crate::dataflow::channels::{Batch, Data, Pact, Route};
     pub use crate::dataflow::feedback::feedback;
     pub use crate::dataflow::operator::{OperatorExt, OperatorInfo};
     pub use crate::dataflow::probe::{ProbeExt, ProbeHandle};

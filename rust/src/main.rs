@@ -15,7 +15,7 @@
 use std::time::Duration;
 use timestamp_tokens::coordination::Mechanism;
 use timestamp_tokens::harness::openloop::{run, Outcome, Params, Workload};
-use timestamp_tokens::harness::report::latency_cells;
+use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
 use timestamp_tokens::nexmark::bench::{run_nexmark, NexmarkParams, Query};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -53,14 +53,17 @@ fn print_outcome(label: &str, outcome: &Outcome) {
     let lat = latency_cells(outcome);
     match outcome {
         Outcome::Dnf => println!("{label}: DNF (end-to-end latency exceeded 1s)"),
-        Outcome::Completed { achieved_rate, histogram } => println!(
-            "{label}: p50 {} ms  p999 {} ms  max {} ms  ({:.2} M tuples/s, {} stamps)",
-            lat[0],
-            lat[1],
-            lat[2],
-            achieved_rate / 1e6,
-            histogram.count()
-        ),
+        Outcome::Completed { achieved_rate, histogram, telemetry } => {
+            println!(
+                "{label}: p50 {} ms  p999 {} ms  max {} ms  ({:.2} M tuples/s, {} stamps)",
+                lat[0],
+                lat[1],
+                lat[2],
+                achieved_rate / 1e6,
+                histogram.count()
+            );
+            print_worker_telemetry(telemetry);
+        }
     }
 }
 

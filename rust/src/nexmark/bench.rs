@@ -11,6 +11,7 @@ use crate::config::Config;
 use crate::coordination::Mechanism;
 use crate::harness::histogram::LatencyHistogram;
 use crate::harness::openloop::Outcome;
+use crate::worker::allocator::WorkerTelemetry;
 use crate::worker::execute::execute;
 use crate::worker::Worker;
 use std::collections::VecDeque;
@@ -72,7 +73,7 @@ impl NexmarkParams {
 }
 
 enum WorkerOutcome {
-    Completed { histogram: LatencyHistogram, sent: u64 },
+    Completed { histogram: LatencyHistogram, sent: u64, telemetry: WorkerTelemetry },
     Dnf,
 }
 
@@ -88,18 +89,21 @@ pub fn run_nexmark(params: NexmarkParams) -> Outcome {
 
     let mut histogram = LatencyHistogram::new();
     let mut sent_total = 0u64;
+    let mut telemetry = Vec::new();
     for result in results {
         match result {
             WorkerOutcome::Dnf => return Outcome::Dnf,
-            WorkerOutcome::Completed { histogram: h, sent } => {
+            WorkerOutcome::Completed { histogram: h, sent, telemetry: t } => {
                 histogram.merge(&h);
                 sent_total += sent;
+                telemetry.push(t);
             }
         }
     }
     Outcome::Completed {
         histogram,
         achieved_rate: sent_total as f64 / params.duration.as_secs_f64(),
+        telemetry,
     }
 }
 
@@ -204,7 +208,7 @@ fn drive(worker: &mut Worker<u64>, params: NexmarkParams, epoch: Instant) -> Wor
     if dnf || !pending.is_empty() {
         return WorkerOutcome::Dnf;
     }
-    WorkerOutcome::Completed { histogram, sent: measured_sent }
+    WorkerOutcome::Completed { histogram, sent: measured_sent, telemetry: worker.telemetry() }
 }
 
 #[cfg(test)]

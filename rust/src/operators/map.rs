@@ -66,7 +66,7 @@ impl<T: Timestamp, D: Data> MapExt<T, D> for Stream<T, D> {
                     for d in &data {
                         logic(&time, d);
                     }
-                    output.session(&token).give_vec(data);
+                    output.session(&token).give_batch(data);
                 }
             }
         })
@@ -77,7 +77,7 @@ impl<T: Timestamp, D: Data> MapExt<T, D> for Stream<T, D> {
             drop(tok);
             move |input: &mut _, output: &mut _| {
                 while let Some((token, data)) = input.next() {
-                    output.session(&token).give_vec(data);
+                    output.session(&token).give_batch(data);
                 }
             }
         })
@@ -109,12 +109,13 @@ impl<T: Timestamp, D: Data> MapExt<T, D> for Stream<T, D> {
             bookkeeping,
             info.worker,
             info.peers,
+            scope.send_batch(),
         );
         builder.build(
             activation,
             Box::new(move || {
                 while let Some((token, data)) = input.next() {
-                    output.session(&token).give_vec(data);
+                    output.session(&token).give_batch(data);
                 }
             }),
         );

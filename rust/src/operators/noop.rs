@@ -26,7 +26,7 @@ impl<T: Timestamp, D: Data> NoopExt<T, D> for Stream<T, D> {
             drop(tok);
             move |input: &mut _, output: &mut _| {
                 while let Some((token, data)) = input.next() {
-                    output.session(&token).give_vec(data);
+                    output.session(&token).give_batch(data);
                 }
             }
         })

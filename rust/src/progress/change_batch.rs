@@ -108,7 +108,10 @@ impl<T: Ord + Clone + Debug> ChangeBatch<T> {
     /// Sorts and coalesces the updates, removing zero-count entries.
     pub fn compact(&mut self) {
         if self.clean < self.updates.len() {
-            self.updates.sort_by(|a, b| a.0.cmp(&b.0));
+            // Unstable sort: in-place, no scratch allocation (equal keys
+            // are summed immediately below, so stability is irrelevant) —
+            // this keeps the steady-state flush path allocation-free.
+            self.updates.sort_unstable_by(|a, b| a.0.cmp(&b.0));
             let mut write = 0;
             let mut read = 0;
             while read < self.updates.len() {

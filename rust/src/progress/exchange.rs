@@ -48,10 +48,11 @@
 use super::change_batch::ChangeBatch;
 use super::location::Location;
 use super::timestamp::Timestamp;
-use crate::worker::allocator::Fabric;
+use crate::buffer::SharedPool;
+use crate::worker::allocator::{Fabric, WorkerStats};
+use crate::worker::ring::{RingReceiver, RingSendError, RingSender};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 /// One atomic batch of pointstamp updates from one worker.
@@ -61,25 +62,49 @@ pub type ProgressBatch<T> = Vec<((Location, T), i64)>;
 /// allocated from 0 upward, so the top id can never collide.
 pub const PROGRESS_CHANNEL: usize = usize::MAX;
 
+/// In-flight progress batches tracked for reclamation (ROADMAP
+/// "progress-batch pooling"): once every peer has applied and dropped a
+/// batch, the [`SharedPool`] hands the same `Vec` + `Arc` back to the next
+/// flush, so the steady-state flush path performs no allocation.
+const BATCH_POOL_WINDOW: usize = 16;
+
 /// One worker's endpoint of the decentralized progress plane.
 ///
 /// Accumulates the worker's pointstamp updates in a [`ChangeBatch`] (so
 /// produce/consume churn cancels locally before ever crossing a thread
 /// boundary) and, on [`Progcaster::send`], broadcasts the coalesced batch —
-/// one shared `Arc`, no per-peer copy — into every peer's FIFO mailbox. The
-/// worker's own batch loops back through an internal queue so the owning
-/// tracker applies exactly the same stream as every peer.
+/// one shared `Arc`, no per-peer copy — into every peer's FIFO ring
+/// mailbox. The `Vec` *and* the `Arc` of each batch are recycled through a
+/// [`SharedPool`] once every peer has dropped its clone, making the
+/// steady-state flush allocation-free. The worker's own batch loops back
+/// through an internal queue so the owning tracker applies exactly the
+/// same stream as every peer.
+///
+/// Mailbox rings are bounded; a full ring never blocks and never reorders:
+/// the batch goes to a per-peer FIFO spill queue and is re-offered before
+/// any later batch ([`Progcaster::flush_spill`]). Because a spilled batch
+/// has *not* yet reached the peer's mailbox, the worker must not release
+/// staged data messages while any spill is pending — see
+/// [`Progcaster::has_spill`] and the worker flush path — preserving
+/// produce-before-data-release exactly.
 pub struct Progcaster<T: Timestamp> {
     index: usize,
     peers: usize,
     /// Coalesces this worker's updates between flushes.
     pending: ChangeBatch<(Location, T)>,
     /// Per-peer mailbox send halves (`None` at `index`).
-    senders: Vec<Option<Sender<Arc<ProgressBatch<T>>>>>,
+    senders: Vec<Option<RingSender<Arc<ProgressBatch<T>>>>>,
     /// Per-peer mailbox receive halves (`None` at `index`).
-    receivers: Vec<Option<Receiver<Arc<ProgressBatch<T>>>>>,
+    receivers: Vec<Option<RingReceiver<Arc<ProgressBatch<T>>>>>,
     /// Loopback of this worker's own batches, in send order.
     own: VecDeque<Arc<ProgressBatch<T>>>,
+    /// Per-peer FIFO of batches rejected by a full ring, re-offered in
+    /// order before anything newer.
+    spill: Vec<VecDeque<Arc<ProgressBatch<T>>>>,
+    /// Recycler for batch buffers + `Arc`s (progress-batch pooling).
+    pool: SharedPool<ProgressBatch<T>>,
+    /// This worker's fabric counters (ring-full stalls).
+    stats: Arc<WorkerStats>,
 }
 
 impl<T: Timestamp> Progcaster<T> {
@@ -97,6 +122,9 @@ impl<T: Timestamp> Progcaster<T> {
             senders: fabric.broadcast_senders(PROGRESS_CHANNEL, index),
             receivers: fabric.broadcast_receivers(PROGRESS_CHANNEL, index),
             own: VecDeque::new(),
+            spill: (0..peers).map(|_| VecDeque::new()).collect(),
+            pool: SharedPool::new(BATCH_POOL_WINDOW),
+            stats: fabric.stats(index),
         }
     }
 
@@ -140,22 +168,76 @@ impl<T: Timestamp> Progcaster<T> {
     /// (and the loopback queue), returning the batch that went out — or
     /// `None` if the updates netted to nothing.
     ///
+    /// The batch buffer and its `Arc` come from the progcaster's recycling
+    /// pool: in the steady state (peers keeping up, batches dropped after
+    /// application) this path performs no heap allocation.
+    ///
     /// The caller (the worker flush path) must invoke this *before*
     /// releasing any staged data messages covered by the batch's produce
-    /// counts; that ordering is what keeps every partial view conservative.
+    /// counts — and must check [`Progcaster::has_spill`] before releasing:
+    /// a spilled batch has not reached its peer's mailbox yet, and data it
+    /// covers must wait with it.
     pub fn send(&mut self) -> Option<Arc<ProgressBatch<T>>> {
-        let batch = self.pending.take_coalesced();
-        if batch.is_empty() {
+        if self.pending.is_empty() {
             return None;
         }
-        let batch = Arc::new(batch);
-        for sender in self.senders.iter().flatten() {
-            // A disconnected peer has shut down; it no longer needs
-            // progress (its tracker is gone), so dropping is benign.
-            let _ = sender.send(batch.clone());
+        let mut batch = self.pool.checkout();
+        Arc::get_mut(&mut batch)
+            .expect("checked-out batch is unique")
+            .extend(self.pending.drain());
+        self.pool.track(&batch);
+        // Re-offer older spilled batches first so per-peer FIFO holds.
+        self.flush_spill();
+        for peer in 0..self.peers {
+            let Some(sender) = self.senders[peer].as_mut() else { continue };
+            if !self.spill[peer].is_empty() {
+                // FIFO: never overtake a spilled predecessor.
+                self.spill[peer].push_back(batch.clone());
+                continue;
+            }
+            match sender.send(batch.clone()) {
+                Ok(()) => {}
+                Err(RingSendError::Full(rejected)) => {
+                    self.spill[peer].push_back(rejected);
+                    self.stats.note_ring_full();
+                }
+                // A disconnected peer has shut down; it no longer needs
+                // progress (its tracker is gone), so dropping is benign.
+                Err(RingSendError::Disconnected(_)) => {}
+            }
         }
         self.own.push_back(batch.clone());
         Some(batch)
+    }
+
+    /// Re-offers spilled batches to their rings, oldest first. Returns
+    /// true iff any batch moved into a ring.
+    pub fn flush_spill(&mut self) -> bool {
+        let mut moved = false;
+        for peer in 0..self.peers {
+            let Some(sender) = self.senders[peer].as_mut() else { continue };
+            while let Some(batch) = self.spill[peer].pop_front() {
+                match sender.send(batch) {
+                    Ok(()) => moved = true,
+                    Err(RingSendError::Full(batch)) => {
+                        self.spill[peer].push_front(batch);
+                        break;
+                    }
+                    Err(RingSendError::Disconnected(_)) => {
+                        self.spill[peer].clear();
+                        break;
+                    }
+                }
+            }
+        }
+        moved
+    }
+
+    /// True iff some batch is still waiting behind a full peer ring. While
+    /// this holds, the worker must not release staged data messages — the
+    /// spilled batch's produce counts are not yet in every mailbox.
+    pub fn has_spill(&self) -> bool {
+        self.spill.iter().any(|q| !q.is_empty())
     }
 
     /// Pops the next undelivered batch from one sender's stream (`from ==
@@ -166,7 +248,7 @@ impl<T: Timestamp> Progcaster<T> {
         if from == self.index {
             return self.own.pop_front();
         }
-        self.receivers[from].as_ref().and_then(|rx| rx.try_recv().ok())
+        self.receivers[from].as_mut().and_then(|rx| rx.try_recv().ok())
     }
 
     /// Drains every undelivered batch (loopback first, then each peer
@@ -177,12 +259,17 @@ impl<T: Timestamp> Progcaster<T> {
         while let Some(batch) = self.own.pop_front() {
             into.push(batch);
         }
-        for receiver in self.receivers.iter().flatten() {
+        for receiver in self.receivers.iter_mut().flatten() {
             while let Ok(batch) = receiver.try_recv() {
                 into.push(batch);
             }
         }
         into.len() > start
+    }
+
+    /// Reuse/allocation counters of the progress-batch pool (telemetry).
+    pub fn pool_stats(&self) -> crate::buffer::PoolStats {
+        self.pool.stats()
     }
 }
 
@@ -403,6 +490,38 @@ mod tests {
         for handle in handles {
             handle.join().unwrap();
         }
+    }
+
+    /// Overrunning a peer mailbox must spill — never drop, never reorder:
+    /// once the receiver drains, the full per-sender sequence arrives in
+    /// FIFO order, and `has_spill` gates exactly the overrun window.
+    #[test]
+    fn full_mailbox_spills_and_preserves_fifo() {
+        let fabric = Fabric::new(2);
+        let mut a = Progcaster::<u64>::new(0, 2, &fabric);
+        let mut b = Progcaster::<u64>::new(1, 2, &fabric);
+        // Push well past the ring capacity without b draining.
+        let total = crate::worker::allocator::RING_CAPACITY as u64 + 50;
+        for t in 0..total {
+            a.update(Location::source(0, 0), t, 1);
+            a.send().unwrap();
+        }
+        assert!(a.has_spill(), "overrun must spill, not drop");
+        assert!(fabric.telemetry(0).ring_full_stalls > 0, "stall must be counted");
+        // Drain the ring; the spill re-offers in order as space appears.
+        let mut next = 0u64;
+        while next < total {
+            if let Some(batch) = b.recv_one(0) {
+                assert_eq!(*batch, vec![update(0, next, 1)], "per-sender FIFO violated");
+                next += 1;
+            } else {
+                assert!(a.has_spill(), "ring empty but stream incomplete: batches lost");
+                a.flush_spill();
+            }
+        }
+        assert!(b.recv_one(0).is_none());
+        a.flush_spill();
+        assert!(!a.has_spill(), "spill must fully drain once the peer catches up");
     }
 
     // -- ProgressLog (the retained centralized baseline) --

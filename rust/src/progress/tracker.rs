@@ -152,11 +152,13 @@ impl<T: Timestamp> Tracker<T> {
             }
             self.staged[idx].push((t, diff));
         }
-        // Per location: fold into counts, project frontier diffs.
+        // Per location: fold into counts, project frontier diffs. The
+        // staged vectors are drained (not consumed) so their capacity is
+        // reused across applies — this path runs on every progress batch.
         for si in 0..self.staged_dirty.len() {
             let lidx = self.staged_dirty[si];
-            let batch = std::mem::take(&mut self.staged[lidx]);
-            for (t, diff) in self.counts[lidx].update_iter(batch) {
+            let mut batch = std::mem::take(&mut self.staged[lidx]);
+            for (t, diff) in self.counts[lidx].update_iter(batch.drain(..)) {
                 for (tgt, summaries) in &self.summaries.forward[lidx] {
                     for s in summaries {
                         if let Some(projected_t) = s.results_in(&t) {
@@ -168,15 +170,16 @@ impl<T: Timestamp> Tracker<T> {
                     }
                 }
             }
+            self.staged[lidx] = batch;
         }
         self.staged_dirty.clear();
         // Per target port: fold projected diffs into the shared frontier.
         for pi in 0..self.projected_dirty.len() {
             let tgt = self.projected_dirty[pi];
-            let batch = std::mem::take(&mut self.projected[tgt]);
+            let mut batch = std::mem::take(&mut self.projected[tgt]);
             let handle = self.frontiers[tgt].as_ref().expect("target frontier");
             let mut shared = handle.borrow_mut();
-            let changed = shared.antichain.update_iter(batch).count() > 0;
+            let changed = shared.antichain.update_iter(batch.drain(..)).count() > 0;
             if changed {
                 shared.changed = true;
                 let node = self.summaries.locations[tgt].node;
@@ -185,6 +188,7 @@ impl<T: Timestamp> Tracker<T> {
                     self.dirty_nodes.push(node);
                 }
             }
+            self.projected[tgt] = batch;
         }
         self.projected_dirty.clear();
     }

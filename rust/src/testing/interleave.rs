@@ -21,6 +21,15 @@
 //!   exercises);
 //! * **convergence** — once every mailbox drains, all observers agree with
 //!   the ground truth and the dataflow completes.
+//!
+//! Data messages travel through real data-plane rings of the same SPSC
+//! family the engine's fabric hands out, with their own adversarially
+//! scheduled drains — and the rings are deliberately TINY (capacity
+//! [`DATA_RING_CAPACITY`]) so full-ring backpressure, FIFO restaging, and
+//! the spill-gated release rule are exercised constantly, not just the
+//! happy path. Data release models the engine's gate exactly: staged
+//! messages stay put while any progress batch is spilled behind a full
+//! mailbox.
 
 use crate::progress::exchange::Progcaster;
 use crate::progress::location::Location;
@@ -28,7 +37,14 @@ use crate::progress::reachability::{GraphTopology, NodeTopology};
 use crate::progress::tracker::Tracker;
 use crate::testing::{property, Rng};
 use crate::worker::allocator::Fabric;
+use crate::worker::ring::{self, RingReceiver, RingSendError, RingSender};
 use std::collections::HashMap;
+
+/// Deliberately tiny data-ring capacity: backlogs of a handful of
+/// messages already hit `RingSendError::Full`, so the random schedules
+/// drive the restaging path as a matter of course. (`ring::channel`
+/// rounds up to a power of two; 4 is exact.)
+const DATA_RING_CAPACITY: usize = 4;
 
 /// input(0) -> op(1) -> probe(2): two token-bearing sources, two targets.
 fn linear_topology() -> GraphTopology<u64> {
@@ -61,6 +77,10 @@ struct SimWorker {
     inbox: Vec<(Location, u64)>,
     /// Produced messages staged until the next flush: (dest, loc, time).
     staged: Vec<(usize, Location, u64)>,
+    /// Real data-plane ring send halves, per destination (`None` at self).
+    data_tx: Vec<Option<RingSender<(Location, u64)>>>,
+    /// Real data-plane ring receive halves, per sender (`None` at self).
+    data_rx: Vec<Option<RingReceiver<(Location, u64)>>>,
 }
 
 /// The full simulation state.
@@ -78,6 +98,22 @@ impl Sim {
     fn new(peers: usize) -> Self {
         let topology = linear_topology();
         let fabric = Fabric::new(peers);
+        // The simulated dataflow's one data channel: a pairwise fan of
+        // tiny rings (the fabric's own family, but at a capacity small
+        // enough that the schedules exercise Full constantly).
+        let mut txs: Vec<Vec<Option<RingSender<(Location, u64)>>>> =
+            (0..peers).map(|_| (0..peers).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<RingReceiver<(Location, u64)>>>> =
+            (0..peers).map(|_| (0..peers).map(|_| None).collect()).collect();
+        for from in 0..peers {
+            for to in 0..peers {
+                if from != to {
+                    let (tx, rx) = ring::channel(DATA_RING_CAPACITY);
+                    txs[from][to] = Some(tx);
+                    rxs[to][from] = Some(rx);
+                }
+            }
+        }
         let workers = (0..peers)
             .map(|w| SimWorker {
                 caster: Progcaster::new(w, peers, &fabric),
@@ -87,6 +123,8 @@ impl Sim {
                 ],
                 inbox: Vec::new(),
                 staged: Vec::new(),
+                data_tx: std::mem::take(&mut txs[w]),
+                data_rx: std::mem::take(&mut rxs[w]),
             })
             .collect();
         let mut truth_counts = HashMap::new();
@@ -156,14 +194,85 @@ impl Sim {
             }
             self.truth.apply_batch(batch);
         }
-        // Release staged messages unconditionally: a `None` batch with
+        // Model the engine's release gate: while any progress batch sits
+        // spilled behind a full mailbox, its produce counts have not
+        // reached every observer — staged data must wait with it.
+        self.workers[w].caster.flush_spill();
+        if self.workers[w].caster.has_spill() {
+            return;
+        }
+        // Release staged messages: a `None` batch with
         // staged data means the produce counts canceled against consumes
         // of *already-covered* messages at the same pointstamps (the
         // standard ChangeBatch cancellation), so the cover is transitive —
         // the consumed message's own produce count is already broadcast.
+        //
+        // Release goes through the REAL data rings (self-deliveries hit
+        // the inbox directly, as the engine's local mailbox does). A full
+        // ring keeps the message staged — and everything behind it for
+        // the same destination stays staged too, preserving FIFO — which
+        // is exactly the engine's backpressure behavior, and always
+        // conservative.
         let staged = std::mem::take(&mut self.workers[w].staged);
+        let mut restaged: Vec<(usize, Location, u64)> = Vec::new();
         for (dest, loc, t) in staged {
-            self.workers[dest].inbox.push((loc, t));
+            if dest == w {
+                self.workers[w].inbox.push((loc, t));
+                continue;
+            }
+            if restaged.iter().any(|&(d, _, _)| d == dest) {
+                restaged.push((dest, loc, t));
+                continue;
+            }
+            let tx = self.workers[w].data_tx[dest].as_mut().expect("peer ring");
+            match tx.send((loc, t)) {
+                Ok(()) => {}
+                Err(RingSendError::Full((loc, t))) => restaged.push((dest, loc, t)),
+                Err(RingSendError::Disconnected(_)) => {
+                    unreachable!("sim workers never shut down")
+                }
+            }
+        }
+        self.workers[w].staged = restaged;
+    }
+
+    /// Drains (at most) one data message from the ring `from -> r` into
+    /// `r`'s inbox — the adversarial data-delivery step.
+    fn drain_data(&mut self, r: usize, from: usize) -> bool {
+        let Some(rx) = self.workers[r].data_rx[from].as_mut() else {
+            return false;
+        };
+        match rx.try_recv() {
+            Ok((loc, t)) => {
+                self.workers[r].inbox.push((loc, t));
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Drains every data ring and re-offers any ring-full staged
+    /// remainders until both are empty (wind-down helper).
+    fn drain_all_data(&mut self) {
+        loop {
+            let mut any = false;
+            let peers = self.workers.len();
+            for r in 0..peers {
+                for s in 0..peers {
+                    while self.drain_data(r, s) {
+                        any = true;
+                    }
+                }
+            }
+            for w in 0..peers {
+                if !self.workers[w].staged.is_empty() {
+                    self.flush(w);
+                    any = true;
+                }
+            }
+            if !any {
+                return;
+            }
         }
     }
 
@@ -258,16 +367,26 @@ fn prefix_safety_under_random_interleavings() {
                 7 => sim.flush(w),
                 // Deliveries are rarer than actions, so mailboxes build up
                 // genuine backlogs and observers run far behind the truth.
-                _ => {
+                8 => {
                     let r = rng.below(peers as u64) as usize;
                     let s = rng.below(peers as u64) as usize;
                     sim.deliver(r, s);
+                }
+                // Data drains are scheduled independently of progress
+                // deliveries: a message can sit in its ring long after (or
+                // be drained long before) the covering progress batch is
+                // applied anywhere.
+                _ => {
+                    let r = rng.below(peers as u64) as usize;
+                    let s = rng.below(peers as u64) as usize;
+                    sim.drain_data(r, s);
                 }
             }
         }
 
         // Wind down: drop all tokens, flush the drops and release staged
-        // messages, consume everything deliverable, flush the consumes.
+        // messages, drain every data ring, consume everything deliverable,
+        // flush the consumes.
         for w in 0..peers {
             sim.drop_token(w, 0);
             sim.drop_token(w, 1);
@@ -275,6 +394,7 @@ fn prefix_safety_under_random_interleavings() {
         for w in 0..peers {
             sim.flush(w);
         }
+        sim.drain_all_data();
         for w in 0..peers {
             while !sim.workers[w].inbox.is_empty() {
                 let last = sim.workers[w].inbox.len() - 1;
@@ -311,7 +431,8 @@ fn consume_heard_before_produce_stays_conservative() {
     let mut sim = Sim::new(peers);
 
     sim.produce(0, 0, 1); // +1 at target(1,0) t=0, staged for worker 1
-    sim.flush(0); // broadcast the produce, release the message
+    sim.flush(0); // broadcast the produce, release the message into the ring
+    assert!(sim.drain_data(1, 0), "released message must be in the data ring");
     sim.consume(1, 0); // worker 1 consumes it
     sim.flush(1); // broadcast the consume
 

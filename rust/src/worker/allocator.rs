@@ -2,21 +2,26 @@
 //!
 //! Workers build identical dataflow graphs in the same order, so channel
 //! identifiers agree without coordination. Each directed channel instance
-//! `(channel, from, to)` is one `std::sync::mpsc` pair; whichever side asks
-//! first creates the pair and parks the counterpart half for the other
-//! worker to claim.
+//! `(channel, from, to)` is one bounded SPSC FIFO ring ([`super::ring`]) —
+//! the same primitive under the progress plane's mailboxes and the data
+//! plane's exchange channels, so both planes share one transport
+//! abstraction (and a future serializing allocator only has to provide
+//! FIFO byte streams to extend either across processes). Whichever side
+//! asks first creates the ring pair and parks the counterpart half for the
+//! other worker to claim.
 //!
-//! Both pending maps live under ONE mutex: claiming involves looking in one
-//! map and inserting into the other, and taking two locks in
+//! Both pending maps live under ONE mutex (construction-time only — no
+//! lock is ever taken on the message path): claiming involves looking in
+//! one map and inserting into the other, and taking two locks in
 //! caller-dependent order deadlocks (worker A resolving a sender while
 //! worker B resolves the matching receiver).
 //!
 //! Beyond point-to-point channels the fabric provides:
 //!
 //! * a **typed broadcast family** ([`Fabric::broadcast_senders`] /
-//!   [`Fabric::broadcast_receivers`]): the per-peer SPSC mailbox fan used
+//!   [`Fabric::broadcast_receivers`]): the per-peer SPSC ring fan used
 //!   by the decentralized progress plane
-//!   ([`crate::progress::exchange::Progcaster`]) — one FIFO channel per
+//!   ([`crate::progress::exchange::Progcaster`]) — one FIFO ring per
 //!   ordered worker pair, `None` at the self index;
 //! * **park/unpark handles** ([`Fabric::register_worker_thread`] /
 //!   [`Fabric::unpark_peers`]): idle workers park their thread instead of
@@ -24,13 +29,24 @@
 //!   messages into the fabric wakes its peers. The `std::thread` unpark
 //!   token makes this race-free: an unpark delivered between a worker's
 //!   "nothing to do" check and its park causes the park to return
-//!   immediately, so no wakeup is lost.
+//!   immediately, so no wakeup is lost;
+//! * **per-worker telemetry** ([`Fabric::telemetry`]): park/unpark and
+//!   ring-full stall counters, surfaced through the harness reports so
+//!   scheduler pathologies (wakeup storms, backpressure stalls) are
+//!   visible in benchmark output.
 
+use super::ring::{self, RingReceiver, RingSender};
 use std::any::Any;
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::thread::Thread;
+
+/// Slots per fabric ring. Progress batches coalesce and data batches carry
+/// up to `SEND_BATCH` records each, so a modest ring depth covers bursts;
+/// a full ring is not an error — senders keep messages staged and retry
+/// after the peer drains (counted as a stall in [`WorkerTelemetry`]).
+pub const RING_CAPACITY: usize = 256;
 
 type Key = (usize, usize, usize); // (channel, from, to)
 
@@ -38,6 +54,48 @@ type Key = (usize, usize, usize); // (channel, from, to)
 struct Pending {
     senders: HashMap<Key, Box<dyn Any + Send>>,
     receivers: HashMap<Key, Box<dyn Any + Send>>,
+}
+
+/// Shared per-worker event counters, updated lock-free from the worker's
+/// own thread (parks, stalls) and its peers (unparks).
+#[derive(Default)]
+pub struct WorkerStats {
+    parks: AtomicU64,
+    unparks: AtomicU64,
+    ring_full: AtomicU64,
+}
+
+impl WorkerStats {
+    /// Records that the owning worker parked its thread.
+    #[inline]
+    pub fn note_park(&self) {
+        self.parks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records that a peer unparked the owning worker.
+    #[inline]
+    pub fn note_unpark(&self) {
+        self.unparks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records a push rejected by a full ring (backpressure stall).
+    #[inline]
+    pub fn note_ring_full(&self) {
+        self.ring_full.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time snapshot of one worker's fabric counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerTelemetry {
+    /// The worker's index.
+    pub worker: usize,
+    /// Times the worker parked its thread for lack of work.
+    pub parks: u64,
+    /// Times peers unparked this worker's thread.
+    pub unparks: u64,
+    /// Pushes (progress or data) rejected by a full ring and retried.
+    pub ring_full_stalls: u64,
 }
 
 /// The shared endpoint registry.
@@ -49,6 +107,8 @@ pub struct Fabric {
     /// traffic), so wakeups read them lock-free — no shared lock on the
     /// flush hot path.
     threads: Vec<OnceLock<Thread>>,
+    /// Per-worker telemetry counters.
+    stats: Vec<std::sync::Arc<WorkerStats>>,
 }
 
 impl Fabric {
@@ -58,12 +118,36 @@ impl Fabric {
             peers,
             pending: Mutex::new(Pending::default()),
             threads: (0..peers).map(|_| OnceLock::new()).collect(),
+            stats: (0..peers).map(|_| std::sync::Arc::new(WorkerStats::default())).collect(),
         })
     }
 
     /// Number of workers sharing this fabric.
     pub fn peers(&self) -> usize {
         self.peers
+    }
+
+    /// A shared handle on worker `index`'s counters (cloned into channel
+    /// send sides and progcasters so stalls are recorded without reaching
+    /// back into the fabric).
+    pub fn stats(&self, index: usize) -> std::sync::Arc<WorkerStats> {
+        self.stats[index].clone()
+    }
+
+    /// A snapshot of worker `index`'s counters.
+    pub fn telemetry(&self, index: usize) -> WorkerTelemetry {
+        let stats = &self.stats[index];
+        WorkerTelemetry {
+            worker: index,
+            parks: stats.parks.load(Ordering::Relaxed),
+            unparks: stats.unparks.load(Ordering::Relaxed),
+            ring_full_stalls: stats.ring_full.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshots of every worker's counters, in index order.
+    pub fn telemetry_all(&self) -> Vec<WorkerTelemetry> {
+        (0..self.peers).map(|w| self.telemetry(w)).collect()
     }
 
     /// Registers the *calling* thread as worker `index`'s thread, making it
@@ -86,6 +170,7 @@ impl Fabric {
                 continue;
             }
             if let Some(thread) = slot.get() {
+                self.stats[index].note_unpark();
                 thread.unpark();
             }
         }
@@ -93,12 +178,12 @@ impl Fabric {
 
     /// Claims the send halves of channel `chan` from `from` to every other
     /// worker, in peer order (`None` at `from`): the fan-out half of a
-    /// broadcast family. Each `(chan, from, to)` pair is an SPSC FIFO.
+    /// broadcast family. Each `(chan, from, to)` pair is an SPSC FIFO ring.
     pub fn broadcast_senders<M: Send + 'static>(
         &self,
         chan: usize,
         from: usize,
-    ) -> Vec<Option<Sender<M>>> {
+    ) -> Vec<Option<RingSender<M>>> {
         (0..self.peers)
             .map(|to| if to == from { None } else { Some(self.sender(chan, from, to)) })
             .collect()
@@ -111,7 +196,7 @@ impl Fabric {
         &self,
         chan: usize,
         to: usize,
-    ) -> Vec<Option<Receiver<M>>> {
+    ) -> Vec<Option<RingReceiver<M>>> {
         (0..self.peers)
             .map(|from| if from == to { None } else { Some(self.receiver(chan, from, to)) })
             .collect()
@@ -119,13 +204,13 @@ impl Fabric {
 
     /// Claims the send half of `(channel, from, to)`. Called by worker
     /// `from` exactly once per key.
-    pub fn sender<M: Send + 'static>(&self, chan: usize, from: usize, to: usize) -> Sender<M> {
+    pub fn sender<M: Send + 'static>(&self, chan: usize, from: usize, to: usize) -> RingSender<M> {
         let key = (chan, from, to);
         let mut pending = self.pending.lock().unwrap();
         if let Some(tx) = pending.senders.remove(&key) {
-            *tx.downcast::<Sender<M>>().expect("channel type mismatch")
+            *tx.downcast::<RingSender<M>>().expect("channel type mismatch")
         } else {
-            let (tx, rx) = channel::<M>();
+            let (tx, rx) = ring::channel::<M>(RING_CAPACITY);
             pending.receivers.insert(key, Box::new(rx));
             tx
         }
@@ -133,13 +218,18 @@ impl Fabric {
 
     /// Claims the receive half of `(channel, from, to)`. Called by worker
     /// `to` exactly once per key.
-    pub fn receiver<M: Send + 'static>(&self, chan: usize, from: usize, to: usize) -> Receiver<M> {
+    pub fn receiver<M: Send + 'static>(
+        &self,
+        chan: usize,
+        from: usize,
+        to: usize,
+    ) -> RingReceiver<M> {
         let key = (chan, from, to);
         let mut pending = self.pending.lock().unwrap();
         if let Some(rx) = pending.receivers.remove(&key) {
-            *rx.downcast::<Receiver<M>>().expect("channel type mismatch")
+            *rx.downcast::<RingReceiver<M>>().expect("channel type mismatch")
         } else {
-            let (tx, rx) = channel::<M>();
+            let (tx, rx) = ring::channel::<M>(RING_CAPACITY);
             pending.senders.insert(key, Box::new(tx));
             rx
         }
@@ -153,8 +243,8 @@ mod tests {
     #[test]
     fn sender_first_then_receiver() {
         let fabric = Fabric::new(2);
-        let tx = fabric.sender::<u32>(0, 0, 1);
-        let rx = fabric.receiver::<u32>(0, 0, 1);
+        let mut tx = fabric.sender::<u32>(0, 0, 1);
+        let mut rx = fabric.receiver::<u32>(0, 0, 1);
         tx.send(42).unwrap();
         assert_eq!(rx.recv().unwrap(), 42);
     }
@@ -162,8 +252,8 @@ mod tests {
     #[test]
     fn receiver_first_then_sender() {
         let fabric = Fabric::new(2);
-        let rx = fabric.receiver::<u32>(3, 1, 0);
-        let tx = fabric.sender::<u32>(3, 1, 0);
+        let mut rx = fabric.receiver::<u32>(3, 1, 0);
+        let mut tx = fabric.sender::<u32>(3, 1, 0);
         tx.send(7).unwrap();
         assert_eq!(rx.recv().unwrap(), 7);
     }
@@ -171,10 +261,10 @@ mod tests {
     #[test]
     fn distinct_keys_distinct_channels() {
         let fabric = Fabric::new(2);
-        let tx_a = fabric.sender::<u32>(0, 0, 1);
-        let tx_b = fabric.sender::<u32>(1, 0, 1);
-        let rx_a = fabric.receiver::<u32>(0, 0, 1);
-        let rx_b = fabric.receiver::<u32>(1, 0, 1);
+        let mut tx_a = fabric.sender::<u32>(0, 0, 1);
+        let mut tx_b = fabric.sender::<u32>(1, 0, 1);
+        let mut rx_a = fabric.receiver::<u32>(0, 0, 1);
+        let mut rx_b = fabric.receiver::<u32>(1, 0, 1);
         tx_a.send(1).unwrap();
         tx_b.send(2).unwrap();
         assert_eq!(rx_a.recv().unwrap(), 1);
@@ -186,10 +276,10 @@ mod tests {
         let fabric = Fabric::new(2);
         let f2 = fabric.clone();
         let handle = std::thread::spawn(move || {
-            let rx = f2.receiver::<String>(9, 0, 1);
+            let mut rx = f2.receiver::<String>(9, 0, 1);
             rx.recv().unwrap()
         });
-        let tx = fabric.sender::<String>(9, 0, 1);
+        let mut tx = fabric.sender::<String>(9, 0, 1);
         tx.send("hello".to_string()).unwrap();
         assert_eq!(handle.join().unwrap(), "hello");
     }
@@ -227,15 +317,15 @@ mod tests {
     #[test]
     fn broadcast_family_matches_pairwise_endpoints() {
         let fabric = Fabric::new(3);
-        let senders0 = fabric.broadcast_senders::<u64>(9, 0);
+        let mut senders0 = fabric.broadcast_senders::<u64>(9, 0);
         assert_eq!(senders0.len(), 3);
         assert!(senders0[0].is_none(), "no self channel");
-        let rx1 = fabric.broadcast_receivers::<u64>(9, 1);
-        let rx2 = fabric.broadcast_receivers::<u64>(9, 2);
-        senders0[1].as_ref().unwrap().send(11).unwrap();
-        senders0[2].as_ref().unwrap().send(22).unwrap();
-        assert_eq!(rx1[0].as_ref().unwrap().recv().unwrap(), 11);
-        assert_eq!(rx2[0].as_ref().unwrap().recv().unwrap(), 22);
+        let mut rx1 = fabric.broadcast_receivers::<u64>(9, 1);
+        let mut rx2 = fabric.broadcast_receivers::<u64>(9, 2);
+        senders0[1].as_mut().unwrap().send(11).unwrap();
+        senders0[2].as_mut().unwrap().send(22).unwrap();
+        assert_eq!(rx1[0].as_mut().unwrap().recv().unwrap(), 11);
+        assert_eq!(rx2[0].as_mut().unwrap().recv().unwrap(), 22);
         assert!(rx1[1].is_none() && rx2[2].is_none());
     }
 
@@ -259,6 +349,7 @@ mod tests {
             parked_for < std::time::Duration::from_secs(4),
             "worker should have been unparked early, parked {parked_for:?}"
         );
+        assert_eq!(fabric.telemetry(1).unparks, 1);
     }
 
     #[test]
@@ -269,5 +360,19 @@ mod tests {
         // unpark the caller's own slot.
         fabric.unpark_peers(2);
         fabric.unpark_peers(0);
+        assert_eq!(fabric.telemetry(2).unparks, 1);
+        assert_eq!(fabric.telemetry(0).unparks, 0);
+    }
+
+    #[test]
+    fn telemetry_counters_accumulate() {
+        let fabric = Fabric::new(2);
+        let stats = fabric.stats(1);
+        stats.note_park();
+        stats.note_park();
+        stats.note_ring_full();
+        let t = fabric.telemetry(1);
+        assert_eq!((t.parks, t.ring_full_stalls), (2, 1));
+        assert_eq!(fabric.telemetry_all().len(), 2);
     }
 }

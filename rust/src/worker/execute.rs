@@ -49,6 +49,8 @@ where
     let fabric = Fabric::new(peers);
     let build = Arc::new(build);
     let pin = config.pin_workers;
+    let progress_flush = config.progress_flush;
+    let send_batch = config.send_batch;
 
     let mut handles = Vec::with_capacity(peers);
     for index in 0..peers {
@@ -62,6 +64,8 @@ where
                         pin_to_core(index);
                     }
                     let mut worker = Worker::new(index, peers, fabric);
+                    worker.set_progress_flush(progress_flush);
+                    worker.set_send_batch(send_batch);
                     build(&mut worker)
                 })
                 .expect("spawn worker thread"),

@@ -5,9 +5,9 @@
 //! activation request, draining the shared token bookkeeping after each so
 //! the accumulated changes reflect atomic operator actions (§4), (3) when
 //! the flush cadence is due, broadcasts its coalesced atomic batch through
-//! its [`Progcaster`]'s per-peer FIFO mailboxes and THEN releases staged
-//! remote data messages, and (4) folds every batch arriving on its own
-//! mailboxes (its loopback included) into its tracker.
+//! its [`Progcaster`]'s per-peer FIFO ring mailboxes and THEN releases
+//! staged remote data messages, and (4) folds every batch arriving on its
+//! own mailboxes (its loopback included) into its tracker.
 //!
 //! # Step ordering and conservatism
 //!
@@ -23,15 +23,22 @@
 //!   is released to the data fabric, so no consumer can account a message
 //!   whose produce count is not already in every observer's mailbox.
 //!
-//! Any interleaving of deliveries is then a conservative view, which is
-//! why workers never contend: appends are wait-free pushes into SPSC
-//! mailboxes, and the adaptive-cadence workaround the old mutex log needed
-//! under contention is gone. Idle workers no longer busy-spin either:
-//! [`Worker::step_or_park`] parks the thread, and peers unpark it whenever
-//! they push progress or data into the fabric.
+//! Both fabric planes ride the same bounded SPSC rings ([`ring`]), so
+//! backpressure is explicit: a full progress mailbox parks the batch in
+//! the progcaster's FIFO spill queue — and data release is *gated* on the
+//! spill being empty, since a spilled batch's produce counts have not
+//! reached every mailbox yet; a full data ring keeps messages staged in
+//! the channel (also FIFO) and the worker retries next flush. Holding a
+//! message longer is always conservative, so neither case threatens
+//! safety, and both resolve because every live worker drains its rings
+//! each step. Idle workers don't busy-spin: [`Worker::step_or_park`] parks
+//! the thread, and peers unpark it whenever they push progress or data
+//! into the fabric. Parks, unparks, and ring-full stalls are counted per
+//! worker ([`Worker::telemetry`]) and surfaced by the harness reports.
 
 pub mod allocator;
 pub mod execute;
+pub mod ring;
 
 use crate::dataflow::channels::Data;
 use crate::dataflow::input::InputSession;
@@ -41,17 +48,19 @@ use crate::progress::exchange::{Progcaster, ProgressBatch};
 use crate::progress::location::Location;
 use crate::progress::timestamp::Timestamp;
 use crate::progress::tracker::Tracker;
-use allocator::Fabric;
+use allocator::{Fabric, WorkerStats, WorkerTelemetry};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Progress-flush cadence: how long a worker may sit on pending progress
-/// updates (token downgrades, message accounting) and staged remote data
-/// before broadcasting them and releasing the fabric. Coalescing is what
-/// keeps fine timestamp quanta (2^8 ns in Figure 6/7) from turning every
-/// scheduling step into a broadcast; the cost is a bounded addition to the
-/// completion-latency floor. With per-peer SPSC mailboxes there is no
-/// contention to adapt to, so the cadence is a constant.
+/// Default progress-flush cadence: how long a worker may sit on pending
+/// progress updates (token downgrades, message accounting) and staged
+/// remote data before broadcasting them and releasing the fabric.
+/// Coalescing is what keeps fine timestamp quanta (2^8 ns in Figure 6/7)
+/// from turning every scheduling step into a broadcast; the cost is a
+/// bounded addition to the completion-latency floor. With per-peer SPSC
+/// mailboxes there is no contention to adapt to, so the cadence is a
+/// constant — configurable per run through `Config::progress_flush`
+/// (swept by `micro_progress --sweep-cadence`).
 pub const PROGRESS_FLUSH: Duration = Duration::from_micros(20);
 
 /// Pending updates beyond this force an immediate flush (bounds memory and
@@ -72,7 +81,7 @@ pub struct Worker<T: Timestamp> {
     tracker: Option<Tracker<T>>,
     ops: Vec<OpCore<T>>,
     drainers: Vec<Box<dyn FnMut() -> bool>>,
-    flushers: Vec<Box<dyn FnMut()>>,
+    flushers: Vec<Box<dyn FnMut() -> (bool, bool)>>,
     /// Scratch: bookkeeping drain target, moved into the progcaster.
     scratch: Vec<((Location, T), i64)>,
     read_buf: Vec<Arc<ProgressBatch<T>>>,
@@ -82,6 +91,10 @@ pub struct Worker<T: Timestamp> {
     remote_pending: bool,
     /// When this worker last flushed (broadcast + fabric release).
     last_flush: Instant,
+    /// Progress-flush cadence (defaults to [`PROGRESS_FLUSH`]).
+    progress_flush: Duration,
+    /// This worker's fabric telemetry counters.
+    stats: Arc<WorkerStats>,
 }
 
 impl<T: Timestamp> Worker<T> {
@@ -91,6 +104,7 @@ impl<T: Timestamp> Worker<T> {
     pub fn new(index: usize, peers: usize, fabric: Arc<Fabric>) -> Self {
         fabric.register_worker_thread(index);
         let progcaster = Progcaster::new(index, peers, &fabric);
+        let stats = fabric.stats(index);
         Worker {
             scope: Scope::new(BuildState::new(index, peers, fabric.clone())),
             fabric,
@@ -104,6 +118,8 @@ impl<T: Timestamp> Worker<T> {
             steps: 0,
             remote_pending: false,
             last_flush: Instant::now(),
+            progress_flush: PROGRESS_FLUSH,
+            stats,
         }
     }
 
@@ -120,6 +136,23 @@ impl<T: Timestamp> Worker<T> {
     /// The dataflow build scope (for operator builders).
     pub fn scope(&self) -> Scope<T> {
         self.scope.clone()
+    }
+
+    /// Overrides the progress-flush cadence (see `Config::progress_flush`).
+    pub fn set_progress_flush(&mut self, cadence: Duration) {
+        self.progress_flush = cadence;
+    }
+
+    /// Overrides the output batch size for operators built *after* this
+    /// call (see `Config::send_batch`).
+    pub fn set_send_batch(&mut self, records: usize) {
+        self.scope.state.borrow_mut().send_batch = records.max(1);
+    }
+
+    /// A snapshot of this worker's fabric counters (parks, unparks,
+    /// ring-full stalls).
+    pub fn telemetry(&self) -> WorkerTelemetry {
+        self.fabric.telemetry(self.progcaster.index())
     }
 
     /// Creates a new dataflow input; returns the session used to feed and
@@ -196,16 +229,19 @@ impl<T: Timestamp> Worker<T> {
         }
 
         // (3) Flush policy. Progress batches and staged remote data move
-        // on one cadence: every PROGRESS_FLUSH the worker broadcasts its
-        // coalesced batch into the per-peer mailboxes and THEN releases
-        // staged fabric messages, so a batch's `+1` produce counts always
-        // precede the data they cover (produce-before-data-release).
-        // Coalescing across steps lets produce/consume pairs cancel inside
-        // the ChangeBatch before ever crossing a thread boundary.
+        // on one cadence: every `progress_flush` the worker broadcasts its
+        // coalesced batch into the per-peer ring mailboxes and THEN
+        // releases staged fabric messages, so a batch's `+1` produce
+        // counts always precede the data they cover
+        // (produce-before-data-release). Coalescing across steps lets
+        // produce/consume pairs cancel inside the ChangeBatch before ever
+        // crossing a thread boundary.
         self.stage_pending();
-        let have_work = self.progcaster.has_updates() || self.remote_pending;
+        let have_work = self.progcaster.has_updates()
+            || self.remote_pending
+            || self.progcaster.has_spill();
         let big = self.progcaster.pending_len() >= FLUSH_BATCH_LIMIT;
-        if big || (have_work && self.last_flush.elapsed() >= PROGRESS_FLUSH) {
+        if big || (have_work && self.last_flush.elapsed() >= self.progress_flush) {
             active |= self.flush();
         }
 
@@ -231,18 +267,31 @@ impl<T: Timestamp> Worker<T> {
         };
     }
 
-    /// Broadcasts the pending batch, releases staged remote data, and wakes
-    /// parked peers if anything went out. Returns true iff anything did.
+    /// Broadcasts the pending batch and — if every batch (this one and any
+    /// earlier spill) actually reached the peer mailboxes — releases staged
+    /// remote data, then wakes parked peers if anything went out. Returns
+    /// true iff anything did.
     fn flush(&mut self) -> bool {
         let sent = self.progcaster.send().is_some();
-        // Release staged remote messages (their +1s are now in every
-        // peer's mailbox, strictly before this data).
-        for flush in &mut self.flushers {
-            flush();
+        let spill_moved = self.progcaster.flush_spill();
+        let mut released = false;
+        if !self.progcaster.has_spill() {
+            // Every produce count is now in every peer's mailbox: staged
+            // data may follow it into the fabric
+            // (produce-before-data-release). A full *data* ring keeps its
+            // messages staged; the latch stays set and we retry next flush.
+            let mut remaining = false;
+            for flush in &mut self.flushers {
+                let (s, r) = flush();
+                released |= s;
+                remaining |= r;
+            }
+            self.remote_pending = remaining;
         }
-        let released = std::mem::replace(&mut self.remote_pending, false);
+        // else: a progress batch is still spilled behind a full mailbox —
+        // data it covers must wait with it (remote_pending stays latched).
         self.last_flush = Instant::now();
-        if sent || released {
+        if sent || spill_moved || released {
             self.fabric.unpark_peers(self.progcaster.index());
         }
         sent || released
@@ -262,22 +311,49 @@ impl<T: Timestamp> Worker<T> {
     }
 
     /// Forces the pending progress batch into the peer mailboxes and
-    /// releases any staged remote data.
+    /// releases any staged remote data, retrying through ring
+    /// backpressure.
     ///
     /// MUST run before a worker stops stepping (and runs automatically at
     /// the end of [`step_while`](Worker::step_while) and on drop): with the
     /// coalesced flush cadence, a worker can observe its own completion
     /// while still holding staged messages — e.g. the final broadcast
     /// watermarks — that its peers need in order to complete themselves.
+    /// The retry loop keeps draining inbound rings (progress *and* data)
+    /// so mutual backpressure between finishing workers always resolves;
+    /// disconnected peers shed their traffic automatically.
     pub fn flush_now(&mut self) {
         if self.tracker.is_none() {
             return;
         }
         self.stage_pending();
-        if self.progcaster.has_updates() || self.remote_pending {
-            self.flush();
+        // Generous bound: only pathological schedules (a peer neither
+        // stepping nor shutting down for seconds) can reach it, and giving
+        // up merely leaves data staged — conservative, never unsafe.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if self.progcaster.has_updates()
+                || self.remote_pending
+                || self.progcaster.has_spill()
+            {
+                self.flush();
+            }
+            self.apply_inbound();
+            if !self.remote_pending && !self.progcaster.has_spill() {
+                break;
+            }
+            // Keep our own rings moving while we wait for the peer's.
+            for drain in &mut self.drainers {
+                drain();
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            // Brief sleep between retries: backpressure clears on the
+            // peer's timescale, so a hot spin would only burn the core
+            // (and inflate the ring-full stall counter).
+            std::thread::park_timeout(Duration::from_micros(50));
         }
-        self.apply_inbound();
     }
 
     /// Like [`Worker::step`], but parks the thread (up to `timeout`) when
@@ -291,14 +367,23 @@ impl<T: Timestamp> Worker<T> {
         if self.step() {
             return true;
         }
-        if self.progcaster.has_updates() || self.remote_pending {
-            // Never park on coalesced work peers may be waiting for.
-            self.flush_now();
+        if self.progcaster.has_updates()
+            || self.remote_pending
+            || self.progcaster.has_spill()
+        {
+            // Never park on coalesced work peers may be waiting for: one
+            // non-blocking flush attempt. If ring backpressure holds some
+            // of it (rare), returning true keeps the caller stepping —
+            // each step retries and drains inbound — instead of spinning
+            // hot inside a retry loop here.
+            self.flush();
+            self.apply_inbound();
             return true;
         }
         // Safe against lost wakeups: an unpark issued since the (empty)
         // mailbox drain in `step` left a token, making this return
         // immediately.
+        self.stats.note_park();
         std::thread::park_timeout(timeout);
         false
     }

@@ -1,0 +1,321 @@
+//! Bounded SPSC FIFO rings: the one transport primitive under both fabric
+//! planes.
+//!
+//! Every `(channel, from, to)` endpoint pair the [`Fabric`] hands out —
+//! progress mailboxes and data channels alike — is one of these rings: a
+//! fixed-capacity Lamport queue with exactly one producer and one consumer.
+//! Both sides run wait-free: the producer owns the tail index, the consumer
+//! owns the head index, each publishes its index with a `Release` store and
+//! reads the other's with an `Acquire` load (cached locally and refreshed
+//! only when the ring looks full/empty, so the steady state touches one
+//! cache line per side). There are no locks to convoy on and no allocation
+//! per message — the `std::sync::mpsc` pairs this replaces took a mutex on
+//! every send *and* allocated a node per message.
+//!
+//! A full ring rejects the push (`RingSendError::Full`) instead of
+//! blocking: callers keep the message staged and retry after peers drain
+//! (see `ChannelSend::flush_remote` and `Progcaster`'s spill queue), which
+//! keeps the whole fabric deadlock-free by construction. Disconnects are
+//! detected through a shared `closed` flag set when either endpoint drops.
+//!
+//! [`Fabric`]: super::allocator::Fabric
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
+
+/// Why a [`RingSender::send`] was rejected; the message is handed back.
+pub enum RingSendError<M> {
+    /// The ring is at capacity; retry after the consumer drains.
+    Full(M),
+    /// The receiving endpoint was dropped; the message cannot arrive.
+    Disconnected(M),
+}
+
+impl<M> RingSendError<M> {
+    /// Recovers the rejected message.
+    pub fn into_inner(self) -> M {
+        match self {
+            RingSendError::Full(m) | RingSendError::Disconnected(m) => m,
+        }
+    }
+}
+
+impl<M> std::fmt::Debug for RingSendError<M> {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        match self {
+            RingSendError::Full(_) => write!(f, "RingSendError::Full(..)"),
+            RingSendError::Disconnected(_) => write!(f, "RingSendError::Disconnected(..)"),
+        }
+    }
+}
+
+/// The storage shared by the two endpoints.
+struct Shared<M> {
+    /// Power-of-two slot array; index `i` lives at `slots[i & mask]`.
+    slots: Box<[UnsafeCell<MaybeUninit<M>>]>,
+    mask: usize,
+    /// Next slot the producer will write (monotonic, never wrapped).
+    tail: AtomicUsize,
+    /// Next slot the consumer will read (monotonic, never wrapped).
+    head: AtomicUsize,
+    /// Set when either endpoint drops.
+    closed: AtomicBool,
+}
+
+// SAFETY: slot `i` is written exactly once by the single producer before it
+// publishes `tail = i + 1` (Release), and read exactly once by the single
+// consumer after observing `tail > i` (Acquire); the consumer then
+// publishes `head = i + 1`, after which the producer may reuse the slot —
+// again through an Acquire load of `head`. No slot is ever accessed by both
+// sides between the same pair of index publications.
+unsafe impl<M: Send> Send for Shared<M> {}
+unsafe impl<M: Send> Sync for Shared<M> {}
+
+impl<M> Drop for Shared<M> {
+    fn drop(&mut self) {
+        // Both endpoints are gone (`Arc` exclusivity): drop the messages
+        // still sitting between head and tail.
+        let head = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        for i in head..tail {
+            // SAFETY: slots in [head, tail) hold initialized, unconsumed
+            // messages, each visited exactly once.
+            unsafe { (*self.slots[i & self.mask].get()).assume_init_drop() };
+        }
+    }
+}
+
+/// The producing endpoint of an SPSC ring. Not cloneable: single producer.
+pub struct RingSender<M> {
+    shared: Arc<Shared<M>>,
+    /// Producer-local copy of `tail` (authoritative between publications).
+    tail: usize,
+    /// Last observed consumer head (refreshed only when the ring looks full).
+    head_cache: usize,
+}
+
+/// The consuming endpoint of an SPSC ring. Not cloneable: single consumer.
+pub struct RingReceiver<M> {
+    shared: Arc<Shared<M>>,
+    /// Consumer-local copy of `head` (authoritative between publications).
+    head: usize,
+    /// Last observed producer tail (refreshed only when the ring looks empty).
+    tail_cache: usize,
+}
+
+/// Creates an SPSC ring holding at least `capacity` messages (rounded up to
+/// a power of two, minimum 2).
+pub fn channel<M: Send>(capacity: usize) -> (RingSender<M>, RingReceiver<M>) {
+    let capacity = capacity.max(2).next_power_of_two();
+    let shared = Arc::new(Shared {
+        slots: (0..capacity).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect(),
+        mask: capacity - 1,
+        tail: AtomicUsize::new(0),
+        head: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+    });
+    (
+        RingSender { shared: shared.clone(), tail: 0, head_cache: 0 },
+        RingReceiver { shared, head: 0, tail_cache: 0 },
+    )
+}
+
+impl<M: Send> RingSender<M> {
+    /// The fixed capacity of the ring.
+    pub fn capacity(&self) -> usize {
+        self.shared.mask + 1
+    }
+
+    /// Pushes `m`, or hands it back if the ring is full or the receiver is
+    /// gone. Wait-free; never blocks.
+    pub fn send(&mut self, m: M) -> Result<(), RingSendError<M>> {
+        if self.shared.closed.load(Ordering::Acquire) {
+            return Err(RingSendError::Disconnected(m));
+        }
+        let capacity = self.shared.mask + 1;
+        if self.tail - self.head_cache == capacity {
+            self.head_cache = self.shared.head.load(Ordering::Acquire);
+            if self.tail - self.head_cache == capacity {
+                return Err(RingSendError::Full(m));
+            }
+        }
+        // SAFETY: `tail - head >= capacity` was just excluded, so the slot
+        // at `tail` has been consumed (or never used); the single producer
+        // writes it before publishing the new tail.
+        unsafe { (*self.shared.slots[self.tail & self.shared.mask].get()).write(m) };
+        self.tail += 1;
+        self.shared.tail.store(self.tail, Ordering::Release);
+        Ok(())
+    }
+}
+
+impl<M> Drop for RingSender<M> {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<M: Send> RingReceiver<M> {
+    /// Pops the next message, mirroring `std::sync::mpsc::Receiver::try_recv`
+    /// semantics: `Empty` when the ring is (currently) drained,
+    /// `Disconnected` once it is drained *and* the sender is gone.
+    pub fn try_recv(&mut self) -> Result<M, TryRecvError> {
+        if self.head == self.tail_cache {
+            self.tail_cache = self.shared.tail.load(Ordering::Acquire);
+            if self.head == self.tail_cache {
+                // Check closed *after* the tail re-load: a sender that
+                // pushed then dropped publishes tail before closed, so a
+                // Disconnected verdict can never hide a delivered message.
+                if self.shared.closed.load(Ordering::Acquire) {
+                    let tail = self.shared.tail.load(Ordering::Acquire);
+                    if tail == self.head {
+                        return Err(TryRecvError::Disconnected);
+                    }
+                    self.tail_cache = tail;
+                } else {
+                    return Err(TryRecvError::Empty);
+                }
+            }
+        }
+        // SAFETY: `tail > head`, so the slot at `head` holds an initialized
+        // message the single consumer has not yet read.
+        let slot = self.shared.slots[self.head & self.shared.mask].get();
+        let m = unsafe { (*slot).assume_init_read() };
+        self.head += 1;
+        self.shared.head.store(self.head, Ordering::Release);
+        Ok(m)
+    }
+
+    /// Blocking receive by spinning on [`try_recv`](RingReceiver::try_recv)
+    /// with yields — a convenience for tests and shutdown paths, not the
+    /// hot path (workers park instead; see the worker step loop).
+    pub fn recv(&mut self) -> Result<M, TryRecvError> {
+        loop {
+            match self.try_recv() {
+                Ok(m) => return Ok(m),
+                Err(TryRecvError::Disconnected) => return Err(TryRecvError::Disconnected),
+                Err(TryRecvError::Empty) => std::thread::yield_now(),
+            }
+        }
+    }
+}
+
+impl<M> Drop for RingReceiver<M> {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::Release);
+        // Unconsumed messages are dropped by `Shared::drop` once the
+        // sender's handle is gone too.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_same_thread() {
+        let (mut tx, mut rx) = channel::<u64>(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.try_recv().unwrap(), i);
+        }
+        assert!(matches!(rx.try_recv(), Err(TryRecvError::Empty)));
+    }
+
+    #[test]
+    fn full_ring_rejects_and_recovers() {
+        let (mut tx, mut rx) = channel::<u64>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        match tx.send(3) {
+            Err(RingSendError::Full(m)) => assert_eq!(m, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(rx.try_recv().unwrap(), 1);
+        tx.send(3).unwrap();
+        assert_eq!(rx.try_recv().unwrap(), 2);
+        assert_eq!(rx.try_recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let (tx, _rx) = channel::<u8>(100);
+        assert_eq!(tx.capacity(), 128);
+        let (tx, _rx) = channel::<u8>(0);
+        assert_eq!(tx.capacity(), 2);
+    }
+
+    #[test]
+    fn receiver_drop_disconnects_sender() {
+        let (mut tx, rx) = channel::<u64>(4);
+        drop(rx);
+        assert!(matches!(tx.send(1), Err(RingSendError::Disconnected(1))));
+    }
+
+    #[test]
+    fn sender_drop_yields_disconnected_after_drain() {
+        let (mut tx, mut rx) = channel::<u64>(4);
+        tx.send(7).unwrap();
+        drop(tx);
+        // The in-flight message is still delivered...
+        assert_eq!(rx.try_recv().unwrap(), 7);
+        // ...and only then does the receiver see the disconnect.
+        assert!(matches!(rx.try_recv(), Err(TryRecvError::Disconnected)));
+    }
+
+    #[test]
+    fn messages_dropped_with_ring_are_freed() {
+        // Rc-free leak check via a counting guard.
+        use std::sync::atomic::AtomicUsize;
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        struct Guard;
+        impl Guard {
+            fn new() -> Self {
+                LIVE.fetch_add(1, Ordering::SeqCst);
+                Guard
+            }
+        }
+        impl Drop for Guard {
+            fn drop(&mut self) {
+                LIVE.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        let (mut tx, rx) = channel::<Guard>(8);
+        tx.send(Guard::new()).unwrap();
+        tx.send(Guard::new()).unwrap();
+        assert_eq!(LIVE.load(Ordering::SeqCst), 2);
+        drop(tx);
+        drop(rx);
+        assert_eq!(LIVE.load(Ordering::SeqCst), 0, "undelivered messages must drop");
+    }
+
+    #[test]
+    fn cross_thread_fifo_under_backpressure() {
+        let (mut tx, mut rx) = channel::<u64>(4);
+        let producer = std::thread::spawn(move || {
+            for i in 0..10_000u64 {
+                let mut m = i;
+                loop {
+                    match tx.send(m) {
+                        Ok(()) => break,
+                        Err(RingSendError::Full(back)) => {
+                            m = back;
+                            std::thread::yield_now();
+                        }
+                        Err(RingSendError::Disconnected(_)) => panic!("receiver vanished"),
+                    }
+                }
+            }
+        });
+        for expect in 0..10_000u64 {
+            assert_eq!(rx.recv().unwrap(), expect, "FIFO order violated");
+        }
+        producer.join().unwrap();
+        assert!(matches!(rx.recv(), Err(TryRecvError::Disconnected)));
+    }
+}
