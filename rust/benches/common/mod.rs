@@ -27,6 +27,10 @@ pub struct BenchArgs {
     /// `micro_progress` only: sweep the progress-flush cadence instead of
     /// running the standard suite (ROADMAP cadence-tuning item).
     pub sweep_cadence: bool,
+    /// `micro_exchange` only: sweep the fabric ring capacity instead of
+    /// running the standard suite, reporting throughput against the
+    /// ring-full stall counters (ROADMAP ring-sizing item).
+    pub sweep_ring: bool,
 }
 
 impl BenchArgs {
@@ -40,6 +44,7 @@ impl BenchArgs {
             scale: 1.0,
             selector: None,
             sweep_cadence: false,
+            sweep_ring: false,
         };
         let mut iter = std::env::args().skip(1);
         while let Some(arg) = iter.next() {
@@ -65,6 +70,7 @@ impl BenchArgs {
                     }
                 }
                 "--sweep-cadence" => args.sweep_cadence = true,
+                "--sweep-ring" => args.sweep_ring = true,
                 "--bench" | "--nocapture" => {} // cargo-bench artifacts
                 other if !other.starts_with('-') => {
                     args.selector = Some(other.to_string());

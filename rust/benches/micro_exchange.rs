@@ -2,11 +2,16 @@
 //! allocation + per-peer record clones over `std::sync::mpsc`) vs. the
 //! pooled path (recycled `Lease`/`Arc` batches over the fabric's SPSC
 //! rings) — records/sec and per-batch delivery latency for the three
-//! pacts, at 1/2/4/8 workers.
+//! pacts, at 1/2/4/8 workers — plus a **forwarded-pipeline scenario**
+//! driving the real engine through an operator chain, per-record
+//! (`map`) vs whole-batch lease handoff (`map_in_place`).
 //!
-//! Run: `cargo bench --bench micro_exchange -- [--quick]`.
-//! Emits `BENCH_exchange.json` next to the tables so future PRs compare
-//! against a trajectory instead of re-asserting the win.
+//! Run: `cargo bench --bench micro_exchange -- [--quick] [--sweep-ring]`.
+//! `--sweep-ring` sweeps `Config::ring_capacity` for the exchange pact and
+//! reports throughput next to the ring-full stall counters (the ROADMAP
+//! ring-sizing item), writing `BENCH_exchange_ring.json`. The standard
+//! suite emits `BENCH_exchange.json`; both are trajectories for future
+//! PRs to compare against instead of re-asserting the win.
 
 mod common;
 
@@ -16,7 +21,10 @@ use std::sync::mpsc;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 use timestamp_tokens::buffer::{BufferPool, Lease, SharedPool};
+use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::operators::map::MapExt;
 use timestamp_tokens::worker::allocator::Fabric;
+use timestamp_tokens::worker::execute::execute_single;
 use timestamp_tokens::worker::ring::RingSendError;
 
 /// Records per batch (the engine's default `SEND_BATCH`).
@@ -40,11 +48,12 @@ impl PactKind {
 }
 
 /// Per-worker result: records consumed, seconds from barrier to drained,
-/// per-batch delivery latencies (ns).
+/// per-batch delivery latencies (ns), sends rejected by a full ring.
 struct WorkerResult {
     records: u64,
     secs: f64,
     latencies: Vec<u64>,
+    stalls: u64,
 }
 
 /// Routes record `i` produced by worker `w` to a destination (splits load
@@ -174,7 +183,7 @@ fn run_seed(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResult>
                     std::thread::yield_now();
                 }
             }
-            WorkerResult { records, secs: start.elapsed().as_secs_f64(), latencies }
+            WorkerResult { records, secs: start.elapsed().as_secs_f64(), latencies, stalls: 0 }
         }));
     }
     handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -191,8 +200,13 @@ enum PooledMsg {
     Done,
 }
 
-fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResult> {
-    let fabric = Fabric::new(workers);
+fn run_pooled(
+    pact: PactKind,
+    workers: usize,
+    batches: usize,
+    ring_capacity: usize,
+) -> Vec<WorkerResult> {
+    let fabric = Fabric::with_ring_capacity(workers, ring_capacity);
     let barrier = Arc::new(Barrier::new(workers));
     let mut handles = Vec::new();
     for w in (0..workers).rev() {
@@ -206,6 +220,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
             let mut local: VecDeque<PooledMsg> = VecDeque::new();
             let mut latencies = Vec::with_capacity(batches * 2);
             let mut records = 0u64;
+            let mut stalls = 0u64;
             let mut dones_expected = rxs.iter().flatten().count();
             let consume = |msg: PooledMsg,
                                latencies: &mut Vec<u64>,
@@ -267,7 +282,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
                         if dest == w {
                             local.push_back(msg);
                         } else {
-                            send_with_backpressure(&mut txs, dest, msg, &mut rxs, &mut local);
+                            stalls += send_with_backpressure(&mut txs, dest, msg, &mut rxs, &mut local);
                         }
                     }
                 }
@@ -279,7 +294,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
                     local.push_back(PooledMsg::Shared(at, arc.clone()));
                     for dest in 0..workers {
                         if dest != w {
-                            send_with_backpressure(
+                            stalls += send_with_backpressure(
                                 &mut txs,
                                 dest,
                                 PooledMsg::Shared(at, arc.clone()),
@@ -308,7 +323,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
                     if dest == w {
                         local.push_back(msg);
                     } else {
-                        send_with_backpressure(&mut txs, dest, msg, &mut rxs, &mut local);
+                        stalls += send_with_backpressure(&mut txs, dest, msg, &mut rxs, &mut local);
                     }
                 }
             }
@@ -319,7 +334,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
                     local.push_back(PooledMsg::Shared(at, arc.clone()));
                     for dest in 0..workers {
                         if dest != w {
-                            send_with_backpressure(
+                            stalls += send_with_backpressure(
                                 &mut txs,
                                 dest,
                                 PooledMsg::Shared(at, arc.clone()),
@@ -332,7 +347,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
             }
             for dest in 0..workers {
                 if dest != w {
-                    send_with_backpressure(&mut txs, dest, PooledMsg::Done, &mut rxs, &mut local);
+                    stalls += send_with_backpressure(&mut txs, dest, PooledMsg::Done, &mut rxs, &mut local);
                 }
             }
             drop(txs);
@@ -351,7 +366,7 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
                     std::thread::yield_now();
                 }
             }
-            WorkerResult { records, secs: start.elapsed().as_secs_f64(), latencies }
+            WorkerResult { records, secs: start.elapsed().as_secs_f64(), latencies, stalls }
         }));
     }
     handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -359,20 +374,23 @@ fn run_pooled(pact: PactKind, workers: usize, batches: usize) -> Vec<WorkerResul
 
 /// Pushes into a bounded ring, draining own inbound (and local) queues
 /// while the destination is full so mutual backpressure cannot deadlock.
+/// Returns the number of full-ring rejections (stalls) endured.
 fn send_with_backpressure(
     txs: &mut [Option<timestamp_tokens::worker::ring::RingSender<PooledMsg>>],
     dest: usize,
     msg: PooledMsg,
     rxs: &mut [Option<timestamp_tokens::worker::ring::RingReceiver<PooledMsg>>],
     overflow: &mut VecDeque<PooledMsg>,
-) {
-    let Some(tx) = txs[dest].as_mut() else { return };
+) -> u64 {
+    let Some(tx) = txs[dest].as_mut() else { return 0 };
     let mut msg = msg;
+    let mut stalls = 0u64;
     loop {
         match tx.send(msg) {
-            Ok(()) => return,
+            Ok(()) => return stalls,
             Err(RingSendError::Full(back)) => {
                 msg = back;
+                stalls += 1;
                 // Pull inbound traffic into the local queue so peers can
                 // make matching progress; consumption happens upstream.
                 for rx in rxs.iter_mut().flatten() {
@@ -382,8 +400,91 @@ fn send_with_backpressure(
                 }
                 std::thread::yield_now();
             }
-            Err(RingSendError::Disconnected(_)) => return,
+            Err(RingSendError::Disconnected(_)) => return stalls,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forwarded-pipeline scenario: the real engine, per-record vs whole-batch.
+// ---------------------------------------------------------------------------
+
+/// Drives `input -> stages x map -> probe` on one worker end to end.
+/// `whole_batch` builds the chain from `map_in_place` (uniquely owned
+/// batches are mutated in their arriving buffer and the lease is handed
+/// off whole on each pipeline channel); otherwise from `map` (every stage
+/// moves every record into fresh output buffers). Returns wall seconds.
+fn run_pipeline_chain(stages: usize, epochs: usize, whole_batch: bool) -> f64 {
+    execute_single::<u64, _, _>(move |worker| {
+        let (mut input, stream) = worker.new_input::<u64>();
+        let mut s = stream;
+        for _ in 0..stages {
+            s = if whole_batch {
+                s.map_in_place(|x| *x = x.wrapping_mul(2547).wrapping_add(1))
+            } else {
+                s.map(|x| x.wrapping_mul(2547).wrapping_add(1))
+            };
+        }
+        let probe = s.probe();
+        worker.finalize();
+        let start = Instant::now();
+        for t in 0..epochs as u64 {
+            input.advance_to(t);
+            for i in 0..BATCH as u64 {
+                input.send(i);
+            }
+            // Drain as we go so mailboxes stay shallow, as a live loop
+            // would.
+            worker.step();
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        start.elapsed().as_secs_f64()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Ring-capacity sweep (ROADMAP "ring sizing"): throughput vs stalls.
+// ---------------------------------------------------------------------------
+
+fn sweep_ring(args: &BenchArgs) {
+    let batches: usize = if args.quick { 128 } else { 1024 };
+    let workers = args.workers.clamp(2, 4);
+    let capacities = [4usize, 16, 64, 256, 1024];
+    println!(
+        "ring-capacity sweep: exchange pact, {workers} workers, {batches} batches/worker x {BATCH} records"
+    );
+    println!(
+        "{:>10} {:>14} {:>10} {:>10} {:>12}",
+        "capacity", "records/s", "p50 ns", "p99 ns", "stalls"
+    );
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"micro_exchange_ring\",\n");
+    json.push_str(&format!("  \"workers\": {workers},\n"));
+    json.push_str(&format!("  \"batches_per_worker\": {batches},\n"));
+    json.push_str("  \"capacities\": {\n");
+    for (ci, &capacity) in capacities.iter().enumerate() {
+        let results = run_pooled(PactKind::Exchange, workers, batches, capacity);
+        let stalls: u64 = results.iter().map(|r| r.stalls).sum();
+        let m = measure(results);
+        println!(
+            "{:>10} {:>14} {:>10} {:>10} {:>12}",
+            capacity, m.records_per_sec, m.p50_ns, m.p99_ns, stalls
+        );
+        json.push_str(&format!(
+            "    \"{}\": {{\"records_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"ring_full_stalls\": {}}}{}\n",
+            capacity,
+            m.records_per_sec,
+            m.p50_ns,
+            m.p99_ns,
+            stalls,
+            if ci + 1 < capacities.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    match std::fs::write("BENCH_exchange_ring.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_exchange_ring.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_exchange_ring.json: {e}"),
     }
 }
 
@@ -414,6 +515,10 @@ fn measure(results: Vec<WorkerResult>) -> Measurement {
 
 fn main() {
     let args = BenchArgs::parse();
+    if args.sweep_ring {
+        sweep_ring(&args);
+        return;
+    }
     let batches: usize = if args.quick { 128 } else { 1024 };
     let worker_counts = [1usize, 2, 4, 8];
     let pacts = [PactKind::Pipeline, PactKind::Exchange, PactKind::Broadcast];
@@ -441,7 +546,12 @@ fn main() {
             for &workers in &worker_counts {
                 let m = match path {
                     "seed" => measure(run_seed(pact, workers, batches)),
-                    _ => measure(run_pooled(pact, workers, batches)),
+                    _ => measure(run_pooled(
+                        pact,
+                        workers,
+                        batches,
+                        timestamp_tokens::worker::allocator::RING_CAPACITY,
+                    )),
                 };
                 println!(
                     "{:>10} {:>8} {:>8} {:>14} {:>10} {:>10} {:>9}",
@@ -496,7 +606,41 @@ fn main() {
             }
         }
     }
+    json.push_str("  },\n");
+
+    // Forwarded-pipeline scenario: the real engine, deep pipeline chain,
+    // per-record `map` vs whole-batch `map_in_place` lease handoff.
+    let stages = 8usize;
+    let epochs: usize = if args.quick { 64 } else { 512 };
+    println!();
+    println!(
+        "forwarded pipeline: 1 worker, {stages}-stage chain, {epochs} epochs x {BATCH} records (real engine)"
+    );
+    println!("{:>12} {:>14}", "path", "records/s");
+    let total_records = (epochs * BATCH) as f64;
+    let mut rates = Vec::new();
+    for (label, whole_batch) in [("per_record", false), ("whole_batch", true)] {
+        let secs = run_pipeline_chain(stages, epochs, whole_batch).max(1e-9);
+        let rate = (total_records / secs) as u64;
+        println!("{:>12} {:>14}", label, rate);
+        rates.push((label, rate));
+    }
+    json.push_str("  \"forwarding\": {\n");
+    json.push_str(&format!("    \"stages\": {stages},\n"));
+    json.push_str(&format!("    \"epochs\": {epochs},\n"));
+    for (ri, (label, rate)) in rates.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{label}\": {{\"records_per_sec\": {rate}}}{}\n",
+            if ri + 1 < rates.len() { "," } else { "" }
+        ));
+    }
     json.push_str("  }\n}\n");
+    wins.push(format!(
+        "pipeline forwarding @ {stages} stages: whole-batch {} rec/s vs per-record {} rec/s ({})",
+        rates[1].1,
+        rates[0].1,
+        if rates[1].1 > rates[0].1 { "WIN" } else { "LOSS" }
+    ));
 
     println!();
     for line in &wins {

@@ -1,0 +1,459 @@
+//! Progress-tracker microbenchmark: the flat sorted-run
+//! [`MutableAntichain`] vs the `BTreeMap`-backed representation it
+//! replaced, across the topology shapes the tracker actually stresses —
+//! deep chains, diamonds, feedback loops, and 100+-operator graphs at fine
+//! timestamp quanta (the paper's Figure 6/7 regime) — plus trajectory
+//! numbers for full [`Tracker::apply`] projection on real topologies.
+//!
+//! Run: `cargo bench --bench micro_tracker -- [--quick]`.
+//! Emits `BENCH_tracker.json` next to the tables so future PRs compare
+//! against a trajectory instead of re-asserting the win.
+
+mod common;
+
+use common::{percentile, BenchArgs};
+use std::collections::BTreeMap;
+use std::time::Instant;
+use timestamp_tokens::progress::antichain::{Antichain, MutableAntichain};
+use timestamp_tokens::progress::location::Location;
+use timestamp_tokens::progress::reachability::{GraphTopology, NodeTopology};
+use timestamp_tokens::progress::tracker::Tracker;
+use timestamp_tokens::testing::Rng;
+
+/// Batches timed per latency sample (amortizes the `Instant` overhead).
+const CHUNK: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Baseline: the BTreeMap-backed MutableAntichain this PR replaced,
+// reproduced here (u64 timestamps) so the comparison stays runnable.
+// ---------------------------------------------------------------------------
+
+/// The pre-flat representation: counts in a `BTreeMap` (one node
+/// allocation per new timestamp), incremental frontier maintenance
+/// identical to the engine's.
+struct BTreeBaseline {
+    counts: BTreeMap<u64, i64>,
+    frontier: Vec<u64>,
+    changes: Vec<(u64, i64)>,
+    scratch: Vec<u64>,
+}
+
+impl BTreeBaseline {
+    fn new() -> Self {
+        BTreeBaseline {
+            counts: BTreeMap::new(),
+            frontier: Vec::new(),
+            changes: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    fn update_iter<I: IntoIterator<Item = (u64, i64)>>(
+        &mut self,
+        updates: I,
+    ) -> std::vec::Drain<'_, (u64, i64)> {
+        self.changes.clear();
+        let mut dirty = false;
+        for (t, diff) in updates {
+            if diff == 0 {
+                continue;
+            }
+            let entry = self.counts.entry(t).or_insert(0);
+            let old = *entry;
+            *entry += diff;
+            let new = *entry;
+            if new == 0 {
+                self.counts.remove(&t);
+            }
+            if old <= 0 && new > 0 {
+                if !self.frontier.iter().any(|f| *f <= t && *f != t) {
+                    dirty = true;
+                }
+            } else if old > 0 && new <= 0 && self.frontier.iter().any(|f| *f == t) {
+                dirty = true;
+            }
+        }
+        if dirty {
+            self.rebuild();
+        }
+        self.changes.drain(..)
+    }
+
+    fn rebuild(&mut self) {
+        let mut new_frontier = std::mem::take(&mut self.scratch);
+        new_frontier.clear();
+        for (t, &count) in self.counts.iter() {
+            if count <= 0 {
+                continue;
+            }
+            if !new_frontier.iter().any(|f| f <= t) {
+                new_frontier.push(*t);
+            }
+        }
+        for old in self.frontier.iter() {
+            if !new_frontier.contains(old) {
+                self.changes.push((*old, -1));
+            }
+        }
+        for new in new_frontier.iter() {
+            if !self.frontier.contains(new) {
+                self.changes.push((*new, 1));
+            }
+        }
+        self.scratch = std::mem::replace(&mut self.frontier, new_frontier);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workloads: atomic update batches as one port frontier would see them.
+// ---------------------------------------------------------------------------
+
+/// A named stream of atomic `(u64, i64)` update batches.
+struct Workload {
+    name: &'static str,
+    batches: Vec<Vec<(u64, i64)>>,
+}
+
+/// A probe port at the end of a chain of `depth` operators: `depth` live
+/// pointstamps, each downgrading round-robin — the frontier holds many
+/// distinct timestamps and a new one appears on every batch.
+fn deep_chain(depth: usize, steps: usize) -> Workload {
+    let mut tokens: Vec<u64> = (0..depth as u64).collect();
+    let batches = (0..steps)
+        .map(|s| {
+            let i = s % depth;
+            let old = tokens[i];
+            tokens[i] += 1;
+            vec![(tokens[i], 1), (old, -1)]
+        })
+        .collect();
+    Workload { name: "deep_chain", batches }
+}
+
+/// A fan-in port below `width` parallel branches: branch tokens churn, and
+/// message produce/consume pairs land at the fan-in between downgrades.
+fn diamond(width: usize, steps: usize) -> Workload {
+    let mut rng = Rng::new(0xd1a30);
+    let mut tokens: Vec<u64> = vec![0; width];
+    let batches = (0..steps)
+        .map(|s| {
+            let i = rng.below(width as u64) as usize;
+            let old = tokens[i];
+            tokens[i] += 1;
+            if s % 3 == 0 {
+                // A message at the branch's old time is produced and
+                // consumed within one atomic batch alongside the downgrade.
+                vec![(tokens[i], 1), (old, -1), (old, 1), (old, -1)]
+            } else {
+                vec![(tokens[i], 1), (old, -1)]
+            }
+        })
+        .collect();
+    Workload { name: "diamond", batches }
+}
+
+/// A port inside a feedback loop: the loop token cycles strictly forward
+/// while the ingress token advances slowly, and consumes are sometimes
+/// observed before their produces (the decentralized negative-count case).
+fn feedback(steps: usize) -> Workload {
+    let mut rng = Rng::new(0xfeedb);
+    let mut loop_t = 0u64;
+    let mut ingress_t = 0u64;
+    let mut owed: Vec<u64> = Vec::new();
+    let mut batches = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let mut batch = Vec::with_capacity(4);
+        let old = loop_t;
+        loop_t += 1;
+        batch.push((loop_t, 1));
+        batch.push((old, -1));
+        if s % 8 == 7 {
+            let old_in = ingress_t;
+            ingress_t += 8;
+            batch.push((ingress_t, 1));
+            batch.push((old_in, -1));
+        }
+        if rng.below(4) == 0 {
+            // Early consume: the produce lands a few batches later.
+            batch.push((loop_t + 2, -1));
+            owed.push(loop_t + 2);
+        } else if let Some(t) = owed.pop() {
+            batch.push((t, 1));
+        }
+        batches.push(batch);
+    }
+    Workload { name: "feedback", batches }
+}
+
+/// A port fed by a 100+-operator graph at quantum 1: `ops` live
+/// pointstamps, several downgrading per batch — the densest frontier the
+/// Figure 6/7 regime produces.
+fn wide_fine(ops: usize, steps: usize) -> Workload {
+    let mut rng = Rng::new(0x51de);
+    let mut tokens: Vec<u64> = (0..ops as u64).collect();
+    let batches = (0..steps)
+        .map(|_| {
+            let mut batch = Vec::with_capacity(8);
+            for _ in 0..4 {
+                let i = rng.below(ops as u64) as usize;
+                let old = tokens[i];
+                tokens[i] += 1;
+                batch.push((tokens[i], 1));
+                batch.push((old, -1));
+            }
+            batch
+        })
+        .collect();
+    Workload { name: "wide_fine", batches }
+}
+
+// ---------------------------------------------------------------------------
+// Measurement.
+// ---------------------------------------------------------------------------
+
+struct Measurement {
+    batches_per_sec: u64,
+    p50_ns: u64,
+    p99_ns: u64,
+}
+
+/// Applies every batch through `fold`, timing `CHUNK`-batch windows.
+fn drive<F: FnMut(&[(u64, i64)]) -> u64>(batches: &[Vec<(u64, i64)>], mut fold: F) -> Measurement {
+    let mut sink = 0u64;
+    let mut latencies = Vec::with_capacity(batches.len() / CHUNK + 1);
+    let start = Instant::now();
+    for chunk in batches.chunks(CHUNK) {
+        let t0 = Instant::now();
+        for batch in chunk {
+            sink = sink.wrapping_add(fold(batch));
+        }
+        latencies.push(t0.elapsed().as_nanos() as u64 / chunk.len() as u64);
+    }
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    std::hint::black_box(sink);
+    latencies.sort_unstable();
+    Measurement {
+        batches_per_sec: (batches.len() as f64 / secs) as u64,
+        p50_ns: percentile(&latencies, 50.0),
+        p99_ns: percentile(&latencies, 99.0),
+    }
+}
+
+fn run_flat(w: &Workload) -> Measurement {
+    let mut ma = MutableAntichain::<u64>::new();
+    drive(&w.batches, |batch| {
+        let mut acc = 0u64;
+        for (t, d) in ma.update_iter(batch.iter().cloned()) {
+            acc = acc.wrapping_add(t ^ d as u64);
+        }
+        acc
+    })
+}
+
+fn run_btree(w: &Workload) -> Measurement {
+    let mut ma = BTreeBaseline::new();
+    drive(&w.batches, |batch| {
+        let mut acc = 0u64;
+        for (t, d) in ma.update_iter(batch.iter().cloned()) {
+            acc = acc.wrapping_add(t ^ d as u64);
+        }
+        acc
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tracker-level trajectories: real Tracker::apply on real topologies.
+// ---------------------------------------------------------------------------
+
+/// input -> `ops` chained operators -> probe.
+fn chain_topology(ops: usize) -> GraphTopology<u64> {
+    let mut g = GraphTopology::default();
+    g.nodes.push(NodeTopology::identity("input", 0, 1));
+    for i in 0..ops {
+        g.nodes.push(NodeTopology::identity(&format!("op{i}"), 1, 1));
+    }
+    g.nodes.push(NodeTopology::identity("probe", 1, 0));
+    for i in 0..=ops {
+        g.edges.push((Location::source(i, 0), Location::target(i + 1, 0)));
+    }
+    g
+}
+
+/// input -> `width` parallel branches -> merge -> probe.
+fn diamond_topology(width: usize) -> GraphTopology<u64> {
+    let mut g = GraphTopology::default();
+    g.nodes.push(NodeTopology::identity("input", 0, 1));
+    for i in 0..width {
+        g.nodes.push(NodeTopology::identity(&format!("branch{i}"), 1, 1));
+    }
+    let merge = g.nodes.len();
+    g.nodes.push(NodeTopology::identity("merge", 1, 1));
+    g.nodes.push(NodeTopology::identity("probe", 1, 0));
+    for i in 0..width {
+        g.edges.push((Location::source(0, 0), Location::target(1 + i, 0)));
+        g.edges.push((Location::source(1 + i, 0), Location::target(merge, 0)));
+    }
+    g.edges.push((Location::source(merge, 0), Location::target(merge + 1, 0)));
+    g
+}
+
+/// input -> body <-> feedback (strictly advancing) -> probe: the cyclic
+/// case, where projection must traverse the loop summary.
+fn feedback_topology() -> GraphTopology<u64> {
+    let mut g = GraphTopology::default();
+    g.nodes.push(NodeTopology::identity("input", 0, 1));
+    g.nodes.push(NodeTopology::identity("body", 1, 1));
+    let mut fb = NodeTopology::identity("feedback", 1, 1);
+    fb.internal[0][0] = Antichain::from_elem(1u64);
+    g.nodes.push(fb);
+    g.nodes.push(NodeTopology::identity("probe", 1, 0));
+    g.edges.push((Location::source(0, 0), Location::target(1, 0)));
+    g.edges.push((Location::source(1, 0), Location::target(2, 0)));
+    g.edges.push((Location::source(2, 0), Location::target(1, 0)));
+    g.edges.push((Location::source(1, 0), Location::target(3, 0)));
+    g
+}
+
+/// Round-robin token downgrades through `Tracker::apply`, timed in chunks.
+/// Returns `(name, node_count, measurement)`.
+fn run_tracker(
+    name: &str,
+    topology: &GraphTopology<u64>,
+    steps: usize,
+) -> (String, usize, Measurement) {
+    let sources: Vec<usize> =
+        (0..topology.nodes.len()).filter(|&n| topology.nodes[n].outputs > 0).collect();
+    let mut tracker = Tracker::new(topology, 1);
+    let mut times: Vec<u64> = vec![0; topology.nodes.len()];
+    let mut latencies = Vec::with_capacity(steps / CHUNK + 1);
+    let mut dirty = Vec::new();
+    let start = Instant::now();
+    let mut done = 0usize;
+    while done < steps {
+        let t0 = Instant::now();
+        let span = CHUNK.min(steps - done);
+        for s in 0..span {
+            let node = sources[(done + s) % sources.len()];
+            let old = times[node];
+            times[node] += 1;
+            tracker.apply([
+                ((Location::source(node, 0), times[node]), 1),
+                ((Location::source(node, 0), old), -1),
+            ]);
+            dirty.clear();
+            tracker.drain_dirty_nodes(&mut dirty);
+        }
+        latencies.push(t0.elapsed().as_nanos() as u64 / span as u64);
+        done += span;
+    }
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    latencies.sort_unstable();
+    (
+        name.to_string(),
+        topology.nodes.len(),
+        Measurement {
+            batches_per_sec: (steps as f64 / secs) as u64,
+            p50_ns: percentile(&latencies, 50.0),
+            p99_ns: percentile(&latencies, 99.0),
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Reporting.
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps: usize = if args.quick { 40_000 } else { 400_000 };
+
+    let workloads = [
+        deep_chain(64, steps),
+        diamond(16, steps),
+        feedback(steps),
+        wide_fine(128, steps),
+    ];
+
+    println!("tracker substrate: flat sorted-run MutableAntichain vs BTreeMap baseline");
+    println!("({steps} atomic batches per shape; per-batch ns averaged over {CHUNK}-batch chunks)");
+    println!(
+        "{:>12} {:>8} {:>14} {:>10} {:>10}",
+        "shape", "impl", "batches/s", "p50 ns", "p99 ns"
+    );
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"micro_tracker\",\n");
+    json.push_str(&format!("  \"steps\": {steps},\n"));
+    json.push_str("  \"antichain\": {\n");
+    let mut wins = Vec::new();
+    for (wi, w) in workloads.iter().enumerate() {
+        let flat = run_flat(w);
+        let btree = run_btree(w);
+        for (label, m) in [("flat", &flat), ("btree", &btree)] {
+            println!(
+                "{:>12} {:>8} {:>14} {:>10} {:>10}",
+                w.name, label, m.batches_per_sec, m.p50_ns, m.p99_ns
+            );
+        }
+        json.push_str(&format!(
+            "    \"{}\": {{\"flat\": {{\"batches_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}}}, \"btree\": {{\"batches_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}}}}}{}\n",
+            w.name,
+            flat.batches_per_sec,
+            flat.p50_ns,
+            flat.p99_ns,
+            btree.batches_per_sec,
+            btree.p50_ns,
+            btree.p99_ns,
+            if wi + 1 < workloads.len() { "," } else { "" }
+        ));
+        wins.push(format!(
+            "{}: flat {} batches/s vs btree {} batches/s ({})",
+            w.name,
+            flat.batches_per_sec,
+            btree.batches_per_sec,
+            if flat.batches_per_sec > btree.batches_per_sec { "WIN" } else { "LOSS" }
+        ));
+    }
+    json.push_str("  },\n");
+
+    // Tracker-level trajectories (no baseline: the tracker only has the
+    // flat representation now; these pin full-projection cost over time).
+    let tracker_steps = steps / 4;
+    println!();
+    println!("Tracker::apply projection ({tracker_steps} applies per topology)");
+    println!(
+        "{:>16} {:>8} {:>14} {:>10} {:>10}",
+        "topology", "nodes", "applies/s", "p50 ns", "p99 ns"
+    );
+    let runs = [
+        run_tracker("deep_chain_128", &chain_topology(128), tracker_steps),
+        run_tracker("diamond_32", &diamond_topology(32), tracker_steps),
+        run_tracker("feedback_loop", &feedback_topology(), tracker_steps),
+    ];
+    json.push_str("  \"tracker\": {\n");
+    for (ri, (name, nodes, m)) in runs.iter().enumerate() {
+        println!(
+            "{:>16} {:>8} {:>14} {:>10} {:>10}",
+            name, nodes, m.batches_per_sec, m.p50_ns, m.p99_ns
+        );
+        json.push_str(&format!(
+            "    \"{}\": {{\"nodes\": {}, \"applies_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}}}{}\n",
+            name,
+            nodes,
+            m.batches_per_sec,
+            m.p50_ns,
+            m.p99_ns,
+            if ri + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+
+    println!();
+    for line in &wins {
+        println!("{line}");
+    }
+    match std::fs::write("BENCH_tracker.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_tracker.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_tracker.json: {e}"),
+    }
+}

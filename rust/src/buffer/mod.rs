@@ -24,6 +24,13 @@
 //! Neither pool blocks, neither pool allocates on the reuse path, and both
 //! degrade gracefully: a full free list drops the buffer, an empty one
 //! allocates — correctness never depends on recycling succeeding.
+//!
+//! Leases are also the unit of **whole-batch forwarding**: because a
+//! [`Lease`] carries its home pool with it, a pipeline operator can hand
+//! an arriving batch to its own output as-is (`Session::give_batch`) and
+//! let it travel any number of hops — whichever worker finally drains it
+//! returns the capacity to the pool that minted it, with every
+//! intermediate operator paying zero per-record and zero per-buffer cost.
 
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;

@@ -53,6 +53,12 @@ pub struct Config {
     /// Records buffered per output session before a message batch is
     /// posted. Defaults to [`SEND_BATCH`].
     pub send_batch: usize,
+    /// Slots per fabric SPSC ring (both planes: progress mailboxes and
+    /// data channels). Defaults to
+    /// [`RING_CAPACITY`](crate::worker::allocator::RING_CAPACITY); swept
+    /// by `micro_exchange --sweep-ring` against the ring-full stall
+    /// counters.
+    pub ring_capacity: usize,
 }
 
 impl Default for Config {
@@ -64,6 +70,7 @@ impl Default for Config {
             artifacts_dir: "artifacts".to_string(),
             progress_flush: crate::worker::PROGRESS_FLUSH,
             send_batch: SEND_BATCH,
+            ring_capacity: crate::worker::allocator::RING_CAPACITY,
         }
     }
 }
@@ -93,5 +100,6 @@ mod tests {
         assert_eq!(c.agg_backend, AggBackend::Native);
         assert_eq!(c.progress_flush, crate::worker::PROGRESS_FLUSH);
         assert_eq!(c.send_batch, SEND_BATCH);
+        assert_eq!(c.ring_capacity, crate::worker::allocator::RING_CAPACITY);
     }
 }

@@ -28,6 +28,13 @@
 //! `peers` record-by-record copies. A full ring is backpressure, not an
 //! error: messages stay staged (per destination, FIFO) and are retried on
 //! the next flush, after the peer drains.
+//!
+//! On pipeline channels the payload is not only pooled but *forwarded*: a
+//! uniquely owned [`Batch::Owned`] arriving at a map/filter-style operator
+//! is transformed in place and handed to the next channel whole (see
+//! `Session::give_batch` in [`super::operator`]), so in a steady-state
+//! pipeline chain the same lease object is the message payload at every
+//! hop — zero allocations *and* zero per-record moves.
 
 use crate::buffer::Lease;
 use crate::progress::location::Location;

@@ -13,6 +13,13 @@
 //! [`SharedPool`] recycles buffer *and* control block once every peer has
 //! dropped its clone), and moves — rather than clones — each record into
 //! the last channel attached to the port.
+//!
+//! It is also *copy-free* on the forwarding path: when a session is handed
+//! a uniquely owned [`Batch::Owned`] lease and the output feeds exactly one
+//! [`Pact::Pipeline`] channel, [`Session::give_batch`] forwards the lease
+//! **whole** — no per-record move, no re-buffering; the same heap buffer
+//! travels the entire pipeline and returns to the pool that minted it when
+//! the final consumer drops it (see [`OutputHandle::try_forward`]).
 
 use super::channels::{Batch, Data, LocalQueue, Message, Pact, Route, TeeHandle};
 use super::scope::{Activator, OpCore, Scope};
@@ -313,6 +320,42 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
         }
     }
 
+    /// Attempts to forward a uniquely owned batch *whole* at `time`: no
+    /// per-record move, no re-buffering — the lease itself becomes the
+    /// message payload, and its buffer returns to whichever pool minted it
+    /// when the (final) consumer drops it.
+    ///
+    /// Succeeds only when this output feeds exactly one channel and that
+    /// channel is [`Pact::Pipeline`] (the destination is this worker, no
+    /// routing decisions per record); otherwise the lease is handed back
+    /// for the per-record path. Records buffered earlier in the session
+    /// are posted first, so delivery order is preserved.
+    fn try_forward(&mut self, time: &T, lease: Lease<Vec<D>>) -> Result<(), Lease<Vec<D>>> {
+        self.ensure_buffers();
+        if self.pacts.len() != 1 || !matches!(self.pacts[0], Pact::Pipeline) {
+            return Err(lease);
+        }
+        if lease.is_empty() {
+            // Nothing to deliver; dropping the lease recycles its buffer.
+            return Ok(());
+        }
+        let dest = self.worker;
+        // Order barrier: records given earlier in this session must be
+        // delivered before the forwarded batch. (A pipeline channel never
+        // holds a broadcast buffer, so `per_dest` is the only case.)
+        if self.buffers[0].per_dest[dest].is_some() {
+            self.post(0, dest, time);
+        }
+        let tee = self.tee.borrow();
+        let mut channel = tee[0].borrow_mut();
+        self.bookkeeping.update(channel.target, time.clone(), 1);
+        channel.push(
+            dest,
+            Message { time: time.clone(), data: Batch::Owned(lease), from: self.worker },
+        );
+        Ok(())
+    }
+
     /// Flushes all buffered records at `time`.
     ///
     /// Per channel, at most one kind of buffer is pending (the give-order
@@ -361,11 +404,27 @@ impl<'a, T: Timestamp, D: Data> Session<'a, T, D> {
     }
 
     /// Sends an incoming message batch onward (the forwarding idiom of
-    /// no-op and map-like operators): owned batches move their records,
-    /// shared ones clone them out.
+    /// no-op and map-like operators).
+    ///
+    /// A uniquely owned batch headed for a single pipeline channel is
+    /// handed off **whole** — the lease becomes the outgoing message with
+    /// zero per-record work ([`OutputHandle::try_forward`]). Otherwise
+    /// owned batches move their records and shared ones clone them out,
+    /// record by record.
     pub fn give_batch(&mut self, batch: Batch<D>) {
-        for record in batch {
-            self.give(record);
+        match batch {
+            Batch::Owned(lease) => {
+                if let Err(lease) = self.output.try_forward(&self.time, lease) {
+                    for record in Batch::Owned(lease) {
+                        self.give(record);
+                    }
+                }
+            }
+            shared => {
+                for record in shared {
+                    self.give(record);
+                }
+            }
         }
     }
 

@@ -6,8 +6,17 @@
 //! sending output with the timestamp token reference that accompanies each
 //! input batch — no retained tokens, no system interaction beyond message
 //! accounting.
+//!
+//! On pipeline channels these operators are also *copy-free*: a uniquely
+//! owned input batch is transformed **in place** where the logic permits
+//! ([`MapExt::map_in_place`] mutates records in the arriving buffer,
+//! [`MapExt::filter`] retains in place) and the same buffer is then handed
+//! to the next operator whole via [`Session::give_batch`]'s lease
+//! forwarding — one heap buffer rides the entire pipeline.
+//!
+//! [`Session::give_batch`]: crate::dataflow::operator::Session::give_batch
 
-use crate::dataflow::channels::{Data, Pact};
+use crate::dataflow::channels::{Batch, Data, Pact};
 use crate::dataflow::operator::{OperatorBuilder, OperatorExt};
 use crate::dataflow::stream::Stream;
 use crate::dataflow::InputHandle;
@@ -19,7 +28,14 @@ pub trait MapExt<T: Timestamp, D: Data> {
     /// Applies `logic` to each record.
     fn map<D2: Data, F: FnMut(D) -> D2 + 'static>(&self, logic: F) -> Stream<T, D2>;
 
-    /// Keeps records satisfying `predicate`.
+    /// Applies `logic` to each record *in place*, preserving the record
+    /// type. Uniquely owned batches are mutated in their arriving buffer
+    /// and forwarded whole (no per-record move, no re-buffering) — the
+    /// copy-free complement of [`map`](MapExt::map) for pipeline chains.
+    fn map_in_place<F: FnMut(&mut D) + 'static>(&self, logic: F) -> Stream<T, D>;
+
+    /// Keeps records satisfying `predicate`. Uniquely owned batches are
+    /// filtered in place (`Vec::retain`) and forwarded whole.
     fn filter<F: FnMut(&D) -> bool + 'static>(&self, predicate: F) -> Stream<T, D>;
 
     /// Passes records through, applying `logic` to each (for debugging).
@@ -44,14 +60,52 @@ impl<T: Timestamp, D: Data> MapExt<T, D> for Stream<T, D> {
         })
     }
 
+    fn map_in_place<F: FnMut(&mut D) + 'static>(&self, mut logic: F) -> Stream<T, D> {
+        self.unary(Pact::Pipeline, "map_in_place", move |tok, _info| {
+            drop(tok);
+            move |input: &mut _, output: &mut _| {
+                while let Some((token, data)) = input.next() {
+                    match data {
+                        Batch::Owned(mut lease) => {
+                            // Unique buffer: mutate in place, forward whole.
+                            for record in lease.iter_mut() {
+                                logic(record);
+                            }
+                            output.session(&token).give_batch(Batch::Owned(lease));
+                        }
+                        shared => {
+                            output.session(&token).give_iterator(shared.into_iter().map(
+                                |mut record| {
+                                    logic(&mut record);
+                                    record
+                                },
+                            ));
+                        }
+                    }
+                }
+            }
+        })
+    }
+
     fn filter<F: FnMut(&D) -> bool + 'static>(&self, mut predicate: F) -> Stream<T, D> {
         self.unary(Pact::Pipeline, "filter", move |tok, _info| {
             drop(tok);
             move |input: &mut _, output: &mut _| {
                 while let Some((token, data)) = input.next() {
-                    output
-                        .session(&token)
-                        .give_iterator(data.into_iter().filter(|d| predicate(d)));
+                    match data {
+                        Batch::Owned(mut lease) => {
+                            // Unique buffer: retain in place, forward whole
+                            // (an empty result posts nothing and recycles
+                            // the buffer).
+                            lease.retain(|d| predicate(d));
+                            output.session(&token).give_batch(Batch::Owned(lease));
+                        }
+                        shared => {
+                            output
+                                .session(&token)
+                                .give_iterator(shared.into_iter().filter(|d| predicate(d)));
+                        }
+                    }
                 }
             }
         })
@@ -152,6 +206,146 @@ mod tests {
         });
         // x*2 for x in 0..4 = [0,2,4,6]; keep multiples of 4: 0 (t=0), 4 (t=2).
         assert_eq!(got, vec![(0, 0), (2, 4)]);
+    }
+
+    #[test]
+    fn map_in_place_transforms_and_preserves_order() {
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = seen.clone();
+            let probe = stream
+                .map_in_place(|x| *x *= 10)
+                .map_in_place(|x| *x += 1)
+                .inspect(move |_t, x| seen2.borrow_mut().push(*x))
+                .probe();
+            for x in 0..5u64 {
+                input.send(x);
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            let got = seen.borrow().clone();
+            got
+        });
+        assert_eq!(got, vec![1, 11, 21, 31, 41]);
+    }
+
+    /// A uniquely owned batch on a single pipeline channel is forwarded
+    /// WHOLE: the same heap buffer (observed by pointer) travels from the
+    /// first operator through the chain to the final consumer.
+    #[test]
+    fn pipeline_forwarding_hands_off_the_same_buffer() {
+        let ptrs = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let ptrs = Rc::new(RefCell::new(Vec::new()));
+            let (p1, p2) = (ptrs.clone(), ptrs.clone());
+            let forwarded = stream.unary::<u64, _, _>(Pact::Pipeline, "head", move |tok, _info| {
+                drop(tok);
+                move |input: &mut _, output: &mut crate::dataflow::OutputHandle<u64, u64>| {
+                    while let Some((token, data)) = input.next() {
+                        p1.borrow_mut().push(data.as_slice().as_ptr() as usize);
+                        output.session(&token).give_batch(data);
+                    }
+                }
+            });
+            forwarded.sink(Pact::Pipeline, "tail", move |_info| {
+                move |input: &mut crate::dataflow::InputHandle<u64, u64>| {
+                    while let Some((_token, data)) = input.next() {
+                        p2.borrow_mut().push(data.as_slice().as_ptr() as usize);
+                    }
+                }
+            });
+            for x in 0..100u64 {
+                input.send(x);
+            }
+            input.close();
+            worker.step_while(|| {
+                let state = ptrs.borrow();
+                state.len() < 2
+            });
+            let got = ptrs.borrow().clone();
+            got
+        });
+        assert_eq!(ptrs.len(), 2, "one batch seen at the head and at the tail");
+        assert_eq!(ptrs[0], ptrs[1], "forwarding must hand off the same buffer");
+    }
+
+    /// Records given individually before a forwarded batch in the same
+    /// session are delivered first (the forwarding order barrier).
+    #[test]
+    fn forwarding_preserves_session_order() {
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = seen.clone();
+            let probe = stream
+                .unary::<u64, _, _>(Pact::Pipeline, "prefix", move |tok, _info| {
+                    drop(tok);
+                    move |input: &mut _, output: &mut crate::dataflow::OutputHandle<u64, u64>| {
+                        while let Some((token, data)) = input.next() {
+                            let mut session = output.session(&token);
+                            session.give(999);
+                            session.give_batch(data);
+                        }
+                    }
+                })
+                .inspect(move |_t, x| seen2.borrow_mut().push(*x))
+                .probe();
+            for x in 1..4u64 {
+                input.send(x);
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            let got = seen.borrow().clone();
+            got
+        });
+        assert_eq!(got, vec![999, 1, 2, 3], "given records must precede the forwarded batch");
+    }
+
+    /// With two downstream consumers forwarding is declined (the batch
+    /// must be duplicated) and every consumer still sees every record.
+    #[test]
+    fn forwarding_declined_with_two_consumers() {
+        let (a, b) = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let passed = stream.map_in_place(|x| *x += 100);
+            let seen_a = Rc::new(RefCell::new(Vec::new()));
+            let seen_b = Rc::new(RefCell::new(Vec::new()));
+            let (sa, sb) = (seen_a.clone(), seen_b.clone());
+            let pa = passed.inspect(move |_t, x| sa.borrow_mut().push(*x)).probe();
+            let pb = passed.inspect(move |_t, x| sb.borrow_mut().push(*x)).probe();
+            for x in 0..3u64 {
+                input.send(x);
+            }
+            input.close();
+            worker.step_while(|| !pa.done() || !pb.done());
+            let a = seen_a.borrow().clone();
+            let b = seen_b.borrow().clone();
+            (a, b)
+        });
+        assert_eq!(a, vec![100, 101, 102]);
+        assert_eq!(b, vec![100, 101, 102]);
+    }
+
+    #[test]
+    fn filter_in_place_keeps_matching_records() {
+        let got = execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = seen.clone();
+            let probe = stream
+                .filter(|x| x % 3 == 0)
+                .inspect(move |_t, x| seen2.borrow_mut().push(*x))
+                .probe();
+            for x in 0..10u64 {
+                input.send(x);
+            }
+            input.close();
+            worker.step_while(|| !probe.done());
+            let got = seen.borrow().clone();
+            got
+        });
+        assert_eq!(got, vec![0, 3, 6, 9]);
     }
 
     #[test]

@@ -1,10 +1,39 @@
 //! Antichains: sets of mutually incomparable timestamps, used to represent
 //! frontiers ("lower bounds on the timestamps that operators may yet observe
 //! in their inputs", §3).
+//!
+//! # Representation of [`MutableAntichain`]
+//!
+//! The count-backed antichain is the progress plane's hottest structure:
+//! the tracker keeps one per pointstamp location and one per operator input
+//! port, and every inbound progress batch folds into several of them. It
+//! used to accumulate counts in a `BTreeMap<T, i64>`, which pays a node
+//! allocation for every new timestamp — at fine timestamp quanta (the
+//! paper's Figure 6/7 regime) that is an allocation per location per
+//! quantum, forever, and it is what kept the steady-state worker step from
+//! being allocation-free after the data plane was pooled (PR 2).
+//!
+//! The counts now live in a **flat sorted run**: an inline small-vec of
+//! `(T, i64)` pairs (spilling to a reused heap `Vec` only past
+//! [`INLINE_RUN`] entries) whose prefix is kept sorted and coalesced with
+//! *deferred compaction*, exactly like [`ChangeBatch`]. Updates append in
+//! O(1); when the uncompacted tail outgrows the clean prefix the run is
+//! sorted in place (`sort_unstable`: no scratch allocation) and equal keys
+//! are summed, dropping zero-count entries. Lookups binary-search the
+//! clean prefix and scan the short tail. The result: after a location's
+//! run capacity warms up, folding count updates performs **zero heap
+//! allocations**, and the entries sit contiguous in cache order instead of
+//! behind one pointer per tree node.
+//!
+//! The documented cross-batch negative-count tolerance is preserved:
+//! negative entries (a consume observed before its produce, legitimate
+//! under the decentralized exchange — see [`super::exchange`]) are retained
+//! in the run until canceled but never contribute to the frontier.
 
 use super::change_batch::ChangeBatch;
 use super::timestamp::PartialOrder;
 use std::fmt::Debug;
+use std::mem::MaybeUninit;
 
 /// A set of mutually incomparable elements, representing a lower bound.
 ///
@@ -116,6 +145,119 @@ impl<T: Debug> Debug for Antichain<T> {
     }
 }
 
+/// Entries a count run stores inline before spilling to the heap. Most
+/// locations track one or two live timestamps (a token plus a downgrade in
+/// flight), so four pairs cover the steady state without any heap storage
+/// at all.
+const INLINE_RUN: usize = 4;
+
+/// Flat storage behind [`MutableAntichain`]: an inline array of `(T, i64)`
+/// pairs that spills to a heap `Vec` only once a location tracks more than
+/// [`INLINE_RUN`] entries. Once spilled it stays spilled — the retained
+/// capacity is what makes later updates allocation-free.
+enum SmallRun<T> {
+    /// Up to [`INLINE_RUN`] entries stored inline; the `usize` is the live
+    /// count (slots `0..len` are initialized).
+    Inline(usize, [MaybeUninit<(T, i64)>; INLINE_RUN]),
+    /// Spilled storage.
+    Heap(Vec<(T, i64)>),
+}
+
+impl<T> SmallRun<T> {
+    fn new() -> Self {
+        // SAFETY: an array of `MaybeUninit` requires no initialization.
+        SmallRun::Inline(0, unsafe {
+            MaybeUninit::<[MaybeUninit<(T, i64)>; INLINE_RUN]>::uninit().assume_init()
+        })
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SmallRun::Inline(len, _) => *len,
+            SmallRun::Heap(v) => v.len(),
+        }
+    }
+
+    fn as_slice(&self) -> &[(T, i64)] {
+        match self {
+            // SAFETY: the first `len` slots are initialized, and
+            // `MaybeUninit<(T, i64)>` has the layout of `(T, i64)`.
+            SmallRun::Inline(len, slots) => unsafe {
+                std::slice::from_raw_parts(slots.as_ptr() as *const (T, i64), *len)
+            },
+            SmallRun::Heap(v) => v.as_slice(),
+        }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [(T, i64)] {
+        match self {
+            // SAFETY: as in `as_slice`; exclusive access through `&mut self`.
+            SmallRun::Inline(len, slots) => unsafe {
+                std::slice::from_raw_parts_mut(slots.as_mut_ptr() as *mut (T, i64), *len)
+            },
+            SmallRun::Heap(v) => v.as_mut_slice(),
+        }
+    }
+
+    fn push(&mut self, entry: (T, i64)) {
+        if let SmallRun::Heap(v) = self {
+            v.push(entry);
+            return;
+        }
+        let SmallRun::Inline(len, slots) = self else { unreachable!() };
+        if *len < INLINE_RUN {
+            slots[*len].write(entry);
+            *len += 1;
+            return;
+        }
+        // Spill: move the inline entries into a heap `Vec` and stay there.
+        let mut heap = Vec::with_capacity(2 * INLINE_RUN);
+        for slot in slots.iter().take(*len) {
+            // SAFETY: slots `0..len` are initialized and each is read
+            // exactly once here; `len` is zeroed below so they are never
+            // dropped in place.
+            heap.push(unsafe { slot.assume_init_read() });
+        }
+        *len = 0;
+        heap.push(entry);
+        *self = SmallRun::Heap(heap);
+    }
+
+    fn truncate(&mut self, new_len: usize) {
+        match self {
+            SmallRun::Inline(len, slots) => {
+                if new_len >= *len {
+                    return;
+                }
+                for slot in slots.iter_mut().take(*len).skip(new_len) {
+                    // SAFETY: slots `new_len..len` are initialized; each is
+                    // dropped exactly once, then forgotten by shrinking
+                    // `len` below.
+                    unsafe { slot.assume_init_drop() };
+                }
+                *len = new_len;
+            }
+            SmallRun::Heap(v) => v.truncate(new_len),
+        }
+    }
+}
+
+impl<T> Drop for SmallRun<T> {
+    fn drop(&mut self) {
+        self.truncate(0);
+    }
+}
+
+impl<T: Clone> Clone for SmallRun<T> {
+    fn clone(&self) -> Self {
+        let mut run = SmallRun::new();
+        for entry in self.as_slice() {
+            run.push(entry.clone());
+        }
+        run
+    }
+}
+
 /// An antichain derived from signed counts of elements: the frontier of the
 /// multiset of elements with positive accumulated count.
 ///
@@ -124,10 +266,18 @@ impl<T: Debug> Debug for Antichain<T> {
 /// *atomically* (all counts first, then one frontier recomputation) and
 /// reports the resulting frontier changes as `(T, i64)` diffs, which is what
 /// lets frontier changes be *projected* through path summaries downstream.
+///
+/// Counts are stored in a flat sorted run with deferred compaction (see the
+/// module docs): the steady-state fold path allocates nothing once the
+/// run's capacity has warmed up.
 #[derive(Clone)]
 pub struct MutableAntichain<T: Ord> {
-    /// Accumulated counts per element; zero-count entries are purged.
-    counts: std::collections::BTreeMap<T, i64>,
+    /// Accumulated count entries. The first `clean` entries are sorted by
+    /// `T`'s total order, have unique keys, and no zero counts; the tail is
+    /// pending appends folded in by `compact`.
+    updates: SmallRun<T>,
+    /// Length of the compacted prefix of `updates`.
+    clean: usize,
     /// Current frontier: minimal elements among those with positive count.
     frontier: Vec<T>,
     /// Scratch buffer for frontier diffs.
@@ -141,7 +291,8 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
     /// Creates an empty `MutableAntichain`.
     pub fn new() -> Self {
         MutableAntichain {
-            counts: std::collections::BTreeMap::new(),
+            updates: SmallRun::new(),
+            clean: 0,
             frontier: Vec::new(),
             changes: Vec::new(),
             scratch: Vec::new(),
@@ -184,10 +335,29 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
         self.frontier.is_empty()
     }
 
-    /// Total number of distinct elements tracked.
+    /// Total number of distinct elements tracked (compacts the run).
     #[inline]
-    pub fn distinct(&self) -> usize {
-        self.counts.len()
+    pub fn distinct(&mut self) -> usize {
+        self.compact();
+        self.updates.len()
+    }
+
+    /// The net accumulated count of `t`: binary search in the compacted
+    /// prefix plus a scan of the (short, bounded by the compaction policy)
+    /// pending tail.
+    fn net_count(&self, t: &T) -> i64 {
+        let slice = self.updates.as_slice();
+        let (clean, tail) = slice.split_at(self.clean);
+        let mut sum = match clean.binary_search_by(|entry| entry.0.cmp(t)) {
+            Ok(i) => clean[i].1,
+            Err(_) => 0,
+        };
+        for (u, diff) in tail {
+            if u == t {
+                sum += diff;
+            }
+        }
+        sum
     }
 
     /// Applies a batch of count updates atomically and returns the frontier
@@ -207,33 +377,38 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
         I: IntoIterator<Item = (T, i64)>,
     {
         self.changes.clear();
-        // Apply all count changes first; track whether the frontier can have
-        // changed to avoid recomputation in the (very common) case where
-        // updates only touch dominated or still-positive elements.
+        // Append all count changes; track whether the frontier can have
+        // changed so the (very common) batch that only touches dominated
+        // or still-positive elements skips the rebuild entirely. Every
+        // positive count is permitted by the frontier (the frontier is the
+        // set of minimal positive elements), so:
+        //
+        // * a `+diff` can only matter if the frontier does not already
+        //   permit `t` AND the accumulated count actually becomes positive
+        //   (it may stay ≤ 0 while canceling an early consume);
+        // * a `-diff` can only matter if `t` is ON the frontier and its
+        //   accumulated count drops to (or below) zero.
+        //
+        // Staleness of `frontier` inside the loop is benign: any earlier
+        // update in the batch that would have changed the frontier has
+        // already latched `dirty`, and `rebuild` recomputes from the full
+        // post-batch counts.
         let mut dirty = false;
         for (t, diff) in updates {
             if diff == 0 {
                 continue;
             }
-            let entry = self.counts.entry(t.clone()).or_insert(0);
-            let old = *entry;
-            *entry += diff;
-            let new = *entry;
-            if new == 0 {
-                self.counts.remove(&t);
+            if !dirty {
+                dirty = if diff > 0 {
+                    !self.frontier.iter().any(|f| f.less_equal(&t))
+                        && self.net_count(&t) + diff > 0
+                } else {
+                    self.frontier.iter().any(|f| f == &t)
+                        && self.net_count(&t) + diff <= 0
+                };
             }
-            if old <= 0 && new > 0 {
-                // Element appeared: frontier changes unless `t` is strictly
-                // dominated by an existing frontier element.
-                if !self.frontier.iter().any(|f| f.less_equal(&t) && f != &t) {
-                    dirty = true;
-                }
-            } else if old > 0 && new <= 0 {
-                // Element vanished: frontier changes only if it was on it.
-                if self.frontier.iter().any(|f| f == &t) {
-                    dirty = true;
-                }
-            }
+            self.updates.push((t, diff));
+            self.maybe_compact();
         }
         if dirty {
             self.rebuild();
@@ -241,14 +416,55 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
         self.changes.drain(..)
     }
 
+    /// Sorts and coalesces the run in place, dropping zero-count entries
+    /// (the deferred-compaction step; no allocation).
+    fn compact(&mut self) {
+        if self.clean == self.updates.len() {
+            return;
+        }
+        let slice = self.updates.as_mut_slice();
+        // Unstable sort: in-place, no scratch allocation (equal keys are
+        // summed immediately below, so stability is irrelevant).
+        slice.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        let len = slice.len();
+        let mut write = 0;
+        let mut read = 0;
+        while read < len {
+            let mut sum = slice[read].1;
+            let mut next = read + 1;
+            while next < len && slice[next].0 == slice[read].0 {
+                sum += slice[next].1;
+                next += 1;
+            }
+            if sum != 0 {
+                slice.swap(write, read);
+                slice[write].1 = sum;
+                write += 1;
+            }
+            read = next;
+        }
+        self.updates.truncate(write);
+        self.clean = write;
+    }
+
+    /// Compacts when the pending tail outgrows the clean prefix (amortized
+    /// O(log n) sorts; keeps `net_count`'s tail scan short).
+    fn maybe_compact(&mut self) {
+        let len = self.updates.len();
+        if len > INLINE_RUN && len > 2 * self.clean {
+            self.compact();
+        }
+    }
+
     /// Rebuilds the frontier from the counts, appending diffs to `changes`.
     fn rebuild(&mut self) {
+        self.compact();
         let mut new_frontier = std::mem::take(&mut self.scratch);
         new_frontier.clear();
-        for (t, &count) in self.counts.iter() {
+        for (t, count) in self.updates.as_slice() {
             // Negative entries (consume observed before its produce) hold
             // nothing: only positive counts define the frontier.
-            if count <= 0 {
+            if *count <= 0 {
                 continue;
             }
             if !new_frontier.iter().any(|f: &T| f.less_equal(t)) {
@@ -269,15 +485,16 @@ impl<T: PartialOrder + Ord + Clone + Debug> MutableAntichain<T> {
         self.scratch = std::mem::replace(&mut self.frontier, new_frontier);
     }
 
-    /// Frontier recomputed naively from counts — used by tests to validate
-    /// the incremental maintenance.
+    /// Frontier recomputed naively from the raw count entries — used by
+    /// tests to validate the incremental maintenance. (Deliberately built
+    /// on `BTreeMap`, the representation this structure replaced, so the
+    /// oracle shares nothing with the sorted-run code paths.)
     pub fn naive_frontier(&self) -> Antichain<T> {
-        Antichain::from_iter(
-            self.counts
-                .iter()
-                .filter(|(_, &c)| c > 0)
-                .map(|(t, _)| t.clone()),
-        )
+        let mut counts = std::collections::BTreeMap::new();
+        for (t, diff) in self.updates.as_slice() {
+            *counts.entry(t.clone()).or_insert(0i64) += *diff;
+        }
+        Antichain::from_iter(counts.into_iter().filter(|&(_, c)| c > 0).map(|(t, _)| t))
     }
 }
 
@@ -291,7 +508,7 @@ impl<T: Ord + Debug> Debug for MutableAntichain<T> {
     fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
         f.debug_struct("MutableAntichain")
             .field("frontier", &self.frontier)
-            .field("counts", &self.counts)
+            .field("updates", &self.updates.as_slice())
             .finish()
     }
 }
@@ -305,6 +522,7 @@ pub type FrontierChanges<T> = ChangeBatch<T>;
 mod tests {
     use super::*;
     use crate::progress::timestamp::Product;
+    use crate::testing::property;
 
     #[test]
     fn antichain_insert_retains_minimal() {
@@ -452,5 +670,162 @@ mod tests {
             want.sort();
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn small_run_spills_and_keeps_contents() {
+        let mut ma = MutableAntichain::new();
+        // Push more distinct live elements than the inline capacity holds:
+        // the run must spill to the heap without losing or reordering
+        // counts.
+        let n = (INLINE_RUN as u64) * 4;
+        for t in (0..n).rev() {
+            let changes: Vec<_> = ma.update_iter(vec![(t, 1)]).collect();
+            // Each insert is a new minimum: frontier moves every time.
+            if t == n - 1 {
+                assert_eq!(changes, vec![(t, 1)]);
+            } else {
+                assert_eq!(changes, vec![(t + 1, -1), (t, 1)]);
+            }
+        }
+        assert_eq!(ma.distinct() as u64, n);
+        assert_eq!(ma.frontier(), &[0]);
+        // Remove from the bottom: the frontier walks back up.
+        for t in 0..n - 1 {
+            let changes: Vec<_> = ma.update_iter(vec![(t, -1)]).collect();
+            assert_eq!(changes, vec![(t, -1), (t + 1, 1)]);
+        }
+    }
+
+    /// The sorted-run antichain agrees with a `BTreeMap` reference model
+    /// under randomized update sequences, including cross-batch negative
+    /// counts (consume observed before produce) and interleaved
+    /// `frontier()` / `less_equal` probes. The emitted diffs are also
+    /// checked: replaying them against a shadow copy of the frontier must
+    /// reproduce the reported frontier exactly.
+    #[test]
+    fn sorted_run_matches_btreemap_model_u64() {
+        property("sorted_run_matches_btreemap_model_u64", 25, |_case, rng| {
+            let mut ma = MutableAntichain::new();
+            let mut model: std::collections::BTreeMap<u64, i64> =
+                std::collections::BTreeMap::new();
+            // Produces owed to the model: each entry cancels an early
+            // consume sent in a previous batch.
+            let mut owed: Vec<u64> = Vec::new();
+            let mut shadow: Vec<u64> = Vec::new();
+            for _step in 0..300 {
+                let mut batch: Vec<(u64, i64)> = Vec::new();
+                for _ in 0..rng.range(1, 5) {
+                    let t = rng.below(12);
+                    match rng.below(10) {
+                        // Ordinary produce.
+                        0..=4 => batch.push((t, 1)),
+                        // Ordinary consume (may drive a count negative —
+                        // the model tolerates it, the antichain must too).
+                        5..=7 => batch.push((t, -1)),
+                        // Early consume: the matching produce arrives in
+                        // some later batch.
+                        8 => {
+                            batch.push((t, -1));
+                            owed.push(t);
+                        }
+                        // Settle one owed produce, if any.
+                        _ => {
+                            if let Some(t) = owed.pop() {
+                                batch.push((t, 1));
+                            }
+                        }
+                    }
+                }
+                for &(t, d) in &batch {
+                    *model.entry(t).or_insert(0) += d;
+                }
+                // Apply the batch and replay the diffs onto the shadow.
+                for (t, d) in ma.update_iter(batch) {
+                    if d > 0 {
+                        shadow.push(t);
+                    } else {
+                        let pos = shadow
+                            .iter()
+                            .position(|&s| s == t)
+                            .expect("diff removed an element not on the shadow frontier");
+                        shadow.swap_remove(pos);
+                    }
+                }
+                // Model frontier: minimal elements with positive count
+                // (u64 is totally ordered: the single minimum).
+                let want: Vec<u64> = model
+                    .iter()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(&t, _)| t)
+                    .take(1)
+                    .collect();
+                let mut got = ma.frontier().to_vec();
+                got.sort();
+                assert_eq!(got, want, "frontier diverged from the BTreeMap model");
+                shadow.sort();
+                assert_eq!(shadow, want, "emitted diffs diverged from the frontier");
+                shadow = got;
+                // Interleaved probes.
+                for _ in 0..3 {
+                    let p = rng.below(14);
+                    let want_le = want.iter().any(|&f| f <= p);
+                    assert_eq!(ma.less_equal(&p), want_le, "less_equal({p}) diverged");
+                }
+            }
+        });
+    }
+
+    /// Same model check for a partially ordered timestamp: frontiers with
+    /// multiple minima, domination by incomparable elements.
+    #[test]
+    fn sorted_run_matches_btreemap_model_product() {
+        property("sorted_run_matches_btreemap_model_product", 25, |_case, rng| {
+            type P = Product<u64, u64>;
+            let mut ma = MutableAntichain::<P>::new();
+            let mut model: std::collections::BTreeMap<P, i64> =
+                std::collections::BTreeMap::new();
+            let mut owed: Vec<P> = Vec::new();
+            for _step in 0..200 {
+                let mut batch: Vec<(P, i64)> = Vec::new();
+                for _ in 0..rng.range(1, 4) {
+                    let t = Product::new(rng.below(5), rng.below(5));
+                    match rng.below(8) {
+                        0..=3 => batch.push((t, 1)),
+                        4..=5 => batch.push((t, -1)),
+                        6 => {
+                            batch.push((t, -1));
+                            owed.push(t);
+                        }
+                        _ => {
+                            if let Some(t) = owed.pop() {
+                                batch.push((t, 1));
+                            }
+                        }
+                    }
+                }
+                for &(t, d) in &batch {
+                    *model.entry(t).or_insert(0) += d;
+                }
+                ma.update_iter(batch);
+                // Model frontier: minimal positive-count elements.
+                let positive: Vec<P> =
+                    model.iter().filter(|(_, &c)| c > 0).map(|(&t, _)| t).collect();
+                let mut want = Antichain::from_iter(positive.iter().cloned());
+                want.sort();
+                let mut got = ma.to_antichain();
+                got.sort();
+                assert_eq!(got, want, "frontier diverged from the BTreeMap model");
+                // Interleaved probes.
+                for _ in 0..3 {
+                    let p = Product::new(rng.below(6), rng.below(6));
+                    assert_eq!(
+                        ma.less_equal(&p),
+                        want.less_equal(&p),
+                        "less_equal({p:?}) diverged"
+                    );
+                }
+            }
+        });
     }
 }

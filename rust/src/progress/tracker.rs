@@ -12,6 +12,15 @@
 //! fixpoint, and — the paper's central point — no operator is involved:
 //! frontiers propagate through idle dataflow fragments without scheduling a
 //! single operator (§5.2, §7.3).
+//!
+//! The fold path is **allocation-free in the steady state**: the
+//! per-location count antichains store their entries in flat sorted runs
+//! (no tree nodes — see [`super::antichain`]), and every piece of scratch
+//! this module needs (`staged` per-location batches, `projected` per-port
+//! diffs, the dirty-node queue) is drained in place rather than consumed,
+//! so its capacity is reused across `apply` calls. After warm-up, folding
+//! an inbound progress batch touches no allocator at all — proven by the
+//! counting-allocator test in `rust/tests/alloc_steady_state.rs`.
 
 use super::antichain::{Antichain, MutableAntichain};
 use super::location::Location;

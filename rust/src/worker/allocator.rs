@@ -42,10 +42,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::thread::Thread;
 
-/// Slots per fabric ring. Progress batches coalesce and data batches carry
-/// up to `SEND_BATCH` records each, so a modest ring depth covers bursts;
-/// a full ring is not an error — senders keep messages staged and retry
-/// after the peer drains (counted as a stall in [`WorkerTelemetry`]).
+/// Default slots per fabric ring. Progress batches coalesce and data
+/// batches carry up to `SEND_BATCH` records each, so a modest ring depth
+/// covers bursts; a full ring is not an error — senders keep messages
+/// staged and retry after the peer drains (counted as a stall in
+/// [`WorkerTelemetry`]). Configurable per run through
+/// `Config::ring_capacity` (swept by `micro_exchange --sweep-ring`, which
+/// uses the stall counters to show where a ring is too shallow).
 pub const RING_CAPACITY: usize = 256;
 
 type Key = (usize, usize, usize); // (channel, from, to)
@@ -101,6 +104,8 @@ pub struct WorkerTelemetry {
 /// The shared endpoint registry.
 pub struct Fabric {
     peers: usize,
+    /// Slots per SPSC ring handed out by this fabric (both planes).
+    ring_capacity: usize,
     pending: Mutex<Pending>,
     /// Per-worker thread handles for park/unpark wakeups. Write-once per
     /// slot (each worker registers from its own thread, before any flush
@@ -112,10 +117,19 @@ pub struct Fabric {
 }
 
 impl Fabric {
-    /// A fabric for `peers` workers.
+    /// A fabric for `peers` workers with the default ring depth
+    /// ([`RING_CAPACITY`]).
     pub fn new(peers: usize) -> std::sync::Arc<Self> {
+        Self::with_ring_capacity(peers, RING_CAPACITY)
+    }
+
+    /// A fabric whose rings hold at least `ring_capacity` messages each
+    /// (rounded up to a power of two by the ring itself; minimum 2). Wired
+    /// to `Config::ring_capacity` by the executor.
+    pub fn with_ring_capacity(peers: usize, ring_capacity: usize) -> std::sync::Arc<Self> {
         std::sync::Arc::new(Fabric {
             peers,
+            ring_capacity: ring_capacity.max(2),
             pending: Mutex::new(Pending::default()),
             threads: (0..peers).map(|_| OnceLock::new()).collect(),
             stats: (0..peers).map(|_| std::sync::Arc::new(WorkerStats::default())).collect(),
@@ -125,6 +139,11 @@ impl Fabric {
     /// Number of workers sharing this fabric.
     pub fn peers(&self) -> usize {
         self.peers
+    }
+
+    /// Slots per ring this fabric hands out.
+    pub fn ring_capacity(&self) -> usize {
+        self.ring_capacity
     }
 
     /// A shared handle on worker `index`'s counters (cloned into channel
@@ -210,7 +229,7 @@ impl Fabric {
         if let Some(tx) = pending.senders.remove(&key) {
             *tx.downcast::<RingSender<M>>().expect("channel type mismatch")
         } else {
-            let (tx, rx) = ring::channel::<M>(RING_CAPACITY);
+            let (tx, rx) = ring::channel::<M>(self.ring_capacity);
             pending.receivers.insert(key, Box::new(rx));
             tx
         }
@@ -229,7 +248,7 @@ impl Fabric {
         if let Some(rx) = pending.receivers.remove(&key) {
             *rx.downcast::<RingReceiver<M>>().expect("channel type mismatch")
         } else {
-            let (tx, rx) = ring::channel::<M>(RING_CAPACITY);
+            let (tx, rx) = ring::channel::<M>(self.ring_capacity);
             pending.senders.insert(key, Box::new(tx));
             rx
         }
@@ -362,6 +381,21 @@ mod tests {
         fabric.unpark_peers(0);
         assert_eq!(fabric.telemetry(2).unparks, 1);
         assert_eq!(fabric.telemetry(0).unparks, 0);
+    }
+
+    #[test]
+    fn custom_ring_capacity_reaches_both_endpoints() {
+        let fabric = Fabric::with_ring_capacity(2, 16);
+        assert_eq!(fabric.ring_capacity(), 16);
+        let tx = fabric.sender::<u32>(0, 0, 1);
+        assert_eq!(tx.capacity(), 16);
+        // The counterpart half parked by the sender claim has the same
+        // depth (one ring, two endpoints).
+        let _rx = fabric.receiver::<u32>(0, 0, 1);
+        // Degenerate capacities clamp to the ring minimum instead of
+        // panicking.
+        let tiny = Fabric::with_ring_capacity(2, 0);
+        assert_eq!(tiny.sender::<u32>(0, 0, 1).capacity(), 2);
     }
 
     #[test]

@@ -46,7 +46,7 @@ where
     F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
 {
     let peers = config.workers.max(1);
-    let fabric = Fabric::new(peers);
+    let fabric = Fabric::with_ring_capacity(peers, config.ring_capacity);
     let build = Arc::new(build);
     let pin = config.pin_workers;
     let progress_flush = config.progress_flush;

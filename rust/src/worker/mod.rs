@@ -44,11 +44,14 @@ use crate::dataflow::channels::Data;
 use crate::dataflow::input::InputSession;
 use crate::dataflow::scope::{BuildState, OpCore, Scope};
 use crate::dataflow::stream::Stream;
+use crate::dataflow::token::BookkeepingHandle;
 use crate::progress::exchange::{Progcaster, ProgressBatch};
 use crate::progress::location::Location;
 use crate::progress::timestamp::Timestamp;
 use crate::progress::tracker::Tracker;
 use allocator::{Fabric, WorkerStats, WorkerTelemetry};
+use std::cell::Cell;
+use std::rc::Rc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -82,6 +85,13 @@ pub struct Worker<T: Timestamp> {
     ops: Vec<OpCore<T>>,
     drainers: Vec<Box<dyn FnMut() -> bool>>,
     flushers: Vec<Box<dyn FnMut() -> (bool, bool)>>,
+    /// The worker-wide shared bookkeeping, cached off `scope.state` so the
+    /// step hot loop never re-borrows the build state (and never clones
+    /// the underlying `Rc`) — it used to do both up to three times per
+    /// step.
+    bookkeeping: BookkeepingHandle<T>,
+    /// The channels' remote-staged latch, cached for the same reason.
+    staged_latch: Rc<Cell<bool>>,
     /// Scratch: bookkeeping drain target, moved into the progcaster.
     scratch: Vec<((Location, T), i64)>,
     read_buf: Vec<Arc<ProgressBatch<T>>>,
@@ -105,14 +115,23 @@ impl<T: Timestamp> Worker<T> {
         fabric.register_worker_thread(index);
         let progcaster = Progcaster::new(index, peers, &fabric);
         let stats = fabric.stats(index);
+        let scope = Scope::new(BuildState::new(index, peers, fabric.clone()));
+        // Cache the two shared handles the step loop touches constantly;
+        // both are created once by `BuildState::new` and never replaced.
+        let (bookkeeping, staged_latch) = {
+            let state = scope.state.borrow();
+            (state.bookkeeping.clone(), state.remote_staged.clone())
+        };
         Worker {
-            scope: Scope::new(BuildState::new(index, peers, fabric.clone())),
+            scope,
             fabric,
             progcaster,
             tracker: None,
             ops: Vec::new(),
             drainers: Vec::new(),
             flushers: Vec::new(),
+            bookkeeping,
+            staged_latch,
             scratch: Vec::new(),
             read_buf: Vec::new(),
             steps: 0,
@@ -203,7 +222,6 @@ impl<T: Timestamp> Worker<T> {
 
         // (2a) Input-session (and other out-of-band) token actions.
         self.stage_pending();
-        let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
 
         // (2b) Schedule operators. The run decision is fully lazy: an
         // activation request suffices on its own, the frontier scan runs
@@ -222,7 +240,7 @@ impl<T: Timestamp> Worker<T> {
                     f.borrow_mut().changed = false;
                 }
                 (op.logic)();
-                bookkeeping.drain_into(&mut self.scratch);
+                self.bookkeeping.drain_into(&mut self.scratch);
                 self.progcaster.extend(self.scratch.drain(..));
                 active = true;
             }
@@ -258,13 +276,9 @@ impl<T: Timestamp> Worker<T> {
     /// every flush decision (and once before operators run, so input
     /// actions taken between steps join this step's batch).
     fn stage_pending(&mut self) {
-        let bookkeeping = self.scope.state.borrow().bookkeeping.clone();
-        bookkeeping.drain_into(&mut self.scratch);
+        self.bookkeeping.drain_into(&mut self.scratch);
         self.progcaster.extend(self.scratch.drain(..));
-        self.remote_pending |= {
-            let state = self.scope.state.borrow();
-            state.remote_staged.replace(false)
-        };
+        self.remote_pending |= self.staged_latch.replace(false);
     }
 
     /// Broadcasts the pending batch and — if every batch (this one and any

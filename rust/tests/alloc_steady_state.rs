@@ -1,14 +1,19 @@
-//! Zero-allocation data plane: counting-allocator proof.
+//! Zero-allocation steady state: counting-allocator proof for the WHOLE
+//! worker step.
 //!
-//! The tentpole claim is that a steady-state data-path step performs ZERO
-//! heap allocations: batch buffers come from recycling pools (returned by
-//! consumers on drop), broadcast and progress batches reuse their `Arc`s
-//! through producer-side reclamation, and the SPSC rings are fixed
-//! storage. This test installs a counting global allocator and drives the
-//! three data-path loops — point-to-point (pooled lease through a fabric
-//! ring), broadcast (shared `Arc` batch), and the progress flush — through
-//! a warmup until capacities stabilize, then asserts a measurement window
-//! with zero allocations.
+//! The tentpole claim is that a steady-state step performs ZERO heap
+//! allocations — not just the send paths: batch buffers come from
+//! recycling pools (returned by consumers on drop), broadcast and progress
+//! batches reuse their `Arc`s through producer-side reclamation, the SPSC
+//! rings are fixed storage, the tracker's count antichains are flat sorted
+//! runs (no `BTreeMap` nodes), and pipeline forwarding hands uniquely
+//! owned batches off whole. This test installs a counting global
+//! allocator and drives five loops — point-to-point transport, broadcast,
+//! the progress flush, the tracker fold + projection, and a full
+//! single-worker engine step (input feed, operator chain with whole-batch
+//! forwarding, progress exchange, tracker fold, probe) — through a warmup
+//! until capacities stabilize, then asserts a measurement window with
+//! zero allocations.
 //!
 //! Kept as a single `#[test]` so no sibling test can allocate concurrently
 //! inside a measurement window.
@@ -19,13 +24,19 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 use timestamp_tokens::buffer::{BufferPool, SharedPool};
 use timestamp_tokens::dataflow::channels::{
     drainer, Batch, ChannelSend, LocalQueue, Message, Pact,
 };
+use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::operators::map::MapExt;
 use timestamp_tokens::progress::exchange::Progcaster;
 use timestamp_tokens::progress::location::Location;
+use timestamp_tokens::progress::reachability::{GraphTopology, NodeTopology};
+use timestamp_tokens::progress::tracker::Tracker;
 use timestamp_tokens::worker::allocator::Fabric;
+use timestamp_tokens::worker::Worker;
 
 /// Counts every allocation and reallocation (frees are irrelevant here).
 struct CountingAllocator;
@@ -180,9 +191,81 @@ fn progress_flush_loop() {
     assert!(stats.reused > stats.allocated, "batch reuse must dominate: {stats:?}");
 }
 
+/// Progress fold + projection: a deep-chain tracker absorbs downgrade
+/// batches with fresh timestamps every iteration. The flat sorted-run
+/// antichains (per location AND per projected port) plus the tracker's
+/// drained-in-place scratch must make this allocation-free — this is the
+/// piece the `BTreeMap` representation could never pin, since every new
+/// timestamp allocated a tree node.
+fn tracker_fold_loop() {
+    const DEPTH: usize = 32;
+    let mut g = GraphTopology::default();
+    g.nodes.push(NodeTopology::identity("input", 0, 1));
+    for i in 1..DEPTH {
+        g.nodes.push(NodeTopology::identity(&format!("op{i}"), 1, 1));
+    }
+    g.nodes.push(NodeTopology::identity("probe", 1, 0));
+    for i in 0..DEPTH {
+        g.edges.push((Location::source(i, 0), Location::target(i + 1, 0)));
+    }
+    let mut tracker = Tracker::<u64>::new(&g, 1);
+    let mut batch: Vec<((Location, u64), i64)> = Vec::new();
+    let mut dirty: Vec<usize> = Vec::new();
+    let mut t = 0u64;
+    assert_reaches_zero_alloc_steady_state("tracker fold + projection", || {
+        // Every location downgrades its pointstamp to a brand-new
+        // timestamp: worst case for per-timestamp allocation.
+        for node in 0..DEPTH {
+            batch.clear();
+            batch.push(((Location::source(node, 0), t + 1), 1));
+            batch.push(((Location::source(node, 0), t), -1));
+            tracker.apply_batch(&batch);
+        }
+        dirty.clear();
+        tracker.drain_dirty_nodes(&mut dirty);
+        t += 1;
+    });
+}
+
+/// The whole engine step on one worker: input session feed, a pipeline
+/// chain that mutates in place and forwards uniquely owned batches whole
+/// (`map_in_place` -> `filter`), progress flush, tracker fold, probe read.
+/// Everything a steady-state step touches, pinned at zero allocations.
+fn full_step_loop() {
+    let mut worker = Worker::<u64>::new(0, 1, Fabric::new(1));
+    // Flush every step: keeps the loop deterministic (no cadence timing).
+    worker.set_progress_flush(Duration::ZERO);
+    worker.set_send_batch(BATCH);
+    let (mut input, stream) = worker.new_input::<u64>();
+    let probe = stream
+        .map_in_place(|x| *x = x.wrapping_mul(2547).wrapping_add(1))
+        .filter(|x| x % 2 == 0)
+        .probe();
+    worker.finalize();
+
+    let mut t = 0u64;
+    assert_reaches_zero_alloc_steady_state("full worker step", || {
+        // Feed one epoch, close it by advancing, then step until the
+        // probe's frontier passes it (nothing at <= t outstanding).
+        for i in 0..BATCH as u64 {
+            input.send(i);
+        }
+        t += 1;
+        input.advance_to(t);
+        while probe.less_than(&t) {
+            worker.step();
+        }
+    });
+    assert!(worker.steps() > 0);
+    drop(input);
+    // Drain to completion outside the window (close allocates freely).
+}
+
 #[test]
 fn steady_state_data_path_performs_zero_allocations() {
     point_to_point_loop();
     broadcast_loop();
     progress_flush_loop();
+    tracker_fold_loop();
+    full_step_loop();
 }
