@@ -31,6 +31,10 @@ pub struct BenchArgs {
     /// running the standard suite, reporting throughput against the
     /// ring-full stall counters (ROADMAP ring-sizing item).
     pub sweep_ring: bool,
+    /// `micro_exchange` only: run the intra-process vs cross-process
+    /// exchange comparison at this process count (loopback TCP on
+    /// 127.0.0.1), emitting `BENCH_net.json`. 0 = off.
+    pub processes: usize,
 }
 
 impl BenchArgs {
@@ -45,6 +49,7 @@ impl BenchArgs {
             selector: None,
             sweep_cadence: false,
             sweep_ring: false,
+            processes: 0,
         };
         let mut iter = std::env::args().skip(1);
         while let Some(arg) = iter.next() {
@@ -71,6 +76,11 @@ impl BenchArgs {
                 }
                 "--sweep-cadence" => args.sweep_cadence = true,
                 "--sweep-ring" => args.sweep_ring = true,
+                "--processes" => {
+                    if let Some(v) = iter.next().and_then(|s| s.parse().ok()) {
+                        args.processes = v;
+                    }
+                }
                 "--bench" | "--nocapture" => {} // cargo-bench artifacts
                 other if !other.starts_with('-') => {
                     args.selector = Some(other.to_string());

@@ -6,12 +6,16 @@
 //! driving the real engine through an operator chain, per-record
 //! (`map`) vs whole-batch lease handoff (`map_in_place`).
 //!
-//! Run: `cargo bench --bench micro_exchange -- [--quick] [--sweep-ring]`.
-//! `--sweep-ring` sweeps `Config::ring_capacity` for the exchange pact and
-//! reports throughput next to the ring-full stall counters (the ROADMAP
-//! ring-sizing item), writing `BENCH_exchange_ring.json`. The standard
-//! suite emits `BENCH_exchange.json`; both are trajectories for future
-//! PRs to compare against instead of re-asserting the win.
+//! Run: `cargo bench --bench micro_exchange -- [--quick] [--sweep-ring]
+//! [--processes N]`. `--sweep-ring` sweeps `Config::ring_capacity` for the
+//! exchange pact and reports throughput next to the ring-full stall
+//! counters (the ROADMAP ring-sizing item), writing
+//! `BENCH_exchange_ring.json`. `--processes N` runs the **net scenario**:
+//! the same exchange dataflow at identical total worker counts, once as a
+//! single fabric and once as an N-process loopback-TCP cluster (real
+//! sockets, real codec), emitting `BENCH_net.json`. The standard suite
+//! emits `BENCH_exchange.json`; all are trajectories for future PRs to
+//! compare against instead of re-asserting the win.
 
 mod common;
 
@@ -213,8 +217,8 @@ fn run_pooled(
         let fabric = fabric.clone();
         let barrier = barrier.clone();
         handles.push(std::thread::spawn(move || {
-            let mut txs = fabric.broadcast_senders::<PooledMsg>(0, w);
-            let mut rxs = fabric.broadcast_receivers::<PooledMsg>(0, w);
+            let mut txs = fabric.ring_broadcast_senders::<PooledMsg>(0, w);
+            let mut rxs = fabric.ring_broadcast_receivers::<PooledMsg>(0, w);
             let pool = BufferPool::<Vec<u64>>::new(64);
             let mut shared_pool = SharedPool::<Vec<u64>>::new(64);
             let mut local: VecDeque<PooledMsg> = VecDeque::new();
@@ -489,6 +493,173 @@ fn sweep_ring(args: &BenchArgs) {
 }
 
 // ---------------------------------------------------------------------------
+// Net scenario (`--processes N`): intra-process vs cross-process exchange.
+// ---------------------------------------------------------------------------
+
+/// Per-worker result of the net scenario: records observed at the sink,
+/// wall seconds, per-epoch completion latencies (ns), net send-queue
+/// stalls.
+struct NetWorkerResult {
+    records: u64,
+    secs: f64,
+    latencies: Vec<u64>,
+    send_stalls: u64,
+}
+
+/// The engine workload both topologies run: `input -> exchange(hash) ->
+/// count sink -> probe`, driven closed-loop one epoch at a time so each
+/// epoch's completion latency (advance-to-frontier-passed) is measured
+/// end to end — progress broadcast, data exchange, and tracker fold
+/// included.
+fn drive_net_exchange(
+    worker: &mut timestamp_tokens::worker::Worker<u64>,
+    epochs: u64,
+    per_epoch: u64,
+) -> NetWorkerResult {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let index = worker.index() as u64;
+    let (mut input, stream) = worker.new_input::<u64>();
+    let count = Rc::new(RefCell::new(0u64));
+    let count2 = count.clone();
+    let probe = stream
+        .exchange(|v: &u64| v.wrapping_mul(0x9e3779b97f4a7c15))
+        .inspect(move |_t, _v| *count2.borrow_mut() += 1)
+        .probe();
+    worker.finalize();
+
+    let mut latencies = Vec::with_capacity(epochs as usize);
+    let start = Instant::now();
+    for t in 1..=epochs {
+        for i in 0..per_epoch {
+            input.send(t.wrapping_mul(1_000_003) ^ (index << 32) ^ i);
+        }
+        input.advance_to(t);
+        let sent_at = Instant::now();
+        while probe.less_equal(&(t - 1)) {
+            worker.step_or_park(std::time::Duration::from_micros(100));
+        }
+        latencies.push(sent_at.elapsed().as_nanos() as u64);
+    }
+    input.close();
+    worker.step_while(|| !probe.done());
+    let records = *count.borrow();
+    NetWorkerResult {
+        records,
+        secs: start.elapsed().as_secs_f64(),
+        latencies,
+        send_stalls: worker.telemetry().net.send_queue_stalls,
+    }
+}
+
+fn measure_net(results: Vec<NetWorkerResult>) -> (u64, u64, u64, u64) {
+    let records: u64 = results.iter().map(|r| r.records).sum();
+    let secs = results.iter().map(|r| r.secs).fold(0.0f64, f64::max).max(1e-9);
+    let mut latencies: Vec<u64> =
+        results.iter().flat_map(|r| r.latencies.iter().copied()).collect();
+    latencies.sort_unstable();
+    let stalls: u64 = results.iter().map(|r| r.send_stalls).sum();
+    (
+        (records as f64 / secs) as u64,
+        percentile(&latencies, 50.0),
+        percentile(&latencies, 99.0),
+        stalls,
+    )
+}
+
+/// Intra-process vs cross-process exchange at identical total worker
+/// counts: `processes × wpp` workers as one fabric, then as a real
+/// loopback-TCP cluster (each "process" is a thread running
+/// `execute_cluster` with its own fabric, codec, and sockets — the full
+/// wire path). Emits `BENCH_net.json`.
+fn net_scenario(args: &BenchArgs) {
+    use timestamp_tokens::config::Config;
+    use timestamp_tokens::worker::execute::{execute, execute_cluster};
+
+    let processes = args.processes.max(2);
+    let wpp = 2usize;
+    let total = processes * wpp;
+    let epochs: u64 = if args.quick { 64 } else { 256 };
+    let per_epoch: u64 = 4096;
+    println!(
+        "net exchange: {total} workers total, {epochs} epochs x {per_epoch} records/worker, \
+         intra-process vs {processes}-process loopback TCP"
+    );
+    println!(
+        "{:>14} {:>14} {:>12} {:>12} {:>12}",
+        "topology", "records/s", "p50 ns", "p99 ns", "send-stalls"
+    );
+
+    // (a) One process hosting every worker.
+    let intra = {
+        let config = Config { workers: total, pin_workers: false, ..Config::default() };
+        let results =
+            execute::<u64, _, _>(config, move |w| drive_net_exchange(w, epochs, per_epoch));
+        measure_net(results)
+    };
+    println!(
+        "{:>14} {:>14} {:>12} {:>12} {:>12}",
+        "intra-process", intra.0, intra.1, intra.2, intra.3
+    );
+
+    // (b) The same workers split across `processes` cluster members over
+    // 127.0.0.1 TCP.
+    let cross = {
+        let addresses = timestamp_tokens::testing::free_loopback_addresses(processes);
+        let mut handles = Vec::new();
+        for p in 0..processes {
+            let addresses = addresses.clone();
+            handles.push(std::thread::spawn(move || {
+                let config = Config {
+                    workers: wpp,
+                    pin_workers: false,
+                    processes,
+                    process_index: p,
+                    addresses,
+                    ..Config::default()
+                };
+                execute_cluster::<u64, _, _>(config, move |w| {
+                    drive_net_exchange(w, epochs, per_epoch)
+                })
+                .expect("cluster bootstrap")
+            }));
+        }
+        let results: Vec<NetWorkerResult> =
+            handles.into_iter().flat_map(|h| h.join().expect("cluster process")).collect();
+        let expected = (total as u64) * epochs * per_epoch;
+        let got: u64 = results.iter().map(|r| r.records).sum();
+        assert_eq!(got, expected, "cluster exchange lost or duplicated records");
+        measure_net(results)
+    };
+    println!(
+        "{:>14} {:>14} {:>12} {:>12} {:>12}",
+        "cross-process", cross.0, cross.1, cross.2, cross.3
+    );
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"micro_exchange_net\",\n");
+    json.push_str(&format!("  \"processes\": {processes},\n"));
+    json.push_str(&format!("  \"workers_per_process\": {wpp},\n"));
+    json.push_str(&format!("  \"epochs\": {epochs},\n"));
+    json.push_str(&format!("  \"records_per_epoch_per_worker\": {per_epoch},\n"));
+    for (label, m, comma) in
+        [("intra_process", intra, ","), ("cross_process", cross, "")]
+    {
+        json.push_str(&format!(
+            "  \"{label}\": {{\"records_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
+             \"send_queue_stalls\": {}}}{comma}\n",
+            m.0, m.1, m.2, m.3
+        ));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_net.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_net.json: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Reporting.
 // ---------------------------------------------------------------------------
 
@@ -517,6 +688,10 @@ fn main() {
     let args = BenchArgs::parse();
     if args.sweep_ring {
         sweep_ring(&args);
+        return;
+    }
+    if args.processes > 0 {
+        net_scenario(&args);
         return;
     }
     let batches: usize = if args.quick { 128 } else { 1024 };

@@ -57,8 +57,18 @@ pub struct Config {
     /// data channels). Defaults to
     /// [`RING_CAPACITY`](crate::worker::allocator::RING_CAPACITY); swept
     /// by `micro_exchange --sweep-ring` against the ring-full stall
-    /// counters.
+    /// counters. In a cluster this also bounds each outbound net frame
+    /// queue.
     pub ring_capacity: usize,
+    /// Processes in the cluster (1 = the classic single-process run;
+    /// `workers` then counts *per-process* workers, for `processes ×
+    /// workers` total).
+    pub processes: usize,
+    /// This process's index in `0..processes`.
+    pub process_index: usize,
+    /// One `host:port` listen address per process, in process order.
+    /// Required when `processes > 1`; ignored otherwise.
+    pub addresses: Vec<String>,
 }
 
 impl Default for Config {
@@ -71,6 +81,9 @@ impl Default for Config {
             progress_flush: crate::worker::PROGRESS_FLUSH,
             send_batch: SEND_BATCH,
             ring_capacity: crate::worker::allocator::RING_CAPACITY,
+            processes: 1,
+            process_index: 0,
+            addresses: Vec::new(),
         }
     }
 }
@@ -101,5 +114,9 @@ mod tests {
         assert_eq!(c.progress_flush, crate::worker::PROGRESS_FLUSH);
         assert_eq!(c.send_batch, SEND_BATCH);
         assert_eq!(c.ring_capacity, crate::worker::allocator::RING_CAPACITY);
+        // Single-process by default: the cluster fields are inert.
+        assert_eq!(c.processes, 1);
+        assert_eq!(c.process_index, 0);
+        assert!(c.addresses.is_empty());
     }
 }

@@ -41,6 +41,35 @@ pub enum WmRecord<D> {
     },
 }
 
+/// Wire format: tag byte (0 = data, 1 = mark), then the variant fields —
+/// watermark streams exchange and broadcast records, so they must cross
+/// process boundaries like any other channel payload.
+impl<D: crate::net::Wire> crate::net::Wire for WmRecord<D> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            WmRecord::Data(te, d) => {
+                buf.push(0);
+                te.encode(buf);
+                d.encode(buf);
+            }
+            WmRecord::Mark { from, wm } => {
+                buf.push(1);
+                from.encode(buf);
+                wm.encode(buf);
+            }
+        }
+    }
+    fn decode(
+        reader: &mut crate::net::WireReader<'_>,
+    ) -> Result<Self, crate::net::WireError> {
+        match reader.u8()? {
+            0 => Ok(WmRecord::Data(u64::decode(reader)?, D::decode(reader)?)),
+            1 => Ok(WmRecord::Mark { from: usize::decode(reader)?, wm: u64::decode(reader)? }),
+            _ => Err(crate::net::WireError::Malformed("wm record tag")),
+        }
+    }
+}
+
 /// Channel wiring for watermark operators (§7.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WmWiring {

@@ -18,16 +18,19 @@
 //! outstanding pointstamps (see [`crate::progress::exchange`] for the full
 //! argument; there is no sequenced log and no global order).
 //!
-//! The transport is the same bounded SPSC ring family the progress plane
-//! uses ([`crate::worker::ring`], claimed through the
-//! [`Fabric`](crate::worker::allocator::Fabric)), and batch payloads are
-//! pooled [`Batch`]es rather than per-send `Vec`s: point-to-point batches
-//! are [`Lease`]s that return their capacity to the producing output's
+//! The transport is claimed through the
+//! [`Fabric`](crate::worker::allocator::Fabric): the same bounded SPSC
+//! ring family the progress plane uses ([`crate::worker::ring`]) for
+//! same-process peers, and serializing [`crate::net`] endpoints (the
+//! [`Wire`] impl on [`Message`] below) for peers in other processes —
+//! channel code cannot tell the difference. Batch payloads are pooled
+//! [`Batch`]es rather than per-send `Vec`s: point-to-point batches are
+//! [`Lease`]s that return their capacity to the producing output's
 //! [`BufferPool`](crate::buffer::BufferPool) when the consumer drops them,
 //! and broadcast batches are one shared `Arc` cloned per peer instead of
-//! `peers` record-by-record copies. A full ring is backpressure, not an
-//! error: messages stay staged (per destination, FIFO) and are retried on
-//! the next flush, after the peer drains.
+//! `peers` record-by-record copies. A full ring (or net send queue) is
+//! backpressure, not an error: messages stay staged (per destination,
+//! FIFO) and are retried on the next flush, after the peer drains.
 //!
 //! On pipeline channels the payload is not only pooled but *forwarded*: a
 //! uniquely owned [`Batch::Owned`] arriving at a map/filter-style operator
@@ -36,11 +39,12 @@
 //! pipeline chain the same lease object is the message payload at every
 //! hop — zero allocations *and* zero per-record moves.
 
-use crate::buffer::Lease;
+use crate::buffer::{BufferPool, Lease};
+use crate::net::codec::{Wire, WireError, WireReader};
 use crate::progress::location::Location;
 use crate::progress::timestamp::Timestamp;
-use crate::worker::allocator::WorkerStats;
-use crate::worker::ring::{RingReceiver, RingSendError, RingSender};
+use crate::worker::allocator::{FabricReceiver, FabricSender, WorkerStats};
+use crate::worker::ring::RingSendError;
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -48,8 +52,16 @@ use std::sync::mpsc::TryRecvError;
 use std::sync::Arc;
 
 /// Records that can travel on dataflow edges.
-pub trait Data: Clone + Send + 'static {}
-impl<D: Clone + Send + 'static> Data for D {}
+///
+/// The [`Wire`] bound is what lets any channel cross a process boundary:
+/// workers claim channels for *every* peer, and whether a given pair rides
+/// an intra-process ring or the serializing net fabric is decided at claim
+/// time — so every record type must be encodable, even in runs that never
+/// leave one process. Implementations exist for the primitive types,
+/// tuples, `Vec`/`String`/`Option`, and the engine's record types; custom
+/// records implement [`Wire`] alongside `Clone`.
+pub trait Data: Clone + Send + Wire + 'static {}
+impl<D: Clone + Send + Wire + 'static> Data for D {}
 
 /// The payload of one message batch.
 ///
@@ -202,6 +214,61 @@ pub struct Message<T, D> {
     pub from: usize,
 }
 
+/// Idle record buffers retained by a net endpoint's decode pool.
+const DECODE_POOL_SLOTS: usize = 32;
+
+/// The data plane's wire format: `time`, sending worker, then the record
+/// batch (`u32` count + records), encoded **straight out of the pooled
+/// batch slice** — no intermediate copy, whether the payload is an owned
+/// lease or a shared broadcast `Arc`.
+///
+/// Decoding goes **into a pooled lease** when the receiving endpoint
+/// supplies its `BufferPool<Vec<D>>` through the reader context
+/// ([`Wire::decode_context`] installs one per net endpoint), so the
+/// receive side of the cross-process path recycles record buffers exactly
+/// like the intra-process path does. Without a context (tests, handshake
+/// paths) the batch decodes into a plain un-pooled buffer.
+impl<T: Timestamp, D: Data> Wire for Message<T, D> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.time.encode(buf);
+        (self.from as u32).encode(buf);
+        let records = self.data.as_slice();
+        debug_assert!(records.len() <= u32::MAX as usize);
+        (records.len() as u32).encode(buf);
+        for record in records {
+            record.encode(buf);
+        }
+    }
+
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let time = T::decode(reader)?;
+        let from = reader.u32()? as usize;
+        let len = reader.read_len()?;
+        let data = match reader.context::<BufferPool<Vec<D>>>() {
+            Some(pool) => {
+                let mut lease = pool.checkout();
+                lease.reserve(len.min(reader.remaining().max(1)));
+                for _ in 0..len {
+                    lease.push(D::decode(reader)?);
+                }
+                Batch::Owned(lease)
+            }
+            None => {
+                let mut records = Vec::with_capacity(len.min(reader.remaining().max(1)));
+                for _ in 0..len {
+                    records.push(D::decode(reader)?);
+                }
+                Batch::from_vec(records)
+            }
+        };
+        Ok(Message { time, data, from })
+    }
+
+    fn decode_context() -> Option<Box<dyn std::any::Any + Send>> {
+        Some(Box::new(BufferPool::<Vec<D>>::new(DECODE_POOL_SLOTS)))
+    }
+}
+
 /// Where an exchanged record should go.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Route {
@@ -262,8 +329,9 @@ pub struct ChannelSend<T: Timestamp, D: Data> {
     /// Staged remote messages, per destination (FIFO within each), released
     /// by `flush_remote`.
     staged: Vec<VecDeque<Message<T, D>>>,
-    /// Remote ring senders, one per peer (`None` at `my_index`).
-    remote: Vec<Option<RingSender<Message<T, D>>>>,
+    /// Remote fabric senders, one per peer (`None` at `my_index`): rings
+    /// for same-process peers, serializing net endpoints across processes.
+    remote: Vec<Option<FabricSender<Message<T, D>>>>,
     /// The local mailbox on this worker (for self-sends).
     local: LocalQueue<T, D>,
     /// Worker-wide flag: set when remote data is staged, so the worker
@@ -283,7 +351,7 @@ impl<T: Timestamp, D: Data> ChannelSend<T, D> {
         pact: Pact<D>,
         my_index: usize,
         peers: usize,
-        remote: Vec<Option<RingSender<Message<T, D>>>>,
+        remote: Vec<Option<FabricSender<Message<T, D>>>>,
         local: LocalQueue<T, D>,
         staged_flag: Rc<Cell<bool>>,
         stats: Arc<WorkerStats>,
@@ -337,9 +405,13 @@ impl<T: Timestamp, D: Data> ChannelSend<T, D> {
                     Ok(()) => sent = true,
                     Err(RingSendError::Full(message)) => {
                         // Preserve FIFO: the rejected message goes back to
-                        // the front; retry after the peer drains.
+                        // the front; retry after the peer drains. Net
+                        // endpoints count their own send-queue stalls, so
+                        // the ring counter stays ring-only.
                         self.staged[dest].push_front(message);
-                        self.stats.note_ring_full();
+                        if !sender.is_net() {
+                            self.stats.note_ring_full();
+                        }
                         remaining = true;
                         break;
                     }
@@ -369,10 +441,11 @@ pub type ChannelSendHandle<T, D> = Rc<RefCell<ChannelSend<T, D>>>;
 /// downstream consumers connect).
 pub type TeeHandle<T, D> = Rc<RefCell<Vec<ChannelSendHandle<T, D>>>>;
 
-/// Builds a drainer closure that moves messages from a remote ring into
-/// the channel's local mailbox; returns whether any message moved.
+/// Builds a drainer closure that moves messages from a remote fabric
+/// endpoint (ring or net) into the channel's local mailbox; returns
+/// whether any message moved.
 pub fn drainer<T: Timestamp, D: Data>(
-    mut receiver: RingReceiver<Message<T, D>>,
+    mut receiver: FabricReceiver<Message<T, D>>,
     queue: LocalQueue<T, D>,
 ) -> Box<dyn FnMut() -> bool> {
     Box::new(move || {
@@ -425,6 +498,7 @@ mod tests {
     #[test]
     fn remote_push_staged_until_flush() {
         let (tx, mut rx) = ring::channel(8);
+        let tx = FabricSender::Ring(tx);
         let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
         let flag = Rc::new(Cell::new(false));
         let mut send = ChannelSend::new(
@@ -451,6 +525,7 @@ mod tests {
     #[test]
     fn full_ring_keeps_messages_staged_in_order() {
         let (tx, mut rx) = ring::channel(2);
+        let tx = FabricSender::Ring(tx);
         let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
         let counters = stats();
         let mut send = ChannelSend::new(
@@ -484,6 +559,7 @@ mod tests {
     #[test]
     fn disconnected_peer_discards_staged() {
         let (tx, rx) = ring::channel::<Message<u64, u32>>(4);
+        let tx = FabricSender::Ring(tx);
         drop(rx);
         let local: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
         let mut send = ChannelSend::new(
@@ -507,7 +583,7 @@ mod tests {
     fn drainer_moves_messages() {
         let (mut tx, rx) = ring::channel(8);
         let queue: LocalQueue<u64, u32> = Rc::new(RefCell::new(VecDeque::new()));
-        let mut drain = drainer(rx, queue.clone());
+        let mut drain = drainer(FabricReceiver::Ring(rx), queue.clone());
         assert!(!drain());
         tx.send(msg(1, vec![1])).unwrap();
         tx.send(msg(2, vec![2])).unwrap();

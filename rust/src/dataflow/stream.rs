@@ -54,14 +54,16 @@ impl<T: Timestamp, D: Data> Stream<T, D> {
         state.topology.edges.push((self.source, target));
 
         // Claim remote endpoints: we send on (channel, index, w) and receive
-        // on (channel, w, index) for every peer w != index.
+        // on (channel, w, index) for every peer w != index. The fabric
+        // routes each pair onto an intra-process ring or a serializing net
+        // endpoint by the peer's locality.
         let mut remote = Vec::with_capacity(peers);
         for w in 0..peers {
             if w == index {
                 remote.push(None);
             } else {
-                remote.push(Some(state.fabric.sender::<Message<T, D>>(channel, index, w)));
-                let receiver = state.fabric.receiver::<Message<T, D>>(channel, w, index);
+                remote.push(Some(state.fabric.channel_sender::<Message<T, D>>(channel, index, w)));
+                let receiver = state.fabric.channel_receiver::<Message<T, D>>(channel, w, index);
                 state.drainers.push(drainer(receiver, queue.clone()));
             }
         }

@@ -17,8 +17,9 @@ use super::histogram::LatencyHistogram;
 use super::workloads::{build_noop_chain, build_word_count, CompletionProbe, WorkloadInput};
 use crate::config::Config;
 use crate::coordination::Mechanism;
+use crate::net::NetError;
 use crate::worker::allocator::WorkerTelemetry;
-use crate::worker::execute::execute;
+use crate::worker::execute::{execute, execute_cluster};
 use crate::worker::Worker;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -107,16 +108,8 @@ enum WorkerOutcome {
     Dnf,
 }
 
-/// Runs one open-loop experiment.
-pub fn run(params: Params) -> Outcome {
-    let epoch = Instant::now() + Duration::from_millis(50); // build headroom
-    let config = Config {
-        workers: params.workers,
-        pin_workers: params.pin_workers,
-        ..Config::default()
-    };
-    let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
-
+/// Merges per-worker outcomes into the experiment outcome.
+fn collect(results: Vec<WorkerOutcome>, duration: Duration) -> Outcome {
     let mut histogram = LatencyHistogram::new();
     let mut sent_total = 0u64;
     let mut telemetry = Vec::new();
@@ -130,8 +123,55 @@ pub fn run(params: Params) -> Outcome {
             }
         }
     }
-    let achieved_rate = sent_total as f64 / params.duration.as_secs_f64();
+    let achieved_rate = sent_total as f64 / duration.as_secs_f64();
     Outcome::Completed { histogram, achieved_rate, telemetry }
+}
+
+/// Runs one open-loop experiment.
+pub fn run(params: Params) -> Outcome {
+    let epoch = Instant::now() + Duration::from_millis(50); // build headroom
+    let config = Config {
+        workers: params.workers,
+        pin_workers: params.pin_workers,
+        ..Config::default()
+    };
+    let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
+    collect(results, params.duration)
+}
+
+/// Runs this process's share of a multi-process experiment (every process
+/// calls this with the same `params` and its own index; `params.workers`
+/// counts workers *per process*). The outcome merges only the local
+/// workers' histograms and telemetry — each process reports its own.
+///
+/// Timestamps are wall-clock nanoseconds from a per-process epoch taken
+/// *after* the cluster bootstrap completes, so cross-process epoch skew is
+/// bounded by connection time on the cluster's network (microseconds on
+/// loopback) — far under the DNF bound the harness enforces.
+pub fn run_cluster(
+    params: Params,
+    processes: usize,
+    process_index: usize,
+    addresses: Vec<String>,
+) -> Result<Outcome, NetError> {
+    let config = Config {
+        workers: params.workers,
+        pin_workers: params.pin_workers,
+        processes,
+        process_index,
+        addresses,
+        ..Config::default()
+    };
+    // The epoch must postdate the bootstrap handshake (which can take
+    // arbitrarily long while peers start up), so each worker takes it
+    // lazily on first use — the OnceLock is set by whichever local worker
+    // arrives first, after `execute_cluster` has connected the mesh.
+    let epoch_cell = std::sync::OnceLock::new();
+    let results = execute_cluster::<u64, _, _>(config, move |worker| {
+        let epoch = *epoch_cell.get_or_init(|| Instant::now() + Duration::from_millis(50));
+        drive(worker, params, epoch)
+    })?;
+    Ok(collect(results, params.duration))
 }
 
 /// The per-worker open-loop driving loop.

@@ -1,10 +1,13 @@
 //! Table formatting for the bench binaries: rows shaped like the paper's
 //! tables (p50 / p999 / max in milliseconds, `DNF` for overload), plus the
-//! per-worker fabric telemetry table (parks / unparks / ring-full stalls).
+//! fabric telemetry table — per-worker parks / unparks / ring-full stalls
+//! and the net-plane counters (frames and bytes sent/received, send-queue
+//! stalls), grouped by process with per-process aggregate rows.
 
 use super::histogram::fmt_ms;
 use super::openloop::Outcome;
 use crate::worker::allocator::WorkerTelemetry;
+use std::collections::BTreeMap;
 
 /// One table row: a configuration label and its outcome.
 pub struct Row {
@@ -26,32 +29,83 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
     }
 }
 
-/// Formats per-worker fabric telemetry as table rows.
-pub fn telemetry_rows(telemetry: &[WorkerTelemetry]) -> Vec<Vec<String>> {
-    telemetry
-        .iter()
-        .map(|t| {
-            vec![
-                t.worker.to_string(),
-                t.parks.to_string(),
-                t.unparks.to_string(),
-                t.ring_full_stalls.to_string(),
-            ]
-        })
-        .collect()
+/// Column headers of the telemetry table (shared by the per-worker and
+/// per-process aggregate rows).
+pub const TELEMETRY_HEADER: [&str; 10] = [
+    "process",
+    "worker",
+    "parks",
+    "unparks",
+    "ring-full",
+    "net-frames-tx",
+    "net-frames-rx",
+    "net-bytes-tx",
+    "net-bytes-rx",
+    "send-stalls",
+];
+
+fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
+    vec![
+        process.to_string(),
+        worker.to_string(),
+        t.parks.to_string(),
+        t.unparks.to_string(),
+        t.ring_full_stalls.to_string(),
+        t.net.frames_sent.to_string(),
+        t.net.frames_recv.to_string(),
+        t.net.bytes_sent.to_string(),
+        t.net.bytes_recv.to_string(),
+        t.net.send_queue_stalls.to_string(),
+    ]
 }
 
-/// Prints the per-worker parking / backpressure telemetry of a completed
-/// run (no-op for an empty snapshot, e.g. from old outcomes).
+/// Sums a group of workers' counters into one aggregate entry.
+fn aggregate(workers: &[&WorkerTelemetry]) -> WorkerTelemetry {
+    let mut total = WorkerTelemetry::default();
+    for t in workers {
+        total.parks += t.parks;
+        total.unparks += t.unparks;
+        total.ring_full_stalls += t.ring_full_stalls;
+        total.net.frames_sent += t.net.frames_sent;
+        total.net.frames_recv += t.net.frames_recv;
+        total.net.bytes_sent += t.net.bytes_sent;
+        total.net.bytes_recv += t.net.bytes_recv;
+        total.net.send_queue_stalls += t.net.send_queue_stalls;
+    }
+    total
+}
+
+/// Formats fabric telemetry grouped by process: each process's workers in
+/// index order, followed by a `Σ` aggregate row for that process.
+pub fn telemetry_rows(telemetry: &[WorkerTelemetry]) -> Vec<Vec<String>> {
+    let mut by_process: BTreeMap<usize, Vec<&WorkerTelemetry>> = BTreeMap::new();
+    for t in telemetry {
+        by_process.entry(t.process).or_default().push(t);
+    }
+    let multi = by_process.len() > 1 || telemetry.iter().any(|t| t.process != 0);
+    let mut rows = Vec::new();
+    for (process, workers) in &by_process {
+        for t in workers {
+            rows.push(telemetry_row(&process.to_string(), &t.worker.to_string(), t));
+        }
+        // The aggregate row only earns its ink when there is more than one
+        // group (or more than one worker) to aggregate over.
+        if multi || workers.len() > 1 {
+            let total = aggregate(workers);
+            rows.push(telemetry_row(&process.to_string(), "Σ", &total));
+        }
+    }
+    rows
+}
+
+/// Prints the parking / backpressure / net telemetry of a completed run,
+/// grouped by process (no-op for an empty snapshot, e.g. from old
+/// outcomes).
 pub fn print_worker_telemetry(telemetry: &[WorkerTelemetry]) {
     if telemetry.is_empty() {
         return;
     }
-    print_table(
-        "worker telemetry",
-        &["worker", "parks", "unparks", "ring-full stalls"],
-        &telemetry_rows(telemetry),
-    );
+    print_table("worker telemetry", &TELEMETRY_HEADER, &telemetry_rows(telemetry));
 }
 
 /// Prints a table with a header; column widths auto-fit.
@@ -110,12 +164,37 @@ mod tests {
     fn telemetry_rows_format() {
         let rows = telemetry_rows(&[WorkerTelemetry {
             worker: 3,
+            process: 0,
             parks: 10,
             unparks: 7,
             ring_full_stalls: 2,
+            net: Default::default(),
         }]);
-        let want: Vec<Vec<String>> =
-            vec![["3", "10", "7", "2"].iter().map(|s| s.to_string()).collect()];
+        // One worker, one process: no aggregate row.
+        let want: Vec<Vec<String>> = vec![["0", "3", "10", "7", "2", "0", "0", "0", "0", "0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()];
         assert_eq!(rows, want);
+    }
+
+    #[test]
+    fn telemetry_groups_by_process_with_aggregates() {
+        let mut w0 = WorkerTelemetry { worker: 0, process: 0, parks: 1, ..Default::default() };
+        w0.net.frames_sent = 5;
+        let mut w1 = WorkerTelemetry { worker: 1, process: 0, parks: 2, ..Default::default() };
+        w1.net.frames_sent = 7;
+        let mut w2 = WorkerTelemetry { worker: 2, process: 1, parks: 4, ..Default::default() };
+        w2.net.bytes_recv = 100;
+        let rows = telemetry_rows(&[w0, w1, w2]);
+        // 3 worker rows + 2 per-process aggregate rows, grouped: process 0
+        // (workers 0, 1, Σ), then process 1 (worker 2, Σ).
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[2][1], "Σ");
+        assert_eq!(rows[2][2], "3", "parks aggregate");
+        assert_eq!(rows[2][5], "12", "frames-tx aggregate");
+        assert_eq!(rows[3][0], "1");
+        assert_eq!(rows[4][1], "Σ");
+        assert_eq!(rows[4][8], "100", "bytes-rx aggregate");
     }
 }

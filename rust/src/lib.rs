@@ -33,6 +33,11 @@
 //!   worker, atomic progress batches broadcast worker-to-worker over
 //!   per-peer FIFO mailboxes (no central sequencer), park/unpark wakeups
 //!   while idle.
+//! * [`net`] — the multi-process fabric: a compact little-endian wire
+//!   format ([`net::Wire`]), frame transports (TCP + loopback), and the
+//!   serializing endpoints that extend both fabric planes across process
+//!   boundaries under the same timestamp-token protocol
+//!   (`worker::execute::execute_cluster`).
 //! * [`operators`] — stock operators (map/filter/exchange, rolling word
 //!   count, tumbling windows, no-op chains).
 //! * [`coordination`] — the three mechanisms above.
@@ -82,6 +87,7 @@ pub mod config;
 pub mod coordination;
 pub mod dataflow;
 pub mod harness;
+pub mod net;
 pub mod nexmark;
 pub mod operators;
 pub mod progress;
@@ -101,9 +107,10 @@ pub mod prelude {
     pub use crate::dataflow::probe::{ProbeExt, ProbeHandle};
     pub use crate::dataflow::stream::Stream;
     pub use crate::dataflow::token::{TimestampToken, TimestampTokenRef, TokenTrait};
+    pub use crate::net::{Wire, WireError, WireReader};
     pub use crate::operators::prelude::*;
     pub use crate::progress::antichain::{Antichain, MutableAntichain};
     pub use crate::progress::timestamp::{PartialOrder, Product, Timestamp};
-    pub use crate::worker::execute::{execute, execute_single};
+    pub use crate::worker::execute::{execute, execute_cluster, execute_single};
     pub use crate::worker::Worker;
 }

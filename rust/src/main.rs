@@ -11,12 +11,23 @@
 //! ttd artifacts  [--dir PATH]                 verify the PJRT data plane
 //! ttd info                                    engine / environment info
 //! ```
+//!
+//! Any workload runs **multi-process** with `--processes N` (`--workers`
+//! then counts per-process workers). Without `--process I` the launcher
+//! orchestrates: it re-execs itself once per process index and waits —
+//! `ttd wordcount --processes 2 --workers 2` is a complete 2×2 cluster on
+//! one machine. With `--process I` it runs as cluster member `I`
+//! (distributed launches: start the same command on each host).
+//! Addresses default to `127.0.0.1:{base-port + i}` (`--base-port`,
+//! default 40701) or come from `--addresses host:port,host:port,...`.
+//! Process 0's `ring_capacity` / `progress_flush` / `send_batch` flags
+//! propagate to every process through the bootstrap handshake.
 
 use std::time::Duration;
 use timestamp_tokens::coordination::Mechanism;
-use timestamp_tokens::harness::openloop::{run, Outcome, Params, Workload};
+use timestamp_tokens::harness::openloop::{run, run_cluster, Outcome, Params, Workload};
 use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
-use timestamp_tokens::nexmark::bench::{run_nexmark, NexmarkParams, Query};
+use timestamp_tokens::nexmark::bench::{run_nexmark, run_nexmark_cluster, NexmarkParams, Query};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -47,6 +58,71 @@ impl Args {
             .map(|m| m.parse().expect("tokens|notifications|watermarks-x|watermarks-p"))
             .unwrap_or(Mechanism::Tokens)
     }
+
+    /// The cluster topology requested on the command line.
+    fn cluster(&self) -> ClusterArgs {
+        let processes = self.get("processes", 1usize).max(1);
+        let addresses = match self.flags.get("addresses") {
+            Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+            None => {
+                let base = self.get("base-port", 40701u16);
+                (0..processes).map(|i| format!("127.0.0.1:{}", base + i as u16)).collect()
+            }
+        };
+        ClusterArgs {
+            processes,
+            process: self.flags.get("process").and_then(|v| v.parse().ok()),
+            addresses,
+        }
+    }
+}
+
+/// Parsed `--processes` / `--process` / `--addresses` flags.
+struct ClusterArgs {
+    processes: usize,
+    /// `None` = orchestrate (spawn one child per process index).
+    process: Option<usize>,
+    addresses: Vec<String>,
+}
+
+impl ClusterArgs {
+    fn validate(&self) {
+        assert_eq!(
+            self.addresses.len(),
+            self.processes,
+            "--addresses must list one host:port per process"
+        );
+        if let Some(p) = self.process {
+            assert!(p < self.processes, "--process {p} out of range 0..{}", self.processes);
+        }
+    }
+}
+
+/// Orchestrator mode: re-exec this binary once per process index with the
+/// original arguments plus `--process i`, wait for all, and fail if any
+/// child failed.
+fn orchestrate(processes: usize) -> ! {
+    let exe = std::env::current_exe().expect("current_exe");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut children = Vec::new();
+    for i in 0..processes {
+        let child = std::process::Command::new(&exe)
+            .args(&argv)
+            .arg("--process")
+            .arg(i.to_string())
+            .spawn()
+            .unwrap_or_else(|e| panic!("spawn cluster process {i}: {e}"));
+        children.push((i, child));
+    }
+    let mut failed = false;
+    for (i, mut child) in children {
+        let status = child.wait().expect("wait for cluster process");
+        if !status.success() {
+            eprintln!("cluster process {i} exited with {status}");
+            failed = true;
+        }
+    }
+    std::process::exit(if failed { 1 } else { 0 });
 }
 
 fn print_outcome(label: &str, outcome: &Outcome) {
@@ -74,7 +150,13 @@ fn main() {
 
     match command {
         "wordcount" | "noop" => {
+            let cluster = args.cluster();
+            cluster.validate();
+            if cluster.processes > 1 && cluster.process.is_none() {
+                orchestrate(cluster.processes);
+            }
             let workers = args.get("workers", 4usize);
+            let total_workers = workers * cluster.processes;
             let mechanism = args.mechanism();
             let workload = if command == "wordcount" {
                 Workload::WordCount
@@ -83,7 +165,7 @@ fn main() {
             };
             let mut params = Params::new(mechanism, workload);
             params.workers = workers;
-            params.rate_per_worker = args.get("rate", 1_000_000u64) / workers as u64;
+            params.rate_per_worker = args.get("rate", 1_000_000u64) / total_workers as u64;
             params.quantum_ns = match workload {
                 Workload::WordCount => 1u64 << args.get("quantum-bits", 13u32),
                 Workload::NoopChain(_) => {
@@ -92,15 +174,39 @@ fn main() {
             };
             params.duration = Duration::from_millis(args.get("duration-ms", 2000u64));
             params.warmup = Duration::from_millis(args.get("warmup-ms", 500u64));
-            println!(
-                "{command}: {mechanism:?}, {workers} workers, quantum {} ns, {:?}",
-                params.quantum_ns, params.duration
-            );
-            let outcome = run(params);
-            print_outcome(command, &outcome);
+            let (label, outcome) = match cluster.process {
+                Some(process) if cluster.processes > 1 => {
+                    println!(
+                        "{command}[p{process}]: {mechanism:?}, {} processes x {workers} \
+                         workers, quantum {} ns, {:?}",
+                        cluster.processes, params.quantum_ns, params.duration
+                    );
+                    let outcome =
+                        run_cluster(params, cluster.processes, process, cluster.addresses)
+                            .unwrap_or_else(|e| {
+                                eprintln!("{command}: cluster bootstrap failed: {e}");
+                                std::process::exit(1);
+                            });
+                    (format!("{command}[p{process}]"), outcome)
+                }
+                _ => {
+                    println!(
+                        "{command}: {mechanism:?}, {workers} workers, quantum {} ns, {:?}",
+                        params.quantum_ns, params.duration
+                    );
+                    (command.to_string(), run(params))
+                }
+            };
+            print_outcome(&label, &outcome);
         }
         "nexmark" => {
+            let cluster = args.cluster();
+            cluster.validate();
+            if cluster.processes > 1 && cluster.process.is_none() {
+                orchestrate(cluster.processes);
+            }
             let workers = args.get("workers", 4usize);
+            let total_workers = workers * cluster.processes;
             let query = match args.flags.get("query").map(|s| s.as_str()).unwrap_or("q7") {
                 "q4" => Query::Q4,
                 "q7" => Query::Q7 {
@@ -110,12 +216,33 @@ fn main() {
             };
             let mut params = NexmarkParams::new(args.mechanism(), query);
             params.workers = workers;
-            params.rate_per_worker = args.get("rate", 500_000u64) / workers as u64;
+            params.rate_per_worker = args.get("rate", 500_000u64) / total_workers as u64;
             params.duration = Duration::from_millis(args.get("duration-ms", 2000u64));
             params.warmup = Duration::from_millis(args.get("warmup-ms", 500u64));
-            println!("nexmark {query:?}: {:?}, {workers} workers", params.mechanism);
-            let outcome = run_nexmark(params);
-            print_outcome("nexmark", &outcome);
+            let (label, outcome) = match cluster.process {
+                Some(process) if cluster.processes > 1 => {
+                    println!(
+                        "nexmark {query:?}[p{process}]: {:?}, {} processes x {workers} workers",
+                        params.mechanism, cluster.processes
+                    );
+                    let outcome = run_nexmark_cluster(
+                        params,
+                        cluster.processes,
+                        process,
+                        cluster.addresses,
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!("nexmark: cluster bootstrap failed: {e}");
+                        std::process::exit(1);
+                    });
+                    (format!("nexmark[p{process}]"), outcome)
+                }
+                _ => {
+                    println!("nexmark {query:?}: {:?}, {workers} workers", params.mechanism);
+                    ("nexmark".to_string(), run_nexmark(params))
+                }
+            };
+            print_outcome(&label, &outcome);
         }
         "artifacts" => {
             let dir = args
@@ -153,6 +280,9 @@ fn main() {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
             );
             println!("mechanisms: tokens | notifications | watermarks-x | watermarks-p");
+            println!(
+                "cluster: --processes N [--process I] [--addresses h:p,...] [--base-port P]"
+            );
             println!("artifacts dir: artifacts/ (run `make artifacts`)");
         }
         _ => {

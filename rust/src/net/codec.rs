@@ -1,0 +1,763 @@
+//! The wire format: a compact little-endian codec for everything that
+//! crosses a process boundary.
+//!
+//! Two layers:
+//!
+//! * **Values** — the [`Wire`] trait pair (`encode` into a byte buffer /
+//!   `decode` from a [`WireReader`]), implemented for the primitive types,
+//!   tuples, collections, the progress-plane types ([`Location`],
+//!   [`Product`], progress batches `((Location, T), i64)`), and the data
+//!   plane's `Message<T, D>` (in `dataflow::channels`). All multi-byte
+//!   integers are little-endian and fixed-width; lengths are `u32`.
+//!   Encoding reads straight out of a message's pooled batch slice (no
+//!   intermediate copy), and decoding can target a pooled lease through
+//!   the reader's type-erased context ([`WireReader::context`] +
+//!   [`Wire::decode_context`]) so the receive side stays pooled too.
+//! * **Frames** — the transport unit: a fixed [`FRAME_HEADER_BYTES`]-byte
+//!   header (`channel: u64, from: u32, to: u32, len: u32`, little-endian)
+//!   followed by `len` payload bytes. [`FrameDecoder`] is an *incremental*
+//!   parser: it can be fed input one byte at a time (torn TCP reads) and
+//!   emits complete frames with payloads in pooled buffers. Payload length
+//!   is bounded by [`MAX_FRAME_PAYLOAD`]; an oversize header is a protocol
+//!   error, never an allocation.
+//!
+//! Decoding is defensive: every read is bounds-checked ([`WireError`]),
+//! and length prefixes never pre-allocate more than the bytes actually
+//! present, so a truncated or corrupt frame fails cleanly instead of
+//! aborting on a bogus multi-gigabyte reservation.
+
+use crate::buffer::{BufferPool, Lease};
+use crate::progress::location::{Location, Port};
+use crate::progress::timestamp::Product;
+use std::any::Any;
+use std::sync::Arc;
+
+/// Largest admissible frame payload (64 MiB). `SEND_BATCH`-sized record
+/// batches and coalesced progress batches sit far below this; the bound
+/// exists so a corrupt length prefix cannot drive allocation.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 26;
+
+/// Why a decode failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The input ended before the value was complete.
+    Truncated,
+    /// The bytes do not describe a valid value of the expected type.
+    Malformed(&'static str),
+    /// A length prefix exceeded the admissible bound.
+    Oversize {
+        /// The claimed length.
+        len: usize,
+        /// The bound it violated.
+        max: usize,
+    },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "input truncated"),
+            WireError::Malformed(what) => write!(f, "malformed {what}"),
+            WireError::Oversize { len, max } => {
+                write!(f, "length {len} exceeds bound {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A bounds-checked cursor over encoded bytes, optionally carrying a
+/// type-erased decode context (e.g. the receiving endpoint's buffer pool;
+/// see [`Wire::decode_context`]).
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    context: Option<&'a (dyn Any + Send)>,
+}
+
+impl<'a> WireReader<'a> {
+    /// A reader over `buf` with no decode context.
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0, context: None }
+    }
+
+    /// A reader over `buf` carrying `context` for pooled decodes.
+    pub fn with_context(buf: &'a [u8], context: &'a (dyn Any + Send)) -> Self {
+        WireReader { buf, pos: 0, context: Some(context) }
+    }
+
+    /// Bytes not yet consumed.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True iff every byte has been consumed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// The decode context, downcast to `C` (None if absent or another type).
+    pub fn context<C: 'static>(&self) -> Option<&'a C> {
+        self.context.and_then(|c| c.downcast_ref::<C>())
+    }
+
+    /// Consumes the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let bytes = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(bytes)
+    }
+
+    /// Reads one byte.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Reads a little-endian `u16`.
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    /// Reads a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// Reads a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Reads a `u32` length prefix.
+    pub fn read_len(&mut self) -> Result<usize, WireError> {
+        Ok(self.u32()? as usize)
+    }
+}
+
+/// Value (de)serialization for the wire format.
+///
+/// Implementations must be total inverses: `decode(encode(v)) == v` for
+/// every value, consuming exactly the bytes `encode` produced (the codec
+/// property tests drive this across seeded inputs).
+pub trait Wire: Sized {
+    /// Appends this value's encoding to `buf`.
+    fn encode(&self, buf: &mut Vec<u8>);
+
+    /// Decodes one value from the reader.
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError>;
+
+    /// An optional per-endpoint decode context, constructed once when a
+    /// receiving endpoint for this type is claimed and handed to every
+    /// [`Wire::decode`] call through [`WireReader::context`]. The data
+    /// plane uses this to decode record batches straight into pooled
+    /// leases (`Message<T, D>` installs a `BufferPool<Vec<D>>`).
+    fn decode_context() -> Option<Box<dyn Any + Send>> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitives.
+// ---------------------------------------------------------------------------
+
+macro_rules! impl_wire_uint {
+    ($t:ty, $read:ident) => {
+        impl Wire for $t {
+            #[inline]
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+                reader.$read()
+            }
+        }
+    };
+}
+
+impl_wire_uint!(u8, u8);
+impl_wire_uint!(u16, u16);
+impl_wire_uint!(u32, u32);
+impl_wire_uint!(u64, u64);
+
+impl Wire for usize {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (*self as u64).encode(buf);
+    }
+    #[inline]
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        usize::try_from(reader.u64()?).map_err(|_| WireError::Malformed("usize"))
+    }
+}
+
+impl Wire for i32 {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(reader.u32()? as i32)
+    }
+}
+
+impl Wire for i64 {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(reader.u64()? as i64)
+    }
+}
+
+impl Wire for f64 {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+    #[inline]
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(f64::from_bits(reader.u64()?))
+    }
+}
+
+impl Wire for bool {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(*self as u8);
+    }
+    #[inline]
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match reader.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bool")),
+        }
+    }
+}
+
+impl Wire for () {
+    #[inline]
+    fn encode(&self, _buf: &mut Vec<u8>) {}
+    #[inline]
+    fn decode(_reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tuples.
+// ---------------------------------------------------------------------------
+
+macro_rules! impl_wire_tuple {
+    ($($name:ident : $idx:tt),+) => {
+        impl<$($name: Wire),+> Wire for ($($name,)+) {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                $(self.$idx.encode(buf);)+
+            }
+            fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+                Ok(($($name::decode(reader)?,)+))
+            }
+        }
+    };
+}
+
+impl_wire_tuple!(A: 0);
+impl_wire_tuple!(A: 0, B: 1);
+impl_wire_tuple!(A: 0, B: 1, C: 2);
+impl_wire_tuple!(A: 0, B: 1, C: 2, D: 3);
+impl_wire_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4);
+
+// ---------------------------------------------------------------------------
+// Collections and wrappers.
+// ---------------------------------------------------------------------------
+
+impl<T: Wire> Wire for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        debug_assert!(self.len() <= u32::MAX as usize, "batch too long for wire");
+        (self.len() as u32).encode(buf);
+        for item in self {
+            item.encode(buf);
+        }
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let len = reader.read_len()?;
+        // Never pre-allocate beyond the bytes actually present: a corrupt
+        // length fails in the element loop, not in the allocator.
+        let mut items = Vec::with_capacity(len.min(reader.remaining().max(1)));
+        for _ in 0..len {
+            items.push(T::decode(reader)?);
+        }
+        Ok(items)
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u32).encode(buf);
+        buf.extend_from_slice(self.as_bytes());
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let len = reader.read_len()?;
+        let bytes = reader.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("utf-8 string"))
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(v) => {
+                buf.push(1);
+                v.encode(buf);
+            }
+        }
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match reader.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(reader)?)),
+            _ => Err(WireError::Malformed("option tag")),
+        }
+    }
+}
+
+/// Shared values serialize as their contents; decoding re-wraps in a fresh
+/// `Arc` (the share structure is a process-local artifact — the progress
+/// plane's broadcast `Arc<ProgressBatch<T>>` crosses the wire as the batch
+/// itself).
+impl<V: Wire> Wire for Arc<V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (**self).encode(buf);
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(Arc::new(V::decode(reader)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Progress-plane types.
+// ---------------------------------------------------------------------------
+
+impl Wire for Location {
+    /// `node: u32`, then a direction tag byte (0 = source, 1 = target),
+    /// then `port: u32`.
+    fn encode(&self, buf: &mut Vec<u8>) {
+        debug_assert!(self.node <= u32::MAX as usize);
+        (self.node as u32).encode(buf);
+        match self.port {
+            Port::Source(p) => {
+                buf.push(0);
+                (p as u32).encode(buf);
+            }
+            Port::Target(p) => {
+                buf.push(1);
+                (p as u32).encode(buf);
+            }
+        }
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let node = reader.u32()? as usize;
+        let tag = reader.u8()?;
+        let port = reader.u32()? as usize;
+        match tag {
+            0 => Ok(Location::source(node, port)),
+            1 => Ok(Location::target(node, port)),
+            _ => Err(WireError::Malformed("location port tag")),
+        }
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for Product<A, B> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.outer.encode(buf);
+        self.inner.encode(buf);
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(Product::new(A::decode(reader)?, B::decode(reader)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames.
+// ---------------------------------------------------------------------------
+
+/// Bytes in an encoded frame header.
+pub const FRAME_HEADER_BYTES: usize = 20;
+
+/// The fixed-size routing header preceding every frame payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// The fabric channel id (`u64` on the wire — the progress plane's
+    /// reserved `usize::MAX` id round-trips on 64-bit hosts).
+    pub channel: usize,
+    /// Global index of the sending worker.
+    pub from: usize,
+    /// Global index of the receiving worker.
+    pub to: usize,
+    /// Payload bytes following the header.
+    pub len: usize,
+}
+
+impl FrameHeader {
+    /// Writes the header into a fixed-size buffer.
+    pub fn write(&self, out: &mut [u8; FRAME_HEADER_BYTES]) {
+        out[0..8].copy_from_slice(&(self.channel as u64).to_le_bytes());
+        out[8..12].copy_from_slice(&(self.from as u32).to_le_bytes());
+        out[12..16].copy_from_slice(&(self.to as u32).to_le_bytes());
+        out[16..20].copy_from_slice(&(self.len as u32).to_le_bytes());
+    }
+
+    /// Parses a header, validating the payload-length bound.
+    pub fn read(bytes: &[u8; FRAME_HEADER_BYTES]) -> Result<Self, WireError> {
+        let channel = u64::from_le_bytes(bytes[0..8].try_into().expect("8 bytes")) as usize;
+        let from = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes")) as usize;
+        let to = u32::from_le_bytes(bytes[12..16].try_into().expect("4 bytes")) as usize;
+        let len = u32::from_le_bytes(bytes[16..20].try_into().expect("4 bytes")) as usize;
+        if len > MAX_FRAME_PAYLOAD {
+            return Err(WireError::Oversize { len, max: MAX_FRAME_PAYLOAD });
+        }
+        Ok(FrameHeader { channel, from, to, len })
+    }
+}
+
+/// Incremental frame parser: feed it byte chunks of *any* size (including
+/// one byte at a time — torn TCP reads) and it emits complete frames.
+/// Payloads land in buffers from a recycling pool; the consumer returns
+/// them by dropping the lease.
+pub struct FrameDecoder {
+    pool: BufferPool<Vec<u8>>,
+    /// Partially received header bytes.
+    header_buf: [u8; FRAME_HEADER_BYTES],
+    header_len: usize,
+    /// The frame under assembly, once its header is complete.
+    current: Option<(FrameHeader, Lease<Vec<u8>>)>,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameDecoder {
+    /// Idle payload buffers retained by the decoder's pool.
+    const POOL_SLOTS: usize = 32;
+
+    /// A decoder with a fresh payload pool.
+    pub fn new() -> Self {
+        FrameDecoder {
+            pool: BufferPool::new(Self::POOL_SLOTS),
+            header_buf: [0; FRAME_HEADER_BYTES],
+            header_len: 0,
+            current: None,
+        }
+    }
+
+    /// True iff no frame is partially assembled (clean stream boundary).
+    pub fn is_idle(&self) -> bool {
+        self.header_len == 0 && self.current.is_none()
+    }
+
+    /// Consumes `bytes`, invoking `emit` for every completed frame, in
+    /// order. Returns the number of frames emitted. A header that violates
+    /// the length bound poisons the stream and returns the error.
+    pub fn push<F: FnMut(FrameHeader, Lease<Vec<u8>>)>(
+        &mut self,
+        mut bytes: &[u8],
+        mut emit: F,
+    ) -> Result<usize, WireError> {
+        let mut frames = 0;
+        while !bytes.is_empty() {
+            match &mut self.current {
+                None => {
+                    // Accumulate header bytes.
+                    let need = FRAME_HEADER_BYTES - self.header_len;
+                    let take = need.min(bytes.len());
+                    self.header_buf[self.header_len..self.header_len + take]
+                        .copy_from_slice(&bytes[..take]);
+                    self.header_len += take;
+                    bytes = &bytes[take..];
+                    if self.header_len == FRAME_HEADER_BYTES {
+                        let header = FrameHeader::read(&self.header_buf)?;
+                        self.header_len = 0;
+                        let mut payload = self.pool.checkout();
+                        payload.reserve(header.len);
+                        if header.len == 0 {
+                            // Emit now: a zero-length frame is complete at
+                            // its header, and if the header ended this
+                            // chunk the payload arm would never run —
+                            // stranding the frame and making a clean EOF
+                            // look like a mid-frame truncation.
+                            emit(header, payload);
+                            frames += 1;
+                        } else {
+                            self.current = Some((header, payload));
+                        }
+                    }
+                }
+                Some((header, payload)) => {
+                    let need = header.len - payload.len();
+                    let take = need.min(bytes.len());
+                    payload.extend_from_slice(&bytes[..take]);
+                    bytes = &bytes[take..];
+                    if payload.len() == header.len {
+                        let (header, payload) = self.current.take().expect("assembling");
+                        emit(header, payload);
+                        frames += 1;
+                    }
+                }
+            }
+        }
+        Ok(frames)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    fn round_trip<T: Wire + PartialEq + std::fmt::Debug>(value: &T) {
+        let mut buf = Vec::new();
+        value.encode(&mut buf);
+        let mut reader = WireReader::new(&buf);
+        let back = T::decode(&mut reader).expect("decode");
+        assert_eq!(&back, value);
+        assert!(reader.is_empty(), "decode must consume exactly the encoding");
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        round_trip(&0u8);
+        round_trip(&u8::MAX);
+        round_trip(&0x1234u16);
+        round_trip(&0xdead_beefu32);
+        round_trip(&u64::MAX);
+        round_trip(&usize::MAX);
+        round_trip(&-1i64);
+        round_trip(&i64::MIN);
+        round_trip(&-7i32);
+        round_trip(&3.14159f64);
+        round_trip(&f64::NEG_INFINITY);
+        round_trip(&true);
+        round_trip(&false);
+        round_trip(&());
+        round_trip(&"hello wire".to_string());
+        round_trip(&String::new());
+        round_trip(&Some(42u64));
+        round_trip(&Option::<u64>::None);
+        round_trip(&(1u64, 2u32, 3u8));
+        round_trip(&Vec::<u64>::new());
+        round_trip(&vec![1u64, 2, 3]);
+    }
+
+    #[test]
+    fn nan_survives_by_bits() {
+        let mut buf = Vec::new();
+        f64::NAN.encode(&mut buf);
+        let back = f64::decode(&mut WireReader::new(&buf)).unwrap();
+        assert_eq!(back.to_bits(), f64::NAN.to_bits());
+    }
+
+    #[test]
+    fn progress_types_round_trip() {
+        round_trip(&Location::source(3, 1));
+        round_trip(&Location::target(0, 0));
+        round_trip(&Product::new(5u64, 9u64));
+        round_trip(&Arc::new(vec![((Location::source(1, 0), 7u64), -2i64)]));
+    }
+
+    #[test]
+    fn truncated_inputs_fail_cleanly() {
+        let mut buf = Vec::new();
+        (0xdead_beef_dead_beefu64).encode(&mut buf);
+        for cut in 0..buf.len() {
+            let mut reader = WireReader::new(&buf[..cut]);
+            assert_eq!(u64::decode(&mut reader), Err(WireError::Truncated));
+        }
+        // A vector whose length prefix promises more elements than exist.
+        let mut buf = Vec::new();
+        (100u32).encode(&mut buf);
+        (1u64).encode(&mut buf);
+        assert_eq!(Vec::<u64>::decode(&mut WireReader::new(&buf)), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn malformed_tags_rejected() {
+        assert_eq!(bool::decode(&mut WireReader::new(&[2])), Err(WireError::Malformed("bool")));
+        assert_eq!(
+            Option::<u8>::decode(&mut WireReader::new(&[9])),
+            Err(WireError::Malformed("option tag"))
+        );
+        let bad_loc = [0, 0, 0, 0, 7, 0, 0, 0, 0];
+        assert!(Location::decode(&mut WireReader::new(&bad_loc)).is_err());
+        assert!(String::decode(&mut WireReader::new(&[2, 0, 0, 0, 0xff, 0xfe])).is_err());
+    }
+
+    #[test]
+    fn header_round_trips_and_bounds_length() {
+        let header =
+            FrameHeader { channel: usize::MAX, from: 3, to: 1, len: MAX_FRAME_PAYLOAD };
+        let mut bytes = [0u8; FRAME_HEADER_BYTES];
+        header.write(&mut bytes);
+        let back = FrameHeader::read(&bytes).unwrap();
+        // usize::MAX truncates to u64 losslessly on 64-bit hosts.
+        assert_eq!(back, header);
+
+        let oversize = FrameHeader { len: MAX_FRAME_PAYLOAD + 1, ..header };
+        oversize.write(&mut bytes);
+        assert!(matches!(FrameHeader::read(&bytes), Err(WireError::Oversize { .. })));
+    }
+
+    /// Seeded round trips for progress batches over `u64` and `Product`
+    /// timestamps, including the empty batch.
+    #[test]
+    fn progress_batches_round_trip_seeded() {
+        property("progress_batches_round_trip", 40, |_case, rng| {
+            let len = if rng.chance(0.1) { 0 } else { rng.range(1, 200) as usize };
+            let batch_u64: Vec<((Location, u64), i64)> = (0..len)
+                .map(|_| {
+                    let loc = if rng.chance(0.5) {
+                        Location::source(rng.below(64) as usize, rng.below(4) as usize)
+                    } else {
+                        Location::target(rng.below(64) as usize, rng.below(4) as usize)
+                    };
+                    ((loc, rng.next_u64()), rng.next_u64() as i64)
+                })
+                .collect();
+            round_trip(&batch_u64);
+            let batch_product: Vec<((Location, Product<u64, u64>), i64)> = batch_u64
+                .iter()
+                .map(|&((loc, t), d)| ((loc, Product::new(t, t ^ 0xff)), d))
+                .collect();
+            round_trip(&batch_product);
+        });
+    }
+
+    fn encode_frame(header: FrameHeader, payload: &[u8]) -> Vec<u8> {
+        let mut bytes = [0u8; FRAME_HEADER_BYTES];
+        header.write(&mut bytes);
+        let mut out = bytes.to_vec();
+        out.extend_from_slice(payload);
+        out
+    }
+
+    /// Torn-read resistance: a frame stream fed to the decoder in chunks of
+    /// seeded sizes — including one byte at a time — yields exactly the
+    /// original frames, in order, byte for byte.
+    #[test]
+    fn frame_decoder_survives_torn_reads() {
+        property("frame_decoder_torn_reads", 25, |case, rng| {
+            let frame_count = rng.range(1, 8) as usize;
+            let mut stream = Vec::new();
+            let mut expected = Vec::new();
+            for i in 0..frame_count {
+                // Include empty payloads (progress batches can coalesce to
+                // nearly nothing; zero-length frames must parse).
+                let len = if rng.chance(0.2) { 0 } else { rng.range(1, 300) as usize };
+                let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                let header = FrameHeader { channel: i, from: 0, to: 1, len };
+                stream.extend_from_slice(&encode_frame(header, &payload));
+                expected.push((header, payload));
+            }
+            let mut decoder = FrameDecoder::new();
+            let mut got: Vec<(FrameHeader, Vec<u8>)> = Vec::new();
+            let mut offset = 0;
+            while offset < stream.len() {
+                // Case 0 is the pure 1-byte-at-a-time schedule.
+                let chunk = if case == 0 { 1 } else { rng.range(1, 64) as usize };
+                let end = (offset + chunk).min(stream.len());
+                decoder
+                    .push(&stream[offset..end], |h, payload| got.push((h, payload.to_vec())))
+                    .unwrap();
+                offset = end;
+            }
+            assert!(decoder.is_idle(), "stream must end on a frame boundary");
+            assert_eq!(got.len(), expected.len());
+            for ((gh, gp), (eh, ep)) in got.iter().zip(expected.iter()) {
+                assert_eq!(gh, eh);
+                assert_eq!(gp, ep);
+            }
+        });
+    }
+
+    /// A maximum-length frame round-trips; one byte longer is rejected at
+    /// the header.
+    #[test]
+    fn frame_decoder_max_length_boundary() {
+        // Keep memory modest: exercise the bound check with a fake header
+        // and the actual assembly with a large-but-reasonable payload.
+        let payload = vec![0xabu8; 1 << 16];
+        let header = FrameHeader { channel: 7, from: 0, to: 0, len: payload.len() };
+        let stream = encode_frame(header, &payload);
+        let mut decoder = FrameDecoder::new();
+        let mut seen = 0;
+        decoder
+            .push(&stream, |h, p| {
+                assert_eq!(h, header);
+                assert_eq!(p.len(), payload.len());
+                seen += 1;
+            })
+            .unwrap();
+        assert_eq!(seen, 1);
+
+        let mut bytes = [0u8; FRAME_HEADER_BYTES];
+        FrameHeader { channel: 0, from: 0, to: 0, len: 0 }.write(&mut bytes);
+        bytes[16..20].copy_from_slice(&((MAX_FRAME_PAYLOAD as u32) + 1).to_le_bytes());
+        let err = decoder.push(&bytes, |_, _| {}).unwrap_err();
+        assert!(matches!(err, WireError::Oversize { .. }));
+    }
+
+    /// Decoder payload buffers recycle through the pool.
+    #[test]
+    fn frame_decoder_recycles_payload_buffers() {
+        let mut decoder = FrameDecoder::new();
+        let payload = vec![1u8, 2, 3];
+        let header = FrameHeader { channel: 0, from: 0, to: 0, len: 3 };
+        let stream = encode_frame(header, &payload);
+        for _ in 0..10 {
+            decoder.push(&stream, |_h, lease| drop(lease)).unwrap();
+        }
+        assert!(decoder.pool.stats().reused >= 9, "payload buffers must recycle");
+    }
+
+    /// The context plumbing: a reader built with a context exposes it to
+    /// decode implementations by type.
+    #[test]
+    fn reader_context_downcasts_by_type() {
+        let pool: BufferPool<Vec<u64>> = BufferPool::new(2);
+        let bytes = [0u8; 8];
+        let ctx: Box<dyn Any + Send> = Box::new(pool);
+        let reader = WireReader::with_context(&bytes, &*ctx);
+        assert!(reader.context::<BufferPool<Vec<u64>>>().is_some());
+        assert!(reader.context::<BufferPool<Vec<u32>>>().is_none());
+        let plain = WireReader::new(&bytes);
+        assert!(plain.context::<BufferPool<Vec<u64>>>().is_none());
+    }
+
+    // Seeded-random value round trips across the main record shapes.
+    #[test]
+    fn record_shapes_round_trip_seeded() {
+        property("record_shapes_round_trip", 30, |_case, rng| {
+            round_trip(&rng.next_u64());
+            round_trip(&(rng.next_u64(), rng.next_u64()));
+            round_trip(&(rng.next_u64(), rng.unit_f64()));
+            let words: Vec<u64> = (0..rng.below(64)).map(|_| rng.next_u64()).collect();
+            round_trip(&words);
+            let s: String =
+                (0..rng.below(32)).map(|_| (b'a' + (rng.below(26) as u8)) as char).collect();
+            round_trip(&s);
+        });
+    }
+}

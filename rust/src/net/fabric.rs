@@ -1,0 +1,761 @@
+//! The cross-process half of the fabric: typed endpoints over frame
+//! transports.
+//!
+//! One [`NetFabric`] per process. For every remote process it owns a
+//! bounded outbound queue drained by a dedicated **send thread** (writing
+//! frames to the transport's [`FrameTx`], flushing at queue-empty
+//! boundaries) and a **recv thread** reading the [`FrameRx`] and demuxing
+//! arriving frames by `(channel, from, to)` into per-endpoint inboxes.
+//!
+//! Ordering: all traffic from process `P` to process `Q` — every worker,
+//! both planes — rides ONE queue and ONE ordered byte stream, so each
+//! sending worker's enqueue order is exactly its delivery order at `Q`
+//! (per-sender FIFO), and a progress frame enqueued before a data frame
+//! arrives before it. See the [`crate::net`] module docs for why this is
+//! all the timestamp-token protocol needs.
+//!
+//! Backpressure: the outbound queue is bounded. [`NetSender::send`] never
+//! blocks — a full queue hands the message back exactly like a full SPSC
+//! ring ([`RingSendError::Full`]), so the existing staging/spill machinery
+//! (channel staging, progcaster spill, produce-before-data-release gating)
+//! applies unchanged across processes. Full-queue rejections are counted
+//! as *send-queue stalls* in the per-worker [`NetStats`]. The inbound side
+//! is bounded too: past a per-link high-water mark of unconsumed demuxed
+//! payloads, the recv thread stops reading its stream, TCP flow control
+//! fills the sender's socket, the sender's bounded queue fills, and its
+//! `Full` rejections reach the remote staging machinery — the end-to-end
+//! backpressure of the intra-process rings, reconstructed across the wire
+//! (stalling a transport is always safe: holding a message longer is
+//! conservative).
+//!
+//! Allocation: payloads are encoded into and decoded from pooled
+//! `Lease<Vec<u8>>` buffers (returned cross-thread by drop), and message
+//! batches decode straight into pooled record buffers through the codec's
+//! decode context — the cross-process path allocates only what the codec
+//! itself requires, and the intra-process path is untouched.
+
+use super::codec::{FrameHeader, Wire, WireReader, MAX_FRAME_PAYLOAD};
+use super::transport::{Frame, FrameRx, FrameTx, Link, NetError};
+use crate::buffer::{BufferPool, Lease};
+use crate::worker::ring::RingSendError;
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{JoinHandle, Thread};
+use std::time::{Duration, Instant};
+
+/// How long a send thread sleeps waiting for frames before re-checking
+/// shutdown flags.
+const SEND_WAIT: Duration = Duration::from_millis(50);
+
+/// After shutdown is requested, how long recv threads keep draining the
+/// stream (letting a slower peer finish cleanly) before giving up.
+const RECV_LINGER: Duration = Duration::from_secs(2);
+
+/// Payload buffers retained per sending endpoint.
+const SEND_POOL_SLOTS: usize = 16;
+
+/// Per-worker network counters, updated lock-free by the worker's own
+/// endpoints (sends, stalls) and the fabric's recv threads (receives).
+#[derive(Default)]
+pub struct NetStats {
+    frames_sent: AtomicU64,
+    bytes_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    bytes_recv: AtomicU64,
+    send_stalls: AtomicU64,
+}
+
+/// A point-in-time snapshot of one worker's [`NetStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetTelemetry {
+    /// Frames this worker pushed into outbound queues.
+    pub frames_sent: u64,
+    /// Bytes (header + payload) those frames carried.
+    pub bytes_sent: u64,
+    /// Frames demuxed to this worker's inboxes.
+    pub frames_recv: u64,
+    /// Bytes those frames carried.
+    pub bytes_recv: u64,
+    /// Sends rejected by a full outbound queue (and retried by the staging
+    /// machinery).
+    pub send_queue_stalls: u64,
+}
+
+impl NetStats {
+    fn snapshot(&self) -> NetTelemetry {
+        NetTelemetry {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            frames_recv: self.frames_recv.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            send_queue_stalls: self.send_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The bounded outbound frame queue toward one remote process.
+struct OutQueue {
+    inner: Mutex<OutInner>,
+    /// Signaled on push and on close.
+    arrived: Condvar,
+    /// Frames admitted before [`push`](OutQueue::push) reports `Full`.
+    capacity: usize,
+}
+
+struct OutInner {
+    frames: VecDeque<Frame>,
+    /// Set on orderly shutdown or transport failure; senders see
+    /// `Disconnected`.
+    closed: bool,
+}
+
+impl OutQueue {
+    fn new(capacity: usize) -> Self {
+        OutQueue {
+            inner: Mutex::new(OutInner { frames: VecDeque::new(), closed: false }),
+            arrived: Condvar::new(),
+            capacity: capacity.max(2),
+        }
+    }
+
+    /// Enqueues a frame; a full queue or closed link hands it back.
+    fn push(&self, frame: Frame) -> Result<(), RingSendError<Frame>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(RingSendError::Disconnected(frame));
+        }
+        if inner.frames.len() >= self.capacity {
+            return Err(RingSendError::Full(frame));
+        }
+        inner.frames.push_back(frame);
+        drop(inner);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    /// Cheap admission probe: `(would_reject_as_full, closed)`. Racy by
+    /// nature (the send thread drains concurrently) — callers still handle
+    /// `Full`/`Disconnected` from [`OutQueue::push`]; this only lets them
+    /// skip work a rejection would waste.
+    fn status(&self) -> (bool, bool) {
+        let inner = self.inner.lock().unwrap();
+        (inner.frames.len() >= self.capacity, inner.closed)
+    }
+
+    /// Marks the queue closed (senders get `Disconnected`; the send thread
+    /// drains what was already admitted, then finishes the transport).
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    /// Moves every queued frame into `into`, waiting up to [`SEND_WAIT`]
+    /// if none are queued. Returns `(got_any, closed)`.
+    fn drain_wait(&self, into: &mut Vec<Frame>) -> (bool, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.frames.is_empty() && !inner.closed {
+            let (guard, _) = self.arrived.wait_timeout(inner, SEND_WAIT).unwrap();
+            inner = guard;
+        }
+        let got = !inner.frames.is_empty();
+        into.extend(inner.frames.drain(..));
+        (got, inner.closed)
+    }
+}
+
+/// One endpoint's inbound payload queue, filled by the recv thread.
+struct Inbox {
+    queue: Mutex<VecDeque<Lease<Vec<u8>>>>,
+}
+
+impl Inbox {
+    fn new() -> Arc<Self> {
+        Arc::new(Inbox { queue: Mutex::new(VecDeque::new()) })
+    }
+}
+
+type Key = (usize, usize, usize); // (channel, from, to)
+
+/// The cross-process fabric of one process (see module docs).
+pub struct NetFabric {
+    process: usize,
+    processes: usize,
+    workers_per_process: usize,
+    /// Outbound queue per process (`None` at `process`).
+    out: Vec<Option<Arc<OutQueue>>>,
+    /// Set once a remote process's stream has ended (orderly or not):
+    /// endpoints reading from it report `Disconnected` once drained.
+    peer_gone: Vec<AtomicBool>,
+    /// Per-link count of demuxed-but-unconsumed payloads. The recv thread
+    /// stops reading its stream while this exceeds [`NetFabric::inbound_hwm`]
+    /// — TCP flow control then backpressures the sender, whose bounded
+    /// outbound queue fills, whose `Full` rejections reach the staging
+    /// machinery: the end-to-end backpressure of the intra-process rings,
+    /// reconstructed across the wire.
+    inbound_depth: Vec<Arc<AtomicUsize>>,
+    /// High-water mark for `inbound_depth` (per link).
+    inbound_hwm: usize,
+    /// Demux registry, shared by recv threads (insert) and receiving
+    /// endpoints (claim). Touched once per key: each recv thread keeps a
+    /// local cache, so the steady-state frame path takes only the target
+    /// inbox's own lock, never this registry's.
+    inboxes: Mutex<HashMap<Key, Arc<Inbox>>>,
+    /// Per-local-worker counters.
+    stats: Vec<Arc<NetStats>>,
+    /// Per-local-worker park/unpark targets (registered by the owning
+    /// `Fabric` alongside its own registry).
+    wakers: Vec<OnceLock<Thread>>,
+    /// Orderly-shutdown flag for the I/O threads.
+    stop: Arc<AtomicBool>,
+    /// The send/recv threads, joined by [`NetFabric::shutdown`].
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl NetFabric {
+    /// Builds the net fabric for `process` of `processes`, spawning one
+    /// send and one recv thread per connected link. `links[p]` is the
+    /// transport pair toward process `p` (`None` at `process`);
+    /// `queue_capacity` bounds each outbound queue (frames).
+    pub fn new(
+        process: usize,
+        processes: usize,
+        workers_per_process: usize,
+        links: Vec<Option<Link>>,
+        queue_capacity: usize,
+    ) -> Arc<Self> {
+        assert_eq!(links.len(), processes, "one link slot per process");
+        let fabric = Arc::new(NetFabric {
+            process,
+            processes,
+            workers_per_process,
+            out: links
+                .iter()
+                .map(|l| l.as_ref().map(|_| Arc::new(OutQueue::new(queue_capacity))))
+                .collect(),
+            peer_gone: (0..processes).map(|_| AtomicBool::new(false)).collect(),
+            inbound_depth: (0..processes).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            // Deep enough to cover demux bursts across many endpoints,
+            // bounded so an overloaded consumer stalls the wire instead of
+            // growing its inboxes without limit.
+            inbound_hwm: queue_capacity.saturating_mul(4).max(1024),
+            inboxes: Mutex::new(HashMap::new()),
+            stats: (0..workers_per_process).map(|_| Arc::new(NetStats::default())).collect(),
+            wakers: (0..workers_per_process).map(|_| OnceLock::new()).collect(),
+            stop: Arc::new(AtomicBool::new(false)),
+            threads: Mutex::new(Vec::new()),
+        });
+        let mut threads = Vec::new();
+        for (peer, link) in links.into_iter().enumerate() {
+            let Some((tx, rx)) = link else { continue };
+            let queue = fabric.out[peer].as_ref().expect("queue per link").clone();
+            let stop = fabric.stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("net-send-{process}-to-{peer}"))
+                    .spawn(move || send_loop(tx, queue, stop))
+                    .expect("spawn net send thread"),
+            );
+            let fab = fabric.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("net-recv-{process}-from-{peer}"))
+                    .spawn(move || fab.recv_loop(peer, rx))
+                    .expect("spawn net recv thread"),
+            );
+        }
+        *fabric.threads.lock().unwrap() = threads;
+        fabric
+    }
+
+    /// This process's index.
+    pub fn process(&self) -> usize {
+        self.process
+    }
+
+    /// Total processes in the cluster.
+    pub fn processes(&self) -> usize {
+        self.processes
+    }
+
+    /// The process a global worker index belongs to (contiguous blocks).
+    #[inline]
+    pub fn process_of(&self, worker: usize) -> usize {
+        worker / self.workers_per_process
+    }
+
+    /// Registers `thread` as the wakeup target for local worker slot
+    /// `local` (first registration wins, as in the worker fabric).
+    pub fn register_waker(&self, local: usize, thread: Thread) {
+        let _ = self.wakers[local].set(thread);
+    }
+
+    /// A shared handle on local worker slot `local`'s counters.
+    pub fn stats(&self, local: usize) -> Arc<NetStats> {
+        self.stats[local].clone()
+    }
+
+    /// A snapshot of local worker slot `local`'s counters.
+    pub fn telemetry(&self, local: usize) -> NetTelemetry {
+        self.stats[local].snapshot()
+    }
+
+    /// Claims the typed sending endpoint of `(chan, from, to)` where `to`
+    /// lives in another process. `from` must be a local worker.
+    pub fn sender<M: Wire + Send + 'static>(
+        self: &Arc<Self>,
+        chan: usize,
+        from: usize,
+        to: usize,
+    ) -> NetSender<M> {
+        let dest = self.process_of(to);
+        assert_ne!(dest, self.process, "net sender for a local destination");
+        let local = from - self.process * self.workers_per_process;
+        NetSender {
+            queue: self.out[dest].as_ref().expect("link to destination process").clone(),
+            chan,
+            from,
+            to,
+            pool: BufferPool::new(SEND_POOL_SLOTS),
+            stats: self.stats[local].clone(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Claims the typed receiving endpoint of `(chan, from, to)` where
+    /// `from` lives in another process. `to` must be a local worker.
+    pub fn receiver<M: Wire + Send + 'static>(
+        self: &Arc<Self>,
+        chan: usize,
+        from: usize,
+        to: usize,
+    ) -> NetReceiver<M> {
+        let src = self.process_of(from);
+        assert_ne!(src, self.process, "net receiver for a local source");
+        NetReceiver {
+            inbox: self.inbox((chan, from, to)),
+            fabric: self.clone(),
+            from_process: src,
+            depth: self.inbound_depth[src].clone(),
+            context: M::decode_context(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// The inbox for `key`, created on first touch (by either the claiming
+    /// endpoint or the recv thread — frames can arrive before the local
+    /// graph construction reaches the channel).
+    fn inbox(&self, key: Key) -> Arc<Inbox> {
+        self.inboxes.lock().unwrap().entry(key).or_insert_with(Inbox::new).clone()
+    }
+
+    /// The recv-thread body for the link from `peer`.
+    fn recv_loop(self: Arc<Self>, peer: usize, mut rx: Box<dyn FrameRx>) {
+        let base = self.process * self.workers_per_process;
+        let depth = self.inbound_depth[peer].clone();
+        let mut stop_seen_at: Option<Instant> = None;
+        // Recv-thread-local demux cache: the shared registry mutex is only
+        // taken the first time a key is seen, not once per frame.
+        let mut known: HashMap<Key, Arc<Inbox>> = HashMap::new();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                // Linger briefly so a slower peer can finish its stream
+                // cleanly; local workers have already completed, so frames
+                // we miss after the grace period have no consumer anyway.
+                let seen = *stop_seen_at.get_or_insert_with(Instant::now);
+                if seen.elapsed() >= RECV_LINGER {
+                    break;
+                }
+            }
+            // Inbound flow control: past the high-water mark, stop reading
+            // and let TCP push back on the sender until workers drain.
+            if depth.load(Ordering::Relaxed) > self.inbound_hwm {
+                std::thread::sleep(Duration::from_micros(500));
+                continue;
+            }
+            let this = &self;
+            let depth = &depth;
+            let known = &mut known;
+            let result = rx.recv(&mut |header, payload| {
+                debug_assert_eq!(this.process_of(header.from), peer, "frame from wrong link");
+                debug_assert_eq!(
+                    this.process_of(header.to),
+                    this.process,
+                    "frame for another process"
+                );
+                let local = header.to - base;
+                let stats = &this.stats[local];
+                stats.frames_recv.fetch_add(1, Ordering::Relaxed);
+                let bytes = (payload.len() + super::codec::FRAME_HEADER_BYTES) as u64;
+                stats.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
+                let key = (header.channel, header.from, header.to);
+                let inbox = known.entry(key).or_insert_with(|| this.inbox(key));
+                depth.fetch_add(1, Ordering::Relaxed);
+                inbox.queue.lock().unwrap().push_back(payload);
+                if let Some(thread) = this.wakers[local].get() {
+                    thread.unpark();
+                }
+            });
+            match result {
+                Ok(_) => {}
+                Err(NetError::Closed) => break,
+                Err(_e) => break, // transport failure: treat as peer-gone
+            }
+        }
+        self.peer_gone[peer].store(true, Ordering::Release);
+        // Wake every local worker so none sleeps through the disconnect.
+        for waker in &self.wakers {
+            if let Some(thread) = waker.get() {
+                thread.unpark();
+            }
+        }
+    }
+
+    /// True iff the stream from `process` has ended.
+    fn is_peer_gone(&self, process: usize) -> bool {
+        self.peer_gone[process].load(Ordering::Acquire)
+    }
+
+    /// Orderly shutdown: called after every local worker has finished (and
+    /// therefore flushed — `Worker::flush_now` runs on drop). Closes the
+    /// outbound queues (send threads drain what was admitted, then finish
+    /// their transports so peers see clean end-of-stream), then joins all
+    /// I/O threads.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        for queue in self.out.iter().flatten() {
+            queue.close();
+        }
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for handle in threads {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The send-thread body for one link.
+fn send_loop(mut tx: Box<dyn FrameTx>, queue: Arc<OutQueue>, stop: Arc<AtomicBool>) {
+    let mut batch: Vec<Frame> = Vec::new();
+    loop {
+        let (got, closed) = queue.drain_wait(&mut batch);
+        if got {
+            let mut failed = false;
+            for frame in batch.drain(..) {
+                if tx.send(&frame).is_err() {
+                    failed = true;
+                    break;
+                }
+                // Dropping `frame` here returns its payload lease to the
+                // sending endpoint's pool.
+            }
+            batch.clear();
+            // Flush at the queue-empty boundary: batches while busy, stays
+            // prompt while idle.
+            if !failed && tx.flush().is_err() {
+                failed = true;
+            }
+            if failed {
+                queue.close();
+                let _ = tx.finish();
+                return;
+            }
+        } else if closed || stop.load(Ordering::Acquire) {
+            let _ = tx.finish();
+            return;
+        }
+    }
+}
+
+/// The cross-process counterpart of a `RingSender`: encodes each message
+/// into a pooled payload buffer and enqueues it toward the destination
+/// process. Never blocks; mirrors `RingSender::send`'s `Full` /
+/// `Disconnected` contract so staging and spill logic apply unchanged.
+pub struct NetSender<M> {
+    queue: Arc<OutQueue>,
+    chan: usize,
+    from: usize,
+    to: usize,
+    pool: BufferPool<Vec<u8>>,
+    stats: Arc<NetStats>,
+    _marker: PhantomData<fn(M)>,
+}
+
+impl<M: Wire + Send + 'static> NetSender<M> {
+    /// Encodes and enqueues `m`, or hands it back if the outbound queue is
+    /// full (a *send-queue stall* — retry after the send thread drains) or
+    /// the link is gone.
+    pub fn send(&mut self, m: M) -> Result<(), RingSendError<M>> {
+        // Probe before paying the encode: staged-flush retries call this
+        // once per step under backpressure, and encoding a whole record
+        // batch just to have the queue hand it back is pure waste. The
+        // probe is racy — `push` below still decides.
+        match self.queue.status() {
+            (_, true) => return Err(RingSendError::Disconnected(m)),
+            (true, _) => {
+                self.stats.send_stalls.fetch_add(1, Ordering::Relaxed);
+                return Err(RingSendError::Full(m));
+            }
+            _ => {}
+        }
+        let mut payload = self.pool.checkout();
+        m.encode(&mut payload);
+        assert!(
+            payload.len() <= MAX_FRAME_PAYLOAD,
+            "message encoding exceeds MAX_FRAME_PAYLOAD ({} > {}); lower send_batch",
+            payload.len(),
+            MAX_FRAME_PAYLOAD
+        );
+        let bytes = payload.len() + super::codec::FRAME_HEADER_BYTES;
+        match self.queue.push(Frame::new(self.chan, self.from, self.to, payload)) {
+            Ok(()) => {
+                self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+                self.stats.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(RingSendError::Full(_frame)) => {
+                // The rejected frame's payload lease recycles on drop; the
+                // message itself goes back to the caller's staging queue.
+                self.stats.send_stalls.fetch_add(1, Ordering::Relaxed);
+                Err(RingSendError::Full(m))
+            }
+            Err(RingSendError::Disconnected(_frame)) => Err(RingSendError::Disconnected(m)),
+        }
+    }
+
+    /// Frames the outbound queue admits before reporting `Full`.
+    pub fn capacity(&self) -> usize {
+        self.queue.capacity
+    }
+}
+
+/// The cross-process counterpart of a `RingReceiver`: pops demuxed
+/// payloads from this endpoint's inbox and decodes them, mirroring
+/// `try_recv`'s `Empty` / `Disconnected` contract.
+pub struct NetReceiver<M> {
+    inbox: Arc<Inbox>,
+    fabric: Arc<NetFabric>,
+    from_process: usize,
+    /// The link-wide unconsumed-payload counter (inbound flow control).
+    depth: Arc<AtomicUsize>,
+    /// Per-endpoint decode context (e.g. the record-batch pool installed
+    /// by `Message<T, D>::decode_context`).
+    context: Option<Box<dyn Any + Send>>,
+    _marker: PhantomData<fn() -> M>,
+}
+
+impl<M: Wire + Send + 'static> NetReceiver<M> {
+    /// Pops and decodes the next message. `Empty` while the link is up but
+    /// idle; `Disconnected` once the sending process's stream has ended
+    /// *and* the inbox is drained.
+    pub fn try_recv(&mut self) -> Result<M, TryRecvError> {
+        let payload = self.inbox.queue.lock().unwrap().pop_front();
+        match payload {
+            Some(payload) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                let mut reader = match &self.context {
+                    Some(context) => WireReader::with_context(&payload, &**context),
+                    None => WireReader::new(&payload),
+                };
+                match M::decode(&mut reader) {
+                    // A malformed frame past the handshake is a protocol
+                    // bug, not recoverable input; fail loudly like the
+                    // fabric's type-mismatch panic.
+                    Err(e) => panic!("net: malformed frame payload: {e}"),
+                    Ok(m) => {
+                        debug_assert!(
+                            reader.is_empty(),
+                            "frame payload has trailing bytes after decode"
+                        );
+                        Ok(m)
+                    }
+                }
+            }
+            None => {
+                if self.fabric.is_peer_gone(self.from_process) {
+                    // Re-check the inbox: a frame may have landed between
+                    // the pop and the flag read.
+                    if self.inbox.queue.lock().unwrap().is_empty() {
+                        Err(TryRecvError::Disconnected)
+                    } else {
+                        Err(TryRecvError::Empty)
+                    }
+                } else {
+                    Err(TryRecvError::Empty)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::loopback;
+
+    /// Two single-worker "processes" wired over the loopback transport.
+    fn pair(capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
+        let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
+        let a = NetFabric::new(
+            0,
+            2,
+            1,
+            vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as _))],
+            capacity,
+        );
+        let b = NetFabric::new(
+            1,
+            2,
+            1,
+            vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as _)), None],
+            capacity,
+        );
+        (a, b)
+    }
+
+    fn recv_blocking<M: Wire + Send + 'static>(rx: &mut NetReceiver<M>) -> M {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match rx.try_recv() {
+                Ok(m) => return m,
+                Err(TryRecvError::Empty) => {
+                    assert!(Instant::now() < deadline, "net delivery stalled");
+                    std::thread::yield_now();
+                }
+                Err(TryRecvError::Disconnected) => panic!("peer gone"),
+            }
+        }
+    }
+
+    /// Sends with retry: a transiently full outbound queue is backpressure
+    /// (the send thread is draining it), not an error.
+    fn send_retrying<M: Wire + Send + 'static>(tx: &mut NetSender<M>, mut m: M) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match tx.send(m) {
+                Ok(()) => return,
+                Err(RingSendError::Full(back)) => {
+                    assert!(Instant::now() < deadline, "outbound queue never drained");
+                    m = back;
+                    std::thread::yield_now();
+                }
+                Err(RingSendError::Disconnected(_)) => panic!("link dropped"),
+            }
+        }
+    }
+
+    #[test]
+    fn typed_messages_cross_the_link_in_order() {
+        let (a, b) = pair(64);
+        let mut tx = a.sender::<(u64, u64)>(3, 0, 1);
+        let mut rx = b.receiver::<(u64, u64)>(3, 0, 1);
+        for i in 0..100u64 {
+            send_retrying(&mut tx, (i, i * 2));
+        }
+        for i in 0..100u64 {
+            assert_eq!(recv_blocking(&mut rx), (i, i * 2));
+        }
+        assert_eq!(a.telemetry(0).frames_sent, 100);
+        assert!(a.telemetry(0).bytes_sent > 0);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.telemetry(0).frames_recv < 100 {
+            assert!(Instant::now() < deadline);
+            std::thread::yield_now();
+        }
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn distinct_channels_demux_independently() {
+        let (a, b) = pair(64);
+        let mut tx1 = a.sender::<u64>(1, 0, 1);
+        let mut tx2 = a.sender::<u64>(2, 0, 1);
+        let mut rx2 = b.receiver::<u64>(2, 0, 1);
+        let mut rx1 = b.receiver::<u64>(1, 0, 1);
+        tx1.send(11).unwrap();
+        tx2.send(22).unwrap();
+        assert_eq!(recv_blocking(&mut rx2), 22);
+        assert_eq!(recv_blocking(&mut rx1), 11);
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn full_outbound_queue_stalls_without_blocking() {
+        let (a, b) = pair(2);
+        let mut tx = a.sender::<u64>(0, 0, 1);
+        let mut rx = b.receiver::<u64>(0, 0, 1);
+        // Outpace the send thread until a Full is observed; every message
+        // handed back is retried, so nothing is lost or reordered.
+        let mut next = 0u64;
+        let mut stalled = false;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while next < 1000 || !stalled {
+            match tx.send(next) {
+                Ok(()) => next += 1,
+                Err(RingSendError::Full(m)) => {
+                    assert_eq!(m, next);
+                    stalled = true;
+                }
+                Err(RingSendError::Disconnected(_)) => panic!("link dropped"),
+            }
+            if Instant::now() > deadline {
+                // Loopback may drain faster than we can fill on some
+                // schedulers; the stall assertion below is then vacuous.
+                break;
+            }
+        }
+        for i in 0..next {
+            assert_eq!(recv_blocking(&mut rx), i, "FIFO violated across stalls");
+        }
+        if stalled {
+            assert!(a.telemetry(0).send_queue_stalls > 0);
+        }
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_delivers_in_flight_frames_then_disconnects() {
+        let (a, b) = pair(64);
+        let mut tx = a.sender::<u64>(0, 0, 1);
+        let mut rx = b.receiver::<u64>(0, 0, 1);
+        for i in 0..50u64 {
+            tx.send(i).unwrap();
+        }
+        // Close A entirely: everything already admitted must still arrive.
+        a.shutdown();
+        for i in 0..50u64 {
+            assert_eq!(recv_blocking(&mut rx), i);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match rx.try_recv() {
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {
+                    assert!(Instant::now() < deadline, "disconnect never observed");
+                    std::thread::yield_now();
+                }
+                Ok(_) => panic!("unexpected frame"),
+            }
+        }
+        assert!(matches!(tx.send(99), Err(RingSendError::Disconnected(99))));
+        b.shutdown();
+    }
+
+    #[test]
+    fn frames_arriving_before_claim_are_parked_in_the_inbox() {
+        let (a, b) = pair(64);
+        let mut tx = a.sender::<u64>(9, 0, 1);
+        tx.send(77).unwrap();
+        // Give the recv thread time to demux before the endpoint exists.
+        std::thread::sleep(Duration::from_millis(100));
+        let mut rx = b.receiver::<u64>(9, 0, 1);
+        assert_eq!(recv_blocking(&mut rx), 77);
+        a.shutdown();
+        b.shutdown();
+    }
+}

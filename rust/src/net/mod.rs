@@ -1,0 +1,64 @@
+//! The multi-process fabric: one timestamp-token protocol, any transport.
+//!
+//! The paper's central claim is that timestamp tokens minimize the
+//! information computation and host must share; the practical payoff is
+//! that the coordination protocol is *transport-agnostic*. Prefix safety
+//! rests on exactly two local guarantees (argued in full in
+//! [`crate::progress::exchange`]):
+//!
+//! 1. **Per-sender FIFO** — every observer applies each sending worker's
+//!    atomic progress batches in that worker's send order;
+//! 2. **Produce-before-data-release** — a data message is released to the
+//!    fabric only after the progress batch carrying its `+1` produce count
+//!    has been made available to *every* peer.
+//!
+//! Nothing in either guarantee requires shared memory. This module
+//! therefore extends the fabric across process boundaries by providing
+//! ordered byte streams and a codec, and **any transport plugged in here
+//! must uphold**:
+//!
+//! * **reliable, ordered, exactly-once frame delivery per direction** —
+//!    this is what carries per-sender FIFO across the wire. All traffic
+//!    between two processes rides one stream, so each worker's enqueue
+//!    order is its delivery order, for progress and data frames alike;
+//! * **no release reordering** — a frame enqueued (to every destination)
+//!    before a data frame must be *available* to its destination no later
+//!    than that data frame. With one FIFO stream per process pair this is
+//!    automatic: the worker's flush path enqueues its progress broadcast
+//!    before releasing staged data, and the stream preserves that order.
+//!    An observer in a *third* process may apply a consumer's `-1` before
+//!    the producer's `+1` arrives — the transient-negative case the
+//!    tracker already tolerates (see [`crate::progress::antichain`]);
+//! * **orderly shutdown** — frames sent before the write side closes are
+//!    still delivered; the receiver sees end-of-stream only afterwards.
+//!    Holding a message longer is always conservative, so a transport may
+//!    stall arbitrarily without threatening safety — only liveness asks
+//!    that streams eventually drain.
+//!
+//! Layout:
+//!
+//! * [`codec`] — the compact little-endian wire format: the [`Wire`]
+//!   trait pair for values (timestamps, locations, records, messages,
+//!   progress batches), frame headers, and the incremental torn-read-safe
+//!   [`codec::FrameDecoder`];
+//! * [`transport`] — frame endpoints over byte streams: TCP
+//!   (length-prefixed frames, per-peer send/recv thread pair) and an
+//!   in-process loopback for deterministic tests;
+//! * [`fabric`] — [`NetFabric`]: bounded outbound queues, demux inboxes,
+//!   and the typed [`NetSender`] / [`NetReceiver`] endpoints that mirror
+//!   the SPSC ring contract (`Full` is backpressure, never an error), so
+//!   the worker fabric routes a channel over rings or over the wire
+//!   without the rest of the engine noticing.
+//!
+//! Follow-ons this structure leaves open: shared-memory segment
+//! transports (another `FrameTx`/`FrameRx`), async I/O in place of the
+//! per-peer thread pair, and per-process dedup of broadcast progress
+//! frames.
+
+pub mod codec;
+pub mod fabric;
+pub mod transport;
+
+pub use codec::{Wire, WireError, WireReader};
+pub use fabric::{NetFabric, NetReceiver, NetSender, NetStats, NetTelemetry};
+pub use transport::{loopback, tcp_pair, Frame, FrameRx, FrameTx, Link, NetError};

@@ -1,0 +1,392 @@
+//! Byte-stream transports: how frames reach another process.
+//!
+//! This generalizes the push/pop of `worker::ring` into *frame endpoints*
+//! over ordered byte streams. A transport connecting two processes is a
+//! pair of halves — a [`FrameTx`] owned by the sending thread and a
+//! [`FrameRx`] owned by the receiving thread — and must uphold exactly the
+//! properties the timestamp-token protocol needs (see the [`crate::net`]
+//! module docs):
+//!
+//! * **reliable, ordered delivery**: frames arrive exactly once, in send
+//!   order, per direction (this is what makes per-sender FIFO hold across
+//!   processes);
+//! * **orderly shutdown**: after [`FrameTx::finish`], every frame already
+//!   sent is still delivered before the peer observes end-of-stream.
+//!
+//! Two implementations:
+//!
+//! * [`TcpTx`] / [`TcpRx`] — length-prefixed frames over a `TcpStream`
+//!   (`TCP_NODELAY`, buffered writes flushed at queue-empty boundaries;
+//!   reads of arbitrary size fed through the incremental
+//!   [`FrameDecoder`], so torn reads are the normal case, not an error).
+//! * [`loopback`] — an in-process pair backed by a mutex/condvar queue,
+//!   for deterministic transport-level tests without sockets.
+
+use super::codec::{FrameDecoder, FrameHeader, WireError, FRAME_HEADER_BYTES};
+use crate::buffer::Lease;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A transport-level failure.
+#[derive(Debug)]
+pub enum NetError {
+    /// An OS-level I/O failure.
+    Io(std::io::Error),
+    /// The peer closed the stream (end of frames).
+    Closed,
+    /// The byte stream violated the frame protocol.
+    Codec(WireError),
+    /// A bootstrap / handshake violation.
+    Protocol(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "net i/o error: {e}"),
+            NetError::Closed => write!(f, "peer closed the stream"),
+            NetError::Codec(e) => write!(f, "frame protocol violation: {e}"),
+            NetError::Protocol(what) => write!(f, "handshake violation: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> Self {
+        NetError::Io(e)
+    }
+}
+
+impl From<WireError> for NetError {
+    fn from(e: WireError) -> Self {
+        NetError::Codec(e)
+    }
+}
+
+/// One frame in flight: routing header plus payload bytes in a pooled
+/// buffer (the buffer returns to its producer's pool when the transport
+/// drops it after the write).
+pub struct Frame {
+    /// Routing header; `header.len` always equals `payload.len()`.
+    pub header: FrameHeader,
+    /// The encoded payload.
+    pub payload: Lease<Vec<u8>>,
+}
+
+impl Frame {
+    /// Assembles a frame, fixing up the header length.
+    pub fn new(channel: usize, from: usize, to: usize, payload: Lease<Vec<u8>>) -> Self {
+        Frame { header: FrameHeader { channel, from, to, len: payload.len() }, payload }
+    }
+}
+
+/// The sending half of a transport: ordered, reliable frame delivery.
+pub trait FrameTx: Send + 'static {
+    /// Writes one frame to the stream (possibly buffered).
+    fn send(&mut self, frame: &Frame) -> Result<(), NetError>;
+
+    /// Pushes buffered bytes to the peer.
+    fn flush(&mut self) -> Result<(), NetError>;
+
+    /// Orderly write-side shutdown: flushes, then signals end-of-stream.
+    /// Frames already sent are still delivered. Idempotent.
+    fn finish(&mut self) -> Result<(), NetError>;
+}
+
+/// A connected transport toward one peer process: the sending half and
+/// the receiving half, each owned by its dedicated I/O thread.
+pub type Link = (Box<dyn FrameTx>, Box<dyn FrameRx>);
+
+/// The receiving half of a transport.
+pub trait FrameRx: Send + 'static {
+    /// Waits (bounded by an implementation-chosen timeout) for input and
+    /// feeds every completed frame to `emit`, in order. Returns the number
+    /// of frames emitted — `0` means the wait timed out with no input
+    /// (poll again). `Err(NetError::Closed)` is the peer's orderly
+    /// end-of-stream after all frames were delivered.
+    fn recv(
+        &mut self,
+        emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
+    ) -> Result<usize, NetError>;
+}
+
+// ---------------------------------------------------------------------------
+// TCP.
+// ---------------------------------------------------------------------------
+
+/// How long a [`TcpRx::recv`] blocks before returning `Ok(0)` so its
+/// owning thread can observe shutdown flags.
+const READ_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// Sending half of a TCP transport (owns a write-buffered stream clone).
+pub struct TcpTx {
+    stream: std::io::BufWriter<TcpStream>,
+    header_buf: [u8; FRAME_HEADER_BYTES],
+    finished: bool,
+}
+
+/// Receiving half of a TCP transport.
+pub struct TcpRx {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    read_buf: Vec<u8>,
+}
+
+/// Splits a connected stream into transport halves. Sets `TCP_NODELAY`
+/// (the send thread already batches: it flushes at queue-empty
+/// boundaries, so Nagle would only add latency) and a read timeout so the
+/// receiving thread can poll shutdown flags.
+pub fn tcp_pair(stream: TcpStream) -> Result<(TcpTx, TcpRx), NetError> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let write_half = stream.try_clone()?;
+    Ok((
+        TcpTx {
+            stream: std::io::BufWriter::with_capacity(64 << 10, write_half),
+            header_buf: [0; FRAME_HEADER_BYTES],
+            finished: false,
+        },
+        TcpRx { stream, decoder: FrameDecoder::new(), read_buf: vec![0; 64 << 10] },
+    ))
+}
+
+impl FrameTx for TcpTx {
+    fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
+        debug_assert_eq!(frame.header.len, frame.payload.len());
+        frame.header.write(&mut self.header_buf);
+        self.stream.write_all(&self.header_buf)?;
+        self.stream.write_all(&frame.payload)?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<(), NetError> {
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), NetError> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.stream.flush()?;
+        // Write-side shutdown: the peer reads everything already sent,
+        // then sees a clean end-of-stream.
+        self.stream.get_ref().shutdown(Shutdown::Write)?;
+        Ok(())
+    }
+}
+
+impl FrameRx for TcpRx {
+    fn recv(
+        &mut self,
+        emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
+    ) -> Result<usize, NetError> {
+        match self.stream.read(&mut self.read_buf) {
+            Ok(0) => {
+                if self.decoder.is_idle() {
+                    Err(NetError::Closed)
+                } else {
+                    // EOF mid-frame: the peer died, it did not finish.
+                    Err(NetError::Codec(WireError::Truncated))
+                }
+            }
+            Ok(n) => {
+                let mut frames = 0;
+                self.decoder.push(&self.read_buf[..n], |header, payload| {
+                    emit(header, payload);
+                    frames += 1;
+                })?;
+                Ok(frames)
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(0)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(0),
+            Err(e) => Err(NetError::Io(e)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback.
+// ---------------------------------------------------------------------------
+
+/// One direction of a loopback link.
+struct LoopQueue {
+    inner: Mutex<LoopInner>,
+    arrived: Condvar,
+}
+
+struct LoopInner {
+    frames: VecDeque<(FrameHeader, Vec<u8>)>,
+    finished: bool,
+}
+
+/// Loopback sending half.
+pub struct LoopbackTx {
+    queue: Arc<LoopQueue>,
+}
+
+/// Loopback receiving half.
+pub struct LoopbackRx {
+    queue: Arc<LoopQueue>,
+}
+
+/// An in-process transport pair: frames sent on either end's `Tx` arrive
+/// at the other end's `Rx`, FIFO, with the same orderly-shutdown contract
+/// as TCP. Returns `((a_tx, a_rx), (b_tx, b_rx))` for the two ends.
+pub fn loopback() -> ((LoopbackTx, LoopbackRx), (LoopbackTx, LoopbackRx)) {
+    let a_to_b = Arc::new(LoopQueue {
+        inner: Mutex::new(LoopInner { frames: VecDeque::new(), finished: false }),
+        arrived: Condvar::new(),
+    });
+    let b_to_a = Arc::new(LoopQueue {
+        inner: Mutex::new(LoopInner { frames: VecDeque::new(), finished: false }),
+        arrived: Condvar::new(),
+    });
+    (
+        (LoopbackTx { queue: a_to_b.clone() }, LoopbackRx { queue: b_to_a.clone() }),
+        (LoopbackTx { queue: b_to_a }, LoopbackRx { queue: a_to_b }),
+    )
+}
+
+impl FrameTx for LoopbackTx {
+    fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
+        let mut inner = self.queue.inner.lock().unwrap();
+        if inner.finished {
+            return Err(NetError::Closed);
+        }
+        inner.frames.push_back((frame.header, frame.payload.to_vec()));
+        drop(inner);
+        self.queue.arrived.notify_all();
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<(), NetError> {
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), NetError> {
+        self.queue.inner.lock().unwrap().finished = true;
+        self.queue.arrived.notify_all();
+        Ok(())
+    }
+}
+
+impl FrameRx for LoopbackRx {
+    fn recv(
+        &mut self,
+        emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
+    ) -> Result<usize, NetError> {
+        let mut inner = self.queue.inner.lock().unwrap();
+        if inner.frames.is_empty() {
+            if inner.finished {
+                return Err(NetError::Closed);
+            }
+            let (guard, _timeout) =
+                self.queue.arrived.wait_timeout(inner, READ_TIMEOUT).unwrap();
+            inner = guard;
+        }
+        let mut frames = 0;
+        while let Some((header, payload)) = inner.frames.pop_front() {
+            emit(header, Lease::unpooled(payload));
+            frames += 1;
+        }
+        if frames == 0 && inner.finished {
+            return Err(NetError::Closed);
+        }
+        Ok(frames)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn frame(channel: usize, bytes: &[u8]) -> Frame {
+        Frame::new(channel, 0, 1, Lease::unpooled(bytes.to_vec()))
+    }
+
+    fn drain_all(rx: &mut dyn FrameRx) -> Vec<(FrameHeader, Vec<u8>)> {
+        let mut got = Vec::new();
+        loop {
+            match rx.recv(&mut |h, p| got.push((h, p.to_vec()))) {
+                Ok(_) => {}
+                Err(NetError::Closed) => break,
+                Err(e) => panic!("transport error: {e}"),
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn loopback_delivers_fifo_and_finishes() {
+        let ((mut a_tx, _a_rx), (_b_tx, mut b_rx)) = loopback();
+        for i in 0..10usize {
+            a_tx.send(&frame(i, &[i as u8; 3])).unwrap();
+        }
+        a_tx.finish().unwrap();
+        let got = drain_all(&mut b_rx);
+        assert_eq!(got.len(), 10);
+        for (i, (h, p)) in got.iter().enumerate() {
+            assert_eq!(h.channel, i);
+            assert_eq!(p, &vec![i as u8; 3]);
+        }
+    }
+
+    #[test]
+    fn loopback_send_after_finish_is_closed() {
+        let ((mut a_tx, _a_rx), _b) = loopback();
+        a_tx.finish().unwrap();
+        assert!(matches!(a_tx.send(&frame(0, &[])), Err(NetError::Closed)));
+    }
+
+    #[test]
+    fn tcp_round_trip_with_orderly_shutdown() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let (_tx, mut rx) = tcp_pair(stream).unwrap();
+            drain_all(&mut rx)
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let (mut tx, _rx) = tcp_pair(stream).unwrap();
+        // Interleave payload sizes, including empty.
+        let payloads: Vec<Vec<u8>> =
+            vec![vec![], vec![1], (0..255u8).collect(), vec![7; 100_000]];
+        for (i, p) in payloads.iter().enumerate() {
+            tx.send(&frame(i, p)).unwrap();
+        }
+        tx.finish().unwrap();
+        let got = server.join().unwrap();
+        assert_eq!(got.len(), payloads.len());
+        for (i, (h, p)) in got.iter().enumerate() {
+            assert_eq!(h.channel, i);
+            assert_eq!(p, &payloads[i]);
+        }
+    }
+
+    #[test]
+    fn tcp_recv_times_out_quietly_without_input() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (_tx, mut rx) = tcp_pair(client).unwrap();
+        let (_server, _) = listener.accept().unwrap();
+        // Nothing sent: recv must return Ok(0) after the timeout, not hang
+        // or error.
+        let n = rx.recv(&mut |_, _| panic!("no frames expected")).unwrap();
+        assert_eq!(n, 0);
+    }
+}

@@ -11,8 +11,9 @@ use crate::config::Config;
 use crate::coordination::Mechanism;
 use crate::harness::histogram::LatencyHistogram;
 use crate::harness::openloop::Outcome;
+use crate::net::NetError;
 use crate::worker::allocator::WorkerTelemetry;
-use crate::worker::execute::execute;
+use crate::worker::execute::{execute, execute_cluster};
 use crate::worker::Worker;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -77,16 +78,8 @@ enum WorkerOutcome {
     Dnf,
 }
 
-/// Runs one NEXMark experiment.
-pub fn run_nexmark(params: NexmarkParams) -> Outcome {
-    let epoch = Instant::now() + Duration::from_millis(50);
-    let config = Config {
-        workers: params.workers,
-        pin_workers: params.pin_workers,
-        ..Config::default()
-    };
-    let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
-
+/// Merges per-worker outcomes into the experiment outcome.
+fn collect(results: Vec<WorkerOutcome>, duration: Duration) -> Outcome {
     let mut histogram = LatencyHistogram::new();
     let mut sent_total = 0u64;
     let mut telemetry = Vec::new();
@@ -102,9 +95,48 @@ pub fn run_nexmark(params: NexmarkParams) -> Outcome {
     }
     Outcome::Completed {
         histogram,
-        achieved_rate: sent_total as f64 / params.duration.as_secs_f64(),
+        achieved_rate: sent_total as f64 / duration.as_secs_f64(),
         telemetry,
     }
+}
+
+/// Runs one NEXMark experiment.
+pub fn run_nexmark(params: NexmarkParams) -> Outcome {
+    let epoch = Instant::now() + Duration::from_millis(50);
+    let config = Config {
+        workers: params.workers,
+        pin_workers: params.pin_workers,
+        ..Config::default()
+    };
+    let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
+    collect(results, params.duration)
+}
+
+/// Runs this process's share of a multi-process NEXMark experiment (see
+/// `harness::openloop::run_cluster` for the calling convention and epoch
+/// semantics). The generator strides by *global* worker index, so the
+/// union of events across the cluster matches a single-process run with
+/// the same total worker count.
+pub fn run_nexmark_cluster(
+    params: NexmarkParams,
+    processes: usize,
+    process_index: usize,
+    addresses: Vec<String>,
+) -> Result<Outcome, NetError> {
+    let config = Config {
+        workers: params.workers,
+        pin_workers: params.pin_workers,
+        processes,
+        process_index,
+        addresses,
+        ..Config::default()
+    };
+    let epoch_cell = std::sync::OnceLock::new();
+    let results = execute_cluster::<u64, _, _>(config, move |worker| {
+        let epoch = *epoch_cell.get_or_init(|| Instant::now() + Duration::from_millis(50));
+        drive(worker, params, epoch)
+    })?;
+    Ok(collect(results, params.duration))
 }
 
 fn drive(worker: &mut Worker<u64>, params: NexmarkParams, epoch: Instant) -> WorkerOutcome {

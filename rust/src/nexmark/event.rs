@@ -58,6 +58,97 @@ pub enum Event {
     Bid(Bid),
 }
 
+use crate::net::{Wire, WireError, WireReader};
+
+impl Wire for Person {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.encode(buf);
+        self.name.encode(buf);
+        self.city.encode(buf);
+        self.date_time.encode(buf);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(Person {
+            id: r.u64()?,
+            name: r.u64()?,
+            city: r.u64()?,
+            date_time: r.u64()?,
+        })
+    }
+}
+
+impl Wire for Auction {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.encode(buf);
+        self.item.encode(buf);
+        self.seller.encode(buf);
+        self.category.encode(buf);
+        self.initial_bid.encode(buf);
+        self.reserve.encode(buf);
+        self.date_time.encode(buf);
+        self.expires.encode(buf);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(Auction {
+            id: r.u64()?,
+            item: r.u64()?,
+            seller: r.u64()?,
+            category: r.u64()?,
+            initial_bid: r.u64()?,
+            reserve: r.u64()?,
+            date_time: r.u64()?,
+            expires: r.u64()?,
+        })
+    }
+}
+
+impl Wire for Bid {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.auction.encode(buf);
+        self.bidder.encode(buf);
+        self.price.encode(buf);
+        self.date_time.encode(buf);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(Bid {
+            auction: r.u64()?,
+            bidder: r.u64()?,
+            price: r.u64()?,
+            date_time: r.u64()?,
+        })
+    }
+}
+
+/// Wire format: tag byte (0 = person, 1 = auction, 2 = bid) + the record —
+/// NEXMark streams exchange events by auction key, so events cross process
+/// boundaries in cluster runs.
+impl Wire for Event {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Event::Person(p) => {
+                buf.push(0);
+                p.encode(buf);
+            }
+            Event::Auction(a) => {
+                buf.push(1);
+                a.encode(buf);
+            }
+            Event::Bid(b) => {
+                buf.push(2);
+                b.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(Event::Person(Person::decode(r)?)),
+            1 => Ok(Event::Auction(Auction::decode(r)?)),
+            2 => Ok(Event::Bid(Bid::decode(r)?)),
+            _ => Err(WireError::Malformed("nexmark event tag")),
+        }
+    }
+}
+
 impl Event {
     /// The event time.
     pub fn date_time(&self) -> u64 {

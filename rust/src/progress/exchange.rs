@@ -49,8 +49,8 @@ use super::change_batch::ChangeBatch;
 use super::location::Location;
 use super::timestamp::Timestamp;
 use crate::buffer::SharedPool;
-use crate::worker::allocator::{Fabric, WorkerStats};
-use crate::worker::ring::{RingReceiver, RingSendError, RingSender};
+use crate::worker::allocator::{Fabric, FabricReceiver, FabricSender, WorkerStats};
+use crate::worker::ring::RingSendError;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -92,10 +92,11 @@ pub struct Progcaster<T: Timestamp> {
     peers: usize,
     /// Coalesces this worker's updates between flushes.
     pending: ChangeBatch<(Location, T)>,
-    /// Per-peer mailbox send halves (`None` at `index`).
-    senders: Vec<Option<RingSender<Arc<ProgressBatch<T>>>>>,
+    /// Per-peer mailbox send halves (`None` at `index`): intra-process
+    /// rings for same-process peers, serializing net endpoints otherwise.
+    senders: Vec<Option<FabricSender<Arc<ProgressBatch<T>>>>>,
     /// Per-peer mailbox receive halves (`None` at `index`).
-    receivers: Vec<Option<RingReceiver<Arc<ProgressBatch<T>>>>>,
+    receivers: Vec<Option<FabricReceiver<Arc<ProgressBatch<T>>>>>,
     /// Loopback of this worker's own batches, in send order.
     own: VecDeque<Arc<ProgressBatch<T>>>,
     /// Per-peer FIFO of batches rejected by a full ring, re-offered in
@@ -199,7 +200,11 @@ impl<T: Timestamp> Progcaster<T> {
                 Ok(()) => {}
                 Err(RingSendError::Full(rejected)) => {
                     self.spill[peer].push_back(rejected);
-                    self.stats.note_ring_full();
+                    // Net endpoints count their own send-queue stalls; the
+                    // ring counter stays ring-only.
+                    if !sender.is_net() {
+                        self.stats.note_ring_full();
+                    }
                 }
                 // A disconnected peer has shut down; it no longer needs
                 // progress (its tracker is gone), so dropping is benign.

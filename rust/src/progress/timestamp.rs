@@ -44,8 +44,15 @@ pub trait PathSummary<T>: Clone + Eq + PartialOrder + Debug + Hash + Send + 'sta
 /// `Ord` is a total order used only for containers and canonicalization; the
 /// semantically meaningful order is [`PartialOrder`]. `Summary::default()`
 /// must be the identity ("no advancement") summary.
+///
+/// The [`Wire`](crate::net::Wire) bound lets progress batches (and message
+/// timestamps) cross process boundaries: the decentralized progress plane
+/// serializes `((Location, T), i64)` batches onto the net fabric whenever
+/// a peer worker lives in another process, so every timestamp type must be
+/// encodable (the codec covers the unsigned integers, `()`, and
+/// [`Product`]).
 pub trait Timestamp:
-    Clone + Eq + Ord + PartialOrder + Debug + Hash + Send + Sync + 'static
+    Clone + Eq + Ord + PartialOrder + Debug + Hash + Send + Sync + crate::net::Wire + 'static
 {
     /// Path summaries for this timestamp type.
     type Summary: PathSummary<Self> + Default;

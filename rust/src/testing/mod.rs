@@ -1,9 +1,10 @@
 //! A small seeded property-testing harness.
 //!
 //! The build environment is fully offline and `proptest` is not in the
-//! vendored crate set, so this module provides the two pieces the test
-//! suite needs: a deterministic PRNG ([`Rng`]) and a check runner
-//! ([`property`]) that reports the failing seed/case for reproduction.
+//! vendored crate set, so this module provides the pieces the test suite
+//! needs: a deterministic PRNG ([`Rng`]), a check runner ([`property`])
+//! that reports the failing seed/case for reproduction, and the cluster
+//! tests' loopback port allocator ([`free_loopback_addresses`]).
 //!
 //! The `interleave` submodule (test builds only) uses the harness to drive
 //! the decentralized progress plane through adversarial per-peer delivery
@@ -54,6 +55,21 @@ impl Rng {
     pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len() as u64) as usize]
     }
+}
+
+/// Reserves `n` distinct loopback `host:port` addresses by binding
+/// ephemeral listeners and releasing them — the cluster tests' and
+/// benches' port-allocation helper. The bind-then-release race window is
+/// negligible within one quiet process; callers that race other programs
+/// for ports should pass explicit addresses instead.
+pub fn free_loopback_addresses(n: usize) -> Vec<String> {
+    let listeners: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port"))
+        .collect();
+    listeners
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().expect("local addr").port()))
+        .collect()
 }
 
 /// Runs `check(case_index, rng)` for `cases` seeded cases; panics with the

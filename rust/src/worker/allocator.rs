@@ -1,14 +1,26 @@
-//! The cross-worker communication fabric.
+//! The cross-worker communication fabric — now spanning processes.
 //!
 //! Workers build identical dataflow graphs in the same order, so channel
 //! identifiers agree without coordination. Each directed channel instance
-//! `(channel, from, to)` is one bounded SPSC FIFO ring ([`super::ring`]) —
-//! the same primitive under the progress plane's mailboxes and the data
-//! plane's exchange channels, so both planes share one transport
-//! abstraction (and a future serializing allocator only has to provide
-//! FIFO byte streams to extend either across processes). Whichever side
-//! asks first creates the ring pair and parks the counterpart half for the
-//! other worker to claim.
+//! `(channel, from, to)` between two workers **in the same process** is
+//! one bounded SPSC FIFO ring ([`super::ring`]) — the same primitive under
+//! the progress plane's mailboxes and the data plane's exchange channels.
+//! Whichever side asks first creates the ring pair and parks the
+//! counterpart half for the other worker to claim.
+//!
+//! In a cluster ([`Fabric::cluster`], reached through
+//! `execute::execute_cluster`), worker indices are global and assigned in
+//! contiguous per-process blocks. The *same* claim calls route a channel
+//! endpoint either onto an intra-process ring or through the wire codec
+//! onto a [`crate::net::NetFabric`] endpoint, depending only on where the
+//! counterpart worker lives: [`Fabric::channel_sender`] /
+//! [`Fabric::channel_receiver`] return [`FabricSender`] /
+//! [`FabricReceiver`] enums whose net variants mirror the ring contract
+//! exactly (`Full` is backpressure, `Disconnected` means the peer is
+//! gone), so the staging / spill / produce-before-data-release machinery
+//! is oblivious to the transport. The raw ring claims
+//! ([`Fabric::sender`] / [`Fabric::receiver`]) remain available for
+//! process-local plumbing and assert locality.
 //!
 //! Both pending maps live under ONE mutex (construction-time only — no
 //! lock is ever taken on the message path): claiming involves looking in
@@ -31,14 +43,19 @@
 //!   "nothing to do" check and its park causes the park to return
 //!   immediately, so no wakeup is lost;
 //! * **per-worker telemetry** ([`Fabric::telemetry`]): park/unpark and
-//!   ring-full stall counters, surfaced through the harness reports so
-//!   scheduler pathologies (wakeup storms, backpressure stalls) are
-//!   visible in benchmark output.
+//!   ring-full stall counters — plus, in a cluster, the net-plane counters
+//!   (frames/bytes sent and received, send-queue stalls) — surfaced
+//!   through the harness reports so scheduler pathologies (wakeup storms,
+//!   backpressure stalls) are visible in benchmark output, grouped by
+//!   process.
 
-use super::ring::{self, RingReceiver, RingSender};
+use super::ring::{self, RingReceiver, RingSendError, RingSender};
+use crate::net::codec::Wire;
+use crate::net::fabric::{NetFabric, NetReceiver, NetSender};
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::TryRecvError;
 use std::sync::{Mutex, OnceLock};
 use std::thread::Thread;
 
@@ -91,54 +108,199 @@ impl WorkerStats {
 /// A point-in-time snapshot of one worker's fabric counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkerTelemetry {
-    /// The worker's index.
+    /// The worker's (global) index.
     pub worker: usize,
+    /// The process the worker belongs to (0 in single-process runs).
+    pub process: usize,
     /// Times the worker parked its thread for lack of work.
     pub parks: u64,
     /// Times peers unparked this worker's thread.
     pub unparks: u64,
     /// Pushes (progress or data) rejected by a full ring and retried.
     pub ring_full_stalls: u64,
+    /// Net-plane counters (all zero in single-process runs).
+    pub net: crate::net::NetTelemetry,
+}
+
+/// One channel endpoint's send half: an intra-process SPSC ring or a
+/// serializing net endpoint, claimed transparently by
+/// [`Fabric::channel_sender`]. Both variants share the non-blocking
+/// `Full` / `Disconnected` contract.
+pub enum FabricSender<M: Send + 'static> {
+    /// Same-process destination: a lock-free SPSC ring.
+    Ring(RingSender<M>),
+    /// Remote destination: encode through the wire codec.
+    Net(NetSender<M>),
+}
+
+impl<M: Wire + Send + 'static> FabricSender<M> {
+    /// Pushes `m`, or hands it back if the endpoint is full (backpressure;
+    /// retry after the counterpart drains) or the peer is gone.
+    #[inline]
+    pub fn send(&mut self, m: M) -> Result<(), RingSendError<M>> {
+        match self {
+            FabricSender::Ring(tx) => tx.send(m),
+            FabricSender::Net(tx) => tx.send(m),
+        }
+    }
+
+    /// Messages the endpoint admits before reporting `Full`.
+    pub fn capacity(&self) -> usize {
+        match self {
+            FabricSender::Ring(tx) => tx.capacity(),
+            FabricSender::Net(tx) => tx.capacity(),
+        }
+    }
+
+    /// True iff this endpoint crosses a process boundary.
+    pub fn is_net(&self) -> bool {
+        matches!(self, FabricSender::Net(_))
+    }
+}
+
+/// One channel endpoint's receive half (counterpart of [`FabricSender`]).
+pub enum FabricReceiver<M: Send + 'static> {
+    /// Same-process source: a lock-free SPSC ring.
+    Ring(RingReceiver<M>),
+    /// Remote source: decode through the wire codec.
+    Net(NetReceiver<M>),
+}
+
+impl<M: Wire + Send + 'static> FabricReceiver<M> {
+    /// Pops the next message: `Empty` while the endpoint is idle,
+    /// `Disconnected` once it is drained and the sender is gone.
+    #[inline]
+    pub fn try_recv(&mut self) -> Result<M, TryRecvError> {
+        match self {
+            FabricReceiver::Ring(rx) => rx.try_recv(),
+            FabricReceiver::Net(rx) => rx.try_recv(),
+        }
+    }
+
+    /// Blocking receive by spinning with yields — tests and shutdown paths
+    /// only (workers park instead).
+    pub fn recv(&mut self) -> Result<M, TryRecvError> {
+        loop {
+            match self.try_recv() {
+                Ok(m) => return Ok(m),
+                Err(TryRecvError::Disconnected) => return Err(TryRecvError::Disconnected),
+                Err(TryRecvError::Empty) => std::thread::yield_now(),
+            }
+        }
+    }
 }
 
 /// The shared endpoint registry.
 pub struct Fabric {
+    /// Total workers across every process.
     peers: usize,
+    /// This process's index (0 in single-process runs).
+    process: usize,
+    /// Total processes (1 in single-process runs).
+    processes: usize,
+    /// Workers hosted by each process (contiguous index blocks).
+    workers_per_process: usize,
     /// Slots per SPSC ring handed out by this fabric (both planes).
     ring_capacity: usize,
     pending: Mutex<Pending>,
-    /// Per-worker thread handles for park/unpark wakeups. Write-once per
-    /// slot (each worker registers from its own thread, before any flush
-    /// traffic), so wakeups read them lock-free — no shared lock on the
-    /// flush hot path.
+    /// Per-worker thread handles for park/unpark wakeups (only local
+    /// workers' slots are ever registered). Write-once per slot (each
+    /// worker registers from its own thread, before any flush traffic),
+    /// so wakeups read them lock-free — no shared lock on the flush hot
+    /// path.
     threads: Vec<OnceLock<Thread>>,
-    /// Per-worker telemetry counters.
+    /// Per-worker telemetry counters (only local workers' entries move).
     stats: Vec<std::sync::Arc<WorkerStats>>,
+    /// The cross-process side; `None` in single-process runs.
+    net: Option<std::sync::Arc<NetFabric>>,
 }
 
 impl Fabric {
-    /// A fabric for `peers` workers with the default ring depth
-    /// ([`RING_CAPACITY`]).
+    /// A single-process fabric for `peers` workers with the default ring
+    /// depth ([`RING_CAPACITY`]).
     pub fn new(peers: usize) -> std::sync::Arc<Self> {
         Self::with_ring_capacity(peers, RING_CAPACITY)
     }
 
-    /// A fabric whose rings hold at least `ring_capacity` messages each
-    /// (rounded up to a power of two by the ring itself; minimum 2). Wired
-    /// to `Config::ring_capacity` by the executor.
+    /// A single-process fabric whose rings hold at least `ring_capacity`
+    /// messages each (rounded up to a power of two by the ring itself;
+    /// minimum 2). Wired to `Config::ring_capacity` by the executor.
     pub fn with_ring_capacity(peers: usize, ring_capacity: usize) -> std::sync::Arc<Self> {
         std::sync::Arc::new(Fabric {
             peers,
+            process: 0,
+            processes: 1,
+            workers_per_process: peers,
             ring_capacity: ring_capacity.max(2),
             pending: Mutex::new(Pending::default()),
             threads: (0..peers).map(|_| OnceLock::new()).collect(),
             stats: (0..peers).map(|_| std::sync::Arc::new(WorkerStats::default())).collect(),
+            net: None,
         })
     }
 
-    /// Number of workers sharing this fabric.
+    /// A cluster fabric: this process hosts workers
+    /// `[process * workers_per_process, (process + 1) * workers_per_process)`
+    /// of `processes * workers_per_process` total; channels to the rest
+    /// route through `net`.
+    pub fn cluster(
+        workers_per_process: usize,
+        process: usize,
+        processes: usize,
+        ring_capacity: usize,
+        net: std::sync::Arc<NetFabric>,
+    ) -> std::sync::Arc<Self> {
+        assert!(process < processes, "process index out of range");
+        let peers = workers_per_process * processes;
+        std::sync::Arc::new(Fabric {
+            peers,
+            process,
+            processes,
+            workers_per_process,
+            ring_capacity: ring_capacity.max(2),
+            pending: Mutex::new(Pending::default()),
+            threads: (0..peers).map(|_| OnceLock::new()).collect(),
+            stats: (0..peers).map(|_| std::sync::Arc::new(WorkerStats::default())).collect(),
+            net: Some(net),
+        })
+    }
+
+    /// Number of workers sharing this fabric, across every process.
     pub fn peers(&self) -> usize {
         self.peers
+    }
+
+    /// This process's index.
+    pub fn process(&self) -> usize {
+        self.process
+    }
+
+    /// Total processes in the cluster (1 outside a cluster).
+    pub fn processes(&self) -> usize {
+        self.processes
+    }
+
+    /// The process hosting a given global worker index.
+    #[inline]
+    pub fn process_of(&self, worker: usize) -> usize {
+        worker / self.workers_per_process
+    }
+
+    /// True iff `worker` runs in this process.
+    #[inline]
+    pub fn is_local(&self, worker: usize) -> bool {
+        self.process_of(worker) == self.process
+    }
+
+    /// The global index of this process's first worker.
+    #[inline]
+    pub fn local_base(&self) -> usize {
+        self.process * self.workers_per_process
+    }
+
+    /// The cross-process fabric, if this is a cluster.
+    pub fn net(&self) -> Option<&std::sync::Arc<NetFabric>> {
+        self.net.as_ref()
     }
 
     /// Slots per ring this fabric hands out.
@@ -153,28 +315,40 @@ impl Fabric {
         self.stats[index].clone()
     }
 
-    /// A snapshot of worker `index`'s counters.
+    /// A snapshot of worker `index`'s counters (net counters are filled in
+    /// for local workers of a cluster, zero otherwise).
     pub fn telemetry(&self, index: usize) -> WorkerTelemetry {
         let stats = &self.stats[index];
+        let net = match (&self.net, self.is_local(index)) {
+            (Some(net), true) => net.telemetry(index - self.local_base()),
+            _ => crate::net::NetTelemetry::default(),
+        };
         WorkerTelemetry {
             worker: index,
+            process: self.process_of(index),
             parks: stats.parks.load(Ordering::Relaxed),
             unparks: stats.unparks.load(Ordering::Relaxed),
             ring_full_stalls: stats.ring_full.load(Ordering::Relaxed),
+            net,
         }
     }
 
-    /// Snapshots of every worker's counters, in index order.
+    /// Snapshots of every worker's counters, in index order (remote
+    /// workers' rows are zero — each process observes only its own).
     pub fn telemetry_all(&self) -> Vec<WorkerTelemetry> {
         (0..self.peers).map(|w| self.telemetry(w)).collect()
     }
 
     /// Registers the *calling* thread as worker `index`'s thread, making it
-    /// a wakeup target for [`Fabric::unpark_peers`]. Called by the worker
-    /// during construction (workers are built on their own threads); only
-    /// the first registration per slot takes effect.
+    /// a wakeup target for [`Fabric::unpark_peers`] (and, in a cluster, for
+    /// the net fabric's recv threads). Called by the worker during
+    /// construction (workers are built on their own threads); only the
+    /// first registration per slot takes effect.
     pub fn register_worker_thread(&self, index: usize) {
         let _ = self.threads[index].set(std::thread::current());
+        if let Some(net) = &self.net {
+            net.register_waker(index - self.local_base(), std::thread::current());
+        }
     }
 
     /// Unparks every registered worker thread except `except` (the caller).
@@ -195,10 +369,78 @@ impl Fabric {
         }
     }
 
+    /// Claims the send half of channel `(chan, from, to)`, routed by the
+    /// destination's locality: an intra-process ring when `to` is hosted
+    /// here, a serializing net endpoint otherwise. Called by (local)
+    /// worker `from` exactly once per key.
+    pub fn channel_sender<M: Wire + Send + 'static>(
+        &self,
+        chan: usize,
+        from: usize,
+        to: usize,
+    ) -> FabricSender<M> {
+        if self.is_local(to) {
+            FabricSender::Ring(self.sender(chan, from, to))
+        } else {
+            let net = self.net.as_ref().expect("remote peer without a net fabric");
+            FabricSender::Net(net.sender(chan, from, to))
+        }
+    }
+
+    /// Claims the receive half of channel `(chan, from, to)`, routed by
+    /// the source's locality. Called by (local) worker `to` exactly once
+    /// per key.
+    pub fn channel_receiver<M: Wire + Send + 'static>(
+        &self,
+        chan: usize,
+        from: usize,
+        to: usize,
+    ) -> FabricReceiver<M> {
+        if self.is_local(from) {
+            FabricReceiver::Ring(self.receiver(chan, from, to))
+        } else {
+            let net = self.net.as_ref().expect("remote peer without a net fabric");
+            FabricReceiver::Net(net.receiver(chan, from, to))
+        }
+    }
+
     /// Claims the send halves of channel `chan` from `from` to every other
     /// worker, in peer order (`None` at `from`): the fan-out half of a
-    /// broadcast family. Each `(chan, from, to)` pair is an SPSC FIFO ring.
-    pub fn broadcast_senders<M: Send + 'static>(
+    /// broadcast family. Same-process pairs are SPSC FIFO rings; remote
+    /// pairs are net endpoints.
+    pub fn broadcast_senders<M: Wire + Send + 'static>(
+        &self,
+        chan: usize,
+        from: usize,
+    ) -> Vec<Option<FabricSender<M>>> {
+        (0..self.peers)
+            .map(|to| if to == from { None } else { Some(self.channel_sender(chan, from, to)) })
+            .collect()
+    }
+
+    /// Claims the receive halves of channel `chan` from every other worker
+    /// to `to`, in peer order (`None` at `to`): the fan-in half of a
+    /// broadcast family.
+    pub fn broadcast_receivers<M: Wire + Send + 'static>(
+        &self,
+        chan: usize,
+        to: usize,
+    ) -> Vec<Option<FabricReceiver<M>>> {
+        (0..self.peers)
+            .map(|from| {
+                if from == to {
+                    None
+                } else {
+                    Some(self.channel_receiver(chan, from, to))
+                }
+            })
+            .collect()
+    }
+
+    /// Ring-only broadcast fan-out (no serialization bound): every peer
+    /// must be process-local. For single-process harnesses and benches
+    /// whose message types cannot cross a process boundary.
+    pub fn ring_broadcast_senders<M: Send + 'static>(
         &self,
         chan: usize,
         from: usize,
@@ -208,10 +450,9 @@ impl Fabric {
             .collect()
     }
 
-    /// Claims the receive halves of channel `chan` from every other worker
-    /// to `to`, in peer order (`None` at `to`): the fan-in half of a
-    /// broadcast family.
-    pub fn broadcast_receivers<M: Send + 'static>(
+    /// Ring-only broadcast fan-in (counterpart of
+    /// [`Fabric::ring_broadcast_senders`]).
+    pub fn ring_broadcast_receivers<M: Send + 'static>(
         &self,
         chan: usize,
         to: usize,
@@ -221,9 +462,15 @@ impl Fabric {
             .collect()
     }
 
-    /// Claims the send half of `(channel, from, to)`. Called by worker
-    /// `from` exactly once per key.
+    /// Claims the send half of the intra-process ring `(channel, from,
+    /// to)`. Both workers must be hosted by this process — engine code
+    /// goes through [`Fabric::channel_sender`], which routes by locality.
+    /// Called by worker `from` exactly once per key.
     pub fn sender<M: Send + 'static>(&self, chan: usize, from: usize, to: usize) -> RingSender<M> {
+        assert!(
+            self.is_local(from) && self.is_local(to),
+            "ring endpoints must be process-local (use channel_sender)"
+        );
         let key = (chan, from, to);
         let mut pending = self.pending.lock().unwrap();
         if let Some(tx) = pending.senders.remove(&key) {
@@ -235,14 +482,19 @@ impl Fabric {
         }
     }
 
-    /// Claims the receive half of `(channel, from, to)`. Called by worker
-    /// `to` exactly once per key.
+    /// Claims the receive half of the intra-process ring `(channel, from,
+    /// to)` (see [`Fabric::sender`]). Called by worker `to` exactly once
+    /// per key.
     pub fn receiver<M: Send + 'static>(
         &self,
         chan: usize,
         from: usize,
         to: usize,
     ) -> RingReceiver<M> {
+        assert!(
+            self.is_local(from) && self.is_local(to),
+            "ring endpoints must be process-local (use channel_receiver)"
+        );
         let key = (chan, from, to);
         let mut pending = self.pending.lock().unwrap();
         if let Some(rx) = pending.receivers.remove(&key) {

@@ -1,4 +1,4 @@
-//! Launching a multi-worker computation.
+//! Launching a multi-worker computation — in one process or across many.
 //!
 //! `execute(config, build)` spawns one thread per worker (optionally pinned
 //! to physical cores, as in the paper's §7.1 setup), runs the same
@@ -6,12 +6,33 @@
 //! results in index order. Workers share only the communication fabric;
 //! each claims its own progress mailboxes from it (there is no central
 //! progress structure to hand out).
+//!
+//! `execute_cluster(config, build)` extends the same model across
+//! processes: every process runs the same binary with the same `build`
+//! closure and a `Config { processes, process_index, addresses }` naming
+//! the cluster. Bootstrap is a full TCP mesh — process `p` listens on
+//! `addresses[p]`, connects to every lower-indexed process (with retry,
+//! so start order is free), and accepts the rest — with a versioned
+//! handshake that (a) verifies both sides agree on the cluster shape and
+//! (b) propagates process 0's tuning (`ring_capacity`, `progress_flush`,
+//! `send_batch`) to every process, so one process's flags configure the
+//! whole cluster. Worker indices are global, in contiguous per-process
+//! blocks; the per-process `Fabric` routes channels between them over
+//! rings or the serializing net fabric transparently. Shutdown is
+//! orderly: workers flush on exit (`Worker::flush_now` runs on drop), the
+//! net fabric drains its outbound queues and closes write sides, and
+//! peers observe clean end-of-stream.
 
 use super::allocator::Fabric;
 use super::Worker;
 use crate::config::Config;
+use crate::net::fabric::NetFabric;
+use crate::net::transport::{tcp_pair, Link, NetError};
 use crate::progress::timestamp::Timestamp;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Pins the calling thread to core `index` (best-effort; ignored if the
 /// affinity call fails, e.g. in restricted containers).
@@ -87,4 +108,261 @@ where
     execute(Config { workers: 1, ..Config::default() }, build)
         .pop()
         .expect("one worker")
+}
+
+// ---------------------------------------------------------------------------
+// Cluster execution.
+// ---------------------------------------------------------------------------
+
+/// Handshake magic: "ttdnetv1" as little-endian bytes.
+const HANDSHAKE_MAGIC: u64 = u64::from_le_bytes(*b"ttdnetv1");
+
+/// Bumped whenever the wire format or handshake layout changes.
+const HANDSHAKE_VERSION: u32 = 1;
+
+/// How long bootstrap keeps retrying a refused connection (peers may not
+/// be listening yet; start order is free).
+const CONNECT_RETRY_FOR: Duration = Duration::from_secs(30);
+
+/// `HELLO` (connector → acceptor): magic, version, cluster shape, sender.
+/// 24 bytes, all little-endian.
+fn write_hello(stream: &mut TcpStream, config: &Config) -> Result<(), NetError> {
+    let mut buf = [0u8; 24];
+    buf[0..8].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    buf[8..12].copy_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
+    buf[12..16].copy_from_slice(&(config.process_index as u32).to_le_bytes());
+    buf[16..20].copy_from_slice(&(config.processes as u32).to_le_bytes());
+    buf[20..24].copy_from_slice(&(config.workers as u32).to_le_bytes());
+    stream.write_all(&buf)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Reads and validates a `HELLO`, returning the connecting process index.
+fn read_hello(stream: &mut TcpStream, config: &Config) -> Result<usize, NetError> {
+    let mut buf = [0u8; 24];
+    stream.read_exact(&mut buf)?;
+    let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
+    let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+    let process = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes")) as usize;
+    let processes = u32::from_le_bytes(buf[16..20].try_into().expect("4 bytes")) as usize;
+    let workers = u32::from_le_bytes(buf[20..24].try_into().expect("4 bytes")) as usize;
+    if magic != HANDSHAKE_MAGIC {
+        return Err(NetError::Protocol("bad magic (not a ttd peer?)".into()));
+    }
+    if version != HANDSHAKE_VERSION {
+        return Err(NetError::Protocol(format!(
+            "wire version mismatch: peer {version}, local {HANDSHAKE_VERSION}"
+        )));
+    }
+    if processes != config.processes || workers != config.workers.max(1) {
+        return Err(NetError::Protocol(format!(
+            "cluster shape mismatch: peer says {processes} processes x {workers} workers, \
+             local config says {} x {}",
+            config.processes,
+            config.workers.max(1)
+        )));
+    }
+    if process >= processes {
+        return Err(NetError::Protocol(format!("peer index {process} out of range")));
+    }
+    Ok(process)
+}
+
+/// `WELCOME` (acceptor → connector): echoes the shape and carries the
+/// acceptor's tuning. The connector adopts the tuning only from process 0,
+/// which makes process 0's flags authoritative for the whole cluster
+/// (every process connects to 0 before spawning workers). 48 bytes.
+fn write_welcome(stream: &mut TcpStream, config: &Config) -> Result<(), NetError> {
+    let mut buf = [0u8; 48];
+    buf[0..8].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    buf[8..12].copy_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
+    buf[12..16].copy_from_slice(&(config.process_index as u32).to_le_bytes());
+    buf[16..20].copy_from_slice(&(config.processes as u32).to_le_bytes());
+    buf[20..24].copy_from_slice(&(config.workers as u32).to_le_bytes());
+    buf[24..32].copy_from_slice(&(config.ring_capacity as u64).to_le_bytes());
+    buf[32..40].copy_from_slice(&(config.progress_flush.as_nanos() as u64).to_le_bytes());
+    buf[40..48].copy_from_slice(&(config.send_batch as u64).to_le_bytes());
+    stream.write_all(&buf)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Reads a `WELCOME`; if it came from process 0, adopts its tuning into
+/// the local config (the "config propagation" half of the handshake).
+fn read_welcome(stream: &mut TcpStream, config: &mut Config, peer: usize) -> Result<(), NetError> {
+    let mut buf = [0u8; 48];
+    stream.read_exact(&mut buf)?;
+    let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
+    let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+    let process = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes")) as usize;
+    if magic != HANDSHAKE_MAGIC || version != HANDSHAKE_VERSION {
+        return Err(NetError::Protocol("bad welcome".into()));
+    }
+    if process != peer {
+        return Err(NetError::Protocol(format!(
+            "connected to {peer} but process {process} answered (address list skew?)"
+        )));
+    }
+    if peer == 0 {
+        config.ring_capacity =
+            u64::from_le_bytes(buf[24..32].try_into().expect("8 bytes")) as usize;
+        config.progress_flush = Duration::from_nanos(u64::from_le_bytes(
+            buf[32..40].try_into().expect("8 bytes"),
+        ));
+        config.send_batch = u64::from_le_bytes(buf[40..48].try_into().expect("8 bytes")) as usize;
+    }
+    Ok(())
+}
+
+/// Connects to `address` with retry (the peer may not be listening yet).
+fn connect_with_retry(address: &str) -> Result<TcpStream, NetError> {
+    let deadline = Instant::now() + CONNECT_RETRY_FOR;
+    loop {
+        match TcpStream::connect(address) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(NetError::Protocol(format!(
+                        "could not reach peer at {address} within {CONNECT_RETRY_FOR:?}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Establishes the full mesh for `config`, returning one transport pair
+/// per process (`None` at `config.process_index`) and adopting process
+/// 0's tuning into `config`.
+fn bootstrap(
+    config: &mut Config,
+) -> Result<Vec<Option<Link>>, NetError> {
+    let me = config.process_index;
+    let processes = config.processes;
+    if config.addresses.len() != processes {
+        return Err(NetError::Protocol(format!(
+            "need one address per process: got {} for {processes} processes",
+            config.addresses.len()
+        )));
+    }
+    let listener = TcpListener::bind(&config.addresses[me]).map_err(|e| {
+        NetError::Protocol(format!("cannot listen on {}: {e}", config.addresses[me]))
+    })?;
+
+    let mut links: Vec<Option<Link>> =
+        (0..processes).map(|_| None).collect();
+
+    // Connect to every lower-indexed process, in order — 0 first, so its
+    // WELCOME configures this process before anything else happens.
+    for peer in 0..me {
+        let mut stream = connect_with_retry(&config.addresses[peer])?;
+        // Bound the reply read: a wedged peer (or an unrelated service on
+        // the address) must fail the bootstrap, not hang it.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        write_hello(&mut stream, config)?;
+        read_welcome(&mut stream, config, peer)?;
+        let _ = stream.set_read_timeout(None);
+        let (tx, rx) = tcp_pair(stream)?;
+        links[peer] = Some((Box::new(tx), Box::new(rx)));
+    }
+
+    // Accept every higher-indexed process, identified by its HELLO.
+    let mut expected: usize = processes - 1 - me;
+    while expected > 0 {
+        let (mut stream, _addr) = listener.accept()?;
+        // Bound the handshake read so a silent stray connection cannot
+        // wedge the accept loop.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+        let peer = match read_hello(&mut stream, config) {
+            Ok(peer) => peer,
+            // A stray or dying connection (port scanner, crashed peer
+            // retrying) must not wedge the bootstrap: drop it and keep
+            // accepting. Real misconfigurations surface as Protocol.
+            Err(NetError::Io(_)) => continue,
+            Err(e) => return Err(e),
+        };
+        let _ = stream.set_read_timeout(None);
+        if peer <= me || links[peer].is_some() {
+            return Err(NetError::Protocol(format!("unexpected connection from {peer}")));
+        }
+        write_welcome(&mut stream, config)?;
+        let (tx, rx) = tcp_pair(stream)?;
+        links[peer] = Some((Box::new(tx), Box::new(rx)));
+        expected -= 1;
+    }
+    Ok(links)
+}
+
+/// Runs `build` on every worker this process hosts, as part of a
+/// `config.processes`-process cluster (every process must call this with
+/// the same cluster shape and its own `process_index`). Returns the
+/// *local* workers' results, in global index order. With `processes <= 1`
+/// this is exactly [`execute`].
+pub fn execute_cluster<T, R, F>(config: Config, build: F) -> Result<Vec<R>, NetError>
+where
+    T: Timestamp,
+    R: Send + 'static,
+    F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
+{
+    if config.processes <= 1 {
+        return Ok(execute(config, build));
+    }
+    let mut config = config;
+    config.workers = config.workers.max(1);
+    let links = bootstrap(&mut config)?;
+
+    let workers_per_process = config.workers.max(1);
+    let processes = config.processes;
+    let process = config.process_index;
+    let net = NetFabric::new(
+        process,
+        processes,
+        workers_per_process,
+        links,
+        config.ring_capacity,
+    );
+    let fabric = Fabric::cluster(
+        workers_per_process,
+        process,
+        processes,
+        config.ring_capacity,
+        net.clone(),
+    );
+    let peers = fabric.peers();
+    let base = process * workers_per_process;
+    let build = Arc::new(build);
+    let pin = config.pin_workers;
+    let progress_flush = config.progress_flush;
+    let send_batch = config.send_batch;
+
+    let mut handles = Vec::with_capacity(workers_per_process);
+    for local in 0..workers_per_process {
+        let fabric = fabric.clone();
+        let build = build.clone();
+        let index = base + local;
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{index}"))
+                .spawn(move || {
+                    if pin {
+                        pin_to_core(local);
+                    }
+                    let mut worker = Worker::new(index, peers, fabric);
+                    worker.set_progress_flush(progress_flush);
+                    worker.set_send_batch(send_batch);
+                    build(&mut worker)
+                })
+                .expect("spawn worker thread"),
+        );
+    }
+    let results: Vec<R> = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker thread panicked"))
+        .collect();
+    // Every local worker has completed (and flushed, via `Worker::drop`):
+    // drain the outbound queues to the wire and close the links cleanly.
+    net.shutdown();
+    Ok(results)
 }

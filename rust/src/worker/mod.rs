@@ -169,9 +169,29 @@ impl<T: Timestamp> Worker<T> {
     }
 
     /// A snapshot of this worker's fabric counters (parks, unparks,
-    /// ring-full stalls).
+    /// ring-full stalls, and — in a cluster — the net-plane counters).
     pub fn telemetry(&self) -> WorkerTelemetry {
         self.fabric.telemetry(self.progcaster.index())
+    }
+
+    /// The process hosting this worker (0 outside a cluster).
+    pub fn process(&self) -> usize {
+        self.fabric.process()
+    }
+
+    /// The effective progress-flush cadence (config-propagation checks).
+    pub fn progress_flush(&self) -> Duration {
+        self.progress_flush
+    }
+
+    /// The fabric's effective ring capacity (config-propagation checks).
+    pub fn ring_capacity(&self) -> usize {
+        self.fabric.ring_capacity()
+    }
+
+    /// The effective output batch size (config-propagation checks).
+    pub fn send_batch(&self) -> usize {
+        self.scope.state.borrow().send_batch
     }
 
     /// Creates a new dataflow input; returns the session used to feed and

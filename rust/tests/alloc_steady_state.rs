@@ -98,12 +98,13 @@ fn point_to_point_loop() {
         Pact::Pipeline,
         0,
         2,
-        vec![None, Some(fabric.sender::<Message<u64, u64>>(0, 0, 1))],
+        vec![None, Some(fabric.channel_sender::<Message<u64, u64>>(0, 0, 1))],
         Rc::new(RefCell::new(VecDeque::new())),
         Rc::new(Cell::new(false)),
         fabric.stats(0),
     );
-    let mut drain = drainer(fabric.receiver::<Message<u64, u64>>(0, 0, 1), q_remote.clone());
+    let mut drain =
+        drainer(fabric.channel_receiver::<Message<u64, u64>>(0, 0, 1), q_remote.clone());
     let pool = BufferPool::<Vec<u64>>::new(8);
 
     let mut time = 0u64;

@@ -1,0 +1,276 @@
+//! Multi-process integration: a 2-process × 2-worker cluster over loopback
+//! TCP must produce outputs *identical* to the single-process 4-worker run
+//! — same engine, same dataflows, only the fabric's transport differs —
+//! plus the config-propagation guarantee of the bootstrap handshake.
+//!
+//! Each "process" here is a thread calling `execute_cluster` with its own
+//! `Config { processes, process_index, addresses }`: every member gets its
+//! own fabric, net fabric, codec path, and real 127.0.0.1 sockets, so the
+//! full wire path is exercised deterministically inside one test binary.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+use timestamp_tokens::config::Config;
+use timestamp_tokens::coordination::Mechanism;
+use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::harness::workloads::drain;
+use timestamp_tokens::nexmark::generator::{GeneratorConfig, NexmarkGenerator};
+use timestamp_tokens::nexmark::q4::{build_q4_observed, q4_oracle};
+use timestamp_tokens::operators::map::MapExt;
+use timestamp_tokens::operators::wordcount::WordCountExt;
+use timestamp_tokens::testing::free_loopback_addresses as free_addresses;
+use timestamp_tokens::worker::execute::{execute, execute_cluster};
+use timestamp_tokens::worker::Worker;
+
+/// Runs `build` as a `processes × workers_per_process` cluster (threads as
+/// processes, real TCP), returning every worker's result in global index
+/// order.
+fn run_cluster<R, F>(processes: usize, workers_per_process: usize, build: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(&mut Worker<u64>) -> R + Send + Sync + 'static,
+{
+    let addresses = free_addresses(processes);
+    let build = Arc::new(build);
+    let mut handles = Vec::new();
+    for p in 0..processes {
+        let addresses = addresses.clone();
+        let build = build.clone();
+        handles.push(std::thread::spawn(move || {
+            let config = Config {
+                workers: workers_per_process,
+                pin_workers: false,
+                processes,
+                process_index: p,
+                addresses,
+                ..Config::default()
+            };
+            execute_cluster::<u64, _, _>(config, move |worker| build(worker))
+                .expect("cluster bootstrap")
+        }));
+    }
+    handles.into_iter().flat_map(|h| h.join().expect("cluster process")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Wordcount: 2 × 2 loopback TCP == 1 × 4.
+// ---------------------------------------------------------------------------
+
+/// Deterministic per-worker word feed (keyed by *global* index, so the
+/// union of inputs is the same in both topologies).
+fn words_for(index: u64, epoch: u64) -> impl Iterator<Item = u64> {
+    (0..200u64).map(move |i| {
+        let mut x = 0x9e37_79b9_7f4a_7c15u64 ^ (index << 40) ^ (epoch << 20) ^ i;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        x % 97 // small vocabulary: plenty of cross-worker collisions
+    })
+}
+
+/// The wordcount dataflow: exchange by word, rolling count, collect every
+/// `(word, count)` emission this worker's counter instance produces.
+fn wordcount_run(worker: &mut Worker<u64>) -> Vec<(u64, u64)> {
+    let index = worker.index() as u64;
+    let (mut input, stream) = worker.new_input::<u64>();
+    let seen = Rc::new(RefCell::new(Vec::new()));
+    let seen2 = seen.clone();
+    let probe = stream
+        .word_count()
+        .inspect(move |_t, pair| seen2.borrow_mut().push(*pair))
+        .probe();
+    for epoch in 1..=3u64 {
+        input.advance_to(epoch);
+        for word in words_for(index, epoch) {
+            input.send(word);
+        }
+    }
+    input.close();
+    worker.step_while(|| !probe.done());
+    let got = seen.borrow().clone();
+    got
+}
+
+#[test]
+fn wordcount_cluster_matches_single_process() {
+    let single: Vec<(u64, u64)> = execute::<u64, _, _>(
+        Config { workers: 4, pin_workers: false, ..Config::default() },
+        wordcount_run,
+    )
+    .into_iter()
+    .flatten()
+    .collect();
+    let cluster: Vec<(u64, u64)> =
+        run_cluster(2, 2, wordcount_run).into_iter().flatten().collect();
+
+    // Per word, the counter emits (word, 1..=n) wherever it is hosted, so
+    // the multiset of emissions is topology-independent.
+    let mut single_sorted = single;
+    let mut cluster_sorted = cluster;
+    single_sorted.sort_unstable();
+    cluster_sorted.sort_unstable();
+    assert_eq!(single_sorted.len(), 4 * 3 * 200, "every word produces one emission");
+    assert_eq!(single_sorted, cluster_sorted, "cluster output differs from single-process");
+}
+
+// ---------------------------------------------------------------------------
+// NEXMark Q4: 2 × 2 loopback TCP == 1 × 4 == sequential oracle.
+// ---------------------------------------------------------------------------
+
+fn q4_generator(index: u64, peers: u64) -> NexmarkGenerator {
+    let config = GeneratorConfig {
+        expiry_min_ns: 2_000,
+        expiry_max_ns: 40_000,
+        ..GeneratorConfig::default()
+    };
+    NexmarkGenerator::with_stride(0xdead_beef ^ ((index + 1) << 17), config, index, peers)
+}
+
+/// Deterministic Q4 run: fixed epochs, generator strided by global worker
+/// index. Returns the `(category, price)` closes observed on this worker.
+fn q4_run(worker: &mut Worker<u64>) -> Vec<(u64, u64)> {
+    let index = worker.index() as u64;
+    let peers = worker.peers() as u64;
+    let closes = Rc::new(RefCell::new(Vec::new()));
+    let closes2 = closes.clone();
+    let (mut input, probe) = build_q4_observed(worker, Mechanism::Tokens, move |cat, price| {
+        closes2.borrow_mut().push((cat, price));
+    });
+    let mut generator = q4_generator(index, peers);
+    for epoch in 1..=10u64 {
+        let t = epoch * 5_000;
+        input.advance(t);
+        for _ in 0..150 {
+            input.send(t, generator.next_event(t));
+        }
+    }
+    drain(worker, &mut input, &probe);
+    let got = closes.borrow().clone();
+    got
+}
+
+#[test]
+fn nexmark_q4_cluster_matches_single_process_and_oracle() {
+    let single: Vec<(u64, u64)> = execute::<u64, _, _>(
+        Config { workers: 4, pin_workers: false, ..Config::default() },
+        q4_run,
+    )
+    .into_iter()
+    .flatten()
+    .collect();
+    let cluster: Vec<(u64, u64)> = run_cluster(2, 2, q4_run).into_iter().flatten().collect();
+
+    let mut single_sorted = single;
+    let mut cluster_sorted = cluster;
+    single_sorted.sort_unstable();
+    cluster_sorted.sort_unstable();
+    assert_eq!(
+        single_sorted, cluster_sorted,
+        "cluster Q4 closes differ from single-process"
+    );
+
+    // Both must equal the sequential oracle over the union of the event
+    // streams (auction-before-bid order holds per source worker, which is
+    // all the oracle's observe path relies on).
+    let mut events = Vec::new();
+    for index in 0..4u64 {
+        let mut generator = q4_generator(index, 4);
+        for epoch in 1..=10u64 {
+            let t = epoch * 5_000;
+            for _ in 0..150 {
+                events.push(generator.next_event(t));
+            }
+        }
+    }
+    let oracle = q4_oracle(&events);
+    assert!(!oracle.is_empty(), "test parameters must actually close auctions");
+    assert_eq!(single_sorted, oracle, "engine disagrees with the sequential oracle");
+}
+
+// ---------------------------------------------------------------------------
+// Config propagation: process 0's tuning reaches every process.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remote_workers_observe_process_zero_config() {
+    let processes = 2;
+    let addresses = free_addresses(processes);
+    let mut handles = Vec::new();
+    for p in 0..processes {
+        let addresses = addresses.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut config = Config {
+                workers: 2,
+                pin_workers: false,
+                processes,
+                process_index: p,
+                addresses,
+                ..Config::default()
+            };
+            if p == 0 {
+                // Only process 0 is tuned; the handshake must carry these
+                // to process 1, whose local config keeps the defaults.
+                config.ring_capacity = 64;
+                config.progress_flush = std::time::Duration::from_micros(123);
+                config.send_batch = 77;
+            }
+            execute_cluster::<u64, _, _>(config, |worker| {
+                // Trivial dataflow so workers exercise the full lifecycle.
+                let (mut input, stream) = worker.new_input::<u64>();
+                let probe = stream.probe();
+                input.send(worker.index() as u64);
+                input.close();
+                worker.step_while(|| !probe.done());
+                (worker.ring_capacity(), worker.progress_flush(), worker.send_batch())
+            })
+            .expect("cluster bootstrap")
+        }));
+    }
+    let observed: Vec<(usize, std::time::Duration, usize)> =
+        handles.into_iter().flat_map(|h| h.join().expect("cluster process")).collect();
+    assert_eq!(observed.len(), 4);
+    for (ring, flush, batch) in observed {
+        assert_eq!(ring, 64, "ring_capacity must propagate through the handshake");
+        assert_eq!(
+            flush,
+            std::time::Duration::from_micros(123),
+            "progress_flush must propagate through the handshake"
+        );
+        assert_eq!(batch, 77, "send_batch must propagate through the handshake");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Records survive heavy cross-process exchange (conservation check).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn large_volume_cluster_exchange_conserves_records() {
+    let per_worker = 50_000u64;
+    let counts: Vec<u64> = run_cluster(2, 2, move |worker| {
+        let (mut input, stream) = worker.new_input::<u64>();
+        let count = Rc::new(RefCell::new(0u64));
+        let count2 = count.clone();
+        let probe = stream
+            .exchange(|v| v.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .inspect(move |_, _| *count2.borrow_mut() += 1)
+            .probe();
+        for epoch in 0..10u64 {
+            input.advance_to(epoch);
+            for v in 0..per_worker / 10 {
+                input.send(epoch * per_worker + v);
+            }
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let got = *count.borrow();
+        got
+    });
+    assert_eq!(counts.iter().sum::<u64>(), 4 * per_worker, "records lost or duplicated");
+    // Modular routing spreads load across all four workers, so every
+    // worker — in both processes — must have received a share.
+    for (i, count) in counts.iter().enumerate() {
+        assert!(*count > 0, "worker {i} received nothing");
+    }
+}
