@@ -498,12 +498,16 @@ fn sweep_ring(args: &BenchArgs) {
 
 /// Per-worker result of the net scenario: records observed at the sink,
 /// wall seconds, per-epoch completion latencies (ns), net send-queue
-/// stalls.
+/// stalls, and the progress plane's physical frame/byte counts (one frame
+/// per flush per remote process under broadcast dedup — the bandwidth the
+/// dedup is cutting, tracked so future PRs can compare).
 struct NetWorkerResult {
     records: u64,
     secs: f64,
     latencies: Vec<u64>,
     send_stalls: u64,
+    progress_frames_tx: u64,
+    progress_bytes_tx: u64,
 }
 
 /// The engine workload both topologies run: `input -> exchange(hash) ->
@@ -545,27 +549,42 @@ fn drive_net_exchange(
     input.close();
     worker.step_while(|| !probe.done());
     let records = *count.borrow();
+    let net = worker.telemetry().net;
     NetWorkerResult {
         records,
         secs: start.elapsed().as_secs_f64(),
         latencies,
-        send_stalls: worker.telemetry().net.send_queue_stalls,
+        send_stalls: net.send_queue_stalls,
+        progress_frames_tx: net.progress_frames_sent,
+        progress_bytes_tx: net.progress_bytes_sent,
     }
 }
 
-fn measure_net(results: Vec<NetWorkerResult>) -> (u64, u64, u64, u64) {
+/// Aggregate of one topology's run: throughput, latency percentiles,
+/// stalls, and the progress plane's physical tx volume.
+struct NetMeasurement {
+    records_per_sec: u64,
+    p50_ns: u64,
+    p99_ns: u64,
+    send_stalls: u64,
+    progress_frames_tx: u64,
+    progress_bytes_tx: u64,
+}
+
+fn measure_net(results: Vec<NetWorkerResult>) -> NetMeasurement {
     let records: u64 = results.iter().map(|r| r.records).sum();
     let secs = results.iter().map(|r| r.secs).fold(0.0f64, f64::max).max(1e-9);
     let mut latencies: Vec<u64> =
         results.iter().flat_map(|r| r.latencies.iter().copied()).collect();
     latencies.sort_unstable();
-    let stalls: u64 = results.iter().map(|r| r.send_stalls).sum();
-    (
-        (records as f64 / secs) as u64,
-        percentile(&latencies, 50.0),
-        percentile(&latencies, 99.0),
-        stalls,
-    )
+    NetMeasurement {
+        records_per_sec: (records as f64 / secs) as u64,
+        p50_ns: percentile(&latencies, 50.0),
+        p99_ns: percentile(&latencies, 99.0),
+        send_stalls: results.iter().map(|r| r.send_stalls).sum(),
+        progress_frames_tx: results.iter().map(|r| r.progress_frames_tx).sum(),
+        progress_bytes_tx: results.iter().map(|r| r.progress_bytes_tx).sum(),
+    }
 }
 
 /// Intra-process vs cross-process exchange at identical total worker
@@ -587,8 +606,9 @@ fn net_scenario(args: &BenchArgs) {
          intra-process vs {processes}-process loopback TCP"
     );
     println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12}",
-        "topology", "records/s", "p50 ns", "p99 ns", "send-stalls"
+        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "topology", "records/s", "p50 ns", "p99 ns", "send-stalls", "prog-frames-tx",
+        "prog-bytes-tx"
     );
 
     // (a) One process hosting every worker.
@@ -599,8 +619,14 @@ fn net_scenario(args: &BenchArgs) {
         measure_net(results)
     };
     println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12}",
-        "intra-process", intra.0, intra.1, intra.2, intra.3
+        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "intra-process",
+        intra.records_per_sec,
+        intra.p50_ns,
+        intra.p99_ns,
+        intra.send_stalls,
+        intra.progress_frames_tx,
+        intra.progress_bytes_tx
     );
 
     // (b) The same workers split across `processes` cluster members over
@@ -633,8 +659,14 @@ fn net_scenario(args: &BenchArgs) {
         measure_net(results)
     };
     println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12}",
-        "cross-process", cross.0, cross.1, cross.2, cross.3
+        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "cross-process",
+        cross.records_per_sec,
+        cross.p50_ns,
+        cross.p99_ns,
+        cross.send_stalls,
+        cross.progress_frames_tx,
+        cross.progress_bytes_tx
     );
 
     let mut json = String::new();
@@ -648,8 +680,14 @@ fn net_scenario(args: &BenchArgs) {
     {
         json.push_str(&format!(
             "  \"{label}\": {{\"records_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
-             \"send_queue_stalls\": {}}}{comma}\n",
-            m.0, m.1, m.2, m.3
+             \"send_queue_stalls\": {}, \"progress_frames_tx\": {}, \
+             \"progress_bytes_tx\": {}}}{comma}\n",
+            m.records_per_sec,
+            m.p50_ns,
+            m.p99_ns,
+            m.send_stalls,
+            m.progress_frames_tx,
+            m.progress_bytes_tx
         ));
     }
     json.push_str("}\n");

@@ -69,6 +69,13 @@ pub struct Config {
     /// One `host:port` listen address per process, in process order.
     /// Required when `processes > 1`; ignored otherwise.
     pub addresses: Vec<String>,
+    /// Per-process worker counts for heterogeneous clusters, in process
+    /// order (`cluster_shape[p]` workers hosted by process `p`). Empty —
+    /// the default — means every process hosts `workers` workers. When
+    /// non-empty its length must equal `processes`, every process must
+    /// pass the same shape, and `workers` is ignored (the launcher sets it
+    /// to `cluster_shape[process_index]`).
+    pub cluster_shape: Vec<usize>,
 }
 
 impl Default for Config {
@@ -84,6 +91,7 @@ impl Default for Config {
             processes: 1,
             process_index: 0,
             addresses: Vec::new(),
+            cluster_shape: Vec::new(),
         }
     }
 }
@@ -92,6 +100,17 @@ impl Config {
     /// A default config with `workers` workers.
     pub fn default_with_workers(workers: usize) -> Self {
         Config { workers, ..Config::default() }
+    }
+
+    /// The cluster's per-process worker counts: `cluster_shape` when
+    /// given, otherwise `workers` on every process (the classic square
+    /// mesh). Zero entries clamp to one worker.
+    pub fn shape(&self) -> Vec<usize> {
+        if self.cluster_shape.is_empty() {
+            vec![self.workers.max(1); self.processes.max(1)]
+        } else {
+            self.cluster_shape.iter().map(|w| (*w).max(1)).collect()
+        }
     }
 }
 
@@ -118,5 +137,22 @@ mod tests {
         assert_eq!(c.processes, 1);
         assert_eq!(c.process_index, 0);
         assert!(c.addresses.is_empty());
+        assert!(c.cluster_shape.is_empty());
+    }
+
+    #[test]
+    fn shape_defaults_to_uniform_and_honors_overrides() {
+        let uniform = Config { workers: 3, processes: 2, ..Config::default() };
+        assert_eq!(uniform.shape(), vec![3, 3]);
+        let skewed = Config {
+            workers: 2,
+            processes: 3,
+            cluster_shape: vec![2, 1, 1],
+            ..Config::default()
+        };
+        assert_eq!(skewed.shape(), vec![2, 1, 1]);
+        // Zero entries clamp rather than producing an empty process.
+        let clamped = Config { processes: 2, cluster_shape: vec![0, 4], ..Config::default() };
+        assert_eq!(clamped.shape(), vec![1, 4]);
     }
 }

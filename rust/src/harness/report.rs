@@ -30,8 +30,12 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
 }
 
 /// Column headers of the telemetry table (shared by the per-worker and
-/// per-process aggregate rows).
-pub const TELEMETRY_HEADER: [&str; 10] = [
+/// per-process aggregate rows). The `prog-*` columns surface the
+/// broadcast-dedup progress plane: `prog-frames-tx` counts one physical
+/// frame per (flush, remote process), and `prog-fanout` counts logical
+/// deliveries — their ratio is the destination process's worker count
+/// when dedup is engaged.
+pub const TELEMETRY_HEADER: [&str; 13] = [
     "process",
     "worker",
     "parks",
@@ -42,6 +46,9 @@ pub const TELEMETRY_HEADER: [&str; 10] = [
     "net-bytes-tx",
     "net-bytes-rx",
     "send-stalls",
+    "prog-frames-tx",
+    "prog-frames-rx",
+    "prog-fanout",
 ];
 
 fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
@@ -56,6 +63,9 @@ fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String
         t.net.bytes_sent.to_string(),
         t.net.bytes_recv.to_string(),
         t.net.send_queue_stalls.to_string(),
+        t.net.progress_frames_sent.to_string(),
+        t.net.progress_frames_recv.to_string(),
+        t.net.progress_batches_recv.to_string(),
     ]
 }
 
@@ -71,6 +81,10 @@ fn aggregate(workers: &[&WorkerTelemetry]) -> WorkerTelemetry {
         total.net.bytes_sent += t.net.bytes_sent;
         total.net.bytes_recv += t.net.bytes_recv;
         total.net.send_queue_stalls += t.net.send_queue_stalls;
+        total.net.progress_frames_sent += t.net.progress_frames_sent;
+        total.net.progress_bytes_sent += t.net.progress_bytes_sent;
+        total.net.progress_frames_recv += t.net.progress_frames_recv;
+        total.net.progress_batches_recv += t.net.progress_batches_recv;
     }
     total
 }
@@ -171,10 +185,11 @@ mod tests {
             net: Default::default(),
         }]);
         // One worker, one process: no aggregate row.
-        let want: Vec<Vec<String>> = vec![["0", "3", "10", "7", "2", "0", "0", "0", "0", "0"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect()];
+        let want: Vec<Vec<String>> =
+            vec![["0", "3", "10", "7", "2", "0", "0", "0", "0", "0", "0", "0", "0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect()];
         assert_eq!(rows, want);
     }
 
@@ -182,8 +197,10 @@ mod tests {
     fn telemetry_groups_by_process_with_aggregates() {
         let mut w0 = WorkerTelemetry { worker: 0, process: 0, parks: 1, ..Default::default() };
         w0.net.frames_sent = 5;
+        w0.net.progress_frames_sent = 2;
         let mut w1 = WorkerTelemetry { worker: 1, process: 0, parks: 2, ..Default::default() };
         w1.net.frames_sent = 7;
+        w1.net.progress_batches_recv = 3;
         let mut w2 = WorkerTelemetry { worker: 2, process: 1, parks: 4, ..Default::default() };
         w2.net.bytes_recv = 100;
         let rows = telemetry_rows(&[w0, w1, w2]);
@@ -193,6 +210,8 @@ mod tests {
         assert_eq!(rows[2][1], "Σ");
         assert_eq!(rows[2][2], "3", "parks aggregate");
         assert_eq!(rows[2][5], "12", "frames-tx aggregate");
+        assert_eq!(rows[2][10], "2", "prog-frames-tx aggregate");
+        assert_eq!(rows[2][12], "3", "prog-fanout aggregate");
         assert_eq!(rows[3][0], "1");
         assert_eq!(rows[4][1], "Σ");
         assert_eq!(rows[4][8], "100", "bytes-rx aggregate");

@@ -111,6 +111,8 @@ pub mod prelude {
     pub use crate::operators::prelude::*;
     pub use crate::progress::antichain::{Antichain, MutableAntichain};
     pub use crate::progress::timestamp::{PartialOrder, Product, Timestamp};
-    pub use crate::worker::execute::{execute, execute_cluster, execute_single};
+    pub use crate::worker::execute::{
+        execute, execute_cluster, execute_cluster_telemetry, execute_single,
+    };
     pub use crate::worker::Worker;
 }

@@ -26,11 +26,11 @@
 //! present, so a truncated or corrupt frame fails cleanly instead of
 //! aborting on a bogus multi-gigabyte reservation.
 
-use crate::buffer::{BufferPool, Lease};
+use crate::buffer::{BufferPool, Lease, SharedPool};
 use crate::progress::location::{Location, Port};
 use crate::progress::timestamp::Product;
 use std::any::Any;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Largest admissible frame payload (64 MiB). `SEND_BATCH`-sized record
 /// batches and coalesced progress batches sit far below this; the bound
@@ -156,8 +156,22 @@ pub trait Wire: Sized {
     /// receiving endpoint for this type is claimed and handed to every
     /// [`Wire::decode`] call through [`WireReader::context`]. The data
     /// plane uses this to decode record batches straight into pooled
-    /// leases (`Message<T, D>` installs a `BufferPool<Vec<D>>`).
+    /// leases (`Message<T, D>` installs a `BufferPool<Vec<D>>`), and the
+    /// progress plane to decode broadcast batches into `SharedPool`-
+    /// recycled `Vec`s ([`ProgressBroadcast`] installs a
+    /// [`ProgressDecodeContext`]).
     fn decode_context() -> Option<Box<dyn Any + Send>> {
+        None
+    }
+
+    /// Reconstructs a value delivered *pre-decoded* through a broadcast
+    /// fan-out: the net fabric decodes a per-process broadcast frame once
+    /// and hands each destination inbox one clone of the shared item (see
+    /// `net::fabric::NetFabric::register_broadcast`). Only types that
+    /// ride broadcast channels override this; the default rejects, which
+    /// makes a frame mis-routed onto a broadcast channel loud instead of
+    /// silently dropped.
+    fn from_shared(_shared: Arc<dyn Any + Send + Sync>) -> Option<Self> {
         None
     }
 }
@@ -335,13 +349,18 @@ impl<T: Wire> Wire for Option<T> {
 /// Shared values serialize as their contents; decoding re-wraps in a fresh
 /// `Arc` (the share structure is a process-local artifact — the progress
 /// plane's broadcast `Arc<ProgressBatch<T>>` crosses the wire as the batch
-/// itself).
-impl<V: Wire> Wire for Arc<V> {
+/// itself). Values delivered through a broadcast fan-out skip the bytes
+/// entirely: [`Wire::from_shared`] downcasts the fan-out point's shared
+/// item back into the typed `Arc`, one reference bump, no copy.
+impl<V: Wire + Send + Sync + 'static> Wire for Arc<V> {
     fn encode(&self, buf: &mut Vec<u8>) {
         (**self).encode(buf);
     }
     fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
         Ok(Arc::new(V::decode(reader)?))
+    }
+    fn from_shared(shared: Arc<dyn Any + Send + Sync>) -> Option<Self> {
+        shared.downcast::<V>().ok()
     }
 }
 
@@ -385,6 +404,189 @@ impl<A: Wire, B: Wire> Wire for Product<A, B> {
     }
     fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
         Ok(Product::new(A::decode(reader)?, B::decode(reader)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Progress broadcast frames (per-process dedup).
+// ---------------------------------------------------------------------------
+
+/// The progress plane's batch payload — the same type as
+/// `progress::exchange::ProgressBatch`, aliased here so the codec and the
+/// net fabric can name it without importing the progress plane.
+pub type ProgressUpdates<T> = Vec<((Location, T), i64)>;
+
+/// One per-process progress broadcast frame (ROADMAP "broadcast dedup").
+///
+/// A `Progcaster` flush used to encode and ship `k` identical frames
+/// toward the `k` workers of a remote process; this record carries the
+/// batch ONCE, together with the sending worker and the destination-worker
+/// set, and the receiving fabric decodes it once and fans the decoded
+/// `Arc` out locally (`net::fabric::NetFabric::register_broadcast`) — so
+/// cross-process progress bandwidth scales with frontier changes and
+/// process count, not with destination worker count.
+pub struct ProgressBroadcast<T> {
+    /// Global index of the sending worker. Also present in the frame
+    /// header; carried in the payload so the record is self-contained
+    /// (and the fan-out point can cross-check the demux).
+    pub from: u32,
+    /// Destination global worker indices, ascending. Pooled: the fan-out
+    /// point iterates the set and drops the lease back into the decode
+    /// context's pool.
+    pub dests: Lease<Vec<u32>>,
+    /// The batch — shared exactly the way the in-process broadcast shares
+    /// it (one `Arc`, cloned per destination mailbox).
+    pub batch: Arc<ProgressUpdates<T>>,
+}
+
+/// Encodes a progress broadcast straight from its parts. The per-process
+/// sender path (`net::fabric::NetBroadcastSender`) uses this to avoid
+/// materializing a [`ProgressBroadcast`] per flush; the struct's own
+/// [`Wire::encode`] delegates here so there is exactly one wire layout.
+pub fn encode_progress_broadcast<T: Wire>(
+    from: u32,
+    dests: &[u32],
+    batch: &[((Location, T), i64)],
+    buf: &mut Vec<u8>,
+) {
+    from.encode(buf);
+    debug_assert!(dests.len() <= u32::MAX as usize);
+    (dests.len() as u32).encode(buf);
+    for dest in dests {
+        dest.encode(buf);
+    }
+    debug_assert!(batch.len() <= u32::MAX as usize, "batch too long for wire");
+    (batch.len() as u32).encode(buf);
+    for update in batch {
+        update.encode(buf);
+    }
+}
+
+/// Decode context for [`ProgressBroadcast`] (ROADMAP "pooled progress
+/// decode"): recycles the destination-set buffers and the batch `Vec`s
+/// *and* `Arc`s, so steady-state inbound progress decode performs no heap
+/// allocation once the pools are warm. One context is installed per
+/// broadcast channel and shared by every recv thread of the process —
+/// hence the mutex around the (producer-local) [`SharedPool`]; it is held
+/// only for checkout/track, never across a batch fill.
+pub struct ProgressDecodeContext<T> {
+    /// Destination-set buffers: checked out per frame, dropped by the
+    /// fan-out point after iterating.
+    dests: BufferPool<Vec<u32>>,
+    /// Batch reclamation window: a batch returns once every destination
+    /// worker has applied and dropped its `Arc` clone.
+    batches: Mutex<SharedPool<ProgressUpdates<T>>>,
+}
+
+/// Idle destination-set buffers retained per broadcast channel.
+const PROGRESS_DEST_POOL_SLOTS: usize = 8;
+
+/// In-flight decoded batches tracked for reclamation per broadcast
+/// channel (mirrors the send side's `BATCH_POOL_WINDOW`).
+const PROGRESS_BATCH_POOL_WINDOW: usize = 32;
+
+impl<T> Default for ProgressDecodeContext<T> {
+    fn default() -> Self {
+        ProgressDecodeContext {
+            dests: BufferPool::new(PROGRESS_DEST_POOL_SLOTS),
+            batches: Mutex::new(SharedPool::new(PROGRESS_BATCH_POOL_WINDOW)),
+        }
+    }
+}
+
+impl<T> ProgressDecodeContext<T> {
+    /// Reuse/allocation counters of the batch pool (tests, telemetry).
+    pub fn batch_pool_stats(&self) -> crate::buffer::PoolStats {
+        self.batches.lock().unwrap().stats()
+    }
+}
+
+/// `from: u32`, destination set (`u32` count + `u32` indices), then the
+/// batch (`u32` count + updates). With a [`ProgressDecodeContext`] in the
+/// reader, the destination set lands in a pooled buffer and the batch in a
+/// `SharedPool`-recycled `Vec` + `Arc`; without one (tests) both allocate
+/// plainly.
+impl<T: Wire + Send + Sync + 'static> Wire for ProgressBroadcast<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        encode_progress_broadcast(self.from, &self.dests, &self.batch, buf);
+    }
+
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let from = reader.u32()?;
+        let dest_count = reader.read_len()?;
+        let context = reader.context::<ProgressDecodeContext<T>>();
+        let mut dests = match context {
+            Some(context) => context.dests.checkout(),
+            None => Lease::unpooled(Vec::new()),
+        };
+        // As everywhere in the codec: never pre-allocate beyond the bytes
+        // actually present.
+        dests.reserve(dest_count.min(reader.remaining().max(1)));
+        for _ in 0..dest_count {
+            dests.push(reader.u32()?);
+        }
+        let update_count = reader.read_len()?;
+        let mut batch = match context {
+            Some(context) => context.batches.lock().unwrap().checkout(),
+            None => Arc::new(Vec::new()),
+        };
+        {
+            let updates = Arc::get_mut(&mut batch).expect("checked-out batch is unique");
+            updates.reserve(update_count.min(reader.remaining().max(1)));
+            for _ in 0..update_count {
+                updates.push(<((Location, T), i64)>::decode(reader)?);
+            }
+        }
+        if let Some(context) = context {
+            // Tracked only once fully decoded: a truncated frame's partial
+            // batch simply drops instead of entering the window.
+            context.batches.lock().unwrap().track(&batch);
+        }
+        Ok(ProgressBroadcast { from, dests, batch })
+    }
+
+    fn decode_context() -> Option<Box<dyn Any + Send>> {
+        Some(Box::new(ProgressDecodeContext::<T>::default()))
+    }
+}
+
+/// A wire record that ONE frame delivers to MANY local workers: the
+/// fan-out point (`net::fabric::NetFabric::register_broadcast`) decodes it
+/// once — with [`BroadcastWire::fan_out_context`], which unlike
+/// [`Wire::decode_context`] must be `Sync` because every recv thread of
+/// the process shares it — and clones the shared item into each
+/// destination worker's inbox.
+pub trait BroadcastWire: Wire + Send + 'static {
+    /// The shared per-destination payload.
+    type Item: Any + Send + Sync;
+
+    /// The decode context installed at the fan-out point.
+    fn fan_out_context() -> Option<Box<dyn Any + Send + Sync>> {
+        None
+    }
+
+    /// The sending (global) worker — must agree with the frame header's
+    /// `from`, which the fan-out point cross-checks.
+    fn sender(&self) -> usize;
+
+    /// Splits the record into the destination worker set and the shared
+    /// item cloned into each destination inbox.
+    fn fan_out(self) -> (Lease<Vec<u32>>, Arc<Self::Item>);
+}
+
+impl<T: Wire + Send + Sync + 'static> BroadcastWire for ProgressBroadcast<T> {
+    type Item = ProgressUpdates<T>;
+
+    fn fan_out_context() -> Option<Box<dyn Any + Send + Sync>> {
+        Some(Box::new(ProgressDecodeContext::<T>::default()))
+    }
+
+    fn sender(&self) -> usize {
+        self.from as usize
+    }
+
+    fn fan_out(self) -> (Lease<Vec<u32>>, Arc<ProgressUpdates<T>>) {
+        (self.dests, self.batch)
     }
 }
 
@@ -744,6 +946,82 @@ mod tests {
         assert!(reader.context::<BufferPool<Vec<u32>>>().is_none());
         let plain = WireReader::new(&bytes);
         assert!(plain.context::<BufferPool<Vec<u64>>>().is_none());
+    }
+
+    /// Seeded progress broadcast round trips, plain and pooled: the
+    /// record is its own inverse, and the pooled path must produce the
+    /// same values out of recycled buffers.
+    #[test]
+    fn progress_broadcast_round_trips_seeded() {
+        property("progress_broadcast_round_trip", 25, |_case, rng| {
+            let dest_count = rng.range(1, 9) as usize;
+            let dests: Vec<u32> = (0..dest_count).map(|i| 4 + i as u32).collect();
+            let len = if rng.chance(0.15) { 0 } else { rng.range(1, 64) as usize };
+            let batch: Vec<((Location, u64), i64)> = (0..len)
+                .map(|_| {
+                    let loc = Location::source(rng.below(32) as usize, rng.below(4) as usize);
+                    ((loc, rng.next_u64()), rng.next_u64() as i64)
+                })
+                .collect();
+            let record = ProgressBroadcast {
+                from: rng.below(8) as u32,
+                dests: Lease::unpooled(dests.clone()),
+                batch: Arc::new(batch.clone()),
+            };
+            let mut buf = Vec::new();
+            record.encode(&mut buf);
+
+            let mut reader = WireReader::new(&buf);
+            let plain = ProgressBroadcast::<u64>::decode(&mut reader).expect("decode");
+            assert!(reader.is_empty(), "decode must consume exactly the encoding");
+            assert_eq!(plain.from, record.from);
+            assert_eq!(&*plain.dests, &dests);
+            assert_eq!(&*plain.batch, &batch);
+
+            let context = ProgressDecodeContext::<u64>::default();
+            let mut reader = WireReader::with_context(&buf, &context);
+            let pooled = ProgressBroadcast::<u64>::decode(&mut reader).expect("pooled decode");
+            assert!(reader.is_empty());
+            assert_eq!(pooled.from, record.from);
+            assert_eq!(&*pooled.dests, &dests);
+            assert_eq!(&*pooled.batch, &batch);
+        });
+    }
+
+    /// The pooled decode context recycles batch `Vec`s *and* `Arc`s once
+    /// every consumer clone drops (the "pooled progress decode" claim at
+    /// its smallest scale).
+    #[test]
+    fn progress_broadcast_pooled_decode_recycles() {
+        let record = ProgressBroadcast {
+            from: 3,
+            dests: Lease::unpooled(vec![1, 2]),
+            batch: Arc::new(vec![((Location::source(0, 0), 7u64), 1i64)]),
+        };
+        let mut buf = Vec::new();
+        record.encode(&mut buf);
+        let context = ProgressDecodeContext::<u64>::default();
+        for _ in 0..10 {
+            let mut reader = WireReader::with_context(&buf, &context);
+            let back = ProgressBroadcast::<u64>::decode(&mut reader).expect("decode");
+            assert_eq!(&*back.batch, &*record.batch);
+            // Dropping `back` releases the batch Arc and the dests lease
+            // for the next decode to reclaim.
+        }
+        let stats = context.batch_pool_stats();
+        assert!(stats.reused >= 9, "batch reuse must dominate: {stats:?}");
+    }
+
+    /// `from_shared` is the typed exit of the broadcast fan-out: the right
+    /// `Arc` type downcasts, anything else is rejected.
+    #[test]
+    fn from_shared_downcasts_by_type() {
+        let shared: Arc<dyn Any + Send + Sync> = Arc::new(vec![5u64, 6]);
+        let back = <Arc<Vec<u64>> as Wire>::from_shared(shared.clone()).expect("downcast");
+        assert_eq!(*back, vec![5, 6]);
+        assert!(<Arc<Vec<u32>> as Wire>::from_shared(shared).is_none());
+        // Non-broadcast types reject by default.
+        assert!(u64::from_shared(Arc::new(7u64)).is_none());
     }
 
     // Seeded-random value round trips across the main record shapes.

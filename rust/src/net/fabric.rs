@@ -14,6 +14,28 @@
 //! arrives before it. See the [`crate::net`] module docs for why this is
 //! all the timestamp-token protocol needs.
 //!
+//! Broadcast dedup: a progress batch bound for the `k` workers of a
+//! remote process crosses the wire as ONE
+//! [`ProgressBroadcast`](super::codec::ProgressBroadcast) frame
+//! (header `to` = [`BROADCAST_DEST`]), sent by the per-process
+//! [`NetBroadcastSender`]. The receiving side decodes it ONCE — through
+//! the channel's registered fan-out decoder
+//! ([`NetFabric::register_broadcast`]) and its pooled decode context —
+//! and clones the decoded `Arc` into each destination worker's inbox.
+//! **Fan-out FIFO obligation**: per-sender FIFO must survive the fan-out
+//! point, and it does, structurally — a sender's broadcast frames arrive
+//! on its process's single ordered stream, are decoded by that link's one
+//! recv thread in arrival order, and are appended to every destination
+//! inbox before the next frame is touched. The only concurrent writer is
+//! the registration path draining frames that arrived *before* the
+//! channel's decoder existed; it runs under the broadcast-table lock,
+//! which the recv thread also takes until it has cached the decoder, so
+//! parked frames are fanned out before any later frame on the same link.
+//! The destination set always names every worker of the process, so no
+//! mailbox is skipped: each observer still applies a prefix of each
+//! sender's batch stream, which is all the conservatism argument in
+//! [`crate::progress::exchange`] requires.
+//!
 //! Backpressure: the outbound queue is bounded. [`NetSender::send`] never
 //! blocks — a full queue hands the message back exactly like a full SPSC
 //! ring ([`RingSendError::Full`]), so the existing staging/spill machinery
@@ -34,7 +56,10 @@
 //! decode context — the cross-process path allocates only what the codec
 //! itself requires, and the intra-process path is untouched.
 
-use super::codec::{FrameHeader, Wire, WireReader, MAX_FRAME_PAYLOAD};
+use super::codec::{
+    encode_progress_broadcast, BroadcastWire, FrameHeader, ProgressUpdates, Wire, WireError,
+    WireReader, MAX_FRAME_PAYLOAD,
+};
 use super::transport::{Frame, FrameRx, FrameTx, Link, NetError};
 use crate::buffer::{BufferPool, Lease};
 use crate::worker::ring::RingSendError;
@@ -46,6 +71,75 @@ use std::sync::mpsc::TryRecvError;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::{JoinHandle, Thread};
 use std::time::{Duration, Instant};
+
+/// The `FrameHeader::to` sentinel marking a per-process broadcast frame:
+/// the destination-worker set lives in the payload, not the header. (On
+/// the wire `to` is a `u32`, so the sentinel is `u32::MAX`; real worker
+/// indices stay far below it.)
+pub const BROADCAST_DEST: usize = u32::MAX as usize;
+
+/// Prefix-sum view of a cluster's worker layout: process `p` hosts the
+/// contiguous global index block `[base(p), base(p) + workers(p))`, with
+/// possibly UNEQUAL block sizes (heterogeneous shapes like 2+1+1 are
+/// first-class). One implementation of the index arithmetic, shared by
+/// [`NetFabric`] and the worker fabric.
+#[derive(Clone, Debug)]
+pub struct ClusterShape {
+    /// `base[p]` is process `p`'s first worker; the last entry is the
+    /// total worker count.
+    base: Vec<usize>,
+}
+
+impl ClusterShape {
+    /// Builds the prefix sums for `shape` (workers per process). Every
+    /// process must host at least one worker — `Config::shape()` clamps
+    /// zero entries before they reach here.
+    pub fn new(shape: &[usize]) -> Self {
+        assert!(!shape.is_empty(), "a cluster has at least one process");
+        let mut base = Vec::with_capacity(shape.len() + 1);
+        base.push(0);
+        for workers in shape {
+            assert!(*workers > 0, "every process must host at least one worker");
+            base.push(base.last().expect("non-empty") + workers);
+        }
+        ClusterShape { base }
+    }
+
+    /// Total processes.
+    #[inline]
+    pub fn processes(&self) -> usize {
+        self.base.len() - 1
+    }
+
+    /// Total workers across every process.
+    #[inline]
+    pub fn peers(&self) -> usize {
+        *self.base.last().expect("non-empty")
+    }
+
+    /// The process hosting a global worker index.
+    #[inline]
+    pub fn process_of(&self, worker: usize) -> usize {
+        debug_assert!(worker < self.peers(), "worker index out of range");
+        let mut process = 0;
+        while self.base[process + 1] <= worker {
+            process += 1;
+        }
+        process
+    }
+
+    /// The global index of process `p`'s first worker.
+    #[inline]
+    pub fn base(&self, process: usize) -> usize {
+        self.base[process]
+    }
+
+    /// Workers hosted by process `p`.
+    #[inline]
+    pub fn workers(&self, process: usize) -> usize {
+        self.base[process + 1] - self.base[process]
+    }
+}
 
 /// How long a send thread sleeps waiting for frames before re-checking
 /// shutdown flags.
@@ -67,6 +161,10 @@ pub struct NetStats {
     frames_recv: AtomicU64,
     bytes_recv: AtomicU64,
     send_stalls: AtomicU64,
+    progress_frames_sent: AtomicU64,
+    progress_bytes_sent: AtomicU64,
+    progress_frames_recv: AtomicU64,
+    progress_batches_recv: AtomicU64,
 }
 
 /// A point-in-time snapshot of one worker's [`NetStats`].
@@ -83,6 +181,21 @@ pub struct NetTelemetry {
     /// Sends rejected by a full outbound queue (and retried by the staging
     /// machinery).
     pub send_queue_stalls: u64,
+    /// *Physical* progress broadcast frames this worker enqueued — one per
+    /// (flush, remote process) under broadcast dedup, NOT one per remote
+    /// worker. Included in `frames_sent`.
+    pub progress_frames_sent: u64,
+    /// Bytes those progress frames carried. Included in `bytes_sent`.
+    pub progress_bytes_sent: u64,
+    /// Physical progress broadcast frames whose fan-out was attributed to
+    /// this worker (each inbound frame is counted once, toward its first
+    /// destination; included in `frames_recv`).
+    pub progress_frames_recv: u64,
+    /// *Logical* progress batch deliveries fanned out into this worker's
+    /// inboxes. With dedup engaged, a process's sum over workers is
+    /// exactly `workers-in-process × progress frames received` — the
+    /// dedup factor the cluster tests assert.
+    pub progress_batches_recv: u64,
 }
 
 impl NetStats {
@@ -93,6 +206,10 @@ impl NetStats {
             frames_recv: self.frames_recv.load(Ordering::Relaxed),
             bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
             send_queue_stalls: self.send_stalls.load(Ordering::Relaxed),
+            progress_frames_sent: self.progress_frames_sent.load(Ordering::Relaxed),
+            progress_bytes_sent: self.progress_bytes_sent.load(Ordering::Relaxed),
+            progress_frames_recv: self.progress_frames_recv.load(Ordering::Relaxed),
+            progress_batches_recv: self.progress_batches_recv.load(Ordering::Relaxed),
         }
     }
 }
@@ -167,9 +284,19 @@ impl OutQueue {
     }
 }
 
-/// One endpoint's inbound payload queue, filled by the recv thread.
+/// One demuxed delivery: the raw encoded payload of a point-to-point
+/// frame, or the shared item of a broadcast frame — decoded once at the
+/// fan-out point and handed to each destination as one `Arc` clone (no
+/// bytes, no box, no re-decode).
+enum InboxItem {
+    Bytes(Lease<Vec<u8>>),
+    Shared(Arc<dyn Any + Send + Sync>),
+}
+
+/// One endpoint's inbound queue, filled by the recv thread (and, for
+/// broadcast channels, the fan-out point).
 struct Inbox {
-    queue: Mutex<VecDeque<Lease<Vec<u8>>>>,
+    queue: Mutex<VecDeque<InboxItem>>,
 }
 
 impl Inbox {
@@ -180,11 +307,36 @@ impl Inbox {
 
 type Key = (usize, usize, usize); // (channel, from, to)
 
+/// A recv thread's local demux cache: inbox handles resolved once per key
+/// so the steady-state frame path never takes the fabric-wide registry
+/// lock.
+type InboxCache = HashMap<Key, Arc<Inbox>>;
+
+/// A registered broadcast channel's fan-out decoder: parses one frame
+/// payload (with the channel's shared decode context) and distributes the
+/// decoded item through the caller's demux cache. Shared by every recv
+/// thread, called one frame at a time per link.
+type FanOutFn =
+    dyn Fn(&NetFabric, &FrameHeader, &[u8], &mut InboxCache) -> Result<(), WireError>
+        + Send
+        + Sync;
+
+/// The broadcast channel registry (see [`NetFabric::register_broadcast`]).
+#[derive(Default)]
+struct BroadcastTable {
+    decoders: HashMap<usize, Arc<FanOutFn>>,
+    /// Broadcast frames that arrived before their channel's decoder was
+    /// registered, in arrival order per channel. Drained — under this
+    /// table's lock, so no later frame can overtake them — by the first
+    /// registration.
+    parked: HashMap<usize, Vec<(FrameHeader, Lease<Vec<u8>>)>>,
+}
+
 /// The cross-process fabric of one process (see module docs).
 pub struct NetFabric {
     process: usize,
-    processes: usize,
-    workers_per_process: usize,
+    /// The cluster's worker layout (index blocks per process).
+    shape: ClusterShape,
     /// Outbound queue per process (`None` at `process`).
     out: Vec<Option<Arc<OutQueue>>>,
     /// Set once a remote process's stream has ended (orderly or not):
@@ -204,6 +356,10 @@ pub struct NetFabric {
     /// local cache, so the steady-state frame path takes only the target
     /// inbox's own lock, never this registry's.
     inboxes: Mutex<HashMap<Key, Arc<Inbox>>>,
+    /// Broadcast channel registry: fan-out decoders plus frames parked
+    /// before registration. Locked per frame only until a recv thread has
+    /// cached its channel's decoder.
+    broadcasts: Mutex<BroadcastTable>,
     /// Per-local-worker counters.
     stats: Vec<Arc<NetStats>>,
     /// Per-local-worker park/unpark targets (registered by the owning
@@ -216,22 +372,26 @@ pub struct NetFabric {
 }
 
 impl NetFabric {
-    /// Builds the net fabric for `process` of `processes`, spawning one
-    /// send and one recv thread per connected link. `links[p]` is the
-    /// transport pair toward process `p` (`None` at `process`);
-    /// `queue_capacity` bounds each outbound queue (frames).
+    /// Builds the net fabric for `process` of the cluster shaped by
+    /// `shape` (`shape[p]` workers hosted by process `p` — unequal counts
+    /// are first-class), spawning one send and one recv thread per
+    /// connected link. `links[p]` is the transport pair toward process
+    /// `p` (`None` at `process`); `queue_capacity` bounds each outbound
+    /// queue (frames).
     pub fn new(
         process: usize,
-        processes: usize,
-        workers_per_process: usize,
+        shape: Vec<usize>,
         links: Vec<Option<Link>>,
         queue_capacity: usize,
     ) -> Arc<Self> {
+        let shape = ClusterShape::new(&shape);
+        let processes = shape.processes();
+        assert!(process < processes, "process index out of range");
         assert_eq!(links.len(), processes, "one link slot per process");
+        let local_workers = shape.workers(process);
         let fabric = Arc::new(NetFabric {
             process,
-            processes,
-            workers_per_process,
+            shape,
             out: links
                 .iter()
                 .map(|l| l.as_ref().map(|_| Arc::new(OutQueue::new(queue_capacity))))
@@ -243,8 +403,9 @@ impl NetFabric {
             // growing its inboxes without limit.
             inbound_hwm: queue_capacity.saturating_mul(4).max(1024),
             inboxes: Mutex::new(HashMap::new()),
-            stats: (0..workers_per_process).map(|_| Arc::new(NetStats::default())).collect(),
-            wakers: (0..workers_per_process).map(|_| OnceLock::new()).collect(),
+            broadcasts: Mutex::new(BroadcastTable::default()),
+            stats: (0..local_workers).map(|_| Arc::new(NetStats::default())).collect(),
+            wakers: (0..local_workers).map(|_| OnceLock::new()).collect(),
             stop: Arc::new(AtomicBool::new(false)),
             threads: Mutex::new(Vec::new()),
         });
@@ -278,13 +439,32 @@ impl NetFabric {
 
     /// Total processes in the cluster.
     pub fn processes(&self) -> usize {
-        self.processes
+        self.shape.processes()
     }
 
-    /// The process a global worker index belongs to (contiguous blocks).
+    /// The process a global worker index belongs to (contiguous blocks of
+    /// possibly unequal size).
     #[inline]
     pub fn process_of(&self, worker: usize) -> usize {
-        worker / self.workers_per_process
+        self.shape.process_of(worker)
+    }
+
+    /// The global index of process `p`'s first worker.
+    #[inline]
+    pub fn process_base(&self, process: usize) -> usize {
+        self.shape.base(process)
+    }
+
+    /// Workers hosted by process `p`.
+    #[inline]
+    pub fn process_workers(&self, process: usize) -> usize {
+        self.shape.workers(process)
+    }
+
+    /// The global index of this process's first worker.
+    #[inline]
+    fn local_base(&self) -> usize {
+        self.shape.base(self.process)
     }
 
     /// Registers `thread` as the wakeup target for local worker slot
@@ -313,7 +493,7 @@ impl NetFabric {
     ) -> NetSender<M> {
         let dest = self.process_of(to);
         assert_ne!(dest, self.process, "net sender for a local destination");
-        let local = from - self.process * self.workers_per_process;
+        let local = from - self.local_base();
         NetSender {
             queue: self.out[dest].as_ref().expect("link to destination process").clone(),
             chan,
@@ -345,6 +525,133 @@ impl NetFabric {
         }
     }
 
+    /// Claims the per-process broadcast send endpoint of `chan` from local
+    /// worker `from` toward EVERY worker of remote process `dest_process`:
+    /// the broadcast-dedup path. One [`NetBroadcastSender::send`] ships
+    /// one frame; the destination fabric fans it out locally.
+    pub fn broadcast_sender<T: Wire>(
+        self: &Arc<Self>,
+        chan: usize,
+        from: usize,
+        dest_process: usize,
+    ) -> NetBroadcastSender<T> {
+        assert_ne!(dest_process, self.process, "broadcast sender for the local process");
+        let local = from - self.local_base();
+        let first = self.shape.base(dest_process);
+        let dests: Vec<u32> =
+            (first..first + self.shape.workers(dest_process)).map(|w| w as u32).collect();
+        NetBroadcastSender {
+            queue: self.out[dest_process].as_ref().expect("link to destination process").clone(),
+            chan,
+            from,
+            dests,
+            pool: BufferPool::new(SEND_POOL_SLOTS),
+            stats: self.stats[local].clone(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Registers `chan` as a broadcast channel carrying `B` frames: every
+    /// inbound frame on it is decoded ONCE — with `B`'s shared, pooled
+    /// fan-out context — and the decoded item is cloned into each
+    /// destination worker's inbox, in the frame's destination-set order.
+    ///
+    /// Idempotent (every local worker registers on claiming its progress
+    /// endpoints; the first wins). Frames that arrived before the first
+    /// registration were parked by the recv threads and are fanned out
+    /// here, in arrival order, under the table lock — so no later frame
+    /// on the same link can overtake them (the fan-out FIFO obligation in
+    /// the module docs).
+    pub fn register_broadcast<B: BroadcastWire>(&self, chan: usize) {
+        let mut table = self.broadcasts.lock().unwrap();
+        if table.decoders.contains_key(&chan) {
+            return;
+        }
+        let context = B::fan_out_context();
+        let decode: Arc<FanOutFn> = Arc::new(move |fabric, header, payload, cache| {
+            let mut reader = match &context {
+                Some(context) => {
+                    let context: &(dyn Any + Send) = &**context;
+                    WireReader::with_context(payload, context)
+                }
+                None => WireReader::new(payload),
+            };
+            let record = B::decode(&mut reader)?;
+            if !reader.is_empty() {
+                return Err(WireError::Malformed("trailing bytes after broadcast record"));
+            }
+            debug_assert_eq!(
+                record.sender(),
+                header.from,
+                "broadcast payload sender disagrees with the frame header"
+            );
+            let (dests, item) = record.fan_out();
+            fabric.fan_out(header, &dests, item, cache);
+            Ok(())
+        });
+        if let Some(parked) = table.parked.remove(&chan) {
+            let mut cache = InboxCache::new();
+            for (header, payload) in parked {
+                // Release the park-time inbound-depth charge (the fan-out
+                // below re-charges one unit per destination delivery).
+                self.inbound_depth[self.process_of(header.from)]
+                    .fetch_sub(1, Ordering::Relaxed);
+                if let Err(e) = (*decode)(self, &header, &payload, &mut cache) {
+                    panic!("net: malformed broadcast frame payload: {e}");
+                }
+            }
+        }
+        table.decoders.insert(chan, decode);
+    }
+
+    /// Distributes one decoded broadcast item: an `Arc` clone into each
+    /// destination worker's inbox, wakes included. Called by the link's
+    /// recv thread (or, for parked frames, the registering worker under
+    /// the broadcast-table lock), one frame at a time per link, which is
+    /// what preserves per-sender FIFO per mailbox. Inbox handles resolve
+    /// through the caller's demux cache, so the steady state touches only
+    /// each inbox's own lock, never the fabric-wide registry.
+    fn fan_out(
+        &self,
+        header: &FrameHeader,
+        dests: &[u32],
+        item: Arc<dyn Any + Send + Sync>,
+        cache: &mut InboxCache,
+    ) {
+        let peer = self.process_of(header.from);
+        let depth = &self.inbound_depth[peer];
+        let base = self.local_base();
+        let bytes = (header.len + super::codec::FRAME_HEADER_BYTES) as u64;
+        // The physical frame is counted once, toward its first
+        // destination; every destination's logical delivery is counted in
+        // `progress_batches_recv` (their ratio is the dedup factor).
+        let mut frame_counted = false;
+        for &dest in dests {
+            let dest = dest as usize;
+            debug_assert_eq!(
+                self.process_of(dest),
+                self.process,
+                "broadcast destination is not hosted by this process"
+            );
+            let local = dest - base;
+            let stats = &self.stats[local];
+            if !frame_counted {
+                stats.frames_recv.fetch_add(1, Ordering::Relaxed);
+                stats.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
+                stats.progress_frames_recv.fetch_add(1, Ordering::Relaxed);
+                frame_counted = true;
+            }
+            stats.progress_batches_recv.fetch_add(1, Ordering::Relaxed);
+            let key = (header.channel, header.from, dest);
+            let inbox = cache.entry(key).or_insert_with(|| self.inbox(key));
+            depth.fetch_add(1, Ordering::Relaxed);
+            inbox.queue.lock().unwrap().push_back(InboxItem::Shared(item.clone()));
+            if let Some(thread) = self.wakers[local].get() {
+                thread.unpark();
+            }
+        }
+    }
+
     /// The inbox for `key`, created on first touch (by either the claiming
     /// endpoint or the recv thread — frames can arrive before the local
     /// graph construction reaches the channel).
@@ -354,12 +661,16 @@ impl NetFabric {
 
     /// The recv-thread body for the link from `peer`.
     fn recv_loop(self: Arc<Self>, peer: usize, mut rx: Box<dyn FrameRx>) {
-        let base = self.process * self.workers_per_process;
+        let base = self.local_base();
         let depth = self.inbound_depth[peer].clone();
         let mut stop_seen_at: Option<Instant> = None;
         // Recv-thread-local demux cache: the shared registry mutex is only
         // taken the first time a key is seen, not once per frame.
         let mut known: HashMap<Key, Arc<Inbox>> = HashMap::new();
+        // Same for broadcast fan-out decoders: the table lock is taken per
+        // frame only until the channel's decoder is cached (which also
+        // guarantees any parked frames were fanned out first).
+        let mut fanout: HashMap<usize, Arc<FanOutFn>> = HashMap::new();
         loop {
             if self.stop.load(Ordering::Acquire) {
                 // Linger briefly so a slower peer can finish its stream
@@ -379,8 +690,51 @@ impl NetFabric {
             let this = &self;
             let depth = &depth;
             let known = &mut known;
+            let fanout = &mut fanout;
             let result = rx.recv(&mut |header, payload| {
                 debug_assert_eq!(this.process_of(header.from), peer, "frame from wrong link");
+                if header.to == BROADCAST_DEST {
+                    // A per-process broadcast frame: decode once, fan the
+                    // shared item out to its destination-worker set.
+                    if let Some(decode) = fanout.get(&header.channel) {
+                        if let Err(e) = (**decode)(this, &header, &payload, known) {
+                            // Malformed past the handshake is a protocol
+                            // bug, not recoverable input.
+                            panic!("net: malformed broadcast frame payload: {e}");
+                        }
+                        return;
+                    }
+                    let mut table = this.broadcasts.lock().unwrap();
+                    let registered = table.decoders.get(&header.channel).cloned();
+                    match registered {
+                        Some(decode) => {
+                            // Seeing the decoder under the lock means any
+                            // parked predecessors were already fanned out.
+                            drop(table);
+                            if let Err(e) = (*decode)(this, &header, &payload, known) {
+                                panic!("net: malformed broadcast frame payload: {e}");
+                            }
+                            fanout.insert(header.channel, decode);
+                        }
+                        None => {
+                            // No decoder yet (graph construction has not
+                            // reached the channel): park in arrival order —
+                            // under the lock, so a concurrent registration
+                            // cannot drain the park list between our check
+                            // and our push. A parked frame counts toward
+                            // this link's inbound depth (released when the
+                            // registration replays it), so a peer that
+                            // floods before local construction finishes
+                            // hits the high-water mark and stalls on TCP
+                            // backpressure instead of growing the park
+                            // list without bound.
+                            depth.fetch_add(1, Ordering::Relaxed);
+                            let parked = table.parked.entry(header.channel).or_default();
+                            parked.push((header, payload));
+                        }
+                    }
+                    return;
+                }
                 debug_assert_eq!(
                     this.process_of(header.to),
                     this.process,
@@ -394,7 +748,7 @@ impl NetFabric {
                 let key = (header.channel, header.from, header.to);
                 let inbox = known.entry(key).or_insert_with(|| this.inbox(key));
                 depth.fetch_add(1, Ordering::Relaxed);
-                inbox.queue.lock().unwrap().push_back(payload);
+                inbox.queue.lock().unwrap().push_back(InboxItem::Bytes(payload));
                 if let Some(thread) = this.wakers[local].get() {
                     thread.unpark();
                 }
@@ -531,8 +885,81 @@ impl<M: Wire + Send + 'static> NetSender<M> {
     }
 }
 
+/// The per-process progress broadcast sender (broadcast dedup): encodes
+/// one [`ProgressBroadcast`](super::codec::ProgressBroadcast) frame —
+/// sender, destination-worker set, batch — toward ONE remote process,
+/// where the fabric fans it out locally. A flush therefore transmits `p`
+/// frames for `p` remote processes, not `p·k` for `k` workers each.
+/// Mirrors the ring `Full` / `Disconnected` contract so the progcaster's
+/// FIFO spill machinery applies unchanged.
+pub struct NetBroadcastSender<T> {
+    queue: Arc<OutQueue>,
+    chan: usize,
+    from: usize,
+    /// Destination (global) worker indices — every worker of the target
+    /// process, fixed at claim time.
+    dests: Vec<u32>,
+    pool: BufferPool<Vec<u8>>,
+    stats: Arc<NetStats>,
+    _marker: PhantomData<fn(T)>,
+}
+
+impl<T: Wire> NetBroadcastSender<T> {
+    /// Encodes and enqueues one broadcast frame carrying `batch`, or hands
+    /// the `Arc` back on backpressure (`Full`) or a dead link
+    /// (`Disconnected`), exactly like a ring mailbox send.
+    pub fn send(
+        &mut self,
+        batch: Arc<ProgressUpdates<T>>,
+    ) -> Result<(), RingSendError<Arc<ProgressUpdates<T>>>> {
+        // Probe before paying the encode (see `NetSender::send`).
+        match self.queue.status() {
+            (_, true) => return Err(RingSendError::Disconnected(batch)),
+            (true, _) => {
+                self.stats.send_stalls.fetch_add(1, Ordering::Relaxed);
+                return Err(RingSendError::Full(batch));
+            }
+            _ => {}
+        }
+        let mut payload = self.pool.checkout();
+        encode_progress_broadcast(self.from as u32, &self.dests, &batch, &mut payload);
+        assert!(
+            payload.len() <= MAX_FRAME_PAYLOAD,
+            "progress broadcast exceeds MAX_FRAME_PAYLOAD ({} > {})",
+            payload.len(),
+            MAX_FRAME_PAYLOAD
+        );
+        let bytes = (payload.len() + super::codec::FRAME_HEADER_BYTES) as u64;
+        match self.queue.push(Frame::new(self.chan, self.from, BROADCAST_DEST, payload)) {
+            Ok(()) => {
+                self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+                self.stats.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+                self.stats.progress_frames_sent.fetch_add(1, Ordering::Relaxed);
+                self.stats.progress_bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(RingSendError::Full(_frame)) => {
+                self.stats.send_stalls.fetch_add(1, Ordering::Relaxed);
+                Err(RingSendError::Full(batch))
+            }
+            Err(RingSendError::Disconnected(_frame)) => Err(RingSendError::Disconnected(batch)),
+        }
+    }
+
+    /// Frames the outbound queue admits before reporting `Full`.
+    pub fn capacity(&self) -> usize {
+        self.queue.capacity
+    }
+
+    /// The destination-worker set this endpoint covers (tests).
+    pub fn dests(&self) -> &[u32] {
+        &self.dests
+    }
+}
+
 /// The cross-process counterpart of a `RingReceiver`: pops demuxed
-/// payloads from this endpoint's inbox and decodes them, mirroring
+/// payloads from this endpoint's inbox and decodes them — or, on a
+/// broadcast channel, receives the pre-decoded shared item — mirroring
 /// `try_recv`'s `Empty` / `Disconnected` contract.
 pub struct NetReceiver<M> {
     inbox: Arc<Inbox>,
@@ -551,9 +978,9 @@ impl<M: Wire + Send + 'static> NetReceiver<M> {
     /// idle; `Disconnected` once the sending process's stream has ended
     /// *and* the inbox is drained.
     pub fn try_recv(&mut self) -> Result<M, TryRecvError> {
-        let payload = self.inbox.queue.lock().unwrap().pop_front();
-        match payload {
-            Some(payload) => {
+        let item = self.inbox.queue.lock().unwrap().pop_front();
+        match item {
+            Some(InboxItem::Bytes(payload)) => {
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 let mut reader = match &self.context {
                     Some(context) => WireReader::with_context(&payload, &**context),
@@ -571,6 +998,15 @@ impl<M: Wire + Send + 'static> NetReceiver<M> {
                         );
                         Ok(m)
                     }
+                }
+            }
+            Some(InboxItem::Shared(item)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                // The fan-out point already decoded the frame; this is one
+                // Arc downcast, no bytes touched.
+                match M::from_shared(item) {
+                    Some(m) => Ok(m),
+                    None => panic!("net: broadcast item type mismatch on this channel"),
                 }
             }
             None => {
@@ -595,24 +1031,29 @@ mod tests {
     use super::*;
     use crate::net::transport::loopback;
 
-    /// Two single-worker "processes" wired over the loopback transport.
-    fn pair(capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
+    /// Two "processes" of the given shape wired over the loopback
+    /// transport.
+    fn pair_shaped(shape: Vec<usize>, capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
+        assert_eq!(shape.len(), 2);
         let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
         let a = NetFabric::new(
             0,
-            2,
-            1,
+            shape.clone(),
             vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as _))],
             capacity,
         );
         let b = NetFabric::new(
             1,
-            2,
-            1,
+            shape,
             vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as _)), None],
             capacity,
         );
         (a, b)
+    }
+
+    /// Two single-worker "processes" wired over the loopback transport.
+    fn pair(capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
+        pair_shaped(vec![1, 1], capacity)
     }
 
     fn recv_blocking<M: Wire + Send + 'static>(rx: &mut NetReceiver<M>) -> M {
@@ -757,5 +1198,138 @@ mod tests {
         assert_eq!(recv_blocking(&mut rx), 77);
         a.shutdown();
         b.shutdown();
+    }
+
+    // -- Broadcast dedup: per-process frames with local fan-out --
+
+    use crate::net::codec::ProgressBroadcast;
+    use crate::net::transport::{chaos, ChaosConfig};
+    use crate::progress::location::Location;
+
+    type Batch = Arc<ProgressUpdates<u64>>;
+
+    fn update(t: u64, d: i64) -> ((Location, u64), i64) {
+        ((Location::source(0, 0), t), d)
+    }
+
+    /// The acceptance shape at unit scale: ONE `send` puts ONE frame on
+    /// the wire (telemetry-pinned), and the destination fabric fans the
+    /// decoded batch out to every destination worker — all of them
+    /// observing the SAME `Arc`, not copies.
+    #[test]
+    fn one_broadcast_frame_fans_out_to_every_destination() {
+        let (a, b) = pair_shaped(vec![1, 2], 64);
+        b.register_broadcast::<ProgressBroadcast<u64>>(9);
+        let mut tx = a.broadcast_sender::<u64>(9, 0, 1);
+        assert_eq!(tx.dests(), &[1, 2], "destination set must cover process 1's workers");
+        let mut rx1 = b.receiver::<Batch>(9, 0, 1);
+        let mut rx2 = b.receiver::<Batch>(9, 0, 2);
+
+        tx.send(Arc::new(vec![update(5, 1)])).unwrap();
+        let got1 = recv_blocking(&mut rx1);
+        let got2 = recv_blocking(&mut rx2);
+        assert_eq!(*got1, vec![update(5, 1)]);
+        assert!(Arc::ptr_eq(&got1, &got2), "fan-out must share one decoded Arc");
+
+        // Dedup telemetry: one physical frame out, one physical frame in,
+        // two logical deliveries (the k = 2 dedup factor).
+        assert_eq!(a.telemetry(0).progress_frames_sent, 1);
+        assert_eq!(a.telemetry(0).frames_sent, 1);
+        assert!(a.telemetry(0).progress_bytes_sent > 0);
+        let rx_frames: u64 = (0..2).map(|w| b.telemetry(w).progress_frames_recv).sum();
+        let rx_batches: u64 = (0..2).map(|w| b.telemetry(w).progress_batches_recv).sum();
+        assert_eq!(rx_frames, 1, "one physical broadcast frame");
+        assert_eq!(rx_batches, 2, "one logical delivery per destination worker");
+        a.shutdown();
+        b.shutdown();
+    }
+
+    /// Broadcast frames that arrive before any local worker registered the
+    /// channel's decoder are parked and replayed — in arrival order — by
+    /// the registration, so late graph construction cannot reorder a
+    /// sender's stream.
+    #[test]
+    fn broadcast_frames_before_registration_replay_in_order() {
+        let (a, b) = pair_shaped(vec![1, 2], 64);
+        let mut tx = a.broadcast_sender::<u64>(7, 0, 1);
+        for t in 0..3u64 {
+            tx.send(Arc::new(vec![update(t, 1)])).unwrap();
+        }
+        // Let the frames cross before anyone registers the channel.
+        std::thread::sleep(Duration::from_millis(100));
+        b.register_broadcast::<ProgressBroadcast<u64>>(7);
+        let mut rx1 = b.receiver::<Batch>(7, 0, 1);
+        let mut rx2 = b.receiver::<Batch>(7, 0, 2);
+        for t in 0..3u64 {
+            assert_eq!(*recv_blocking(&mut rx1), vec![update(t, 1)]);
+            assert_eq!(*recv_blocking(&mut rx2), vec![update(t, 1)]);
+        }
+        a.shutdown();
+        b.shutdown();
+    }
+
+    /// Seeded property: per-sender FIFO survives the fan-out point even
+    /// when the transport adversarially tears, delays, and coalesces the
+    /// byte stream (the chaos transport) — every destination mailbox sees
+    /// every sender's batches in send order, none skipped.
+    #[test]
+    fn broadcast_fan_out_keeps_fifo_over_chaos_transport() {
+        crate::testing::property("broadcast_fan_out_chaos_fifo", 10, |case, rng| {
+            let workers = 2 + (case % 2) as usize;
+            let config = ChaosConfig {
+                seed: rng.next_u64(),
+                max_read: if case % 3 == 0 { 1 } else { rng.range(1, 16) as usize },
+                delay_chance: rng.unit_f64() * 0.6,
+                cut_after: None,
+            };
+            let ((a_tx, a_rx), (b_tx, b_rx)) = chaos(config);
+            let shape = vec![1, workers];
+            let a = NetFabric::new(
+                0,
+                shape.clone(),
+                vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as _))],
+                64,
+            );
+            let b = NetFabric::new(
+                1,
+                shape,
+                vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as _)), None],
+                64,
+            );
+            b.register_broadcast::<ProgressBroadcast<u64>>(11);
+            let mut tx = a.broadcast_sender::<u64>(11, 0, 1);
+            let mut rxs: Vec<NetReceiver<Batch>> =
+                (1..=workers).map(|w| b.receiver::<Batch>(11, 0, w)).collect();
+            let batches = rng.range(5, 40);
+            for t in 0..batches {
+                send_retrying_broadcast(&mut tx, Arc::new(vec![update(t, 1)]));
+            }
+            for rx in rxs.iter_mut() {
+                for t in 0..batches {
+                    assert_eq!(
+                        *recv_blocking(rx),
+                        vec![update(t, 1)],
+                        "per-sender FIFO violated at the fan-out point"
+                    );
+                }
+            }
+            a.shutdown();
+            b.shutdown();
+        });
+    }
+
+    fn send_retrying_broadcast(tx: &mut NetBroadcastSender<u64>, mut batch: Batch) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match tx.send(batch) {
+                Ok(()) => return,
+                Err(RingSendError::Full(back)) => {
+                    assert!(Instant::now() < deadline, "outbound queue never drained");
+                    batch = back;
+                    std::thread::yield_now();
+                }
+                Err(RingSendError::Disconnected(_)) => panic!("link dropped"),
+            }
+        }
     }
 }

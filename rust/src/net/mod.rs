@@ -29,36 +29,68 @@
 //!    An observer in a *third* process may apply a consumer's `-1` before
 //!    the producer's `+1` arrives — the transient-negative case the
 //!    tracker already tolerates (see [`crate::progress::antichain`]);
+//!    a broadcast frame counts as enqueued *to every destination worker*
+//!    of its process at once — the fan-out point appends it to every
+//!    destination inbox before reading the stream again, so the data
+//!    frames behind it on the same stream can never overtake it (the
+//!    fan-out FIFO obligation, argued in full in [`fabric`]'s docs);
 //! * **orderly shutdown** — frames sent before the write side closes are
 //!    still delivered; the receiver sees end-of-stream only afterwards.
 //!    Holding a message longer is always conservative, so a transport may
 //!    stall arbitrarily without threatening safety — only liveness asks
 //!    that streams eventually drain.
 //!
+//! **Broadcast dedup.** The progress plane's cross-process traffic is
+//! *deduplicated at the process boundary*: a Progcaster flush ships ONE
+//! [`codec::ProgressBroadcast`] frame per remote process — sender,
+//! destination-worker set, batch — instead of `k` identical frames for
+//! the `k` workers it hosts, and the receiving [`fabric::NetFabric`]
+//! decodes the frame once (into `SharedPool`-recycled buffers, via the
+//! codec's decode context) and fans the decoded `Arc` out to the local
+//! demux inboxes. Progress coordination volume therefore scales with
+//! frontier changes and *process* count — the paper's "minimal
+//! information" claim, preserved across the wire — and inbound progress
+//! decode allocates nothing in the steady state, mirroring the data
+//! plane's pooled decode.
+//!
 //! Layout:
 //!
 //! * [`codec`] — the compact little-endian wire format: the [`Wire`]
 //!   trait pair for values (timestamps, locations, records, messages,
-//!   progress batches), frame headers, and the incremental torn-read-safe
+//!   progress batches, per-process [`codec::ProgressBroadcast`] records),
+//!   frame headers, and the incremental torn-read-safe
 //!   [`codec::FrameDecoder`];
 //! * [`transport`] — frame endpoints over byte streams: TCP
-//!   (length-prefixed frames, per-peer send/recv thread pair) and an
-//!   in-process loopback for deterministic tests;
+//!   (length-prefixed frames, per-peer send/recv thread pair), an
+//!   in-process loopback for deterministic tests, and the seeded
+//!   adversarial [`transport::chaos`] pair (torn writes, one-byte reads,
+//!   delayed/coalesced frames, mid-stream EOF) the transport and fabric
+//!   tests run on;
 //! * [`fabric`] — [`NetFabric`]: bounded outbound queues, demux inboxes,
-//!   and the typed [`NetSender`] / [`NetReceiver`] endpoints that mirror
-//!   the SPSC ring contract (`Full` is backpressure, never an error), so
+//!   the typed [`NetSender`] / [`NetReceiver`] endpoints that mirror
+//!   the SPSC ring contract (`Full` is backpressure, never an error) so
 //!   the worker fabric routes a channel over rings or over the wire
-//!   without the rest of the engine noticing.
+//!   without the rest of the engine noticing, and the broadcast fan-out
+//!   point ([`fabric::NetFabric::register_broadcast`] +
+//!   [`NetBroadcastSender`]) behind the dedup.
 //!
 //! Follow-ons this structure leaves open: shared-memory segment
-//! transports (another `FrameTx`/`FrameRx`), async I/O in place of the
-//! per-peer thread pair, and per-process dedup of broadcast progress
-//! frames.
+//! transports (another `FrameTx`/`FrameRx`) and async I/O in place of
+//! the per-peer thread pair.
 
 pub mod codec;
 pub mod fabric;
 pub mod transport;
 
-pub use codec::{Wire, WireError, WireReader};
-pub use fabric::{NetFabric, NetReceiver, NetSender, NetStats, NetTelemetry};
-pub use transport::{loopback, tcp_pair, Frame, FrameRx, FrameTx, Link, NetError};
+pub use codec::{
+    BroadcastWire, ProgressBroadcast, ProgressDecodeContext, ProgressUpdates, Wire, WireError,
+    WireReader,
+};
+pub use fabric::{
+    ClusterShape, NetBroadcastSender, NetFabric, NetReceiver, NetSender, NetStats, NetTelemetry,
+    BROADCAST_DEST,
+};
+pub use transport::{
+    chaos, loopback, tcp_pair, ChaosConfig, ChaosRx, ChaosTx, Frame, FrameRx, FrameTx, Link,
+    NetError,
+};

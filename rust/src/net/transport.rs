@@ -13,17 +13,27 @@
 //! * **orderly shutdown**: after [`FrameTx::finish`], every frame already
 //!   sent is still delivered before the peer observes end-of-stream.
 //!
-//! Two implementations:
+//! Three implementations:
 //!
 //! * [`TcpTx`] / [`TcpRx`] — length-prefixed frames over a `TcpStream`
 //!   (`TCP_NODELAY`, buffered writes flushed at queue-empty boundaries;
 //!   reads of arbitrary size fed through the incremental
 //!   [`FrameDecoder`], so torn reads are the normal case, not an error).
-//! * [`loopback`] — an in-process pair backed by a mutex/condvar queue,
-//!   for deterministic transport-level tests without sockets.
+//! * [`loopback`] — an in-process pair backed by a mutex/condvar queue
+//!   with pooled payload buffers, for deterministic transport-level tests
+//!   (and allocation pins) without sockets.
+//! * [`chaos`] — the deterministic *adversarial* pair: the same contract
+//!   as TCP, but the byte stream between the halves is torn apart by a
+//!   seeded schedule — frames split at arbitrary byte boundaries, reads
+//!   clamped down to one byte, writes delayed and coalesced across
+//!   frames, and (optionally) the stream cut mid-frame, exactly the way a
+//!   dying peer cuts it. Codec and fabric tests run on it so torn-read
+//!   handling is exercised at the transport seam, not just inside the
+//!   decoder.
 
 use super::codec::{FrameDecoder, FrameHeader, WireError, FRAME_HEADER_BYTES};
-use crate::buffer::Lease;
+use crate::buffer::{BufferPool, Lease};
+use crate::testing::Rng;
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
@@ -220,15 +230,32 @@ impl FrameRx for TcpRx {
 // Loopback.
 // ---------------------------------------------------------------------------
 
+/// Idle payload buffers retained by one loopback direction.
+const LOOPBACK_POOL_SLOTS: usize = 32;
+
 /// One direction of a loopback link.
 struct LoopQueue {
     inner: Mutex<LoopInner>,
     arrived: Condvar,
+    /// Payload buffers cycle sender -> queue -> receiver -> (drop) -> back
+    /// here, so a steady-state loopback stream performs no allocation —
+    /// the alloc pins drive the net progress plane over this transport.
+    pool: BufferPool<Vec<u8>>,
 }
 
 struct LoopInner {
-    frames: VecDeque<(FrameHeader, Vec<u8>)>,
+    frames: VecDeque<(FrameHeader, Lease<Vec<u8>>)>,
     finished: bool,
+}
+
+impl LoopQueue {
+    fn new() -> Arc<Self> {
+        Arc::new(LoopQueue {
+            inner: Mutex::new(LoopInner { frames: VecDeque::new(), finished: false }),
+            arrived: Condvar::new(),
+            pool: BufferPool::new(LOOPBACK_POOL_SLOTS),
+        })
+    }
 }
 
 /// Loopback sending half.
@@ -245,14 +272,8 @@ pub struct LoopbackRx {
 /// at the other end's `Rx`, FIFO, with the same orderly-shutdown contract
 /// as TCP. Returns `((a_tx, a_rx), (b_tx, b_rx))` for the two ends.
 pub fn loopback() -> ((LoopbackTx, LoopbackRx), (LoopbackTx, LoopbackRx)) {
-    let a_to_b = Arc::new(LoopQueue {
-        inner: Mutex::new(LoopInner { frames: VecDeque::new(), finished: false }),
-        arrived: Condvar::new(),
-    });
-    let b_to_a = Arc::new(LoopQueue {
-        inner: Mutex::new(LoopInner { frames: VecDeque::new(), finished: false }),
-        arrived: Condvar::new(),
-    });
+    let a_to_b = LoopQueue::new();
+    let b_to_a = LoopQueue::new();
     (
         (LoopbackTx { queue: a_to_b.clone() }, LoopbackRx { queue: b_to_a.clone() }),
         (LoopbackTx { queue: b_to_a }, LoopbackRx { queue: a_to_b }),
@@ -261,11 +282,15 @@ pub fn loopback() -> ((LoopbackTx, LoopbackRx), (LoopbackTx, LoopbackRx)) {
 
 impl FrameTx for LoopbackTx {
     fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
+        // Copy into a pooled buffer outside the lock; the receiver's drop
+        // returns it.
+        let mut payload = self.queue.pool.checkout();
+        payload.extend_from_slice(&frame.payload);
         let mut inner = self.queue.inner.lock().unwrap();
         if inner.finished {
             return Err(NetError::Closed);
         }
-        inner.frames.push_back((frame.header, frame.payload.to_vec()));
+        inner.frames.push_back((frame.header, payload));
         drop(inner);
         self.queue.arrived.notify_all();
         Ok(())
@@ -298,12 +323,229 @@ impl FrameRx for LoopbackRx {
         }
         let mut frames = 0;
         while let Some((header, payload)) = inner.frames.pop_front() {
-            emit(header, Lease::unpooled(payload));
+            emit(header, payload);
             frames += 1;
         }
         if frames == 0 && inner.finished {
             return Err(NetError::Closed);
         }
+        Ok(frames)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos: the deterministic adversarial transport.
+// ---------------------------------------------------------------------------
+
+/// Knobs of the [`chaos`] transport: how the byte stream between the
+/// halves is torn apart. Every tear is drawn from a seeded [`Rng`], so a
+/// failing schedule replays exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Seed of the per-direction schedule.
+    pub seed: u64,
+    /// Largest chunk a single `recv` consumes (1 = strict one-byte reads,
+    /// the worst torn-read case).
+    pub max_read: usize,
+    /// Probability that a sent frame's bytes are *held back* — delayed
+    /// until a later send, a flush, or finish — so they coalesce with
+    /// whatever follows into one burst the reader must re-split.
+    pub delay_chance: f64,
+    /// If set, the write side silently discards everything past this many
+    /// stream bytes and reports end-of-stream: a mid-frame EOF, exactly
+    /// what a dying peer produces. The reader must surface it as
+    /// [`WireError::Truncated`], never as a clean close.
+    pub cut_after: Option<usize>,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig { seed: 1, max_read: 7, delay_chance: 0.3, cut_after: None }
+    }
+}
+
+/// One direction of a chaos link: a raw byte stream (no frame boundaries
+/// survive the mutex — that is the point).
+struct ChaosStream {
+    inner: Mutex<ChaosInner>,
+    arrived: Condvar,
+}
+
+struct ChaosInner {
+    bytes: VecDeque<u8>,
+    finished: bool,
+}
+
+impl ChaosStream {
+    fn new() -> Arc<Self> {
+        Arc::new(ChaosStream {
+            inner: Mutex::new(ChaosInner { bytes: VecDeque::new(), finished: false }),
+            arrived: Condvar::new(),
+        })
+    }
+}
+
+/// Chaos sending half: serializes frames like TCP would, then pushes the
+/// bytes through the seeded tear schedule.
+pub struct ChaosTx {
+    stream: Arc<ChaosStream>,
+    rng: Rng,
+    config: ChaosConfig,
+    /// Bytes held back by the delay schedule, flushed with the next burst.
+    held: Vec<u8>,
+    /// Total bytes pushed into the stream (the cut bookkeeping).
+    written: usize,
+    /// Set once `cut_after` triggered: everything later is discarded.
+    cut: bool,
+    finished: bool,
+}
+
+/// Chaos receiving half: reads seeded-size chunks (down to one byte) and
+/// reassembles frames through the incremental [`FrameDecoder`], exactly
+/// like the TCP receive path.
+pub struct ChaosRx {
+    stream: Arc<ChaosStream>,
+    rng: Rng,
+    config: ChaosConfig,
+    decoder: FrameDecoder,
+    scratch: Vec<u8>,
+}
+
+/// A connected adversarial transport pair (`(a_tx, a_rx)` toward B,
+/// `(b_tx, b_rx)` toward A). Each direction gets its own schedule derived
+/// from `config.seed`, so both directions of a full-duplex link are torn
+/// independently but reproducibly.
+pub fn chaos(config: ChaosConfig) -> ((ChaosTx, ChaosRx), (ChaosTx, ChaosRx)) {
+    let a_to_b = ChaosStream::new();
+    let b_to_a = ChaosStream::new();
+    let half = |stream_out: &Arc<ChaosStream>, stream_in: &Arc<ChaosStream>, salt: u64| {
+        (
+            ChaosTx {
+                stream: stream_out.clone(),
+                rng: Rng::new(config.seed ^ salt),
+                config,
+                held: Vec::new(),
+                written: 0,
+                cut: false,
+                finished: false,
+            },
+            ChaosRx {
+                stream: stream_in.clone(),
+                rng: Rng::new(config.seed ^ salt ^ 0x5ca1_ab1e),
+                config,
+                decoder: FrameDecoder::new(),
+                scratch: Vec::new(),
+            },
+        )
+    };
+    (half(&a_to_b, &b_to_a, 0x0a), half(&b_to_a, &a_to_b, 0x0b))
+}
+
+impl ChaosTx {
+    /// Pushes every held byte into the stream, honoring the cut point.
+    fn push_held(&mut self) {
+        if self.held.is_empty() {
+            return;
+        }
+        let mut take = self.held.len();
+        if let Some(cut) = self.config.cut_after {
+            if self.cut {
+                self.held.clear();
+                return;
+            }
+            if self.written + take >= cut {
+                take = cut - self.written;
+                self.cut = true;
+            }
+        }
+        let mut inner = self.stream.inner.lock().unwrap();
+        inner.bytes.extend(self.held.drain(..take));
+        self.held.clear();
+        self.written += take;
+        if self.cut {
+            // The "peer" died mid-stream: end-of-stream with a frame torn
+            // in half.
+            inner.finished = true;
+        }
+        drop(inner);
+        self.stream.arrived.notify_all();
+    }
+}
+
+impl FrameTx for ChaosTx {
+    fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
+        if self.finished {
+            return Err(NetError::Closed);
+        }
+        debug_assert_eq!(frame.header.len, frame.payload.len());
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        frame.header.write(&mut header);
+        self.held.extend_from_slice(&header);
+        self.held.extend_from_slice(&frame.payload);
+        // Delay schedule: most sends push immediately; a seeded fraction
+        // stays held and coalesces with later traffic.
+        let delay = self.config.delay_chance;
+        if !self.rng.chance(delay) {
+            self.push_held();
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<(), NetError> {
+        self.push_held();
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), NetError> {
+        if self.finished {
+            return Ok(());
+        }
+        self.push_held();
+        self.finished = true;
+        let mut inner = self.stream.inner.lock().unwrap();
+        inner.finished = true;
+        drop(inner);
+        self.stream.arrived.notify_all();
+        Ok(())
+    }
+}
+
+impl FrameRx for ChaosRx {
+    fn recv(
+        &mut self,
+        emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
+    ) -> Result<usize, NetError> {
+        self.scratch.clear();
+        {
+            let mut inner = self.stream.inner.lock().unwrap();
+            if inner.bytes.is_empty() && !inner.finished {
+                let (guard, _timeout) =
+                    self.stream.arrived.wait_timeout(inner, READ_TIMEOUT).unwrap();
+                inner = guard;
+            }
+            if inner.bytes.is_empty() {
+                if inner.finished {
+                    return if self.decoder.is_idle() {
+                        Err(NetError::Closed)
+                    } else {
+                        // EOF mid-frame: the peer died, it did not finish.
+                        Err(NetError::Codec(WireError::Truncated))
+                    };
+                }
+                return Ok(0);
+            }
+            // A seeded-size read — possibly a single byte — regardless of
+            // where frame boundaries fall.
+            let want = self.rng.range(1, self.config.max_read.max(1) as u64 + 1) as usize;
+            for _ in 0..want.min(inner.bytes.len()) {
+                self.scratch.push(inner.bytes.pop_front().expect("checked non-empty"));
+            }
+        }
+        let mut frames = 0;
+        self.decoder.push(&self.scratch, |header, payload| {
+            emit(header, payload);
+            frames += 1;
+        })?;
         Ok(frames)
     }
 }
@@ -375,6 +617,105 @@ mod tests {
             assert_eq!(h.channel, i);
             assert_eq!(p, &payloads[i]);
         }
+    }
+
+    #[test]
+    fn loopback_recycles_payload_buffers() {
+        let ((mut a_tx, _a_rx), (_b_tx, mut b_rx)) = loopback();
+        for _ in 0..10 {
+            a_tx.send(&frame(0, &[7u8; 64])).unwrap();
+            let mut seen = 0;
+            while seen == 0 {
+                seen = b_rx.recv(&mut |_h, p| assert_eq!(p.len(), 64)).unwrap();
+            }
+        }
+        assert!(
+            a_tx.queue.pool.stats().reused >= 9,
+            "loopback payload buffers must recycle: {:?}",
+            a_tx.queue.pool.stats()
+        );
+    }
+
+    /// The chaos transport upholds the full FrameTx/FrameRx contract under
+    /// seeded adversarial schedules: arbitrary split points, one-byte
+    /// reads, delayed/coalesced writes — every frame still arrives exactly
+    /// once, in order, byte for byte, with a clean end-of-stream. (This is
+    /// the codec's torn-read property, re-run at the transport seam.)
+    #[test]
+    fn chaos_delivers_fifo_byte_exact_under_seeded_tears() {
+        crate::testing::property("chaos_fifo", 30, |case, rng| {
+            let config = ChaosConfig {
+                seed: rng.next_u64(),
+                // Every fifth case is the strict one-byte-read schedule.
+                max_read: if case % 5 == 0 { 1 } else { rng.range(1, 16) as usize },
+                delay_chance: rng.unit_f64() * 0.8,
+                cut_after: None,
+            };
+            let ((mut a_tx, _a_rx), (_b_tx, mut b_rx)) = chaos(config);
+            let frame_count = rng.range(1, 12) as usize;
+            let mut expected = Vec::new();
+            for i in 0..frame_count {
+                // Empty payloads included: zero-length frames must survive
+                // arbitrary tearing (they are complete at their header).
+                let len = if rng.chance(0.2) { 0 } else { rng.range(1, 300) as usize };
+                let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                a_tx.send(&frame(i, &payload)).unwrap();
+                expected.push(payload);
+            }
+            a_tx.finish().unwrap();
+            let got = drain_all(&mut b_rx);
+            assert_eq!(got.len(), expected.len(), "frame count mismatch");
+            for (i, (h, p)) in got.iter().enumerate() {
+                assert_eq!(h.channel, i, "frames reordered");
+                assert_eq!(p, &expected[i], "payload bytes corrupted");
+            }
+        });
+    }
+
+    /// A mid-stream cut (the peer dies with a frame half-written) must
+    /// surface as a codec truncation after the complete prefix delivered,
+    /// never as a clean close.
+    #[test]
+    fn chaos_cut_mid_frame_reports_truncation_not_clean_close() {
+        let first = FRAME_HEADER_BYTES + 10;
+        let config = ChaosConfig {
+            seed: 9,
+            max_read: 5,
+            delay_chance: 0.0,
+            // Cut three bytes into the second frame's payload.
+            cut_after: Some(first + FRAME_HEADER_BYTES + 3),
+        };
+        let ((mut a_tx, _a_rx), (_b_tx, mut b_rx)) = chaos(config);
+        a_tx.send(&frame(0, &[1u8; 10])).unwrap();
+        a_tx.send(&frame(1, &[2u8; 50])).unwrap();
+        a_tx.flush().unwrap();
+        let mut got = Vec::new();
+        let err = loop {
+            match b_rx.recv(&mut |h, p| got.push((h, p.to_vec()))) {
+                Ok(_) => {}
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(got.len(), 1, "only the complete prefix may be delivered");
+        assert_eq!(got[0].1, vec![1u8; 10]);
+        assert!(
+            matches!(err, NetError::Codec(WireError::Truncated)),
+            "mid-frame EOF must be a truncation, got: {err}"
+        );
+    }
+
+    /// After a clean finish the chaos reader reports `Closed`, and a send
+    /// on the finished half is rejected — the same orderly-shutdown
+    /// contract as TCP and loopback.
+    #[test]
+    fn chaos_orderly_shutdown_matches_the_contract() {
+        let ((mut a_tx, _a_rx), (_b_tx, mut b_rx)) = chaos(ChaosConfig::default());
+        a_tx.send(&frame(3, &[9, 9])).unwrap();
+        a_tx.finish().unwrap();
+        let got = drain_all(&mut b_rx);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0.channel, 3);
+        assert!(matches!(a_tx.send(&frame(4, &[])), Err(NetError::Closed)));
     }
 
     #[test]

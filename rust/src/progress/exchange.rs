@@ -41,6 +41,38 @@
 //! sufficient but never necessary, and it serialized every worker through
 //! one mutex.
 //!
+//! # The same argument at the per-process fan-out point
+//!
+//! Across process boundaries the broadcast is *deduplicated*: a flush
+//! ships ONE frame per remote process (not one per remote worker),
+//! carrying the destination-worker set, and the receiving fabric decodes
+//! it once and clones the batch `Arc` into each destination mailbox
+//! (`net::fabric::NetFabric::register_broadcast`). Both orderings above
+//! survive this unchanged, for the same reasons stated per mechanism:
+//!
+//! 1. **Per-sender FIFO through the fan-out.** A sender's broadcast
+//!    frames ride its process pair's single ordered stream, are decoded by
+//!    that link's one recv thread in arrival order, and are appended to
+//!    *every* destination inbox before the next frame is touched; the
+//!    destination set always names every worker of the process, so no
+//!    mailbox is skipped. Each destination therefore still applies a
+//!    prefix of the sender's batch sequence — which is all clause (1)
+//!    ever required. (Frames that arrive before the channel's decoder is
+//!    registered are parked and replayed in arrival order under the same
+//!    lock the recv thread must take before its first fan-out, so late
+//!    graph construction cannot reorder a stream either.)
+//! 2. **Produce-before-data-release across the dedup path.** The
+//!    broadcast frame is enqueued toward a remote process before any data
+//!    frame it covers (same outbound queue, same stream), and a rejected
+//!    broadcast spills into a per-*process* FIFO ([`Progcaster`]'s
+//!    `net_spill`) that gates data release exactly like the per-peer ring
+//!    spill: while any spill is non-empty, staged data stays put. The
+//!    fan-out point only moves the *local* delivery of an already-arrived
+//!    frame, and every destination inbox is filled before the recv thread
+//!    reads the stream again — so a data frame (which arrives strictly
+//!    later on the same stream) can never be consumed before its covering
+//!    `+1` sits in every local mailbox.
+//!
 //! The centralized, totally ordered [`ProgressLog`] is retained below as
 //! the measured baseline for `benches/micro_progress.rs` (centralized vs
 //! decentralized per-step latency); the runtime itself no longer uses it.
@@ -49,8 +81,9 @@ use super::change_batch::ChangeBatch;
 use super::location::Location;
 use super::timestamp::Timestamp;
 use crate::buffer::SharedPool;
-use crate::worker::allocator::{Fabric, FabricReceiver, FabricSender, WorkerStats};
-use crate::worker::ring::RingSendError;
+use crate::net::fabric::NetBroadcastSender;
+use crate::worker::allocator::{Fabric, FabricReceiver, WorkerStats};
+use crate::worker::ring::{RingSendError, RingSender};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -73,12 +106,15 @@ const BATCH_POOL_WINDOW: usize = 16;
 /// Accumulates the worker's pointstamp updates in a [`ChangeBatch`] (so
 /// produce/consume churn cancels locally before ever crossing a thread
 /// boundary) and, on [`Progcaster::send`], broadcasts the coalesced batch —
-/// one shared `Arc`, no per-peer copy — into every peer's FIFO ring
-/// mailbox. The `Vec` *and* the `Arc` of each batch are recycled through a
-/// [`SharedPool`] once every peer has dropped its clone, making the
-/// steady-state flush allocation-free. The worker's own batch loops back
-/// through an internal queue so the owning tracker applies exactly the
-/// same stream as every peer.
+/// one shared `Arc`, no per-peer copy — into every same-process peer's
+/// FIFO ring mailbox, plus ONE serialized frame per remote process (the
+/// broadcast-dedup path: the frame names the destination-worker set and
+/// the receiving fabric fans the decoded batch out locally). The `Vec`
+/// *and* the `Arc` of each batch are recycled through a [`SharedPool`]
+/// once every peer has dropped its clone, making the steady-state flush
+/// allocation-free. The worker's own batch loops back through an internal
+/// queue so the owning tracker applies exactly the same stream as every
+/// peer.
 ///
 /// Mailbox rings are bounded; a full ring never blocks and never reorders:
 /// the batch goes to a per-peer FIFO spill queue and is re-offered before
@@ -92,16 +128,26 @@ pub struct Progcaster<T: Timestamp> {
     peers: usize,
     /// Coalesces this worker's updates between flushes.
     pending: ChangeBatch<(Location, T)>,
-    /// Per-peer mailbox send halves (`None` at `index`): intra-process
-    /// rings for same-process peers, serializing net endpoints otherwise.
-    senders: Vec<Option<FabricSender<Arc<ProgressBatch<T>>>>>,
-    /// Per-peer mailbox receive halves (`None` at `index`).
+    /// Same-process mailbox send halves, indexed by peer (`None` at
+    /// `index` and at every remote worker — those are covered by the
+    /// per-process broadcast frames below).
+    senders: Vec<Option<RingSender<Arc<ProgressBatch<T>>>>>,
+    /// One per-process broadcast sender per REMOTE process, indexed by
+    /// process (broadcast dedup: a flush ships ONE frame per remote
+    /// process, carrying the destination-worker set; the destination
+    /// fabric fans the decoded batch out to its local mailboxes).
+    net_senders: Vec<Option<NetBroadcastSender<T>>>,
+    /// Per-peer mailbox receive halves (`None` at `index`): rings from
+    /// same-process senders, fan-out-fed net endpoints from remote ones.
     receivers: Vec<Option<FabricReceiver<Arc<ProgressBatch<T>>>>>,
     /// Loopback of this worker's own batches, in send order.
     own: VecDeque<Arc<ProgressBatch<T>>>,
     /// Per-peer FIFO of batches rejected by a full ring, re-offered in
     /// order before anything newer.
     spill: Vec<VecDeque<Arc<ProgressBatch<T>>>>,
+    /// Per-process FIFO of batches rejected by a full outbound net queue
+    /// — the same spill discipline, at per-process granularity.
+    net_spill: Vec<VecDeque<Arc<ProgressBatch<T>>>>,
     /// Recycler for batch buffers + `Arc`s (progress-batch pooling).
     pool: SharedPool<ProgressBatch<T>>,
     /// This worker's fabric counters (ring-full stalls).
@@ -116,14 +162,17 @@ impl<T: Timestamp> Progcaster<T> {
     /// to)` key, in any claim order.
     pub fn new(index: usize, peers: usize, fabric: &Fabric) -> Self {
         assert!(index < peers, "worker index {index} out of range for {peers} peers");
+        let processes = fabric.processes();
         Progcaster {
             index,
             peers,
             pending: ChangeBatch::new(),
-            senders: fabric.broadcast_senders(PROGRESS_CHANNEL, index),
-            receivers: fabric.broadcast_receivers(PROGRESS_CHANNEL, index),
+            senders: fabric.local_broadcast_senders(PROGRESS_CHANNEL, index),
+            net_senders: fabric.progress_net_senders(PROGRESS_CHANNEL, index),
+            receivers: fabric.progress_receivers(PROGRESS_CHANNEL, index),
             own: VecDeque::new(),
             spill: (0..peers).map(|_| VecDeque::new()).collect(),
+            net_spill: (0..processes).map(|_| VecDeque::new()).collect(),
             pool: SharedPool::new(BATCH_POOL_WINDOW),
             stats: fabric.stats(index),
         }
@@ -200,14 +249,27 @@ impl<T: Timestamp> Progcaster<T> {
                 Ok(()) => {}
                 Err(RingSendError::Full(rejected)) => {
                     self.spill[peer].push_back(rejected);
-                    // Net endpoints count their own send-queue stalls; the
-                    // ring counter stays ring-only.
-                    if !sender.is_net() {
-                        self.stats.note_ring_full();
-                    }
+                    self.stats.note_ring_full();
                 }
                 // A disconnected peer has shut down; it no longer needs
                 // progress (its tracker is gone), so dropping is benign.
+                Err(RingSendError::Disconnected(_)) => {}
+            }
+        }
+        // Remote processes: ONE frame each, whatever their worker count
+        // (broadcast dedup). Same FIFO spill discipline, per process; the
+        // net endpoint counts its own send-queue stalls.
+        for process in 0..self.net_senders.len() {
+            let Some(sender) = self.net_senders[process].as_mut() else { continue };
+            if !self.net_spill[process].is_empty() {
+                self.net_spill[process].push_back(batch.clone());
+                continue;
+            }
+            match sender.send(batch.clone()) {
+                Ok(()) => {}
+                Err(RingSendError::Full(rejected)) => {
+                    self.net_spill[process].push_back(rejected);
+                }
                 Err(RingSendError::Disconnected(_)) => {}
             }
         }
@@ -215,8 +277,8 @@ impl<T: Timestamp> Progcaster<T> {
         Some(batch)
     }
 
-    /// Re-offers spilled batches to their rings, oldest first. Returns
-    /// true iff any batch moved into a ring.
+    /// Re-offers spilled batches to their rings (and per-process frame
+    /// queues), oldest first. Returns true iff any batch moved.
     pub fn flush_spill(&mut self) -> bool {
         let mut moved = false;
         for peer in 0..self.peers {
@@ -235,14 +297,32 @@ impl<T: Timestamp> Progcaster<T> {
                 }
             }
         }
+        for process in 0..self.net_senders.len() {
+            let Some(sender) = self.net_senders[process].as_mut() else { continue };
+            while let Some(batch) = self.net_spill[process].pop_front() {
+                match sender.send(batch) {
+                    Ok(()) => moved = true,
+                    Err(RingSendError::Full(batch)) => {
+                        self.net_spill[process].push_front(batch);
+                        break;
+                    }
+                    Err(RingSendError::Disconnected(_)) => {
+                        self.net_spill[process].clear();
+                        break;
+                    }
+                }
+            }
+        }
         moved
     }
 
-    /// True iff some batch is still waiting behind a full peer ring. While
-    /// this holds, the worker must not release staged data messages — the
-    /// spilled batch's produce counts are not yet in every mailbox.
+    /// True iff some batch is still waiting behind a full peer ring or a
+    /// full per-process frame queue. While this holds, the worker must not
+    /// release staged data messages — the spilled batch's produce counts
+    /// are not yet in every mailbox.
     pub fn has_spill(&self) -> bool {
         self.spill.iter().any(|q| !q.is_empty())
+            || self.net_spill.iter().any(|q| !q.is_empty())
     }
 
     /// Pops the next undelivered batch from one sender's stream (`from ==

@@ -31,6 +31,8 @@
 //! messages stay put while any progress batch is spilled behind a full
 //! mailbox.
 
+use crate::net::fabric::NetFabric;
+use crate::net::transport::{chaos, ChaosConfig, FrameRx, FrameTx, Link};
 use crate::progress::exchange::Progcaster;
 use crate::progress::location::Location;
 use crate::progress::reachability::{GraphTopology, NodeTopology};
@@ -39,6 +41,7 @@ use crate::testing::{property, Rng};
 use crate::worker::allocator::Fabric;
 use crate::worker::ring::{self, RingReceiver, RingSendError, RingSender};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Deliberately tiny data-ring capacity: backlogs of a handful of
 /// messages already hit `RingSendError::Full`, so the random schedules
@@ -96,8 +99,17 @@ struct Sim {
 
 impl Sim {
     fn new(peers: usize) -> Self {
-        let topology = linear_topology();
         let fabric = Fabric::new(peers);
+        let casters = (0..peers).map(|w| Progcaster::new(w, peers, &fabric)).collect();
+        Sim::with_casters(casters)
+    }
+
+    /// Builds the simulation around pre-claimed progress endpoints — the
+    /// cluster variant hands in progcasters claimed from per-process
+    /// fabrics wired over the chaos transport.
+    fn with_casters(casters: Vec<Progcaster<u64>>) -> Self {
+        let peers = casters.len();
+        let topology = linear_topology();
         // The simulated dataflow's one data channel: a pairwise fan of
         // tiny rings (the fabric's own family, but at a capacity small
         // enough that the schedules exercise Full constantly).
@@ -114,9 +126,11 @@ impl Sim {
                 }
             }
         }
-        let workers = (0..peers)
-            .map(|w| SimWorker {
-                caster: Progcaster::new(w, peers, &fabric),
+        let workers = casters
+            .into_iter()
+            .enumerate()
+            .map(|(w, caster)| SimWorker {
+                caster,
                 tokens: vec![
                     (Location::source(0, 0), Some(0)),
                     (Location::source(1, 0), Some(0)),
@@ -310,6 +324,106 @@ impl Sim {
         }
     }
 
+    /// Cluster variant of [`Sim::new`]: the workers are split across
+    /// `shape.len()` "processes" (possibly unequal counts) whose progress
+    /// planes are wired over the seeded-adversarial [`chaos`] transport —
+    /// per-process broadcast frames with local fan-out, torn, delayed,
+    /// and coalesced on the wire. Returns the per-process net fabrics so
+    /// the test can shut them down.
+    fn new_cluster(shape: &[usize], seed: u64) -> (Sim, Vec<Arc<NetFabric>>) {
+        let processes = shape.len();
+        let mut links: Vec<Vec<Option<Link>>> =
+            (0..processes).map(|_| (0..processes).map(|_| None).collect()).collect();
+        for p in 0..processes {
+            for q in (p + 1)..processes {
+                let config = ChaosConfig {
+                    seed: seed ^ ((p as u64) << 16) ^ ((q as u64) << 1),
+                    max_read: 8,
+                    delay_chance: 0.4,
+                    cut_after: None,
+                };
+                let ((p_tx, p_rx), (q_tx, q_rx)) = chaos(config);
+                links[p][q] =
+                    Some((Box::new(p_tx) as Box<dyn FrameTx>, Box::new(p_rx) as Box<dyn FrameRx>));
+                links[q][p] =
+                    Some((Box::new(q_tx) as Box<dyn FrameTx>, Box::new(q_rx) as Box<dyn FrameRx>));
+            }
+        }
+        let peers: usize = shape.iter().sum();
+        let mut nets = Vec::new();
+        let mut fabrics = Vec::new();
+        for (p, row) in links.into_iter().enumerate() {
+            let net = NetFabric::new(p, shape.to_vec(), row, 8);
+            // The same deliberately tiny rings as the single-process sim,
+            // so mailbox spill and the release gate stay hot.
+            fabrics.push(Fabric::cluster(shape, p, DATA_RING_CAPACITY, net.clone()));
+            nets.push(net);
+        }
+        let mut casters = Vec::new();
+        let mut base = 0;
+        for (p, &count) in shape.iter().enumerate() {
+            for local in 0..count {
+                casters.push(Progcaster::new(base + local, peers, &fabrics[p]));
+            }
+            base += count;
+        }
+        (Sim::with_casters(casters), nets)
+    }
+
+    /// Cluster wind-down, phase 1: flush, drain, and consume until no
+    /// worker holds staged data or spilled progress (cross-process sends
+    /// ride bounded queues drained by real threads, so this can take a few
+    /// passes).
+    fn quiesce_cluster(&mut self) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let peers = self.workers.len();
+            for w in 0..peers {
+                self.flush(w);
+            }
+            self.drain_all_data();
+            for w in 0..peers {
+                while !self.workers[w].inbox.is_empty() {
+                    let last = self.workers[w].inbox.len() - 1;
+                    self.consume(w, last);
+                }
+                self.flush(w);
+            }
+            let pending = (0..peers).any(|w| {
+                self.workers[w].caster.has_spill() || !self.workers[w].staged.is_empty()
+            });
+            if !pending {
+                return;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "cluster wind-down stalled: staged data or spilled progress never drained"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Cluster wind-down, phase 2: progress crosses real (chaos-torn)
+    /// transports asynchronously, so deliver until every tracker
+    /// converges instead of until one quiet pass.
+    fn deliver_all_until_complete(&mut self, rng: &mut Rng) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            for w in 0..self.workers.len() {
+                self.workers[w].caster.flush_spill();
+            }
+            self.deliver_all(rng);
+            if self.truth.is_complete() && self.observers.iter().all(|o| o.is_complete()) {
+                return;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "cluster delivery stalled before convergence"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
     /// Drains every mailbox into every observer (checking conservatism at
     /// each delivery), in a randomized round-robin.
     fn deliver_all(&mut self, rng: &mut Rng) {
@@ -415,6 +529,95 @@ fn prefix_safety_under_random_interleavings() {
         );
         for (r, observer) in sim.observers.iter().enumerate() {
             assert!(observer.is_complete(), "observer {r} must converge to completion");
+        }
+    });
+}
+
+/// The PR 1 interleaving model, re-run across process boundaries: the
+/// same action schedule and the same conservatism/convergence checks, but
+/// the progress plane now rides per-process broadcast frames with local
+/// fan-out over the chaos transport (seeded torn writes, one-byte reads,
+/// delayed/coalesced frames). If the dedup fan-out broke per-sender FIFO
+/// or the produce-before-release gate, the per-delivery conservatism
+/// check here is exactly what would trip.
+#[test]
+fn prefix_safety_under_cluster_fan_out() {
+    property("prefix_safety_under_cluster_fan_out", 8, |case, rng| {
+        // Non-square meshes included, so the destination-set fan-out is
+        // exercised on unequal worker counts, not just k == k meshes.
+        let shape: &[usize] = match case % 4 {
+            0 => &[1, 2],
+            1 => &[2, 2],
+            2 => &[2, 1, 1],
+            _ => &[1, 3],
+        };
+        let (mut sim, nets) = Sim::new_cluster(shape, rng.next_u64());
+        let peers = sim.workers.len();
+        let rounds = rng.range(60, 160);
+
+        for _ in 0..rounds {
+            let w = rng.below(peers as u64) as usize;
+            match rng.below(10) {
+                0..=3 => {
+                    let which = rng.below(2) as usize;
+                    let delta = rng.range(1, 6);
+                    sim.downgrade(w, which, delta);
+                }
+                4..=5 => {
+                    let which = rng.below(2) as usize;
+                    let dest = rng.below(peers as u64) as usize;
+                    sim.produce(w, which, dest);
+                }
+                6 => {
+                    if !sim.workers[w].inbox.is_empty() {
+                        let slot = rng.below(sim.workers[w].inbox.len() as u64) as usize;
+                        sim.consume(w, slot);
+                    }
+                }
+                7 => sim.flush(w),
+                8 => {
+                    let r = rng.below(peers as u64) as usize;
+                    let s = rng.below(peers as u64) as usize;
+                    sim.deliver(r, s);
+                }
+                _ => {
+                    let r = rng.below(peers as u64) as usize;
+                    let s = rng.below(peers as u64) as usize;
+                    sim.drain_data(r, s);
+                }
+            }
+        }
+
+        // Wind down: drop every token, then flush/drain/consume until no
+        // staged data or spilled progress remains anywhere, then deliver
+        // until every tracker converges on the (complete) truth.
+        for w in 0..peers {
+            sim.drop_token(w, 0);
+            sim.drop_token(w, 1);
+        }
+        sim.quiesce_cluster();
+        sim.deliver_all_until_complete(rng);
+        assert!(sim.truth.is_complete(), "ground truth must drain");
+        assert!(
+            sim.truth_counts.values().all(|&c| c == 0),
+            "emission-order counts must cancel exactly: {:?}",
+            sim.truth_counts.iter().filter(|(_, &c)| c != 0).collect::<Vec<_>>()
+        );
+        for (r, observer) in sim.observers.iter().enumerate() {
+            assert!(observer.is_complete(), "observer {r} must converge to completion");
+        }
+        // Concurrent shutdown: each fabric closes its own outbound queues
+        // first, so no recv thread waits out the shutdown linger on a
+        // still-open peer stream.
+        let handles: Vec<_> = nets
+            .iter()
+            .map(|net| {
+                let net = net.clone();
+                std::thread::spawn(move || net.shutdown())
+            })
+            .collect();
+        for handle in handles {
+            handle.join().expect("net shutdown");
         }
     });
 }

@@ -30,11 +30,16 @@
 //!
 //! Beyond point-to-point channels the fabric provides:
 //!
-//! * a **typed broadcast family** ([`Fabric::broadcast_senders`] /
-//!   [`Fabric::broadcast_receivers`]): the per-peer SPSC ring fan used
-//!   by the decentralized progress plane
-//!   ([`crate::progress::exchange::Progcaster`]) — one FIFO ring per
-//!   ordered worker pair, `None` at the self index;
+//! * the **progress plane's deduplicated broadcast routing**
+//!   ([`Fabric::local_broadcast_senders`] +
+//!   [`Fabric::progress_net_senders`] / [`Fabric::progress_receivers`]):
+//!   same-process peers keep their per-pair SPSC ring mailboxes exactly
+//!   as before, but each REMOTE process is reached by ONE per-process
+//!   [`NetBroadcastSender`] — a flush ships one
+//!   `ProgressBroadcast` frame per remote process carrying the
+//!   destination-worker set, and the destination fabric fans the decoded
+//!   batch out locally (`NetFabric::register_broadcast`), cutting
+//!   cross-process progress bandwidth from `p·k` frames to `p`;
 //! * **park/unpark handles** ([`Fabric::register_worker_thread`] /
 //!   [`Fabric::unpark_peers`]): idle workers park their thread instead of
 //!   busy-spinning, and any worker that pushes progress batches or data
@@ -50,8 +55,9 @@
 //!   process.
 
 use super::ring::{self, RingReceiver, RingSendError, RingSender};
-use crate::net::codec::Wire;
-use crate::net::fabric::{NetFabric, NetReceiver, NetSender};
+use crate::net::codec::{ProgressBroadcast, ProgressUpdates, Wire};
+use crate::net::fabric::{ClusterShape, NetBroadcastSender, NetFabric, NetReceiver, NetSender};
+use crate::progress::timestamp::Timestamp;
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -198,8 +204,10 @@ pub struct Fabric {
     process: usize,
     /// Total processes (1 in single-process runs).
     processes: usize,
-    /// Workers hosted by each process (contiguous index blocks).
-    workers_per_process: usize,
+    /// The cluster's worker layout (contiguous per-process index blocks,
+    /// possibly of unequal size) — the same [`ClusterShape`] arithmetic
+    /// the net fabric uses.
+    shape: ClusterShape,
     /// Slots per SPSC ring handed out by this fabric (both planes).
     ring_capacity: usize,
     pending: Mutex<Pending>,
@@ -230,7 +238,7 @@ impl Fabric {
             peers,
             process: 0,
             processes: 1,
-            workers_per_process: peers,
+            shape: ClusterShape::new(&[peers.max(1)]),
             ring_capacity: ring_capacity.max(2),
             pending: Mutex::new(Pending::default()),
             threads: (0..peers).map(|_| OnceLock::new()).collect(),
@@ -239,24 +247,25 @@ impl Fabric {
         })
     }
 
-    /// A cluster fabric: this process hosts workers
-    /// `[process * workers_per_process, (process + 1) * workers_per_process)`
-    /// of `processes * workers_per_process` total; channels to the rest
-    /// route through `net`.
+    /// A cluster fabric: process `p` hosts `shape[p]` workers (unequal
+    /// counts are first-class), in contiguous global index blocks; this
+    /// process is `process`, and channels to the rest route through `net`
+    /// (which must have been built with the same shape).
     pub fn cluster(
-        workers_per_process: usize,
+        shape: &[usize],
         process: usize,
-        processes: usize,
         ring_capacity: usize,
         net: std::sync::Arc<NetFabric>,
     ) -> std::sync::Arc<Self> {
+        let shape = ClusterShape::new(shape);
+        let processes = shape.processes();
         assert!(process < processes, "process index out of range");
-        let peers = workers_per_process * processes;
+        let peers = shape.peers();
         std::sync::Arc::new(Fabric {
             peers,
             process,
             processes,
-            workers_per_process,
+            shape,
             ring_capacity: ring_capacity.max(2),
             pending: Mutex::new(Pending::default()),
             threads: (0..peers).map(|_| OnceLock::new()).collect(),
@@ -280,22 +289,24 @@ impl Fabric {
         self.processes
     }
 
-    /// The process hosting a given global worker index.
+    /// The process hosting a given global worker index (contiguous blocks
+    /// of possibly unequal size).
     #[inline]
     pub fn process_of(&self, worker: usize) -> usize {
-        worker / self.workers_per_process
+        self.shape.process_of(worker)
     }
 
     /// True iff `worker` runs in this process.
     #[inline]
     pub fn is_local(&self, worker: usize) -> bool {
-        self.process_of(worker) == self.process
+        self.local_base() <= worker
+            && worker < self.local_base() + self.shape.workers(self.process)
     }
 
     /// The global index of this process's first worker.
     #[inline]
     pub fn local_base(&self) -> usize {
-        self.process * self.workers_per_process
+        self.shape.base(self.process)
     }
 
     /// The cross-process fabric, if this is a cluster.
@@ -404,34 +415,70 @@ impl Fabric {
         }
     }
 
-    /// Claims the send halves of channel `chan` from `from` to every other
-    /// worker, in peer order (`None` at `from`): the fan-out half of a
-    /// broadcast family. Same-process pairs are SPSC FIFO rings; remote
-    /// pairs are net endpoints.
-    pub fn broadcast_senders<M: Wire + Send + 'static>(
+    /// Same-process slice of a broadcast send fan: ring mailbox halves
+    /// toward every peer hosted by THIS process (`None` at `from` and at
+    /// every remote worker), indexed by peer. The progress plane pairs
+    /// this with [`Fabric::progress_net_senders`]: remote processes are
+    /// covered by per-process broadcast frames (broadcast dedup), not by
+    /// per-worker channels.
+    pub fn local_broadcast_senders<M: Send + 'static>(
         &self,
         chan: usize,
         from: usize,
-    ) -> Vec<Option<FabricSender<M>>> {
+    ) -> Vec<Option<RingSender<M>>> {
         (0..self.peers)
-            .map(|to| if to == from { None } else { Some(self.channel_sender(chan, from, to)) })
+            .map(|to| {
+                if to == from || !self.is_local(to) {
+                    None
+                } else {
+                    Some(self.sender(chan, from, to))
+                }
+            })
             .collect()
     }
 
-    /// Claims the receive halves of channel `chan` from every other worker
-    /// to `to`, in peer order (`None` at `to`): the fan-in half of a
-    /// broadcast family.
-    pub fn broadcast_receivers<M: Wire + Send + 'static>(
+    /// One progress broadcast sender per REMOTE process (`None` at this
+    /// process; all `None` outside a cluster), indexed by process: the
+    /// broadcast-dedup send path — one [`NetBroadcastSender::send`] per
+    /// flush per remote process covers every worker it hosts.
+    pub fn progress_net_senders<T: Timestamp>(
+        &self,
+        chan: usize,
+        from: usize,
+    ) -> Vec<Option<NetBroadcastSender<T>>> {
+        (0..self.processes)
+            .map(|process| {
+                if process == self.process {
+                    return None;
+                }
+                let net = self.net.as_ref().expect("remote process without a net fabric");
+                Some(net.broadcast_sender::<T>(chan, from, process))
+            })
+            .collect()
+    }
+
+    /// The progress receive fan for worker `to`, indexed by sending peer:
+    /// ring mailbox halves from same-process senders, net endpoints — fed
+    /// by the per-process broadcast fan-out — from remote ones. Registers
+    /// the channel's fan-out decoder with the net fabric on first call
+    /// (idempotent; parked early frames replay in order).
+    pub fn progress_receivers<T: Timestamp>(
         &self,
         chan: usize,
         to: usize,
-    ) -> Vec<Option<FabricReceiver<M>>> {
+    ) -> Vec<Option<FabricReceiver<std::sync::Arc<ProgressUpdates<T>>>>> {
+        if let Some(net) = &self.net {
+            net.register_broadcast::<ProgressBroadcast<T>>(chan);
+        }
         (0..self.peers)
             .map(|from| {
                 if from == to {
                     None
+                } else if self.is_local(from) {
+                    Some(FabricReceiver::Ring(self.receiver(chan, from, to)))
                 } else {
-                    Some(self.channel_receiver(chan, from, to))
+                    let net = self.net.as_ref().expect("remote peer without a net fabric");
+                    Some(FabricReceiver::Net(net.receiver(chan, from, to)))
                 }
             })
             .collect()
@@ -585,18 +632,22 @@ mod tests {
         let _rx = fabric.receiver::<String>(0, 0, 1);
     }
 
+    /// The progress plane's single-process fan: local ring senders pair up
+    /// with `progress_receivers`' ring halves, `None` on the diagonal.
     #[test]
-    fn broadcast_family_matches_pairwise_endpoints() {
+    fn local_broadcast_fan_matches_pairwise_endpoints() {
+        use std::sync::Arc;
+        type Batch = Arc<ProgressUpdates<u64>>;
         let fabric = Fabric::new(3);
-        let mut senders0 = fabric.broadcast_senders::<u64>(9, 0);
+        let mut senders0 = fabric.local_broadcast_senders::<Batch>(9, 0);
         assert_eq!(senders0.len(), 3);
         assert!(senders0[0].is_none(), "no self channel");
-        let mut rx1 = fabric.broadcast_receivers::<u64>(9, 1);
-        let mut rx2 = fabric.broadcast_receivers::<u64>(9, 2);
-        senders0[1].as_mut().unwrap().send(11).unwrap();
-        senders0[2].as_mut().unwrap().send(22).unwrap();
-        assert_eq!(rx1[0].as_mut().unwrap().recv().unwrap(), 11);
-        assert_eq!(rx2[0].as_mut().unwrap().recv().unwrap(), 22);
+        let mut rx1 = fabric.progress_receivers::<u64>(9, 1);
+        let mut rx2 = fabric.progress_receivers::<u64>(9, 2);
+        senders0[1].as_mut().unwrap().send(Arc::new(Vec::new())).unwrap();
+        senders0[2].as_mut().unwrap().send(Arc::new(Vec::new())).unwrap();
+        assert!(rx1[0].as_mut().unwrap().recv().is_ok());
+        assert!(rx2[0].as_mut().unwrap().recv().is_ok());
         assert!(rx1[1].is_none() && rx2[2].is_none());
     }
 
@@ -648,6 +699,34 @@ mod tests {
         // panicking.
         let tiny = Fabric::with_ring_capacity(2, 0);
         assert_eq!(tiny.sender::<u32>(0, 0, 1).capacity(), 2);
+    }
+
+    /// Heterogeneous cluster shapes route by prefix sums, not division:
+    /// shape 2+1+1 puts workers {0,1} on process 0, {2} on 1, {3} on 2.
+    #[test]
+    fn asymmetric_shapes_route_by_prefix_sums() {
+        let net = NetFabric::new(1, vec![2, 1, 1], vec![None, None, None], 4);
+        let fabric = Fabric::cluster(&[2, 1, 1], 1, 8, net);
+        assert_eq!(fabric.peers(), 4);
+        assert_eq!(fabric.processes(), 3);
+        assert_eq!(
+            (0..4).map(|w| fabric.process_of(w)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 2]
+        );
+        assert!(fabric.is_local(2));
+        assert!(!fabric.is_local(1) && !fabric.is_local(3));
+        assert_eq!(fabric.local_base(), 2);
+    }
+
+    #[test]
+    fn local_broadcast_senders_skip_remote_workers() {
+        let net = NetFabric::new(0, vec![2, 2], vec![None, None], 4);
+        let fabric = Fabric::cluster(&[2, 2], 0, 8, net);
+        let senders = fabric.local_broadcast_senders::<u64>(5, 0);
+        assert_eq!(senders.len(), 4);
+        assert!(senders[0].is_none(), "no self channel");
+        assert!(senders[1].is_some(), "same-process peer gets a ring");
+        assert!(senders[2].is_none() && senders[3].is_none(), "remote workers get none");
     }
 
     #[test]

@@ -13,12 +13,15 @@
 //! the cluster. Bootstrap is a full TCP mesh — process `p` listens on
 //! `addresses[p]`, connects to every lower-indexed process (with retry,
 //! so start order is free), and accepts the rest — with a versioned
-//! handshake that (a) verifies both sides agree on the cluster shape and
+//! handshake that (a) verifies both sides agree on the cluster shape —
+//! the full per-process worker-count vector, so heterogeneous clusters
+//! (`Config::cluster_shape`, e.g. 2+1+1) validate end to end — and
 //! (b) propagates process 0's tuning (`ring_capacity`, `progress_flush`,
 //! `send_batch`) to every process, so one process's flags configure the
 //! whole cluster. Worker indices are global, in contiguous per-process
-//! blocks; the per-process `Fabric` routes channels between them over
-//! rings or the serializing net fabric transparently. Shutdown is
+//! blocks of possibly unequal size; the per-process `Fabric` routes
+//! channels between them over rings or the serializing net fabric
+//! transparently. Shutdown is
 //! orderly: workers flush on exit (`Worker::flush_now` runs on drop), the
 //! net fabric drains its outbound queues and closes write sides, and
 //! peers observe clean end-of-stream.
@@ -66,6 +69,17 @@ where
     R: Send + 'static,
     F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
 {
+    execute_inner(config, build).0
+}
+
+/// [`execute`]'s body, additionally handing back the shared fabric so
+/// callers can snapshot telemetry after every worker has finished.
+fn execute_inner<T, R, F>(config: Config, build: F) -> (Vec<R>, Arc<Fabric>)
+where
+    T: Timestamp,
+    R: Send + 'static,
+    F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
+{
     let peers = config.workers.max(1);
     let fabric = Fabric::with_ring_capacity(peers, config.ring_capacity);
     let build = Arc::new(build);
@@ -92,10 +106,11 @@ where
                 .expect("spawn worker thread"),
         );
     }
-    handles
+    let results = handles
         .into_iter()
         .map(|h| h.join().expect("worker thread panicked"))
-        .collect()
+        .collect();
+    (results, fabric)
 }
 
 /// Single-worker convenience wrapper: returns the sole worker's result.
@@ -118,35 +133,66 @@ where
 const HANDSHAKE_MAGIC: u64 = u64::from_le_bytes(*b"ttdnetv1");
 
 /// Bumped whenever the wire format or handshake layout changes.
-const HANDSHAKE_VERSION: u32 = 1;
+/// Version 2: per-process broadcast progress frames (dedup fan-out), and
+/// the handshake carries the full per-process worker-count shape so
+/// heterogeneous clusters (e.g. 2+1+1) validate end to end.
+const HANDSHAKE_VERSION: u32 = 2;
 
 /// How long bootstrap keeps retrying a refused connection (peers may not
 /// be listening yet; start order is free).
 const CONNECT_RETRY_FOR: Duration = Duration::from_secs(30);
 
-/// `HELLO` (connector → acceptor): magic, version, cluster shape, sender.
-/// 24 bytes, all little-endian.
-fn write_hello(stream: &mut TcpStream, config: &Config) -> Result<(), NetError> {
-    let mut buf = [0u8; 24];
-    buf[0..8].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
-    buf[8..12].copy_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
-    buf[12..16].copy_from_slice(&(config.process_index as u32).to_le_bytes());
-    buf[16..20].copy_from_slice(&(config.processes as u32).to_le_bytes());
-    buf[20..24].copy_from_slice(&(config.workers as u32).to_le_bytes());
+/// Reads and validates the shape vector trailing a handshake record: the
+/// peer's per-process worker counts must equal `shape` exactly.
+fn read_shape(stream: &mut TcpStream, shape: &[usize]) -> Result<(), NetError> {
+    let mut buf = vec![0u8; 4 * shape.len()];
+    stream.read_exact(&mut buf)?;
+    for (p, expected) in shape.iter().enumerate() {
+        let got =
+            u32::from_le_bytes(buf[4 * p..4 * p + 4].try_into().expect("4 bytes")) as usize;
+        if got != *expected {
+            return Err(NetError::Protocol(format!(
+                "cluster shape mismatch at process {p}: peer says {got} workers, \
+                 local config says {expected}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Appends the shape vector (`u32` per process) to a handshake buffer.
+fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
+    for workers in shape {
+        buf.extend_from_slice(&(*workers as u32).to_le_bytes());
+    }
+}
+
+/// `HELLO` (connector → acceptor): magic, version, sender, process count,
+/// then the full per-process worker shape. All little-endian.
+fn write_hello(stream: &mut TcpStream, config: &Config, shape: &[usize]) -> Result<(), NetError> {
+    let mut buf = Vec::with_capacity(20 + 4 * shape.len());
+    buf.extend_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(config.process_index as u32).to_le_bytes());
+    buf.extend_from_slice(&(config.processes as u32).to_le_bytes());
+    push_shape(&mut buf, shape);
     stream.write_all(&buf)?;
     stream.flush()?;
     Ok(())
 }
 
 /// Reads and validates a `HELLO`, returning the connecting process index.
-fn read_hello(stream: &mut TcpStream, config: &Config) -> Result<usize, NetError> {
-    let mut buf = [0u8; 24];
+fn read_hello(
+    stream: &mut TcpStream,
+    config: &Config,
+    shape: &[usize],
+) -> Result<usize, NetError> {
+    let mut buf = [0u8; 20];
     stream.read_exact(&mut buf)?;
     let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
     let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
     let process = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes")) as usize;
     let processes = u32::from_le_bytes(buf[16..20].try_into().expect("4 bytes")) as usize;
-    let workers = u32::from_le_bytes(buf[20..24].try_into().expect("4 bytes")) as usize;
     if magic != HANDSHAKE_MAGIC {
         return Err(NetError::Protocol("bad magic (not a ttd peer?)".into()));
     }
@@ -155,34 +201,34 @@ fn read_hello(stream: &mut TcpStream, config: &Config) -> Result<usize, NetError
             "wire version mismatch: peer {version}, local {HANDSHAKE_VERSION}"
         )));
     }
-    if processes != config.processes || workers != config.workers.max(1) {
+    if processes != config.processes {
         return Err(NetError::Protocol(format!(
-            "cluster shape mismatch: peer says {processes} processes x {workers} workers, \
-             local config says {} x {}",
-            config.processes,
-            config.workers.max(1)
+            "cluster shape mismatch: peer says {processes} processes, local config says {}",
+            config.processes
         )));
     }
+    read_shape(stream, shape)?;
     if process >= processes {
         return Err(NetError::Protocol(format!("peer index {process} out of range")));
     }
     Ok(process)
 }
 
-/// `WELCOME` (acceptor → connector): echoes the shape and carries the
-/// acceptor's tuning. The connector adopts the tuning only from process 0,
-/// which makes process 0's flags authoritative for the whole cluster
-/// (every process connects to 0 before spawning workers). 48 bytes.
-fn write_welcome(stream: &mut TcpStream, config: &Config) -> Result<(), NetError> {
-    let mut buf = [0u8; 48];
-    buf[0..8].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
-    buf[8..12].copy_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
-    buf[12..16].copy_from_slice(&(config.process_index as u32).to_le_bytes());
-    buf[16..20].copy_from_slice(&(config.processes as u32).to_le_bytes());
-    buf[20..24].copy_from_slice(&(config.workers as u32).to_le_bytes());
-    buf[24..32].copy_from_slice(&(config.ring_capacity as u64).to_le_bytes());
-    buf[32..40].copy_from_slice(&(config.progress_flush.as_nanos() as u64).to_le_bytes());
-    buf[40..48].copy_from_slice(&(config.send_batch as u64).to_le_bytes());
+/// `WELCOME` (acceptor → connector): echoes the cluster identity, carries
+/// the acceptor's tuning, then the shape. The connector adopts the tuning
+/// only from process 0, which makes process 0's flags authoritative for
+/// the whole cluster (every process connects to 0 before spawning
+/// workers).
+fn write_welcome(stream: &mut TcpStream, config: &Config, shape: &[usize]) -> Result<(), NetError> {
+    let mut buf = Vec::with_capacity(44 + 4 * shape.len());
+    buf.extend_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(config.process_index as u32).to_le_bytes());
+    buf.extend_from_slice(&(config.processes as u32).to_le_bytes());
+    buf.extend_from_slice(&(config.ring_capacity as u64).to_le_bytes());
+    buf.extend_from_slice(&(config.progress_flush.as_nanos() as u64).to_le_bytes());
+    buf.extend_from_slice(&(config.send_batch as u64).to_le_bytes());
+    push_shape(&mut buf, shape);
     stream.write_all(&buf)?;
     stream.flush()?;
     Ok(())
@@ -190,8 +236,13 @@ fn write_welcome(stream: &mut TcpStream, config: &Config) -> Result<(), NetError
 
 /// Reads a `WELCOME`; if it came from process 0, adopts its tuning into
 /// the local config (the "config propagation" half of the handshake).
-fn read_welcome(stream: &mut TcpStream, config: &mut Config, peer: usize) -> Result<(), NetError> {
-    let mut buf = [0u8; 48];
+fn read_welcome(
+    stream: &mut TcpStream,
+    config: &mut Config,
+    shape: &[usize],
+    peer: usize,
+) -> Result<(), NetError> {
+    let mut buf = [0u8; 44];
     stream.read_exact(&mut buf)?;
     let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
     let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
@@ -206,12 +257,13 @@ fn read_welcome(stream: &mut TcpStream, config: &mut Config, peer: usize) -> Res
     }
     if peer == 0 {
         config.ring_capacity =
-            u64::from_le_bytes(buf[24..32].try_into().expect("8 bytes")) as usize;
+            u64::from_le_bytes(buf[20..28].try_into().expect("8 bytes")) as usize;
         config.progress_flush = Duration::from_nanos(u64::from_le_bytes(
-            buf[32..40].try_into().expect("8 bytes"),
+            buf[28..36].try_into().expect("8 bytes"),
         ));
-        config.send_batch = u64::from_le_bytes(buf[40..48].try_into().expect("8 bytes")) as usize;
+        config.send_batch = u64::from_le_bytes(buf[36..44].try_into().expect("8 bytes")) as usize;
     }
+    read_shape(stream, shape)?;
     Ok(())
 }
 
@@ -233,11 +285,12 @@ fn connect_with_retry(address: &str) -> Result<TcpStream, NetError> {
     }
 }
 
-/// Establishes the full mesh for `config`, returning one transport pair
-/// per process (`None` at `config.process_index`) and adopting process
-/// 0's tuning into `config`.
+/// Establishes the full mesh for `config` (whose cluster shape is
+/// `shape`), returning one transport pair per process (`None` at
+/// `config.process_index`) and adopting process 0's tuning into `config`.
 fn bootstrap(
     config: &mut Config,
+    shape: &[usize],
 ) -> Result<Vec<Option<Link>>, NetError> {
     let me = config.process_index;
     let processes = config.processes;
@@ -261,8 +314,8 @@ fn bootstrap(
         // Bound the reply read: a wedged peer (or an unrelated service on
         // the address) must fail the bootstrap, not hang it.
         let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-        write_hello(&mut stream, config)?;
-        read_welcome(&mut stream, config, peer)?;
+        write_hello(&mut stream, config, shape)?;
+        read_welcome(&mut stream, config, shape, peer)?;
         let _ = stream.set_read_timeout(None);
         let (tx, rx) = tcp_pair(stream)?;
         links[peer] = Some((Box::new(tx), Box::new(rx)));
@@ -275,7 +328,7 @@ fn bootstrap(
         // Bound the handshake read so a silent stray connection cannot
         // wedge the accept loop.
         let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-        let peer = match read_hello(&mut stream, config) {
+        let peer = match read_hello(&mut stream, config, shape) {
             Ok(peer) => peer,
             // A stray or dying connection (port scanner, crashed peer
             // retrying) must not wedge the bootstrap: drop it and keep
@@ -287,7 +340,7 @@ fn bootstrap(
         if peer <= me || links[peer].is_some() {
             return Err(NetError::Protocol(format!("unexpected connection from {peer}")));
         }
-        write_welcome(&mut stream, config)?;
+        write_welcome(&mut stream, config, shape)?;
         let (tx, rx) = tcp_pair(stream)?;
         links[peer] = Some((Box::new(tx), Box::new(rx)));
         expected -= 1;
@@ -297,48 +350,65 @@ fn bootstrap(
 
 /// Runs `build` on every worker this process hosts, as part of a
 /// `config.processes`-process cluster (every process must call this with
-/// the same cluster shape and its own `process_index`). Returns the
-/// *local* workers' results, in global index order. With `processes <= 1`
-/// this is exactly [`execute`].
+/// the same cluster shape and its own `process_index`). The shape may be
+/// heterogeneous: `config.cluster_shape` gives per-process worker counts
+/// (empty = `config.workers` everywhere). Returns the *local* workers'
+/// results, in global index order. With `processes <= 1` this is exactly
+/// [`execute`].
 pub fn execute_cluster<T, R, F>(config: Config, build: F) -> Result<Vec<R>, NetError>
 where
     T: Timestamp,
     R: Send + 'static,
     F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
 {
+    execute_cluster_telemetry(config, build).map(|(results, _telemetry)| results)
+}
+
+/// [`execute_cluster`] plus the local workers' fabric telemetry, in
+/// global index order, snapshotted AFTER the net fabric's shutdown — by
+/// then every peer's stream has reached end-of-stream and every inbound
+/// frame has been demuxed (broadcast frames fanned out), so cross-process
+/// counter relations (e.g. the broadcast-dedup frame/delivery ratio the
+/// cluster tests assert) are exact rather than racing in-flight frames.
+pub fn execute_cluster_telemetry<T, R, F>(
+    config: Config,
+    build: F,
+) -> Result<(Vec<R>, Vec<crate::worker::allocator::WorkerTelemetry>), NetError>
+where
+    T: Timestamp,
+    R: Send + 'static,
+    F: Fn(&mut Worker<T>) -> R + Send + Sync + 'static,
+{
     if config.processes <= 1 {
-        return Ok(execute(config, build));
+        let (results, fabric) = execute_inner(config, build);
+        let telemetry = fabric.telemetry_all();
+        return Ok((results, telemetry));
     }
     let mut config = config;
-    config.workers = config.workers.max(1);
-    let links = bootstrap(&mut config)?;
+    let shape = config.shape();
+    if shape.len() != config.processes {
+        return Err(NetError::Protocol(format!(
+            "cluster_shape names {} processes but config.processes is {}",
+            shape.len(),
+            config.processes
+        )));
+    }
+    config.workers = shape[config.process_index];
+    let links = bootstrap(&mut config, &shape)?;
 
-    let workers_per_process = config.workers.max(1);
-    let processes = config.processes;
     let process = config.process_index;
-    let net = NetFabric::new(
-        process,
-        processes,
-        workers_per_process,
-        links,
-        config.ring_capacity,
-    );
-    let fabric = Fabric::cluster(
-        workers_per_process,
-        process,
-        processes,
-        config.ring_capacity,
-        net.clone(),
-    );
+    let local_workers = shape[process];
+    let net = NetFabric::new(process, shape.clone(), links, config.ring_capacity);
+    let fabric = Fabric::cluster(&shape, process, config.ring_capacity, net.clone());
     let peers = fabric.peers();
-    let base = process * workers_per_process;
+    let base = fabric.local_base();
     let build = Arc::new(build);
     let pin = config.pin_workers;
     let progress_flush = config.progress_flush;
     let send_batch = config.send_batch;
 
-    let mut handles = Vec::with_capacity(workers_per_process);
-    for local in 0..workers_per_process {
+    let mut handles = Vec::with_capacity(local_workers);
+    for local in 0..local_workers {
         let fabric = fabric.clone();
         let build = build.clone();
         let index = base + local;
@@ -364,5 +434,6 @@ where
     // Every local worker has completed (and flushed, via `Worker::drop`):
     // drain the outbound queues to the wire and close the links cleanly.
     net.shutdown();
-    Ok(results)
+    let telemetry = (base..base + local_workers).map(|w| fabric.telemetry(w)).collect();
+    Ok((results, telemetry))
 }

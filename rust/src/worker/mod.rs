@@ -5,9 +5,11 @@
 //! activation request, draining the shared token bookkeeping after each so
 //! the accumulated changes reflect atomic operator actions (§4), (3) when
 //! the flush cadence is due, broadcasts its coalesced atomic batch through
-//! its [`Progcaster`]'s per-peer FIFO ring mailboxes and THEN releases
-//! staged remote data messages, and (4) folds every batch arriving on its
-//! own mailboxes (its loopback included) into its tracker.
+//! its [`Progcaster`]'s per-peer FIFO ring mailboxes (same-process peers)
+//! and one per-process broadcast frame per remote process (the net
+//! fabric's dedup fan-out), and THEN releases staged remote data messages,
+//! and (4) folds every batch arriving on its own mailboxes (its loopback
+//! included) into its tracker.
 //!
 //! # Step ordering and conservatism
 //!

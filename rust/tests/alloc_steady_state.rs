@@ -8,12 +8,13 @@
 //! rings are fixed storage, the tracker's count antichains are flat sorted
 //! runs (no `BTreeMap` nodes), and pipeline forwarding hands uniquely
 //! owned batches off whole. This test installs a counting global
-//! allocator and drives five loops — point-to-point transport, broadcast,
-//! the progress flush, the tracker fold + projection, and a full
-//! single-worker engine step (input feed, operator chain with whole-batch
-//! forwarding, progress exchange, tracker fold, probe) — through a warmup
-//! until capacities stabilize, then asserts a measurement window with
-//! zero allocations.
+//! allocator and drives six loops — point-to-point transport, broadcast,
+//! the progress flush, the cross-process progress plane over a loopback
+//! transport (per-process broadcast frames, pooled fan-out decode), the
+//! tracker fold + projection, and a full single-worker engine step (input
+//! feed, operator chain with whole-batch forwarding, progress exchange,
+//! tracker fold, probe) — through a warmup until capacities stabilize,
+//! then asserts a measurement window with zero allocations.
 //!
 //! Kept as a single `#[test]` so no sibling test can allocate concurrently
 //! inside a measurement window.
@@ -30,12 +31,17 @@ use timestamp_tokens::dataflow::channels::{
     drainer, Batch, ChannelSend, LocalQueue, Message, Pact,
 };
 use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::net::transport::loopback;
+use timestamp_tokens::net::{
+    FrameRx, FrameTx, NetFabric, NetReceiver, ProgressBroadcast, ProgressUpdates,
+};
 use timestamp_tokens::operators::map::MapExt;
-use timestamp_tokens::progress::exchange::Progcaster;
+use timestamp_tokens::progress::exchange::{Progcaster, PROGRESS_CHANNEL};
 use timestamp_tokens::progress::location::Location;
 use timestamp_tokens::progress::reachability::{GraphTopology, NodeTopology};
 use timestamp_tokens::progress::tracker::Tracker;
 use timestamp_tokens::worker::allocator::Fabric;
+use timestamp_tokens::worker::ring::RingSendError;
 use timestamp_tokens::worker::Worker;
 
 /// Counts every allocation and reallocation (frees are irrelevant here).
@@ -192,6 +198,81 @@ fn progress_flush_loop() {
     assert!(stats.reused > stats.allocated, "batch reuse must dominate: {stats:?}");
 }
 
+/// Cross-process progress plane over the loopback transport: worker 0
+/// (process 0) ships ONE per-process broadcast frame per flush; process
+/// 1's fabric decodes it ONCE into `SharedPool`-recycled buffers (the
+/// codec's `ProgressDecodeContext`) and fans the decoded `Arc` out to
+/// both destination inboxes. Steady state — send encode, pooled loopback
+/// payload, fan-out decode, typed receive, consumer drop — performs zero
+/// allocations once every pool is warm (ROADMAP "pooled progress
+/// decode"). The asymmetric 1+2 shape means the fan-out is exercised off
+/// the square-mesh diagonal.
+fn net_progress_decode_loop() {
+    let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
+    let shape = vec![1usize, 2];
+    let a = NetFabric::new(
+        0,
+        shape.clone(),
+        vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as Box<dyn FrameRx>))],
+        64,
+    );
+    let b = NetFabric::new(
+        1,
+        shape,
+        vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as Box<dyn FrameRx>)), None],
+        64,
+    );
+    b.register_broadcast::<ProgressBroadcast<u64>>(PROGRESS_CHANNEL);
+    let mut tx = a.broadcast_sender::<u64>(PROGRESS_CHANNEL, 0, 1);
+    let mut rx1 = b.receiver::<Arc<ProgressUpdates<u64>>>(PROGRESS_CHANNEL, 0, 1);
+    let mut rx2 = b.receiver::<Arc<ProgressUpdates<u64>>>(PROGRESS_CHANNEL, 0, 2);
+    let mut pool = SharedPool::<ProgressUpdates<u64>>::new(8);
+
+    fn recv_spin(rx: &mut NetReceiver<Arc<ProgressUpdates<u64>>>) -> Arc<ProgressUpdates<u64>> {
+        loop {
+            match rx.try_recv() {
+                Ok(batch) => return batch,
+                Err(_) => std::thread::yield_now(),
+            }
+        }
+    }
+
+    let mut t = 0u64;
+    assert_reaches_zero_alloc_steady_state("net progress decode", || {
+        let mut batch = pool.checkout();
+        {
+            let updates = Arc::get_mut(&mut batch).expect("checked-out batch is unique");
+            updates.push(((Location::source(0, 0), t + 1), 1));
+            updates.push(((Location::source(0, 0), t), -1));
+        }
+        pool.track(&batch);
+        let mut outbound = batch.clone();
+        drop(batch);
+        loop {
+            match tx.send(outbound) {
+                Ok(()) => break,
+                Err(RingSendError::Full(back)) => {
+                    outbound = back;
+                    std::thread::yield_now();
+                }
+                Err(RingSendError::Disconnected(_)) => panic!("loopback link dropped"),
+            }
+        }
+        // Both destination workers receive clones of ONE decoded Arc and
+        // drop them, releasing the decode pool's entry for the next frame.
+        let got1 = recv_spin(&mut rx1);
+        assert_eq!(got1.len(), 2);
+        let got2 = recv_spin(&mut rx2);
+        assert!(Arc::ptr_eq(&got1, &got2), "fan-out must share one decoded Arc");
+        drop(got1);
+        drop(got2);
+        t += 1;
+    });
+    assert_eq!(a.telemetry(0).progress_frames_sent, a.telemetry(0).frames_sent);
+    a.shutdown();
+    b.shutdown();
+}
+
 /// Progress fold + projection: a deep-chain tracker absorbs downgrade
 /// batches with fresh timestamps every iteration. The flat sorted-run
 /// antichains (per location AND per projected port) plus the tracker's
@@ -267,6 +348,7 @@ fn steady_state_data_path_performs_zero_allocations() {
     point_to_point_loop();
     broadcast_loop();
     progress_flush_loop();
+    net_progress_decode_loop();
     tracker_fold_loop();
     full_step_loop();
 }

@@ -20,8 +20,52 @@ use timestamp_tokens::nexmark::q4::{build_q4_observed, q4_oracle};
 use timestamp_tokens::operators::map::MapExt;
 use timestamp_tokens::operators::wordcount::WordCountExt;
 use timestamp_tokens::testing::free_loopback_addresses as free_addresses;
-use timestamp_tokens::worker::execute::{execute, execute_cluster};
+use timestamp_tokens::worker::allocator::WorkerTelemetry;
+use timestamp_tokens::worker::execute::{execute, execute_cluster, execute_cluster_telemetry};
 use timestamp_tokens::worker::Worker;
+
+/// Runs `build` as a cluster of `shape.len()` processes, process `p`
+/// hosting `shape[p]` workers (threads as processes, real TCP). Returns
+/// every worker's result in global index order, plus every worker's
+/// fabric telemetry snapshotted after each process's net shutdown — by
+/// then every inbound stream is fully drained, so cross-process counter
+/// relations (the dedup assertions below) are exact, not racy.
+fn run_cluster_shaped<R, F>(shape: Vec<usize>, build: F) -> (Vec<R>, Vec<WorkerTelemetry>)
+where
+    R: Send + 'static,
+    F: Fn(&mut Worker<u64>) -> R + Send + Sync + 'static,
+{
+    let processes = shape.len();
+    let addresses = free_addresses(processes);
+    let build = Arc::new(build);
+    let mut handles = Vec::new();
+    for p in 0..processes {
+        let addresses = addresses.clone();
+        let build = build.clone();
+        let shape = shape.clone();
+        handles.push(std::thread::spawn(move || {
+            let config = Config {
+                workers: shape[p],
+                cluster_shape: shape,
+                pin_workers: false,
+                processes,
+                process_index: p,
+                addresses,
+                ..Config::default()
+            };
+            execute_cluster_telemetry::<u64, _, _>(config, move |worker| build(worker))
+                .expect("cluster bootstrap")
+        }));
+    }
+    let mut results = Vec::new();
+    let mut telemetry = Vec::new();
+    for handle in handles {
+        let (r, t) = handle.join().expect("cluster process");
+        results.extend(r);
+        telemetry.extend(t);
+    }
+    (results, telemetry)
+}
 
 /// Runs `build` as a `processes × workers_per_process` cluster (threads as
 /// processes, real TCP), returning every worker's result in global index
@@ -31,26 +75,7 @@ where
     R: Send + 'static,
     F: Fn(&mut Worker<u64>) -> R + Send + Sync + 'static,
 {
-    let addresses = free_addresses(processes);
-    let build = Arc::new(build);
-    let mut handles = Vec::new();
-    for p in 0..processes {
-        let addresses = addresses.clone();
-        let build = build.clone();
-        handles.push(std::thread::spawn(move || {
-            let config = Config {
-                workers: workers_per_process,
-                pin_workers: false,
-                processes,
-                process_index: p,
-                addresses,
-                ..Config::default()
-            };
-            execute_cluster::<u64, _, _>(config, move |worker| build(worker))
-                .expect("cluster bootstrap")
-        }));
-    }
-    handles.into_iter().flat_map(|h| h.join().expect("cluster process")).collect()
+    run_cluster_shaped(vec![workers_per_process; processes], build).0
 }
 
 // ---------------------------------------------------------------------------
@@ -239,6 +264,109 @@ fn remote_workers_observe_process_zero_config() {
         );
         assert_eq!(batch, 77, "send_batch must propagate through the handshake");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Asymmetric shapes: 3 processes × unequal worker counts (2+1+1) must
+// equal the single-process run, so the destination-set fan-out is proven
+// off square meshes too.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wordcount_asymmetric_cluster_matches_single_process() {
+    let single: Vec<(u64, u64)> = execute::<u64, _, _>(
+        Config { workers: 4, pin_workers: false, ..Config::default() },
+        wordcount_run,
+    )
+    .into_iter()
+    .flatten()
+    .collect();
+    let cluster: Vec<(u64, u64)> =
+        run_cluster_shaped(vec![2, 1, 1], wordcount_run).0.into_iter().flatten().collect();
+
+    let mut single_sorted = single;
+    let mut cluster_sorted = cluster;
+    single_sorted.sort_unstable();
+    cluster_sorted.sort_unstable();
+    assert_eq!(
+        single_sorted, cluster_sorted,
+        "2+1+1 cluster output differs from single-process"
+    );
+}
+
+#[test]
+fn nexmark_q4_asymmetric_cluster_matches_single_process() {
+    let single: Vec<(u64, u64)> = execute::<u64, _, _>(
+        Config { workers: 4, pin_workers: false, ..Config::default() },
+        q4_run,
+    )
+    .into_iter()
+    .flatten()
+    .collect();
+    let cluster: Vec<(u64, u64)> =
+        run_cluster_shaped(vec![2, 1, 1], q4_run).0.into_iter().flatten().collect();
+
+    let mut single_sorted = single;
+    let mut cluster_sorted = cluster;
+    single_sorted.sort_unstable();
+    cluster_sorted.sort_unstable();
+    assert_eq!(
+        single_sorted, cluster_sorted,
+        "2+1+1 cluster Q4 closes differ from single-process"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Broadcast dedup, telemetry-asserted: one progress frame per (flush,
+// remote process) — the logical-delivery count is exactly the physical
+// frame count times the hosting process's worker count.
+// ---------------------------------------------------------------------------
+
+/// Asserts the dedup invariants on a finished cluster's telemetry: per
+/// process, logical progress deliveries == local worker count × physical
+/// progress frames received (each frame fanned out to every local
+/// worker), and progress traffic actually flowed.
+fn assert_progress_dedup(shape: &[usize], telemetry: &[WorkerTelemetry]) {
+    let total_frames_tx: u64 = telemetry.iter().map(|t| t.net.progress_frames_sent).sum();
+    assert!(total_frames_tx > 0, "progress frames must have crossed the wire");
+    let mut base = 0;
+    for (p, &workers) in shape.iter().enumerate() {
+        let rows = &telemetry[base..base + workers];
+        let frames_rx: u64 = rows.iter().map(|t| t.net.progress_frames_recv).sum();
+        let deliveries: u64 = rows.iter().map(|t| t.net.progress_batches_recv).sum();
+        assert!(frames_rx > 0, "process {p} received no progress frames");
+        assert_eq!(
+            deliveries,
+            frames_rx * workers as u64,
+            "process {p}: each inbound progress frame must fan out to all \
+             {workers} local workers (p frames per flush, not p·k)"
+        );
+        base += workers;
+    }
+    // Near-conservation: a frame is never duplicated, and never counted
+    // received before it was sent. Strict equality would additionally
+    // require that no recv thread timed out its shutdown linger while a
+    // slow peer was still draining — true on a quiet machine but not a
+    // property this test should gate CI on.
+    let total_frames_rx: u64 = telemetry.iter().map(|t| t.net.progress_frames_recv).sum();
+    assert!(total_frames_rx <= total_frames_tx, "progress frames duplicated at the fan-out");
+}
+
+#[test]
+fn progress_broadcast_dedup_sends_one_frame_per_process() {
+    // 2×2: without dedup every flush would ship 2 frames toward the other
+    // process (one per remote worker); with dedup it ships 1, and the
+    // receiving fabric fans it out to both local workers.
+    let (results, telemetry) = run_cluster_shaped(vec![2, 2], wordcount_run);
+    assert_eq!(results.len(), 4);
+    assert_progress_dedup(&[2, 2], &telemetry);
+}
+
+#[test]
+fn progress_broadcast_dedup_holds_on_asymmetric_shapes() {
+    let (results, telemetry) = run_cluster_shaped(vec![2, 1, 1], wordcount_run);
+    assert_eq!(results.len(), 4);
+    assert_progress_dedup(&[2, 1, 1], &telemetry);
 }
 
 // ---------------------------------------------------------------------------
