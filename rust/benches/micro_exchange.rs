@@ -12,8 +12,10 @@
 //! counters (the ROADMAP ring-sizing item), writing
 //! `BENCH_exchange_ring.json`. `--processes N` runs the **net scenario**:
 //! the same exchange dataflow at identical total worker counts, once as a
-//! single fabric and once as an N-process loopback-TCP cluster (real
-//! sockets, real codec), emitting `BENCH_net.json`. The standard suite
+//! single fabric and once per cross-process transport — the legacy
+//! thread-pair TCP baseline, the poll-reactor TCP path, and `/dev/shm`
+//! byte rings (real sockets/segments, real codec) — emitting
+//! `BENCH_net.json`. The standard suite
 //! emits `BENCH_exchange.json`; all are trajectories for future PRs to
 //! compare against instead of re-asserting the win.
 
@@ -508,6 +510,9 @@ struct NetWorkerResult {
     send_stalls: u64,
     progress_frames_tx: u64,
     progress_bytes_tx: u64,
+    /// Frame bytes that crossed the kernel (process-wide, reported on
+    /// each process's worker 0; zero on pure-shm meshes).
+    kernel_bytes_tx: u64,
 }
 
 /// The engine workload both topologies run: `input -> exchange(hash) ->
@@ -557,6 +562,7 @@ fn drive_net_exchange(
         send_stalls: net.send_queue_stalls,
         progress_frames_tx: net.progress_frames_sent,
         progress_bytes_tx: net.progress_bytes_sent,
+        kernel_bytes_tx: net.kernel_frame_bytes_tx,
     }
 }
 
@@ -569,6 +575,7 @@ struct NetMeasurement {
     send_stalls: u64,
     progress_frames_tx: u64,
     progress_bytes_tx: u64,
+    kernel_bytes_tx: u64,
 }
 
 fn measure_net(results: Vec<NetWorkerResult>) -> NetMeasurement {
@@ -584,16 +591,21 @@ fn measure_net(results: Vec<NetWorkerResult>) -> NetMeasurement {
         send_stalls: results.iter().map(|r| r.send_stalls).sum(),
         progress_frames_tx: results.iter().map(|r| r.progress_frames_tx).sum(),
         progress_bytes_tx: results.iter().map(|r| r.progress_bytes_tx).sum(),
+        kernel_bytes_tx: results.iter().map(|r| r.kernel_bytes_tx).sum(),
     }
 }
 
 /// Intra-process vs cross-process exchange at identical total worker
 /// counts: `processes × wpp` workers as one fabric, then as a real
-/// loopback-TCP cluster (each "process" is a thread running
+/// loopback cluster (each "process" is a thread running
 /// `execute_cluster` with its own fabric, codec, and sockets — the full
-/// wire path). Emits `BENCH_net.json`.
+/// wire path) under each cross-process transport: the legacy thread-pair
+/// TCP baseline, reactor-driven nonblocking TCP, and `/dev/shm` byte
+/// rings. Emits `BENCH_net.json`; the reactor-vs-thread-pair throughput
+/// ratio and the shm topology's zero kernel frame bytes are the numbers
+/// this PR's tentpole is pinned on.
 fn net_scenario(args: &BenchArgs) {
-    use timestamp_tokens::config::Config;
+    use timestamp_tokens::config::{Config, NetTransport};
     use timestamp_tokens::worker::execute::{execute, execute_cluster};
 
     let processes = args.processes.max(2);
@@ -603,13 +615,26 @@ fn net_scenario(args: &BenchArgs) {
     let per_epoch: u64 = 4096;
     println!(
         "net exchange: {total} workers total, {epochs} epochs x {per_epoch} records/worker, \
-         intra-process vs {processes}-process loopback TCP"
+         intra-process vs {processes}-process loopback (thread-pair TCP / reactor TCP / shm)"
     );
     println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14} {:>14}",
         "topology", "records/s", "p50 ns", "p99 ns", "send-stalls", "prog-frames-tx",
-        "prog-bytes-tx"
+        "prog-bytes-tx", "kernel-tx"
     );
+    let report = |label: &str, m: &NetMeasurement| {
+        println!(
+            "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14} {:>14}",
+            label,
+            m.records_per_sec,
+            m.p50_ns,
+            m.p99_ns,
+            m.send_stalls,
+            m.progress_frames_tx,
+            m.progress_bytes_tx,
+            m.kernel_bytes_tx
+        );
+    };
 
     // (a) One process hosting every worker.
     let intra = {
@@ -618,20 +643,11 @@ fn net_scenario(args: &BenchArgs) {
             execute::<u64, _, _>(config, move |w| drive_net_exchange(w, epochs, per_epoch));
         measure_net(results)
     };
-    println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14}",
-        "intra-process",
-        intra.records_per_sec,
-        intra.p50_ns,
-        intra.p99_ns,
-        intra.send_stalls,
-        intra.progress_frames_tx,
-        intra.progress_bytes_tx
-    );
+    report("intra-process", &intra);
 
     // (b) The same workers split across `processes` cluster members over
-    // 127.0.0.1 TCP.
-    let cross = {
+    // 127.0.0.1, once per transport.
+    let run_cross = |net_transport: NetTransport| -> NetMeasurement {
         let addresses = timestamp_tokens::testing::free_loopback_addresses(processes);
         let mut handles = Vec::new();
         for p in 0..processes {
@@ -643,6 +659,7 @@ fn net_scenario(args: &BenchArgs) {
                     processes,
                     process_index: p,
                     addresses,
+                    net_transport,
                     ..Config::default()
                 };
                 execute_cluster::<u64, _, _>(config, move |w| {
@@ -658,16 +675,13 @@ fn net_scenario(args: &BenchArgs) {
         assert_eq!(got, expected, "cluster exchange lost or duplicated records");
         measure_net(results)
     };
-    println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14}",
-        "cross-process",
-        cross.records_per_sec,
-        cross.p50_ns,
-        cross.p99_ns,
-        cross.send_stalls,
-        cross.progress_frames_tx,
-        cross.progress_bytes_tx
-    );
+    let tcp_threads = run_cross(NetTransport::TcpThreads);
+    report("tcp-threads", &tcp_threads);
+    let tcp_reactor = run_cross(NetTransport::Tcp);
+    report("tcp-reactor", &tcp_reactor);
+    let shm = run_cross(NetTransport::Shm);
+    report("shm", &shm);
+    assert_eq!(shm.kernel_bytes_tx, 0, "shm frames must not cross the kernel");
 
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"micro_exchange_net\",\n");
@@ -675,19 +689,23 @@ fn net_scenario(args: &BenchArgs) {
     json.push_str(&format!("  \"workers_per_process\": {wpp},\n"));
     json.push_str(&format!("  \"epochs\": {epochs},\n"));
     json.push_str(&format!("  \"records_per_epoch_per_worker\": {per_epoch},\n"));
-    for (label, m, comma) in
-        [("intra_process", intra, ","), ("cross_process", cross, "")]
-    {
+    for (label, m, comma) in [
+        ("intra_process", intra, ","),
+        ("tcp_threads", tcp_threads, ","),
+        ("tcp_reactor", tcp_reactor, ","),
+        ("shm", shm, ""),
+    ] {
         json.push_str(&format!(
             "  \"{label}\": {{\"records_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
              \"send_queue_stalls\": {}, \"progress_frames_tx\": {}, \
-             \"progress_bytes_tx\": {}}}{comma}\n",
+             \"progress_bytes_tx\": {}, \"kernel_frame_bytes_tx\": {}}}{comma}\n",
             m.records_per_sec,
             m.p50_ns,
             m.p99_ns,
             m.send_stalls,
             m.progress_frames_tx,
-            m.progress_bytes_tx
+            m.progress_bytes_tx,
+            m.kernel_bytes_tx
         ));
     }
     json.push_str("}\n");

@@ -33,6 +33,41 @@ impl std::str::FromStr for AggBackend {
     }
 }
 
+/// Which cross-process transport the net fabric uses for each link.
+///
+/// Every variant runs the same timestamp-token protocol over the same
+/// reactor demux path; they differ only in how frame bytes move between
+/// processes (and, for [`NetTransport::TcpThreads`], in how many I/O
+/// threads pay for it — it survives as the bench baseline the reactor is
+/// measured against).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetTransport {
+    /// Pick per link: shared memory when both endpoints are loopback
+    /// (co-located processes), TCP through the reactor otherwise.
+    Auto,
+    /// Nonblocking TCP driven by the poll reactor (one I/O thread).
+    Tcp,
+    /// `/dev/shm` byte rings with a doorbell byte on the bootstrap
+    /// socket; requires co-located processes.
+    Shm,
+    /// The legacy blocking send/recv thread pair per peer
+    /// (2·(P−1) I/O threads per process). Bench baseline only.
+    TcpThreads,
+}
+
+impl std::str::FromStr for NetTransport {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(NetTransport::Auto),
+            "tcp" => Ok(NetTransport::Tcp),
+            "shm" => Ok(NetTransport::Shm),
+            "tcp-threads" => Ok(NetTransport::TcpThreads),
+            other => Err(format!("unknown net transport: {other}")),
+        }
+    }
+}
+
 /// Top-level runtime configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -76,6 +111,12 @@ pub struct Config {
     /// pass the same shape, and `workers` is ignored (the launcher sets it
     /// to `cluster_shape[process_index]`).
     pub cluster_shape: Vec<usize>,
+    /// Cross-process transport selection (`--net
+    /// auto|tcp|shm|tcp-threads`). [`NetTransport::Auto`] — the default —
+    /// takes shared memory for co-located (loopback) process pairs and
+    /// reactor TCP otherwise. Every process must pass the same value; the
+    /// bootstrap handshake pins the per-link agreement.
+    pub net_transport: NetTransport,
 }
 
 impl Default for Config {
@@ -92,6 +133,7 @@ impl Default for Config {
             process_index: 0,
             addresses: Vec::new(),
             cluster_shape: Vec::new(),
+            net_transport: NetTransport::Auto,
         }
     }
 }
@@ -138,6 +180,16 @@ mod tests {
         assert_eq!(c.process_index, 0);
         assert!(c.addresses.is_empty());
         assert!(c.cluster_shape.is_empty());
+        assert_eq!(c.net_transport, NetTransport::Auto);
+    }
+
+    #[test]
+    fn net_transport_parses() {
+        assert_eq!("auto".parse::<NetTransport>().unwrap(), NetTransport::Auto);
+        assert_eq!("tcp".parse::<NetTransport>().unwrap(), NetTransport::Tcp);
+        assert_eq!("shm".parse::<NetTransport>().unwrap(), NetTransport::Shm);
+        assert_eq!("tcp-threads".parse::<NetTransport>().unwrap(), NetTransport::TcpThreads);
+        assert!("udp".parse::<NetTransport>().is_err());
     }
 
     #[test]

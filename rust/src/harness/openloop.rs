@@ -153,6 +153,7 @@ pub fn run_cluster(
     processes: usize,
     process_index: usize,
     addresses: Vec<String>,
+    net_transport: crate::config::NetTransport,
 ) -> Result<Outcome, NetError> {
     let config = Config {
         workers: params.workers,
@@ -160,6 +161,7 @@ pub fn run_cluster(
         processes,
         process_index,
         addresses,
+        net_transport,
         ..Config::default()
     };
     // The epoch must postdate the bootstrap handshake (which can take

@@ -34,8 +34,12 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
 /// broadcast-dedup progress plane: `prog-frames-tx` counts one physical
 /// frame per (flush, remote process), and `prog-fanout` counts logical
 /// deliveries — their ratio is the destination process's worker count
-/// when dedup is engaged.
-pub const TELEMETRY_HEADER: [&str; 13] = [
+/// when dedup is engaged. The reactor columns are process-wide (the one
+/// I/O thread's counters, reported on each process's worker 0):
+/// `net-polls` / `net-spurious` count poll wakeups and wakeups that found
+/// no progress, `net-partial-wr` counts short writes (socket buffer
+/// full), and `net-shm-full` counts shm-ring-full stalls.
+pub const TELEMETRY_HEADER: [&str; 17] = [
     "process",
     "worker",
     "parks",
@@ -49,6 +53,10 @@ pub const TELEMETRY_HEADER: [&str; 13] = [
     "prog-frames-tx",
     "prog-frames-rx",
     "prog-fanout",
+    "net-polls",
+    "net-spurious",
+    "net-partial-wr",
+    "net-shm-full",
 ];
 
 fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
@@ -66,6 +74,10 @@ fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String
         t.net.progress_frames_sent.to_string(),
         t.net.progress_frames_recv.to_string(),
         t.net.progress_batches_recv.to_string(),
+        t.net.poll_wakeups.to_string(),
+        t.net.spurious_wakeups.to_string(),
+        t.net.partial_writes.to_string(),
+        t.net.shm_full_stalls.to_string(),
     ]
 }
 
@@ -85,6 +97,11 @@ fn aggregate(workers: &[&WorkerTelemetry]) -> WorkerTelemetry {
         total.net.progress_bytes_sent += t.net.progress_bytes_sent;
         total.net.progress_frames_recv += t.net.progress_frames_recv;
         total.net.progress_batches_recv += t.net.progress_batches_recv;
+        total.net.poll_wakeups += t.net.poll_wakeups;
+        total.net.spurious_wakeups += t.net.spurious_wakeups;
+        total.net.partial_writes += t.net.partial_writes;
+        total.net.shm_full_stalls += t.net.shm_full_stalls;
+        total.net.kernel_frame_bytes_tx += t.net.kernel_frame_bytes_tx;
     }
     total
 }
@@ -185,11 +202,12 @@ mod tests {
             net: Default::default(),
         }]);
         // One worker, one process: no aggregate row.
-        let want: Vec<Vec<String>> =
-            vec![["0", "3", "10", "7", "2", "0", "0", "0", "0", "0", "0", "0", "0"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect()];
+        let want: Vec<Vec<String>> = vec![[
+            "0", "3", "10", "7", "2", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()];
         assert_eq!(rows, want);
     }
 
@@ -203,6 +221,8 @@ mod tests {
         w1.net.progress_batches_recv = 3;
         let mut w2 = WorkerTelemetry { worker: 2, process: 1, parks: 4, ..Default::default() };
         w2.net.bytes_recv = 100;
+        w2.net.poll_wakeups = 9;
+        w2.net.shm_full_stalls = 4;
         let rows = telemetry_rows(&[w0, w1, w2]);
         // 3 worker rows + 2 per-process aggregate rows, grouped: process 0
         // (workers 0, 1, Σ), then process 1 (worker 2, Σ).
@@ -215,5 +235,7 @@ mod tests {
         assert_eq!(rows[3][0], "1");
         assert_eq!(rows[4][1], "Σ");
         assert_eq!(rows[4][8], "100", "bytes-rx aggregate");
+        assert_eq!(rows[4][13], "9", "net-polls aggregate");
+        assert_eq!(rows[4][16], "4", "net-shm-full aggregate");
     }
 }

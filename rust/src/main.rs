@@ -22,8 +22,12 @@
 //! default 40701) or come from `--addresses host:port,host:port,...`.
 //! Process 0's `ring_capacity` / `progress_flush` / `send_batch` flags
 //! propagate to every process through the bootstrap handshake.
+//! `--net auto|tcp|shm|tcp-threads` selects the cross-process transport
+//! (default `auto`: shared memory for co-located loopback process pairs,
+//! reactor-driven TCP otherwise); every process must pass the same value.
 
 use std::time::Duration;
+use timestamp_tokens::config::NetTransport;
 use timestamp_tokens::coordination::Mechanism;
 use timestamp_tokens::harness::openloop::{run, run_cluster, Outcome, Params, Workload};
 use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
@@ -69,20 +73,27 @@ impl Args {
                 (0..processes).map(|i| format!("127.0.0.1:{}", base + i as u16)).collect()
             }
         };
+        let net = self
+            .flags
+            .get("net")
+            .map(|v| v.parse().expect("--net auto|tcp|shm|tcp-threads"))
+            .unwrap_or(NetTransport::Auto);
         ClusterArgs {
             processes,
             process: self.flags.get("process").and_then(|v| v.parse().ok()),
             addresses,
+            net,
         }
     }
 }
 
-/// Parsed `--processes` / `--process` / `--addresses` flags.
+/// Parsed `--processes` / `--process` / `--addresses` / `--net` flags.
 struct ClusterArgs {
     processes: usize,
     /// `None` = orchestrate (spawn one child per process index).
     process: Option<usize>,
     addresses: Vec<String>,
+    net: NetTransport,
 }
 
 impl ClusterArgs {
@@ -181,12 +192,17 @@ fn main() {
                          workers, quantum {} ns, {:?}",
                         cluster.processes, params.quantum_ns, params.duration
                     );
-                    let outcome =
-                        run_cluster(params, cluster.processes, process, cluster.addresses)
-                            .unwrap_or_else(|e| {
-                                eprintln!("{command}: cluster bootstrap failed: {e}");
-                                std::process::exit(1);
-                            });
+                    let outcome = run_cluster(
+                        params,
+                        cluster.processes,
+                        process,
+                        cluster.addresses,
+                        cluster.net,
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!("{command}: cluster bootstrap failed: {e}");
+                        std::process::exit(1);
+                    });
                     (format!("{command}[p{process}]"), outcome)
                 }
                 _ => {
@@ -230,6 +246,7 @@ fn main() {
                         cluster.processes,
                         process,
                         cluster.addresses,
+                        cluster.net,
                     )
                     .unwrap_or_else(|e| {
                         eprintln!("nexmark: cluster bootstrap failed: {e}");
@@ -281,7 +298,8 @@ fn main() {
             );
             println!("mechanisms: tokens | notifications | watermarks-x | watermarks-p");
             println!(
-                "cluster: --processes N [--process I] [--addresses h:p,...] [--base-port P]"
+                "cluster: --processes N [--process I] [--addresses h:p,...] [--base-port P] \
+                 [--net auto|tcp|shm|tcp-threads]"
             );
             println!("artifacts dir: artifacts/ (run `make artifacts`)");
         }

@@ -671,6 +671,11 @@ impl FrameDecoder {
         self.header_len == 0 && self.current.is_none()
     }
 
+    /// Reuse/allocation counters of the payload pool (allocation pins).
+    pub fn pool_stats(&self) -> crate::buffer::PoolStats {
+        self.pool.stats()
+    }
+
     /// Consumes `bytes`, invoking `emit` for every completed frame, in
     /// order. Returns the number of frames emitted. A header that violates
     /// the length bound poisons the stream and returns the error.

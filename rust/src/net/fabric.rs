@@ -1,11 +1,28 @@
-//! The cross-process half of the fabric: typed endpoints over frame
-//! transports.
+//! The cross-process half of the fabric: typed endpoints over links
+//! driven by ONE nonblocking reactor thread per process.
 //!
 //! One [`NetFabric`] per process. For every remote process it owns a
-//! bounded outbound queue drained by a dedicated **send thread** (writing
-//! frames to the transport's [`FrameTx`], flushing at queue-empty
-//! boundaries) and a **recv thread** reading the [`FrameRx`] and demuxing
-//! arriving frames by `(channel, from, to)` into per-endpoint inboxes.
+//! bounded outbound frame queue and an inbound demux path keyed by
+//! `(channel, from, to)`. All links are serviced by a single I/O thread
+//! (`net-reactor-{p}`) sleeping in `poll(2)` over the peer descriptors
+//! plus a self-wake pipe ([`crate::net::reactor`]): readiness, not
+//! threads, multiplexes peers, so net I/O thread count stays ≤ 2 per
+//! process regardless of the mesh size (the old per-peer send/recv
+//! thread pair — 2·(P−1) threads — survives only as the
+//! [`NetLink::Threads`] bench baseline).
+//!
+//! Per link the reactor keeps an outbound byte cursor
+//! ([`reactor::OutCursor`]) fed by draining the bounded queue, written
+//! with gather (`writev`-style) syscalls when the socket is writable
+//! (`POLLOUT` registered only while unsent bytes exist), and an
+//! incremental [`FrameDecoder`] fed from readiness-driven reads.
+//! Shared-memory links ([`NetLink::Shm`]) copy the same cursor bytes
+//! into a `/dev/shm` ring and read the peer's ring through the same
+//! decoder — zero frame bytes through the kernel — with the retained
+//! bootstrap socket as a poll-able doorbell. In-process transports
+//! ([`NetLink::Virtual`]: loopback, chaos) register the reactor's waker
+//! and ride the *same* demux code path, which is how the seeded chaos
+//! adversary exercises the reactor's decode loop in property tests.
 //!
 //! Ordering: all traffic from process `P` to process `Q` — every worker,
 //! both planes — rides ONE queue and ONE ordered byte stream, so each
@@ -24,17 +41,17 @@
 //! and clones the decoded `Arc` into each destination worker's inbox.
 //! **Fan-out FIFO obligation**: per-sender FIFO must survive the fan-out
 //! point, and it does, structurally — a sender's broadcast frames arrive
-//! on its process's single ordered stream, are decoded by that link's one
-//! recv thread in arrival order, and are appended to every destination
-//! inbox before the next frame is touched. The only concurrent writer is
-//! the registration path draining frames that arrived *before* the
-//! channel's decoder existed; it runs under the broadcast-table lock,
-//! which the recv thread also takes until it has cached the decoder, so
-//! parked frames are fanned out before any later frame on the same link.
-//! The destination set always names every worker of the process, so no
-//! mailbox is skipped: each observer still applies a prefix of each
-//! sender's batch stream, which is all the conservatism argument in
-//! [`crate::progress::exchange`] requires.
+//! on its process's single ordered stream, are demuxed by the one
+//! reactor thread in arrival order, and are appended to every
+//! destination inbox before the next frame is touched. The only
+//! concurrent writer is the registration path draining frames that
+//! arrived *before* the channel's decoder existed; it runs under the
+//! broadcast-table lock, which the demux path also takes until it has
+//! cached the decoder, so parked frames are fanned out before any later
+//! frame on the same link. The destination set always names every worker
+//! of the process, so no mailbox is skipped: each observer still applies
+//! a prefix of each sender's batch stream, which is all the conservatism
+//! argument in [`crate::progress::exchange`] requires.
 //!
 //! Backpressure: the outbound queue is bounded. [`NetSender::send`] never
 //! blocks — a full queue hands the message back exactly like a full SPSC
@@ -43,29 +60,38 @@
 //! applies unchanged across processes. Full-queue rejections are counted
 //! as *send-queue stalls* in the per-worker [`NetStats`]. The inbound side
 //! is bounded too: past a per-link high-water mark of unconsumed demuxed
-//! payloads, the recv thread stops reading its stream, TCP flow control
-//! fills the sender's socket, the sender's bounded queue fills, and its
-//! `Full` rejections reach the remote staging machinery — the end-to-end
-//! backpressure of the intra-process rings, reconstructed across the wire
-//! (stalling a transport is always safe: holding a message longer is
-//! conservative).
+//! payloads, the reactor deregisters the link's read interest (`POLLIN`
+//! toggling — the epoll-style expression of the old recv-thread sleep),
+//! TCP flow control fills the sender's socket, the sender's bounded queue
+//! fills, and its `Full` rejections reach the remote staging machinery —
+//! the end-to-end backpressure of the intra-process rings, reconstructed
+//! across the wire (stalling a transport is always safe: holding a
+//! message longer is conservative). A receiving endpoint that drains its
+//! link back under the mark rings the reactor's waker so read interest
+//! returns promptly.
 //!
 //! Allocation: payloads are encoded into and decoded from pooled
 //! `Lease<Vec<u8>>` buffers (returned cross-thread by drop), and message
 //! batches decode straight into pooled record buffers through the codec's
-//! decode context — the cross-process path allocates only what the codec
-//! itself requires, and the intra-process path is untouched.
+//! decode context — the reactor's read buffers, cursors, and demux caches
+//! are all warmed once and reused, so the cross-process path allocates
+//! only what the codec itself requires.
 
 use super::codec::{
-    encode_progress_broadcast, BroadcastWire, FrameHeader, ProgressUpdates, Wire, WireError,
-    WireReader, MAX_FRAME_PAYLOAD,
+    encode_progress_broadcast, BroadcastWire, FrameDecoder, FrameHeader, ProgressUpdates, Wire,
+    WireError, WireReader, FRAME_HEADER_BYTES, MAX_FRAME_PAYLOAD,
 };
-use super::transport::{Frame, FrameRx, FrameTx, Link, NetError};
+use super::reactor::{poll_fds, waker_pair, OutCursor, PollFd, Waker, WakerFd, WriteOutcome};
+use super::shm::{ShmConsumer, ShmLink, ShmProducer};
+use super::transport::{Frame, FrameRx, FrameTx, NetError};
 use crate::buffer::{BufferPool, Lease};
 use crate::worker::ring::RingSendError;
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
 use std::marker::PhantomData;
+use std::net::{Shutdown, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::TryRecvError;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -77,6 +103,32 @@ use std::time::{Duration, Instant};
 /// the wire `to` is a `u32`, so the sentinel is `u32::MAX`; real worker
 /// indices stay far below it.)
 pub const BROADCAST_DEST: usize = u32::MAX as usize;
+
+/// One established link toward a remote process, in whichever transport
+/// the bootstrap negotiated. `Tcp`, `Shm`, and `Virtual` links are all
+/// driven by the process's single reactor thread; `Threads` keeps the
+/// legacy per-peer send/recv thread pair alive as the bench baseline the
+/// reactor is measured against.
+pub enum NetLink {
+    /// A connected peer socket, owned nonblocking by the reactor.
+    Tcp(TcpStream),
+    /// A shared-memory ring pair for a co-located peer, plus the retained
+    /// bootstrap socket as doorbell (see [`crate::net::shm`]).
+    Shm(ShmLink),
+    /// An in-process transport pair (loopback, chaos) riding the
+    /// reactor's demux path via its registered waker.
+    Virtual(Box<dyn FrameTx>, Box<dyn FrameRx>),
+    /// The legacy blocking transport pair with dedicated send/recv
+    /// threads (2 threads per peer) — bench baseline only.
+    Threads(Box<dyn FrameTx>, Box<dyn FrameRx>),
+}
+
+impl NetLink {
+    /// Wraps an in-process transport pair as a reactor-driven link.
+    pub fn virtual_pair(tx: impl FrameTx, rx: impl FrameRx) -> NetLink {
+        NetLink::Virtual(Box::new(tx), Box::new(rx))
+    }
+}
 
 /// Prefix-sum view of a cluster's worker layout: process `p` hosts the
 /// contiguous global index block `[base(p), base(p) + workers(p))`, with
@@ -141,19 +193,29 @@ impl ClusterShape {
     }
 }
 
-/// How long a send thread sleeps waiting for frames before re-checking
-/// shutdown flags.
+/// How long the reactor sleeps in `poll` with nothing ready (backstops
+/// any wake lost to a full doorbell buffer), and how long a legacy send
+/// thread sleeps waiting for frames.
+const POLL_WAIT_MS: i32 = 50;
 const SEND_WAIT: Duration = Duration::from_millis(50);
 
-/// After shutdown is requested, how long recv threads keep draining the
-/// stream (letting a slower peer finish cleanly) before giving up.
+/// After shutdown is requested, how long the reactor (or a legacy recv
+/// thread) keeps draining inbound streams (letting a slower peer finish
+/// cleanly) before giving up.
 const RECV_LINGER: Duration = Duration::from_secs(2);
 
 /// Payload buffers retained per sending endpoint.
 const SEND_POOL_SLOTS: usize = 16;
 
+/// Bytes per readiness-driven read (socket and shm-ring alike).
+const READ_CHUNK: usize = 64 << 10;
+
+/// Consecutive reads the reactor takes from one link before pumping the
+/// others (fairness bound within one loop pass).
+const READS_PER_PUMP: usize = 8;
+
 /// Per-worker network counters, updated lock-free by the worker's own
-/// endpoints (sends, stalls) and the fabric's recv threads (receives).
+/// endpoints (sends, stalls) and the reactor's demux path (receives).
 #[derive(Default)]
 pub struct NetStats {
     frames_sent: AtomicU64,
@@ -167,7 +229,26 @@ pub struct NetStats {
     progress_batches_recv: AtomicU64,
 }
 
-/// A point-in-time snapshot of one worker's [`NetStats`].
+/// Process-wide reactor counters (one I/O thread, so one set per
+/// fabric). Snapshotted into worker slot 0's [`NetTelemetry`] so the
+/// per-process Σ rows in the telemetry table stay exact.
+#[derive(Default)]
+struct ReactorStats {
+    /// `poll(2)` returns.
+    poll_wakeups: AtomicU64,
+    /// Polls that returned with no descriptor ready (timeout backstop).
+    spurious_wakeups: AtomicU64,
+    /// Gather writes the kernel accepted only partially.
+    partial_writes: AtomicU64,
+    /// Outbound stalls on a full shared-memory ring.
+    shm_full_stalls: AtomicU64,
+    /// Frame bytes handed to the kernel (TCP writes; shm links keep this
+    /// at ZERO — the co-location win the bench pins).
+    kernel_bytes_tx: AtomicU64,
+}
+
+/// A point-in-time snapshot of one worker's [`NetStats`] (plus, on
+/// worker slot 0, the process-wide reactor counters).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NetTelemetry {
     /// Frames this worker pushed into outbound queues.
@@ -196,6 +277,17 @@ pub struct NetTelemetry {
     /// exactly `workers-in-process × progress frames received` — the
     /// dedup factor the cluster tests assert.
     pub progress_batches_recv: u64,
+    /// Reactor `poll(2)` wakeups (process-wide; reported on slot 0).
+    pub poll_wakeups: u64,
+    /// Polls that found nothing ready (process-wide; slot 0).
+    pub spurious_wakeups: u64,
+    /// Partially accepted gather writes (process-wide; slot 0).
+    pub partial_writes: u64,
+    /// Full shared-memory-ring outbound stalls (process-wide; slot 0).
+    pub shm_full_stalls: u64,
+    /// Frame bytes that crossed the kernel outbound (process-wide; slot
+    /// 0). Zero on pure-shm meshes.
+    pub kernel_frame_bytes_tx: u64,
 }
 
 impl NetStats {
@@ -210,6 +302,11 @@ impl NetStats {
             progress_bytes_sent: self.progress_bytes_sent.load(Ordering::Relaxed),
             progress_frames_recv: self.progress_frames_recv.load(Ordering::Relaxed),
             progress_batches_recv: self.progress_batches_recv.load(Ordering::Relaxed),
+            poll_wakeups: 0,
+            spurious_wakeups: 0,
+            partial_writes: 0,
+            shm_full_stalls: 0,
+            kernel_frame_bytes_tx: 0,
         }
     }
 }
@@ -217,8 +314,10 @@ impl NetStats {
 /// The bounded outbound frame queue toward one remote process.
 struct OutQueue {
     inner: Mutex<OutInner>,
-    /// Signaled on push and on close.
+    /// Signaled on push and on close (legacy send threads sleep here).
     arrived: Condvar,
+    /// The reactor's waker, rung on empty→nonempty pushes and on close.
+    waker: OnceLock<Arc<Waker>>,
     /// Frames admitted before [`push`](OutQueue::push) reports `Full`.
     capacity: usize,
 }
@@ -235,11 +334,15 @@ impl OutQueue {
         OutQueue {
             inner: Mutex::new(OutInner { frames: VecDeque::new(), closed: false }),
             arrived: Condvar::new(),
+            waker: OnceLock::new(),
             capacity: capacity.max(2),
         }
     }
 
-    /// Enqueues a frame; a full queue or closed link hands it back.
+    /// Enqueues a frame; a full queue or closed link hands it back. An
+    /// empty→nonempty transition rings the reactor (one syscall per
+    /// burst, not per frame: while the queue stays nonempty the reactor
+    /// is already due to drain it).
     fn push(&self, frame: Frame) -> Result<(), RingSendError<Frame>> {
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
@@ -248,14 +351,20 @@ impl OutQueue {
         if inner.frames.len() >= self.capacity {
             return Err(RingSendError::Full(frame));
         }
+        let was_empty = inner.frames.is_empty();
         inner.frames.push_back(frame);
         drop(inner);
         self.arrived.notify_all();
+        if was_empty {
+            if let Some(waker) = self.waker.get() {
+                waker.wake();
+            }
+        }
         Ok(())
     }
 
     /// Cheap admission probe: `(would_reject_as_full, closed)`. Racy by
-    /// nature (the send thread drains concurrently) — callers still handle
+    /// nature (the I/O side drains concurrently) — callers still handle
     /// `Full`/`Disconnected` from [`OutQueue::push`]; this only lets them
     /// skip work a rejection would waste.
     fn status(&self) -> (bool, bool) {
@@ -263,15 +372,29 @@ impl OutQueue {
         (inner.frames.len() >= self.capacity, inner.closed)
     }
 
-    /// Marks the queue closed (senders get `Disconnected`; the send thread
+    /// Marks the queue closed (senders get `Disconnected`; the I/O side
     /// drains what was already admitted, then finishes the transport).
     fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.arrived.notify_all();
+        if let Some(waker) = self.waker.get() {
+            waker.wake();
+        }
+    }
+
+    /// Nonblocking drain (the reactor's path): hands every queued frame
+    /// to `take`, returns the closed flag.
+    fn drain_now(&self, take: &mut dyn FnMut(Frame)) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        for frame in inner.frames.drain(..) {
+            take(frame);
+        }
+        inner.closed
     }
 
     /// Moves every queued frame into `into`, waiting up to [`SEND_WAIT`]
-    /// if none are queued. Returns `(got_any, closed)`.
+    /// if none are queued (the legacy send thread's path). Returns
+    /// `(got_any, closed)`.
     fn drain_wait(&self, into: &mut Vec<Frame>) -> (bool, bool) {
         let mut inner = self.inner.lock().unwrap();
         if inner.frames.is_empty() && !inner.closed {
@@ -293,8 +416,8 @@ enum InboxItem {
     Shared(Arc<dyn Any + Send + Sync>),
 }
 
-/// One endpoint's inbound queue, filled by the recv thread (and, for
-/// broadcast channels, the fan-out point).
+/// One endpoint's inbound queue, filled by the reactor's demux path (and,
+/// for broadcast channels, the fan-out point).
 struct Inbox {
     queue: Mutex<VecDeque<InboxItem>>,
 }
@@ -307,15 +430,17 @@ impl Inbox {
 
 type Key = (usize, usize, usize); // (channel, from, to)
 
-/// A recv thread's local demux cache: inbox handles resolved once per key
-/// so the steady-state frame path never takes the fabric-wide registry
-/// lock.
+/// The demux path's local cache: inbox handles resolved once per key so
+/// the steady-state frame path never takes the fabric-wide registry lock.
 type InboxCache = HashMap<Key, Arc<Inbox>>;
+
+/// Same for broadcast fan-out decoders: resolved once per channel.
+type FanOutCache = HashMap<usize, Arc<FanOutFn>>;
 
 /// A registered broadcast channel's fan-out decoder: parses one frame
 /// payload (with the channel's shared decode context) and distributes the
-/// decoded item through the caller's demux cache. Shared by every recv
-/// thread, called one frame at a time per link.
+/// decoded item through the caller's demux cache. Called one frame at a
+/// time per link by the demux path.
 type FanOutFn =
     dyn Fn(&NetFabric, &FrameHeader, &[u8], &mut InboxCache) -> Result<(), WireError>
         + Send
@@ -342,46 +467,134 @@ pub struct NetFabric {
     /// Set once a remote process's stream has ended (orderly or not):
     /// endpoints reading from it report `Disconnected` once drained.
     peer_gone: Vec<AtomicBool>,
-    /// Per-link count of demuxed-but-unconsumed payloads. The recv thread
-    /// stops reading its stream while this exceeds [`NetFabric::inbound_hwm`]
-    /// — TCP flow control then backpressures the sender, whose bounded
-    /// outbound queue fills, whose `Full` rejections reach the staging
-    /// machinery: the end-to-end backpressure of the intra-process rings,
-    /// reconstructed across the wire.
+    /// Per-link count of demuxed-but-unconsumed payloads. The reactor
+    /// drops the link's read interest while this exceeds
+    /// [`NetFabric::inbound_hwm`] — TCP flow control then backpressures
+    /// the sender, whose bounded outbound queue fills, whose `Full`
+    /// rejections reach the staging machinery: the end-to-end
+    /// backpressure of the intra-process rings, reconstructed across the
+    /// wire.
     inbound_depth: Vec<Arc<AtomicUsize>>,
     /// High-water mark for `inbound_depth` (per link).
     inbound_hwm: usize,
-    /// Demux registry, shared by recv threads (insert) and receiving
-    /// endpoints (claim). Touched once per key: each recv thread keeps a
+    /// Demux registry, shared by the demux path (insert) and receiving
+    /// endpoints (claim). Touched once per key: the demux path keeps a
     /// local cache, so the steady-state frame path takes only the target
     /// inbox's own lock, never this registry's.
     inboxes: Mutex<HashMap<Key, Arc<Inbox>>>,
     /// Broadcast channel registry: fan-out decoders plus frames parked
-    /// before registration. Locked per frame only until a recv thread has
-    /// cached its channel's decoder.
+    /// before registration. Locked per frame only until the demux path
+    /// has cached its channel's decoder.
     broadcasts: Mutex<BroadcastTable>,
     /// Per-local-worker counters.
     stats: Vec<Arc<NetStats>>,
+    /// Process-wide reactor counters.
+    reactor: Arc<ReactorStats>,
+    /// The reactor's waker (set once the reactor exists).
+    reactor_waker: OnceLock<Arc<Waker>>,
     /// Per-local-worker park/unpark targets (registered by the owning
     /// `Fabric` alongside its own registry).
     wakers: Vec<OnceLock<Thread>>,
     /// Orderly-shutdown flag for the I/O threads.
     stop: Arc<AtomicBool>,
-    /// The send/recv threads, joined by [`NetFabric::shutdown`].
+    /// Net I/O threads (reactor + any legacy pairs), joined by
+    /// [`NetFabric::shutdown`].
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// How many I/O threads this fabric runs (the ≤ 2 invariant the
+    /// cluster tests assert).
+    io_thread_count: usize,
+}
+
+/// Reactor-side state of one TCP link.
+struct TcpDriver {
+    peer: usize,
+    stream: TcpStream,
+    queue: Arc<OutQueue>,
+    cursor: OutCursor,
+    decoder: FrameDecoder,
+    read_buf: Vec<u8>,
+    tx_done: bool,
+    rx_done: bool,
+}
+
+/// Reactor-side state of one shared-memory link.
+struct ShmDriver {
+    peer: usize,
+    queue: Arc<OutQueue>,
+    cursor: OutCursor,
+    prod: ShmProducer,
+    cons: ShmConsumer,
+    doorbell: TcpStream,
+    doorbell_eof: bool,
+    decoder: FrameDecoder,
+    bell_buf: [u8; 64],
+    tx_done: bool,
+    rx_done: bool,
+}
+
+/// Reactor-side state of one in-process (loopback/chaos) link.
+struct VirtualDriver {
+    peer: usize,
+    queue: Arc<OutQueue>,
+    tx: Box<dyn FrameTx>,
+    rx: Box<dyn FrameRx>,
+    batch: Vec<Frame>,
+    tx_done: bool,
+    rx_done: bool,
+}
+
+enum Driver {
+    Tcp(TcpDriver),
+    Shm(ShmDriver),
+    Virtual(VirtualDriver),
+}
+
+impl Driver {
+    fn tx_done(&self) -> bool {
+        match self {
+            Driver::Tcp(d) => d.tx_done,
+            Driver::Shm(d) => d.tx_done,
+            Driver::Virtual(d) => d.tx_done,
+        }
+    }
+
+    fn rx_done(&self) -> bool {
+        match self {
+            Driver::Tcp(d) => d.rx_done,
+            Driver::Shm(d) => d.rx_done,
+            Driver::Virtual(d) => d.rx_done,
+        }
+    }
+
+    fn peer(&self) -> usize {
+        match self {
+            Driver::Tcp(d) => d.peer,
+            Driver::Shm(d) => d.peer,
+            Driver::Virtual(d) => d.peer,
+        }
+    }
+}
+
+/// One doorbell byte toward the peer's reactor. `WouldBlock` (and any
+/// other error) is deliberately ignored: a full doorbell buffer already
+/// holds unread wake bytes, and the peer's poll timeout backstops the
+/// rest.
+fn ring_doorbell(doorbell: &TcpStream) {
+    let _ = (&*doorbell).write(&[1u8]);
 }
 
 impl NetFabric {
     /// Builds the net fabric for `process` of the cluster shaped by
     /// `shape` (`shape[p]` workers hosted by process `p` — unequal counts
-    /// are first-class), spawning one send and one recv thread per
-    /// connected link. `links[p]` is the transport pair toward process
-    /// `p` (`None` at `process`); `queue_capacity` bounds each outbound
-    /// queue (frames).
+    /// are first-class). `links[p]` is the established link toward
+    /// process `p` (`None` at `process`); `queue_capacity` bounds each
+    /// outbound queue (frames). All reactor-mode links (TCP, shm,
+    /// virtual) share ONE spawned I/O thread; each legacy
+    /// [`NetLink::Threads`] link adds its send/recv pair.
     pub fn new(
         process: usize,
         shape: Vec<usize>,
-        links: Vec<Option<Link>>,
+        links: Vec<Option<NetLink>>,
         queue_capacity: usize,
     ) -> Arc<Self> {
         let shape = ClusterShape::new(&shape);
@@ -389,6 +602,13 @@ impl NetFabric {
         assert!(process < processes, "process index out of range");
         assert_eq!(links.len(), processes, "one link slot per process");
         let local_workers = shape.workers(process);
+        let reactor_links = links
+            .iter()
+            .flatten()
+            .filter(|link| !matches!(link, NetLink::Threads(..)))
+            .count();
+        let thread_links = links.iter().flatten().count() - reactor_links;
+        let io_thread_count = usize::from(reactor_links > 0) + 2 * thread_links;
         let fabric = Arc::new(NetFabric {
             process,
             shape,
@@ -405,27 +625,99 @@ impl NetFabric {
             inboxes: Mutex::new(HashMap::new()),
             broadcasts: Mutex::new(BroadcastTable::default()),
             stats: (0..local_workers).map(|_| Arc::new(NetStats::default())).collect(),
+            reactor: Arc::new(ReactorStats::default()),
+            reactor_waker: OnceLock::new(),
             wakers: (0..local_workers).map(|_| OnceLock::new()).collect(),
             stop: Arc::new(AtomicBool::new(false)),
             threads: Mutex::new(Vec::new()),
+            io_thread_count,
         });
+        let waker = if reactor_links > 0 {
+            let (waker, waker_fd) = waker_pair().expect("reactor waker pair");
+            let _ = fabric.reactor_waker.set(waker.clone());
+            Some((waker, waker_fd))
+        } else {
+            None
+        };
         let mut threads = Vec::new();
+        let mut drivers: Vec<Driver> = Vec::new();
         for (peer, link) in links.into_iter().enumerate() {
-            let Some((tx, rx)) = link else { continue };
+            let Some(link) = link else { continue };
             let queue = fabric.out[peer].as_ref().expect("queue per link").clone();
-            let stop = fabric.stop.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("net-send-{process}-to-{peer}"))
-                    .spawn(move || send_loop(tx, queue, stop))
-                    .expect("spawn net send thread"),
-            );
+            if let NetLink::Threads(tx, rx) = link {
+                let stop = fabric.stop.clone();
+                let stats = fabric.reactor.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("net-send-{process}-to-{peer}"))
+                        .spawn(move || send_loop(tx, queue, stop, stats))
+                        .expect("spawn net send thread"),
+                );
+                let fab = fabric.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("net-recv-{process}-from-{peer}"))
+                        .spawn(move || fab.recv_loop(peer, rx))
+                        .expect("spawn net recv thread"),
+                );
+                continue;
+            }
+            let (reactor_waker, _) = waker.as_ref().expect("reactor links imply a waker");
+            let _ = queue.waker.set(reactor_waker.clone());
+            match link {
+                NetLink::Tcp(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    stream.set_nonblocking(true).expect("nonblocking peer socket");
+                    drivers.push(Driver::Tcp(TcpDriver {
+                        peer,
+                        stream,
+                        queue,
+                        cursor: OutCursor::new(),
+                        decoder: FrameDecoder::new(),
+                        read_buf: vec![0; READ_CHUNK],
+                        tx_done: false,
+                        rx_done: false,
+                    }));
+                }
+                NetLink::Shm(link) => {
+                    let _ = link.doorbell.set_nodelay(true);
+                    link.doorbell.set_nonblocking(true).expect("nonblocking doorbell");
+                    drivers.push(Driver::Shm(ShmDriver {
+                        peer,
+                        queue,
+                        cursor: OutCursor::new(),
+                        prod: link.tx,
+                        cons: link.rx,
+                        doorbell: link.doorbell,
+                        doorbell_eof: false,
+                        decoder: FrameDecoder::new(),
+                        bell_buf: [0; 64],
+                        tx_done: false,
+                        rx_done: false,
+                    }));
+                }
+                NetLink::Virtual(tx, mut rx) => {
+                    rx.register_waker(reactor_waker.clone());
+                    drivers.push(Driver::Virtual(VirtualDriver {
+                        peer,
+                        queue,
+                        tx,
+                        rx,
+                        batch: Vec::new(),
+                        tx_done: false,
+                        rx_done: false,
+                    }));
+                }
+                NetLink::Threads(..) => unreachable!("handled above"),
+            }
+        }
+        if let Some((_, waker_fd)) = waker {
             let fab = fabric.clone();
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("net-recv-{process}-from-{peer}"))
-                    .spawn(move || fab.recv_loop(peer, rx))
-                    .expect("spawn net recv thread"),
+                    .name(format!("net-reactor-{process}"))
+                    .spawn(move || fab.reactor_loop(drivers, waker_fd))
+                    .expect("spawn net reactor thread"),
             );
         }
         *fabric.threads.lock().unwrap() = threads;
@@ -440,6 +732,13 @@ impl NetFabric {
     /// Total processes in the cluster.
     pub fn processes(&self) -> usize {
         self.shape.processes()
+    }
+
+    /// Net I/O threads this fabric runs: 1 (the reactor) for any mix of
+    /// TCP/shm/virtual links regardless of peer count, plus 2 per legacy
+    /// `Threads` link.
+    pub fn io_threads(&self) -> usize {
+        self.io_thread_count
     }
 
     /// The process a global worker index belongs to (contiguous blocks of
@@ -478,9 +777,26 @@ impl NetFabric {
         self.stats[local].clone()
     }
 
-    /// A snapshot of local worker slot `local`'s counters.
+    /// A snapshot of local worker slot `local`'s counters. The
+    /// process-wide reactor counters ride on slot 0 (exactly once per
+    /// process, so aggregated Σ rows stay exact).
     pub fn telemetry(&self, local: usize) -> NetTelemetry {
-        self.stats[local].snapshot()
+        let mut t = self.stats[local].snapshot();
+        if local == 0 {
+            t.poll_wakeups = self.reactor.poll_wakeups.load(Ordering::Relaxed);
+            t.spurious_wakeups = self.reactor.spurious_wakeups.load(Ordering::Relaxed);
+            t.partial_writes = self.reactor.partial_writes.load(Ordering::Relaxed);
+            t.shm_full_stalls = self.reactor.shm_full_stalls.load(Ordering::Relaxed);
+            t.kernel_frame_bytes_tx = self.reactor.kernel_bytes_tx.load(Ordering::Relaxed);
+        }
+        t
+    }
+
+    /// Rouses the reactor thread (no-op for a pure-`Threads` fabric).
+    fn wake_reactor(&self) {
+        if let Some(waker) = self.reactor_waker.get() {
+            waker.wake();
+        }
     }
 
     /// Claims the typed sending endpoint of `(chan, from, to)` where `to`
@@ -558,7 +874,7 @@ impl NetFabric {
     ///
     /// Idempotent (every local worker registers on claiming its progress
     /// endpoints; the first wins). Frames that arrived before the first
-    /// registration were parked by the recv threads and are fanned out
+    /// registration were parked by the demux path and are fanned out
     /// here, in arrival order, under the table lock — so no later frame
     /// on the same link can overtake them (the fan-out FIFO obligation in
     /// the module docs).
@@ -591,6 +907,7 @@ impl NetFabric {
         });
         if let Some(parked) = table.parked.remove(&chan) {
             let mut cache = InboxCache::new();
+            let replayed = !parked.is_empty();
             for (header, payload) in parked {
                 // Release the park-time inbound-depth charge (the fan-out
                 // below re-charges one unit per destination delivery).
@@ -600,15 +917,20 @@ impl NetFabric {
                     panic!("net: malformed broadcast frame payload: {e}");
                 }
             }
+            if replayed {
+                // The replay may have released depth back under the
+                // high-water mark: restore the links' read interest.
+                self.wake_reactor();
+            }
         }
         table.decoders.insert(chan, decode);
     }
 
     /// Distributes one decoded broadcast item: an `Arc` clone into each
-    /// destination worker's inbox, wakes included. Called by the link's
-    /// recv thread (or, for parked frames, the registering worker under
-    /// the broadcast-table lock), one frame at a time per link, which is
-    /// what preserves per-sender FIFO per mailbox. Inbox handles resolve
+    /// destination worker's inbox, wakes included. Called by the demux
+    /// path (or, for parked frames, the registering worker under the
+    /// broadcast-table lock), one frame at a time per link, which is what
+    /// preserves per-sender FIFO per mailbox. Inbox handles resolve
     /// through the caller's demux cache, so the steady state touches only
     /// each inbox's own lock, never the fabric-wide registry.
     fn fan_out(
@@ -621,7 +943,7 @@ impl NetFabric {
         let peer = self.process_of(header.from);
         let depth = &self.inbound_depth[peer];
         let base = self.local_base();
-        let bytes = (header.len + super::codec::FRAME_HEADER_BYTES) as u64;
+        let bytes = (header.len + FRAME_HEADER_BYTES) as u64;
         // The physical frame is counted once, toward its first
         // destination; every destination's logical delivery is counted in
         // `progress_batches_recv` (their ratio is the dedup factor).
@@ -653,105 +975,479 @@ impl NetFabric {
     }
 
     /// The inbox for `key`, created on first touch (by either the claiming
-    /// endpoint or the recv thread — frames can arrive before the local
+    /// endpoint or the demux path — frames can arrive before the local
     /// graph construction reaches the channel).
     fn inbox(&self, key: Key) -> Arc<Inbox> {
         self.inboxes.lock().unwrap().entry(key).or_insert_with(Inbox::new).clone()
     }
 
-    /// The recv-thread body for the link from `peer`.
+    /// Demuxes one arrived frame: broadcast frames fan out (or park until
+    /// their channel registers); point-to-point frames land in the
+    /// `(channel, from, to)` inbox. ONE code path for every link kind —
+    /// TCP, shm, loopback, chaos, and the legacy recv threads all end up
+    /// here.
+    fn demux_frame(
+        &self,
+        peer: usize,
+        header: FrameHeader,
+        payload: Lease<Vec<u8>>,
+        known: &mut InboxCache,
+        fanout: &mut FanOutCache,
+    ) {
+        debug_assert_eq!(self.process_of(header.from), peer, "frame from wrong link");
+        let depth = &self.inbound_depth[peer];
+        if header.to == BROADCAST_DEST {
+            // A per-process broadcast frame: decode once, fan the shared
+            // item out to its destination-worker set.
+            if let Some(decode) = fanout.get(&header.channel) {
+                if let Err(e) = (**decode)(self, &header, &payload, known) {
+                    // Malformed past the handshake is a protocol bug, not
+                    // recoverable input.
+                    panic!("net: malformed broadcast frame payload: {e}");
+                }
+                return;
+            }
+            let mut table = self.broadcasts.lock().unwrap();
+            let registered = table.decoders.get(&header.channel).cloned();
+            match registered {
+                Some(decode) => {
+                    // Seeing the decoder under the lock means any parked
+                    // predecessors were already fanned out.
+                    drop(table);
+                    if let Err(e) = (*decode)(self, &header, &payload, known) {
+                        panic!("net: malformed broadcast frame payload: {e}");
+                    }
+                    fanout.insert(header.channel, decode);
+                }
+                None => {
+                    // No decoder yet (graph construction has not reached
+                    // the channel): park in arrival order — under the
+                    // lock, so a concurrent registration cannot drain the
+                    // park list between our check and our push. A parked
+                    // frame counts toward this link's inbound depth
+                    // (released when the registration replays it), so a
+                    // peer that floods before local construction finishes
+                    // hits the high-water mark and stalls on transport
+                    // backpressure instead of growing the park list
+                    // without bound.
+                    depth.fetch_add(1, Ordering::Relaxed);
+                    let parked = table.parked.entry(header.channel).or_default();
+                    parked.push((header, payload));
+                }
+            }
+            return;
+        }
+        debug_assert_eq!(self.process_of(header.to), self.process, "frame for another process");
+        let local = header.to - self.local_base();
+        let stats = &self.stats[local];
+        stats.frames_recv.fetch_add(1, Ordering::Relaxed);
+        let bytes = (payload.len() + FRAME_HEADER_BYTES) as u64;
+        stats.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
+        let key = (header.channel, header.from, header.to);
+        let inbox = known.entry(key).or_insert_with(|| self.inbox(key));
+        depth.fetch_add(1, Ordering::Relaxed);
+        inbox.queue.lock().unwrap().push_back(InboxItem::Bytes(payload));
+        if let Some(thread) = self.wakers[local].get() {
+            thread.unpark();
+        }
+    }
+
+    /// Marks the stream from `peer` ended and wakes every local worker so
+    /// none sleeps through the disconnect.
+    fn mark_peer_gone(&self, peer: usize) {
+        self.peer_gone[peer].store(true, Ordering::Release);
+        for waker in &self.wakers {
+            if let Some(thread) = waker.get() {
+                thread.unpark();
+            }
+        }
+    }
+
+    /// The reactor thread: one `poll`-driven loop servicing every link.
+    ///
+    /// Each pass pumps every driver (nonblocking sends + reads); when a
+    /// full pass makes no progress it builds the interest set — the waker
+    /// pipe always; each TCP socket for `POLLIN` while under the inbound
+    /// high-water mark and `POLLOUT` while its cursor holds unsent bytes;
+    /// each shm doorbell for `POLLIN` — and sleeps in `poll`. Lost-wakeup
+    /// safety: a waker byte written before (or during) the sleep stays
+    /// readable until drained, so wake-before-poll always returns
+    /// immediately; the bounded timeout backstops everything else.
+    fn reactor_loop(self: Arc<Self>, mut drivers: Vec<Driver>, mut waker_fd: WakerFd) {
+        let mut known: InboxCache = HashMap::new();
+        let mut fanout: FanOutCache = HashMap::new();
+        let mut pollfds: Vec<PollFd> = Vec::with_capacity(drivers.len() + 1);
+        let mut stop_seen_at: Option<Instant> = None;
+        use super::reactor::{POLLIN, POLLOUT};
+        loop {
+            let mut progress = false;
+            for driver in drivers.iter_mut() {
+                progress |= match driver {
+                    Driver::Tcp(d) => self.pump_tcp(d, &mut known, &mut fanout),
+                    Driver::Shm(d) => self.pump_shm(d, &mut known, &mut fanout),
+                    Driver::Virtual(d) => self.pump_virtual(d, &mut known, &mut fanout),
+                };
+            }
+            if progress {
+                continue;
+            }
+            if self.stop.load(Ordering::Acquire) {
+                let seen = *stop_seen_at.get_or_insert_with(Instant::now);
+                let all_tx = drivers.iter().all(|d| d.tx_done());
+                let all_rx = drivers.iter().all(|d| d.rx_done());
+                // Outbound must drain fully (in-flight frames still
+                // deliver); inbound lingers briefly so a slower peer can
+                // finish its stream cleanly — local workers have already
+                // completed, so frames missed afterwards have no consumer.
+                if all_tx && (all_rx || seen.elapsed() >= RECV_LINGER) {
+                    break;
+                }
+            }
+            pollfds.clear();
+            pollfds.push(PollFd::new(waker_fd.fd(), POLLIN));
+            for driver in &drivers {
+                match driver {
+                    Driver::Tcp(d) => {
+                        let mut events = 0i16;
+                        if !d.rx_done
+                            && self.inbound_depth[d.peer].load(Ordering::Relaxed)
+                                <= self.inbound_hwm
+                        {
+                            events |= POLLIN;
+                        }
+                        if !d.tx_done && !d.cursor.is_empty() {
+                            events |= POLLOUT;
+                        }
+                        if events != 0 {
+                            pollfds.push(PollFd::new(d.stream.as_raw_fd(), events));
+                        }
+                    }
+                    Driver::Shm(d) => {
+                        if !d.doorbell_eof && !(d.tx_done && d.rx_done) {
+                            pollfds.push(PollFd::new(d.doorbell.as_raw_fd(), POLLIN));
+                        }
+                    }
+                    Driver::Virtual(_) => {}
+                }
+            }
+            match poll_fds(&mut pollfds, POLL_WAIT_MS) {
+                Ok(ready) => {
+                    self.reactor.poll_wakeups.fetch_add(1, Ordering::Relaxed);
+                    if ready == 0 {
+                        self.reactor.spurious_wakeups.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(1)),
+            }
+            waker_fd.drain();
+        }
+        // Reactor exit: every link is finished (or abandoned past the
+        // linger). Close queues and mark peers so endpoints observe the
+        // disconnect.
+        for driver in &drivers {
+            if let Some(queue) = self.out[driver.peer()].as_ref() {
+                queue.close();
+            }
+            self.mark_peer_gone(driver.peer());
+        }
+    }
+
+    /// One nonblocking service pass over a TCP link. Returns whether any
+    /// byte or state moved (the reactor re-pumps until quiescent).
+    fn pump_tcp(&self, d: &mut TcpDriver, known: &mut InboxCache, fanout: &mut FanOutCache) -> bool {
+        let mut progress = false;
+        if !d.tx_done {
+            let TcpDriver { queue, cursor, .. } = d;
+            let closed = queue.drain_now(&mut |frame| cursor.push(frame));
+            while !d.cursor.is_empty() {
+                match d.cursor.write_to(&mut d.stream) {
+                    WriteOutcome::Wrote { bytes, partial } => {
+                        self.reactor.kernel_bytes_tx.fetch_add(bytes as u64, Ordering::Relaxed);
+                        if partial {
+                            self.reactor.partial_writes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if bytes > 0 {
+                            progress = true;
+                        } else {
+                            break; // interrupted; retry next pass
+                        }
+                    }
+                    WriteOutcome::Blocked => break,
+                    WriteOutcome::Failed(_) => {
+                        // Link dead: refuse further sends, drop the rest.
+                        d.queue.close();
+                        let _ = d.stream.shutdown(Shutdown::Write);
+                        d.tx_done = true;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            if closed && !d.tx_done && d.cursor.is_empty() {
+                // Orderly write-side shutdown: everything admitted went
+                // out; the peer now reads a clean end-of-stream.
+                let _ = d.stream.shutdown(Shutdown::Write);
+                d.tx_done = true;
+                progress = true;
+            }
+        }
+        if !d.rx_done {
+            let peer = d.peer;
+            let mut reads = 0;
+            while reads < READS_PER_PUMP
+                && self.inbound_depth[peer].load(Ordering::Relaxed) <= self.inbound_hwm
+            {
+                match d.stream.read(&mut d.read_buf) {
+                    Ok(0) => {
+                        // EOF. Mid-frame it is a truncation — either way
+                        // the peer is gone; endpoints drain then
+                        // disconnect.
+                        d.rx_done = true;
+                        self.mark_peer_gone(peer);
+                        progress = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        reads += 1;
+                        let TcpDriver { decoder, read_buf, .. } = d;
+                        let result = decoder.push(&read_buf[..n], |header, payload| {
+                            self.demux_frame(peer, header, payload, known, fanout)
+                        });
+                        if result.is_err() {
+                            d.rx_done = true;
+                            self.mark_peer_gone(peer);
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        d.rx_done = true;
+                        self.mark_peer_gone(peer);
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+        }
+        progress
+    }
+
+    /// One service pass over a shared-memory link: drain the doorbell,
+    /// copy cursor bytes into our ring (parking against the consumer when
+    /// full), read the peer's ring through the decoder (parking against
+    /// the producer when empty), honoring the park handshake documented
+    /// in [`crate::net::shm`].
+    fn pump_shm(&self, d: &mut ShmDriver, known: &mut InboxCache, fanout: &mut FanOutCache) -> bool {
+        let mut progress = false;
+        if !d.doorbell_eof {
+            loop {
+                match d.doorbell.read(&mut d.bell_buf) {
+                    Ok(0) => {
+                        d.doorbell_eof = true;
+                        break;
+                    }
+                    Ok(_) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        d.doorbell_eof = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if !d.tx_done {
+            if d.doorbell_eof {
+                // The peer process died: nobody will read the ring.
+                d.queue.close();
+                d.tx_done = true;
+                progress = true;
+            } else {
+                let closed = {
+                    let ShmDriver { queue, cursor, .. } = d;
+                    queue.drain_now(&mut |frame| cursor.push(frame))
+                };
+                if !d.cursor.is_empty() {
+                    let ShmDriver { cursor, prod, .. } = d;
+                    let wrote = cursor.copy_to(|bytes| prod.write(bytes));
+                    if wrote > 0 {
+                        progress = true;
+                        if d.prod.take_consumer_parked() {
+                            ring_doorbell(&d.doorbell);
+                        }
+                    }
+                    if !d.cursor.is_empty() {
+                        // Ring full: park, then re-check (SeqCst) so a
+                        // racing release cannot be missed.
+                        self.reactor.shm_full_stalls.fetch_add(1, Ordering::Relaxed);
+                        if d.prod.park_then_check() > 0 {
+                            d.prod.unpark();
+                            let ShmDriver { cursor, prod, .. } = d;
+                            let wrote = cursor.copy_to(|bytes| prod.write(bytes));
+                            if wrote > 0 {
+                                progress = true;
+                                if d.prod.take_consumer_parked() {
+                                    ring_doorbell(&d.doorbell);
+                                }
+                            }
+                        }
+                        // Still parked: the peer rings our doorbell after
+                        // it frees space.
+                    }
+                }
+                if closed && !d.tx_done && d.cursor.is_empty() {
+                    d.prod.close();
+                    // The peer must notice end-of-stream even if parked.
+                    ring_doorbell(&d.doorbell);
+                    d.tx_done = true;
+                    progress = true;
+                }
+            }
+        }
+        if !d.rx_done {
+            let peer = d.peer;
+            let mut reads = 0;
+            while reads < READS_PER_PUMP
+                && self.inbound_depth[peer].load(Ordering::Relaxed) <= self.inbound_hwm
+            {
+                let mut decode_err = false;
+                let n = {
+                    let ShmDriver { cons, decoder, .. } = d;
+                    cons.read(READ_CHUNK, &mut |bytes| {
+                        if decode_err {
+                            return;
+                        }
+                        let result = decoder.push(bytes, |header, payload| {
+                            self.demux_frame(peer, header, payload, known, fanout)
+                        });
+                        if result.is_err() {
+                            decode_err = true;
+                        }
+                    })
+                };
+                if decode_err {
+                    d.rx_done = true;
+                    self.mark_peer_gone(peer);
+                    progress = true;
+                    break;
+                }
+                if n == 0 {
+                    // Empty. End-of-stream only if the close flag (or a
+                    // dead peer) is confirmed by a FRESH availability
+                    // re-check — bytes are published before the flag.
+                    if (d.cons.is_closed() || d.doorbell_eof) && d.cons.available() == 0 {
+                        d.rx_done = true;
+                        self.mark_peer_gone(peer);
+                        progress = true;
+                    } else if d.cons.park_then_check() > 0 {
+                        // A publish raced the park: consume it now.
+                        d.cons.unpark();
+                        continue;
+                    }
+                    break;
+                }
+                progress = true;
+                reads += 1;
+                // We freed ring space: wake a producer stalled on full.
+                if d.cons.take_producer_parked() {
+                    ring_doorbell(&d.doorbell);
+                }
+            }
+        }
+        progress
+    }
+
+    /// One service pass over an in-process (loopback/chaos) link: batch
+    /// the queue through the transport's `FrameTx`, drain its waker-mode
+    /// `FrameRx` through the same demux as the socket paths.
+    fn pump_virtual(
+        &self,
+        d: &mut VirtualDriver,
+        known: &mut InboxCache,
+        fanout: &mut FanOutCache,
+    ) -> bool {
+        let mut progress = false;
+        if !d.tx_done {
+            let closed = {
+                let VirtualDriver { queue, batch, .. } = d;
+                queue.drain_now(&mut |frame| batch.push(frame))
+            };
+            if !d.batch.is_empty() {
+                progress = true;
+                let mut failed = false;
+                for frame in d.batch.drain(..) {
+                    if d.tx.send(&frame).is_err() {
+                        failed = true;
+                        break;
+                    }
+                    // Dropping `frame` returns its payload lease to the
+                    // sending endpoint's pool.
+                }
+                d.batch.clear();
+                if !failed && d.tx.flush().is_err() {
+                    failed = true;
+                }
+                if failed {
+                    d.queue.close();
+                    let _ = d.tx.finish();
+                    d.tx_done = true;
+                }
+            }
+            if closed && !d.tx_done {
+                let _ = d.tx.finish();
+                d.tx_done = true;
+                progress = true;
+            }
+        }
+        if !d.rx_done && self.inbound_depth[d.peer].load(Ordering::Relaxed) <= self.inbound_hwm {
+            let peer = d.peer;
+            let VirtualDriver { rx, .. } = d;
+            let result = rx.recv(&mut |header, payload| {
+                self.demux_frame(peer, header, payload, known, fanout)
+            });
+            match result {
+                Ok(n) => {
+                    if n > 0 {
+                        progress = true;
+                    }
+                }
+                Err(_) => {
+                    // Orderly close and truncation alike: the peer's
+                    // stream has ended.
+                    d.rx_done = true;
+                    self.mark_peer_gone(peer);
+                    progress = true;
+                }
+            }
+        }
+        progress
+    }
+
+    /// The legacy recv-thread body for the link from `peer`
+    /// ([`NetLink::Threads`] only): blocking reads, same demux.
     fn recv_loop(self: Arc<Self>, peer: usize, mut rx: Box<dyn FrameRx>) {
-        let base = self.local_base();
         let depth = self.inbound_depth[peer].clone();
         let mut stop_seen_at: Option<Instant> = None;
-        // Recv-thread-local demux cache: the shared registry mutex is only
-        // taken the first time a key is seen, not once per frame.
-        let mut known: HashMap<Key, Arc<Inbox>> = HashMap::new();
-        // Same for broadcast fan-out decoders: the table lock is taken per
-        // frame only until the channel's decoder is cached (which also
-        // guarantees any parked frames were fanned out first).
-        let mut fanout: HashMap<usize, Arc<FanOutFn>> = HashMap::new();
+        let mut known: InboxCache = HashMap::new();
+        let mut fanout: FanOutCache = HashMap::new();
         loop {
             if self.stop.load(Ordering::Acquire) {
-                // Linger briefly so a slower peer can finish its stream
-                // cleanly; local workers have already completed, so frames
-                // we miss after the grace period have no consumer anyway.
                 let seen = *stop_seen_at.get_or_insert_with(Instant::now);
                 if seen.elapsed() >= RECV_LINGER {
                     break;
                 }
             }
             // Inbound flow control: past the high-water mark, stop reading
-            // and let TCP push back on the sender until workers drain.
+            // and let the transport push back on the sender.
             if depth.load(Ordering::Relaxed) > self.inbound_hwm {
                 std::thread::sleep(Duration::from_micros(500));
                 continue;
             }
             let this = &self;
-            let depth = &depth;
-            let known = &mut known;
-            let fanout = &mut fanout;
             let result = rx.recv(&mut |header, payload| {
-                debug_assert_eq!(this.process_of(header.from), peer, "frame from wrong link");
-                if header.to == BROADCAST_DEST {
-                    // A per-process broadcast frame: decode once, fan the
-                    // shared item out to its destination-worker set.
-                    if let Some(decode) = fanout.get(&header.channel) {
-                        if let Err(e) = (**decode)(this, &header, &payload, known) {
-                            // Malformed past the handshake is a protocol
-                            // bug, not recoverable input.
-                            panic!("net: malformed broadcast frame payload: {e}");
-                        }
-                        return;
-                    }
-                    let mut table = this.broadcasts.lock().unwrap();
-                    let registered = table.decoders.get(&header.channel).cloned();
-                    match registered {
-                        Some(decode) => {
-                            // Seeing the decoder under the lock means any
-                            // parked predecessors were already fanned out.
-                            drop(table);
-                            if let Err(e) = (*decode)(this, &header, &payload, known) {
-                                panic!("net: malformed broadcast frame payload: {e}");
-                            }
-                            fanout.insert(header.channel, decode);
-                        }
-                        None => {
-                            // No decoder yet (graph construction has not
-                            // reached the channel): park in arrival order —
-                            // under the lock, so a concurrent registration
-                            // cannot drain the park list between our check
-                            // and our push. A parked frame counts toward
-                            // this link's inbound depth (released when the
-                            // registration replays it), so a peer that
-                            // floods before local construction finishes
-                            // hits the high-water mark and stalls on TCP
-                            // backpressure instead of growing the park
-                            // list without bound.
-                            depth.fetch_add(1, Ordering::Relaxed);
-                            let parked = table.parked.entry(header.channel).or_default();
-                            parked.push((header, payload));
-                        }
-                    }
-                    return;
-                }
-                debug_assert_eq!(
-                    this.process_of(header.to),
-                    this.process,
-                    "frame for another process"
-                );
-                let local = header.to - base;
-                let stats = &this.stats[local];
-                stats.frames_recv.fetch_add(1, Ordering::Relaxed);
-                let bytes = (payload.len() + super::codec::FRAME_HEADER_BYTES) as u64;
-                stats.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
-                let key = (header.channel, header.from, header.to);
-                let inbox = known.entry(key).or_insert_with(|| this.inbox(key));
-                depth.fetch_add(1, Ordering::Relaxed);
-                inbox.queue.lock().unwrap().push_back(InboxItem::Bytes(payload));
-                if let Some(thread) = this.wakers[local].get() {
-                    thread.unpark();
-                }
+                this.demux_frame(peer, header, payload, &mut known, &mut fanout)
             });
             match result {
                 Ok(_) => {}
@@ -759,13 +1455,7 @@ impl NetFabric {
                 Err(_e) => break, // transport failure: treat as peer-gone
             }
         }
-        self.peer_gone[peer].store(true, Ordering::Release);
-        // Wake every local worker so none sleeps through the disconnect.
-        for waker in &self.wakers {
-            if let Some(thread) = waker.get() {
-                thread.unpark();
-            }
-        }
+        self.mark_peer_gone(peer);
     }
 
     /// True iff the stream from `process` has ended.
@@ -775,14 +1465,15 @@ impl NetFabric {
 
     /// Orderly shutdown: called after every local worker has finished (and
     /// therefore flushed — `Worker::flush_now` runs on drop). Closes the
-    /// outbound queues (send threads drain what was admitted, then finish
-    /// their transports so peers see clean end-of-stream), then joins all
-    /// I/O threads.
+    /// outbound queues (the reactor and any legacy send threads drain
+    /// what was already admitted, then finish their transports so peers
+    /// see clean end-of-stream), then joins all I/O threads.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
         for queue in self.out.iter().flatten() {
             queue.close();
         }
+        self.wake_reactor();
         let threads = std::mem::take(&mut *self.threads.lock().unwrap());
         for handle in threads {
             let _ = handle.join();
@@ -790,18 +1481,25 @@ impl NetFabric {
     }
 }
 
-/// The send-thread body for one link.
-fn send_loop(mut tx: Box<dyn FrameTx>, queue: Arc<OutQueue>, stop: Arc<AtomicBool>) {
+/// The legacy send-thread body for one [`NetLink::Threads`] link.
+fn send_loop(
+    mut tx: Box<dyn FrameTx>,
+    queue: Arc<OutQueue>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ReactorStats>,
+) {
     let mut batch: Vec<Frame> = Vec::new();
     loop {
         let (got, closed) = queue.drain_wait(&mut batch);
         if got {
             let mut failed = false;
             for frame in batch.drain(..) {
+                let bytes = (FRAME_HEADER_BYTES + frame.payload.len()) as u64;
                 if tx.send(&frame).is_err() {
                     failed = true;
                     break;
                 }
+                stats.kernel_bytes_tx.fetch_add(bytes, Ordering::Relaxed);
                 // Dropping `frame` here returns its payload lease to the
                 // sending endpoint's pool.
             }
@@ -839,7 +1537,7 @@ pub struct NetSender<M> {
 
 impl<M: Wire + Send + 'static> NetSender<M> {
     /// Encodes and enqueues `m`, or hands it back if the outbound queue is
-    /// full (a *send-queue stall* — retry after the send thread drains) or
+    /// full (a *send-queue stall* — retry after the reactor drains) or
     /// the link is gone.
     pub fn send(&mut self, m: M) -> Result<(), RingSendError<M>> {
         // Probe before paying the encode: staged-flush retries call this
@@ -862,7 +1560,7 @@ impl<M: Wire + Send + 'static> NetSender<M> {
             payload.len(),
             MAX_FRAME_PAYLOAD
         );
-        let bytes = payload.len() + super::codec::FRAME_HEADER_BYTES;
+        let bytes = payload.len() + FRAME_HEADER_BYTES;
         match self.queue.push(Frame::new(self.chan, self.from, self.to, payload)) {
             Ok(()) => {
                 self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
@@ -929,7 +1627,7 @@ impl<T: Wire> NetBroadcastSender<T> {
             payload.len(),
             MAX_FRAME_PAYLOAD
         );
-        let bytes = (payload.len() + super::codec::FRAME_HEADER_BYTES) as u64;
+        let bytes = (payload.len() + FRAME_HEADER_BYTES) as u64;
         match self.queue.push(Frame::new(self.chan, self.from, BROADCAST_DEST, payload)) {
             Ok(()) => {
                 self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
@@ -974,6 +1672,17 @@ pub struct NetReceiver<M> {
 }
 
 impl<M: Wire + Send + 'static> NetReceiver<M> {
+    /// Releases one unit of the link's inbound-depth charge; crossing
+    /// back UNDER the high-water mark wakes the reactor so it restores
+    /// the link's read interest (the exact-crossing check keeps this to
+    /// one syscall per backpressure episode, zero in the steady state).
+    fn release_depth(&self) {
+        let prev = self.depth.fetch_sub(1, Ordering::Relaxed);
+        if prev == self.fabric.inbound_hwm + 1 {
+            self.fabric.wake_reactor();
+        }
+    }
+
     /// Pops and decodes the next message. `Empty` while the link is up but
     /// idle; `Disconnected` once the sending process's stream has ended
     /// *and* the inbox is drained.
@@ -981,7 +1690,7 @@ impl<M: Wire + Send + 'static> NetReceiver<M> {
         let item = self.inbox.queue.lock().unwrap().pop_front();
         match item {
             Some(InboxItem::Bytes(payload)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.release_depth();
                 let mut reader = match &self.context {
                     Some(context) => WireReader::with_context(&payload, &**context),
                     None => WireReader::new(&payload),
@@ -1001,7 +1710,7 @@ impl<M: Wire + Send + 'static> NetReceiver<M> {
                 }
             }
             Some(InboxItem::Shared(item)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.release_depth();
                 // The fan-out point already decoded the frame; this is one
                 // Arc downcast, no bytes touched.
                 match M::from_shared(item) {
@@ -1032,20 +1741,20 @@ mod tests {
     use crate::net::transport::loopback;
 
     /// Two "processes" of the given shape wired over the loopback
-    /// transport.
+    /// transport, each driven by its reactor thread.
     fn pair_shaped(shape: Vec<usize>, capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
         assert_eq!(shape.len(), 2);
         let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
         let a = NetFabric::new(
             0,
             shape.clone(),
-            vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as _))],
+            vec![None, Some(NetLink::virtual_pair(a_tx, a_rx))],
             capacity,
         );
         let b = NetFabric::new(
             1,
             shape,
-            vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as _)), None],
+            vec![Some(NetLink::virtual_pair(b_tx, b_rx)), None],
             capacity,
         );
         (a, b)
@@ -1054,6 +1763,15 @@ mod tests {
     /// Two single-worker "processes" wired over the loopback transport.
     fn pair(capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
         pair_shaped(vec![1, 1], capacity)
+    }
+
+    /// Concurrent orderly shutdown of both fabrics: each side's write
+    /// closure lets the other's read side finish without burning the
+    /// receive linger.
+    fn shutdown_both(a: Arc<NetFabric>, b: Arc<NetFabric>) {
+        let t = std::thread::spawn(move || b.shutdown());
+        a.shutdown();
+        t.join().unwrap();
     }
 
     fn recv_blocking<M: Wire + Send + 'static>(rx: &mut NetReceiver<M>) -> M {
@@ -1071,7 +1789,7 @@ mod tests {
     }
 
     /// Sends with retry: a transiently full outbound queue is backpressure
-    /// (the send thread is draining it), not an error.
+    /// (the reactor is draining it), not an error.
     fn send_retrying<M: Wire + Send + 'static>(tx: &mut NetSender<M>, mut m: M) {
         let deadline = Instant::now() + Duration::from_secs(10);
         loop {
@@ -1105,8 +1823,129 @@ mod tests {
             assert!(Instant::now() < deadline);
             std::thread::yield_now();
         }
-        a.shutdown();
-        b.shutdown();
+        shutdown_both(a, b);
+    }
+
+    /// The tentpole invariant at unit scale: ANY number of reactor-driven
+    /// links costs one I/O thread; only the legacy thread-pair baseline
+    /// pays two per peer.
+    #[test]
+    fn reactor_drives_every_link_on_one_io_thread() {
+        let (a, b) = pair(16);
+        assert_eq!(a.io_threads(), 1, "reactor mode is one I/O thread per process");
+        assert_eq!(b.io_threads(), 1);
+        shutdown_both(a, b);
+
+        let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
+        let a = NetFabric::new(
+            0,
+            vec![1, 1],
+            vec![None, Some(NetLink::Threads(Box::new(a_tx), Box::new(a_rx)))],
+            16,
+        );
+        let b = NetFabric::new(
+            1,
+            vec![1, 1],
+            vec![Some(NetLink::Threads(Box::new(b_tx), Box::new(b_rx))), None],
+            16,
+        );
+        assert_eq!(a.io_threads(), 2, "legacy baseline pays a send/recv pair per peer");
+        let mut tx = a.sender::<u64>(0, 0, 1);
+        let mut rx = b.receiver::<u64>(0, 0, 1);
+        for i in 0..20u64 {
+            send_retrying(&mut tx, i);
+        }
+        for i in 0..20u64 {
+            assert_eq!(recv_blocking(&mut rx), i);
+        }
+        shutdown_both(a, b);
+    }
+
+    /// A real socket pair through the reactor: nonblocking readiness
+    /// I/O, kernel bytes counted, FIFO preserved.
+    #[test]
+    fn tcp_reactor_round_trip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let a = NetFabric::new(0, vec![1, 1], vec![None, Some(NetLink::Tcp(client))], 64);
+        let b = NetFabric::new(1, vec![1, 1], vec![Some(NetLink::Tcp(server)), None], 64);
+        let mut tx = a.sender::<(u64, u64)>(3, 0, 1);
+        let mut rx = b.receiver::<(u64, u64)>(3, 0, 1);
+        let mut back_tx = b.sender::<u64>(4, 1, 0);
+        let mut back_rx = a.receiver::<u64>(4, 1, 0);
+        for i in 0..200u64 {
+            send_retrying(&mut tx, (i, i * 3));
+        }
+        for i in 0..200u64 {
+            assert_eq!(recv_blocking(&mut rx), (i, i * 3));
+        }
+        send_retrying(&mut back_tx, 42);
+        assert_eq!(recv_blocking(&mut back_rx), 42);
+        let t = a.telemetry(0);
+        assert!(t.kernel_frame_bytes_tx > 0, "TCP frames cross the kernel");
+        assert!(t.poll_wakeups > 0, "the reactor slept in poll");
+        shutdown_both(a, b);
+    }
+
+    /// A shared-memory link pair: frames cross through /dev/shm rings with
+    /// the bootstrap socket as doorbell — and ZERO frame bytes through the
+    /// kernel, the co-location win the bench pins.
+    #[test]
+    fn shm_link_moves_frames_with_zero_kernel_bytes() {
+        use crate::net::shm::{create_ring, open_ring};
+        const CAP: usize = 1 << 16;
+        // Rendezvous at unit scale: each side creates its outbound ring,
+        // the peer maps it, the files are unlinked once mapped.
+        let (path_ab, prod_ab) = create_ring(CAP).unwrap();
+        let (path_ba, prod_ba) = create_ring(CAP).unwrap();
+        let cons_ab = open_ring(&path_ab, CAP).unwrap();
+        let cons_ba = open_ring(&path_ba, CAP).unwrap();
+        let _ = std::fs::remove_file(&path_ab);
+        let _ = std::fs::remove_file(&path_ba);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let bell_a = TcpStream::connect(addr).unwrap();
+        let (bell_b, _) = listener.accept().unwrap();
+        let a = NetFabric::new(
+            0,
+            vec![1, 2],
+            vec![
+                None,
+                Some(NetLink::Shm(ShmLink { tx: prod_ab, rx: cons_ba, doorbell: bell_a })),
+            ],
+            64,
+        );
+        let b = NetFabric::new(
+            1,
+            vec![1, 2],
+            vec![
+                Some(NetLink::Shm(ShmLink { tx: prod_ba, rx: cons_ab, doorbell: bell_b })),
+                None,
+            ],
+            64,
+        );
+        assert_eq!(a.io_threads(), 1);
+        let mut tx = a.sender::<(u64, u64)>(3, 0, 1);
+        let mut rx = b.receiver::<(u64, u64)>(3, 0, 1);
+        let mut back_tx = b.sender::<u64>(4, 2, 0);
+        let mut back_rx = a.receiver::<u64>(4, 2, 0);
+        for i in 0..500u64 {
+            send_retrying(&mut tx, (i, !i));
+        }
+        for i in 0..500u64 {
+            assert_eq!(recv_blocking(&mut rx), (i, !i));
+        }
+        send_retrying(&mut back_tx, 7);
+        assert_eq!(recv_blocking(&mut back_rx), 7);
+        assert_eq!(
+            a.telemetry(0).kernel_frame_bytes_tx,
+            0,
+            "shm frames must not cross the kernel"
+        );
+        assert_eq!(b.telemetry(0).kernel_frame_bytes_tx, 0);
+        shutdown_both(a, b);
     }
 
     #[test]
@@ -1120,8 +1959,7 @@ mod tests {
         tx2.send(22).unwrap();
         assert_eq!(recv_blocking(&mut rx2), 22);
         assert_eq!(recv_blocking(&mut rx1), 11);
-        a.shutdown();
-        b.shutdown();
+        shutdown_both(a, b);
     }
 
     #[test]
@@ -1129,7 +1967,7 @@ mod tests {
         let (a, b) = pair(2);
         let mut tx = a.sender::<u64>(0, 0, 1);
         let mut rx = b.receiver::<u64>(0, 0, 1);
-        // Outpace the send thread until a Full is observed; every message
+        // Outpace the reactor until a Full is observed; every message
         // handed back is retried, so nothing is lost or reordered.
         let mut next = 0u64;
         let mut stalled = false;
@@ -1155,8 +1993,7 @@ mod tests {
         if stalled {
             assert!(a.telemetry(0).send_queue_stalls > 0);
         }
-        a.shutdown();
-        b.shutdown();
+        shutdown_both(a, b);
     }
 
     #[test]
@@ -1192,12 +2029,11 @@ mod tests {
         let (a, b) = pair(64);
         let mut tx = a.sender::<u64>(9, 0, 1);
         tx.send(77).unwrap();
-        // Give the recv thread time to demux before the endpoint exists.
+        // Give the reactor time to demux before the endpoint exists.
         std::thread::sleep(Duration::from_millis(100));
         let mut rx = b.receiver::<u64>(9, 0, 1);
         assert_eq!(recv_blocking(&mut rx), 77);
-        a.shutdown();
-        b.shutdown();
+        shutdown_both(a, b);
     }
 
     // -- Broadcast dedup: per-process frames with local fan-out --
@@ -1240,8 +2076,7 @@ mod tests {
         let rx_batches: u64 = (0..2).map(|w| b.telemetry(w).progress_batches_recv).sum();
         assert_eq!(rx_frames, 1, "one physical broadcast frame");
         assert_eq!(rx_batches, 2, "one logical delivery per destination worker");
-        a.shutdown();
-        b.shutdown();
+        shutdown_both(a, b);
     }
 
     /// Broadcast frames that arrive before any local worker registered the
@@ -1264,14 +2099,14 @@ mod tests {
             assert_eq!(*recv_blocking(&mut rx1), vec![update(t, 1)]);
             assert_eq!(*recv_blocking(&mut rx2), vec![update(t, 1)]);
         }
-        a.shutdown();
-        b.shutdown();
+        shutdown_both(a, b);
     }
 
     /// Seeded property: per-sender FIFO survives the fan-out point even
     /// when the transport adversarially tears, delays, and coalesces the
-    /// byte stream (the chaos transport) — every destination mailbox sees
-    /// every sender's batches in send order, none skipped.
+    /// byte stream (the chaos transport riding the reactor's demux path)
+    /// — every destination mailbox sees every sender's batches in send
+    /// order, none skipped.
     #[test]
     fn broadcast_fan_out_keeps_fifo_over_chaos_transport() {
         crate::testing::property("broadcast_fan_out_chaos_fifo", 10, |case, rng| {
@@ -1287,13 +2122,13 @@ mod tests {
             let a = NetFabric::new(
                 0,
                 shape.clone(),
-                vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as _))],
+                vec![None, Some(NetLink::virtual_pair(a_tx, a_rx))],
                 64,
             );
             let b = NetFabric::new(
                 1,
                 shape,
-                vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as _)), None],
+                vec![Some(NetLink::virtual_pair(b_tx, b_rx)), None],
                 64,
             );
             b.register_broadcast::<ProgressBroadcast<u64>>(11);
@@ -1313,8 +2148,7 @@ mod tests {
                     );
                 }
             }
-            a.shutdown();
-            b.shutdown();
+            shutdown_both(a, b);
         });
     }
 

@@ -12,10 +12,10 @@
 //!    fabric only after the progress batch carrying its `+1` produce count
 //!    has been made available to *every* peer.
 //!
-//! Nothing in either guarantee requires shared memory. This module
-//! therefore extends the fabric across process boundaries by providing
-//! ordered byte streams and a codec, and **any transport plugged in here
-//! must uphold**:
+//! Nothing in either guarantee requires shared memory — or threads, or
+//! sockets. This module therefore extends the fabric across process
+//! boundaries by providing ordered byte streams and a codec, and **any
+//! transport plugged in here must uphold**:
 //!
 //! * **reliable, ordered, exactly-once frame delivery per direction** —
 //!    this is what carries per-sender FIFO across the wire. All traffic
@@ -40,6 +40,31 @@
 //!    stall arbitrarily without threatening safety — only liveness asks
 //!    that streams eventually drain.
 //!
+//! **The reactor.** All of a process's links are driven by ONE I/O
+//! thread, the nonblocking poll-based reactor in [`fabric`] (built on the
+//! [`reactor`] primitives: `poll(2)`, a pipe-based waker, per-peer
+//! outbound byte cursors with gather writes). Readiness, not threads, is
+//! the multiplexing primitive: each peer socket is registered for
+//! `POLLIN` while the inbound high-water mark permits (flow control is
+//! interest toggling — deregistering read interest is how TCP
+//! backpressure reaches the remote staging machinery) and for `POLLOUT`
+//! only while its outbound cursor holds unsent bytes. Worker threads
+//! never touch a descriptor; they enqueue frames to bounded per-link
+//! queues and ring the waker. The old per-peer send/recv thread pair
+//! (2·(P−1) threads per process) survives only as the `tcp-threads`
+//! bench baseline; net I/O thread count is ≤ 2 per process regardless of
+//! the mesh size.
+//!
+//! **Shared memory.** Co-located processes (all `--addresses` loopback,
+//! or an explicit `net` config) skip the kernel's byte path entirely:
+//! [`shm`] maps one `/dev/shm` segment per directed link holding a
+//! bounded byte ring with Release-published positions (torn-read safe:
+//! a consumer only ever reads bytes beneath the published tail, and
+//! frames remain length-prefixed and decoder-reassembled exactly as on a
+//! socket). Parking rides a one-byte doorbell on the retained bootstrap
+//! TCP connection, so the ring still plugs into the same `poll` set —
+//! and frame bytes through the kernel are zero.
+//!
 //! **Broadcast dedup.** The progress plane's cross-process traffic is
 //! *deduplicated at the process boundary*: a Progcaster flush ships ONE
 //! [`codec::ProgressBroadcast`] frame per remote process — sender,
@@ -60,26 +85,37 @@
 //!   progress batches, per-process [`codec::ProgressBroadcast`] records),
 //!   frame headers, and the incremental torn-read-safe
 //!   [`codec::FrameDecoder`];
-//! * [`transport`] — frame endpoints over byte streams: TCP
-//!   (length-prefixed frames, per-peer send/recv thread pair), an
-//!   in-process loopback for deterministic tests, and the seeded
-//!   adversarial [`transport::chaos`] pair (torn writes, one-byte reads,
-//!   delayed/coalesced frames, mid-stream EOF) the transport and fabric
-//!   tests run on;
-//! * [`fabric`] — [`NetFabric`]: bounded outbound queues, demux inboxes,
-//!   the typed [`NetSender`] / [`NetReceiver`] endpoints that mirror
-//!   the SPSC ring contract (`Full` is backpressure, never an error) so
-//!   the worker fabric routes a channel over rings or over the wire
-//!   without the rest of the engine noticing, and the broadcast fan-out
-//!   point ([`fabric::NetFabric::register_broadcast`] +
-//!   [`NetBroadcastSender`]) behind the dedup.
+//! * [`reactor`] — the dependency-free readiness primitives: `poll(2)`
+//!   bindings, the pipe waker, and the per-peer outbound
+//!   [`reactor::OutCursor`] (gather writes for sockets, slice copies for
+//!   rings);
+//! * [`shm`] — the co-located fast path: `/dev/shm`-backed bounded byte
+//!   rings ([`shm::ShmProducer`] / [`shm::ShmConsumer`]) with
+//!   Release-published positions and doorbell parking;
+//! * [`transport`] — frame endpoints over byte streams: the legacy
+//!   thread-pair TCP endpoints (bench baseline), and the in-process
+//!   byte-stream transports that ride the reactor's demux path —
+//!   deterministic [`transport::loopback`] and the seeded adversarial
+//!   [`transport::chaos`] pair (torn writes, one-byte reads,
+//!   delayed/coalesced frames, mid-stream EOF) the transport, fabric,
+//!   and interleave tests run on;
+//! * [`fabric`] — [`NetFabric`]: the reactor loop, bounded outbound
+//!   queues, demux inboxes, the typed [`NetSender`] / [`NetReceiver`]
+//!   endpoints that mirror the SPSC ring contract (`Full` is
+//!   backpressure, never an error) so the worker fabric routes a channel
+//!   over rings or over the wire without the rest of the engine
+//!   noticing, and the broadcast fan-out point
+//!   ([`fabric::NetFabric::register_broadcast`] + [`NetBroadcastSender`])
+//!   behind the dedup.
 //!
-//! Follow-ons this structure leaves open: shared-memory segment
-//! transports (another `FrameTx`/`FrameRx`) and async I/O in place of
-//! the per-peer thread pair.
+//! Follow-ons this structure leaves open: `epoll`/`io_uring` in place of
+//! `poll` once meshes outgrow the linear descriptor scan, and futex
+//! parking in place of the shm doorbell byte.
 
 pub mod codec;
 pub mod fabric;
+pub mod reactor;
+pub mod shm;
 pub mod transport;
 
 pub use codec::{
@@ -87,9 +123,11 @@ pub use codec::{
     WireReader,
 };
 pub use fabric::{
-    ClusterShape, NetBroadcastSender, NetFabric, NetReceiver, NetSender, NetStats, NetTelemetry,
-    BROADCAST_DEST,
+    ClusterShape, NetBroadcastSender, NetFabric, NetLink, NetReceiver, NetSender, NetStats,
+    NetTelemetry, BROADCAST_DEST,
 };
+pub use reactor::{poll_fds, waker_pair, OutCursor, PollFd, Waker, WakerFd, WriteOutcome};
+pub use shm::{create_ring, open_ring, ShmConsumer, ShmLink, ShmProducer, SHM_RING_BYTES};
 pub use transport::{
     chaos, loopback, tcp_pair, ChaosConfig, ChaosRx, ChaosTx, Frame, FrameRx, FrameTx, Link,
     NetError,

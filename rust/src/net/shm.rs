@@ -1,0 +1,421 @@
+//! Shared-memory transport segments for co-located processes.
+//!
+//! When two cluster processes share a machine (both `--addresses` entries
+//! are loopback, or `--net shm` forces it), their frame bytes never need
+//! to cross the kernel: each *directed* link gets a file in `/dev/shm`
+//! (falling back to the temp dir) holding one bounded byte ring, mapped
+//! into both processes. The producer appends length-prefixed frame bytes
+//! and publishes its `tail`; the consumer reads only up to the published
+//! `tail` and releases space by publishing `head`. Because the consumer
+//! never observes bytes beyond a `Release`-published `tail`, torn reads
+//! cannot expose partially copied frames — and since the fabric feeds the
+//! ring through the same incremental [`FrameDecoder`] as TCP, a frame
+//! larger than the ring simply *streams* through it in pieces.
+//!
+//! Positions are monotonic `u64` byte counts (index = `pos & (capacity -
+//! 1)`), so full/empty never ambiguate and wraparound is a masked copy.
+//!
+//! **Parking.** The rings are polled by each process's net reactor, which
+//! sleeps in `poll(2)` — a memory ring has no descriptor, so each side
+//! keeps the bootstrap TCP connection as a *doorbell*: one byte written
+//! whenever the counterpart declared itself parked (`cons_waiting` /
+//! `prod_waiting` flags in the segment header, set-then-recheck with
+//! `SeqCst` on both sides so a wake is never missed). The doorbell
+//! socket sits in the reactor's poll set anyway, which also gives
+//! shared-memory links end-of-stream detection for free: a dying peer
+//! closes the socket. The reactor's bounded poll timeout backstops any
+//! doorbell lost to a full socket buffer.
+//!
+//! [`FrameDecoder`]: super::codec::FrameDecoder
+
+use std::fs::OpenOptions;
+use std::io;
+use std::net::TcpStream;
+use std::os::fd::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Bytes of frame data per directed link ring. Power of two. Small enough
+/// that wide meshes stay cheap (a P-process box maps P·(P−1) rings), big
+/// enough that steady-state frames stream without stalling.
+pub const SHM_RING_BYTES: usize = 1 << 20;
+
+// Segment header layout: producer- and consumer-published words on
+// separate cache lines, park flags on a third (touched only around
+// sleeps).
+const TAIL_OFF: usize = 0; // AtomicU64, producer-published
+const CLOSED_OFF: usize = 8; // AtomicU32, producer-published
+const HEAD_OFF: usize = 64; // AtomicU64, consumer-published
+const CONS_WAITING_OFF: usize = 128; // AtomicU32, consumer parks
+const PROD_WAITING_OFF: usize = 132; // AtomicU32, producer parks
+const DATA_OFF: usize = 192;
+
+const PROT_READ: i32 = 1;
+const PROT_WRITE: i32 = 2;
+const MAP_SHARED: i32 = 1;
+
+extern "C" {
+    fn mmap(addr: *mut u8, len: usize, prot: i32, flags: i32, fd: i32, offset: i64) -> *mut u8;
+    fn munmap(addr: *mut u8, len: usize) -> i32;
+}
+
+/// One mapped segment (header + ring data), unmapped on drop. The file
+/// itself may be unlinked while mapped — bootstrap does exactly that once
+/// both sides acknowledged their mapping, so crashed runs leak no
+/// `/dev/shm` entries.
+struct Segment {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the segment is plain shared memory; all cross-process access
+// goes through the atomics below with explicit ordering.
+unsafe impl Send for Segment {}
+
+impl Drop for Segment {
+    fn drop(&mut self) {
+        unsafe {
+            let _ = munmap(self.ptr, self.len);
+        }
+    }
+}
+
+impl Segment {
+    fn map(file: &std::fs::File, len: usize) -> io::Result<Segment> {
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Segment { ptr, len })
+    }
+
+    fn u64_at(&self, off: usize) -> &AtomicU64 {
+        debug_assert!(off + 8 <= DATA_OFF && off % 8 == 0);
+        unsafe { &*(self.ptr.add(off) as *const AtomicU64) }
+    }
+
+    fn u32_at(&self, off: usize) -> &AtomicU32 {
+        debug_assert!(off + 4 <= DATA_OFF && off % 4 == 0);
+        unsafe { &*(self.ptr.add(off) as *const AtomicU32) }
+    }
+
+    fn data(&self) -> *mut u8 {
+        unsafe { self.ptr.add(DATA_OFF) }
+    }
+}
+
+/// Monotonically distinguishes segments created by one process (several
+/// links, tests running in parallel).
+static SEGMENT_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// Where ring files live: `/dev/shm` when present (true memory backing),
+/// else the temp dir (mmap works the same; pages may touch disk).
+pub fn shm_dir() -> PathBuf {
+    let dev = Path::new("/dev/shm");
+    if dev.is_dir() {
+        dev.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// Creates a fresh ring file and maps its producer side. Returns the path
+/// (to hand to the peer, then unlink) and the producer handle.
+pub fn create_ring(capacity: usize) -> io::Result<(PathBuf, ShmProducer)> {
+    assert!(capacity.is_power_of_two(), "ring capacity must be a power of two");
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let nonce = SEGMENT_NONCE.fetch_add(1, Ordering::Relaxed);
+    let path = shm_dir().join(format!("ttd-ring-{}-{nonce}-{nanos:x}", std::process::id()));
+    let file = OpenOptions::new().read(true).write(true).create_new(true).open(&path)?;
+    // set_len zero-fills: positions, flags, and `closed` all start 0.
+    file.set_len((DATA_OFF + capacity) as u64)?;
+    let seg = Segment::map(&file, DATA_OFF + capacity)?;
+    Ok((path, ShmProducer { seg, capacity, tail: 0, head_cache: 0 }))
+}
+
+/// Maps the consumer side of a ring the peer created.
+pub fn open_ring(path: &Path, capacity: usize) -> io::Result<ShmConsumer> {
+    if !capacity.is_power_of_two() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "peer announced a non-power-of-two ring capacity",
+        ));
+    }
+    let file = OpenOptions::new().read(true).write(true).open(path)?;
+    let expected = (DATA_OFF + capacity) as u64;
+    if file.metadata()?.len() != expected {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "ring segment size disagrees with the announced capacity",
+        ));
+    }
+    let seg = Segment::map(&file, DATA_OFF + capacity)?;
+    Ok(ShmConsumer { seg, capacity, head: 0, tail_cache: 0 })
+}
+
+/// The producing side of one directed ring.
+pub struct ShmProducer {
+    seg: Segment,
+    capacity: usize,
+    /// Our published tail (we are its only writer).
+    tail: u64,
+    /// Last observed consumer head (refreshed when the ring looks full).
+    head_cache: u64,
+}
+
+impl ShmProducer {
+    /// Appends as much of `bytes` as fits, publishing `tail` after the
+    /// copy so the consumer never sees partially written bytes. Returns
+    /// the bytes accepted (possibly 0: ring full).
+    pub fn write(&mut self, bytes: &[u8]) -> usize {
+        if bytes.is_empty() {
+            return 0;
+        }
+        let mut free = self.capacity - (self.tail - self.head_cache) as usize;
+        if free < bytes.len() {
+            self.head_cache = self.seg.u64_at(HEAD_OFF).load(Ordering::Acquire);
+            free = self.capacity - (self.tail - self.head_cache) as usize;
+        }
+        let n = free.min(bytes.len());
+        if n == 0 {
+            return 0;
+        }
+        let mask = self.capacity - 1;
+        let idx = (self.tail as usize) & mask;
+        let first = n.min(self.capacity - idx);
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.seg.data().add(idx), first);
+            if n > first {
+                std::ptr::copy_nonoverlapping(bytes.as_ptr().add(first), self.seg.data(), n - first);
+            }
+        }
+        self.tail += n as u64;
+        self.seg.u64_at(TAIL_OFF).store(self.tail, Ordering::Release);
+        n
+    }
+
+    /// Free bytes, after refreshing the consumer's head.
+    pub fn free(&mut self) -> usize {
+        self.head_cache = self.seg.u64_at(HEAD_OFF).load(Ordering::Acquire);
+        self.capacity - (self.tail - self.head_cache) as usize
+    }
+
+    /// Marks end-of-stream (after the final bytes were written).
+    pub fn close(&self) {
+        self.seg.u32_at(CLOSED_OFF).store(1, Ordering::Release);
+    }
+
+    /// True (once) if the consumer declared itself parked since the last
+    /// call — the producer then rings the doorbell exactly once per park.
+    pub fn take_consumer_parked(&self) -> bool {
+        self.seg.u32_at(CONS_WAITING_OFF).swap(0, Ordering::SeqCst) == 1
+    }
+
+    /// Declares this producer parked (ring full), then re-checks free
+    /// space with `SeqCst` so a concurrent release cannot slip between
+    /// the check and the park. Returns the fresh free-byte count; if it
+    /// is positive the caller should clear the park and retry instead of
+    /// sleeping.
+    pub fn park_then_check(&mut self) -> usize {
+        self.seg.u32_at(PROD_WAITING_OFF).store(1, Ordering::SeqCst);
+        self.head_cache = self.seg.u64_at(HEAD_OFF).load(Ordering::SeqCst);
+        self.capacity - (self.tail - self.head_cache) as usize
+    }
+
+    /// Clears this producer's park flag (space appeared on the re-check).
+    pub fn unpark(&self) {
+        self.seg.u32_at(PROD_WAITING_OFF).store(0, Ordering::SeqCst);
+    }
+}
+
+/// The consuming side of one directed ring.
+pub struct ShmConsumer {
+    seg: Segment,
+    capacity: usize,
+    /// Our published head (we are its only writer).
+    head: u64,
+    /// Last observed producer tail (refreshed when the ring looks empty).
+    tail_cache: u64,
+}
+
+impl ShmConsumer {
+    /// Readable bytes, refreshing the producer's tail when the cached
+    /// view is drained.
+    pub fn available(&mut self) -> usize {
+        if self.tail_cache == self.head {
+            self.tail_cache = self.seg.u64_at(TAIL_OFF).load(Ordering::Acquire);
+        }
+        (self.tail_cache - self.head) as usize
+    }
+
+    /// Hands up to `max` available bytes to `sink` (in at most two slices
+    /// around the wrap point), then releases the space. Returns the bytes
+    /// consumed (possibly 0: ring empty).
+    pub fn read(&mut self, max: usize, sink: &mut dyn FnMut(&[u8])) -> usize {
+        let n = self.available().min(max);
+        if n == 0 {
+            return 0;
+        }
+        let mask = self.capacity - 1;
+        let idx = (self.head as usize) & mask;
+        let first = n.min(self.capacity - idx);
+        unsafe {
+            sink(std::slice::from_raw_parts(self.seg.data().add(idx), first));
+            if n > first {
+                sink(std::slice::from_raw_parts(self.seg.data(), n - first));
+            }
+        }
+        // Release after the sink copied out: the producer may then
+        // overwrite the space.
+        self.head += n as u64;
+        self.seg.u64_at(HEAD_OFF).store(self.head, Ordering::Release);
+        n
+    }
+
+    /// True once the producer marked end-of-stream. Meaningful only with
+    /// [`available`](Self::available) `== 0` re-checked *after* this read
+    /// — bytes are published before the close flag.
+    pub fn is_closed(&self) -> bool {
+        self.seg.u32_at(CLOSED_OFF).load(Ordering::Acquire) == 1
+    }
+
+    /// True (once) if the producer declared itself parked since the last
+    /// call — the consumer then rings the doorbell exactly once per park.
+    pub fn take_producer_parked(&self) -> bool {
+        self.seg.u32_at(PROD_WAITING_OFF).swap(0, Ordering::SeqCst) == 1
+    }
+
+    /// Declares this consumer parked (ring empty), then re-checks
+    /// availability with `SeqCst` so concurrently published bytes cannot
+    /// slip between the check and the park. Returns the fresh byte count;
+    /// if positive the caller should clear the park and read instead of
+    /// sleeping.
+    pub fn park_then_check(&mut self) -> usize {
+        self.seg.u32_at(CONS_WAITING_OFF).store(1, Ordering::SeqCst);
+        self.tail_cache = self.seg.u64_at(TAIL_OFF).load(Ordering::SeqCst);
+        (self.tail_cache - self.head) as usize
+    }
+
+    /// Clears this consumer's park flag (bytes appeared on the re-check).
+    pub fn unpark(&self) {
+        self.seg.u32_at(CONS_WAITING_OFF).store(0, Ordering::SeqCst);
+    }
+}
+
+/// One established shared-memory link toward a peer: the ring this
+/// process produces into, the ring it consumes from, and the retained
+/// bootstrap TCP connection serving as doorbell + liveness probe.
+pub struct ShmLink {
+    /// Ring this process writes frames into.
+    pub tx: ShmProducer,
+    /// Ring the peer writes frames into.
+    pub rx: ShmConsumer,
+    /// The bootstrap stream, kept for park wakeups and peer-death EOF.
+    pub doorbell: TcpStream,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(capacity: usize) -> (PathBuf, ShmProducer, ShmConsumer) {
+        let (path, prod) = create_ring(capacity).unwrap();
+        let cons = open_ring(&path, capacity).unwrap();
+        (path, prod, cons)
+    }
+
+    #[test]
+    fn ring_round_trips_bytes_across_the_wrap_point() {
+        let (path, mut prod, mut cons) = ring(64);
+        let mut sent = Vec::new();
+        let mut got = Vec::new();
+        // Push well past the capacity so positions wrap several times.
+        for round in 0..20u8 {
+            let chunk: Vec<u8> = (0..23).map(|i| round.wrapping_mul(31).wrapping_add(i)).collect();
+            let mut off = 0;
+            while off < chunk.len() {
+                let n = prod.write(&chunk[off..]);
+                off += n;
+                if n == 0 {
+                    let drained = cons.read(usize::MAX, &mut |b| got.extend_from_slice(b));
+                    assert!(drained > 0, "full ring with an idle consumer cannot drain");
+                }
+            }
+            sent.extend_from_slice(&chunk);
+        }
+        cons.read(usize::MAX, &mut |b| got.extend_from_slice(b));
+        assert_eq!(got, sent, "byte stream must survive wraparound intact");
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn ring_bounds_writes_by_free_space() {
+        let (path, mut prod, mut cons) = ring(64);
+        let accepted = prod.write(&[7u8; 200]);
+        assert_eq!(accepted, 64, "a 64-byte ring accepts exactly 64 bytes");
+        assert_eq!(prod.write(&[7u8; 1]), 0, "full ring accepts nothing");
+        let mut got = Vec::new();
+        cons.read(10, &mut |b| got.extend_from_slice(b));
+        assert_eq!(got.len(), 10);
+        assert_eq!(prod.free(), 10, "released bytes become free space");
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn ring_works_across_threads_and_survives_unlink() {
+        let (path, mut prod, mut cons) = ring(256);
+        // Unlink immediately: the mappings keep the segment alive, which
+        // is exactly what bootstrap relies on for crash-safe cleanup.
+        std::fs::remove_file(&path).unwrap();
+        let producer = std::thread::spawn(move || {
+            let payload: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+            let mut off = 0;
+            while off < payload.len() {
+                let n = prod.write(&payload[off..]);
+                off += n;
+                if n == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            prod.close();
+        });
+        let mut got = Vec::new();
+        loop {
+            let n = cons.read(usize::MAX, &mut |b| got.extend_from_slice(b));
+            if n == 0 && cons.is_closed() && cons.available() == 0 {
+                break;
+            }
+            if n == 0 {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got.len(), 10_000);
+        assert!(got.iter().enumerate().all(|(i, b)| *b == i as u8));
+    }
+
+    #[test]
+    fn park_handshake_never_loses_a_publish() {
+        let (path, mut prod, mut cons) = ring(64);
+        // Consumer parks on an empty ring; a racing publish must be
+        // caught by the re-check.
+        assert_eq!(cons.park_then_check(), 0);
+        prod.write(&[1u8; 8]);
+        assert!(prod.take_consumer_parked(), "producer must observe the park and ring");
+        assert_eq!(cons.park_then_check(), 8, "re-check must see the racing publish");
+        cons.unpark();
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -2,10 +2,9 @@
 //!
 //! This generalizes the push/pop of `worker::ring` into *frame endpoints*
 //! over ordered byte streams. A transport connecting two processes is a
-//! pair of halves — a [`FrameTx`] owned by the sending thread and a
-//! [`FrameRx`] owned by the receiving thread — and must uphold exactly the
-//! properties the timestamp-token protocol needs (see the [`crate::net`]
-//! module docs):
+//! pair of halves — a [`FrameTx`] for the sending side and a [`FrameRx`]
+//! for the receiving side — and must uphold exactly the properties the
+//! timestamp-token protocol needs (see the [`crate::net`] module docs):
 //!
 //! * **reliable, ordered delivery**: frames arrive exactly once, in send
 //!   order, per direction (this is what makes per-sender FIFO hold across
@@ -13,26 +12,47 @@
 //! * **orderly shutdown**: after [`FrameTx::finish`], every frame already
 //!   sent is still delivered before the peer observes end-of-stream.
 //!
-//! Three implementations:
+//! Since the single-reactor refactor the fabric drives links in two
+//! modes. Real sockets and shared-memory rings are owned *directly* by
+//! the per-process reactor thread (see [`crate::net::fabric`] and
+//! [`crate::net::reactor`]) — nonblocking descriptors, gather writes,
+//! readiness polling. The trait pair here covers everything that is not a
+//! kernel descriptor, in both of *its* modes:
 //!
-//! * [`TcpTx`] / [`TcpRx`] — length-prefixed frames over a `TcpStream`
-//!   (`TCP_NODELAY`, buffered writes flushed at queue-empty boundaries;
-//!   reads of arbitrary size fed through the incremental
-//!   [`FrameDecoder`], so torn reads are the normal case, not an error).
-//! * [`loopback`] — an in-process pair backed by a mutex/condvar queue
-//!   with pooled payload buffers, for deterministic transport-level tests
-//!   (and allocation pins) without sockets.
-//! * [`chaos`] — the deterministic *adversarial* pair: the same contract
-//!   as TCP, but the byte stream between the halves is torn apart by a
-//!   seeded schedule — frames split at arbitrary byte boundaries, reads
-//!   clamped down to one byte, writes delayed and coalesced across
-//!   frames, and (optionally) the stream cut mid-frame, exactly the way a
-//!   dying peer cuts it. Codec and fabric tests run on it so torn-read
-//!   handling is exercised at the transport seam, not just inside the
-//!   decoder.
+//! * **waker-driven** (the default inside a fabric): the fabric registers
+//!   the reactor's [`Waker`] via [`FrameRx::register_waker`]; `recv` then
+//!   never blocks — it drains whatever bytes are currently available and
+//!   returns, and newly arriving bytes wake the reactor instead. This is
+//!   how the deterministic in-process transports ride the *same* reactor
+//!   demux path as TCP;
+//! * **standalone** (no waker registered): `recv` blocks up to a bounded
+//!   timeout, for direct transport-level tests.
+//!
+//! Two implementations, both built on one shared byte-stream primitive
+//! (no frame boundaries survive it — frames are length-prefixed bytes
+//! reassembled by the incremental [`FrameDecoder`], exactly like the
+//! socket read path):
+//!
+//! * [`loopback`] — the deterministic in-process pair for transport-level
+//!   tests and allocation pins: bytes go straight through, whole;
+//! * [`chaos`] — the deterministic *adversarial* pair: the same byte
+//!   stream torn apart by a seeded schedule — frames split at arbitrary
+//!   byte boundaries, reads clamped down to one byte, writes delayed and
+//!   coalesced across frames, and (optionally) the stream cut mid-frame,
+//!   exactly the way a dying peer cuts it. Codec, fabric, and interleave
+//!   tests run on it so torn-read handling is exercised through the
+//!   reactor's readiness path, not just inside the decoder.
+//!
+//! [`TcpTx`] / [`TcpRx`] remain as the *legacy thread-pair* endpoints
+//! (length-prefixed frames over a blocking `TcpStream`): the
+//! `tcp-threads` transport keeps the old 2·(P−1)-thread architecture
+//! alive as the bench baseline the reactor is measured against.
+//!
+//! [`Waker`]: super::reactor::Waker
 
 use super::codec::{FrameDecoder, FrameHeader, WireError, FRAME_HEADER_BYTES};
-use crate::buffer::{BufferPool, Lease};
+use super::reactor::Waker;
+use crate::buffer::Lease;
 use crate::testing::Rng;
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -109,28 +129,39 @@ pub trait FrameTx: Send + 'static {
 }
 
 /// A connected transport toward one peer process: the sending half and
-/// the receiving half, each owned by its dedicated I/O thread.
+/// the receiving half.
 pub type Link = (Box<dyn FrameTx>, Box<dyn FrameRx>);
 
 /// The receiving half of a transport.
 pub trait FrameRx: Send + 'static {
-    /// Waits (bounded by an implementation-chosen timeout) for input and
-    /// feeds every completed frame to `emit`, in order. Returns the number
-    /// of frames emitted — `0` means the wait timed out with no input
-    /// (poll again). `Err(NetError::Closed)` is the peer's orderly
-    /// end-of-stream after all frames were delivered.
+    /// Feeds completed frames to `emit`, in order, returning how many
+    /// were emitted. Standalone (no waker registered): waits up to an
+    /// implementation-chosen timeout for input, so `Ok(0)` means "poll
+    /// again". Waker-driven (after [`register_waker`]): never blocks —
+    /// drains every currently available byte and returns; newly arriving
+    /// bytes wake the reactor instead. `Ok(0)` may also mean bytes were
+    /// consumed that completed no frame yet (a torn read mid-frame).
+    /// `Err(NetError::Closed)` is the peer's orderly end-of-stream after
+    /// all frames were delivered.
+    ///
+    /// [`register_waker`]: FrameRx::register_waker
     fn recv(
         &mut self,
         emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
     ) -> Result<usize, NetError>;
+
+    /// Switches this receiver into waker-driven (nonblocking) mode:
+    /// arriving bytes call [`Waker::wake`]. Default: ignored (descriptor
+    /// transports are polled by readiness, not woken).
+    fn register_waker(&mut self, _waker: Arc<Waker>) {}
 }
 
 // ---------------------------------------------------------------------------
-// TCP.
+// TCP (legacy thread-pair endpoints; the reactor drives sockets directly).
 // ---------------------------------------------------------------------------
 
-/// How long a [`TcpRx::recv`] blocks before returning `Ok(0)` so its
-/// owning thread can observe shutdown flags.
+/// How long a standalone [`FrameRx::recv`] blocks before returning
+/// `Ok(0)` so its owning thread can observe shutdown flags.
 const READ_TIMEOUT: Duration = Duration::from_millis(50);
 
 /// Sending half of a TCP transport (owns a write-buffered stream clone).
@@ -227,72 +258,148 @@ impl FrameRx for TcpRx {
 }
 
 // ---------------------------------------------------------------------------
-// Loopback.
+// The shared in-process byte stream (loopback and chaos both ride it).
 // ---------------------------------------------------------------------------
 
-/// Idle payload buffers retained by one loopback direction.
-const LOOPBACK_POOL_SLOTS: usize = 32;
-
-/// One direction of a loopback link.
-struct LoopQueue {
-    inner: Mutex<LoopInner>,
+/// One direction's raw byte stream between two in-process halves. No
+/// frame boundary survives it — senders push length-prefixed bytes,
+/// receivers reassemble through the incremental [`FrameDecoder`] — so the
+/// in-process transports exercise exactly the shape of the socket read
+/// path. Arriving bytes notify a blocked standalone reader (condvar) or
+/// the registered reactor [`Waker`], whichever mode the receiver is in.
+struct ByteStream {
+    inner: Mutex<ByteInner>,
     arrived: Condvar,
-    /// Payload buffers cycle sender -> queue -> receiver -> (drop) -> back
-    /// here, so a steady-state loopback stream performs no allocation —
-    /// the alloc pins drive the net progress plane over this transport.
-    pool: BufferPool<Vec<u8>>,
+    waker: Mutex<Option<Arc<Waker>>>,
 }
 
-struct LoopInner {
-    frames: VecDeque<(FrameHeader, Lease<Vec<u8>>)>,
+struct ByteInner {
+    bytes: VecDeque<u8>,
     finished: bool,
 }
 
-impl LoopQueue {
+impl ByteStream {
     fn new() -> Arc<Self> {
-        Arc::new(LoopQueue {
-            inner: Mutex::new(LoopInner { frames: VecDeque::new(), finished: false }),
+        Arc::new(ByteStream {
+            inner: Mutex::new(ByteInner { bytes: VecDeque::new(), finished: false }),
             arrived: Condvar::new(),
-            pool: BufferPool::new(LOOPBACK_POOL_SLOTS),
+            waker: Mutex::new(None),
         })
+    }
+
+    /// Appends `chunks` (in order); returns `false` — nothing appended —
+    /// once the stream is finished.
+    fn push(&self, chunks: &[&[u8]]) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.finished {
+            return false;
+        }
+        for chunk in chunks {
+            inner.bytes.extend(chunk.iter().copied());
+        }
+        drop(inner);
+        self.arrived.notify_all();
+        self.wake();
+        true
+    }
+
+    /// Marks end-of-stream (bytes already pushed still deliver).
+    fn finish(&self) {
+        self.inner.lock().unwrap().finished = true;
+        self.arrived.notify_all();
+        self.wake();
+    }
+
+    fn wake(&self) {
+        if let Some(waker) = self.waker.lock().unwrap().as_ref() {
+            waker.wake();
+        }
+    }
+
+    fn set_waker(&self, waker: Arc<Waker>) {
+        *self.waker.lock().unwrap() = Some(waker);
+    }
+
+    fn has_waker(&self) -> bool {
+        self.waker.lock().unwrap().is_some()
+    }
+
+    /// Appends up to `max` buffered bytes to `into`. When empty, not
+    /// finished, and `wait`, blocks up to [`READ_TIMEOUT`] first. Returns
+    /// `(bytes_taken, finished)`.
+    fn pop(&self, max: usize, into: &mut Vec<u8>, wait: bool) -> (usize, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.bytes.is_empty() && !inner.finished && wait {
+            let (guard, _timeout) = self.arrived.wait_timeout(inner, READ_TIMEOUT).unwrap();
+            inner = guard;
+        }
+        let n = max.min(inner.bytes.len());
+        if n > 0 {
+            let (a, b) = inner.bytes.as_slices();
+            let take_a = n.min(a.len());
+            into.extend_from_slice(&a[..take_a]);
+            into.extend_from_slice(&b[..n - take_a]);
+            inner.bytes.drain(..n);
+        }
+        (n, inner.finished)
     }
 }
 
-/// Loopback sending half.
+// ---------------------------------------------------------------------------
+// Loopback.
+// ---------------------------------------------------------------------------
+
+/// Loopback sending half: frames become length-prefixed bytes on the
+/// shared stream, exactly like a socket write.
 pub struct LoopbackTx {
-    queue: Arc<LoopQueue>,
+    stream: Arc<ByteStream>,
+    header_buf: [u8; FRAME_HEADER_BYTES],
+    finished: bool,
 }
 
-/// Loopback receiving half.
+/// Loopback receiving half: drains the byte stream through the
+/// incremental decoder (pooled payload buffers, torn-read safe) — the
+/// same demux shape as the reactor's socket read path.
 pub struct LoopbackRx {
-    queue: Arc<LoopQueue>,
+    stream: Arc<ByteStream>,
+    decoder: FrameDecoder,
+    scratch: Vec<u8>,
+}
+
+impl LoopbackRx {
+    /// Reuse/allocation counters of the decoder's payload pool (pins).
+    pub fn pool_stats(&self) -> crate::buffer::PoolStats {
+        self.decoder.pool_stats()
+    }
 }
 
 /// An in-process transport pair: frames sent on either end's `Tx` arrive
 /// at the other end's `Rx`, FIFO, with the same orderly-shutdown contract
 /// as TCP. Returns `((a_tx, a_rx), (b_tx, b_rx))` for the two ends.
 pub fn loopback() -> ((LoopbackTx, LoopbackRx), (LoopbackTx, LoopbackRx)) {
-    let a_to_b = LoopQueue::new();
-    let b_to_a = LoopQueue::new();
-    (
-        (LoopbackTx { queue: a_to_b.clone() }, LoopbackRx { queue: b_to_a.clone() }),
-        (LoopbackTx { queue: b_to_a }, LoopbackRx { queue: a_to_b }),
-    )
+    let a_to_b = ByteStream::new();
+    let b_to_a = ByteStream::new();
+    let half = |out: &Arc<ByteStream>, inn: &Arc<ByteStream>| {
+        (
+            LoopbackTx {
+                stream: out.clone(),
+                header_buf: [0; FRAME_HEADER_BYTES],
+                finished: false,
+            },
+            LoopbackRx { stream: inn.clone(), decoder: FrameDecoder::new(), scratch: Vec::new() },
+        )
+    };
+    (half(&a_to_b, &b_to_a), half(&b_to_a, &a_to_b))
 }
 
 impl FrameTx for LoopbackTx {
     fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
-        // Copy into a pooled buffer outside the lock; the receiver's drop
-        // returns it.
-        let mut payload = self.queue.pool.checkout();
-        payload.extend_from_slice(&frame.payload);
-        let mut inner = self.queue.inner.lock().unwrap();
-        if inner.finished {
+        if self.finished {
             return Err(NetError::Closed);
         }
-        inner.frames.push_back((frame.header, payload));
-        drop(inner);
-        self.queue.arrived.notify_all();
+        debug_assert_eq!(frame.header.len, frame.payload.len());
+        frame.header.write(&mut self.header_buf);
+        self.stream.push(&[&self.header_buf, &frame.payload]);
         Ok(())
     }
 
@@ -301,8 +408,10 @@ impl FrameTx for LoopbackTx {
     }
 
     fn finish(&mut self) -> Result<(), NetError> {
-        self.queue.inner.lock().unwrap().finished = true;
-        self.queue.arrived.notify_all();
+        if !self.finished {
+            self.finished = true;
+            self.stream.finish();
+        }
         Ok(())
     }
 }
@@ -312,24 +421,30 @@ impl FrameRx for LoopbackRx {
         &mut self,
         emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
     ) -> Result<usize, NetError> {
-        let mut inner = self.queue.inner.lock().unwrap();
-        if inner.frames.is_empty() {
-            if inner.finished {
-                return Err(NetError::Closed);
+        self.scratch.clear();
+        let wait = !self.stream.has_waker();
+        let (n, finished) = self.stream.pop(usize::MAX, &mut self.scratch, wait);
+        if n == 0 {
+            if finished {
+                return if self.decoder.is_idle() {
+                    Err(NetError::Closed)
+                } else {
+                    // EOF mid-frame: the peer died, it did not finish.
+                    Err(NetError::Codec(WireError::Truncated))
+                };
             }
-            let (guard, _timeout) =
-                self.queue.arrived.wait_timeout(inner, READ_TIMEOUT).unwrap();
-            inner = guard;
+            return Ok(0);
         }
         let mut frames = 0;
-        while let Some((header, payload)) = inner.frames.pop_front() {
+        self.decoder.push(&self.scratch, |header, payload| {
             emit(header, payload);
             frames += 1;
-        }
-        if frames == 0 && inner.finished {
-            return Err(NetError::Closed);
-        }
+        })?;
         Ok(frames)
+    }
+
+    fn register_waker(&mut self, waker: Arc<Waker>) {
+        self.stream.set_waker(waker);
     }
 }
 
@@ -344,7 +459,7 @@ impl FrameRx for LoopbackRx {
 pub struct ChaosConfig {
     /// Seed of the per-direction schedule.
     pub seed: u64,
-    /// Largest chunk a single `recv` consumes (1 = strict one-byte reads,
+    /// Largest chunk a single read consumes (1 = strict one-byte reads,
     /// the worst torn-read case).
     pub max_read: usize,
     /// Probability that a sent frame's bytes are *held back* — delayed
@@ -364,31 +479,10 @@ impl Default for ChaosConfig {
     }
 }
 
-/// One direction of a chaos link: a raw byte stream (no frame boundaries
-/// survive the mutex — that is the point).
-struct ChaosStream {
-    inner: Mutex<ChaosInner>,
-    arrived: Condvar,
-}
-
-struct ChaosInner {
-    bytes: VecDeque<u8>,
-    finished: bool,
-}
-
-impl ChaosStream {
-    fn new() -> Arc<Self> {
-        Arc::new(ChaosStream {
-            inner: Mutex::new(ChaosInner { bytes: VecDeque::new(), finished: false }),
-            arrived: Condvar::new(),
-        })
-    }
-}
-
 /// Chaos sending half: serializes frames like TCP would, then pushes the
 /// bytes through the seeded tear schedule.
 pub struct ChaosTx {
-    stream: Arc<ChaosStream>,
+    stream: Arc<ByteStream>,
     rng: Rng,
     config: ChaosConfig,
     /// Bytes held back by the delay schedule, flushed with the next burst.
@@ -402,9 +496,11 @@ pub struct ChaosTx {
 
 /// Chaos receiving half: reads seeded-size chunks (down to one byte) and
 /// reassembles frames through the incremental [`FrameDecoder`], exactly
-/// like the TCP receive path.
+/// like the socket read path. Waker-driven, it still drains everything
+/// available per call — but chunk by seeded chunk through the decoder, so
+/// the reactor's demux sees the same torn boundaries.
 pub struct ChaosRx {
-    stream: Arc<ChaosStream>,
+    stream: Arc<ByteStream>,
     rng: Rng,
     config: ChaosConfig,
     decoder: FrameDecoder,
@@ -416,9 +512,9 @@ pub struct ChaosRx {
 /// from `config.seed`, so both directions of a full-duplex link are torn
 /// independently but reproducibly.
 pub fn chaos(config: ChaosConfig) -> ((ChaosTx, ChaosRx), (ChaosTx, ChaosRx)) {
-    let a_to_b = ChaosStream::new();
-    let b_to_a = ChaosStream::new();
-    let half = |stream_out: &Arc<ChaosStream>, stream_in: &Arc<ChaosStream>, salt: u64| {
+    let a_to_b = ByteStream::new();
+    let b_to_a = ByteStream::new();
+    let half = |stream_out: &Arc<ByteStream>, stream_in: &Arc<ByteStream>, salt: u64| {
         (
             ChaosTx {
                 stream: stream_out.clone(),
@@ -458,17 +554,14 @@ impl ChaosTx {
                 self.cut = true;
             }
         }
-        let mut inner = self.stream.inner.lock().unwrap();
-        inner.bytes.extend(self.held.drain(..take));
+        self.stream.push(&[&self.held[..take]]);
         self.held.clear();
         self.written += take;
         if self.cut {
             // The "peer" died mid-stream: end-of-stream with a frame torn
             // in half.
-            inner.finished = true;
+            self.stream.finish();
         }
-        drop(inner);
-        self.stream.arrived.notify_all();
     }
 }
 
@@ -502,10 +595,7 @@ impl FrameTx for ChaosTx {
         }
         self.push_held();
         self.finished = true;
-        let mut inner = self.stream.inner.lock().unwrap();
-        inner.finished = true;
-        drop(inner);
-        self.stream.arrived.notify_all();
+        self.stream.finish();
         Ok(())
     }
 }
@@ -515,16 +605,18 @@ impl FrameRx for ChaosRx {
         &mut self,
         emit: &mut dyn FnMut(FrameHeader, Lease<Vec<u8>>),
     ) -> Result<usize, NetError> {
-        self.scratch.clear();
-        {
-            let mut inner = self.stream.inner.lock().unwrap();
-            if inner.bytes.is_empty() && !inner.finished {
-                let (guard, _timeout) =
-                    self.stream.arrived.wait_timeout(inner, READ_TIMEOUT).unwrap();
-                inner = guard;
-            }
-            if inner.bytes.is_empty() {
-                if inner.finished {
+        // Standalone: one seeded-size chunk per call (blocking briefly).
+        // Waker-driven: drain everything available, but still chunk by
+        // seeded chunk through the decoder so tear boundaries survive.
+        let drain = self.stream.has_waker();
+        let mut frames = 0;
+        let mut consumed = false;
+        loop {
+            self.scratch.clear();
+            let want = self.rng.range(1, self.config.max_read.max(1) as u64 + 1) as usize;
+            let (n, finished) = self.stream.pop(want, &mut self.scratch, !drain && !consumed);
+            if n == 0 {
+                if finished && !consumed {
                     return if self.decoder.is_idle() {
                         Err(NetError::Closed)
                     } else {
@@ -532,21 +624,22 @@ impl FrameRx for ChaosRx {
                         Err(NetError::Codec(WireError::Truncated))
                     };
                 }
-                return Ok(0);
+                break;
             }
-            // A seeded-size read — possibly a single byte — regardless of
-            // where frame boundaries fall.
-            let want = self.rng.range(1, self.config.max_read.max(1) as u64 + 1) as usize;
-            for _ in 0..want.min(inner.bytes.len()) {
-                self.scratch.push(inner.bytes.pop_front().expect("checked non-empty"));
+            consumed = true;
+            self.decoder.push(&self.scratch, |header, payload| {
+                emit(header, payload);
+                frames += 1;
+            })?;
+            if !drain {
+                break;
             }
         }
-        let mut frames = 0;
-        self.decoder.push(&self.scratch, |header, payload| {
-            emit(header, payload);
-            frames += 1;
-        })?;
         Ok(frames)
+    }
+
+    fn register_waker(&mut self, waker: Arc<Waker>) {
+        self.stream.set_waker(waker);
     }
 }
 
@@ -630,10 +723,38 @@ mod tests {
             }
         }
         assert!(
-            a_tx.queue.pool.stats().reused >= 9,
-            "loopback payload buffers must recycle: {:?}",
-            a_tx.queue.pool.stats()
+            b_rx.pool_stats().reused >= 9,
+            "loopback payload buffers must recycle through the decoder pool: {:?}",
+            b_rx.pool_stats()
         );
+    }
+
+    /// In waker-driven (reactor) mode, `recv` never blocks and drains
+    /// everything currently available — and a registered waker fires on
+    /// every push, which is what lets the reactor sleep in `poll`.
+    #[test]
+    fn loopback_waker_mode_is_nonblocking_and_drains() {
+        use crate::net::reactor::{poll_fds, waker_pair, PollFd, POLLIN};
+        let ((mut a_tx, _a_rx), (_b_tx, mut b_rx)) = loopback();
+        let (waker, mut waker_fd) = waker_pair().unwrap();
+        b_rx.register_waker(waker);
+        // Nothing queued: returns immediately (a blocking recv would eat
+        // its 50ms timeout; the deadline below would then trip).
+        let started = std::time::Instant::now();
+        let n = b_rx.recv(&mut |_, _| panic!("no frames yet")).unwrap();
+        assert_eq!(n, 0);
+        assert!(started.elapsed() < READ_TIMEOUT, "waker mode must not block");
+        for i in 0..5usize {
+            a_tx.send(&frame(i, &[i as u8; 8])).unwrap();
+        }
+        // The pushes must have woken the "reactor".
+        let mut set = [PollFd::new(waker_fd.fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut set, 0).unwrap(), 1, "push must wake the registered waker");
+        waker_fd.drain();
+        let mut got = Vec::new();
+        let n = b_rx.recv(&mut |h, _| got.push(h.channel)).unwrap();
+        assert_eq!(n, 5, "one nonblocking recv drains everything available");
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
     }
 
     /// The chaos transport upholds the full FrameTx/FrameRx contract under

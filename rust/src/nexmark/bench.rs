@@ -122,6 +122,7 @@ pub fn run_nexmark_cluster(
     processes: usize,
     process_index: usize,
     addresses: Vec<String>,
+    net_transport: crate::config::NetTransport,
 ) -> Result<Outcome, NetError> {
     let config = Config {
         workers: params.workers,
@@ -129,6 +130,7 @@ pub fn run_nexmark_cluster(
         processes,
         process_index,
         addresses,
+        net_transport,
         ..Config::default()
     };
     let epoch_cell = std::sync::OnceLock::new();

@@ -31,8 +31,8 @@
 //! messages stay put while any progress batch is spilled behind a full
 //! mailbox.
 
-use crate::net::fabric::NetFabric;
-use crate::net::transport::{chaos, ChaosConfig, FrameRx, FrameTx, Link};
+use crate::net::fabric::{NetFabric, NetLink};
+use crate::net::transport::{chaos, ChaosConfig};
 use crate::progress::exchange::Progcaster;
 use crate::progress::location::Location;
 use crate::progress::reachability::{GraphTopology, NodeTopology};
@@ -328,11 +328,14 @@ impl Sim {
     /// `shape.len()` "processes" (possibly unequal counts) whose progress
     /// planes are wired over the seeded-adversarial [`chaos`] transport —
     /// per-process broadcast frames with local fan-out, torn, delayed,
-    /// and coalesced on the wire. Returns the per-process net fabrics so
+    /// and coalesced on the wire. The chaos pairs ride each process's
+    /// reactor as `Virtual` links, so the adversary drives the reactor's
+    /// readiness path (partial reads, spurious wakeups, parked frames),
+    /// not a private thread pair. Returns the per-process net fabrics so
     /// the test can shut them down.
     fn new_cluster(shape: &[usize], seed: u64) -> (Sim, Vec<Arc<NetFabric>>) {
         let processes = shape.len();
-        let mut links: Vec<Vec<Option<Link>>> =
+        let mut links: Vec<Vec<Option<NetLink>>> =
             (0..processes).map(|_| (0..processes).map(|_| None).collect()).collect();
         for p in 0..processes {
             for q in (p + 1)..processes {
@@ -343,10 +346,8 @@ impl Sim {
                     cut_after: None,
                 };
                 let ((p_tx, p_rx), (q_tx, q_rx)) = chaos(config);
-                links[p][q] =
-                    Some((Box::new(p_tx) as Box<dyn FrameTx>, Box::new(p_rx) as Box<dyn FrameRx>));
-                links[q][p] =
-                    Some((Box::new(q_tx) as Box<dyn FrameTx>, Box::new(q_rx) as Box<dyn FrameRx>));
+                links[p][q] = Some(NetLink::virtual_pair(p_tx, p_rx));
+                links[q][p] = Some(NetLink::virtual_pair(q_tx, q_rx));
             }
         }
         let peers: usize = shape.iter().sum();

@@ -15,25 +15,32 @@
 //! so start order is free), and accepts the rest — with a versioned
 //! handshake that (a) verifies both sides agree on the cluster shape —
 //! the full per-process worker-count vector, so heterogeneous clusters
-//! (`Config::cluster_shape`, e.g. 2+1+1) validate end to end — and
+//! (`Config::cluster_shape`, e.g. 2+1+1) validate end to end —
 //! (b) propagates process 0's tuning (`ring_capacity`, `progress_flush`,
 //! `send_batch`) to every process, so one process's flags configure the
-//! whole cluster. Worker indices are global, in contiguous per-process
-//! blocks of possibly unequal size; the per-process `Fabric` routes
-//! channels between them over rings or the serializing net fabric
-//! transparently. Shutdown is
+//! whole cluster, and (c) pins both sides to the same per-link transport
+//! ([`crate::config::NetTransport`]): reactor-driven nonblocking TCP, a
+//! `/dev/shm` byte-ring pair for co-located processes (the bootstrap
+//! connection is retained as the parking doorbell), or the legacy
+//! blocking thread-pair baseline. `Auto` — the default — selects shared
+//! memory exactly when both endpoints' addresses are loopback. Worker
+//! indices are global, in contiguous per-process blocks of possibly
+//! unequal size; the per-process `Fabric` routes channels between them
+//! over rings or the serializing net fabric transparently. Shutdown is
 //! orderly: workers flush on exit (`Worker::flush_now` runs on drop), the
 //! net fabric drains its outbound queues and closes write sides, and
 //! peers observe clean end-of-stream.
 
 use super::allocator::Fabric;
 use super::Worker;
-use crate::config::Config;
-use crate::net::fabric::NetFabric;
-use crate::net::transport::{tcp_pair, Link, NetError};
+use crate::config::{Config, NetTransport};
+use crate::net::fabric::{NetFabric, NetLink};
+use crate::net::shm::{create_ring, open_ring, ShmConsumer, ShmLink, SHM_RING_BYTES};
+use crate::net::transport::{tcp_pair, NetError};
 use crate::progress::timestamp::Timestamp;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -133,10 +140,55 @@ where
 const HANDSHAKE_MAGIC: u64 = u64::from_le_bytes(*b"ttdnetv1");
 
 /// Bumped whenever the wire format or handshake layout changes.
-/// Version 2: per-process broadcast progress frames (dedup fan-out), and
-/// the handshake carries the full per-process worker-count shape so
-/// heterogeneous clusters (e.g. 2+1+1) validate end to end.
-const HANDSHAKE_VERSION: u32 = 2;
+/// Version 3: HELLO and WELCOME carry a transport byte so both sides pin
+/// the same per-link transport (reactor TCP, shared memory, or the
+/// thread-pair baseline) before any frame crosses. Version 2 added the
+/// per-process broadcast progress frames (dedup fan-out) and the full
+/// per-process worker-count shape.
+const HANDSHAKE_VERSION: u32 = 3;
+
+/// Per-link transport tags on the wire (the handshake's transport byte).
+const LINK_TCP: u8 = 0;
+const LINK_SHM: u8 = 1;
+const LINK_THREADS: u8 = 2;
+
+fn transport_name(tag: u8) -> &'static str {
+    match tag {
+        LINK_TCP => "tcp",
+        LINK_SHM => "shm",
+        LINK_THREADS => "tcp-threads",
+        _ => "unknown",
+    }
+}
+
+/// Whether `address` (a `host:port`) names the local machine — the
+/// condition under which `NetTransport::Auto` takes the shared-memory
+/// path for a link.
+fn is_loopback(address: &str) -> bool {
+    let host = address.rsplit_once(':').map(|(h, _)| h).unwrap_or(address);
+    let host = host.trim_start_matches('[').trim_end_matches(']');
+    host == "localhost" || host == "::1" || host.starts_with("127.")
+}
+
+/// The transport tag both endpoints of the `a`↔`b` link must agree on,
+/// derived deterministically from the (cluster-wide, identical) config so
+/// connector and acceptor compute the same answer; the handshake byte
+/// turns any config skew into a `Protocol` error instead of a hung or
+/// corrupted stream.
+fn link_transport(config: &Config, a: usize, b: usize) -> u8 {
+    match config.net_transport {
+        NetTransport::Tcp => LINK_TCP,
+        NetTransport::Shm => LINK_SHM,
+        NetTransport::TcpThreads => LINK_THREADS,
+        NetTransport::Auto => {
+            if is_loopback(&config.addresses[a]) && is_loopback(&config.addresses[b]) {
+                LINK_SHM
+            } else {
+                LINK_TCP
+            }
+        }
+    }
+}
 
 /// How long bootstrap keeps retrying a refused connection (peers may not
 /// be listening yet; start order is free).
@@ -168,13 +220,20 @@ fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
 }
 
 /// `HELLO` (connector → acceptor): magic, version, sender, process count,
-/// then the full per-process worker shape. All little-endian.
-fn write_hello(stream: &mut TcpStream, config: &Config, shape: &[usize]) -> Result<(), NetError> {
-    let mut buf = Vec::with_capacity(20 + 4 * shape.len());
+/// the proposed link transport, then the full per-process worker shape.
+/// All little-endian.
+fn write_hello(
+    stream: &mut TcpStream,
+    config: &Config,
+    shape: &[usize],
+    peer: usize,
+) -> Result<(), NetError> {
+    let mut buf = Vec::with_capacity(21 + 4 * shape.len());
     buf.extend_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
     buf.extend_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
     buf.extend_from_slice(&(config.process_index as u32).to_le_bytes());
     buf.extend_from_slice(&(config.processes as u32).to_le_bytes());
+    buf.push(link_transport(config, config.process_index, peer));
     push_shape(&mut buf, shape);
     stream.write_all(&buf)?;
     stream.flush()?;
@@ -187,12 +246,13 @@ fn read_hello(
     config: &Config,
     shape: &[usize],
 ) -> Result<usize, NetError> {
-    let mut buf = [0u8; 20];
+    let mut buf = [0u8; 21];
     stream.read_exact(&mut buf)?;
     let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
     let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
     let process = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes")) as usize;
     let processes = u32::from_le_bytes(buf[16..20].try_into().expect("4 bytes")) as usize;
+    let transport = buf[20];
     if magic != HANDSHAKE_MAGIC {
         return Err(NetError::Protocol("bad magic (not a ttd peer?)".into()));
     }
@@ -211,6 +271,15 @@ fn read_hello(
     if process >= processes {
         return Err(NetError::Protocol(format!("peer index {process} out of range")));
     }
+    let expected = link_transport(config, config.process_index, process);
+    if transport != expected {
+        return Err(NetError::Protocol(format!(
+            "net transport mismatch with process {process}: peer proposes {}, \
+             local config selects {} (pass the same --net to every process)",
+            transport_name(transport),
+            transport_name(expected)
+        )));
+    }
     Ok(process)
 }
 
@@ -219,8 +288,13 @@ fn read_hello(
 /// only from process 0, which makes process 0's flags authoritative for
 /// the whole cluster (every process connects to 0 before spawning
 /// workers).
-fn write_welcome(stream: &mut TcpStream, config: &Config, shape: &[usize]) -> Result<(), NetError> {
-    let mut buf = Vec::with_capacity(44 + 4 * shape.len());
+fn write_welcome(
+    stream: &mut TcpStream,
+    config: &Config,
+    shape: &[usize],
+    peer: usize,
+) -> Result<(), NetError> {
+    let mut buf = Vec::with_capacity(45 + 4 * shape.len());
     buf.extend_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
     buf.extend_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
     buf.extend_from_slice(&(config.process_index as u32).to_le_bytes());
@@ -228,6 +302,7 @@ fn write_welcome(stream: &mut TcpStream, config: &Config, shape: &[usize]) -> Re
     buf.extend_from_slice(&(config.ring_capacity as u64).to_le_bytes());
     buf.extend_from_slice(&(config.progress_flush.as_nanos() as u64).to_le_bytes());
     buf.extend_from_slice(&(config.send_batch as u64).to_le_bytes());
+    buf.push(link_transport(config, config.process_index, peer));
     push_shape(&mut buf, shape);
     stream.write_all(&buf)?;
     stream.flush()?;
@@ -242,7 +317,7 @@ fn read_welcome(
     shape: &[usize],
     peer: usize,
 ) -> Result<(), NetError> {
-    let mut buf = [0u8; 44];
+    let mut buf = [0u8; 45];
     stream.read_exact(&mut buf)?;
     let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
     let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
@@ -262,6 +337,16 @@ fn read_welcome(
             buf[28..36].try_into().expect("8 bytes"),
         ));
         config.send_batch = u64::from_le_bytes(buf[36..44].try_into().expect("8 bytes")) as usize;
+    }
+    let transport = buf[44];
+    let expected = link_transport(config, config.process_index, peer);
+    if transport != expected {
+        return Err(NetError::Protocol(format!(
+            "net transport mismatch with process {peer}: peer selects {}, \
+             local config selects {} (pass the same --net to every process)",
+            transport_name(transport),
+            transport_name(expected)
+        )));
     }
     read_shape(stream, shape)?;
     Ok(())
@@ -285,13 +370,75 @@ fn connect_with_retry(address: &str) -> Result<TcpStream, NetError> {
     }
 }
 
+/// Upgrades a handshaken bootstrap connection to a shared-memory link:
+/// each side creates its outbound `/dev/shm` ring, the paths cross over
+/// the socket, each side maps the peer's ring and acks, and the ring
+/// files are unlinked (the mappings outlive the names). The socket
+/// itself is retained as the link's parking doorbell.
+fn shm_rendezvous(mut stream: TcpStream) -> Result<NetLink, NetError> {
+    let (path, tx) = create_ring(SHM_RING_BYTES)?;
+    let exchanged = shm_exchange(&mut stream, &path);
+    // Unlink our ring in every outcome: after a successful exchange the
+    // peer has mapped it (its ack says so), and a failed bootstrap must
+    // not leak /dev/shm segments.
+    let _ = std::fs::remove_file(&path);
+    let rx = exchanged?;
+    Ok(NetLink::Shm(ShmLink { tx, rx, doorbell: stream }))
+}
+
+/// The symmetric half of [`shm_rendezvous`]: sends our ring's capacity
+/// and path, maps the peer's, and exchanges one-byte acks so neither
+/// side unlinks a ring the other has not yet mapped.
+fn shm_exchange(stream: &mut TcpStream, path: &Path) -> Result<ShmConsumer, NetError> {
+    let path_str = path.to_str().expect("shm ring path is utf-8");
+    let mut hdr = Vec::with_capacity(12 + path_str.len());
+    hdr.extend_from_slice(&(SHM_RING_BYTES as u64).to_le_bytes());
+    hdr.extend_from_slice(&(path_str.len() as u32).to_le_bytes());
+    hdr.extend_from_slice(path_str.as_bytes());
+    stream.write_all(&hdr)?;
+    stream.flush()?;
+
+    let mut fixed = [0u8; 12];
+    stream.read_exact(&mut fixed)?;
+    let peer_cap = u64::from_le_bytes(fixed[0..8].try_into().expect("8 bytes")) as usize;
+    let len = u32::from_le_bytes(fixed[8..12].try_into().expect("4 bytes")) as usize;
+    if len > 4096 {
+        return Err(NetError::Protocol(format!("absurd shm path length {len}")));
+    }
+    let mut peer_path = vec![0u8; len];
+    stream.read_exact(&mut peer_path)?;
+    let peer_path = String::from_utf8(peer_path)
+        .map_err(|_| NetError::Protocol("shm ring path is not utf-8".into()))?;
+    let rx = open_ring(Path::new(&peer_path), peer_cap)?;
+
+    stream.write_all(&[1u8])?;
+    stream.flush()?;
+    let mut ack = [0u8; 1];
+    stream.read_exact(&mut ack)?;
+    Ok(rx)
+}
+
+/// Turns a handshaken bootstrap connection into the link the two sides
+/// agreed on (the handshake's transport byte has already pinned the
+/// agreement, so both run the matching arm).
+fn finish_link(config: &Config, stream: TcpStream, peer: usize) -> Result<NetLink, NetError> {
+    match link_transport(config, config.process_index, peer) {
+        LINK_SHM => shm_rendezvous(stream),
+        LINK_THREADS => {
+            let (tx, rx) = tcp_pair(stream)?;
+            Ok(NetLink::Threads(Box::new(tx), Box::new(rx)))
+        }
+        _ => Ok(NetLink::Tcp(stream)),
+    }
+}
+
 /// Establishes the full mesh for `config` (whose cluster shape is
-/// `shape`), returning one transport pair per process (`None` at
+/// `shape`), returning one link per process (`None` at
 /// `config.process_index`) and adopting process 0's tuning into `config`.
 fn bootstrap(
     config: &mut Config,
     shape: &[usize],
-) -> Result<Vec<Option<Link>>, NetError> {
+) -> Result<Vec<Option<NetLink>>, NetError> {
     let me = config.process_index;
     let processes = config.processes;
     if config.addresses.len() != processes {
@@ -304,7 +451,7 @@ fn bootstrap(
         NetError::Protocol(format!("cannot listen on {}: {e}", config.addresses[me]))
     })?;
 
-    let mut links: Vec<Option<Link>> =
+    let mut links: Vec<Option<NetLink>> =
         (0..processes).map(|_| None).collect();
 
     // Connect to every lower-indexed process, in order — 0 first, so its
@@ -314,11 +461,10 @@ fn bootstrap(
         // Bound the reply read: a wedged peer (or an unrelated service on
         // the address) must fail the bootstrap, not hang it.
         let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-        write_hello(&mut stream, config, shape)?;
+        write_hello(&mut stream, config, shape, peer)?;
         read_welcome(&mut stream, config, shape, peer)?;
         let _ = stream.set_read_timeout(None);
-        let (tx, rx) = tcp_pair(stream)?;
-        links[peer] = Some((Box::new(tx), Box::new(rx)));
+        links[peer] = Some(finish_link(config, stream, peer)?);
     }
 
     // Accept every higher-indexed process, identified by its HELLO.
@@ -340,9 +486,8 @@ fn bootstrap(
         if peer <= me || links[peer].is_some() {
             return Err(NetError::Protocol(format!("unexpected connection from {peer}")));
         }
-        write_welcome(&mut stream, config, shape)?;
-        let (tx, rx) = tcp_pair(stream)?;
-        links[peer] = Some((Box::new(tx), Box::new(rx)));
+        write_welcome(&mut stream, config, shape, peer)?;
+        links[peer] = Some(finish_link(config, stream, peer)?);
         expected -= 1;
     }
     Ok(links)

@@ -196,6 +196,13 @@ impl<T: Timestamp> Worker<T> {
         self.scope.state.borrow().send_batch
     }
 
+    /// How many net I/O threads serve this worker's process (0 outside a
+    /// cluster; 1 under the reactor; `2·(P−1)` under the legacy thread-pair
+    /// transport). Exposed so cluster tests can pin the thread budget.
+    pub fn net_io_threads(&self) -> usize {
+        self.fabric.net().map_or(0, |net| net.io_threads())
+    }
+
     /// Creates a new dataflow input; returns the session used to feed and
     /// advance it, and the stream of its records.
     pub fn new_input<D: Data>(&mut self) -> (InputSession<T, D>, Stream<T, D>) {

@@ -33,7 +33,7 @@ use timestamp_tokens::dataflow::channels::{
 use timestamp_tokens::dataflow::probe::ProbeExt;
 use timestamp_tokens::net::transport::loopback;
 use timestamp_tokens::net::{
-    FrameRx, FrameTx, NetFabric, NetReceiver, ProgressBroadcast, ProgressUpdates,
+    NetFabric, NetLink, NetReceiver, ProgressBroadcast, ProgressUpdates,
 };
 use timestamp_tokens::operators::map::MapExt;
 use timestamp_tokens::progress::exchange::{Progcaster, PROGRESS_CHANNEL};
@@ -200,26 +200,28 @@ fn progress_flush_loop() {
 
 /// Cross-process progress plane over the loopback transport: worker 0
 /// (process 0) ships ONE per-process broadcast frame per flush; process
-/// 1's fabric decodes it ONCE into `SharedPool`-recycled buffers (the
+/// 1's reactor decodes it ONCE into `SharedPool`-recycled buffers (the
 /// codec's `ProgressDecodeContext`) and fans the decoded `Arc` out to
 /// both destination inboxes. Steady state — send encode, pooled loopback
 /// payload, fan-out decode, typed receive, consumer drop — performs zero
 /// allocations once every pool is warm (ROADMAP "pooled progress
-/// decode"). The asymmetric 1+2 shape means the fan-out is exercised off
-/// the square-mesh diagonal.
+/// decode"). The loopback pair rides the reactor's `Virtual` demux path,
+/// so this also pins the reactor's steady state at zero allocations. The
+/// asymmetric 1+2 shape means the fan-out is exercised off the
+/// square-mesh diagonal.
 fn net_progress_decode_loop() {
     let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
     let shape = vec![1usize, 2];
     let a = NetFabric::new(
         0,
         shape.clone(),
-        vec![None, Some((Box::new(a_tx) as Box<dyn FrameTx>, Box::new(a_rx) as Box<dyn FrameRx>))],
+        vec![None, Some(NetLink::virtual_pair(a_tx, a_rx))],
         64,
     );
     let b = NetFabric::new(
         1,
         shape,
-        vec![Some((Box::new(b_tx) as Box<dyn FrameTx>, Box::new(b_rx) as Box<dyn FrameRx>)), None],
+        vec![Some(NetLink::virtual_pair(b_tx, b_rx)), None],
         64,
     );
     b.register_broadcast::<ProgressBroadcast<u64>>(PROGRESS_CHANNEL);

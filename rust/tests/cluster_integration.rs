@@ -1,17 +1,21 @@
 //! Multi-process integration: a 2-process × 2-worker cluster over loopback
-//! TCP must produce outputs *identical* to the single-process 4-worker run
-//! — same engine, same dataflows, only the fabric's transport differs —
+//! must produce outputs *identical* to the single-process 4-worker run —
+//! same engine, same dataflows, only the fabric's transport differs —
 //! plus the config-propagation guarantee of the bootstrap handshake.
 //!
 //! Each "process" here is a thread calling `execute_cluster` with its own
 //! `Config { processes, process_index, addresses }`: every member gets its
 //! own fabric, net fabric, codec path, and real 127.0.0.1 sockets, so the
 //! full wire path is exercised deterministically inside one test binary.
+//! The equality pins run over every transport — reactor-driven TCP,
+//! shared-memory rings, and (by default, since all addresses are
+//! loopback) whatever `NetTransport::Auto` selects — at both square
+//! (2×2) and asymmetric (2+1+1) shapes.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::Arc;
-use timestamp_tokens::config::Config;
+use timestamp_tokens::config::{Config, NetTransport};
 use timestamp_tokens::coordination::Mechanism;
 use timestamp_tokens::dataflow::probe::ProbeExt;
 use timestamp_tokens::harness::workloads::drain;
@@ -35,6 +39,21 @@ where
     R: Send + 'static,
     F: Fn(&mut Worker<u64>) -> R + Send + Sync + 'static,
 {
+    run_cluster_shaped_net(shape, NetTransport::Auto, build)
+}
+
+/// [`run_cluster_shaped`] with an explicit cross-process transport, so the
+/// equality pins below can exercise reactor TCP and shared memory each in
+/// turn rather than whatever `Auto` resolves to on loopback.
+fn run_cluster_shaped_net<R, F>(
+    shape: Vec<usize>,
+    net: NetTransport,
+    build: F,
+) -> (Vec<R>, Vec<WorkerTelemetry>)
+where
+    R: Send + 'static,
+    F: Fn(&mut Worker<u64>) -> R + Send + Sync + 'static,
+{
     let processes = shape.len();
     let addresses = free_addresses(processes);
     let build = Arc::new(build);
@@ -51,6 +70,7 @@ where
                 processes,
                 process_index: p,
                 addresses,
+                net_transport: net,
                 ..Config::default()
             };
             execute_cluster_telemetry::<u64, _, _>(config, move |worker| build(worker))
@@ -314,6 +334,117 @@ fn nexmark_q4_asymmetric_cluster_matches_single_process() {
         single_sorted, cluster_sorted,
         "2+1+1 cluster Q4 closes differ from single-process"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Transport pins: the same output equalities must hold when the transport
+// is forced — reactor-driven TCP and shared-memory rings — at both the
+// square (2×2) and asymmetric (2+1+1) shapes. (The `Auto` runs above
+// already cover whatever the selector picks on loopback.)
+// ---------------------------------------------------------------------------
+
+/// Single-process 4-worker baseline for `build`, sorted.
+fn single_process_sorted<F>(build: F) -> Vec<(u64, u64)>
+where
+    F: Fn(&mut Worker<u64>) -> Vec<(u64, u64)> + Send + Sync + Copy + 'static,
+{
+    let mut out: Vec<(u64, u64)> = execute::<u64, _, _>(
+        Config { workers: 4, pin_workers: false, ..Config::default() },
+        build,
+    )
+    .into_iter()
+    .flatten()
+    .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Pins `build`'s cluster output equal to the single-process baseline at
+/// both test shapes over the given transport.
+fn assert_cluster_matches_over<F>(net: NetTransport, build: F)
+where
+    F: Fn(&mut Worker<u64>) -> Vec<(u64, u64)> + Send + Sync + Copy + 'static,
+{
+    let single = single_process_sorted(build);
+    for shape in [vec![2, 2], vec![2, 1, 1]] {
+        let mut cluster: Vec<(u64, u64)> = run_cluster_shaped_net(shape.clone(), net, build)
+            .0
+            .into_iter()
+            .flatten()
+            .collect();
+        cluster.sort_unstable();
+        assert_eq!(
+            single, cluster,
+            "{shape:?} cluster over {net:?} differs from single-process"
+        );
+    }
+}
+
+#[test]
+fn wordcount_cluster_matches_over_tcp_reactor() {
+    assert_cluster_matches_over(NetTransport::Tcp, wordcount_run);
+}
+
+#[test]
+fn wordcount_cluster_matches_over_shared_memory() {
+    assert_cluster_matches_over(NetTransport::Shm, wordcount_run);
+}
+
+#[test]
+fn nexmark_q4_cluster_matches_over_tcp_reactor() {
+    assert_cluster_matches_over(NetTransport::Tcp, q4_run);
+}
+
+#[test]
+fn nexmark_q4_cluster_matches_over_shared_memory() {
+    assert_cluster_matches_over(NetTransport::Shm, q4_run);
+}
+
+// ---------------------------------------------------------------------------
+// I/O thread budget: the reactor serves the whole mesh from ONE thread
+// per process, regardless of cluster size — where the legacy thread-pair
+// transport needed 2·(P−1). Pinned at P=3 so the distinction is visible.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reactor_keeps_net_io_threads_at_most_two_per_process() {
+    let probe = |worker: &mut Worker<u64>| {
+        // A trivial dataflow so every worker runs the full lifecycle.
+        let (mut input, stream) = worker.new_input::<u64>();
+        let probe = stream.probe();
+        input.send(worker.index() as u64);
+        input.close();
+        worker.step_while(|| !probe.done());
+        vec![(worker.index() as u64, worker.net_io_threads() as u64)]
+    };
+    for net in [NetTransport::Tcp, NetTransport::Shm, NetTransport::Auto] {
+        let threads: Vec<(u64, u64)> = run_cluster_shaped_net(vec![1, 1, 1], net, probe)
+            .0
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(threads.len(), 3);
+        for (worker, io_threads) in threads {
+            assert!(
+                io_threads <= 2,
+                "worker {worker} over {net:?}: {io_threads} net I/O threads (budget is 2)"
+            );
+            assert_eq!(
+                io_threads, 1,
+                "worker {worker} over {net:?}: the reactor runs exactly one I/O thread"
+            );
+        }
+    }
+    // The legacy transport documents the contrast: 2·(P−1) = 4 at P=3.
+    let legacy: Vec<(u64, u64)> =
+        run_cluster_shaped_net(vec![1, 1, 1], NetTransport::TcpThreads, probe)
+            .0
+            .into_iter()
+            .flatten()
+            .collect();
+    for (worker, io_threads) in legacy {
+        assert_eq!(io_threads, 4, "worker {worker}: thread-pair transport is 2·(P−1)");
+    }
 }
 
 // ---------------------------------------------------------------------------
