@@ -13,9 +13,11 @@
 //! `BENCH_exchange_ring.json`. `--processes N` runs the **net scenario**:
 //! the same exchange dataflow at identical total worker counts, once as a
 //! single fabric and once per cross-process transport — the legacy
-//! thread-pair TCP baseline, the poll-reactor TCP path, and `/dev/shm`
-//! byte rings (real sockets/segments, real codec) — emitting
-//! `BENCH_net.json`. The standard suite
+//! thread-pair TCP baseline, the reactor TCP path (poll and epoll
+//! backends), and `/dev/shm` byte rings across the reactor-backend x
+//! parking matrix (poll/epoll x doorbell/futex, plus a governor-on
+//! row) — emitting `BENCH_net.json` with the spurious-wakeup split and
+//! governor decision counters. The standard suite
 //! emits `BENCH_exchange.json`; all are trajectories for future PRs to
 //! compare against instead of re-asserting the win.
 
@@ -513,6 +515,14 @@ struct NetWorkerResult {
     /// Frame bytes that crossed the kernel (process-wide, reported on
     /// each process's worker 0; zero on pure-shm meshes).
     kernel_bytes_tx: u64,
+    /// Reactor sleep/wake cycles and the no-progress ones split by cause.
+    poll_wakeups: u64,
+    spurious_doorbell: u64,
+    spurious_waker: u64,
+    spurious_pollin_empty: u64,
+    /// Governor decisions applied (zero unless autotune is on).
+    ring_resizes: u64,
+    cadence_adjusts: u64,
 }
 
 /// The engine workload both topologies run: `input -> exchange(hash) ->
@@ -563,6 +573,12 @@ fn drive_net_exchange(
         progress_frames_tx: net.progress_frames_sent,
         progress_bytes_tx: net.progress_bytes_sent,
         kernel_bytes_tx: net.kernel_frame_bytes_tx,
+        poll_wakeups: net.poll_wakeups,
+        spurious_doorbell: net.spurious_doorbell,
+        spurious_waker: net.spurious_waker,
+        spurious_pollin_empty: net.spurious_pollin_empty,
+        ring_resizes: net.ring_resizes,
+        cadence_adjusts: net.cadence_adjusts,
     }
 }
 
@@ -576,6 +592,12 @@ struct NetMeasurement {
     progress_frames_tx: u64,
     progress_bytes_tx: u64,
     kernel_bytes_tx: u64,
+    poll_wakeups: u64,
+    spurious_doorbell: u64,
+    spurious_waker: u64,
+    spurious_pollin_empty: u64,
+    ring_resizes: u64,
+    cadence_adjusts: u64,
 }
 
 fn measure_net(results: Vec<NetWorkerResult>) -> NetMeasurement {
@@ -592,6 +614,12 @@ fn measure_net(results: Vec<NetWorkerResult>) -> NetMeasurement {
         progress_frames_tx: results.iter().map(|r| r.progress_frames_tx).sum(),
         progress_bytes_tx: results.iter().map(|r| r.progress_bytes_tx).sum(),
         kernel_bytes_tx: results.iter().map(|r| r.kernel_bytes_tx).sum(),
+        poll_wakeups: results.iter().map(|r| r.poll_wakeups).sum(),
+        spurious_doorbell: results.iter().map(|r| r.spurious_doorbell).sum(),
+        spurious_waker: results.iter().map(|r| r.spurious_waker).sum(),
+        spurious_pollin_empty: results.iter().map(|r| r.spurious_pollin_empty).sum(),
+        ring_resizes: results.iter().map(|r| r.ring_resizes).sum(),
+        cadence_adjusts: results.iter().map(|r| r.cadence_adjusts).sum(),
     }
 }
 
@@ -605,7 +633,7 @@ fn measure_net(results: Vec<NetWorkerResult>) -> NetMeasurement {
 /// ratio and the shm topology's zero kernel frame bytes are the numbers
 /// this PR's tentpole is pinned on.
 fn net_scenario(args: &BenchArgs) {
-    use timestamp_tokens::config::{Config, NetTransport};
+    use timestamp_tokens::config::{Config, NetTransport, Parking, ReactorBackend};
     use timestamp_tokens::worker::execute::{execute, execute_cluster};
 
     let processes = args.processes.max(2);
@@ -615,24 +643,27 @@ fn net_scenario(args: &BenchArgs) {
     let per_epoch: u64 = 4096;
     println!(
         "net exchange: {total} workers total, {epochs} epochs x {per_epoch} records/worker, \
-         intra-process vs {processes}-process loopback (thread-pair TCP / reactor TCP / shm)"
+         intra-process vs {processes}-process loopback \
+         (thread-pair TCP / reactor TCP / shm backend x parking matrix)"
     );
     println!(
-        "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14} {:>14}",
-        "topology", "records/s", "p50 ns", "p99 ns", "send-stalls", "prog-frames-tx",
-        "prog-bytes-tx", "kernel-tx"
+        "{:>22} {:>12} {:>10} {:>10} {:>9} {:>11} {:>9} {:>22} {:>9} {:>9}",
+        "topology", "records/s", "p50 ns", "p99 ns", "stalls", "prog-tx", "kernel-tx",
+        "spurious bell/wak/emp", "resizes", "cadence"
     );
     let report = |label: &str, m: &NetMeasurement| {
         println!(
-            "{:>14} {:>14} {:>12} {:>12} {:>12} {:>14} {:>14} {:>14}",
+            "{:>22} {:>12} {:>10} {:>10} {:>9} {:>11} {:>9} {:>22} {:>9} {:>9}",
             label,
             m.records_per_sec,
             m.p50_ns,
             m.p99_ns,
             m.send_stalls,
             m.progress_frames_tx,
-            m.progress_bytes_tx,
-            m.kernel_bytes_tx
+            m.kernel_bytes_tx,
+            format!("{}/{}/{}", m.spurious_doorbell, m.spurious_waker, m.spurious_pollin_empty),
+            m.ring_resizes,
+            m.cadence_adjusts
         );
     };
 
@@ -646,8 +677,15 @@ fn net_scenario(args: &BenchArgs) {
     report("intra-process", &intra);
 
     // (b) The same workers split across `processes` cluster members over
-    // 127.0.0.1, once per transport.
-    let run_cross = |net_transport: NetTransport| -> NetMeasurement {
+    // 127.0.0.1, once per (transport, reactor backend, parking, autotune)
+    // variant. The shm rows form the backend x parking matrix this PR's
+    // reactor/parking work is pinned on; the autotune row exercises the
+    // governor end to end.
+    let run_cross = |net_transport: NetTransport,
+                     reactor: ReactorBackend,
+                     parking: Parking,
+                     autotune: bool|
+     -> NetMeasurement {
         let addresses = timestamp_tokens::testing::free_loopback_addresses(processes);
         let mut handles = Vec::new();
         for p in 0..processes {
@@ -660,6 +698,9 @@ fn net_scenario(args: &BenchArgs) {
                     process_index: p,
                     addresses,
                     net_transport,
+                    reactor_backend: reactor,
+                    parking,
+                    autotune,
                     ..Config::default()
                 };
                 execute_cluster::<u64, _, _>(config, move |w| {
@@ -675,13 +716,32 @@ fn net_scenario(args: &BenchArgs) {
         assert_eq!(got, expected, "cluster exchange lost or duplicated records");
         measure_net(results)
     };
-    let tcp_threads = run_cross(NetTransport::TcpThreads);
-    report("tcp-threads", &tcp_threads);
-    let tcp_reactor = run_cross(NetTransport::Tcp);
-    report("tcp-reactor", &tcp_reactor);
-    let shm = run_cross(NetTransport::Shm);
-    report("shm", &shm);
-    assert_eq!(shm.kernel_bytes_tx, 0, "shm frames must not cross the kernel");
+
+    // (label, transport, reactor, parking, autotune). Epoll rows only
+    // exist on Linux; elsewhere the matrix degenerates to the poll column.
+    let mut variants: Vec<(&str, NetTransport, ReactorBackend, Parking, bool)> = vec![
+        ("tcp_threads", NetTransport::TcpThreads, ReactorBackend::Poll, Parking::Auto, false),
+        ("tcp_reactor_poll", NetTransport::Tcp, ReactorBackend::Poll, Parking::Auto, false),
+        ("shm_poll_doorbell", NetTransport::Shm, ReactorBackend::Poll, Parking::Doorbell, false),
+        ("shm_poll_futex", NetTransport::Shm, ReactorBackend::Poll, Parking::Futex, false),
+    ];
+    #[cfg(target_os = "linux")]
+    variants.extend([
+        ("tcp_reactor_epoll", NetTransport::Tcp, ReactorBackend::Epoll, Parking::Auto, false),
+        ("shm_epoll_doorbell", NetTransport::Shm, ReactorBackend::Epoll, Parking::Doorbell, false),
+        ("shm_epoll_futex", NetTransport::Shm, ReactorBackend::Epoll, Parking::Futex, false),
+        ("shm_epoll_futex_tuned", NetTransport::Shm, ReactorBackend::Epoll, Parking::Futex, true),
+    ]);
+
+    let mut measured: Vec<(&str, NetMeasurement)> = Vec::new();
+    for &(label, transport, reactor, parking, autotune) in &variants {
+        let m = run_cross(transport, reactor, parking, autotune);
+        report(label, &m);
+        if transport == NetTransport::Shm {
+            assert_eq!(m.kernel_bytes_tx, 0, "{label}: shm frames must not cross the kernel");
+        }
+        measured.push((label, m));
+    }
 
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"micro_exchange_net\",\n");
@@ -689,23 +749,31 @@ fn net_scenario(args: &BenchArgs) {
     json.push_str(&format!("  \"workers_per_process\": {wpp},\n"));
     json.push_str(&format!("  \"epochs\": {epochs},\n"));
     json.push_str(&format!("  \"records_per_epoch_per_worker\": {per_epoch},\n"));
-    for (label, m, comma) in [
-        ("intra_process", intra, ","),
-        ("tcp_threads", tcp_threads, ","),
-        ("tcp_reactor", tcp_reactor, ","),
-        ("shm", shm, ""),
-    ] {
+    let rows: Vec<(&str, &NetMeasurement)> = std::iter::once(("intra_process", &intra))
+        .chain(measured.iter().map(|(l, m)| (*l, m)))
+        .collect();
+    for (ri, (label, m)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "  \"{label}\": {{\"records_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
              \"send_queue_stalls\": {}, \"progress_frames_tx\": {}, \
-             \"progress_bytes_tx\": {}, \"kernel_frame_bytes_tx\": {}}}{comma}\n",
+             \"progress_bytes_tx\": {}, \"kernel_frame_bytes_tx\": {}, \
+             \"poll_wakeups\": {}, \"spurious_doorbell\": {}, \"spurious_waker\": {}, \
+             \"spurious_pollin_empty\": {}, \"ring_resizes\": {}, \
+             \"cadence_adjusts\": {}}}{}\n",
             m.records_per_sec,
             m.p50_ns,
             m.p99_ns,
             m.send_stalls,
             m.progress_frames_tx,
             m.progress_bytes_tx,
-            m.kernel_bytes_tx
+            m.kernel_bytes_tx,
+            m.poll_wakeups,
+            m.spurious_doorbell,
+            m.spurious_waker,
+            m.spurious_pollin_empty,
+            m.ring_resizes,
+            m.cadence_adjusts,
+            if ri + 1 < rows.len() { "," } else { "" }
         ));
     }
     json.push_str("}\n");

@@ -68,6 +68,115 @@ impl std::str::FromStr for NetTransport {
     }
 }
 
+/// Which readiness backend the net reactor sleeps in (`--reactor
+/// auto|poll|epoll`). Per-process: each process resolves its own flag
+/// (the orchestrator forwards it to every child), and no wire agreement
+/// is needed — readiness is a local concern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReactorBackend {
+    /// Epoll where available (Linux), poll elsewhere.
+    Auto,
+    /// Portable `poll(2)` over a persistent incrementally-updated set.
+    Poll,
+    /// Linux `epoll(7)` with edge-level interest updates; falls back to
+    /// poll off-Linux.
+    Epoll,
+}
+
+impl std::str::FromStr for ReactorBackend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(ReactorBackend::Auto),
+            "poll" => Ok(ReactorBackend::Poll),
+            "epoll" => Ok(ReactorBackend::Epoll),
+            other => Err(format!("unknown reactor backend: {other}")),
+        }
+    }
+}
+
+impl ReactorBackend {
+    /// Resolves `Auto` to the platform preference.
+    pub fn resolve(self) -> crate::net::ReadinessBackend {
+        match self {
+            ReactorBackend::Poll => crate::net::ReadinessBackend::Poll,
+            ReactorBackend::Epoll => crate::net::ReadinessBackend::Epoll,
+            ReactorBackend::Auto => {
+                if cfg!(target_os = "linux") {
+                    crate::net::ReadinessBackend::Epoll
+                } else {
+                    crate::net::ReadinessBackend::Poll
+                }
+            }
+        }
+    }
+}
+
+/// How an idle shared-memory link parks its reactor (`--parking
+/// auto|doorbell|futex`). Futex parking applies only when *every* remote
+/// link of a process is shared-memory (a TCP link forces the reactor to
+/// sleep in its fd set, which a futex cannot rouse); `Auto` — the
+/// default — takes futex exactly then, on targets with futex support.
+/// Propagated from process 0 over the handshake like the other tuning
+/// knobs, so one flag governs the whole cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parking {
+    /// Futex when eligible (all-shm process on a futex-capable target),
+    /// doorbell otherwise.
+    Auto,
+    /// Always the doorbell byte on the bootstrap socket (PR 6 protocol).
+    Doorbell,
+    /// Futex when eligible; an ineligible process falls back to doorbell
+    /// (loudly, in its telemetry: `poll_wakeups` keep counting fd wakes).
+    Futex,
+}
+
+impl std::str::FromStr for Parking {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(Parking::Auto),
+            "doorbell" => Ok(Parking::Doorbell),
+            "futex" => Ok(Parking::Futex),
+            other => Err(format!("unknown parking mode: {other}")),
+        }
+    }
+}
+
+/// The net-plane knobs a cluster entry point threads through to
+/// [`Config`] — bundled so `run_cluster`-shaped APIs don't grow one
+/// positional parameter per knob.
+#[derive(Clone, Copy, Debug)]
+pub struct NetOptions {
+    /// Cross-process transport selection.
+    pub transport: NetTransport,
+    /// Readiness backend for the net reactor.
+    pub reactor: ReactorBackend,
+    /// Shared-memory parking protocol.
+    pub parking: Parking,
+    /// Run the telemetry-driven governor (ring + cadence autotuning).
+    pub autotune: bool,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            transport: NetTransport::Auto,
+            reactor: ReactorBackend::Auto,
+            parking: Parking::Auto,
+            autotune: false,
+        }
+    }
+}
+
+impl NetOptions {
+    /// Options that pin `transport` and leave every other knob at its
+    /// default — the shape all pre-governor call sites used.
+    pub fn with_transport(transport: NetTransport) -> Self {
+        NetOptions { transport, ..NetOptions::default() }
+    }
+}
+
 /// Top-level runtime configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -117,6 +226,20 @@ pub struct Config {
     /// reactor TCP otherwise. Every process must pass the same value; the
     /// bootstrap handshake pins the per-link agreement.
     pub net_transport: NetTransport,
+    /// Readiness backend for the net reactor (`--reactor
+    /// auto|poll|epoll`). Resolved per process; [`ReactorBackend::Auto`]
+    /// takes epoll on Linux.
+    pub reactor_backend: ReactorBackend,
+    /// Shared-memory parking protocol (`--parking auto|doorbell|futex`).
+    /// Rides the WELCOME handshake from process 0 like the other tuning
+    /// knobs.
+    pub parking: Parking,
+    /// Run the per-process net governor: grow shm rings on sustained
+    /// full-ring stalls and adjust the progress-flush cadence online from
+    /// stall/wakeup telemetry (see `net/tune.rs`). Off by default —
+    /// equivalence pins and exact-cadence tests rely on static knobs —
+    /// and propagated from process 0 over the handshake.
+    pub autotune: bool,
 }
 
 impl Default for Config {
@@ -134,6 +257,9 @@ impl Default for Config {
             addresses: Vec::new(),
             cluster_shape: Vec::new(),
             net_transport: NetTransport::Auto,
+            reactor_backend: ReactorBackend::Auto,
+            parking: Parking::Auto,
+            autotune: false,
         }
     }
 }
@@ -181,6 +307,9 @@ mod tests {
         assert!(c.addresses.is_empty());
         assert!(c.cluster_shape.is_empty());
         assert_eq!(c.net_transport, NetTransport::Auto);
+        assert_eq!(c.reactor_backend, ReactorBackend::Auto);
+        assert_eq!(c.parking, Parking::Auto);
+        assert!(!c.autotune, "the governor must be opt-in");
     }
 
     #[test]
@@ -190,6 +319,41 @@ mod tests {
         assert_eq!("shm".parse::<NetTransport>().unwrap(), NetTransport::Shm);
         assert_eq!("tcp-threads".parse::<NetTransport>().unwrap(), NetTransport::TcpThreads);
         assert!("udp".parse::<NetTransport>().is_err());
+    }
+
+    #[test]
+    fn reactor_backend_parses_and_resolves() {
+        assert_eq!("auto".parse::<ReactorBackend>().unwrap(), ReactorBackend::Auto);
+        assert_eq!("poll".parse::<ReactorBackend>().unwrap(), ReactorBackend::Poll);
+        assert_eq!("epoll".parse::<ReactorBackend>().unwrap(), ReactorBackend::Epoll);
+        assert!("kqueue".parse::<ReactorBackend>().is_err());
+        assert_eq!(ReactorBackend::Poll.resolve(), crate::net::ReadinessBackend::Poll);
+        if cfg!(target_os = "linux") {
+            assert_eq!(ReactorBackend::Auto.resolve(), crate::net::ReadinessBackend::Epoll);
+        } else {
+            assert_eq!(ReactorBackend::Auto.resolve(), crate::net::ReadinessBackend::Poll);
+        }
+    }
+
+    #[test]
+    fn parking_parses() {
+        assert_eq!("auto".parse::<Parking>().unwrap(), Parking::Auto);
+        assert_eq!("doorbell".parse::<Parking>().unwrap(), Parking::Doorbell);
+        assert_eq!("futex".parse::<Parking>().unwrap(), Parking::Futex);
+        assert!("eventfd".parse::<Parking>().is_err());
+    }
+
+    #[test]
+    fn net_options_default_matches_config_default() {
+        let o = NetOptions::default();
+        let c = Config::default();
+        assert_eq!(o.transport, c.net_transport);
+        assert_eq!(o.reactor, c.reactor_backend);
+        assert_eq!(o.parking, c.parking);
+        assert_eq!(o.autotune, c.autotune);
+        let pinned = NetOptions::with_transport(NetTransport::Shm);
+        assert_eq!(pinned.transport, NetTransport::Shm);
+        assert_eq!(pinned.reactor, ReactorBackend::Auto);
     }
 
     #[test]

@@ -153,7 +153,7 @@ pub fn run_cluster(
     processes: usize,
     process_index: usize,
     addresses: Vec<String>,
-    net_transport: crate::config::NetTransport,
+    net: crate::config::NetOptions,
 ) -> Result<Outcome, NetError> {
     let config = Config {
         workers: params.workers,
@@ -161,7 +161,10 @@ pub fn run_cluster(
         processes,
         process_index,
         addresses,
-        net_transport,
+        net_transport: net.transport,
+        reactor_backend: net.reactor,
+        parking: net.parking,
+        autotune: net.autotune,
         ..Config::default()
     };
     // The epoch must postdate the bootstrap handshake (which can take

@@ -36,10 +36,16 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
 /// deliveries — their ratio is the destination process's worker count
 /// when dedup is engaged. The reactor columns are process-wide (the one
 /// I/O thread's counters, reported on each process's worker 0):
-/// `net-polls` / `net-spurious` count poll wakeups and wakeups that found
-/// no progress, `net-partial-wr` counts short writes (socket buffer
-/// full), and `net-shm-full` counts shm-ring-full stalls.
-pub const TELEMETRY_HEADER: [&str; 17] = [
+/// `net-polls` counts reactor wakeups (readiness returns and futex
+/// wakes; with infinite-timeout sleeping every count is a real wake),
+/// the `spur-*` trio splits wakeups whose following pass moved nothing
+/// by cause (a doorbell byte with an empty ring, the self-wake pipe or
+/// futex bump with nothing queued, a readable data descriptor that
+/// yielded no frame bytes), `net-partial-wr` counts short writes
+/// (socket buffer full), `net-shm-full` counts shm-ring-full stalls,
+/// and `ring-resizes` / `cadence-adj` count governor decisions applied
+/// (live shm-ring grows and progress-flush cadence changes).
+pub const TELEMETRY_HEADER: [&str; 21] = [
     "process",
     "worker",
     "parks",
@@ -54,9 +60,13 @@ pub const TELEMETRY_HEADER: [&str; 17] = [
     "prog-frames-rx",
     "prog-fanout",
     "net-polls",
-    "net-spurious",
+    "spur-bell",
+    "spur-waker",
+    "spur-empty",
     "net-partial-wr",
     "net-shm-full",
+    "ring-resizes",
+    "cadence-adj",
 ];
 
 fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
@@ -75,9 +85,13 @@ fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String
         t.net.progress_frames_recv.to_string(),
         t.net.progress_batches_recv.to_string(),
         t.net.poll_wakeups.to_string(),
-        t.net.spurious_wakeups.to_string(),
+        t.net.spurious_doorbell.to_string(),
+        t.net.spurious_waker.to_string(),
+        t.net.spurious_pollin_empty.to_string(),
         t.net.partial_writes.to_string(),
         t.net.shm_full_stalls.to_string(),
+        t.net.ring_resizes.to_string(),
+        t.net.cadence_adjusts.to_string(),
     ]
 }
 
@@ -98,10 +112,14 @@ fn aggregate(workers: &[&WorkerTelemetry]) -> WorkerTelemetry {
         total.net.progress_frames_recv += t.net.progress_frames_recv;
         total.net.progress_batches_recv += t.net.progress_batches_recv;
         total.net.poll_wakeups += t.net.poll_wakeups;
-        total.net.spurious_wakeups += t.net.spurious_wakeups;
+        total.net.spurious_doorbell += t.net.spurious_doorbell;
+        total.net.spurious_waker += t.net.spurious_waker;
+        total.net.spurious_pollin_empty += t.net.spurious_pollin_empty;
         total.net.partial_writes += t.net.partial_writes;
         total.net.shm_full_stalls += t.net.shm_full_stalls;
         total.net.kernel_frame_bytes_tx += t.net.kernel_frame_bytes_tx;
+        total.net.ring_resizes += t.net.ring_resizes;
+        total.net.cadence_adjusts += t.net.cadence_adjusts;
     }
     total
 }
@@ -204,6 +222,7 @@ mod tests {
         // One worker, one process: no aggregate row.
         let want: Vec<Vec<String>> = vec![[
             "0", "3", "10", "7", "2", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0",
+            "0", "0", "0", "0",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -236,6 +255,6 @@ mod tests {
         assert_eq!(rows[4][1], "Σ");
         assert_eq!(rows[4][8], "100", "bytes-rx aggregate");
         assert_eq!(rows[4][13], "9", "net-polls aggregate");
-        assert_eq!(rows[4][16], "4", "net-shm-full aggregate");
+        assert_eq!(rows[4][18], "4", "net-shm-full aggregate");
     }
 }

@@ -25,9 +25,15 @@
 //! `--net auto|tcp|shm|tcp-threads` selects the cross-process transport
 //! (default `auto`: shared memory for co-located loopback process pairs,
 //! reactor-driven TCP otherwise); every process must pass the same value.
+//! `--reactor auto|poll|epoll` picks the readiness backend (per process;
+//! `auto` = epoll on Linux), `--parking auto|doorbell|futex` the
+//! shared-memory wake protocol, and `--autotune on` enables the
+//! telemetry-driven governor (live shm-ring grows + online
+//! progress-flush cadence) — the latter two propagate from process 0
+//! like the other tuning knobs.
 
 use std::time::Duration;
-use timestamp_tokens::config::NetTransport;
+use timestamp_tokens::config::{NetOptions, NetTransport, Parking, ReactorBackend};
 use timestamp_tokens::coordination::Mechanism;
 use timestamp_tokens::harness::openloop::{run, run_cluster, Outcome, Params, Workload};
 use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
@@ -73,27 +79,43 @@ impl Args {
                 (0..processes).map(|i| format!("127.0.0.1:{}", base + i as u16)).collect()
             }
         };
-        let net = self
+        let transport = self
             .flags
             .get("net")
             .map(|v| v.parse().expect("--net auto|tcp|shm|tcp-threads"))
             .unwrap_or(NetTransport::Auto);
+        let reactor = self
+            .flags
+            .get("reactor")
+            .map(|v| v.parse().expect("--reactor auto|poll|epoll"))
+            .unwrap_or(ReactorBackend::Auto);
+        let parking = self
+            .flags
+            .get("parking")
+            .map(|v| v.parse().expect("--parking auto|doorbell|futex"))
+            .unwrap_or(Parking::Auto);
+        let autotune = self
+            .flags
+            .get("autotune")
+            .map(|v| matches!(v.as_str(), "on" | "true" | "1"))
+            .unwrap_or(false);
         ClusterArgs {
             processes,
             process: self.flags.get("process").and_then(|v| v.parse().ok()),
             addresses,
-            net,
+            net: NetOptions { transport, reactor, parking, autotune },
         }
     }
 }
 
-/// Parsed `--processes` / `--process` / `--addresses` / `--net` flags.
+/// Parsed `--processes` / `--process` / `--addresses` / `--net` /
+/// `--reactor` / `--parking` / `--autotune` flags.
 struct ClusterArgs {
     processes: usize,
     /// `None` = orchestrate (spawn one child per process index).
     process: Option<usize>,
     addresses: Vec<String>,
-    net: NetTransport,
+    net: NetOptions,
 }
 
 impl ClusterArgs {
@@ -299,7 +321,8 @@ fn main() {
             println!("mechanisms: tokens | notifications | watermarks-x | watermarks-p");
             println!(
                 "cluster: --processes N [--process I] [--addresses h:p,...] [--base-port P] \
-                 [--net auto|tcp|shm|tcp-threads]"
+                 [--net auto|tcp|shm|tcp-threads] [--reactor auto|poll|epoll] \
+                 [--parking auto|doorbell|futex] [--autotune on]"
             );
             println!("artifacts dir: artifacts/ (run `make artifacts`)");
         }

@@ -41,19 +41,27 @@
 //!    that streams eventually drain.
 //!
 //! **The reactor.** All of a process's links are driven by ONE I/O
-//! thread, the nonblocking poll-based reactor in [`fabric`] (built on the
-//! [`reactor`] primitives: `poll(2)`, a pipe-based waker, per-peer
-//! outbound byte cursors with gather writes). Readiness, not threads, is
-//! the multiplexing primitive: each peer socket is registered for
-//! `POLLIN` while the inbound high-water mark permits (flow control is
-//! interest toggling — deregistering read interest is how TCP
-//! backpressure reaches the remote staging machinery) and for `POLLOUT`
-//! only while its outbound cursor holds unsent bytes. Worker threads
-//! never touch a descriptor; they enqueue frames to bounded per-link
-//! queues and ring the waker. The old per-peer send/recv thread pair
-//! (2·(P−1) threads per process) survives only as the `tcp-threads`
-//! bench baseline; net I/O thread count is ≤ 2 per process regardless of
-//! the mesh size.
+//! thread, the nonblocking reactor in [`fabric`] (built on the
+//! [`reactor`] primitives: a [`reactor::Readiness`] backend — portable
+//! `poll(2)` or Linux `epoll(7)`, selected by `--reactor
+//! auto|poll|epoll` — a pipe-based waker, and per-peer outbound byte
+//! cursors with gather writes). Readiness, not threads, is the
+//! multiplexing primitive: each peer socket holds read interest while
+//! the inbound high-water mark permits (flow control is interest
+//! toggling — dropping read interest is how TCP backpressure reaches
+//! the remote staging machinery) and write interest only while its
+//! outbound cursor holds unsent bytes. Interest updates are
+//! *edge-level*: the backend caches per-descriptor interest and issues
+//! kernel calls only on transitions, so the epoll path costs `epoll_ctl`
+//! at flow-control edges rather than an fd-set rebuild per iteration.
+//! The idle reactor sleeps with an *infinite* timeout — wake correctness
+//! rests on the persistent wake byte / futex sequence word, not on a
+//! periodic timeout backstop — so a quiescent cluster makes zero reactor
+//! iterations. Worker threads never touch a descriptor; they enqueue
+//! frames to bounded per-link queues and ring the waker. The old
+//! per-peer send/recv thread pair (2·(P−1) threads per process) survives
+//! only as the `tcp-threads` bench baseline; net I/O thread count is ≤ 2
+//! per process regardless of the mesh size.
 //!
 //! **Shared memory.** Co-located processes (all `--addresses` loopback,
 //! or an explicit `net` config) skip the kernel's byte path entirely:
@@ -61,9 +69,24 @@
 //! bounded byte ring with Release-published positions (torn-read safe:
 //! a consumer only ever reads bytes beneath the published tail, and
 //! frames remain length-prefixed and decoder-reassembled exactly as on a
-//! socket). Parking rides a one-byte doorbell on the retained bootstrap
-//! TCP connection, so the ring still plugs into the same `poll` set —
-//! and frame bytes through the kernel are zero.
+//! socket). Parking is either a one-byte doorbell on the retained
+//! bootstrap TCP connection (portable; the ring plugs into the fd set)
+//! or — when every link of a process is shared-memory — a `FUTEX_WAIT`
+//! on a shared [`shm::WakeWord`], making the idle co-located path cost
+//! zero kernel bytes *and* zero readiness events (`--parking
+//! auto|doorbell|futex`; the memory-ordering argument lives in [`shm`]'s
+//! header). Frame bytes through the kernel are zero either way.
+//!
+//! **Autotuning.** A per-process governor ([`tune`]) may run on the
+//! reactor thread (`--autotune`, `Config::autotune`): each bookkeeping
+//! epoch it consumes the stall telemetry (shm-ring-full stalls, progress
+//! frame rate, wakeup/spurious counts) and requests live shm-ring grows
+//! — performed by the fabric as a `RING_SWITCH` control frame at a frame
+//! boundary, preserving per-sender FIFO through the remap — and bounded
+//! progress-flush cadence changes that workers pick up through
+//! [`tune::TuneShared`]. Decisions are capped, counted in telemetry
+//! (`ring-resizes` / `cadence-adjust`), and replace the hand-run
+//! `--sweep-ring` / `--sweep-cadence` loops.
 //!
 //! **Broadcast dedup.** The progress plane's cross-process traffic is
 //! *deduplicated at the process boundary*: a Progcaster flush ships ONE
@@ -85,13 +108,19 @@
 //!   progress batches, per-process [`codec::ProgressBroadcast`] records),
 //!   frame headers, and the incremental torn-read-safe
 //!   [`codec::FrameDecoder`];
-//! * [`reactor`] — the dependency-free readiness primitives: `poll(2)`
-//!   bindings, the pipe waker, and the per-peer outbound
-//!   [`reactor::OutCursor`] (gather writes for sockets, slice copies for
-//!   rings);
+//! * [`reactor`] — the dependency-free readiness primitives: the
+//!   [`reactor::Readiness`] backend abstraction (`poll(2)` / `epoll(7)`
+//!   with edge-level interest updates), raw `futex(2)` park/wake on
+//!   shared words, the dual-mode pipe/futex waker, and the per-peer
+//!   outbound [`reactor::OutCursor`] (gather writes for sockets, slice
+//!   copies for rings);
 //! * [`shm`] — the co-located fast path: `/dev/shm`-backed bounded byte
 //!   rings ([`shm::ShmProducer`] / [`shm::ShmConsumer`]) with
-//!   Release-published positions and doorbell parking;
+//!   Release-published positions, doorbell or futex parking, and the
+//!   per-process [`shm::WakeWord`];
+//! * [`tune`] — the telemetry-driven governor: live shm-ring growth and
+//!   bounded online cadence adjustment, shared with workers through
+//!   [`tune::TuneShared`];
 //! * [`transport`] — frame endpoints over byte streams: the legacy
 //!   thread-pair TCP endpoints (bench baseline), and the in-process
 //!   byte-stream transports that ride the reactor's demux path —
@@ -108,27 +137,35 @@
 //!   ([`fabric::NetFabric::register_broadcast`] + [`NetBroadcastSender`])
 //!   behind the dedup.
 //!
-//! Follow-ons this structure leaves open: `epoll`/`io_uring` in place of
-//! `poll` once meshes outgrow the linear descriptor scan, and futex
-//! parking in place of the shm doorbell byte.
+//! Follow-ons this structure leaves open: `io_uring` in place of
+//! readiness once submission batching pays for its complexity, and
+//! cross-machine RDMA-shaped transports behind the same frame contract.
 
 pub mod codec;
 pub mod fabric;
 pub mod reactor;
 pub mod shm;
 pub mod transport;
+pub mod tune;
 
 pub use codec::{
     BroadcastWire, ProgressBroadcast, ProgressDecodeContext, ProgressUpdates, Wire, WireError,
     WireReader,
 };
 pub use fabric::{
-    ClusterShape, NetBroadcastSender, NetFabric, NetLink, NetReceiver, NetSender, NetStats,
-    NetTelemetry, BROADCAST_DEST,
+    ClusterShape, FabricOptions, NetBroadcastSender, NetFabric, NetLink, NetReceiver, NetSender,
+    NetStats, NetTelemetry, BROADCAST_DEST,
 };
-pub use reactor::{poll_fds, waker_pair, OutCursor, PollFd, Waker, WakerFd, WriteOutcome};
-pub use shm::{create_ring, open_ring, ShmConsumer, ShmLink, ShmProducer, SHM_RING_BYTES};
+pub use reactor::{
+    futex_supported, futex_wait, futex_wake_all, poll_fds, waker_pair, FutexWait, OutCursor,
+    PollFd, Readiness, ReadinessBackend, ReadyEvent, Waker, WakerFd, WriteOutcome,
+};
+pub use shm::{
+    create_ring, create_wake_word, open_ring, open_wake_word, ShmConsumer, ShmLink, ShmProducer,
+    WakeWord, SHM_RING_BYTES,
+};
 pub use transport::{
     chaos, loopback, tcp_pair, ChaosConfig, ChaosRx, ChaosTx, Frame, FrameRx, FrameTx, Link,
     NetError,
 };
+pub use tune::{Governor, TuneShared};

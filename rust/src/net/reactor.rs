@@ -1,20 +1,39 @@
-//! Reactor primitives: readiness polling, cross-thread wakeups, and the
-//! outbound byte cursor.
+//! Reactor primitives: readiness backends, cross-thread wakeups, futex
+//! parking, and the outbound byte cursor.
 //!
 //! The net plane runs ONE I/O thread per process (`net-reactor-{p}`, see
 //! [`crate::net::fabric`]) instead of a send/recv thread pair per peer.
-//! That thread sleeps in `poll(2)` over every peer descriptor plus a
-//! self-wake pipe, and this module supplies the three pieces that makes
-//! possible:
+//! That thread sleeps behind a [`Readiness`] backend — portable `poll(2)`
+//! or Linux `epoll(7)` — over every peer descriptor plus a self-wake
+//! pipe, and this module supplies the pieces that makes possible:
 //!
+//! * [`Readiness`] — the readiness-backend abstraction. Both backends
+//!   cache per-descriptor interest and apply *edge-level interest
+//!   updates*: [`Readiness::update`] is a no-op unless the (read, write)
+//!   interest actually changed, so the epoll backend issues `epoll_ctl`
+//!   only on transitions (flow-control toggles, cursor empty/nonempty
+//!   edges) instead of rebuilding an fd set every iteration, and the poll
+//!   backend mutates a persistent `pollfd` vector in place. `wait` blocks
+//!   with a caller-chosen timeout (`-1` = infinite: with level-triggered
+//!   readiness plus the persistent-wake-byte invariant below there is no
+//!   lost-wakeup window to backstop with a periodic timeout);
 //! * [`poll_fds`] — a thin wrapper over the raw `poll(2)` syscall (the
 //!   crate builds without a libc crate dependency, so the declaration is
 //!   hand-rolled; `std` already links the symbol);
+//! * [`futex_wait`] / [`futex_wake_all`] — raw `futex(2)` on a `u32`
+//!   word in a *shared* mapping (no `FUTEX_PRIVATE_FLAG`), so co-located
+//!   processes can park and wake each other through `/dev/shm` without a
+//!   doorbell byte crossing the kernel socket path. The memory-ordering
+//!   argument for the park protocol lives in [`crate::net::shm`];
 //! * [`Waker`] / [`WakerFd`] — a nonblocking socketpair whose read end
 //!   sits in the poll set. Workers pushing outbound frames (or draining
 //!   inboxes past the flow-control mark) wake the reactor by writing one
 //!   byte; the byte stays readable until the reactor drains it, so a wake
-//!   issued while the reactor is between polls is never lost;
+//!   issued while the reactor is between polls is never lost. When the
+//!   reactor parks on a futex instead of an fd set, the same `Waker`
+//!   switches to bumping the process's shared wake word
+//!   ([`Waker::set_futex_mode`]) — wake callers never care which sleep
+//!   the reactor is in;
 //! * [`OutCursor`] — the per-peer outbound byte cursor: queued frames
 //!   with their encoded headers, a byte offset into the front frame, and
 //!   writev-style gather writes ([`OutCursor::write_to`]) so one syscall
@@ -26,16 +45,24 @@
 
 use super::codec::FRAME_HEADER_BYTES;
 use super::transport::Frame;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{self, IoSlice, Read, Write};
 use std::os::fd::{AsRawFd, RawFd};
 use std::os::unix::net::UnixStream;
-use std::sync::Arc;
+use std::sync::atomic::AtomicU32;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
 
 /// `poll(2)` readiness: data to read.
 pub const POLLIN: i16 = 0x001;
 /// `poll(2)` readiness: writable without blocking.
 pub const POLLOUT: i16 = 0x004;
+/// `poll(2)` condition: error on the descriptor (always reported).
+pub const POLLERR: i16 = 0x008;
+/// `poll(2)` condition: hangup (always reported).
+pub const POLLHUP: i16 = 0x010;
+/// `poll(2)` condition: invalid descriptor (always reported).
+pub const POLLNVAL: i16 = 0x020;
 
 /// One entry of a `poll(2)` set (the kernel's `struct pollfd` layout).
 #[repr(C)]
@@ -79,17 +106,40 @@ pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
 
 /// The write end of the reactor's self-wake pipe. Cloned (via `Arc`) into
 /// every outbound queue and receiving endpoint that may need to rouse the
-/// reactor from `poll`.
+/// reactor from its sleep — an fd-set wait or a futex park, the caller
+/// never knows which.
 pub struct Waker {
     tx: UnixStream,
+    /// When set, the reactor parks on this shared wake word instead of an
+    /// fd set, and `wake` bumps the word rather than writing a pipe byte.
+    word: OnceLock<Arc<super::shm::WakeWord>>,
 }
 
 impl Waker {
-    /// Rouses the reactor. One pending byte is enough — a full pipe
-    /// already means a wakeup is due, so `WouldBlock` (and any other
-    /// error: the poll timeout backstops) is deliberately ignored.
+    /// Rouses the reactor.
+    ///
+    /// Fd mode: one pending byte is enough — a full pipe already means a
+    /// wakeup is due, so `WouldBlock` (and any other error) is
+    /// deliberately ignored; the byte stays readable until drained, so
+    /// the wake cannot be lost. Futex mode: bumps the shared sequence
+    /// word unconditionally — the reactor samples the word *before* its
+    /// final idle check, so a bump between that sample and `FUTEX_WAIT`
+    /// makes the wait return `EAGAIN` immediately (the kernel recheck),
+    /// and a bump before the sample is observed by the idle check itself.
     pub fn wake(&self) {
+        if let Some(word) = self.word.get() {
+            word.bump();
+            return;
+        }
         let _ = (&self.tx).write(&[1u8]);
+    }
+
+    /// Switches this waker to futex mode: future wakes bump `word`
+    /// instead of writing a pipe byte. Called once by the fabric when the
+    /// reactor decides to park on a futex (all links shared-memory or
+    /// in-process). First set wins; later calls are ignored.
+    pub fn set_futex_mode(&self, word: Arc<super::shm::WakeWord>) {
+        let _ = self.word.set(word);
     }
 }
 
@@ -124,8 +174,384 @@ pub fn waker_pair() -> io::Result<(Arc<Waker>, WakerFd)> {
     let (tx, rx) = UnixStream::pair()?;
     tx.set_nonblocking(true)?;
     rx.set_nonblocking(true)?;
-    Ok((Arc::new(Waker { tx }), WakerFd { rx, scratch: [0; 64] }))
+    Ok((Arc::new(Waker { tx, word: OnceLock::new() }), WakerFd { rx, scratch: [0; 64] }))
 }
+
+// ---------------------------------------------------------------------------
+// Readiness backends: portable poll(2) and Linux epoll(7) behind one API.
+// ---------------------------------------------------------------------------
+
+/// A resolved readiness backend choice (no `Auto`; resolution from
+/// [`crate::config::ReactorBackend`] happens in the fabric).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadinessBackend {
+    /// Portable `poll(2)` over a persistent, incrementally updated set.
+    Poll,
+    /// Linux `epoll(7)`: interest registered with the kernel once,
+    /// `epoll_ctl` issued only on interest *transitions*.
+    Epoll,
+}
+
+/// One ready descriptor reported by [`Readiness::wait`]. Error/hangup
+/// conditions are folded into both directions so pump paths notice dead
+/// links whichever direction they next touch.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadyEvent {
+    /// The descriptor that became ready.
+    pub fd: RawFd,
+    /// Readable (or error/hangup).
+    pub readable: bool,
+    /// Writable (or error).
+    pub writable: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod epoll_sys {
+    use std::os::fd::RawFd;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    /// The kernel's `struct epoll_event`. Packed on x86-64 (the one ABI
+    /// where the kernel declares it so), naturally aligned elsewhere.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: RawFd, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Upper bound on ready events harvested per wait. More ready fds than
+/// this simply surface on the next wait (level-triggered readiness keeps
+/// them pending), so the bound costs nothing but a second syscall under
+/// extreme fan-in.
+const MAX_READY: usize = 64;
+
+struct PollBackendState {
+    /// Persistent set, mutated in place on interest transitions — never
+    /// rebuilt per iteration.
+    fds: Vec<PollFd>,
+    /// fd → index in `fds`.
+    index: HashMap<RawFd, usize>,
+}
+
+#[cfg(target_os = "linux")]
+struct EpollBackendState {
+    epfd: i32,
+    /// Cached interest per registered fd: `epoll_ctl` fires only when the
+    /// requested (read, write) pair differs from what the kernel holds.
+    interest: HashMap<RawFd, (bool, bool)>,
+    events: Vec<epoll_sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollBackendState {
+    fn drop(&mut self) {
+        unsafe {
+            epoll_sys::close(self.epfd);
+        }
+    }
+}
+
+enum ReadinessInner {
+    Poll(PollBackendState),
+    #[cfg(target_os = "linux")]
+    Epoll(EpollBackendState),
+}
+
+/// The reactor's readiness multiplexer. Construct with [`Readiness::new`]
+/// (which resolves an unavailable epoll to poll rather than failing),
+/// declare per-fd interest with [`update`](Readiness::update) — a no-op
+/// unless interest changed — then [`wait`](Readiness::wait) and walk
+/// [`ready`](Readiness::ready).
+pub struct Readiness {
+    inner: ReadinessInner,
+    ready: Vec<ReadyEvent>,
+}
+
+impl Readiness {
+    /// A multiplexer using `backend`, falling back to poll when epoll is
+    /// unavailable (non-Linux, or `epoll_create1` failure).
+    pub fn new(backend: ReadinessBackend) -> Readiness {
+        let inner = match backend {
+            ReadinessBackend::Poll => {
+                ReadinessInner::Poll(PollBackendState { fds: Vec::new(), index: HashMap::new() })
+            }
+            ReadinessBackend::Epoll => {
+                #[cfg(target_os = "linux")]
+                {
+                    let epfd = unsafe { epoll_sys::epoll_create1(0) };
+                    if epfd >= 0 {
+                        ReadinessInner::Epoll(EpollBackendState {
+                            epfd,
+                            interest: HashMap::new(),
+                            events: vec![epoll_sys::EpollEvent { events: 0, data: 0 }; MAX_READY],
+                        })
+                    } else {
+                        ReadinessInner::Poll(PollBackendState {
+                            fds: Vec::new(),
+                            index: HashMap::new(),
+                        })
+                    }
+                }
+                #[cfg(not(target_os = "linux"))]
+                {
+                    ReadinessInner::Poll(PollBackendState { fds: Vec::new(), index: HashMap::new() })
+                }
+            }
+        };
+        Readiness { inner, ready: Vec::with_capacity(MAX_READY) }
+    }
+
+    /// The backend actually in use (after any fallback).
+    pub fn backend(&self) -> ReadinessBackend {
+        match &self.inner {
+            ReadinessInner::Poll(_) => ReadinessBackend::Poll,
+            #[cfg(target_os = "linux")]
+            ReadinessInner::Epoll(_) => ReadinessBackend::Epoll,
+        }
+    }
+
+    /// Declares interest in `fd`. `(false, false)` deregisters it. Calls
+    /// that repeat the current interest return without any syscall or
+    /// set mutation — interest updates are edge-level by construction.
+    pub fn update(&mut self, fd: RawFd, read: bool, write: bool) {
+        match &mut self.inner {
+            ReadinessInner::Poll(state) => {
+                let events = if read { POLLIN } else { 0 } | if write { POLLOUT } else { 0 };
+                match state.index.get(&fd).copied() {
+                    Some(i) => {
+                        if !read && !write {
+                            state.fds.swap_remove(i);
+                            state.index.remove(&fd);
+                            if let Some(moved) = state.fds.get(i) {
+                                state.index.insert(moved.fd, i);
+                            }
+                        } else if state.fds[i].events != events {
+                            state.fds[i].events = events;
+                        }
+                    }
+                    None => {
+                        if read || write {
+                            state.index.insert(fd, state.fds.len());
+                            state.fds.push(PollFd::new(fd, events));
+                        }
+                    }
+                }
+            }
+            #[cfg(target_os = "linux")]
+            ReadinessInner::Epoll(state) => {
+                use epoll_sys::*;
+                let registered = state.interest.get(&fd).copied();
+                if registered == Some((read, write)) || (registered.is_none() && !read && !write) {
+                    return;
+                }
+                let mask =
+                    if read { EPOLLIN } else { 0 } | if write { EPOLLOUT } else { 0 };
+                let mut event = EpollEvent { events: mask, data: fd as u64 };
+                if !read && !write {
+                    unsafe {
+                        epoll_ctl(state.epfd, EPOLL_CTL_DEL, fd, &mut event);
+                    }
+                    state.interest.remove(&fd);
+                    return;
+                }
+                let op = if registered.is_some() { EPOLL_CTL_MOD } else { EPOLL_CTL_ADD };
+                let rc = unsafe { epoll_ctl(state.epfd, op, fd, &mut event) };
+                if rc != 0 {
+                    // Heal a stale cache (EEXIST on ADD, ENOENT on MOD)
+                    // by retrying with the opposite op; any further error
+                    // leaves the fd unregistered, which readiness-driven
+                    // pumps tolerate (they also run on waker wakeups).
+                    let other = if op == EPOLL_CTL_ADD { EPOLL_CTL_MOD } else { EPOLL_CTL_ADD };
+                    let rc = unsafe { epoll_ctl(state.epfd, other, fd, &mut event) };
+                    if rc != 0 {
+                        state.interest.remove(&fd);
+                        return;
+                    }
+                }
+                state.interest.insert(fd, (read, write));
+            }
+        }
+    }
+
+    /// Blocks until a registered descriptor is ready or `timeout_ms`
+    /// elapses (`-1` = wait forever). Returns the ready count (`0` =
+    /// timeout) and fills the list behind [`ready`](Readiness::ready).
+    pub fn wait(&mut self, timeout_ms: i32) -> io::Result<usize> {
+        self.ready.clear();
+        match &mut self.inner {
+            ReadinessInner::Poll(state) => {
+                let n = poll_fds(&mut state.fds, timeout_ms)?;
+                if n > 0 {
+                    for pfd in &state.fds {
+                        if pfd.revents != 0 && self.ready.len() < MAX_READY {
+                            self.ready.push(ReadyEvent {
+                                fd: pfd.fd,
+                                readable: pfd.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL)
+                                    != 0,
+                                writable: pfd.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
+                            });
+                        }
+                    }
+                }
+                Ok(self.ready.len())
+            }
+            #[cfg(target_os = "linux")]
+            ReadinessInner::Epoll(state) => {
+                use epoll_sys::*;
+                let n = loop {
+                    let rc = unsafe {
+                        epoll_wait(
+                            state.epfd,
+                            state.events.as_mut_ptr(),
+                            state.events.len() as i32,
+                            timeout_ms,
+                        )
+                    };
+                    if rc >= 0 {
+                        break rc as usize;
+                    }
+                    let err = io::Error::last_os_error();
+                    if err.kind() != io::ErrorKind::Interrupted {
+                        return Err(err);
+                    }
+                };
+                for event in &state.events[..n] {
+                    let events = event.events;
+                    self.ready.push(ReadyEvent {
+                        fd: event.data as RawFd,
+                        readable: events & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                        writable: events & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                    });
+                }
+                Ok(n)
+            }
+        }
+    }
+
+    /// The descriptors the last [`wait`](Readiness::wait) reported ready.
+    pub fn ready(&self) -> &[ReadyEvent] {
+        &self.ready
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Futex parking: raw futex(2) on a u32 in a shared mapping.
+// ---------------------------------------------------------------------------
+
+/// Outcome of a [`futex_wait`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FutexWait {
+    /// Woken by a [`futex_wake_all`], by the word already differing from
+    /// the expected value (`EAGAIN` — a wake raced the sleep), or by a
+    /// signal. The caller re-runs its idle check either way.
+    Woken,
+    /// The timeout elapsed with no wake.
+    TimedOut,
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod futex_sys {
+    pub const SYS_FUTEX: i64 = if cfg!(target_arch = "x86_64") { 202 } else { 98 };
+    /// `FUTEX_WAIT` / `FUTEX_WAKE` *without* `FUTEX_PRIVATE_FLAG`: the
+    /// word lives in a `MAP_SHARED` mapping visible to peer processes.
+    pub const FUTEX_WAIT: i64 = 0;
+    pub const FUTEX_WAKE: i64 = 1;
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    extern "C" {
+        pub fn syscall(num: i64, ...) -> i64;
+    }
+}
+
+/// Whether this build can park on a shared futex word. When false the
+/// fabric keeps the doorbell/fd parking protocol.
+pub fn futex_supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+/// Sleeps until `word != expected` (checked atomically by the kernel at
+/// sleep time — the lost-wakeup guard), a wake arrives, or `timeout`
+/// elapses. The word must live in a shared mapping when peers in other
+/// processes are expected to wake it.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn futex_wait(word: &AtomicU32, expected: u32, timeout: Duration) -> FutexWait {
+    use futex_sys::*;
+    let ts = Timespec {
+        tv_sec: timeout.as_secs() as i64,
+        tv_nsec: i64::from(timeout.subsec_nanos()),
+    };
+    let rc = unsafe {
+        syscall(
+            SYS_FUTEX,
+            word as *const AtomicU32 as i64,
+            FUTEX_WAIT,
+            i64::from(expected),
+            &ts as *const Timespec as i64,
+            0i64,
+            0i64,
+        )
+    };
+    if rc == 0 {
+        return FutexWait::Woken;
+    }
+    match io::Error::last_os_error().kind() {
+        io::ErrorKind::TimedOut => FutexWait::TimedOut,
+        // EAGAIN (word moved before sleeping) and EINTR both mean "go
+        // recheck" — report Woken.
+        _ => FutexWait::Woken,
+    }
+}
+
+/// Fallback for targets without the hand-rolled futex syscall: a short
+/// bounded sleep standing in for the timeout path. Unused in practice —
+/// [`futex_supported`] gates futex parking off on these targets.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn futex_wait(_word: &AtomicU32, _expected: u32, timeout: Duration) -> FutexWait {
+    std::thread::sleep(timeout.min(Duration::from_millis(1)));
+    FutexWait::TimedOut
+}
+
+/// Wakes every waiter parked on `word`.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn futex_wake_all(word: &AtomicU32) {
+    use futex_sys::*;
+    unsafe {
+        syscall(
+            SYS_FUTEX,
+            word as *const AtomicU32 as i64,
+            FUTEX_WAKE,
+            i64::from(i32::MAX),
+            0i64,
+            0i64,
+            0i64,
+        );
+    }
+}
+
+/// No-op on targets without futex support (nothing can be parked there).
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn futex_wake_all(_word: &AtomicU32) {}
 
 /// Gather-write fan-in limit: how many byte slices one
 /// [`OutCursor::write_to`] hands the kernel (up to [`MAX_IOV`]/2 frames
@@ -376,5 +802,84 @@ mod tests {
         let mut set = [PollFd::new(fd.fd(), POLLIN)];
         let ready = poll_fds(&mut set, 0).unwrap();
         assert_eq!(ready, 0, "drained pipe must be quiet");
+    }
+
+    /// Both readiness backends report the same level-triggered readiness
+    /// for a pending wake byte, and deregistration silences the fd.
+    #[test]
+    fn readiness_backends_agree_on_wake_readiness() {
+        for backend in [ReadinessBackend::Poll, ReadinessBackend::Epoll] {
+            let (waker, mut wfd) = waker_pair().unwrap();
+            let mut readiness = Readiness::new(backend);
+            readiness.update(wfd.fd(), true, false);
+            // Repeating identical interest must be a no-op, not an error.
+            readiness.update(wfd.fd(), true, false);
+            assert_eq!(readiness.wait(0).unwrap(), 0, "quiet pipe must time out");
+            waker.wake();
+            let n = readiness.wait(1000).unwrap();
+            assert_eq!(n, 1, "pending wake byte must be reported ({backend:?})");
+            assert!(readiness.ready()[0].readable);
+            assert_eq!(readiness.ready()[0].fd, wfd.fd());
+            // Level-triggered: undrained byte stays ready.
+            assert_eq!(readiness.wait(0).unwrap(), 1, "level-triggered ({backend:?})");
+            wfd.drain();
+            assert_eq!(readiness.wait(0).unwrap(), 0);
+            readiness.update(wfd.fd(), false, false);
+            waker.wake();
+            assert_eq!(readiness.wait(0).unwrap(), 0, "deregistered fd must be silent");
+        }
+    }
+
+    /// On Linux the Epoll choice must actually resolve to epoll (the
+    /// fallback is for other platforms / create failure only).
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_choice_resolves_to_epoll_on_linux() {
+        let readiness = Readiness::new(ReadinessBackend::Epoll);
+        assert_eq!(readiness.backend(), ReadinessBackend::Epoll);
+        assert!(futex_supported() || !cfg!(any(target_arch = "x86_64", target_arch = "aarch64")));
+    }
+
+    /// FUTEX_WAIT's atomic expected-value recheck closes the classic
+    /// lost-wakeup window: a bump between reading the sequence and
+    /// sleeping makes the wait return immediately.
+    #[test]
+    fn futex_wait_sees_wake_raced_before_sleep() {
+        if !futex_supported() {
+            return;
+        }
+        let word = std::sync::atomic::AtomicU32::new(0);
+        let s0 = word.load(std::sync::atomic::Ordering::SeqCst);
+        // Bump before sleeping: the kernel sees word != expected.
+        word.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        futex_wake_all(&word);
+        let outcome = futex_wait(&word, s0, std::time::Duration::from_secs(5));
+        assert_eq!(outcome, FutexWait::Woken, "EAGAIN must surface as Woken");
+    }
+
+    /// A cross-thread wake rouses a parked futex waiter, and an unwoken
+    /// wait times out.
+    #[test]
+    fn futex_wake_crosses_threads_and_timeout_fires() {
+        if !futex_supported() {
+            return;
+        }
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let word = std::sync::Arc::new(AtomicU32::new(0));
+        let s0 = word.load(Ordering::SeqCst);
+        let bumper = {
+            let word = std::sync::Arc::clone(&word);
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                word.fetch_add(1, Ordering::SeqCst);
+                futex_wake_all(&word);
+            })
+        };
+        let outcome = futex_wait(&word, s0, std::time::Duration::from_secs(10));
+        assert_eq!(outcome, FutexWait::Woken);
+        bumper.join().unwrap();
+        let s1 = word.load(Ordering::SeqCst);
+        let outcome = futex_wait(&word, s1, std::time::Duration::from_millis(20));
+        assert_eq!(outcome, FutexWait::TimedOut);
     }
 }

@@ -15,25 +15,64 @@
 //! Positions are monotonic `u64` byte counts (index = `pos & (capacity -
 //! 1)`), so full/empty never ambiguate and wraparound is a masked copy.
 //!
-//! **Parking.** The rings are polled by each process's net reactor, which
-//! sleeps in `poll(2)` — a memory ring has no descriptor, so each side
-//! keeps the bootstrap TCP connection as a *doorbell*: one byte written
-//! whenever the counterpart declared itself parked (`cons_waiting` /
-//! `prod_waiting` flags in the segment header, set-then-recheck with
-//! `SeqCst` on both sides so a wake is never missed). The doorbell
-//! socket sits in the reactor's poll set anyway, which also gives
-//! shared-memory links end-of-stream detection for free: a dying peer
-//! closes the socket. The reactor's bounded poll timeout backstops any
-//! doorbell lost to a full socket buffer.
+//! **Parking.** The rings are polled by each process's net reactor — a
+//! memory ring has no descriptor, so an idle reactor needs a way to be
+//! roused that doesn't involve spinning. Two protocols exist, chosen per
+//! process at fabric construction:
+//!
+//! * **Doorbell (portable fallback, and whenever the reactor also owns
+//!   TCP links and therefore sleeps in its fd set):** each side keeps the
+//!   bootstrap TCP connection as a doorbell — one byte written whenever
+//!   the counterpart declared itself parked. The doorbell socket sits in
+//!   the reactor's readiness set anyway, which also gives shared-memory
+//!   links end-of-stream detection for free: a dying peer closes the
+//!   socket.
+//! * **Futex (all links shared-memory or in-process):** the process maps
+//!   a tiny extra segment holding one `u32` *wake word* ([`WakeWord`]),
+//!   advertises its path during rendezvous, and parks its reactor in
+//!   `FUTEX_WAIT` on that word. Peers (and local workers pushing
+//!   outbound frames) wake it by `fetch_add`-ing the word and issuing
+//!   `FUTEX_WAKE` — zero kernel bytes and zero spurious readiness events
+//!   on the idle path.
+//!
+//! **Memory-ordering argument (both protocols).** Who wakes whom is
+//! decided by the `cons_waiting` / `prod_waiting` flags in the ring
+//! header, with a Dekker-style set-then-recheck: the sleeper *stores its
+//! flag, then re-checks the ring* ([`ShmConsumer::park_then_check`] /
+//! [`ShmProducer::park_then_check`]); the counterpart *publishes to the
+//! ring, then swaps the flag* ([`ShmProducer::take_consumer_parked`] /
+//! [`ShmConsumer::take_producer_parked`]). Flag accesses and the
+//! re-check loads are `SeqCst` (the swap is an RMW, a two-way fence on
+//! every real target), so in the single total order either the
+//! publisher's swap observes the flag — a wake is issued — or the
+//! sleeper's flag store precedes the swap, in which case its `SeqCst`
+//! re-check load is ordered after the `Release`-published position and
+//! observes the new bytes: it never sleeps. A wake can therefore be
+//! *early* (flag set, then work found on the re-check — cleared via
+//! `unpark`) but never lost.
+//!
+//! The futex layer adds one more race to close: a wake landing between
+//! the sleeper's re-check and its `FUTEX_WAIT`. The wake word is a
+//! sequence counter, and the reactor samples it (`SeqCst`) *before* its
+//! final pump sweep and flag re-check; `FUTEX_WAIT(word, sampled)` then
+//! re-checks `word == sampled` atomically in the kernel. A bump after
+//! the sample makes the wait return immediately (`EAGAIN`); a bump
+//! before the sample was issued after its work was published, so the
+//! final sweep already observed that work. Waking bumps the word
+//! *unconditionally* with a `SeqCst` RMW, so the sleeping side's
+//! re-read of the word synchronizes with everything published before
+//! the bump.
 //!
 //! [`FrameDecoder`]: super::codec::FrameDecoder
 
+use super::reactor::{futex_wait, futex_wake_all, FutexWait};
 use std::fs::OpenOptions;
 use std::io;
 use std::net::TcpStream;
 use std::os::fd::AsRawFd;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Bytes of frame data per directed link ring. Power of two. Small enough
 /// that wide meshes stay cheap (a P-process box maps P·(P−1) rings), big
@@ -206,6 +245,12 @@ impl ShmProducer {
         n
     }
 
+    /// The ring's data capacity in bytes (fixed at creation — a live
+    /// resize swaps in a NEW ring rather than growing this mapping).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Free bytes, after refreshing the consumer's head.
     pub fn free(&mut self) -> usize {
         self.head_cache = self.seg.u64_at(HEAD_OFF).load(Ordering::Acquire);
@@ -314,6 +359,81 @@ impl ShmConsumer {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wake words: one shared u32 per futex-parking process.
+// ---------------------------------------------------------------------------
+
+/// Offset of the sequence counter inside a wake segment.
+const WAKE_SEQ_OFF: usize = 0;
+
+/// A process-wide wake word in a shared segment: a `u32` sequence counter
+/// the process's reactor parks on with `FUTEX_WAIT`, and which co-located
+/// peers (mapping the same segment) and local workers bump to rouse it.
+/// See the module header for the lost-wakeup argument.
+pub struct WakeWord {
+    seg: Segment,
+}
+
+// SAFETY: every access to the segment goes through the one atomic word
+// below; `WakeWord` owns no other mutable state.
+unsafe impl Sync for WakeWord {}
+
+impl WakeWord {
+    fn word(&self) -> &AtomicU32 {
+        self.seg.u32_at(WAKE_SEQ_OFF)
+    }
+
+    /// Samples the sequence counter. The reactor calls this *before* its
+    /// final idle sweep; [`wait`](Self::wait) then refuses to sleep if
+    /// the word moved since.
+    pub fn seq(&self) -> u32 {
+        self.word().load(Ordering::SeqCst)
+    }
+
+    /// Wakes the owning reactor: bump the sequence (a `SeqCst` RMW, so
+    /// everything published before the bump is visible to the woken
+    /// sweep), then `FUTEX_WAKE` any parked waiter.
+    pub fn bump(&self) {
+        self.word().fetch_add(1, Ordering::SeqCst);
+        futex_wake_all(self.word());
+    }
+
+    /// Parks until the word moves past `expected`, a wake arrives, or
+    /// `timeout` elapses. The timeout bounds how long a crashed peer
+    /// (which can no longer bump) can keep this reactor asleep.
+    pub fn wait(&self, expected: u32, timeout: Duration) -> FutexWait {
+        futex_wait(self.word(), expected, timeout)
+    }
+}
+
+/// Creates this process's wake segment. Returns the path (advertised to
+/// co-located peers during rendezvous) and the mapped word.
+pub fn create_wake_word() -> io::Result<(PathBuf, WakeWord)> {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let nonce = SEGMENT_NONCE.fetch_add(1, Ordering::Relaxed);
+    let path = shm_dir().join(format!("ttd-wake-{}-{nonce}-{nanos:x}", std::process::id()));
+    let file = OpenOptions::new().read(true).write(true).create_new(true).open(&path)?;
+    file.set_len(DATA_OFF as u64)?; // zero-filled: sequence starts at 0
+    let seg = Segment::map(&file, DATA_OFF)?;
+    Ok((path, WakeWord { seg }))
+}
+
+/// Maps a peer's wake segment so this process can bump it.
+pub fn open_wake_word(path: &Path) -> io::Result<WakeWord> {
+    let file = OpenOptions::new().read(true).write(true).open(path)?;
+    if file.metadata()?.len() != DATA_OFF as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "wake segment size disagrees with the expected layout",
+        ));
+    }
+    let seg = Segment::map(&file, DATA_OFF)?;
+    Ok(WakeWord { seg })
+}
+
 /// One established shared-memory link toward a peer: the ring this
 /// process produces into, the ring it consumes from, and the retained
 /// bootstrap TCP connection serving as doorbell + liveness probe.
@@ -322,8 +442,13 @@ pub struct ShmLink {
     pub tx: ShmProducer,
     /// Ring the peer writes frames into.
     pub rx: ShmConsumer,
-    /// The bootstrap stream, kept for park wakeups and peer-death EOF.
+    /// The bootstrap stream, kept for park wakeups (doorbell protocol),
+    /// peer-death EOF, and live ring-resize rendezvous framing.
     pub doorbell: TcpStream,
+    /// The peer's wake word, when the peer advertised one (it parks its
+    /// reactor on a futex): wakes bump this instead of writing a
+    /// doorbell byte.
+    pub peer_wake: Option<WakeWord>,
 }
 
 #[cfg(test)]
@@ -417,5 +542,97 @@ mod tests {
         assert_eq!(cons.park_then_check(), 8, "re-check must see the racing publish");
         cons.unpark();
         std::fs::remove_file(path).unwrap();
+    }
+
+    /// Seeded park/unpark interleavings over the futex wake word: a
+    /// producer publishing with randomized pacing and a consumer that
+    /// genuinely parks in `FUTEX_WAIT` whenever the ring looks empty.
+    /// Every byte must arrive in order and — the actual property — no
+    /// wait may ever time out: a timeout here means a wake was lost
+    /// (the producer saw no park flag, or the bump raced past the
+    /// kernel's expected-value recheck), since the producer never goes
+    /// quiet for anywhere near the timeout.
+    #[test]
+    fn futex_parking_never_loses_a_wake_under_random_interleavings() {
+        if !crate::net::reactor::futex_supported() {
+            return;
+        }
+        crate::testing::property("futex_park_races", 10, |_case, rng| {
+            let (ring_path, mut prod, mut cons) = ring(1024);
+            std::fs::remove_file(&ring_path).unwrap();
+            let (wake_path, wake) = create_wake_word().unwrap();
+            std::fs::remove_file(&wake_path).unwrap();
+            let wake = std::sync::Arc::new(wake);
+            let total: usize = 16_384 + rng.below(16_384) as usize;
+            let producer_wake = std::sync::Arc::clone(&wake);
+            let producer_seed = rng.next_u64();
+            let producer = std::thread::spawn(move || {
+                let mut rng = crate::testing::Rng::new(producer_seed);
+                let payload: Vec<u8> = (0..total).map(|i| i as u8).collect();
+                let mut off = 0;
+                while off < payload.len() {
+                    let n = rng.range(1, 700) as usize;
+                    let end = (off + n).min(payload.len());
+                    let mut chunk = &payload[off..end];
+                    while !chunk.is_empty() {
+                        let wrote = prod.write(chunk);
+                        chunk = &chunk[wrote..];
+                        // Publish-then-check: the park flag decides
+                        // whether a wake is owed.
+                        if prod.take_consumer_parked() {
+                            producer_wake.bump();
+                        }
+                        if wrote == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    off = end;
+                    if rng.chance(0.3) {
+                        std::thread::sleep(Duration::from_micros(rng.below(200)));
+                    }
+                }
+            });
+            let mut got = Vec::with_capacity(total);
+            let mut timeouts = 0u32;
+            while got.len() < total {
+                let n = cons.read(usize::MAX, &mut |b| got.extend_from_slice(b));
+                if n > 0 {
+                    continue;
+                }
+                // Sample the word, advertise the park, re-check, sleep.
+                let s0 = wake.seq();
+                if cons.park_then_check() > 0 {
+                    cons.unpark();
+                    continue;
+                }
+                if wake.wait(s0, Duration::from_secs(2)) == FutexWait::TimedOut {
+                    timeouts += 1;
+                }
+                cons.unpark();
+            }
+            producer.join().unwrap();
+            assert_eq!(timeouts, 0, "a timed-out park means a lost wake");
+            assert_eq!(got.len(), total);
+            assert!(got.iter().enumerate().all(|(i, b)| *b == i as u8), "bytes reordered");
+        });
+    }
+
+    /// The wake word round-trips through its shared segment: a peer-side
+    /// mapping bumps, the owner-side mapping observes and wakes.
+    #[test]
+    fn wake_word_crosses_mappings() {
+        let (path, owner) = create_wake_word().unwrap();
+        let peer = open_wake_word(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(owner.seq(), 0);
+        peer.bump();
+        assert_eq!(owner.seq(), 1, "a peer bump must be visible through the owner mapping");
+        if crate::net::reactor::futex_supported() {
+            assert_eq!(
+                owner.wait(0, Duration::from_secs(1)),
+                FutexWait::Woken,
+                "a moved word must refuse to sleep"
+            );
+        }
     }
 }

@@ -1,0 +1,409 @@
+//! Telemetry-driven net-layer autotuning: the per-process governor.
+//!
+//! PR 2/3/6 exposed the knobs (`Config::ring_capacity`,
+//! `Config::progress_flush`, `Config::send_batch`, `SHM_RING_BYTES`) and
+//! the benches (`--sweep-ring`, `--sweep-cadence`) that let an operator
+//! sweep them by hand. This module closes the loop: a [`Governor`] runs
+//! on the net reactor thread, consumes the *existing* stall telemetry
+//! each bookkeeping epoch (shm-ring-full stalls per peer, send-queue
+//! stalls, progress-frame rate, wakeup/spurious counts), and
+//!
+//! * **grows shared-memory ring capacity** — sustained `net-shm-full`
+//!   stalls on a peer's ring for [`RING_GROW_STREAK`] consecutive epochs
+//!   request a live remap to double the capacity (the fabric performs
+//!   the switch at a frame boundary; see `net/fabric.rs`), capped at
+//!   [`MAX_RING_BYTES`] and [`MAX_RING_RESIZES`] total resizes;
+//! * **adjusts the progress-flush cadence online** — a bounded
+//!   multiplicative hill-climb over [`TuneShared::progress_flush`]:
+//!   widen (×2, up to [`FLUSH_MAX_NS`]) when the reactor is drowning in
+//!   tiny progress frames or spurious wakeups, narrow (÷2, down to the
+//!   configured baseline or [`FLUSH_MIN_NS`]) when traffic is light
+//!   enough that batching buys nothing, capped at
+//!   [`MAX_CADENCE_ADJUSTS`] total adjustments.
+//!
+//! Workers observe cadence changes through [`TuneShared`]: a generation
+//! counter published with `Release` after each new value, re-read by the
+//! worker step loop with one relaxed-cost atomic load per step. The
+//! companion `send_batch` knob is published too, but operator send-batch
+//! sizes bind at dataflow *build* time, so it only affects dataflows
+//! built after a change — documented here so nobody mistakes it for a
+//! live knob.
+//!
+//! Every decision is counted (`ring-resizes` / `cadence-adjust` columns
+//! in the worker telemetry tables, `ring_resizes` / `cadence_adjusts` in
+//! `BENCH_net.json`) and optionally logged to stderr when
+//! `TTD_TUNE_LOG` is set. The governor never shrinks a ring (a live
+//! shrink would need consumer-side drain coordination for no measured
+//! win) and all its limits are compile-time constants, so a pathological
+//! feedback loop is bounded by construction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Epochs of sustained ring-full stalling before a grow is requested.
+pub const RING_GROW_STREAK: u32 = 2;
+/// Stalls per epoch on one ring that count as "sustained".
+pub const RING_STALL_THRESHOLD: u64 = 16;
+/// Ceiling for a grown ring (16 MiB).
+pub const MAX_RING_BYTES: usize = 1 << 24;
+/// Total ring-grow decisions one governor may make.
+pub const MAX_RING_RESIZES: u64 = 16;
+/// Floor for the progress-flush cadence.
+pub const FLUSH_MIN_NS: u64 = 5_000;
+/// Ceiling for the progress-flush cadence.
+pub const FLUSH_MAX_NS: u64 = 200_000;
+/// Total cadence adjustments one governor may make.
+pub const MAX_CADENCE_ADJUSTS: u64 = 64;
+/// Progress frames per epoch above which the cadence widens.
+const PROGRESS_FRAMES_HIGH: u64 = 512;
+/// Progress frames per epoch below which the cadence narrows back
+/// toward the configured baseline.
+const PROGRESS_FRAMES_LOW: u64 = 32;
+/// Wakeups per epoch below which spurious-ratio evidence is ignored.
+const WAKEUPS_SIGNIFICANT: u64 = 64;
+
+/// The governor's outward face: current knob values plus a generation
+/// counter, shared between the reactor (writer) and every worker thread
+/// (readers). All loads on the read path are single atomics.
+pub struct TuneShared {
+    progress_flush_ns: AtomicU64,
+    send_batch: AtomicUsize,
+    generation: AtomicU64,
+    ring_resizes: AtomicU64,
+    cadence_adjusts: AtomicU64,
+}
+
+impl TuneShared {
+    /// Shared knobs seeded from the configured values.
+    pub fn new(progress_flush: Duration, send_batch: usize) -> TuneShared {
+        TuneShared {
+            progress_flush_ns: AtomicU64::new(progress_flush.as_nanos() as u64),
+            send_batch: AtomicUsize::new(send_batch),
+            generation: AtomicU64::new(0),
+            ring_resizes: AtomicU64::new(0),
+            cadence_adjusts: AtomicU64::new(0),
+        }
+    }
+
+    /// The cadence a worker should flush progress at. Read after
+    /// observing a [`generation`](Self::generation) change.
+    pub fn progress_flush(&self) -> Duration {
+        Duration::from_nanos(self.progress_flush_ns.load(Ordering::Relaxed))
+    }
+
+    /// The current send-batch recommendation (binds at dataflow build
+    /// time only).
+    pub fn send_batch(&self) -> usize {
+        self.send_batch.load(Ordering::Relaxed)
+    }
+
+    /// Bumped (`Release`) after every knob change; workers re-read the
+    /// knobs when the value they last saw differs (`Acquire`).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Ring-grow decisions made so far.
+    pub fn ring_resizes(&self) -> u64 {
+        self.ring_resizes.load(Ordering::Relaxed)
+    }
+
+    /// Cadence adjustments made so far.
+    pub fn cadence_adjusts(&self) -> u64 {
+        self.cadence_adjusts.load(Ordering::Relaxed)
+    }
+
+    fn publish_flush(&self, ns: u64) {
+        self.progress_flush_ns.store(ns, Ordering::Relaxed);
+        self.cadence_adjusts.fetch_add(1, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    fn note_resize(&self) {
+        self.ring_resizes.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One bookkeeping epoch's counter *deltas*, assembled by the reactor.
+pub struct EpochStats<'a> {
+    /// `(peer, shm-ring-full stalls this epoch)` per shared-memory link.
+    pub per_peer_shm_stalls: &'a [(usize, u64)],
+    /// Outbound-queue send stalls this epoch (all peers).
+    pub send_stalls: u64,
+    /// Progress frames sent this epoch (all peers).
+    pub progress_frames: u64,
+    /// Reactor wakeups this epoch.
+    pub wakeups: u64,
+    /// Spurious wakeups this epoch (all causes).
+    pub spurious: u64,
+}
+
+/// A decision the fabric must execute (cadence changes are applied to
+/// [`TuneShared`] directly; ring growth needs the reactor's driver
+/// access).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Live-remap the ring toward `peer` to `capacity` bytes.
+    GrowRing {
+        /// The peer process whose outbound ring should grow.
+        peer: usize,
+        /// The new capacity (power of two, ≤ [`MAX_RING_BYTES`]).
+        capacity: usize,
+    },
+}
+
+/// The per-process governor. Owned and stepped by the reactor thread;
+/// everything it shares with workers goes through [`TuneShared`].
+pub struct Governor {
+    shared: std::sync::Arc<TuneShared>,
+    /// The cadence the process was configured with — the narrow target.
+    baseline_flush_ns: u64,
+    /// Current capacity per shm peer (updated when a grow is issued).
+    ring_capacity: HashMap<usize, usize>,
+    /// Consecutive over-threshold epochs per shm peer.
+    stall_streak: HashMap<usize, u32>,
+    resizes: u64,
+    cadence_adjusts: u64,
+    log: bool,
+}
+
+impl Governor {
+    /// A governor publishing through `shared`. `rings` lists each
+    /// shared-memory peer with its initial ring capacity.
+    pub fn new(shared: std::sync::Arc<TuneShared>, rings: &[(usize, usize)]) -> Governor {
+        let baseline_flush_ns = shared.progress_flush().as_nanos() as u64;
+        let mut ring_capacity = HashMap::new();
+        let mut stall_streak = HashMap::new();
+        for &(peer, capacity) in rings {
+            ring_capacity.insert(peer, capacity);
+            stall_streak.insert(peer, 0);
+        }
+        Governor {
+            shared,
+            baseline_flush_ns,
+            ring_capacity,
+            stall_streak,
+            resizes: 0,
+            cadence_adjusts: 0,
+            log: std::env::var_os("TTD_TUNE_LOG").is_some(),
+        }
+    }
+
+    /// Records that the fabric completed (or abandoned) a grow so the
+    /// governor's capacity view tracks reality. `applied` is false when
+    /// the fabric could not perform the switch (e.g. the link closed
+    /// mid-flight); the budget is still spent — a link that defeats
+    /// resizing should not be retried forever.
+    pub fn resize_finished(&mut self, peer: usize, capacity: usize, applied: bool) {
+        if applied {
+            if let Some(current) = self.ring_capacity.get_mut(&peer) {
+                *current = capacity;
+            }
+        }
+        if self.log {
+            eprintln!(
+                "[tune] ring peer={peer} capacity={capacity} applied={applied} \
+                 (resize {}/{MAX_RING_RESIZES})",
+                self.resizes
+            );
+        }
+    }
+
+    /// One bookkeeping epoch: consume counter deltas, apply cadence
+    /// changes to [`TuneShared`], and push ring-grow requests into
+    /// `actions` (cleared by the caller; reused so the steady state
+    /// allocates nothing).
+    pub fn epoch(&mut self, stats: &EpochStats<'_>, actions: &mut Vec<Action>) {
+        // Ring growth: sustained full-ring stalls mean the producer is
+        // repeatedly parking on capacity, the one thing more bytes fix.
+        for &(peer, stalls) in stats.per_peer_shm_stalls {
+            let streak = self.stall_streak.entry(peer).or_insert(0);
+            if stalls >= RING_STALL_THRESHOLD {
+                *streak += 1;
+            } else {
+                *streak = 0;
+            }
+            if *streak >= RING_GROW_STREAK && self.resizes < MAX_RING_RESIZES {
+                let current = self.ring_capacity.get(&peer).copied().unwrap_or(0);
+                let next = (current * 2).min(MAX_RING_BYTES);
+                if next > current {
+                    *streak = 0;
+                    self.resizes += 1;
+                    self.shared.note_resize();
+                    actions.push(Action::GrowRing { peer, capacity: next });
+                }
+            }
+        }
+
+        // Cadence: a bounded multiplicative hill-climb. Too many tiny
+        // progress frames (or a reactor mostly waking for nothing while
+        // busy) → widen, so each flush coalesces more updates. Light
+        // progress traffic on a widened cadence → narrow back toward the
+        // configured baseline, reclaiming latency.
+        if self.cadence_adjusts >= MAX_CADENCE_ADJUSTS {
+            return;
+        }
+        let current = self.shared.progress_flush().as_nanos() as u64;
+        let spurious_heavy = stats.wakeups >= WAKEUPS_SIGNIFICANT
+            && stats.spurious.saturating_mul(2) > stats.wakeups;
+        let widened = if (stats.progress_frames > PROGRESS_FRAMES_HIGH || spurious_heavy)
+            && current < FLUSH_MAX_NS
+        {
+            Some((current * 2).min(FLUSH_MAX_NS))
+        } else if stats.progress_frames < PROGRESS_FRAMES_LOW
+            && current > self.baseline_flush_ns.max(FLUSH_MIN_NS)
+        {
+            Some((current / 2).max(self.baseline_flush_ns.max(FLUSH_MIN_NS)))
+        } else {
+            None
+        };
+        if let Some(next) = widened {
+            self.cadence_adjusts += 1;
+            self.shared.publish_flush(next);
+            if self.log {
+                eprintln!(
+                    "[tune] progress_flush {current}ns -> {next}ns \
+                     (frames={} wakeups={} spurious={} adjust {}/{MAX_CADENCE_ADJUSTS})",
+                    stats.progress_frames, stats.wakeups, stats.spurious, self.cadence_adjusts
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn governor(flush_us: u64, rings: &[(usize, usize)]) -> (Governor, Arc<TuneShared>) {
+        let shared = Arc::new(TuneShared::new(Duration::from_micros(flush_us), 1024));
+        (Governor::new(Arc::clone(&shared), rings), shared)
+    }
+
+    fn quiet_epoch<'a>() -> EpochStats<'a> {
+        EpochStats {
+            per_peer_shm_stalls: &[],
+            send_stalls: 0,
+            progress_frames: 100,
+            wakeups: 10,
+            spurious: 0,
+        }
+    }
+
+    #[test]
+    fn sustained_stalls_grow_the_ring_and_single_spikes_do_not() {
+        let (mut governor, shared) = governor(20, &[(1, 1 << 20)]);
+        let mut actions = Vec::new();
+        let stalled = [(1usize, RING_STALL_THRESHOLD + 5)];
+        // One stalled epoch: streak started, no action yet.
+        governor.epoch(
+            &EpochStats { per_peer_shm_stalls: &stalled, ..quiet_epoch() },
+            &mut actions,
+        );
+        assert!(actions.is_empty(), "one epoch must not trigger a resize");
+        // A quiet epoch resets the streak.
+        governor.epoch(&quiet_epoch(), &mut actions);
+        governor.epoch(
+            &EpochStats { per_peer_shm_stalls: &stalled, ..quiet_epoch() },
+            &mut actions,
+        );
+        assert!(actions.is_empty(), "streak must reset after a quiet epoch");
+        // Two consecutive stalled epochs: grow by doubling.
+        governor.epoch(
+            &EpochStats { per_peer_shm_stalls: &stalled, ..quiet_epoch() },
+            &mut actions,
+        );
+        assert_eq!(actions, vec![Action::GrowRing { peer: 1, capacity: 1 << 21 }]);
+        assert_eq!(shared.ring_resizes(), 1);
+        governor.resize_finished(1, 1 << 21, true);
+        actions.clear();
+        // The next grow doubles from the new capacity.
+        for _ in 0..RING_GROW_STREAK {
+            governor.epoch(
+                &EpochStats { per_peer_shm_stalls: &stalled, ..quiet_epoch() },
+                &mut actions,
+            );
+        }
+        assert_eq!(actions, vec![Action::GrowRing { peer: 1, capacity: 1 << 22 }]);
+    }
+
+    #[test]
+    fn ring_growth_is_capped_in_size_and_count() {
+        let (mut governor, shared) = governor(20, &[(1, MAX_RING_BYTES)]);
+        let mut actions = Vec::new();
+        let stalled = [(1usize, RING_STALL_THRESHOLD)];
+        for _ in 0..20 {
+            governor.epoch(
+                &EpochStats { per_peer_shm_stalls: &stalled, ..quiet_epoch() },
+                &mut actions,
+            );
+        }
+        assert!(actions.is_empty(), "a ring at MAX_RING_BYTES must never grow");
+        assert_eq!(shared.ring_resizes(), 0);
+    }
+
+    #[test]
+    fn frame_flood_widens_cadence_and_light_traffic_narrows_it_back() {
+        let (mut governor, shared) = governor(20, &[]);
+        let mut actions = Vec::new();
+        let g0 = shared.generation();
+        governor.epoch(
+            &EpochStats { progress_frames: PROGRESS_FRAMES_HIGH + 1, ..quiet_epoch() },
+            &mut actions,
+        );
+        assert_eq!(shared.progress_flush(), Duration::from_micros(40), "flood must widen x2");
+        assert!(shared.generation() > g0, "workers must see a generation bump");
+        assert_eq!(shared.cadence_adjusts(), 1);
+        governor.epoch(
+            &EpochStats { progress_frames: PROGRESS_FRAMES_LOW - 1, ..quiet_epoch() },
+            &mut actions,
+        );
+        assert_eq!(
+            shared.progress_flush(),
+            Duration::from_micros(20),
+            "light traffic must narrow back toward the baseline"
+        );
+        // Never narrows below the configured baseline.
+        governor.epoch(
+            &EpochStats { progress_frames: 0, ..quiet_epoch() },
+            &mut actions,
+        );
+        assert_eq!(shared.progress_flush(), Duration::from_micros(20));
+    }
+
+    #[test]
+    fn cadence_widening_is_capped() {
+        let (mut governor, shared) = governor(20, &[]);
+        let mut actions = Vec::new();
+        for _ in 0..(MAX_CADENCE_ADJUSTS + 20) {
+            governor.epoch(
+                &EpochStats { progress_frames: PROGRESS_FRAMES_HIGH * 4, ..quiet_epoch() },
+                &mut actions,
+            );
+        }
+        assert!(shared.cadence_adjusts() <= MAX_CADENCE_ADJUSTS);
+        assert_eq!(
+            shared.progress_flush(),
+            Duration::from_nanos(FLUSH_MAX_NS),
+            "widening must stop at the ceiling"
+        );
+    }
+
+    #[test]
+    fn spurious_heavy_epochs_widen_cadence() {
+        let (mut governor, shared) = governor(20, &[]);
+        let mut actions = Vec::new();
+        governor.epoch(
+            &EpochStats {
+                wakeups: WAKEUPS_SIGNIFICANT * 2,
+                spurious: WAKEUPS_SIGNIFICANT + 1,
+                ..quiet_epoch()
+            },
+            &mut actions,
+        );
+        assert_eq!(shared.cadence_adjusts(), 1, "mostly-spurious wakeups must widen");
+        assert_eq!(shared.progress_flush(), Duration::from_micros(40));
+    }
+}

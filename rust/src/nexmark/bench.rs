@@ -122,7 +122,7 @@ pub fn run_nexmark_cluster(
     processes: usize,
     process_index: usize,
     addresses: Vec<String>,
-    net_transport: crate::config::NetTransport,
+    net: crate::config::NetOptions,
 ) -> Result<Outcome, NetError> {
     let config = Config {
         workers: params.workers,
@@ -130,7 +130,10 @@ pub fn run_nexmark_cluster(
         processes,
         process_index,
         addresses,
-        net_transport,
+        net_transport: net.transport,
+        reactor_backend: net.reactor,
+        parking: net.parking,
+        autotune: net.autotune,
         ..Config::default()
     };
     let epoch_cell = std::sync::OnceLock::new();

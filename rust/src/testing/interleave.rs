@@ -331,9 +331,13 @@ impl Sim {
     /// and coalesced on the wire. The chaos pairs ride each process's
     /// reactor as `Virtual` links, so the adversary drives the reactor's
     /// readiness path (partial reads, spurious wakeups, parked frames),
-    /// not a private thread pair. Returns the per-process net fabrics so
-    /// the test can shut them down.
-    fn new_cluster(shape: &[usize], seed: u64) -> (Sim, Vec<Arc<NetFabric>>) {
+    /// not a private thread pair. With `autotune` the governor runs live
+    /// on every reactor: its cadence decisions (and generation publishes)
+    /// happen concurrently with the adversarial schedule, so a governor
+    /// that perturbed FIFO or the release gate would trip the same
+    /// per-delivery conservatism checks. Returns the per-process net
+    /// fabrics so the test can shut them down.
+    fn new_cluster(shape: &[usize], seed: u64, autotune: bool) -> (Sim, Vec<Arc<NetFabric>>) {
         let processes = shape.len();
         let mut links: Vec<Vec<Option<NetLink>>> =
             (0..processes).map(|_| (0..processes).map(|_| None).collect()).collect();
@@ -354,7 +358,16 @@ impl Sim {
         let mut nets = Vec::new();
         let mut fabrics = Vec::new();
         for (p, row) in links.into_iter().enumerate() {
-            let net = NetFabric::new(p, shape.to_vec(), row, 8);
+            let options = crate::net::FabricOptions {
+                tune: autotune.then(|| {
+                    Arc::new(crate::net::TuneShared::new(
+                        std::time::Duration::from_micros(20),
+                        1024,
+                    ))
+                }),
+                ..crate::net::FabricOptions::default()
+            };
+            let net = NetFabric::new_with(p, shape.to_vec(), row, 8, options);
             // The same deliberately tiny rings as the single-process sim,
             // so mailbox spill and the release gate stay hot.
             fabrics.push(Fabric::cluster(shape, p, DATA_RING_CAPACITY, net.clone()));
@@ -540,7 +553,9 @@ fn prefix_safety_under_random_interleavings() {
 /// fan-out over the chaos transport (seeded torn writes, one-byte reads,
 /// delayed/coalesced frames). If the dedup fan-out broke per-sender FIFO
 /// or the produce-before-release gate, the per-delivery conservatism
-/// check here is exactly what would trip.
+/// check here is exactly what would trip. Half the cases run with the
+/// autotuning governor live on every reactor thread, so its online
+/// cadence decisions face the adversarial schedule too.
 #[test]
 fn prefix_safety_under_cluster_fan_out() {
     property("prefix_safety_under_cluster_fan_out", 8, |case, rng| {
@@ -552,7 +567,8 @@ fn prefix_safety_under_cluster_fan_out() {
             2 => &[2, 1, 1],
             _ => &[1, 3],
         };
-        let (mut sim, nets) = Sim::new_cluster(shape, rng.next_u64());
+        let autotune = case % 2 == 1;
+        let (mut sim, nets) = Sim::new_cluster(shape, rng.next_u64(), autotune);
         let peers = sim.workers.len();
         let rounds = rng.range(60, 160);
 

@@ -33,14 +33,19 @@
 
 use super::allocator::Fabric;
 use super::Worker;
-use crate::config::{Config, NetTransport};
-use crate::net::fabric::{NetFabric, NetLink};
-use crate::net::shm::{create_ring, open_ring, ShmConsumer, ShmLink, SHM_RING_BYTES};
+use crate::config::{Config, NetTransport, Parking};
+use crate::net::fabric::{FabricOptions, NetFabric, NetLink};
+use crate::net::reactor::futex_supported;
+use crate::net::shm::{
+    create_ring, create_wake_word, open_ring, open_wake_word, ShmConsumer, ShmLink, WakeWord,
+    SHM_RING_BYTES,
+};
 use crate::net::transport::{tcp_pair, NetError};
+use crate::net::tune::TuneShared;
 use crate::progress::timestamp::Timestamp;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -140,12 +145,14 @@ where
 const HANDSHAKE_MAGIC: u64 = u64::from_le_bytes(*b"ttdnetv1");
 
 /// Bumped whenever the wire format or handshake layout changes.
-/// Version 3: HELLO and WELCOME carry a transport byte so both sides pin
-/// the same per-link transport (reactor TCP, shared memory, or the
-/// thread-pair baseline) before any frame crosses. Version 2 added the
+/// Version 4: WELCOME additionally carries process 0's parking mode and
+/// autotune flag (one byte each), and a shared-memory rendezvous
+/// exchanges optional futex wake-word paths alongside the ring paths.
+/// Version 3 added the transport byte so both sides pin the same
+/// per-link transport before any frame crosses; version 2 added the
 /// per-process broadcast progress frames (dedup fan-out) and the full
 /// per-process worker-count shape.
-const HANDSHAKE_VERSION: u32 = 3;
+const HANDSHAKE_VERSION: u32 = 4;
 
 /// Per-link transport tags on the wire (the handshake's transport byte).
 const LINK_TCP: u8 = 0;
@@ -158,6 +165,24 @@ fn transport_name(tag: u8) -> &'static str {
         LINK_SHM => "shm",
         LINK_THREADS => "tcp-threads",
         _ => "unknown",
+    }
+}
+
+/// Parking-mode tags on the wire (the WELCOME's parking byte).
+fn parking_tag(parking: Parking) -> u8 {
+    match parking {
+        Parking::Auto => 0,
+        Parking::Doorbell => 1,
+        Parking::Futex => 2,
+    }
+}
+
+fn parking_from_tag(tag: u8) -> Result<Parking, NetError> {
+    match tag {
+        0 => Ok(Parking::Auto),
+        1 => Ok(Parking::Doorbell),
+        2 => Ok(Parking::Futex),
+        other => Err(NetError::Protocol(format!("unknown parking tag {other}"))),
     }
 }
 
@@ -284,17 +309,18 @@ fn read_hello(
 }
 
 /// `WELCOME` (acceptor → connector): echoes the cluster identity, carries
-/// the acceptor's tuning, then the shape. The connector adopts the tuning
-/// only from process 0, which makes process 0's flags authoritative for
-/// the whole cluster (every process connects to 0 before spawning
-/// workers).
+/// the acceptor's tuning (including the parking mode and autotune flag,
+/// so one process's flags select the cluster's wake protocol and
+/// governor), then the shape. The connector adopts the tuning only from
+/// process 0, which makes process 0's flags authoritative for the whole
+/// cluster (every process connects to 0 before spawning workers).
 fn write_welcome(
     stream: &mut TcpStream,
     config: &Config,
     shape: &[usize],
     peer: usize,
 ) -> Result<(), NetError> {
-    let mut buf = Vec::with_capacity(45 + 4 * shape.len());
+    let mut buf = Vec::with_capacity(47 + 4 * shape.len());
     buf.extend_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
     buf.extend_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
     buf.extend_from_slice(&(config.process_index as u32).to_le_bytes());
@@ -303,6 +329,8 @@ fn write_welcome(
     buf.extend_from_slice(&(config.progress_flush.as_nanos() as u64).to_le_bytes());
     buf.extend_from_slice(&(config.send_batch as u64).to_le_bytes());
     buf.push(link_transport(config, config.process_index, peer));
+    buf.push(parking_tag(config.parking));
+    buf.push(config.autotune as u8);
     push_shape(&mut buf, shape);
     stream.write_all(&buf)?;
     stream.flush()?;
@@ -317,7 +345,7 @@ fn read_welcome(
     shape: &[usize],
     peer: usize,
 ) -> Result<(), NetError> {
-    let mut buf = [0u8; 45];
+    let mut buf = [0u8; 47];
     stream.read_exact(&mut buf)?;
     let magic = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
     let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
@@ -337,6 +365,8 @@ fn read_welcome(
             buf[28..36].try_into().expect("8 bytes"),
         ));
         config.send_batch = u64::from_le_bytes(buf[36..44].try_into().expect("8 bytes")) as usize;
+        config.parking = parking_from_tag(buf[45])?;
+        config.autotune = buf[46] != 0;
     }
     let transport = buf[44];
     let expected = link_transport(config, config.process_index, peer);
@@ -374,27 +404,40 @@ fn connect_with_retry(address: &str) -> Result<TcpStream, NetError> {
 /// each side creates its outbound `/dev/shm` ring, the paths cross over
 /// the socket, each side maps the peer's ring and acks, and the ring
 /// files are unlinked (the mappings outlive the names). The socket
-/// itself is retained as the link's parking doorbell.
-fn shm_rendezvous(mut stream: TcpStream) -> Result<NetLink, NetError> {
+/// itself is retained as the link's parking doorbell. `wake_path` is
+/// this process's futex wake-word segment, advertised to the peer iff
+/// this process will park in futex mode (the peer then bumps the word
+/// instead of ringing the doorbell).
+fn shm_rendezvous(mut stream: TcpStream, wake_path: Option<&Path>) -> Result<NetLink, NetError> {
     let (path, tx) = create_ring(SHM_RING_BYTES)?;
-    let exchanged = shm_exchange(&mut stream, &path);
+    let exchanged = shm_exchange(&mut stream, &path, wake_path);
     // Unlink our ring in every outcome: after a successful exchange the
     // peer has mapped it (its ack says so), and a failed bootstrap must
     // not leak /dev/shm segments.
     let _ = std::fs::remove_file(&path);
-    let rx = exchanged?;
-    Ok(NetLink::Shm(ShmLink { tx, rx, doorbell: stream }))
+    let (rx, peer_wake) = exchanged?;
+    Ok(NetLink::Shm(ShmLink { tx, rx, doorbell: stream, peer_wake }))
 }
 
 /// The symmetric half of [`shm_rendezvous`]: sends our ring's capacity
-/// and path, maps the peer's, and exchanges one-byte acks so neither
-/// side unlinks a ring the other has not yet mapped.
-fn shm_exchange(stream: &mut TcpStream, path: &Path) -> Result<ShmConsumer, NetError> {
+/// and path plus our (optional, zero-length = none) wake-word path, maps
+/// the peer's ring and wake word, and exchanges one-byte acks so neither
+/// side unlinks a segment the other has not yet mapped.
+fn shm_exchange(
+    stream: &mut TcpStream,
+    path: &Path,
+    wake_path: Option<&Path>,
+) -> Result<(ShmConsumer, Option<WakeWord>), NetError> {
     let path_str = path.to_str().expect("shm ring path is utf-8");
-    let mut hdr = Vec::with_capacity(12 + path_str.len());
+    let wake_str = wake_path.map(|p| p.to_str().expect("wake word path is utf-8"));
+    let mut hdr = Vec::with_capacity(16 + path_str.len());
     hdr.extend_from_slice(&(SHM_RING_BYTES as u64).to_le_bytes());
     hdr.extend_from_slice(&(path_str.len() as u32).to_le_bytes());
     hdr.extend_from_slice(path_str.as_bytes());
+    hdr.extend_from_slice(&(wake_str.map_or(0, str::len) as u32).to_le_bytes());
+    if let Some(wake) = wake_str {
+        hdr.extend_from_slice(wake.as_bytes());
+    }
     stream.write_all(&hdr)?;
     stream.flush()?;
 
@@ -411,19 +454,40 @@ fn shm_exchange(stream: &mut TcpStream, path: &Path) -> Result<ShmConsumer, NetE
         .map_err(|_| NetError::Protocol("shm ring path is not utf-8".into()))?;
     let rx = open_ring(Path::new(&peer_path), peer_cap)?;
 
+    let mut wake_len = [0u8; 4];
+    stream.read_exact(&mut wake_len)?;
+    let wake_len = u32::from_le_bytes(wake_len) as usize;
+    if wake_len > 4096 {
+        return Err(NetError::Protocol(format!("absurd wake word path length {wake_len}")));
+    }
+    let peer_wake = if wake_len > 0 {
+        let mut peer_wake_path = vec![0u8; wake_len];
+        stream.read_exact(&mut peer_wake_path)?;
+        let peer_wake_path = String::from_utf8(peer_wake_path)
+            .map_err(|_| NetError::Protocol("wake word path is not utf-8".into()))?;
+        Some(open_wake_word(Path::new(&peer_wake_path))?)
+    } else {
+        None
+    };
+
     stream.write_all(&[1u8])?;
     stream.flush()?;
     let mut ack = [0u8; 1];
     stream.read_exact(&mut ack)?;
-    Ok(rx)
+    Ok((rx, peer_wake))
 }
 
 /// Turns a handshaken bootstrap connection into the link the two sides
 /// agreed on (the handshake's transport byte has already pinned the
 /// agreement, so both run the matching arm).
-fn finish_link(config: &Config, stream: TcpStream, peer: usize) -> Result<NetLink, NetError> {
+fn finish_link(
+    config: &Config,
+    stream: TcpStream,
+    peer: usize,
+    wake_path: Option<&Path>,
+) -> Result<NetLink, NetError> {
     match link_transport(config, config.process_index, peer) {
-        LINK_SHM => shm_rendezvous(stream),
+        LINK_SHM => shm_rendezvous(stream, wake_path),
         LINK_THREADS => {
             let (tx, rx) = tcp_pair(stream)?;
             Ok(NetLink::Threads(Box::new(tx), Box::new(rx)))
@@ -432,13 +496,30 @@ fn finish_link(config: &Config, stream: TcpStream, peer: usize) -> Result<NetLin
     }
 }
 
+/// Whether this process's reactor may park in a futex instead of a
+/// descriptor sleep: the flag allows it, the target supports the
+/// syscall, and EVERY remote link is shared memory — an fd-borne link
+/// (TCP or thread-pair) needs the reactor asleep in its fd set, which a
+/// futex bump cannot rouse. Called after process 0's WELCOME has been
+/// adopted, so the whole cluster computes the same answer.
+fn futex_eligible(config: &Config) -> bool {
+    if config.parking == Parking::Doorbell || !futex_supported() {
+        return false;
+    }
+    (0..config.processes)
+        .filter(|p| *p != config.process_index)
+        .all(|p| link_transport(config, config.process_index, p) == LINK_SHM)
+}
+
 /// Establishes the full mesh for `config` (whose cluster shape is
 /// `shape`), returning one link per process (`None` at
-/// `config.process_index`) and adopting process 0's tuning into `config`.
+/// `config.process_index`) plus this process's own futex wake word (when
+/// it parks in futex mode; every shm peer has mapped the word and bumps
+/// it), and adopting process 0's tuning into `config`.
 fn bootstrap(
     config: &mut Config,
     shape: &[usize],
-) -> Result<Vec<Option<NetLink>>, NetError> {
+) -> Result<(Vec<Option<NetLink>>, Option<Arc<WakeWord>>), NetError> {
     let me = config.process_index;
     let processes = config.processes;
     if config.addresses.len() != processes {
@@ -453,6 +534,23 @@ fn bootstrap(
 
     let mut links: Vec<Option<NetLink>> =
         (0..processes).map(|_| None).collect();
+    // Created lazily at the first link: for `me > 0` futex eligibility
+    // depends on process 0's WELCOME (parking mode), which lands before
+    // the first `finish_link`. `None` here still means "undecided".
+    let mut wake: Option<(PathBuf, Arc<WakeWord>)> = None;
+    let mut decided = false;
+    let mut decide = |config: &Config,
+                      wake: &mut Option<(PathBuf, Arc<WakeWord>)>|
+     -> Result<(), NetError> {
+        if !decided {
+            decided = true;
+            if futex_eligible(config) {
+                let (path, word) = create_wake_word()?;
+                *wake = Some((path, Arc::new(word)));
+            }
+        }
+        Ok(())
+    };
 
     // Connect to every lower-indexed process, in order — 0 first, so its
     // WELCOME configures this process before anything else happens.
@@ -464,7 +562,9 @@ fn bootstrap(
         write_hello(&mut stream, config, shape, peer)?;
         read_welcome(&mut stream, config, shape, peer)?;
         let _ = stream.set_read_timeout(None);
-        links[peer] = Some(finish_link(config, stream, peer)?);
+        decide(config, &mut wake)?;
+        let wake_path = wake.as_ref().map(|(p, _)| p.as_path());
+        links[peer] = Some(finish_link(config, stream, peer, wake_path)?);
     }
 
     // Accept every higher-indexed process, identified by its HELLO.
@@ -487,10 +587,19 @@ fn bootstrap(
             return Err(NetError::Protocol(format!("unexpected connection from {peer}")));
         }
         write_welcome(&mut stream, config, shape, peer)?;
-        links[peer] = Some(finish_link(config, stream, peer)?);
+        decide(config, &mut wake)?;
+        let wake_path = wake.as_ref().map(|(p, _)| p.as_path());
+        links[peer] = Some(finish_link(config, stream, peer, wake_path)?);
         expected -= 1;
     }
-    Ok(links)
+    // Every peer that needed the wake word has mapped it: the name can
+    // go (the mappings outlive it), and a crashed bootstrap must not
+    // leak /dev/shm segments.
+    let wake = wake.map(|(path, word)| {
+        let _ = std::fs::remove_file(&path);
+        word
+    });
+    Ok((links, wake))
 }
 
 /// Runs `build` on every worker this process hosts, as part of a
@@ -539,11 +648,24 @@ where
         )));
     }
     config.workers = shape[config.process_index];
-    let links = bootstrap(&mut config, &shape)?;
+    let (links, wake) = bootstrap(&mut config, &shape)?;
 
     let process = config.process_index;
     let local_workers = shape[process];
-    let net = NetFabric::new(process, shape.clone(), links, config.ring_capacity);
+    // The governor (opt-in, propagated from process 0) shares its state
+    // with workers: each worker re-reads the progress-flush cadence when
+    // the generation stamp moves.
+    let tune = if config.autotune {
+        Some(Arc::new(TuneShared::new(config.progress_flush, config.send_batch)))
+    } else {
+        None
+    };
+    let options = FabricOptions {
+        backend: config.reactor_backend.resolve(),
+        wake,
+        tune: tune.clone(),
+    };
+    let net = NetFabric::new_with(process, shape.clone(), links, config.ring_capacity, options);
     let fabric = Fabric::cluster(&shape, process, config.ring_capacity, net.clone());
     let peers = fabric.peers();
     let base = fabric.local_base();
@@ -556,6 +678,7 @@ where
     for local in 0..local_workers {
         let fabric = fabric.clone();
         let build = build.clone();
+        let tune = tune.clone();
         let index = base + local;
         handles.push(
             std::thread::Builder::new()
@@ -567,6 +690,7 @@ where
                     let mut worker = Worker::new(index, peers, fabric);
                     worker.set_progress_flush(progress_flush);
                     worker.set_send_batch(send_batch);
+                    worker.set_tune(tune);
                     build(&mut worker)
                 })
                 .expect("spawn worker thread"),
@@ -581,4 +705,17 @@ where
     net.shutdown();
     let telemetry = (base..base + local_workers).map(|w| fabric.telemetry(w)).collect();
     Ok((results, telemetry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parking_tags_round_trip() {
+        for parking in [Parking::Auto, Parking::Doorbell, Parking::Futex] {
+            assert_eq!(parking_from_tag(parking_tag(parking)).unwrap(), parking);
+        }
+        assert!(parking_from_tag(3).is_err(), "unknown parking tags must be rejected");
+    }
 }

@@ -105,6 +105,12 @@ pub struct Worker<T: Timestamp> {
     last_flush: Instant,
     /// Progress-flush cadence (defaults to [`PROGRESS_FLUSH`]).
     progress_flush: Duration,
+    /// Shared tuning state when the net governor is running
+    /// (`Config::autotune`): the worker re-reads its flush cadence
+    /// whenever the generation stamp moves.
+    tune: Option<Arc<crate::net::tune::TuneShared>>,
+    /// The last tune generation this worker applied.
+    tune_generation: u64,
     /// This worker's fabric telemetry counters.
     stats: Arc<WorkerStats>,
 }
@@ -140,6 +146,8 @@ impl<T: Timestamp> Worker<T> {
             remote_pending: false,
             last_flush: Instant::now(),
             progress_flush: PROGRESS_FLUSH,
+            tune: None,
+            tune_generation: 0,
             stats,
         }
     }
@@ -162,6 +170,16 @@ impl<T: Timestamp> Worker<T> {
     /// Overrides the progress-flush cadence (see `Config::progress_flush`).
     pub fn set_progress_flush(&mut self, cadence: Duration) {
         self.progress_flush = cadence;
+    }
+
+    /// Attaches the governor's shared tuning state (`Config::autotune`):
+    /// from now on the flush cadence follows its online adjustments.
+    pub fn set_tune(&mut self, tune: Option<Arc<crate::net::tune::TuneShared>>) {
+        if let Some(t) = &tune {
+            self.tune_generation = t.generation();
+            self.progress_flush = t.progress_flush();
+        }
+        self.tune = tune;
     }
 
     /// Overrides the output batch size for operators built *after* this
@@ -194,6 +212,13 @@ impl<T: Timestamp> Worker<T> {
     /// The effective output batch size (config-propagation checks).
     pub fn send_batch(&self) -> usize {
         self.scope.state.borrow().send_batch
+    }
+
+    /// True iff the governor's shared tuning handle reached this worker —
+    /// set only when the (handshake-propagated) `autotune` flag is on, so
+    /// cluster tests can pin that process 0's flag arrived everywhere.
+    pub fn autotune_enabled(&self) -> bool {
+        self.tune.is_some()
     }
 
     /// How many net I/O threads serve this worker's process (0 outside a
@@ -284,6 +309,15 @@ impl<T: Timestamp> Worker<T> {
         // produce/consume pairs cancel inside the ChangeBatch before ever
         // crossing a thread boundary.
         self.stage_pending();
+        // Governor-adjusted cadence: one Acquire load per step; the
+        // cadence is re-read only when the generation stamp moved.
+        if let Some(tune) = &self.tune {
+            let generation = tune.generation();
+            if generation != self.tune_generation {
+                self.tune_generation = generation;
+                self.progress_flush = tune.progress_flush();
+            }
+        }
         let have_work = self.progcaster.has_updates()
             || self.remote_pending
             || self.progcaster.has_spill();

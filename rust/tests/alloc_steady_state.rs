@@ -8,13 +8,15 @@
 //! rings are fixed storage, the tracker's count antichains are flat sorted
 //! runs (no `BTreeMap` nodes), and pipeline forwarding hands uniquely
 //! owned batches off whole. This test installs a counting global
-//! allocator and drives six loops — point-to-point transport, broadcast,
-//! the progress flush, the cross-process progress plane over a loopback
-//! transport (per-process broadcast frames, pooled fan-out decode), the
-//! tracker fold + projection, and a full single-worker engine step (input
-//! feed, operator chain with whole-batch forwarding, progress exchange,
-//! tracker fold, probe) — through a warmup until capacities stabilize,
-//! then asserts a measurement window with zero allocations.
+//! allocator and drives a battery of loops — point-to-point transport,
+//! broadcast, the progress flush, the cross-process progress plane over a
+//! loopback transport (per-process broadcast frames, pooled fan-out
+//! decode; run under the poll backend, the epoll backend, and with the
+//! autotuning governor live on the reactor thread), the tracker fold +
+//! projection, and a full single-worker engine step (input feed, operator
+//! chain with whole-batch forwarding, progress exchange, tracker fold,
+//! probe) — through a warmup until capacities stabilize, then asserts a
+//! measurement window with zero allocations.
 //!
 //! Kept as a single `#[test]` so no sibling test can allocate concurrently
 //! inside a measurement window.
@@ -33,7 +35,8 @@ use timestamp_tokens::dataflow::channels::{
 use timestamp_tokens::dataflow::probe::ProbeExt;
 use timestamp_tokens::net::transport::loopback;
 use timestamp_tokens::net::{
-    NetFabric, NetLink, NetReceiver, ProgressBroadcast, ProgressUpdates,
+    FabricOptions, NetFabric, NetLink, NetReceiver, ProgressBroadcast, ProgressUpdates,
+    ReadinessBackend, TuneShared,
 };
 use timestamp_tokens::operators::map::MapExt;
 use timestamp_tokens::progress::exchange::{Progcaster, PROGRESS_CHANNEL};
@@ -209,20 +212,34 @@ fn progress_flush_loop() {
 /// so this also pins the reactor's steady state at zero allocations. The
 /// asymmetric 1+2 shape means the fan-out is exercised off the
 /// square-mesh diagonal.
-fn net_progress_decode_loop() {
+///
+/// Run once per reactor configuration: the poll backend (PR 6 baseline),
+/// the epoll backend (edge-level interest updates must not allocate per
+/// pass), and poll with the governor on (the tune-epoch bookkeeping —
+/// delta computation, cadence decisions, generation publishes — rides the
+/// reactor thread and must also be allocation-free at steady state).
+fn net_progress_decode_loop(label: &str, backend: ReadinessBackend, autotune: bool) {
     let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
     let shape = vec![1usize, 2];
-    let a = NetFabric::new(
+    let options = || FabricOptions {
+        backend,
+        tune: autotune
+            .then(|| Arc::new(TuneShared::new(Duration::from_micros(20), BATCH))),
+        ..FabricOptions::default()
+    };
+    let a = NetFabric::new_with(
         0,
         shape.clone(),
         vec![None, Some(NetLink::virtual_pair(a_tx, a_rx))],
         64,
+        options(),
     );
-    let b = NetFabric::new(
+    let b = NetFabric::new_with(
         1,
         shape,
         vec![Some(NetLink::virtual_pair(b_tx, b_rx)), None],
         64,
+        options(),
     );
     b.register_broadcast::<ProgressBroadcast<u64>>(PROGRESS_CHANNEL);
     let mut tx = a.broadcast_sender::<u64>(PROGRESS_CHANNEL, 0, 1);
@@ -240,7 +257,7 @@ fn net_progress_decode_loop() {
     }
 
     let mut t = 0u64;
-    assert_reaches_zero_alloc_steady_state("net progress decode", || {
+    assert_reaches_zero_alloc_steady_state(label, || {
         let mut batch = pool.checkout();
         {
             let updates = Arc::get_mut(&mut batch).expect("checked-out batch is unique");
@@ -350,7 +367,13 @@ fn steady_state_data_path_performs_zero_allocations() {
     point_to_point_loop();
     broadcast_loop();
     progress_flush_loop();
-    net_progress_decode_loop();
+    net_progress_decode_loop("net progress decode (poll)", ReadinessBackend::Poll, false);
+    net_progress_decode_loop("net progress decode (epoll)", ReadinessBackend::Epoll, false);
+    net_progress_decode_loop(
+        "net progress decode (poll + governor)",
+        ReadinessBackend::Poll,
+        true,
+    );
     tracker_fold_loop();
     full_step_loop();
 }

@@ -15,7 +15,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::Arc;
-use timestamp_tokens::config::{Config, NetTransport};
+use timestamp_tokens::config::{Config, NetOptions, NetTransport, Parking, ReactorBackend};
 use timestamp_tokens::coordination::Mechanism;
 use timestamp_tokens::dataflow::probe::ProbeExt;
 use timestamp_tokens::harness::workloads::drain;
@@ -39,15 +39,16 @@ where
     R: Send + 'static,
     F: Fn(&mut Worker<u64>) -> R + Send + Sync + 'static,
 {
-    run_cluster_shaped_net(shape, NetTransport::Auto, build)
+    run_cluster_shaped_net(shape, NetOptions::default(), build)
 }
 
-/// [`run_cluster_shaped`] with an explicit cross-process transport, so the
-/// equality pins below can exercise reactor TCP and shared memory each in
-/// turn rather than whatever `Auto` resolves to on loopback.
+/// [`run_cluster_shaped`] with explicit net options, so the equality pins
+/// below can exercise reactor TCP and shared memory — under both the poll
+/// and epoll readiness backends — each in turn rather than whatever the
+/// defaults resolve to on loopback.
 fn run_cluster_shaped_net<R, F>(
     shape: Vec<usize>,
-    net: NetTransport,
+    net: NetOptions,
     build: F,
 ) -> (Vec<R>, Vec<WorkerTelemetry>)
 where
@@ -70,7 +71,10 @@ where
                 processes,
                 process_index: p,
                 addresses,
-                net_transport: net,
+                net_transport: net.transport,
+                reactor_backend: net.reactor,
+                parking: net.parking,
+                autotune: net.autotune,
                 ..Config::default()
             };
             execute_cluster_telemetry::<u64, _, _>(config, move |worker| build(worker))
@@ -259,6 +263,8 @@ fn remote_workers_observe_process_zero_config() {
                 config.ring_capacity = 64;
                 config.progress_flush = std::time::Duration::from_micros(123);
                 config.send_batch = 77;
+                config.parking = Parking::Doorbell;
+                config.autotune = true;
             }
             execute_cluster::<u64, _, _>(config, |worker| {
                 // Trivial dataflow so workers exercise the full lifecycle.
@@ -267,15 +273,20 @@ fn remote_workers_observe_process_zero_config() {
                 input.send(worker.index() as u64);
                 input.close();
                 worker.step_while(|| !probe.done());
-                (worker.ring_capacity(), worker.progress_flush(), worker.send_batch())
+                (
+                    worker.ring_capacity(),
+                    worker.progress_flush(),
+                    worker.send_batch(),
+                    worker.autotune_enabled(),
+                )
             })
             .expect("cluster bootstrap")
         }));
     }
-    let observed: Vec<(usize, std::time::Duration, usize)> =
+    let observed: Vec<(usize, std::time::Duration, usize, bool)> =
         handles.into_iter().flat_map(|h| h.join().expect("cluster process")).collect();
     assert_eq!(observed.len(), 4);
-    for (ring, flush, batch) in observed {
+    for (ring, flush, batch, autotune) in observed {
         assert_eq!(ring, 64, "ring_capacity must propagate through the handshake");
         assert_eq!(
             flush,
@@ -283,6 +294,11 @@ fn remote_workers_observe_process_zero_config() {
             "progress_flush must propagate through the handshake"
         );
         assert_eq!(batch, 77, "send_batch must propagate through the handshake");
+        assert!(
+            autotune,
+            "the autotune flag (and its WELCOME companion, the parking tag) \
+             must propagate through the handshake"
+        );
     }
 }
 
@@ -360,8 +376,8 @@ where
 }
 
 /// Pins `build`'s cluster output equal to the single-process baseline at
-/// both test shapes over the given transport.
-fn assert_cluster_matches_over<F>(net: NetTransport, build: F)
+/// both test shapes over the given net options.
+fn assert_cluster_matches_over<F>(net: NetOptions, build: F)
 where
     F: Fn(&mut Worker<u64>) -> Vec<(u64, u64)> + Send + Sync + Copy + 'static,
 {
@@ -380,24 +396,64 @@ where
     }
 }
 
+/// `transport` forced, epoll readiness backend (poll off-Linux, where
+/// `Epoll` documents its fallback — the pin still runs, over poll).
+fn epoll_options(transport: NetTransport) -> NetOptions {
+    NetOptions { reactor: ReactorBackend::Epoll, ..NetOptions::with_transport(transport) }
+}
+
 #[test]
 fn wordcount_cluster_matches_over_tcp_reactor() {
-    assert_cluster_matches_over(NetTransport::Tcp, wordcount_run);
+    assert_cluster_matches_over(NetOptions::with_transport(NetTransport::Tcp), wordcount_run);
 }
 
 #[test]
 fn wordcount_cluster_matches_over_shared_memory() {
-    assert_cluster_matches_over(NetTransport::Shm, wordcount_run);
+    assert_cluster_matches_over(NetOptions::with_transport(NetTransport::Shm), wordcount_run);
 }
 
 #[test]
 fn nexmark_q4_cluster_matches_over_tcp_reactor() {
-    assert_cluster_matches_over(NetTransport::Tcp, q4_run);
+    assert_cluster_matches_over(NetOptions::with_transport(NetTransport::Tcp), q4_run);
 }
 
 #[test]
 fn nexmark_q4_cluster_matches_over_shared_memory() {
-    assert_cluster_matches_over(NetTransport::Shm, q4_run);
+    assert_cluster_matches_over(NetOptions::with_transport(NetTransport::Shm), q4_run);
+}
+
+#[test]
+fn wordcount_cluster_matches_over_tcp_epoll() {
+    assert_cluster_matches_over(epoll_options(NetTransport::Tcp), wordcount_run);
+}
+
+#[test]
+fn wordcount_cluster_matches_over_shm_epoll() {
+    assert_cluster_matches_over(epoll_options(NetTransport::Shm), wordcount_run);
+}
+
+#[test]
+fn nexmark_q4_cluster_matches_over_tcp_epoll() {
+    assert_cluster_matches_over(epoll_options(NetTransport::Tcp), q4_run);
+}
+
+#[test]
+fn nexmark_q4_cluster_matches_over_shm_epoll() {
+    assert_cluster_matches_over(epoll_options(NetTransport::Shm), q4_run);
+}
+
+/// Futex parking + governor on, over shared memory with the epoll
+/// backend: the full adaptive hot path must still reproduce the
+/// single-process output exactly.
+#[test]
+fn wordcount_cluster_matches_with_futex_parking_and_autotune() {
+    let net = NetOptions {
+        transport: NetTransport::Shm,
+        reactor: ReactorBackend::Epoll,
+        parking: Parking::Futex,
+        autotune: true,
+    };
+    assert_cluster_matches_over(net, wordcount_run);
 }
 
 // ---------------------------------------------------------------------------
@@ -418,11 +474,12 @@ fn reactor_keeps_net_io_threads_at_most_two_per_process() {
         vec![(worker.index() as u64, worker.net_io_threads() as u64)]
     };
     for net in [NetTransport::Tcp, NetTransport::Shm, NetTransport::Auto] {
-        let threads: Vec<(u64, u64)> = run_cluster_shaped_net(vec![1, 1, 1], net, probe)
-            .0
-            .into_iter()
-            .flatten()
-            .collect();
+        let threads: Vec<(u64, u64)> =
+            run_cluster_shaped_net(vec![1, 1, 1], NetOptions::with_transport(net), probe)
+                .0
+                .into_iter()
+                .flatten()
+                .collect();
         assert_eq!(threads.len(), 3);
         for (worker, io_threads) in threads {
             assert!(
@@ -436,12 +493,15 @@ fn reactor_keeps_net_io_threads_at_most_two_per_process() {
         }
     }
     // The legacy transport documents the contrast: 2·(P−1) = 4 at P=3.
-    let legacy: Vec<(u64, u64)> =
-        run_cluster_shaped_net(vec![1, 1, 1], NetTransport::TcpThreads, probe)
-            .0
-            .into_iter()
-            .flatten()
-            .collect();
+    let legacy: Vec<(u64, u64)> = run_cluster_shaped_net(
+        vec![1, 1, 1],
+        NetOptions::with_transport(NetTransport::TcpThreads),
+        probe,
+    )
+    .0
+    .into_iter()
+    .flatten()
+    .collect();
     for (worker, io_threads) in legacy {
         assert_eq!(io_threads, 4, "worker {worker}: thread-pair transport is 2·(P−1)");
     }
