@@ -240,6 +240,23 @@ pub struct Config {
     /// equivalence pins and exact-cadence tests rely on static knobs —
     /// and propagated from process 0 over the handshake.
     pub autotune: bool,
+    /// Checkpoint directory (`--checkpoint-dir`). `None` — the default —
+    /// disables checkpointing entirely; `Some` enables the per-process
+    /// frontier-aligned checkpoint writer rooted there (each process
+    /// writes chunk and manifest files for its own workers into the
+    /// shared directory; see `recovery/`).
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint interval in epochs (`--checkpoint-interval`): a
+    /// checkpoint is captured each time the global frontier passes a
+    /// multiple of this. 0 disables capture even when `checkpoint_dir`
+    /// is set (the directory is then only read, for `--recover`).
+    pub checkpoint_interval: u64,
+    /// Restore from the newest COMPLETE checkpoint under
+    /// `checkpoint_dir` before running (`--recover`). The cluster shape
+    /// may differ from the checkpoint's: keyed state re-partitions over
+    /// the new workers. Inputs must replay from
+    /// `resume_epoch + 1`; state already reflects everything sealed.
+    pub recover: bool,
 }
 
 impl Default for Config {
@@ -260,6 +277,9 @@ impl Default for Config {
             reactor_backend: ReactorBackend::Auto,
             parking: Parking::Auto,
             autotune: false,
+            checkpoint_dir: None,
+            checkpoint_interval: 0,
+            recover: false,
         }
     }
 }
@@ -310,6 +330,9 @@ mod tests {
         assert_eq!(c.reactor_backend, ReactorBackend::Auto);
         assert_eq!(c.parking, Parking::Auto);
         assert!(!c.autotune, "the governor must be opt-in");
+        assert!(c.checkpoint_dir.is_none(), "checkpointing must be opt-in");
+        assert_eq!(c.checkpoint_interval, 0);
+        assert!(!c.recover);
     }
 
     #[test]

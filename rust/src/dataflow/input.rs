@@ -51,13 +51,30 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
         );
         // The input node has no operator logic: its messages originate here.
         builder.build(activation, Box::new(|| {}));
+        let mut token = token;
+        let mut time = T::minimum();
+        // Recovering: rewind to the first un-checkpointed epoch. The
+        // restored state already reflects everything at `<= resume`, so
+        // the session (and its token) starts at `resume + 1`; the driver
+        // replays its input from there (`Worker::resume_epoch`). Only u64
+        // dataflows carry a recovery context.
+        if let Some(ctx) = scope.recovery() {
+            if ctx.is_restoring() {
+                if let Some(t) =
+                    (&mut time as &mut dyn std::any::Any).downcast_mut::<u64>()
+                {
+                    *t = ctx.resume_epoch() + 1;
+                    token.downgrade(&time);
+                }
+            }
+        }
         (
             InputSession {
                 token: Some(token),
                 output,
                 buffer: Vec::new(),
                 send_batch,
-                time: T::minimum(),
+                time,
             },
             stream,
         )

@@ -83,6 +83,10 @@ pub struct BuildState<T: Timestamp> {
     /// Raised by any channel that stages remote data this step (forces the
     /// worker to append its progress batch before releasing the fabric).
     pub remote_staged: Rc<Cell<bool>>,
+    /// The worker's checkpoint/restore context, when checkpointing or
+    /// recovery is configured (u64-timestamped dataflows only). Stateful
+    /// operators register their cells here at construction time.
+    pub recovery: Option<Rc<crate::recovery::RecoveryContext>>,
 }
 
 impl<T: Timestamp> BuildState<T> {
@@ -102,6 +106,7 @@ impl<T: Timestamp> BuildState<T> {
             channels: 0,
             finalized: false,
             remote_staged: Rc::new(Cell::new(false)),
+            recovery: None,
         }
     }
 
@@ -150,6 +155,15 @@ impl<T: Timestamp> Scope<T> {
     /// Records per output batch (the configured `SEND_BATCH`).
     pub fn send_batch(&self) -> usize {
         self.state.borrow().send_batch
+    }
+
+    /// The worker's checkpoint/restore context, if one is installed.
+    /// Stateful operators call this at construction time to register their
+    /// [`crate::recovery::EpochSealed`] cells (and restore them when
+    /// recovering); `None` means checkpointing is off and cells should
+    /// skip update logging.
+    pub fn recovery(&self) -> Option<Rc<crate::recovery::RecoveryContext>> {
+        self.state.borrow().recovery.clone()
     }
 }
 

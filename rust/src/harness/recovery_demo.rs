@@ -1,0 +1,464 @@
+//! A deterministic checkpoint/recovery workload: the crash-recovery
+//! equivalent of the open-loop harness, built for *exact* output checks
+//! rather than latency measurement.
+//!
+//! Every run feeds the same words: epoch `e` carries `words_per_epoch`
+//! records, slot `i` of epoch `e` always hashing to the same word, with
+//! slots dealt round-robin across the *global* worker set. The multiset of
+//! records per epoch is therefore identical for every cluster shape, so a
+//! 3-process run killed mid-flight and recovered into 2 processes must end
+//! with exactly the counts of an unperturbed single-process run.
+//!
+//! Equality is checked through an order- and partition-independent digest:
+//! each worker folds its owned `(word, final count)` pairs with XOR, and
+//! per-worker digests XOR together into one cluster digest — XOR is
+//! commutative, so how the words were partitioned (or which process
+//! reports which share) cannot affect the combined value. The `ttd
+//! recovery-demo` subcommand prints per-process digests and the
+//! orchestrator combines them; the cluster integration tests combine
+//! in-process.
+
+use crate::config::Config;
+use crate::dataflow::channels::{Data, Pact};
+use crate::dataflow::input::InputSession;
+use crate::dataflow::operator::OperatorExt;
+use crate::dataflow::probe::{ProbeExt, ProbeHandle};
+use crate::net::NetError;
+use crate::nexmark::event::{Auction, Bid, Event};
+use crate::nexmark::q4::closes_tokens;
+use crate::recovery::{epoch_of, EpochSealed};
+use crate::worker::execute::execute_cluster;
+use crate::worker::Worker;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Duration;
+
+/// How far feeding may run ahead of the probed frontier. Bounding the lag
+/// keeps the frontier (and with it checkpoint capture) advancing with the
+/// feed instead of arbitrarily behind it.
+const FEED_LAG: u64 = 4;
+
+/// The deterministic workload's knobs.
+#[derive(Clone, Copy)]
+pub struct RecoveryDemoParams {
+    /// Epochs to feed: `1..=epochs` (a recovered run replays only
+    /// `resume + 1..=epochs`).
+    pub epochs: u64,
+    /// Records per epoch, across all workers.
+    pub words_per_epoch: u64,
+    /// Words are drawn from `0..vocab` — bounded, so steady-state count
+    /// updates hit existing entries and stay allocation-free.
+    pub vocab: u64,
+    /// Extra sleep per epoch; widens the mid-run window a kill
+    /// orchestrator (or a chaos schedule) aims at. Zero for tests.
+    pub pacing: Duration,
+    /// Fault injection: `(process, epoch)` — that process severs its net
+    /// fabric (no drain, no goodbyes: a SIGKILL as peers observe it) when
+    /// its feed reaches the epoch.
+    pub crash_after: Option<(usize, u64)>,
+}
+
+impl Default for RecoveryDemoParams {
+    fn default() -> Self {
+        RecoveryDemoParams {
+            epochs: 200,
+            words_per_epoch: 64,
+            vocab: 500,
+            pacing: Duration::ZERO,
+            crash_after: None,
+        }
+    }
+}
+
+/// One process's result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DemoOutcome {
+    /// Ran to completion; the XOR digest over the final counts owned by
+    /// this process's workers. XOR the per-process values for the cluster
+    /// digest.
+    Digest(u64),
+    /// A peer process died abruptly; this process quiesced (typed
+    /// [`NetError::PeerLost`], not a hang or a panic).
+    PeerLost(usize),
+    /// This process was the injected crash.
+    Crashed,
+}
+
+/// What one worker thread hands back.
+enum WorkerEnd {
+    Digest(u64),
+    PeerLost(usize),
+    Crashed,
+}
+
+/// SplitMix64's finalizer: the demo's one hash, used both to draw words
+/// and to fold `(word, count)` pairs into the digest.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// The word at `(epoch, slot)` — a pure function, so any worker of any
+/// cluster shape regenerates the identical stream.
+pub fn demo_word(epoch: u64, slot: u64, vocab: u64) -> u64 {
+    mix(epoch.wrapping_mul(0x1_0000_0000).wrapping_add(slot)) % vocab.max(1)
+}
+
+/// Folds one final `(word, count)` pair into a digest.
+fn digest_entry(word: u64, count: u64) -> u64 {
+    mix(word.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(count))
+}
+
+/// Runs the demo as cluster member `config.process_index` (or alone when
+/// `config.processes <= 1`). Checkpointing and recovery follow the
+/// config's `checkpoint_dir` / `checkpoint_interval` / `recover` fields.
+pub fn run_recovery_demo(
+    config: Config,
+    params: RecoveryDemoParams,
+) -> Result<DemoOutcome, NetError> {
+    let shape = config.shape();
+    let process = config.process_index;
+    let base: usize = shape[..process].iter().sum();
+    let results = execute_cluster::<u64, _, _>(config, move |worker| {
+        drive(worker, params, process, base)
+    })?;
+    Ok(combine(results))
+}
+
+/// [`run_recovery_demo`] over NEXMark Q4's stage 1 (the token-held
+/// data-dependent windows of §7.4) instead of a rolling count: the same
+/// deterministic feed / crash / digest scheme, exercising checkpoint
+/// capture and restore of auction state, re-minted expiry tokens, and the
+/// category sums downstream of them.
+pub fn run_q4_recovery_demo(
+    config: Config,
+    params: RecoveryDemoParams,
+) -> Result<DemoOutcome, NetError> {
+    let shape = config.shape();
+    let process = config.process_index;
+    let base: usize = shape[..process].iter().sum();
+    let results = execute_cluster::<u64, _, _>(config, move |worker| {
+        drive_q4(worker, params, process, base)
+    })?;
+    Ok(combine(results))
+}
+
+/// Folds one process's worker results into its outcome: an injected crash
+/// dominates, then peer loss, else the XOR of the worker digests.
+fn combine(results: Vec<WorkerEnd>) -> DemoOutcome {
+    let mut digest = 0u64;
+    let mut lost = None;
+    let mut crashed = false;
+    for end in results {
+        match end {
+            WorkerEnd::Digest(d) => digest ^= d,
+            WorkerEnd::PeerLost(p) => lost = Some(p),
+            WorkerEnd::Crashed => crashed = true,
+        }
+    }
+    if crashed {
+        DemoOutcome::Crashed
+    } else if let Some(p) = lost {
+        DemoOutcome::PeerLost(p)
+    } else {
+        DemoOutcome::Digest(digest)
+    }
+}
+
+/// The per-worker build-and-feed loop.
+fn drive(
+    worker: &mut Worker<u64>,
+    params: RecoveryDemoParams,
+    process: usize,
+    base: usize,
+) -> WorkerEnd {
+    let index = worker.index() as u64;
+    let peers = worker.peers() as u64;
+    let (mut input, stream) = worker.new_input::<u64>();
+    let recovery = stream.scope().recovery();
+    let logging = recovery.as_ref().is_some_and(|r| r.logging());
+
+    // The counting cell lives outside the operator so the driver can read
+    // the final counts (an operator emits *updates*; after a restore the
+    // words untouched by replayed epochs would never re-emit).
+    fn bump(counts: &mut HashMap<u64, u64>, word: &u64) -> u64 {
+        let count = counts.entry(*word).or_insert(0);
+        *count += 1;
+        *count
+    }
+    let cell = Rc::new(RefCell::new(EpochSealed::new(
+        HashMap::<u64, u64>::new(),
+        bump as fn(&mut HashMap<u64, u64>, &u64) -> u64,
+        logging,
+    )));
+    let counted = {
+        let cell = cell.clone();
+        let recovery = recovery.clone();
+        stream.unary(Pact::exchange(|w: &u64| *w), "demo_counts", move |tok, _info| {
+            drop(tok);
+            if let Some(ctx) = &recovery {
+                // Words route by value, so a restoring worker keeps
+                // exactly the words the *new* shape assigns to it.
+                ctx.register("demo_counts", cell.clone(), move |into, _old_worker, old| {
+                    into.extend(old.into_iter().filter(|(w, _)| w % peers == index));
+                });
+            }
+            let cell = cell.clone();
+            move |input: &mut _, output: &mut _| {
+                let mut cell = cell.borrow_mut();
+                while let Some((token, data)) = input.next() {
+                    let epoch = epoch_of(token.time());
+                    let mut session = output.session(&token);
+                    for word in data {
+                        let count = cell.update(epoch, word);
+                        session.give((word, count));
+                    }
+                }
+            }
+        })
+    };
+    let probe = counted.probe();
+    let vocab = params.vocab;
+    feed_and_finish(
+        worker,
+        &mut input,
+        &probe,
+        params,
+        process,
+        base,
+        |input, epoch, slot| input.send(demo_word(epoch, slot, vocab)),
+        || cell.borrow().state().iter().fold(0u64, |d, (w, c)| d ^ digest_entry(*w, *c)),
+    )
+}
+
+/// The per-worker Q4 variant: feed deterministic NEXMark events through
+/// stage 1 (token-held auction closes) into an externally readable
+/// category-sums cell.
+fn drive_q4(
+    worker: &mut Worker<u64>,
+    params: RecoveryDemoParams,
+    process: usize,
+    base: usize,
+) -> WorkerEnd {
+    let index = worker.index() as u64;
+    let peers = worker.peers() as u64;
+    let (mut input, stream) = worker.new_input::<Event>();
+    let recovery = stream.scope().recovery();
+    let logging = recovery.as_ref().is_some_and(|r| r.logging());
+    let closes = closes_tokens(&stream);
+
+    // Per-category (sum, count) of winning prices — the Q4 aggregate kept
+    // outside the operator so the driver can digest the final state.
+    fn fold_close(sums: &mut HashMap<u64, (u64, u64)>, update: &(u64, u64)) {
+        let entry = sums.entry(update.0).or_insert((0, 0));
+        entry.0 += update.1;
+        entry.1 += 1;
+    }
+    let cell = Rc::new(RefCell::new(EpochSealed::new(
+        HashMap::<u64, (u64, u64)>::new(),
+        fold_close as fn(&mut HashMap<u64, (u64, u64)>, &(u64, u64)),
+        logging,
+    )));
+    let summed = {
+        let cell = cell.clone();
+        let recovery = recovery.clone();
+        closes.unary(
+            Pact::exchange(|&(category, _): &(u64, u64)| category),
+            "demo_q4_sums",
+            move |tok, _info| {
+                drop(tok);
+                if let Some(ctx) = &recovery {
+                    // Closes route by category, so a restoring worker keeps
+                    // the categories the new shape assigns to it.
+                    ctx.register("demo_q4_sums", cell.clone(), move |into, _old_worker, old| {
+                        into.extend(old.into_iter().filter(|(c, _)| c % peers == index));
+                    });
+                }
+                let cell = cell.clone();
+                move |input: &mut _, output: &mut _| {
+                    let mut cell = cell.borrow_mut();
+                    while let Some((token, data)) = input.next() {
+                        let epoch = epoch_of(token.time());
+                        let mut session = output.session(&token);
+                        for (category, price) in data {
+                            cell.update(epoch, (category, price));
+                            session.give(category);
+                        }
+                    }
+                }
+            },
+        )
+    };
+    let probe = summed.probe();
+    let words_per_epoch = params.words_per_epoch;
+    feed_and_finish(
+        worker,
+        &mut input,
+        &probe,
+        params,
+        process,
+        base,
+        |input, epoch, slot| input.send(demo_event(epoch, slot, words_per_epoch)),
+        || {
+            cell.borrow()
+                .state()
+                .iter()
+                .fold(0u64, |d, (c, (s, n))| d ^ digest_entry(digest_entry(*c, *s), *n))
+        },
+    )
+}
+
+/// The event at `(epoch, slot)` — a pure function, like [`demo_word`].
+/// Slots that are multiples of 3 open an auction expiring 1–4 epochs out;
+/// the rest bid on an auction slot of this or the previous epoch. Bids
+/// arriving at or after their auction's expiry are dropped by Q4 — on
+/// every shape identically, since the drop depends only on event fields.
+fn demo_event(epoch: u64, slot: u64, words_per_epoch: u64) -> Event {
+    let r = mix(epoch.wrapping_mul(0x1_0000_0001).wrapping_add(slot));
+    if slot % 3 == 0 {
+        Event::Auction(Auction {
+            id: epoch * words_per_epoch + slot,
+            item: r % 1000,
+            seller: r % 50,
+            category: r % 8,
+            initial_bid: 1,
+            reserve: 1,
+            date_time: epoch,
+            expires: epoch + 1 + (r >> 8) % 4,
+        })
+    } else {
+        let back = (r >> 4) % 2;
+        let target_epoch = epoch.saturating_sub(back).max(1);
+        let target_slot = ((r >> 16) % words_per_epoch) / 3 * 3;
+        Event::Bid(Bid {
+            auction: target_epoch * words_per_epoch + target_slot,
+            bidder: r % 100,
+            price: 1 + (r >> 24) % 1000,
+            date_time: epoch,
+        })
+    }
+}
+
+/// The shared feed-and-drain loop behind both demo drivers: crash
+/// injection, bounded-lag pacing, typed peer-loss detection, and the final
+/// digest once the dataflow completes.
+#[allow(clippy::too_many_arguments)]
+fn feed_and_finish<D: Data>(
+    worker: &mut Worker<u64>,
+    input: &mut InputSession<u64, D>,
+    probe: &ProbeHandle<u64>,
+    params: RecoveryDemoParams,
+    process: usize,
+    base: usize,
+    mut send_slot: impl FnMut(&mut InputSession<u64, D>, u64, u64),
+    digest: impl FnOnce() -> u64,
+) -> WorkerEnd {
+    let index = worker.index() as u64;
+    let peers = worker.peers() as u64;
+    let crash_epoch = match params.crash_after {
+        Some((p, epoch)) if p == process => Some(epoch),
+        _ => None,
+    };
+    let resume = worker.resume_epoch();
+    for epoch in resume + 1..=params.epochs {
+        if crash_epoch == Some(epoch) {
+            // The process's first worker severs the fabric (the crash);
+            // its siblings just stop, as their threads would on SIGKILL.
+            if worker.index() == base {
+                worker.sever_net();
+            } else {
+                worker.poison();
+            }
+            return WorkerEnd::Crashed;
+        }
+        input.advance_to(epoch);
+        let mut slot = index;
+        while slot < params.words_per_epoch {
+            send_slot(input, epoch, slot);
+            slot += peers;
+        }
+        input.flush();
+        // Keep processing within FEED_LAG epochs of the feed so the
+        // frontier — and checkpoint capture — advances throughout the
+        // run rather than in one burst at the end.
+        while probe.less_than(&epoch.saturating_sub(FEED_LAG)) {
+            if let Some(&p) = worker.lost_peers().first() {
+                worker.poison();
+                return WorkerEnd::PeerLost(p);
+            }
+            worker.step_or_park(Duration::from_micros(200));
+        }
+        if params.pacing > Duration::ZERO {
+            std::thread::sleep(params.pacing);
+        }
+    }
+    input.close();
+    match worker.step_while_surviving(|| !probe.done()) {
+        Ok(()) => WorkerEnd::Digest(digest()),
+        Err(NetError::PeerLost { process }) => WorkerEnd::PeerLost(process),
+        // Any other net error also means the run cannot complete; report
+        // it like a loss with no attributable peer.
+        Err(_) => WorkerEnd::PeerLost(usize::MAX),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_words_are_deterministic_and_bounded() {
+        for epoch in 1..10 {
+            for slot in 0..32 {
+                let w = demo_word(epoch, slot, 100);
+                assert!(w < 100);
+                assert_eq!(w, demo_word(epoch, slot, 100));
+            }
+        }
+    }
+
+    #[test]
+    fn single_process_digest_is_shape_independent() {
+        let params = RecoveryDemoParams {
+            epochs: 20,
+            words_per_epoch: 32,
+            vocab: 50,
+            ..Default::default()
+        };
+        let digest_of = |workers: usize| {
+            let config = Config { workers, pin_workers: false, ..Default::default() };
+            match run_recovery_demo(config, params).expect("no net involved") {
+                DemoOutcome::Digest(d) => d,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        };
+        let one = digest_of(1);
+        assert_eq!(one, digest_of(2), "worker count must not change the digest");
+        assert_eq!(one, digest_of(3), "worker count must not change the digest");
+    }
+
+    #[test]
+    fn q4_digest_is_shape_independent_and_nonempty() {
+        let params = RecoveryDemoParams {
+            epochs: 20,
+            words_per_epoch: 30,
+            vocab: 50,
+            ..Default::default()
+        };
+        let digest_of = |workers: usize| {
+            let config = Config { workers, pin_workers: false, ..Default::default() };
+            match run_q4_recovery_demo(config, params).expect("no net involved") {
+                DemoOutcome::Digest(d) => d,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        };
+        let one = digest_of(1);
+        assert_ne!(one, 0, "auctions must actually close (empty digest)");
+        assert_eq!(one, digest_of(2), "worker count must not change the digest");
+        assert_eq!(one, digest_of(3), "worker count must not change the digest");
+    }
+}

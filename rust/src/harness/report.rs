@@ -45,7 +45,10 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
 /// (socket buffer full), `net-shm-full` counts shm-ring-full stalls,
 /// and `ring-resizes` / `cadence-adj` count governor decisions applied
 /// (live shm-ring grows and progress-flush cadence changes).
-pub const TELEMETRY_HEADER: [&str; 21] = [
+/// `peer-lost` counts peer processes whose stream ended without the
+/// orderly goodbye — abrupt deaths the recovery machinery restarts from
+/// a checkpoint for; zero on clean runs.
+pub const TELEMETRY_HEADER: [&str; 22] = [
     "process",
     "worker",
     "parks",
@@ -67,6 +70,7 @@ pub const TELEMETRY_HEADER: [&str; 21] = [
     "net-shm-full",
     "ring-resizes",
     "cadence-adj",
+    "peer-lost",
 ];
 
 fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
@@ -92,6 +96,7 @@ fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String
         t.net.shm_full_stalls.to_string(),
         t.net.ring_resizes.to_string(),
         t.net.cadence_adjusts.to_string(),
+        t.net.peer_lost.to_string(),
     ]
 }
 
@@ -120,6 +125,7 @@ fn aggregate(workers: &[&WorkerTelemetry]) -> WorkerTelemetry {
         total.net.kernel_frame_bytes_tx += t.net.kernel_frame_bytes_tx;
         total.net.ring_resizes += t.net.ring_resizes;
         total.net.cadence_adjusts += t.net.cadence_adjusts;
+        total.net.peer_lost += t.net.peer_lost;
     }
     total
 }
@@ -222,7 +228,7 @@ mod tests {
         // One worker, one process: no aggregate row.
         let want: Vec<Vec<String>> = vec![[
             "0", "3", "10", "7", "2", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0",
-            "0", "0", "0", "0",
+            "0", "0", "0", "0", "0",
         ]
         .iter()
         .map(|s| s.to_string())

@@ -91,6 +91,7 @@ pub mod net;
 pub mod nexmark;
 pub mod operators;
 pub mod progress;
+pub mod recovery;
 pub mod runtime;
 pub mod testing;
 pub mod worker;

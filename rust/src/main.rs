@@ -10,7 +10,21 @@
 //! ttd nexmark    [--query q4|q7] [--window-ms W] ...   the §7.4 queries
 //! ttd artifacts  [--dir PATH]                 verify the PJRT data plane
 //! ttd info                                    engine / environment info
+//! ttd recovery-demo [--workload wordcount|q4] [--epochs N]
+//!                [--checkpoint-dir D] [--checkpoint-interval E]
+//!                [--recover D] [--kill-process P --kill-after-ms M]
+//!                                 deterministic crash/recovery workload
 //! ```
+//!
+//! `recovery-demo` feeds a deterministic word stream and prints an order-
+//! and partition-independent digest of the final counts, so a run that is
+//! SIGKILLed mid-flight (`--kill-process`, orchestrator mode only) and
+//! then recovered from its checkpoint directory (`--recover D`, possibly
+//! with a *different* `--processes`/`--workers` shape) can be checked for
+//! exact equality against an unperturbed run. With `--checkpoint-interval
+//! E` every worker captures its state at frontier-aligned epoch
+//! boundaries; `--recover D` restores the newest complete checkpoint in
+//! `D` and replays only the epochs after it.
 //!
 //! Any workload runs **multi-process** with `--processes N` (`--workers`
 //! then counts per-process workers). Without `--process I` the launcher
@@ -32,10 +46,14 @@
 //! progress-flush cadence) — the latter two propagate from process 0
 //! like the other tuning knobs.
 
-use std::time::Duration;
-use timestamp_tokens::config::{NetOptions, NetTransport, Parking, ReactorBackend};
+use std::time::{Duration, Instant};
+use timestamp_tokens::config::{Config, NetOptions, NetTransport, Parking, ReactorBackend};
 use timestamp_tokens::coordination::Mechanism;
 use timestamp_tokens::harness::openloop::{run, run_cluster, Outcome, Params, Workload};
+use timestamp_tokens::harness::recovery_demo::{
+    run_q4_recovery_demo, run_recovery_demo, DemoOutcome, RecoveryDemoParams,
+};
+use timestamp_tokens::net::NetError;
 use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
 use timestamp_tokens::nexmark::bench::{run_nexmark, run_nexmark_cluster, NexmarkParams, Query};
 
@@ -152,6 +170,93 @@ fn orchestrate(processes: usize) -> ! {
         let status = child.wait().expect("wait for cluster process");
         if !status.success() {
             eprintln!("cluster process {i} exited with {status}");
+            failed = true;
+        }
+    }
+    std::process::exit(if failed { 1 } else { 0 });
+}
+
+/// `recovery-demo` orchestration: like [`orchestrate`], but with piped
+/// child stdout (per-process digest lines XOR into the cluster digest),
+/// an optional mid-run SIGKILL of one child, and a hard deadline — a
+/// survivor still running long after a kill is exactly the hang the
+/// typed peer-loss path exists to prevent, and fails the run.
+fn orchestrate_recovery_demo(processes: usize, kill: Option<usize>, kill_after_ms: u64) -> ! {
+    use std::io::Read as _;
+    let exe = std::env::current_exe().expect("current_exe");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut children = Vec::new();
+    for i in 0..processes {
+        let child = std::process::Command::new(&exe)
+            .args(&argv)
+            .arg("--process")
+            .arg(i.to_string())
+            .stdout(std::process::Stdio::piped())
+            .spawn()
+            .unwrap_or_else(|e| panic!("spawn cluster process {i}: {e}"));
+        children.push(child);
+    }
+    if let Some(victim) = kill {
+        assert!(victim < processes, "--kill-process {victim} out of range");
+        std::thread::sleep(Duration::from_millis(kill_after_ms));
+        let _ = children[victim].kill();
+        eprintln!("recovery-demo: killed process {victim} after {kill_after_ms} ms");
+    }
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; processes];
+    let mut hung = false;
+    while statuses.iter().any(Option::is_none) {
+        for (i, child) in children.iter_mut().enumerate() {
+            if statuses[i].is_none() {
+                statuses[i] = child.try_wait().expect("wait for cluster process");
+            }
+        }
+        if Instant::now() >= deadline {
+            for (i, child) in children.iter_mut().enumerate() {
+                if statuses[i].is_none() {
+                    eprintln!("cluster process {i} still running at deadline; killing");
+                    let _ = child.kill();
+                    statuses[i] = Some(child.wait().expect("wait for killed process"));
+                    hung = true;
+                }
+            }
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let mut digest = 0u64;
+    let mut digests = 0usize;
+    let mut failed = hung;
+    for (i, mut child) in children.into_iter().enumerate() {
+        let mut out = String::new();
+        if let Some(mut stdout) = child.stdout.take() {
+            let _ = stdout.read_to_string(&mut out);
+        }
+        print!("{out}");
+        let tag = format!("digest[p{i}]: ");
+        for line in out.lines() {
+            if let Some(rest) = line.strip_prefix(&tag) {
+                if let Ok(d) = u64::from_str_radix(rest.trim(), 16) {
+                    digest ^= d;
+                    digests += 1;
+                }
+            }
+        }
+        let status = statuses[i].expect("every child was waited on");
+        let expected_kill = kill == Some(i);
+        // Exit code 3 is a survivor's orderly "peer lost; quiesced"
+        // report — expected exactly when a kill was injected.
+        let quiesced = kill.is_some() && status.code() == Some(3);
+        if !status.success() && !expected_kill && !quiesced {
+            eprintln!("cluster process {i} exited with {status}");
+            failed = true;
+        }
+    }
+    if kill.is_none() {
+        if digests == processes {
+            println!("digest: {digest:016x}");
+        } else {
+            eprintln!("recovery-demo: only {digests}/{processes} digests reported");
             failed = true;
         }
     }
@@ -283,6 +388,83 @@ fn main() {
             };
             print_outcome(&label, &outcome);
         }
+        "recovery-demo" => {
+            let cluster = args.cluster();
+            cluster.validate();
+            if cluster.processes > 1 && cluster.process.is_none() {
+                let kill = args
+                    .flags
+                    .get("kill-process")
+                    .map(|v| v.parse().expect("--kill-process takes a process index"));
+                orchestrate_recovery_demo(
+                    cluster.processes,
+                    kill,
+                    args.get("kill-after-ms", 500u64),
+                );
+            }
+            let params = RecoveryDemoParams {
+                epochs: args.get("epochs", 200u64),
+                words_per_epoch: args.get("words-per-epoch", 64u64),
+                vocab: args.get("vocab", 500u64),
+                pacing: Duration::from_millis(args.get("epoch-ms", 0u64)),
+                crash_after: None,
+            };
+            // `--recover D` restores from D; `--checkpoint-dir D` +
+            // `--checkpoint-interval E` captures into D. A recovered run
+            // may also keep capturing by passing both.
+            let recover_dir = args.flags.get("recover").cloned();
+            let recover = recover_dir.is_some();
+            let checkpoint_dir =
+                recover_dir.or_else(|| args.flags.get("checkpoint-dir").cloned());
+            let process_index = cluster.process.unwrap_or(0);
+            let config = Config {
+                workers: args.get("workers", 2usize),
+                pin_workers: false,
+                processes: cluster.processes,
+                process_index,
+                addresses: cluster.addresses,
+                net_transport: cluster.net.transport,
+                reactor_backend: cluster.net.reactor,
+                parking: cluster.net.parking,
+                autotune: cluster.net.autotune,
+                checkpoint_dir,
+                checkpoint_interval: args.get("checkpoint-interval", 0u64),
+                recover,
+                ..Config::default()
+            };
+            // Both demos share a signature; `--workload` picks the one the
+            // chaos/recover cycle exercises (stateful wordcount by default,
+            // NEXMark Q4 for token-carrying windowed state).
+            let demo: fn(Config, RecoveryDemoParams) -> Result<DemoOutcome, NetError> =
+                match args.flags.get("workload").map(String::as_str).unwrap_or("wordcount") {
+                    "wordcount" => run_recovery_demo,
+                    "q4" => run_q4_recovery_demo,
+                    other => panic!("unknown --workload {other} (wordcount|q4)"),
+                };
+            match demo(config, params) {
+                Ok(DemoOutcome::Digest(d)) => {
+                    if cluster.processes > 1 {
+                        println!("digest[p{process_index}]: {d:016x}");
+                    } else {
+                        println!("digest: {d:016x}");
+                    }
+                }
+                Ok(DemoOutcome::PeerLost(p)) => {
+                    eprintln!(
+                        "recovery-demo[p{process_index}]: peer process {p} lost; quiesced \
+                         (recover with `ttd recovery-demo --recover <dir>`)"
+                    );
+                    std::process::exit(3);
+                }
+                Ok(DemoOutcome::Crashed) => {
+                    unreachable!("the CLI injects faults via SIGKILL, not crash_after")
+                }
+                Err(e) => {
+                    eprintln!("recovery-demo: cluster bootstrap failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
         "artifacts" => {
             let dir = args
                 .flags
@@ -324,10 +506,14 @@ fn main() {
                  [--net auto|tcp|shm|tcp-threads] [--reactor auto|poll|epoll] \
                  [--parking auto|doorbell|futex] [--autotune on]"
             );
+            println!(
+                "recovery: --checkpoint-dir D --checkpoint-interval E | --recover D \
+                 [--workload wordcount|q4] (see `ttd recovery-demo`)"
+            );
             println!("artifacts dir: artifacts/ (run `make artifacts`)");
         }
         _ => {
-            println!("usage: ttd <wordcount|noop|nexmark|artifacts|info> [--flags]");
+            println!("usage: ttd <wordcount|noop|nexmark|recovery-demo|artifacts|info> [--flags]");
             println!("see `ttd info` and the module docs for details");
         }
     }

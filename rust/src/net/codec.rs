@@ -346,6 +346,56 @@ impl<T: Wire> Wire for Option<T> {
     }
 }
 
+/// Ordered maps serialize as `(len, key, value, key, value, ...)` in key
+/// order — the natural deterministic byte layout for checkpoint chunks.
+impl<K: Wire + Ord, V: Wire> Wire for std::collections::BTreeMap<K, V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        debug_assert!(self.len() <= u32::MAX as usize, "map too long for wire");
+        (self.len() as u32).encode(buf);
+        for (k, v) in self {
+            k.encode(buf);
+            v.encode(buf);
+        }
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let len = reader.read_len()?;
+        let mut map = std::collections::BTreeMap::new();
+        for _ in 0..len {
+            let k = K::decode(reader)?;
+            let v = V::decode(reader)?;
+            map.insert(k, v);
+        }
+        Ok(map)
+    }
+}
+
+/// Hash maps serialize in sorted key order, so equal maps produce equal
+/// bytes regardless of the hasher's iteration order (checkpoint chunks must
+/// be deterministic for a given state). Encoding sorts a scratch vector of
+/// key references; this path runs off the hot loop (checkpoint capture).
+impl<K: Wire + Ord + Eq + std::hash::Hash, V: Wire> Wire for std::collections::HashMap<K, V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        debug_assert!(self.len() <= u32::MAX as usize, "map too long for wire");
+        (self.len() as u32).encode(buf);
+        let mut entries: Vec<(&K, &V)> = self.iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        for (k, v) in entries {
+            k.encode(buf);
+            v.encode(buf);
+        }
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let len = reader.read_len()?;
+        let mut map = std::collections::HashMap::with_capacity(len.min(reader.remaining().max(1)));
+        for _ in 0..len {
+            let k = K::decode(reader)?;
+            let v = V::decode(reader)?;
+            map.insert(k, v);
+        }
+        Ok(map)
+    }
+}
+
 /// Shared values serialize as their contents; decoding re-wraps in a fresh
 /// `Arc` (the share structure is a process-local artifact — the progress
 /// plane's broadcast `Arc<ProgressBatch<T>>` crosses the wire as the batch

@@ -251,6 +251,16 @@ const TUNE_EPOCH: Duration = Duration::from_millis(50);
 /// real channel id; intercepted by the shm read path before demux.
 const RING_SWITCH_CHANNEL: usize = usize::MAX - 1;
 
+/// `FrameHeader::channel` sentinel of the in-band GOODBYE control frame a
+/// process appends — after every data frame, as the LAST frame of each
+/// outbound stream — during orderly shutdown. Streams are FIFO, so a
+/// receiver that observes end-of-stream WITHOUT having seen the goodbye
+/// knows the peer died abruptly (kill, crash, torn connection) rather
+/// than finishing: that is the typed [`NetError::PeerLost`] condition the
+/// recovery machinery quiesces on. Intercepted by the demux path; never
+/// reaches a worker inbox.
+const GOODBYE_CHANNEL: usize = usize::MAX - 2;
+
 /// After shutdown is requested, how long the reactor (or a legacy recv
 /// thread) keeps draining inbound streams (letting a slower peer finish
 /// cleanly) before giving up.
@@ -307,6 +317,9 @@ struct ReactorStats {
     /// Live shm-ring switches applied (governor orders or the
     /// [`NetFabric::request_ring_resize`] hook).
     ring_resizes: AtomicU64,
+    /// Peer processes whose inbound stream ended WITHOUT the orderly
+    /// goodbye frame — each abrupt death counted once.
+    peer_lost: AtomicU64,
 }
 
 /// A point-in-time snapshot of one worker's [`NetStats`] (plus, on
@@ -364,6 +377,11 @@ pub struct NetTelemetry {
     /// Online progress-flush cadence adjustments published by this
     /// process's governor (process-wide; slot 0).
     pub cadence_adjusts: u64,
+    /// Peer processes observed to die abruptly — stream ended without the
+    /// orderly goodbye frame (process-wide; slot 0). Nonzero only on
+    /// faulted runs; the recovery pins assert survivors record exactly
+    /// the killed peers here.
+    pub peer_lost: u64,
 }
 
 impl NetStats {
@@ -387,6 +405,7 @@ impl NetStats {
             kernel_frame_bytes_tx: 0,
             ring_resizes: 0,
             cadence_adjusts: 0,
+            peer_lost: 0,
         }
     }
 }
@@ -450,6 +469,26 @@ impl OutQueue {
     fn status(&self) -> (bool, bool) {
         let inner = self.inner.lock().unwrap();
         (inner.frames.len() >= self.capacity, inner.closed)
+    }
+
+    /// Enqueues a frame past the capacity bound (shutdown-path control
+    /// frames only — the GOODBYE must follow every admitted data frame
+    /// even when the queue is full). A closed queue drops it: that link
+    /// already failed, and its peer correctly types the end as abrupt.
+    fn push_unbounded(&self, frame: Frame) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return;
+        }
+        let was_empty = inner.frames.is_empty();
+        inner.frames.push_back(frame);
+        drop(inner);
+        self.arrived.notify_all();
+        if was_empty {
+            if let Some(waker) = self.waker.get() {
+                waker.wake();
+            }
+        }
     }
 
     /// Marks the queue closed (senders get `Disconnected`; the I/O side
@@ -547,6 +586,17 @@ pub struct NetFabric {
     /// Set once a remote process's stream has ended (orderly or not):
     /// endpoints reading from it report `Disconnected` once drained.
     peer_gone: Vec<AtomicBool>,
+    /// Set once a remote process's orderly GOODBYE control frame arrived.
+    /// Streams are FIFO, so end-of-stream with this flag clear means the
+    /// peer died abruptly.
+    peer_goodbye: Vec<AtomicBool>,
+    /// Set once a remote process was observed to die abruptly (stream end
+    /// without goodbye). A strict subset of `peer_gone`.
+    lost: Vec<AtomicBool>,
+    /// Crash-simulation flag ([`NetFabric::sever`]): I/O threads drop
+    /// their links abruptly — no goodbyes, no drain — so peers observe
+    /// this process as killed.
+    abort: Arc<AtomicBool>,
     /// Per-link count of demuxed-but-unconsumed payloads. The reactor
     /// drops the link's read interest while this exceeds
     /// [`NetFabric::inbound_hwm`] — TCP flow control then backpressures
@@ -907,6 +957,9 @@ impl NetFabric {
                 .map(|l| l.as_ref().map(|_| Arc::new(OutQueue::new(queue_capacity))))
                 .collect(),
             peer_gone: (0..processes).map(|_| AtomicBool::new(false)).collect(),
+            peer_goodbye: (0..processes).map(|_| AtomicBool::new(false)).collect(),
+            lost: (0..processes).map(|_| AtomicBool::new(false)).collect(),
+            abort: Arc::new(AtomicBool::new(false)),
             inbound_depth: (0..processes).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
             // Deep enough to cover demux bursts across many endpoints,
             // bounded so an overloaded consumer stalls the wire instead of
@@ -945,11 +998,12 @@ impl NetFabric {
             let queue = fabric.out[peer].as_ref().expect("queue per link").clone();
             if let NetLink::Threads(tx, rx) = link {
                 let stop = fabric.stop.clone();
+                let abort = fabric.abort.clone();
                 let stats = fabric.reactor.clone();
                 threads.push(
                     std::thread::Builder::new()
                         .name(format!("net-send-{process}-to-{peer}"))
-                        .spawn(move || send_loop(tx, queue, stop, stats))
+                        .spawn(move || send_loop(tx, queue, stop, abort, stats))
                         .expect("spawn net send thread"),
                 );
                 let fab = fabric.clone();
@@ -1097,6 +1151,7 @@ impl NetFabric {
             t.kernel_frame_bytes_tx = self.reactor.kernel_bytes_tx.load(Ordering::Relaxed);
             t.ring_resizes = self.reactor.ring_resizes.load(Ordering::Relaxed);
             t.cadence_adjusts = self.tune.as_ref().map_or(0, |tune| tune.cadence_adjusts());
+            t.peer_lost = self.reactor.peer_lost.load(Ordering::Relaxed);
         }
         t
     }
@@ -1313,6 +1368,12 @@ impl NetFabric {
         known: &mut InboxCache,
         fanout: &mut FanOutCache,
     ) {
+        if header.channel == GOODBYE_CHANNEL {
+            // The peer's orderly farewell: remember it so the coming
+            // end-of-stream is typed as a clean finish, not a death.
+            self.peer_goodbye[peer].store(true, Ordering::Release);
+            return;
+        }
         debug_assert_eq!(self.process_of(header.from), peer, "frame from wrong link");
         let depth = &self.inbound_depth[peer];
         if header.to == BROADCAST_DEST {
@@ -1382,6 +1443,29 @@ impl NetFabric {
         }
     }
 
+    /// The stream from `peer` reached end-of-stream (or failed). If the
+    /// orderly goodbye never arrived the peer died abruptly: record the
+    /// typed loss, count it, and fail further sends toward it — nobody is
+    /// left to drain them, and a sender blocked on a dead peer's full
+    /// queue would otherwise hang until the linger. Either way the stream
+    /// is over, so endpoints drain then report `Disconnected`.
+    fn peer_stream_ended(&self, peer: usize) {
+        // One thread services each peer's inbound stream (the reactor or
+        // that peer's recv thread), so this cannot double-count. The lost
+        // flag is published LAST: an observer that sees it also sees the
+        // closed queue.
+        if !self.peer_goodbye[peer].load(Ordering::Acquire)
+            && !self.lost[peer].load(Ordering::Acquire)
+        {
+            if let Some(queue) = self.out[peer].as_ref() {
+                queue.close();
+            }
+            self.reactor.peer_lost.fetch_add(1, Ordering::Relaxed);
+            self.lost[peer].store(true, Ordering::Release);
+        }
+        self.mark_peer_gone(peer);
+    }
+
     /// The reactor thread: one readiness-driven loop servicing every
     /// link. Each pass pumps every driver (nonblocking sends + reads);
     /// when a full pass makes no progress the reactor sleeps, in one of
@@ -1432,6 +1516,12 @@ impl NetFabric {
         let mut actions: Vec<Action> = Vec::new();
         let mut woke = WakeCauses::default();
         loop {
+            if self.abort.load(Ordering::Acquire) {
+                // Severed: die as a killed process would — no drain, no
+                // goodbyes; dropping the drivers tears the links down
+                // wherever they stand and peers type the end as abrupt.
+                break;
+            }
             // Arm any requested live ring grows (governor or test hook).
             loop {
                 let request = self.resize_requests.lock().unwrap().pop();
@@ -1696,7 +1786,7 @@ impl NetFabric {
                         // the peer is gone; endpoints drain then
                         // disconnect.
                         d.rx_done = true;
-                        self.mark_peer_gone(peer);
+                        self.peer_stream_ended(peer);
                         progress = true;
                         break;
                     }
@@ -1709,7 +1799,7 @@ impl NetFabric {
                         });
                         if result.is_err() {
                             d.rx_done = true;
-                            self.mark_peer_gone(peer);
+                            self.peer_stream_ended(peer);
                             break;
                         }
                     }
@@ -1717,7 +1807,7 @@ impl NetFabric {
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                     Err(_) => {
                         d.rx_done = true;
-                        self.mark_peer_gone(peer);
+                        self.peer_stream_ended(peer);
                         progress = true;
                         break;
                     }
@@ -1847,7 +1937,7 @@ impl NetFabric {
                 };
                 if decode_err {
                     d.rx_done = true;
-                    self.mark_peer_gone(peer);
+                    self.peer_stream_ended(peer);
                     progress = true;
                     break;
                 }
@@ -1867,7 +1957,7 @@ impl NetFabric {
                         }
                         Err(_) => {
                             d.rx_done = true;
-                            self.mark_peer_gone(peer);
+                            self.peer_stream_ended(peer);
                             progress = true;
                             break;
                         }
@@ -1879,7 +1969,7 @@ impl NetFabric {
                     // re-check — bytes are published before the flag.
                     if (d.cons.is_closed() || d.doorbell_eof) && d.cons.available() == 0 {
                         d.rx_done = true;
-                        self.mark_peer_gone(peer);
+                        self.peer_stream_ended(peer);
                         progress = true;
                     } else if d.cons.park_then_check() > 0 {
                         // A publish raced the park: consume it now.
@@ -1957,7 +2047,7 @@ impl NetFabric {
                     // Orderly close and truncation alike: the peer's
                     // stream has ended.
                     d.rx_done = true;
-                    self.mark_peer_gone(peer);
+                    self.peer_stream_ended(peer);
                     progress = true;
                 }
             }
@@ -1973,6 +2063,11 @@ impl NetFabric {
         let mut known: InboxCache = HashMap::new();
         let mut fanout: FanOutCache = HashMap::new();
         loop {
+            if self.abort.load(Ordering::Acquire) {
+                // Severed: stop reading immediately (sever() already
+                // marked every peer gone for the local endpoints).
+                return;
+            }
             if self.stop.load(Ordering::Acquire) {
                 let seen = *stop_seen_at.get_or_insert_with(Instant::now);
                 if seen.elapsed() >= RECV_LINGER {
@@ -1991,10 +2086,17 @@ impl NetFabric {
             });
             match result {
                 Ok(_) => {}
-                Err(NetError::Closed) => break,
-                Err(_e) => break, // transport failure: treat as peer-gone
+                // End-of-stream and transport failure alike: whether this
+                // was a clean finish or an abrupt death is decided by
+                // whether the goodbye frame preceded it (streams are FIFO).
+                Err(_) => {
+                    self.peer_stream_ended(peer);
+                    return;
+                }
             }
         }
+        // Linger expired with the peer still draining: not a loss, just a
+        // slower peer we stop waiting for.
         self.mark_peer_gone(peer);
     }
 
@@ -2011,6 +2113,16 @@ impl NetFabric {
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
         for queue in self.out.iter().flatten() {
+            // The orderly farewell: queued past the capacity bound so it
+            // follows every admitted data frame, it is the last frame of
+            // each outbound stream. Receivers that see end-of-stream
+            // without it know this process died instead of finishing.
+            queue.push_unbounded(Frame::new(
+                GOODBYE_CHANNEL,
+                0,
+                0,
+                Lease::unpooled(Vec::new()),
+            ));
             queue.close();
         }
         self.wake_reactor();
@@ -2019,6 +2131,46 @@ impl NetFabric {
             let _ = handle.join();
         }
     }
+
+    /// Abruptly tears this fabric down the way a process kill would: no
+    /// goodbye frames, no outbound drain — links are dropped wherever
+    /// they stand, so peers observe a (possibly mid-frame) truncated
+    /// stream and record this process as lost. Chaos schedules use this
+    /// to simulate `SIGKILL` without leaving the test's address space.
+    /// Joins the I/O threads before returning; local endpoints see
+    /// `Disconnected`.
+    pub fn sever(&self) {
+        self.abort.store(true, Ordering::Release);
+        self.stop.store(true, Ordering::Release);
+        for queue in self.out.iter().flatten() {
+            queue.close();
+        }
+        for peer in 0..self.shape.processes() {
+            self.mark_peer_gone(peer);
+        }
+        self.wake_reactor();
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for handle in threads {
+            let _ = handle.join();
+        }
+    }
+
+    /// Peer processes whose inbound stream ended without the orderly
+    /// goodbye (killed or crashed), in index order. Empty on clean runs.
+    pub fn lost_peers(&self) -> Vec<usize> {
+        (0..self.shape.processes()).filter(|&p| self.is_peer_lost(p)).collect()
+    }
+
+    /// True iff `process` was observed to die abruptly.
+    pub fn is_peer_lost(&self, process: usize) -> bool {
+        self.lost[process].load(Ordering::Acquire)
+    }
+
+    /// The typed fault for the first lost peer, if any — for callers that
+    /// propagate an error value rather than polling the flag set.
+    pub fn peer_fault(&self) -> Option<NetError> {
+        self.lost_peers().first().map(|&process| NetError::PeerLost { process })
+    }
 }
 
 /// The legacy send-thread body for one [`NetLink::Threads`] link.
@@ -2026,10 +2178,16 @@ fn send_loop(
     mut tx: Box<dyn FrameTx>,
     queue: Arc<OutQueue>,
     stop: Arc<AtomicBool>,
+    abort: Arc<AtomicBool>,
     stats: Arc<ReactorStats>,
 ) {
     let mut batch: Vec<Frame> = Vec::new();
     loop {
+        if abort.load(Ordering::Acquire) {
+            // Severed: drop the transport without finishing it — the
+            // peer sees an abrupt end, as a kill would produce.
+            return;
+        }
         let (got, closed) = queue.drain_wait(&mut batch);
         if got {
             let mut failed = false;
@@ -2303,6 +2461,42 @@ mod tests {
     /// Two single-worker "processes" wired over the loopback transport.
     fn pair(capacity: usize) -> (Arc<NetFabric>, Arc<NetFabric>) {
         pair_shaped(vec![1, 1], capacity)
+    }
+
+    #[test]
+    fn orderly_shutdown_is_not_peer_loss() {
+        let (a, b) = pair(8);
+        a.shutdown();
+        // B observes A's end-of-stream; the goodbye frame that preceded
+        // it (streams are FIFO) types the end as a clean finish.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !b.is_peer_gone(0) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(b.is_peer_gone(0), "peer end-of-stream observed");
+        assert!(b.lost_peers().is_empty(), "goodbye preceded the EOF");
+        assert!(b.peer_fault().is_none());
+        assert_eq!(b.telemetry(0).peer_lost, 0);
+        b.shutdown();
+    }
+
+    #[test]
+    fn severed_peer_is_typed_as_lost() {
+        let (a, b) = pair(8);
+        a.sever();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.lost_peers().is_empty() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(b.lost_peers(), vec![0], "abrupt EOF without goodbye is a loss");
+        assert!(matches!(b.peer_fault(), Some(NetError::PeerLost { process: 0 })));
+        assert_eq!(b.telemetry(0).peer_lost, 1, "counted once on worker slot 0");
+        // Sends toward the dead peer fail immediately instead of backing
+        // up in a queue nobody drains (the lost flag is published after
+        // the queue closes).
+        let mut tx = b.sender::<u64>(7, 1, 0);
+        assert!(matches!(tx.send(42), Err(RingSendError::Disconnected(42))));
+        b.shutdown();
     }
 
     /// Two single-worker "processes" over real /dev/shm rings at unit

@@ -71,6 +71,16 @@ pub enum NetError {
     Codec(WireError),
     /// A bootstrap / handshake violation.
     Protocol(String),
+    /// A peer process died mid-run: its stream ended (EOF / connection
+    /// reset) while this side had not initiated shutdown. Unlike
+    /// [`NetError::Closed`] — the orderly end of frames — this is a
+    /// recoverable fault condition: survivors quiesce and report instead
+    /// of hanging or panicking, and the cluster restarts from the last
+    /// complete checkpoint (`ttd --recover`).
+    PeerLost {
+        /// The dead peer's process index.
+        process: usize,
+    },
 }
 
 impl std::fmt::Display for NetError {
@@ -80,6 +90,9 @@ impl std::fmt::Display for NetError {
             NetError::Closed => write!(f, "peer closed the stream"),
             NetError::Codec(e) => write!(f, "frame protocol violation: {e}"),
             NetError::Protocol(what) => write!(f, "handshake violation: {what}"),
+            NetError::PeerLost { process } => {
+                write!(f, "peer process {process} died mid-run (abrupt stream end)")
+            }
         }
     }
 }
@@ -416,6 +429,18 @@ impl FrameTx for LoopbackTx {
     }
 }
 
+impl Drop for LoopbackTx {
+    fn drop(&mut self) {
+        // Mirrors a closing socket: dropping the sending half without an
+        // orderly `finish` still ends the stream (the kernel sends FIN
+        // when a killed process's fd closes). The receiver tells the two
+        // apart by the in-band goodbye frame, not the EOF flavor.
+        if !self.finished {
+            self.stream.finish();
+        }
+    }
+}
+
 impl FrameRx for LoopbackRx {
     fn recv(
         &mut self,
@@ -597,6 +622,17 @@ impl FrameTx for ChaosTx {
         self.finished = true;
         self.stream.finish();
         Ok(())
+    }
+}
+
+impl Drop for ChaosTx {
+    fn drop(&mut self) {
+        // An abrupt drop models a kill: held-back bytes are LOST (they
+        // were never on the wire), so the peer may see a frame torn in
+        // half — exactly what a dead process leaves behind.
+        if !self.finished {
+            self.stream.finish();
+        }
     }
 }
 

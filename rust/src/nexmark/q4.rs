@@ -22,9 +22,13 @@ use crate::dataflow::probe::{ProbeExt, ProbeHandle};
 use crate::dataflow::stream::Stream;
 use crate::dataflow::TimestampToken;
 use crate::harness::workloads::{CompletionProbe, WorkloadInput};
+use crate::net::{Wire, WireError, WireReader};
 use crate::operators::window::singleton_frontier;
+use crate::recovery::{epoch_of, EpochSealed};
 use crate::worker::Worker;
+use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
 
 /// Per-auction open state in stage 1.
 #[derive(Clone, Debug)]
@@ -34,11 +38,63 @@ struct OpenAuction {
     expires: u64,
 }
 
+impl Wire for OpenAuction {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.category.encode(buf);
+        self.best_bid.encode(buf);
+        self.expires.encode(buf);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(OpenAuction {
+            category: u64::decode(r)?,
+            best_bid: Option::decode(r)?,
+            expires: u64::decode(r)?,
+        })
+    }
+}
+
 /// Shared stage-1 state: open auctions and the close index.
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct CloseState {
     auctions: HashMap<u64, OpenAuction>,
     by_expiry: BTreeMap<u64, Vec<u64>>,
+}
+
+impl Wire for CloseState {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.auctions.encode(buf);
+        self.by_expiry.encode(buf);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(CloseState { auctions: HashMap::decode(r)?, by_expiry: BTreeMap::decode(r)? })
+    }
+}
+
+/// One epoch-tagged stage-1 mutation, routed through the [`EpochSealed`]
+/// cell. `CloseExpiry` is tagged with the expiry timestamp itself: the
+/// operator holds that expiry's token until it closes the slot, so the
+/// frontier (and therefore any seal) cannot pass the expiry first.
+enum Q4Update {
+    Observe(Event),
+    CloseExpiry(u64),
+}
+
+/// Applying a close returns the `(category, winning_price)` pairs so the
+/// operator can emit them; replay onto the sealed copy discards them
+/// (deterministically identical). `Vec::new` does not allocate, so the
+/// dominant `Observe` path stays allocation-free.
+fn apply_q4(state: &mut CloseState, update: &Q4Update) -> Vec<(u64, u64)> {
+    match update {
+        Q4Update::Observe(event) => {
+            state.observe(event);
+            Vec::new()
+        }
+        Q4Update::CloseExpiry(expires) => {
+            let mut out = Vec::new();
+            state.close_expiry(*expires, &mut out);
+            out
+        }
+    }
 }
 
 impl CloseState {
@@ -86,17 +142,46 @@ impl CloseState {
 
 /// Stage 1 under timestamp tokens: one held token per distinct expiry,
 /// whole intervals retired per frontier advance (the token idiom of §5).
-fn closes_tokens(stream: &Stream<u64, Event>) -> Stream<u64, (u64, u64)> {
+/// Crate-visible so the recovery demo can drive this exact operator — with
+/// its checkpoint registration and token re-minting — under kill/recover.
+pub(crate) fn closes_tokens(stream: &Stream<u64, Event>) -> Stream<u64, (u64, u64)> {
+    let recovery = stream.scope().recovery();
+    let peers = stream.scope().peers() as u64;
+    let index = stream.scope().index() as u64;
     stream.unary_frontier(
         Pact::exchange(|e: &Event| e.auction_key()),
         "q4_close_tokens",
-        |tok, _info| {
-            drop(tok);
-            let mut state = CloseState::default();
+        move |tok, _info| {
+            let logging = recovery.as_ref().is_some_and(|r| r.logging());
+            let cell =
+                Rc::new(RefCell::new(EpochSealed::new(CloseState::default(), apply_q4, logging)));
             let mut tokens: BTreeMap<u64, TimestampToken<u64>> = BTreeMap::new();
-            let mut out = Vec::new();
+            if let Some(ctx) = &recovery {
+                // Events route by auction id, so a restoring worker keeps
+                // exactly the auctions the new shape assigns to it —
+                // rebuilding its expiry index as it merges.
+                let restored =
+                    ctx.register("q4_close_tokens", cell.clone(), move |into, _old_worker, old| {
+                        for (id, open) in old.auctions {
+                            if id % peers == index {
+                                into.by_expiry.entry(open.expires).or_default().push(id);
+                                into.auctions.insert(id, open);
+                            }
+                        }
+                    });
+                if restored {
+                    // Re-mint one token per restored open expiry slot from
+                    // the initial token (still at time zero).
+                    for &expires in cell.borrow().state().by_expiry.keys() {
+                        tokens.insert(expires, tok.delayed(&expires));
+                    }
+                }
+            }
+            drop(tok);
             move |input: &mut _, output: &mut _| {
+                let mut cell = cell.borrow_mut();
                 while let Some((token, data)) = input.next() {
+                    let epoch = epoch_of(token.time());
                     for event in &data {
                         if let Event::Auction(a) = event {
                             // First auction at this expiry: capture a token
@@ -107,13 +192,13 @@ fn closes_tokens(stream: &Stream<u64, Event>) -> Stream<u64, (u64, u64)> {
                                 t
                             });
                         }
-                        state.observe(event);
+                        cell.update(epoch, Q4Update::Observe(event.clone()));
                     }
                 }
                 let bound = singleton_frontier(&input.frontier());
-                for expires in state.expired_before(bound) {
-                    out.clear();
-                    state.close_expiry(expires, &mut out);
+                let expired = cell.state().expired_before(bound);
+                for expires in expired {
+                    let mut out = cell.update(expires, Q4Update::CloseExpiry(expires));
                     let token = tokens.remove(&expires).expect("token per expiry");
                     if !out.is_empty() {
                         output.session(&token).give_iterator(out.drain(..));
@@ -183,20 +268,41 @@ impl WmLogic<Event, (u64, u64)> for WmCloses {
 
 /// Stage 2: running average per category (oblivious in every mechanism).
 fn average_by_category(stream: &Stream<u64, (u64, u64)>) -> Stream<u64, (u64, f64)> {
+    let recovery = stream.scope().recovery();
+    let peers = stream.scope().peers() as u64;
+    let index = stream.scope().index() as u64;
     stream.unary(
         Pact::exchange(|&(category, _): &(u64, u64)| category),
         "q4_category_avg",
-        |tok, _info| {
+        move |tok, _info| {
             drop(tok);
-            let mut sums: HashMap<u64, (u64, u64)> = HashMap::new();
+            // Per-category running sums in an epoch-sealed cell; the apply
+            // function returns the updated average for emission.
+            fn fold(sums: &mut HashMap<u64, (u64, u64)>, update: &(u64, u64)) -> f64 {
+                let (category, price) = *update;
+                let entry = sums.entry(category).or_insert((0, 0));
+                entry.0 += price;
+                entry.1 += 1;
+                entry.0 as f64 / entry.1 as f64
+            }
+            let logging = recovery.as_ref().is_some_and(|r| r.logging());
+            let cell = Rc::new(RefCell::new(EpochSealed::new(HashMap::new(), fold, logging)));
+            if let Some(ctx) = &recovery {
+                // Closes route by category: keep the categories the new
+                // shape assigns to this worker (sums are per-category, so
+                // no cross-worker combination is ever needed).
+                ctx.register("q4_category_avg", cell.clone(), move |into, _old_worker, old| {
+                    into.extend(old.into_iter().filter(|(c, _)| c % peers == index));
+                });
+            }
             move |input: &mut _, output: &mut _| {
+                let mut cell = cell.borrow_mut();
                 while let Some((token, data)) = input.next() {
+                    let epoch = epoch_of(token.time());
                     let mut session = output.session(&token);
                     for (category, price) in data {
-                        let entry = sums.entry(category).or_insert((0, 0));
-                        entry.0 += price;
-                        entry.1 += 1;
-                        session.give((category, entry.0 as f64 / entry.1 as f64));
+                        let average = cell.update(epoch, (category, price));
+                        session.give((category, average));
                     }
                 }
             }
@@ -348,3 +454,151 @@ pub fn q4_oracle(events: &[Event]) -> Vec<(u64, u64)> {
 // unused-import lint when the module is compiled without tests.
 #[allow(dead_code)]
 type _WmRecordAlias = WmRecord<u64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nexmark::event::{Auction, Bid};
+    use crate::testing::{property, Rng};
+
+    /// A random mid-stream `CloseState`: some auctions opened, some bid on,
+    /// some expiry slots already closed. `CloseState` is private to this
+    /// module, so its capture/restore round trip is pinned here.
+    fn random_state(rng: &mut Rng) -> CloseState {
+        let mut state = CloseState::default();
+        let auctions = rng.below(64);
+        for id in 0..auctions {
+            state.observe(&Event::Auction(Auction {
+                id,
+                item: rng.below(1000),
+                seller: rng.below(100),
+                category: rng.below(16),
+                initial_bid: 1,
+                reserve: 1,
+                date_time: 0,
+                expires: rng.range(10, 40),
+            }));
+        }
+        for _ in 0..rng.below(256) {
+            state.observe(&Event::Bid(Bid {
+                auction: rng.below(auctions.max(1) + 8), // some miss on purpose
+                bidder: rng.below(100),
+                price: rng.range(1, 10_000),
+                date_time: rng.below(50),
+            }));
+        }
+        let mut sink = Vec::new();
+        for expires in state.expired_before(rng.below(30)) {
+            state.close_expiry(expires, &mut sink);
+        }
+        state
+    }
+
+    fn assert_states_equal(got: &CloseState, want: &CloseState) {
+        assert_eq!(got.by_expiry, want.by_expiry);
+        assert_eq!(got.auctions.len(), want.auctions.len());
+        for (id, open) in &want.auctions {
+            let g = got.auctions.get(id).expect("auction survives round trip");
+            assert_eq!(g.category, open.category);
+            assert_eq!(g.best_bid, open.best_bid);
+            assert_eq!(g.expires, open.expires);
+        }
+    }
+
+    #[test]
+    fn close_state_capture_round_trips() {
+        property("close_state_capture_round_trips", 48, |case, rng| {
+            let mut cell = EpochSealed::new(CloseState::default(), apply_q4, true);
+            // Case 0 pins the empty state; the rest are random mid-stream.
+            let state = if case == 0 { CloseState::default() } else { random_state(rng) };
+            cell.update(1, Q4Update::Observe(Event::Person(crate::nexmark::event::Person {
+                id: 0,
+                name: 0,
+                city: 0,
+                date_time: 0,
+            })));
+            *cell.restore_target() = state;
+            cell.finish_restore(3);
+            let mut bytes = Vec::new();
+            cell.capture(&mut bytes);
+            let (epoch, decoded) =
+                EpochSealed::<CloseState, Q4Update, Vec<(u64, u64)>>::decode_chunk(&bytes)
+                    .expect("well-formed chunk must decode");
+            assert_eq!(epoch, 3);
+            assert_states_equal(&decoded, cell.sealed());
+            // Torn read: every strict prefix errors, never panics.
+            for cut in 0..bytes.len() {
+                assert!(
+                    EpochSealed::<CloseState, Q4Update, Vec<(u64, u64)>>::decode_chunk(
+                        &bytes[..cut]
+                    )
+                    .is_err(),
+                    "prefix {cut}/{} decoded",
+                    bytes.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn restored_closes_match_uninterrupted_closes() {
+        // The recovery contract for Q4 stage 1: capture mid-stream, restore
+        // into a fresh cell, feed the remaining events — the closes must
+        // match a run that never checkpointed.
+        property("restored_closes_match_uninterrupted_closes", 32, |_case, rng| {
+            let mut events = Vec::new();
+            for id in 0..rng.range(4, 32) {
+                events.push(Event::Auction(Auction {
+                    id,
+                    item: 0,
+                    seller: 0,
+                    category: rng.below(8),
+                    initial_bid: 1,
+                    reserve: 1,
+                    date_time: 0,
+                    expires: rng.range(10, 30),
+                }));
+                events.push(Event::Bid(Bid {
+                    auction: id,
+                    bidder: 0,
+                    price: rng.range(1, 1000),
+                    date_time: rng.below(30),
+                }));
+            }
+            let split = rng.below(events.len() as u64 + 1) as usize;
+
+            let mut straight = CloseState::default();
+            for event in &events {
+                straight.observe(event);
+            }
+
+            let mut first = EpochSealed::new(CloseState::default(), apply_q4, true);
+            for event in &events[..split] {
+                first.update(1, Q4Update::Observe(event.clone()));
+            }
+            first.seal_to(1);
+            let mut bytes = Vec::new();
+            first.capture(&mut bytes);
+            let (epoch, image) =
+                EpochSealed::<CloseState, Q4Update, Vec<(u64, u64)>>::decode_chunk(&bytes)
+                    .unwrap();
+            let mut resumed = EpochSealed::new(CloseState::default(), apply_q4, true);
+            *resumed.restore_target() = image;
+            resumed.finish_restore(epoch);
+            for event in &events[split..] {
+                resumed.update(epoch + 1, Q4Update::Observe(event.clone()));
+            }
+
+            let drain = |state: &mut CloseState| {
+                let mut out = Vec::new();
+                for expires in state.expired_before(u64::MAX) {
+                    state.close_expiry(expires, &mut out);
+                }
+                out.sort_unstable();
+                out
+            };
+            let mut resumed_state = resumed.state().clone();
+            assert_eq!(drain(&mut resumed_state), drain(&mut straight));
+        });
+    }
+}

@@ -18,8 +18,34 @@ use crate::dataflow::stream::Stream;
 use crate::dataflow::TimestampToken;
 use crate::harness::workloads::{CompletionProbe, WorkloadInput};
 use crate::operators::window::{round_up_to_multiple, singleton_frontier};
+use crate::recovery::EpochSealed;
 use crate::worker::Worker;
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// One epoch-tagged mutation of a windowed-max map, routed through an
+/// [`EpochSealed`] cell. `Close` is tagged with the window end: the
+/// operator holds that window's token until it closes it, so no seal can
+/// pass the window end first (same argument as the Figure 5 operator).
+enum MaxUpdate {
+    /// Fold `price` into the max of the window ending at `window`.
+    Observe { window: u64, price: u64 },
+    /// Retire the window ending at `window`.
+    Close { window: u64 },
+}
+
+fn apply_max(state: &mut BTreeMap<u64, u64>, update: &MaxUpdate) {
+    match update {
+        MaxUpdate::Observe { window, price } => {
+            let entry = state.entry(*window).or_insert(0);
+            *entry = (*entry).max(*price);
+        }
+        MaxUpdate::Close { window } => {
+            state.remove(window);
+        }
+    }
+}
 
 /// A windowed-max stage under tokens: generic over the keying function so
 /// both Q7 stages share it.
@@ -30,11 +56,38 @@ fn window_max_tokens<D: crate::dataflow::channels::Data>(
     key: impl Fn(&D) -> u64 + 'static,
     price: impl Fn(&D) -> Option<(u64, u64)> + 'static, // (event_time, price)
 ) -> Stream<u64, (u64, u64)> {
+    let recovery = stream.scope().recovery();
+    let my_index = stream.scope().index();
+    let reg_name = name.to_string();
     stream.unary_frontier(Pact::exchange(key), name, move |tok, _info| {
+        let mut tokens: BTreeMap<u64, TimestampToken<u64>> = BTreeMap::new();
+        let logging = recovery.as_ref().is_some_and(|r| r.logging());
+        let cell = Rc::new(RefCell::new(EpochSealed::new(
+            BTreeMap::<u64, u64>::new(),
+            apply_max,
+            logging,
+        )));
+        if let Some(ctx) = &recovery {
+            // The keying function is opaque (bidder id in stage 1, window
+            // in stage 2), so restored maxima cannot be re-partitioned:
+            // each restoring worker takes only its own old worker's chunk
+            // (same-shape recovery; rescaling Q7 is out of scope).
+            let restored = ctx.register(&reg_name, cell.clone(), move |into, old_worker, old| {
+                if old_worker == my_index {
+                    into.extend(old);
+                }
+            });
+            if restored {
+                for &w in cell.borrow().state().keys() {
+                    tokens.insert(w, tok.delayed(&w));
+                }
+            }
+        }
         drop(tok);
-        let mut windows: BTreeMap<u64, (TimestampToken<u64>, u64)> = BTreeMap::new();
         move |input: &mut _, output: &mut _| {
+            let mut cell = cell.borrow_mut();
             while let Some((token, data)) = input.next() {
+                let epoch = crate::recovery::epoch_of(token.time());
                 for d in &data {
                     if let Some((te, p)) = price(d) {
                         // The window containing `te`; if the token cannot
@@ -44,19 +97,21 @@ fn window_max_tokens<D: crate::dataflow::channels::Data>(
                         if window < *token.time() {
                             window = round_up_to_multiple(*token.time(), window_ns);
                         }
-                        let entry = windows.entry(window).or_insert_with(|| {
+                        tokens.entry(window).or_insert_with(|| {
                             let mut t = token.retain();
                             t.downgrade(&window);
-                            (t, 0)
+                            t
                         });
-                        entry.1 = entry.1.max(p);
+                        cell.update(epoch, MaxUpdate::Observe { window, price: p });
                     }
                 }
             }
             let bound = singleton_frontier(&input.frontier());
-            let closed: Vec<u64> = windows.range(..bound).map(|(&w, _)| w).collect();
+            let closed: Vec<u64> = tokens.range(..bound).map(|(&w, _)| w).collect();
             for w in closed {
-                let (token, max) = windows.remove(&w).expect("window exists");
+                let token = tokens.remove(&w).expect("window exists");
+                let max = cell.state().get(&w).copied().unwrap_or(0);
+                cell.update(w, MaxUpdate::Close { window: w });
                 output.session(&token).give((w, max));
             }
         }

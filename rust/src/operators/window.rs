@@ -16,8 +16,12 @@
 use crate::dataflow::channels::Pact;
 use crate::dataflow::operator::OperatorExt;
 use crate::dataflow::stream::Stream;
+use crate::net::{Wire, WireError, WireReader};
 use crate::progress::antichain::MutableAntichain;
+use crate::recovery::EpochSealed;
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 /// User-defined structure to maintain window data (Ⓐ in Figure 5).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -26,6 +30,42 @@ pub struct WindowData {
     pub sum: u64,
     /// Number of values observed in the window.
     pub count: u64,
+}
+
+impl Wire for WindowData {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.sum.encode(buf);
+        self.count.encode(buf);
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(WindowData { sum: u64::decode(reader)?, count: u64::decode(reader)? })
+    }
+}
+
+/// One epoch-tagged mutation of the open-window map, routed through the
+/// [`EpochSealed`] cell so checkpoints capture exactly the windows still
+/// open at the sealed epoch. `Close` is tagged with the window end itself:
+/// the operator holds that window's token until it closes it, so the
+/// frontier — and therefore the seal — cannot pass the window end first,
+/// and a seal that applies the `Close` has already applied every `Add`.
+enum WindowUpdate {
+    /// Fold a batch partial into the window ending at `window`.
+    Add { window: u64, sum: u64, count: u64 },
+    /// Retire the window ending at `window` (output already emitted).
+    Close { window: u64 },
+}
+
+fn apply_window(state: &mut BTreeMap<u64, WindowData>, update: &WindowUpdate) {
+    match update {
+        WindowUpdate::Add { window, sum, count } => {
+            let entry = state.entry(*window).or_default();
+            entry.sum += sum;
+            entry.count += count;
+        }
+        WindowUpdate::Close { window } => {
+            state.remove(window);
+        }
+    }
 }
 
 /// The paper's `singleton_frontier` helper: the sole element of a totally
@@ -88,62 +128,94 @@ impl WindowAverageExt for Stream<u64, u64> {
         mut backend: Box<dyn WindowBackend>,
     ) -> Stream<u64, f64> {
         let peers = self.scope().peers() as u64;
+        let recovery = self.scope().recovery();
+        let my_index = self.scope().index();
         // Figure 5 Ⓑ: the outer function, invoked once with the initial
         // timestamp token Ⓒ.
         self.unary_frontier(
             Pact::exchange(move |x: &u64| *x % peers),
             "tumbling_window",
             move |tok, _info| {
-                // Ⓓ, Ⓔ: the initial token is at time zero and is dropped
-                // immediately — this operator produces no unprompted output.
+                // Ⓓ, Ⓔ: the initial token is at time zero — normally
+                // dropped immediately (this operator produces no
+                // unprompted output); on restore it first re-mints one
+                // token per restored open window.
                 assert!(*tok.time() == 0);
-                std::mem::drop(tok);
                 // Ⓕ: ordered map from end-of-window timestamp to the held
-                // token and partial window data.
-                let mut windows: BTreeMap<
-                    u64,
-                    (crate::dataflow::TimestampToken<u64>, WindowData),
-                > = BTreeMap::new();
+                // token; the partial window data lives in the epoch-sealed
+                // cell (only the data is checkpointed — tokens are
+                // re-minted on restore).
+                let mut tokens: BTreeMap<u64, crate::dataflow::TimestampToken<u64>> =
+                    BTreeMap::new();
+                let logging = recovery.as_ref().is_some_and(|r| r.logging());
+                let cell = Rc::new(RefCell::new(EpochSealed::new(
+                    BTreeMap::<u64, WindowData>::new(),
+                    apply_window,
+                    logging,
+                )));
+                if let Some(ctx) = &recovery {
+                    // This stage exchanges by VALUE (`x % peers`), not by
+                    // window, so every worker holds partials for the same
+                    // windows: each restoring worker takes only its own
+                    // old worker's chunk (no rescaling for this operator).
+                    let restored =
+                        ctx.register("tumbling_window", cell.clone(), move |into, old_worker, old| {
+                            if old_worker == my_index {
+                                into.extend(old);
+                            }
+                        });
+                    if restored {
+                        // Re-mint one token per restored open window from
+                        // the initial token, which is still at time zero.
+                        for &w in cell.borrow().state().keys() {
+                            tokens.insert(w, tok.delayed(&w));
+                        }
+                    }
+                }
+                std::mem::drop(tok);
                 let mut batch_scratch: Vec<(u64, u64)> = Vec::new();
                 // Ⓖ: the operator logic, invoked per scheduling.
                 move |input: &mut _, output: &mut _| {
+                    let mut cell = cell.borrow_mut();
                     // Ⓘ: per-batch input processing.
                     while let Some((tok_ref, data)) = input.next() {
                         // Ⓙ: the window this batch belongs to.
                         let window_ts = round_up_to_multiple(*tok_ref.time(), window_size);
+                        let epoch = crate::recovery::epoch_of(tok_ref.time());
                         // Ⓚ, Ⓛ: first data for this window — capture the
                         // token and downgrade it to the window end.
-                        if !windows.contains_key(&window_ts) {
+                        if !tokens.contains_key(&window_ts) {
                             let mut window_tok = tok_ref.retain();
                             window_tok.downgrade(&window_ts);
-                            windows.insert(window_ts, (window_tok, WindowData::default()));
+                            tokens.insert(window_ts, window_tok);
                         }
                         // Ⓜ: fold the batch into the window partials via
                         // the configured backend.
                         batch_scratch.clear();
                         batch_scratch.extend(data.iter().map(|&v| (window_ts, v)));
                         for (w, sum, count) in backend.aggregate(&batch_scratch) {
-                            let (_, window_data) =
-                                windows.get_mut(&w).expect("window exists");
-                            window_data.sum += sum;
-                            window_data.count += count;
+                            cell.update(epoch, WindowUpdate::Add { window: w, sum, count });
                         }
                     }
                     // Ⓝ: the frontier tells us which windows can close.
                     let target_ts = singleton_frontier(&input.frontier());
                     // Ⓟ, Ⓠ, Ⓡ: retire all closed windows at once, using
-                    // the tokens stored alongside the window data.
-                    for (_, (tok, window)) in windows.range(0..target_ts) {
+                    // the stored tokens.
+                    for (w, tok) in tokens.range(0..target_ts) {
+                        let window =
+                            cell.state().get(w).copied().unwrap_or_default();
                         output
                             .session(tok)
                             .give(window.sum as f64 / window.count as f64);
                     }
                     // Ⓢ: drop retired windows; token drops update the
-                    // system automatically (and eagerly).
+                    // system automatically (and eagerly). The `Close` is
+                    // tagged with the window end (see [`WindowUpdate`]).
                     let retired: Vec<u64> =
-                        windows.range(0..target_ts).map(|(k, _)| *k).collect();
+                        tokens.range(0..target_ts).map(|(k, _)| *k).collect();
                     for k in retired {
-                        windows.remove(&k);
+                        tokens.remove(&k);
+                        cell.update(k, WindowUpdate::Close { window: k });
                     }
                 }
             },

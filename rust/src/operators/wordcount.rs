@@ -13,7 +13,10 @@ use crate::dataflow::channels::{Data, Pact};
 use crate::dataflow::operator::OperatorExt;
 use crate::dataflow::stream::Stream;
 use crate::progress::timestamp::Timestamp;
+use crate::recovery::{epoch_of, EpochSealed};
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Rolling word counts.
 pub trait WordCountExt<T: Timestamp> {
@@ -24,16 +27,38 @@ pub trait WordCountExt<T: Timestamp> {
 
 impl<T: Timestamp> WordCountExt<T> for Stream<T, u64> {
     fn word_count(&self) -> Stream<T, (u64, u64)> {
-        self.unary(Pact::exchange(|w: &u64| *w), "word_count", |tok, _info| {
+        let recovery = self.scope().recovery();
+        let peers = self.scope().peers() as u64;
+        let index = self.scope().index() as u64;
+        self.unary(Pact::exchange(|w: &u64| *w), "word_count", move |tok, _info| {
             drop(tok);
-            let mut counts: HashMap<u64, u64> = HashMap::new();
+            // Counts live in an epoch-sealed cell so frontier-aligned
+            // checkpoints can capture them; the apply function returns the
+            // new count, keeping the hot path at one hash lookup.
+            fn bump(counts: &mut HashMap<u64, u64>, word: &u64) -> u64 {
+                let count = counts.entry(*word).or_insert(0);
+                *count += 1;
+                *count
+            }
+            let logging = recovery.as_ref().is_some_and(|r| r.logging());
+            let cell = Rc::new(RefCell::new(EpochSealed::new(HashMap::new(), bump, logging)));
+            if let Some(ctx) = &recovery {
+                // Words route by value (`w % peers`), so a restoring
+                // worker keeps exactly the words the *new* shape assigns
+                // to it — this is what lets a checkpoint restore into a
+                // different cluster shape.
+                ctx.register("word_count", cell.clone(), move |into, _old_worker, old| {
+                    into.extend(old.into_iter().filter(|(w, _)| w % peers == index));
+                });
+            }
             move |input: &mut _, output: &mut _| {
+                let mut cell = cell.borrow_mut();
                 while let Some((token, data)) = input.next() {
+                    let epoch = epoch_of(token.time());
                     let mut session = output.session(&token);
                     for word in data {
-                        let count = counts.entry(word).or_insert(0);
-                        *count += 1;
-                        session.give((word, *count));
+                        let count = cell.update(epoch, word);
+                        session.give((word, count));
                     }
                 }
             }

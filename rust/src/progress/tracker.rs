@@ -217,6 +217,24 @@ impl<T: Timestamp> Tracker<T> {
         self.counts.iter().all(|c| c.is_empty())
     }
 
+    /// The least timestamp any outstanding pointstamp (token or in-flight
+    /// message, anywhere in this worker's view of the cluster) still holds;
+    /// `None` once the dataflow is complete.
+    ///
+    /// This is the *global frontier bound* the checkpoint coordinator seals
+    /// against: every message with a timestamp strictly below the bound has
+    /// been both produced **and** consumed (pointstamp accounting counts
+    /// both), so operator state restricted to epochs below the bound is
+    /// immutable — a globally consistent cut obtained for free from the
+    /// progress plane (no barrier protocol). The view is conservative: it
+    /// may lag the true global frontier, never lead it.
+    pub fn min_frontier(&self) -> Option<&T> {
+        self.counts
+            .iter()
+            .flat_map(|c| c.frontier().iter())
+            .min()
+    }
+
     /// The current frontier at a *source* location (used by probes on
     /// outputs and by diagnostics).
     pub fn source_counts(&self, node: usize, port: usize) -> &MutableAntichain<T> {
@@ -369,6 +387,34 @@ mod tests {
             ((Location::source(0, 0), 0u64), -1),
         ]);
         assert!(f1.borrow().antichain.is_empty());
+    }
+
+    #[test]
+    fn min_frontier_tracks_least_outstanding_pointstamp() {
+        let mut tracker = Tracker::new(&linear(), 1);
+        assert_eq!(tracker.min_frontier(), Some(&0));
+        // Input advances to 6; op still holds its token at 0.
+        tracker.apply(vec![
+            ((Location::source(0, 0), 6u64), 1),
+            ((Location::source(0, 0), 0u64), -1),
+        ]);
+        assert_eq!(tracker.min_frontier(), Some(&0));
+        // Op's token moves to 4: the global bound follows the minimum.
+        tracker.apply(vec![
+            ((Location::source(1, 0), 4u64), 1),
+            ((Location::source(1, 0), 0u64), -1),
+        ]);
+        assert_eq!(tracker.min_frontier(), Some(&4));
+        // An in-flight message below every token holds the bound down.
+        tracker.apply(vec![((Location::target(1, 0), 2u64), 1)]);
+        assert_eq!(tracker.min_frontier(), Some(&2));
+        tracker.apply(vec![
+            ((Location::target(1, 0), 2u64), -1),
+            ((Location::source(0, 0), 6u64), -1),
+            ((Location::source(1, 0), 4u64), -1),
+        ]);
+        assert_eq!(tracker.min_frontier(), None);
+        assert!(tracker.is_complete());
     }
 
     #[test]

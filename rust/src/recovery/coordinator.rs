@@ -1,0 +1,466 @@
+//! The epoch-aligned checkpoint coordinator.
+//!
+//! Two halves:
+//!
+//! * [`CheckpointWriter`] — one per process: a background thread that owns
+//!   all checkpoint file I/O. Workers hand it already-encoded chunk
+//!   buffers; it writes them with atomic renames and commits the process
+//!   manifest once every local worker has delivered its chunks for an
+//!   epoch. Nothing on the worker's hot path ever touches the filesystem.
+//!
+//! * [`RecoveryContext`] — one per worker (`Rc`, lives on the worker
+//!   thread): the registry of the worker's stateful cells, the continuous
+//!   sealing drive, and the boundary trigger. The worker's step loop calls
+//!   [`RecoveryContext::on_frontier`] with its tracker's global frontier
+//!   bound; the context seals every registered cell up to
+//!   `min(bound - 1, next boundary)` (keeping pending logs tiny and
+//!   allocation-free), and when the bound passes a checkpoint boundary it
+//!   captures every sealed image and ships the buffers to the writer.
+//!
+//! Checkpoint boundaries are the multiples of the configured interval, so
+//! every worker in every process captures at the *same* epochs without any
+//! coordination beyond the progress plane itself — the frontier is the
+//! alignment barrier, and it is free.
+
+use super::manifest::{chunk_path, manifest_path, write_atomic, Manifest, RestoreBundle};
+use super::state::{EpochSealed, StateCell};
+use crate::net::{Wire, WireReader};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::io;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One worker's captured state for one checkpoint epoch.
+pub struct WriteJob {
+    /// The sealed epoch the chunks capture.
+    pub epoch: u64,
+    /// The capturing worker (global index).
+    pub worker: usize,
+    /// `(operator index, operator name, encoded sealed state)` per cell.
+    pub chunks: Vec<(u32, String, Vec<u8>)>,
+}
+
+/// Counters the writer publishes (telemetry + bench).
+#[derive(Default)]
+pub struct WriterStats {
+    /// Manifests committed (per-process checkpoints made durable).
+    pub checkpoints_committed: AtomicU64,
+    /// Total chunk payload bytes written.
+    pub chunk_bytes: AtomicU64,
+}
+
+/// The per-process background checkpoint writer.
+pub struct CheckpointWriter {
+    tx: Option<Sender<WriteJob>>,
+    handle: Option<JoinHandle<io::Result<()>>>,
+    stats: Arc<WriterStats>,
+}
+
+impl CheckpointWriter {
+    /// Spawns the writer thread for `process` (with `local_workers` workers)
+    /// writing into `dir`. `cluster_shape` and `interval` are recorded in
+    /// every manifest so recovery can validate and rescale.
+    pub fn spawn(
+        dir: PathBuf,
+        process: usize,
+        local_workers: usize,
+        cluster_shape: Vec<usize>,
+        interval: u64,
+    ) -> io::Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        let (tx, rx) = channel::<WriteJob>();
+        let stats = Arc::new(WriterStats::default());
+        let thread_stats = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ttd-ckpt-{process}"))
+            .spawn(move || -> io::Result<()> {
+                // Per epoch: chunk entries written so far and workers heard.
+                let mut staged: HashMap<u64, (Vec<(u64, u64, String)>, usize)> = HashMap::new();
+                while let Ok(job) = rx.recv() {
+                    let entry = staged.entry(job.epoch).or_default();
+                    for (op, name, bytes) in &job.chunks {
+                        let path = chunk_path(&dir, job.epoch, job.worker, *op);
+                        write_atomic(&path, bytes, &format!("p{process}"))?;
+                        thread_stats.chunk_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        entry.0.push((job.worker as u64, *op as u64, name.clone()));
+                    }
+                    entry.1 += 1;
+                    if entry.1 == local_workers {
+                        // Every local worker delivered: commit the manifest.
+                        let (chunks, _) = staged.remove(&job.epoch).expect("staged epoch");
+                        let manifest = Manifest {
+                            epoch: job.epoch,
+                            process: process as u64,
+                            cluster_shape: cluster_shape.iter().map(|&w| w as u64).collect(),
+                            interval,
+                            chunks,
+                        };
+                        let mut bytes = Vec::new();
+                        manifest.encode(&mut bytes);
+                        write_atomic(
+                            &manifest_path(&dir, process, job.epoch),
+                            &bytes,
+                            &format!("p{process}"),
+                        )?;
+                        thread_stats.checkpoints_committed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // Channel closed: epochs still staged were interrupted by
+                // shutdown — leaving them manifest-less keeps them invisible
+                // to recovery, which is exactly the crash-atomic contract.
+                Ok(())
+            })?;
+        Ok(CheckpointWriter { tx: Some(tx), handle: Some(handle), stats })
+    }
+
+    /// A job sender for one worker's checkpoint hook.
+    pub fn sender(&self) -> Sender<WriteJob> {
+        self.tx.as_ref().expect("writer running").clone()
+    }
+
+    /// Writer counters.
+    pub fn stats(&self) -> Arc<WriterStats> {
+        self.stats.clone()
+    }
+
+    /// Closes the queue and waits for every staged write to land.
+    pub fn finish(mut self) -> io::Result<()> {
+        self.tx.take();
+        match self.handle.take() {
+            Some(handle) => handle
+                .join()
+                .map_err(|_| io::Error::other("checkpoint writer panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+struct Registered {
+    op: u32,
+    name: String,
+    cell: Rc<RefCell<dyn StateCell>>,
+}
+
+/// Per-worker checkpoint/restore state, shared with the dataflow build
+/// (operators register their cells through the scope) and the worker's
+/// step loop (which drives sealing and capture).
+pub struct RecoveryContext {
+    worker: usize,
+    /// Checkpoint boundary spacing in timestamp units; `0` disables
+    /// capture (restore-only context).
+    interval: u64,
+    next_boundary: Cell<u64>,
+    last_sealed: Cell<u64>,
+    cells: RefCell<Vec<Registered>>,
+    next_op: Cell<u32>,
+    writer: Option<Sender<WriteJob>>,
+    restore: Option<Arc<RestoreBundle>>,
+    checkpoints_taken: Cell<u64>,
+    /// Encode scratch reused across captures.
+    capture_buf: RefCell<Vec<u8>>,
+}
+
+impl RecoveryContext {
+    /// A context for `worker`. `writer` carries captures to the process's
+    /// [`CheckpointWriter`] (None disables capture); `restore` is the
+    /// bundle to restore registered cells from (None for a fresh start).
+    pub fn new(
+        worker: usize,
+        interval: u64,
+        writer: Option<Sender<WriteJob>>,
+        restore: Option<Arc<RestoreBundle>>,
+    ) -> Self {
+        let resume = restore.as_ref().map(|b| b.epoch).unwrap_or(0);
+        let first_boundary = if interval == 0 {
+            u64::MAX
+        } else {
+            // Boundaries are multiples of the interval strictly beyond the
+            // restored epoch (the restored epoch itself is already durable).
+            (resume / interval + 1) * interval
+        };
+        RecoveryContext {
+            worker,
+            interval,
+            next_boundary: Cell::new(first_boundary),
+            last_sealed: Cell::new(resume),
+            cells: RefCell::new(Vec::new()),
+            next_op: Cell::new(0),
+            writer,
+            restore,
+            checkpoints_taken: Cell::new(0),
+            capture_buf: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// True when updates must be logged for future seals (any capture
+    /// configured). Restore-only contexts skip logging entirely.
+    pub fn logging(&self) -> bool {
+        self.interval > 0 && self.writer.is_some()
+    }
+
+    /// The epoch inputs must resume from: the restored sealed epoch (every
+    /// epoch `<= resume_epoch()` is already reflected in restored state),
+    /// or 0 on a fresh start.
+    pub fn resume_epoch(&self) -> u64 {
+        self.restore.as_ref().map(|b| b.epoch).unwrap_or(0)
+    }
+
+    /// True iff this context restores from a checkpoint.
+    pub fn is_restoring(&self) -> bool {
+        self.restore.is_some()
+    }
+
+    /// Checkpoints this worker has captured so far.
+    pub fn checkpoints_taken(&self) -> u64 {
+        self.checkpoints_taken.get()
+    }
+
+    /// Registers a stateful cell under `name`.
+    ///
+    /// Operator indices are assigned in registration order; every worker
+    /// builds the identical graph in the identical order, so the index is
+    /// stable across workers, processes, runs, *and cluster shapes* — it is
+    /// the cross-run identity the chunks are keyed by.
+    ///
+    /// If this context restores from a checkpoint, the cell is restored
+    /// before this returns: every old worker's chunk for this operator is
+    /// decoded and handed to `merge(accumulator, old_worker, old_state)`,
+    /// which folds the subset of keys the new partitioning assigns to THIS
+    /// worker into the accumulator (for exchange-keyed state that is
+    /// `key % new_peers == new_worker`, ignoring `old_worker`; state
+    /// partitioned by value rather than key keeps only its own old
+    /// worker's chunk and cannot rescale). Returns `true` when state was
+    /// restored — operators that hold timestamp tokens use this to re-mint
+    /// them for restored windows.
+    pub fn register<S, U, R>(
+        &self,
+        name: &str,
+        cell: Rc<RefCell<EpochSealed<S, U, R>>>,
+        merge: impl Fn(&mut S, usize, S),
+    ) -> bool
+    where
+        S: Clone + Wire + 'static,
+        U: 'static,
+        R: 'static,
+    {
+        let op = self.next_op.get();
+        self.next_op.set(op + 1);
+        let mut restored = false;
+        if let Some(bundle) = &self.restore {
+            let mut inner = cell.borrow_mut();
+            for (old_worker, payload) in bundle.chunks_for(op) {
+                let mut reader = WireReader::new(payload);
+                let _sealed_epoch = u64::decode(&mut reader).expect("chunk epoch");
+                let old_state = S::decode(&mut reader).expect("chunk state");
+                merge(inner.restore_target(), *old_worker, old_state);
+                restored = true;
+            }
+            inner.finish_restore(bundle.epoch);
+        }
+        self.cells.borrow_mut().push(Registered { op, name: name.to_string(), cell });
+        restored
+    }
+
+    /// The worker's step hook: `bound` is the tracker's global frontier
+    /// minimum (`None` once the dataflow completed).
+    ///
+    /// Seals every cell up to `min(bound - 1, next boundary)` — an epoch
+    /// the frontier has passed can never receive another update, so the
+    /// fold is final — and captures a checkpoint whenever the bound moves
+    /// strictly past a boundary. Sealing runs continuously so pending
+    /// update logs hold only in-flight epochs; capture (the only
+    /// allocating step) runs only at boundaries.
+    pub fn on_frontier(&self, bound: Option<u64>) {
+        if self.interval == 0 || self.writer.is_none() {
+            return;
+        }
+        let Some(bound) = bound else {
+            // Dataflow complete: nothing outstanding, nothing left to
+            // checkpoint for (output is already delivered).
+            return;
+        };
+        let sealable = bound.saturating_sub(1);
+        self.seal_all(sealable.min(self.next_boundary.get()));
+        while bound > self.next_boundary.get() {
+            let boundary = self.next_boundary.get();
+            self.seal_all(boundary);
+            self.capture_at(boundary);
+            self.next_boundary.set(boundary + self.interval);
+            self.seal_all(sealable.min(self.next_boundary.get()));
+        }
+    }
+
+    fn seal_all(&self, epoch: u64) {
+        if epoch <= self.last_sealed.get() {
+            return;
+        }
+        for registered in self.cells.borrow().iter() {
+            registered.cell.borrow_mut().seal_to(epoch);
+        }
+        self.last_sealed.set(epoch);
+    }
+
+    fn capture_at(&self, epoch: u64) {
+        let Some(writer) = &self.writer else { return };
+        let cells = self.cells.borrow();
+        let mut chunks = Vec::with_capacity(cells.len());
+        let mut buf = self.capture_buf.borrow_mut();
+        for registered in cells.iter() {
+            buf.clear();
+            registered.cell.borrow().capture(&mut buf);
+            chunks.push((registered.op, registered.name.clone(), buf.clone()));
+        }
+        // A worker with no stateful cells still reports: the process
+        // manifest needs every local worker's job before it commits.
+        let _ = writer.send(WriteJob { epoch, worker: self.worker, chunks });
+        self.checkpoints_taken.set(self.checkpoints_taken.get() + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::manifest::load_latest;
+    use super::*;
+    use std::collections::HashMap as Map;
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ttd-coordinator-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn count_cell(logging: bool) -> Rc<RefCell<EpochSealed<Map<u64, u64>, u64, u64>>> {
+        fn bump(s: &mut Map<u64, u64>, w: &u64) -> u64 {
+            let c = s.entry(*w).or_insert(0);
+            *c += 1;
+            *c
+        }
+        Rc::new(RefCell::new(EpochSealed::new(Map::new(), bump, logging)))
+    }
+
+    /// End-to-end single-process: two workers checkpoint through one
+    /// writer, then a reshaped pair of contexts restores and re-partitions.
+    #[test]
+    fn checkpoint_then_restore_repartitions_keys() {
+        let dir = temp_dir("roundtrip");
+        let writer =
+            CheckpointWriter::spawn(dir.clone(), 0, 2, vec![2], 10).expect("spawn writer");
+        let mut cells = Vec::new();
+        let contexts: Vec<RecoveryContext> = (0..2)
+            .map(|w| RecoveryContext::new(w, 10, Some(writer.sender()), None))
+            .collect();
+        for (w, ctx) in contexts.iter().enumerate() {
+            let cell = count_cell(ctx.logging());
+            assert!(!ctx.register("counts", cell.clone(), |into, _w, old| {
+                into.extend(old);
+            }));
+            // Worker w owns keys with key % 2 == w under the old shape.
+            for key in 0..10u64 {
+                if key % 2 == w as u64 {
+                    cell.borrow_mut().update(3, key);
+                    cell.borrow_mut().update(7, key);
+                    cell.borrow_mut().update(12, key); // beyond the boundary
+                }
+            }
+            cells.push(cell);
+        }
+        // Frontier reaches 11: boundary 10 passed, checkpoint taken; the
+        // epoch-12 updates stay out of the image.
+        for ctx in &contexts {
+            ctx.on_frontier(Some(11));
+            assert_eq!(ctx.checkpoints_taken(), 1);
+        }
+        drop(contexts);
+        writer.finish().expect("writer finish");
+
+        let bundle = Arc::new(load_latest(&dir).unwrap().expect("complete checkpoint"));
+        assert_eq!(bundle.epoch, 10);
+        assert_eq!(bundle.old_shape, vec![2]);
+
+        // Restore into a DIFFERENT shape: three workers.
+        let new_peers = 3u64;
+        for new_w in 0..3usize {
+            let ctx = RecoveryContext::new(new_w, 0, None, Some(bundle.clone()));
+            assert_eq!(ctx.resume_epoch(), 10);
+            let cell = count_cell(ctx.logging());
+            let me = new_w as u64;
+            let restored = ctx.register("counts", cell.clone(), move |into, _w, old| {
+                into.extend(old.into_iter().filter(|(k, _)| k % new_peers == me));
+            });
+            assert!(restored);
+            let state = cell.borrow().state().clone();
+            for key in 0..10u64 {
+                if key % new_peers == me {
+                    assert_eq!(state.get(&key), Some(&2), "key {key} on new worker {new_w}");
+                } else {
+                    assert!(!state.contains_key(&key), "key {key} leaked to worker {new_w}");
+                }
+            }
+            assert_eq!(cell.borrow().sealed_epoch(), 10);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn boundaries_fire_once_each_and_jumps_catch_up() {
+        let dir = temp_dir("boundaries");
+        let writer = CheckpointWriter::spawn(dir.clone(), 0, 1, vec![1], 5).expect("writer");
+        let ctx = RecoveryContext::new(0, 5, Some(writer.sender()), None);
+        let cell = count_cell(true);
+        ctx.register("counts", cell.clone(), |into, _w, old| into.extend(old));
+        cell.borrow_mut().update(1, 1);
+        ctx.on_frontier(Some(3));
+        assert_eq!(ctx.checkpoints_taken(), 0, "boundary 5 not passed yet");
+        // Continuous sealing drained the pending log already.
+        assert_eq!(cell.borrow().pending_len(), 0);
+        ctx.on_frontier(Some(6));
+        assert_eq!(ctx.checkpoints_taken(), 1);
+        // A frontier jump across several boundaries captures each of them.
+        cell.borrow_mut().update(7, 2);
+        cell.borrow_mut().update(14, 3);
+        ctx.on_frontier(Some(21));
+        assert_eq!(ctx.checkpoints_taken(), 4, "boundaries 10, 15, and 20 each captured");
+        drop(ctx);
+        writer.finish().expect("finish");
+        let bundle = load_latest(&dir).unwrap().expect("checkpoint");
+        assert_eq!(bundle.epoch, 20);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incomplete_process_checkpoint_never_commits() {
+        let dir = temp_dir("incomplete");
+        // Two local workers, but only one ever reports.
+        let writer = CheckpointWriter::spawn(dir.clone(), 0, 2, vec![2], 5).expect("writer");
+        let ctx = RecoveryContext::new(0, 5, Some(writer.sender()), None);
+        let cell = count_cell(true);
+        ctx.register("counts", cell.clone(), |into, _w, old| into.extend(old));
+        cell.borrow_mut().update(2, 9);
+        ctx.on_frontier(Some(6));
+        drop(ctx);
+        writer.finish().expect("finish");
+        assert!(
+            load_latest(&dir).unwrap().is_none(),
+            "no manifest may exist for a half-reported epoch"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

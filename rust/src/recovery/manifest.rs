@@ -1,0 +1,291 @@
+//! Checkpoint directory layout, manifests, and restore-bundle loading.
+//!
+//! One checkpoint directory serves a whole cluster (every process writes
+//! into it — co-located processes or a shared filesystem):
+//!
+//! ```text
+//! <dir>/chunks/e<epoch>/w<worker>-op<op>.bin   per-(worker, operator) state
+//! <dir>/manifest-p<process>-e<epoch>.bin       per-process commit record
+//! ```
+//!
+//! Every file is written to a temporary sibling and atomically renamed into
+//! place; a process's manifest for epoch `E` is written only after all of
+//! its workers' chunks for `E` are durable. A checkpoint at `E` is
+//! **complete** iff a manifest from every process of the recorded cluster
+//! shape is present — a crash mid-checkpoint leaves an incomplete epoch
+//! that recovery skips, falling back to the newest complete one.
+
+use crate::net::{Wire, WireError, WireReader};
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// File-format magic: "TTCK".
+const MAGIC: u32 = 0x5454_434b;
+/// Format version.
+const VERSION: u32 = 1;
+
+/// One chunk entry in a manifest: `(worker, operator index, operator name)`.
+pub type ChunkEntry = (u64, u64, String);
+
+/// A per-process commit record for one checkpoint epoch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// The sealed epoch this checkpoint captured.
+    pub epoch: u64,
+    /// The writing process's index.
+    pub process: u64,
+    /// Workers per process across the whole cluster, in process order.
+    pub cluster_shape: Vec<u64>,
+    /// The configured checkpoint interval (timestamp units).
+    pub interval: u64,
+    /// The chunks this process committed for this epoch.
+    pub chunks: Vec<ChunkEntry>,
+}
+
+impl Wire for Manifest {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        MAGIC.encode(buf);
+        VERSION.encode(buf);
+        self.epoch.encode(buf);
+        self.process.encode(buf);
+        self.cluster_shape.encode(buf);
+        self.interval.encode(buf);
+        self.chunks.encode(buf);
+    }
+    fn decode(reader: &mut WireReader<'_>) -> Result<Self, WireError> {
+        if u32::decode(reader)? != MAGIC {
+            return Err(WireError::Malformed("checkpoint manifest magic"));
+        }
+        if u32::decode(reader)? != VERSION {
+            return Err(WireError::Malformed("checkpoint manifest version"));
+        }
+        Ok(Manifest {
+            epoch: u64::decode(reader)?,
+            process: u64::decode(reader)?,
+            cluster_shape: Vec::decode(reader)?,
+            interval: u64::decode(reader)?,
+            chunks: Vec::decode(reader)?,
+        })
+    }
+}
+
+/// The chunk file path for `(epoch, worker, op)` under `dir`.
+pub fn chunk_path(dir: &Path, epoch: u64, worker: usize, op: u32) -> PathBuf {
+    dir.join("chunks").join(format!("e{epoch}")).join(format!("w{worker}-op{op}.bin"))
+}
+
+/// The manifest file path for `(process, epoch)` under `dir`.
+pub fn manifest_path(dir: &Path, process: usize, epoch: u64) -> PathBuf {
+    dir.join(format!("manifest-p{process}-e{epoch}.bin"))
+}
+
+/// Writes `bytes` to `path` atomically: a temporary sibling (suffixed so
+/// concurrent processes never collide) followed by a rename.
+pub fn write_atomic(path: &Path, bytes: &[u8], tmp_tag: &str) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp-{tmp_tag}"));
+    let tmp = PathBuf::from(tmp);
+    fs::write(&tmp, bytes)?;
+    fs::rename(&tmp, path)
+}
+
+/// Everything recovery needs from the newest complete checkpoint.
+pub struct RestoreBundle {
+    /// The sealed epoch: operator state reflects exactly the inputs at
+    /// epochs `<= epoch`; inputs replay from the next epoch on.
+    pub epoch: u64,
+    /// The cluster shape that wrote the checkpoint (workers per process).
+    pub old_shape: Vec<usize>,
+    /// The interval the old run checkpointed at.
+    pub interval: u64,
+    /// Chunk payloads by operator index: every old worker's image of that
+    /// operator's sealed state. Restoring workers merge all of them,
+    /// keeping the keys the new partitioning assigns to them — this is how
+    /// a checkpoint restores into a *different* cluster shape.
+    chunks: HashMap<u32, Vec<(usize, Vec<u8>)>>,
+}
+
+impl RestoreBundle {
+    /// Total workers in the checkpointing cluster.
+    pub fn old_peers(&self) -> usize {
+        self.old_shape.iter().sum()
+    }
+
+    /// All old workers' chunk payloads for operator `op` (empty when the
+    /// operator had no state in the checkpoint).
+    pub fn chunks_for(&self, op: u32) -> &[(usize, Vec<u8>)] {
+        self.chunks.get(&op).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+/// Scans `dir` and loads the newest complete checkpoint.
+///
+/// Returns `Ok(None)` when the directory holds no complete checkpoint.
+/// Incomplete epochs (fewer manifests than the recorded shape has
+/// processes, or unreadable chunks) are skipped, newest first.
+pub fn load_latest(dir: &Path) -> io::Result<Option<RestoreBundle>> {
+    let mut by_epoch: HashMap<u64, Vec<Manifest>> = HashMap::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with("manifest-p") || !name.ends_with(".bin") {
+            continue;
+        }
+        let bytes = match fs::read(entry.path()) {
+            Ok(bytes) => bytes,
+            Err(_) => continue, // racing writer; treat as absent
+        };
+        let mut reader = WireReader::new(&bytes);
+        if let Ok(manifest) = Manifest::decode(&mut reader) {
+            by_epoch.entry(manifest.epoch).or_default().push(manifest);
+        }
+    }
+    let mut epochs: Vec<u64> = by_epoch.keys().copied().collect();
+    epochs.sort_unstable_by(|a, b| b.cmp(a));
+    'epochs: for epoch in epochs {
+        let manifests = &by_epoch[&epoch];
+        let shape = &manifests[0].cluster_shape;
+        let processes = shape.len();
+        // Complete = one manifest from every process, all agreeing on shape.
+        if manifests.len() != processes
+            || !manifests.iter().all(|m| &m.cluster_shape == shape)
+        {
+            continue;
+        }
+        let mut chunks: HashMap<u32, Vec<(usize, Vec<u8>)>> = HashMap::new();
+        for manifest in manifests {
+            for (worker, op, _name) in &manifest.chunks {
+                let path = chunk_path(dir, epoch, *worker as usize, *op as u32);
+                match fs::read(&path) {
+                    Ok(bytes) => chunks
+                        .entry(*op as u32)
+                        .or_default()
+                        .push((*worker as usize, bytes)),
+                    Err(_) => continue 'epochs, // torn checkpoint: try older
+                }
+            }
+        }
+        return Ok(Some(RestoreBundle {
+            epoch,
+            old_shape: shape.iter().map(|&w| w as usize).collect(),
+            interval: manifests[0].interval,
+            chunks,
+        }));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ttd-recovery-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn put_manifest(dir: &Path, process: usize, epoch: u64, shape: &[u64], chunks: Vec<ChunkEntry>) {
+        let manifest = Manifest {
+            epoch,
+            process: process as u64,
+            cluster_shape: shape.to_vec(),
+            interval: 5,
+            chunks,
+        };
+        let mut bytes = Vec::new();
+        manifest.encode(&mut bytes);
+        write_atomic(&manifest_path(dir, process, epoch), &bytes, "test").unwrap();
+    }
+
+    fn put_chunk(dir: &Path, epoch: u64, worker: usize, op: u32, payload: &[u8]) {
+        write_atomic(&chunk_path(dir, epoch, worker, op), payload, "test").unwrap();
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let manifest = Manifest {
+            epoch: 40,
+            process: 1,
+            cluster_shape: vec![2, 1, 1],
+            interval: 10,
+            chunks: vec![(2, 0, "word_count".into()), (2, 1, "input".into())],
+        };
+        let mut bytes = Vec::new();
+        manifest.encode(&mut bytes);
+        let mut reader = WireReader::new(&bytes);
+        assert_eq!(Manifest::decode(&mut reader).unwrap(), manifest);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut bytes = Vec::new();
+        Manifest {
+            epoch: 1,
+            process: 0,
+            cluster_shape: vec![1],
+            interval: 1,
+            chunks: vec![],
+        }
+        .encode(&mut bytes);
+        bytes[0] ^= 0xff;
+        let mut reader = WireReader::new(&bytes);
+        assert!(Manifest::decode(&mut reader).is_err());
+    }
+
+    #[test]
+    fn load_latest_picks_newest_complete_epoch() {
+        let dir = temp_dir("newest-complete");
+        // Epoch 10: complete across both processes.
+        put_chunk(&dir, 10, 0, 0, b"w0-old");
+        put_chunk(&dir, 10, 1, 0, b"w1-old");
+        put_manifest(&dir, 0, 10, &[1, 1], vec![(0, 0, "op".into())]);
+        put_manifest(&dir, 1, 10, &[1, 1], vec![(1, 0, "op".into())]);
+        // Epoch 20: process 1 crashed before committing its manifest.
+        put_chunk(&dir, 20, 0, 0, b"w0-new");
+        put_manifest(&dir, 0, 20, &[1, 1], vec![(0, 0, "op".into())]);
+        let bundle = load_latest(&dir).unwrap().expect("complete checkpoint");
+        assert_eq!(bundle.epoch, 10);
+        assert_eq!(bundle.old_shape, vec![1, 1]);
+        assert_eq!(bundle.old_peers(), 2);
+        let mut got: Vec<_> = bundle.chunks_for(0).to_vec();
+        got.sort();
+        assert_eq!(got, vec![(0, b"w0-old".to_vec()), (1, b"w1-old".to_vec())]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_chunk_falls_back_to_older_epoch() {
+        let dir = temp_dir("missing-chunk");
+        put_chunk(&dir, 5, 0, 0, b"ok");
+        put_manifest(&dir, 0, 5, &[1], vec![(0, 0, "op".into())]);
+        // Epoch 9's manifest lists a chunk that never landed.
+        put_manifest(&dir, 0, 9, &[1], vec![(0, 0, "op".into())]);
+        let bundle = load_latest(&dir).unwrap().expect("older checkpoint");
+        assert_eq!(bundle.epoch, 5);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_or_absent_dir_is_none() {
+        let dir = temp_dir("empty");
+        assert!(load_latest(&dir).unwrap().is_none());
+        fs::remove_dir_all(&dir).unwrap();
+        assert!(load_latest(&dir).unwrap().is_none());
+    }
+}

@@ -1,0 +1,434 @@
+//! Epoch-sealed operator state: the capture/restore cell behind
+//! frontier-aligned checkpoints.
+//!
+//! A stateful operator routes every mutation through an [`EpochSealed`]
+//! cell as an epoch-tagged update. The cell keeps TWO copies of the state:
+//!
+//! * `current` — every update applied immediately; this is what the
+//!   operator reads and emits from (identical behavior to the plain
+//!   closure-held state it replaces);
+//! * `sealed` — the state as of `sealed_epoch`: exactly the updates with
+//!   epoch `<= sealed_epoch`, applied in arrival order.
+//!
+//! Updates newer than the seal wait in `pending` (an arrival-order log).
+//! When the worker's view of the global frontier passes an epoch `t`, no
+//! in-flight message or token at `<= t` exists anywhere, so no further
+//! update tagged `<= t` can ever arrive — [`EpochSealed::seal_to`] then
+//! folds the eligible prefix of `pending` into `sealed`, which becomes the
+//! immutable checkpoint image for `t`. Capture is just "encode `sealed`".
+//!
+//! Replaying the log in *arrival order restricted to epochs `<= t`* is
+//! consistent because an operator's updates are either commutative per key
+//! (counts, sums, maxima) or epoch-ordered by the frontier itself (a
+//! window's `Close(w)` is only issued once the frontier passed `w`, hence
+//! after every `Add` into `w` was received). See `recovery/mod.rs` for the
+//! full argument.
+//!
+//! The steady-state cost is bounded: `pending` only holds updates for
+//! epochs still in flight (the worker seals continuously, every step, up
+//! to `min(frontier - 1, next checkpoint boundary)`), and both the log and
+//! the drained per-epoch scratch keep their capacity across seals — after
+//! warm-up the seal path performs no allocation, which is how the
+//! `alloc_steady_state` pins keep holding with checkpointing enabled.
+
+use crate::net::{Wire, WireError, WireReader};
+
+/// Operator state with an epoch-sealed shadow copy for checkpointing.
+///
+/// `S` is the state, `U` one update, `R` what applying an update returns to
+/// the operator (e.g. the new count a rolling counter emits; `()` if
+/// nothing). The apply function is a plain `fn` pointer: it must be
+/// deterministic and capture-free, because seal-time replay runs it again
+/// on the sealed copy.
+pub struct EpochSealed<S, U, R = ()> {
+    sealed: S,
+    current: S,
+    /// Arrival-order update log for epochs beyond `sealed_epoch`.
+    pending: Vec<(u64, U)>,
+    sealed_epoch: u64,
+    /// When false (checkpointing disabled) updates skip the log entirely —
+    /// the cell is then a thin wrapper around `current`.
+    logging: bool,
+    apply: fn(&mut S, &U) -> R,
+}
+
+impl<S, U, R> EpochSealed<S, U, R>
+where
+    S: Clone,
+{
+    /// A cell whose sealed and current states both start at `initial`.
+    pub fn new(initial: S, apply: fn(&mut S, &U) -> R, logging: bool) -> Self {
+        EpochSealed {
+            sealed: initial.clone(),
+            current: initial,
+            pending: Vec::new(),
+            sealed_epoch: 0,
+            logging,
+            apply,
+        }
+    }
+
+    /// Applies `update` (tagged with the epoch of the message that caused
+    /// it) to the live state, logging it for the next seal, and returns
+    /// whatever the apply function produced.
+    #[inline]
+    pub fn update(&mut self, epoch: u64, update: U) -> R {
+        let out = (self.apply)(&mut self.current, &update);
+        if self.logging {
+            debug_assert!(
+                epoch > self.sealed_epoch || self.sealed_epoch == 0,
+                "update at epoch {epoch} arrived after seal at {}",
+                self.sealed_epoch
+            );
+            self.pending.push((epoch, update));
+        }
+        out
+    }
+
+    /// The live state (all updates applied). Operators read and emit from
+    /// this; they must never mutate state except through [`update`].
+    ///
+    /// [`update`]: EpochSealed::update
+    #[inline]
+    pub fn state(&self) -> &S {
+        &self.current
+    }
+
+    /// Folds every pending update with epoch `<= epoch` into the sealed
+    /// state, in arrival order. Sound only once the frontier has passed
+    /// `epoch` (the caller — the worker's checkpoint hook — guarantees no
+    /// further update `<= epoch` can arrive). Keeps the log's capacity.
+    pub fn seal_to(&mut self, epoch: u64) {
+        if epoch <= self.sealed_epoch || !self.logging {
+            return;
+        }
+        let sealed = &mut self.sealed;
+        let apply = self.apply;
+        // `retain_mut` visits in order and keeps capacity: the eligible
+        // prefix (by tag, not position) folds into `sealed`, the rest stay
+        // in arrival order.
+        self.pending.retain(|(e, u)| {
+            if *e <= epoch {
+                let _ = apply(sealed, u);
+                false
+            } else {
+                true
+            }
+        });
+        self.sealed_epoch = epoch;
+    }
+
+    /// The epoch the sealed state reflects.
+    pub fn sealed_epoch(&self) -> u64 {
+        self.sealed_epoch
+    }
+
+    /// The sealed state (immutable checkpoint image as of
+    /// [`sealed_epoch`](EpochSealed::sealed_epoch)).
+    pub fn sealed(&self) -> &S {
+        &self.sealed
+    }
+
+    /// Number of updates waiting for a seal (diagnostics/tests).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Restore accumulator: merge restored chunks (one per old worker)
+    /// into this, then call [`finish_restore`](EpochSealed::finish_restore).
+    pub(crate) fn restore_target(&mut self) -> &mut S {
+        &mut self.sealed
+    }
+
+    /// Completes a restore: the accumulated sealed state becomes the live
+    /// state and the cell behaves as if it had just sealed at `epoch`.
+    pub(crate) fn finish_restore(&mut self, epoch: u64) {
+        self.current = self.sealed.clone();
+        self.pending.clear();
+        self.sealed_epoch = epoch;
+    }
+}
+
+impl<S, U, R> EpochSealed<S, U, R>
+where
+    S: Clone + Wire,
+{
+    /// Encodes the sealed state (the checkpoint chunk payload).
+    pub fn capture(&self, out: &mut Vec<u8>) {
+        self.sealed_epoch.encode(out);
+        self.sealed.encode(out);
+    }
+
+    /// Decodes a chunk payload captured by [`capture`](EpochSealed::capture)
+    /// into `(sealed_epoch, state)`.
+    pub fn decode_chunk(bytes: &[u8]) -> Result<(u64, S), WireError> {
+        let mut reader = WireReader::new(bytes);
+        let epoch = u64::decode(&mut reader)?;
+        let state = S::decode(&mut reader)?;
+        Ok((epoch, state))
+    }
+}
+
+/// The type-erased face of an [`EpochSealed`] cell, held by the worker's
+/// checkpoint coordinator.
+pub trait StateCell {
+    /// Folds pending updates at `<= epoch` into the sealed state.
+    fn seal_to(&mut self, epoch: u64);
+    /// Encodes the sealed state into `out`.
+    fn capture(&self, out: &mut Vec<u8>);
+}
+
+impl<S: Clone + Wire, U, R> StateCell for EpochSealed<S, U, R> {
+    fn seal_to(&mut self, epoch: u64) {
+        EpochSealed::seal_to(self, epoch);
+    }
+    fn capture(&self, out: &mut Vec<u8>) {
+        EpochSealed::capture(self, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn counting_cell(logging: bool) -> EpochSealed<HashMap<u64, u64>, u64, u64> {
+        fn bump(s: &mut HashMap<u64, u64>, w: &u64) -> u64 {
+            let c = s.entry(*w).or_insert(0);
+            *c += 1;
+            *c
+        }
+        EpochSealed::new(HashMap::new(), bump, logging)
+    }
+
+    #[test]
+    fn current_tracks_all_updates_sealed_lags() {
+        let mut cell = counting_cell(true);
+        assert_eq!(cell.update(1, 7), 1);
+        assert_eq!(cell.update(1, 7), 2);
+        assert_eq!(cell.update(2, 9), 1);
+        assert_eq!(cell.state()[&7], 2);
+        assert!(cell.sealed().is_empty());
+        cell.seal_to(1);
+        assert_eq!(cell.sealed()[&7], 2);
+        assert!(cell.sealed().get(&9).is_none(), "epoch-2 update must stay pending");
+        assert_eq!(cell.pending_len(), 1);
+        cell.seal_to(2);
+        assert_eq!(cell.sealed()[&9], 1);
+        assert_eq!(cell.pending_len(), 0);
+        assert_eq!(cell.sealed(), cell.state());
+    }
+
+    #[test]
+    fn seal_is_idempotent_and_monotone() {
+        let mut cell = counting_cell(true);
+        cell.update(3, 1);
+        cell.seal_to(5);
+        cell.seal_to(5);
+        cell.seal_to(2); // going backwards is a no-op
+        assert_eq!(cell.sealed()[&1], 1);
+        assert_eq!(cell.sealed_epoch(), 5);
+    }
+
+    #[test]
+    fn out_of_order_epochs_fold_by_tag_not_position() {
+        // Updates from different senders interleave across epochs; the
+        // seal folds by tag, preserving arrival order within the fold.
+        let mut cell = counting_cell(true);
+        cell.update(2, 1);
+        cell.update(1, 1);
+        cell.update(2, 2);
+        cell.seal_to(1);
+        assert_eq!(cell.sealed()[&1], 1);
+        assert_eq!(cell.pending_len(), 2);
+        cell.seal_to(2);
+        assert_eq!(cell.sealed()[&1], 2);
+        assert_eq!(cell.sealed()[&2], 1);
+    }
+
+    #[test]
+    fn disabled_logging_keeps_no_pending() {
+        let mut cell = counting_cell(false);
+        for e in 1..100u64 {
+            cell.update(e, e % 3);
+        }
+        assert_eq!(cell.pending_len(), 0);
+        cell.seal_to(50);
+        assert!(cell.sealed().is_empty(), "no log, nothing to seal");
+        assert_eq!(cell.state().len(), 3);
+    }
+
+    #[test]
+    fn capture_decode_round_trip() {
+        let mut cell = counting_cell(true);
+        for (e, w) in [(1u64, 4u64), (1, 4), (2, 5), (3, 4)] {
+            cell.update(e, w);
+        }
+        cell.seal_to(2);
+        let mut bytes = Vec::new();
+        cell.capture(&mut bytes);
+        let (epoch, state) =
+            EpochSealed::<HashMap<u64, u64>, u64, u64>::decode_chunk(&bytes).unwrap();
+        assert_eq!(epoch, 2);
+        assert_eq!(state, cell.sealed().clone());
+        assert_eq!(state[&4], 2, "epoch-3 update excluded from the epoch-2 image");
+    }
+
+    #[test]
+    fn restore_resumes_cleanly() {
+        let mut cell = counting_cell(true);
+        cell.restore_target().insert(7, 41);
+        cell.finish_restore(10);
+        assert_eq!(cell.sealed_epoch(), 10);
+        assert_eq!(cell.state()[&7], 41);
+        // Post-restore updates behave normally.
+        assert_eq!(cell.update(11, 7), 42);
+        cell.seal_to(11);
+        assert_eq!(cell.sealed()[&7], 42);
+    }
+
+    #[test]
+    fn seal_keeps_capacity() {
+        let mut cell = counting_cell(true);
+        for round in 0..32u64 {
+            for i in 0..64u64 {
+                cell.update(round + 1, i % 7);
+            }
+            cell.seal_to(round + 1);
+            assert_eq!(cell.pending_len(), 0);
+        }
+        assert!(cell.pending.capacity() >= 64, "log capacity must survive seals");
+    }
+
+    // ---- seeded property tests: capture → encode → decode → restore ----
+
+    use crate::testing::{property, Rng};
+
+    /// Drives `cell` with a random batch of updates across `epochs` epochs
+    /// and seals everything. `batch` may be zero (the empty-state case).
+    fn random_fill(cell: &mut EpochSealed<HashMap<u64, u64>, u64, u64>, rng: &mut Rng, batch: u64) {
+        let epochs = rng.range(1, 8);
+        for i in 0..batch {
+            cell.update(1 + i % epochs, rng.below(64));
+        }
+        cell.seal_to(epochs);
+    }
+
+    #[test]
+    fn capture_restore_is_identity_for_counts() {
+        property("capture_restore_is_identity_for_counts", 64, |case, rng| {
+            // Batch sizes sweep from empty through well past any internal
+            // buffer boundary (0, 1, and up to several thousand updates).
+            let batch = [0, 1, rng.range(2, 64), rng.range(64, 4096)][(case % 4) as usize];
+            let mut cell = counting_cell(true);
+            random_fill(&mut cell, rng, batch);
+            let mut bytes = Vec::new();
+            cell.capture(&mut bytes);
+            let (epoch, state) =
+                EpochSealed::<HashMap<u64, u64>, u64, u64>::decode_chunk(&bytes)
+                    .expect("well-formed chunk must decode");
+            assert_eq!(epoch, cell.sealed_epoch());
+            assert_eq!(&state, cell.sealed());
+
+            // Restoring the decoded image yields a cell indistinguishable
+            // from the original: same live state, same future behavior.
+            let mut restored = counting_cell(true);
+            restored.restore_target().extend(state);
+            restored.finish_restore(epoch);
+            assert_eq!(restored.state(), cell.sealed());
+            let next = epoch + 1;
+            let word = rng.below(64);
+            let expect = cell.sealed().get(&word).copied().unwrap_or(0) + 1;
+            assert_eq!(restored.update(next, word), expect);
+        });
+    }
+
+    #[test]
+    fn merged_restore_equals_merged_state() {
+        // Rescaling merges one chunk per *old* worker into a single cell;
+        // the merged counts must equal what a lone worker that saw every
+        // update would hold.
+        property("merged_restore_equals_merged_state", 32, |_case, rng| {
+            let old_workers = rng.range(1, 5);
+            let mut oracle = counting_cell(true);
+            let mut chunks = Vec::new();
+            for w in 0..old_workers {
+                let mut cell = counting_cell(true);
+                for _ in 0..rng.below(256) {
+                    // Each old worker owned a disjoint share of the words.
+                    let word = rng.below(64) * old_workers + w;
+                    cell.update(1, word);
+                    oracle.update(1, word);
+                }
+                cell.seal_to(1);
+                let mut bytes = Vec::new();
+                cell.capture(&mut bytes);
+                chunks.push(bytes);
+            }
+            oracle.seal_to(1);
+            let mut merged = counting_cell(true);
+            for bytes in &chunks {
+                let (epoch, state) =
+                    EpochSealed::<HashMap<u64, u64>, u64, u64>::decode_chunk(bytes).unwrap();
+                assert_eq!(epoch, 1);
+                merged.restore_target().extend(state);
+            }
+            merged.finish_restore(1);
+            assert_eq!(merged.state(), oracle.sealed());
+        });
+    }
+
+    #[test]
+    fn capture_restore_is_identity_for_windows() {
+        use crate::operators::window::WindowData;
+        use std::collections::BTreeMap;
+        type Windows = BTreeMap<u64, WindowData>;
+        fn add(s: &mut Windows, u: &(u64, u64)) {
+            let data = s.entry(u.0).or_insert(WindowData { sum: 0, count: 0 });
+            data.sum += u.1;
+            data.count += 1;
+        }
+        property("capture_restore_is_identity_for_windows", 64, |case, rng| {
+            let mut cell: EpochSealed<Windows, (u64, u64), ()> =
+                EpochSealed::new(BTreeMap::new(), add, true);
+            let batch = [0, 1, rng.range(2, 512)][(case % 3) as usize];
+            for _ in 0..batch {
+                cell.update(1, (rng.below(16), rng.below(1000)));
+            }
+            cell.seal_to(1);
+            let mut bytes = Vec::new();
+            cell.capture(&mut bytes);
+            let (epoch, state) =
+                EpochSealed::<Windows, (u64, u64), ()>::decode_chunk(&bytes).unwrap();
+            assert_eq!(epoch, 1);
+            assert_eq!(&state, cell.sealed());
+            let mut restored: EpochSealed<Windows, (u64, u64), ()> =
+                EpochSealed::new(BTreeMap::new(), add, true);
+            *restored.restore_target() = state;
+            restored.finish_restore(epoch);
+            assert_eq!(restored.state(), cell.sealed());
+        });
+    }
+
+    #[test]
+    fn truncated_chunks_error_and_never_panic() {
+        // The torn-read guarantee: a crash mid-write leaves a prefix of a
+        // chunk on disk; every strict prefix must decode to a typed error
+        // (the loader then falls back to an older epoch), never panic and
+        // never yield a state.
+        property("truncated_chunks_error_and_never_panic", 16, |_case, rng| {
+            let mut cell = counting_cell(true);
+            random_fill(&mut cell, rng, rng.range(1, 128));
+            let mut bytes = Vec::new();
+            cell.capture(&mut bytes);
+            for cut in 0..bytes.len() {
+                assert!(
+                    EpochSealed::<HashMap<u64, u64>, u64, u64>::decode_chunk(&bytes[..cut])
+                        .is_err(),
+                    "strict prefix of length {cut}/{} decoded successfully",
+                    bytes.len()
+                );
+            }
+        });
+    }
+}

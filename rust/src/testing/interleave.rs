@@ -32,7 +32,7 @@
 //! mailbox.
 
 use crate::net::fabric::{NetFabric, NetLink};
-use crate::net::transport::{chaos, ChaosConfig};
+use crate::net::transport::{chaos, ChaosConfig, NetError};
 use crate::progress::exchange::Progcaster;
 use crate::progress::location::Location;
 use crate::progress::reachability::{GraphTopology, NodeTopology};
@@ -635,6 +635,146 @@ fn prefix_safety_under_cluster_fan_out() {
             .collect();
         for handle in handles {
             handle.join().expect("net shutdown");
+        }
+    });
+}
+
+/// Seeded process-kill schedules over the cluster sim: at a random point
+/// mid-schedule one process's net fabric is severed — outbound queues die
+/// with no drain and no goodbye frames, which is exactly what survivors
+/// of a SIGKILL observe through the chaos transport (the torn writes and
+/// delayed frames keep running right up to the cut). Survivors must
+/// (a) surface the death as the typed [`NetError::PeerLost`] condition
+/// rather than a hang or a panic, (b) keep every per-delivery
+/// conservatism invariant through and after the death — a dead peer's
+/// undelivered tokens hold frontiers *down*, never let them advance —
+/// and (c) complete an orderly shutdown afterwards without waiting out
+/// the recv linger on the dead peer's stream. (Restart *with recovery*
+/// is pinned end-to-end by the checkpoint tests in
+/// `tests/cluster_integration.rs`; this test owns the kill half.)
+#[test]
+fn process_kill_is_typed_and_stays_conservative() {
+    property("process_kill_is_typed_and_stays_conservative", 6, |case, rng| {
+        let shape: &[usize] = match case % 3 {
+            0 => &[1, 2],
+            1 => &[2, 2],
+            _ => &[2, 1, 1],
+        };
+        let (mut sim, nets) = Sim::new_cluster(shape, rng.next_u64(), false);
+        let processes = shape.len();
+        let peers = sim.workers.len();
+        let victim = rng.below(processes as u64) as usize;
+        let victim_base: usize = shape[..victim].iter().sum();
+        let victim_workers = victim_base..victim_base + shape[victim];
+        let kill_at = rng.range(20, 60);
+        let rounds = rng.range(80, 160);
+
+        let mut killed = false;
+        for round in 0..rounds {
+            if round == kill_at {
+                nets[victim].sever();
+                killed = true;
+            }
+            let w = rng.below(peers as u64) as usize;
+            // A dead process takes no further actions; survivors carry on
+            // under the same adversarial schedule.
+            if killed && victim_workers.contains(&w) {
+                continue;
+            }
+            match rng.below(10) {
+                0..=3 => {
+                    let which = rng.below(2) as usize;
+                    let delta = rng.range(1, 6);
+                    sim.downgrade(w, which, delta);
+                }
+                4..=5 => {
+                    let which = rng.below(2) as usize;
+                    // Producing for a dead peer stays legal: the message
+                    // is simply never consumed, and its pointstamp holds
+                    // frontiers conservatively.
+                    let dest = rng.below(peers as u64) as usize;
+                    sim.produce(w, which, dest);
+                }
+                6 => {
+                    if !sim.workers[w].inbox.is_empty() {
+                        let slot = rng.below(sim.workers[w].inbox.len() as u64) as usize;
+                        sim.consume(w, slot);
+                    }
+                }
+                7 => sim.flush(w),
+                8 => {
+                    let s = rng.below(peers as u64) as usize;
+                    sim.deliver(w, s);
+                }
+                _ => {
+                    let s = rng.below(peers as u64) as usize;
+                    sim.drain_data(w, s);
+                }
+            }
+        }
+
+        // Every survivor must type the loss (the reactor notices the
+        // abrupt end-of-stream asynchronously, so poll under a deadline).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        for (p, net) in nets.iter().enumerate() {
+            if p == victim {
+                continue;
+            }
+            while !net.lost_peers().contains(&victim) {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "process {p} never observed the death of process {victim}"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            assert!(
+                matches!(net.peer_fault(), Some(NetError::PeerLost { process }) if process == victim),
+                "loss must surface as the typed PeerLost condition"
+            );
+        }
+
+        // Post-mortem deliveries: drain what survivors already hold; every
+        // delivery re-checks conservatism against the (incomplete) truth.
+        loop {
+            let mut any = false;
+            for r in 0..peers {
+                if victim_workers.contains(&r) {
+                    continue;
+                }
+                for s in 0..peers {
+                    while sim.deliver(r, s) {
+                        any = true;
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        // The dead process's tokens are still outstanding: no surviving
+        // observer may consider the dataflow complete.
+        for (r, observer) in sim.observers.iter().enumerate() {
+            if victim_workers.contains(&r) {
+                continue;
+            }
+            assert!(
+                !observer.is_complete(),
+                "observer {r} completed past a dead peer's outstanding tokens"
+            );
+        }
+
+        // Survivors' orderly shutdown must not hang on the dead stream.
+        let handles: Vec<_> = nets
+            .iter()
+            .enumerate()
+            .filter(|(p, _)| *p != victim)
+            .map(|(_, net)| {
+                let net = net.clone();
+                std::thread::spawn(move || net.shutdown())
+            })
+            .collect();
+        for handle in handles {
+            handle.join().expect("survivor shutdown");
         }
     });
 }

@@ -314,6 +314,14 @@ impl Fabric {
         self.net.as_ref()
     }
 
+    /// Peer processes observed to die abruptly (stream end without the
+    /// orderly goodbye), in index order. Always empty for a single
+    /// process. Workers poll this to quiesce instead of waiting forever
+    /// on progress updates a dead peer will never send.
+    pub fn lost_peers(&self) -> Vec<usize> {
+        self.net.as_ref().map(|n| n.lost_peers()).unwrap_or_default()
+    }
+
     /// Slots per ring this fabric hands out.
     pub fn ring_capacity(&self) -> usize {
         self.ring_capacity

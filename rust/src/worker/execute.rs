@@ -43,9 +43,13 @@ use crate::net::shm::{
 use crate::net::transport::{tcp_pair, NetError};
 use crate::net::tune::TuneShared;
 use crate::progress::timestamp::Timestamp;
+use crate::recovery::{CheckpointWriter, RecoveryContext, RestoreBundle, WriteJob};
+use std::any::TypeId;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -72,6 +76,96 @@ pub fn pin_to_core(index: usize) {
 #[cfg(not(feature = "affinity"))]
 pub fn pin_to_core(_index: usize) {}
 
+// ---------------------------------------------------------------------------
+// Checkpoint / recovery plumbing.
+// ---------------------------------------------------------------------------
+
+/// The `Send + Clone` slice of a process's checkpoint configuration that
+/// crosses into every worker thread; each thread builds its own
+/// (deliberately non-`Send`, `Rc`-shared) [`RecoveryContext`] from it.
+#[derive(Clone)]
+struct RecoverySetup {
+    /// Checkpoint boundary spacing in epochs (0 = restore-only).
+    interval: u64,
+    /// Job channel into the process's [`CheckpointWriter`].
+    writer: Option<Sender<WriteJob>>,
+    /// The checkpoint every worker restores from (None = fresh start).
+    restore: Option<Arc<RestoreBundle>>,
+}
+
+/// Builds the per-process checkpoint machinery `config` asks for: loads
+/// the newest complete checkpoint when `config.recover` is set, and spawns
+/// the background [`CheckpointWriter`] when a capture interval is
+/// configured. Returns `(None, None)` when checkpointing is disabled.
+///
+/// Checkpoint alignment runs on the `u64` epoch timeline, so a
+/// checkpoint-configured launch of a dataflow over any other timestamp
+/// type is a misconfiguration and panics here, at launch, rather than
+/// silently never capturing.
+fn recovery_plumbing<T: Timestamp>(
+    config: &Config,
+    process: usize,
+    local_workers: usize,
+    shape: &[usize],
+) -> (Option<CheckpointWriter>, Option<RecoverySetup>) {
+    let Some(dir) = config.checkpoint_dir.as_deref() else {
+        return (None, None);
+    };
+    if config.checkpoint_interval == 0 && !config.recover {
+        return (None, None);
+    }
+    assert!(
+        TypeId::of::<T>() == TypeId::of::<u64>(),
+        "checkpointing requires u64 timestamps (checkpoint boundaries are epochs)"
+    );
+    let restore = if config.recover {
+        let bundle = crate::recovery::load_latest(Path::new(dir))
+            .unwrap_or_else(|e| panic!("cannot read checkpoint directory {dir}: {e}"))
+            .unwrap_or_else(|| panic!("--recover: no complete checkpoint in {dir}"));
+        Some(Arc::new(bundle))
+    } else {
+        None
+    };
+    let writer = if config.checkpoint_interval > 0 {
+        Some(
+            CheckpointWriter::spawn(
+                PathBuf::from(dir),
+                process,
+                local_workers,
+                shape.to_vec(),
+                config.checkpoint_interval,
+            )
+            .unwrap_or_else(|e| panic!("cannot start checkpoint writer in {dir}: {e}")),
+        )
+    } else {
+        None
+    };
+    let setup = RecoverySetup {
+        interval: config.checkpoint_interval,
+        writer: writer.as_ref().map(CheckpointWriter::sender),
+        restore,
+    };
+    (writer, Some(setup))
+}
+
+/// Installs a worker's [`RecoveryContext`] (built thread-locally from the
+/// `Send` setup slice) before the dataflow is constructed, so operator
+/// registration and input rewind both see it.
+fn install_recovery<T: Timestamp>(
+    worker: &mut Worker<T>,
+    index: usize,
+    setup: &Option<RecoverySetup>,
+) {
+    if let Some(setup) = setup {
+        worker.set_recovery(Rc::new(RecoveryContext::new(
+            index,
+            setup.interval,
+            setup.writer.clone(),
+            setup.restore.clone(),
+        )));
+    }
+}
+
 /// Runs `build` on `config.workers` worker threads; each invocation builds
 /// the (identical) dataflow and drives its worker. Returns each worker's
 /// result, in worker-index order.
@@ -94,6 +188,7 @@ where
 {
     let peers = config.workers.max(1);
     let fabric = Fabric::with_ring_capacity(peers, config.ring_capacity);
+    let (writer, recovery) = recovery_plumbing::<T>(&config, 0, peers, &[peers]);
     let build = Arc::new(build);
     let pin = config.pin_workers;
     let progress_flush = config.progress_flush;
@@ -103,6 +198,7 @@ where
     for index in 0..peers {
         let fabric = fabric.clone();
         let build = build.clone();
+        let recovery = recovery.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("worker-{index}"))
@@ -113,6 +209,7 @@ where
                     let mut worker = Worker::new(index, peers, fabric);
                     worker.set_progress_flush(progress_flush);
                     worker.set_send_batch(send_batch);
+                    install_recovery(&mut worker, index, &recovery);
                     build(&mut worker)
                 })
                 .expect("spawn worker thread"),
@@ -122,6 +219,9 @@ where
         .into_iter()
         .map(|h| h.join().expect("worker thread panicked"))
         .collect();
+    if let Some(writer) = writer {
+        writer.finish().expect("checkpoint writer failed");
+    }
     (results, fabric)
 }
 
@@ -382,19 +482,39 @@ fn read_welcome(
     Ok(())
 }
 
-/// Connects to `address` with retry (the peer may not be listening yet).
-fn connect_with_retry(address: &str) -> Result<TcpStream, NetError> {
+/// First connect-retry backoff step; doubles per attempt up to
+/// [`CONNECT_RETRY_MAX_BACKOFF`].
+const CONNECT_RETRY_BASE: Duration = Duration::from_millis(10);
+
+/// Backoff ceiling: retries settle to one attempt per second, so a slow
+/// peer costs at most a second of extra startup latency while a dead one
+/// does not get hammered for the whole [`CONNECT_RETRY_FOR`] window.
+const CONNECT_RETRY_MAX_BACKOFF: Duration = Duration::from_secs(1);
+
+/// Connects to process `peer` at `address`, retrying with exponential
+/// backoff (the peer may not be listening yet; start order is free) under
+/// an overall [`CONNECT_RETRY_FOR`] deadline. A peer that never appears
+/// fails the bootstrap with an error naming *which* process was
+/// unreachable and the last OS error — the difference between "fix
+/// process 2's host" and rechecking every address in the list.
+fn connect_with_retry(peer: usize, address: &str) -> Result<TcpStream, NetError> {
     let deadline = Instant::now() + CONNECT_RETRY_FOR;
+    let mut backoff = CONNECT_RETRY_BASE;
     loop {
         match TcpStream::connect(address) {
             Ok(stream) => return Ok(stream),
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     return Err(NetError::Protocol(format!(
-                        "could not reach peer at {address} within {CONNECT_RETRY_FOR:?}: {e}"
+                        "bootstrap: could not reach process {peer} at {address} \
+                         within {CONNECT_RETRY_FOR:?}: {e}"
                     )));
                 }
-                std::thread::sleep(Duration::from_millis(50));
+                // Never sleep past the deadline: the final attempt should
+                // land at the deadline, not a full backoff beyond it.
+                std::thread::sleep(backoff.min(deadline - now));
+                backoff = (backoff * 2).min(CONNECT_RETRY_MAX_BACKOFF);
             }
         }
     }
@@ -555,7 +675,7 @@ fn bootstrap(
     // Connect to every lower-indexed process, in order — 0 first, so its
     // WELCOME configures this process before anything else happens.
     for peer in 0..me {
-        let mut stream = connect_with_retry(&config.addresses[peer])?;
+        let mut stream = connect_with_retry(peer, &config.addresses[peer])?;
         // Bound the reply read: a wedged peer (or an unrelated service on
         // the address) must fail the bootstrap, not hang it.
         let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
@@ -669,6 +789,7 @@ where
     let fabric = Fabric::cluster(&shape, process, config.ring_capacity, net.clone());
     let peers = fabric.peers();
     let base = fabric.local_base();
+    let (writer, recovery) = recovery_plumbing::<T>(&config, process, local_workers, &shape);
     let build = Arc::new(build);
     let pin = config.pin_workers;
     let progress_flush = config.progress_flush;
@@ -679,6 +800,7 @@ where
         let fabric = fabric.clone();
         let build = build.clone();
         let tune = tune.clone();
+        let recovery = recovery.clone();
         let index = base + local;
         handles.push(
             std::thread::Builder::new()
@@ -691,6 +813,7 @@ where
                     worker.set_progress_flush(progress_flush);
                     worker.set_send_batch(send_batch);
                     worker.set_tune(tune);
+                    install_recovery(&mut worker, index, &recovery);
                     build(&mut worker)
                 })
                 .expect("spawn worker thread"),
@@ -700,6 +823,11 @@ where
         .into_iter()
         .map(|h| h.join().expect("worker thread panicked"))
         .collect();
+    // Every worker's final captures are queued before its thread exits, so
+    // joining the writer here makes the run's last checkpoint durable.
+    if let Some(writer) = writer {
+        writer.finish().expect("checkpoint writer failed");
+    }
     // Every local worker has completed (and flushed, via `Worker::drop`):
     // drain the outbound queues to the wire and close the links cleanly.
     net.shutdown();

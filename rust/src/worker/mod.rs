@@ -113,6 +113,13 @@ pub struct Worker<T: Timestamp> {
     tune_generation: u64,
     /// This worker's fabric telemetry counters.
     stats: Arc<WorkerStats>,
+    /// Checkpoint/restore context (u64-timestamped dataflows only): the
+    /// step loop drives its continuous sealing with the tracker's global
+    /// frontier bound. `None` (the default) costs the step loop nothing.
+    recovery: Option<Rc<crate::recovery::RecoveryContext>>,
+    /// Set by [`Worker::poison`]: simulates a process crash by skipping
+    /// the orderly final flush on drop.
+    poisoned: bool,
 }
 
 impl<T: Timestamp> Worker<T> {
@@ -149,6 +156,8 @@ impl<T: Timestamp> Worker<T> {
             tune: None,
             tune_generation: 0,
             stats,
+            recovery: None,
+            poisoned: false,
         }
     }
 
@@ -226,6 +235,78 @@ impl<T: Timestamp> Worker<T> {
     /// transport). Exposed so cluster tests can pin the thread budget.
     pub fn net_io_threads(&self) -> usize {
         self.fabric.net().map_or(0, |net| net.io_threads())
+    }
+
+    /// Peer processes observed to die abruptly mid-run (always empty for
+    /// a single process). A nonempty answer means frontiers can no longer
+    /// advance past epochs the dead peer's workers were feeding: drivers
+    /// should [`Worker::poison`] this worker, report, and restart the
+    /// cluster from the last complete checkpoint (`ttd --recover`)
+    /// instead of stepping forever.
+    pub fn lost_peers(&self) -> Vec<usize> {
+        self.fabric.lost_peers()
+    }
+
+    /// [`Worker::step_while`], but bailing out — after poisoning this
+    /// worker — if a peer process dies first. The poison matters: a
+    /// survivor's final flush would otherwise block on rings nobody
+    /// drains. Returns `Ok(())` when `active` went false, or the typed
+    /// loss condition.
+    pub fn step_while_surviving(
+        &mut self,
+        mut active: impl FnMut() -> bool,
+    ) -> Result<(), crate::net::NetError> {
+        self.finalize();
+        while active() {
+            if let Some(&process) = self.lost_peers().first() {
+                self.poison();
+                return Err(crate::net::NetError::PeerLost { process });
+            }
+            self.step_or_park(PARK_TIMEOUT);
+        }
+        self.flush_now();
+        Ok(())
+    }
+
+    /// Installs a checkpoint/restore context: stateful operators built
+    /// after this call register their state cells with it, and every step
+    /// drives its frontier-aligned sealing/capture. Must be called before
+    /// graph construction. Only meaningful for `u64`-timestamped dataflows
+    /// (the step hook reads the tracker's frontier as `u64`); installing
+    /// one on any other timestamp type is a no-op at step time.
+    pub fn set_recovery(&mut self, ctx: Rc<crate::recovery::RecoveryContext>) {
+        assert!(self.tracker.is_none(), "recovery must be installed before the dataflow starts");
+        self.scope.state.borrow_mut().recovery = Some(ctx.clone());
+        self.recovery = Some(ctx);
+    }
+
+    /// The epoch a recovered dataflow resumes from: inputs must replay
+    /// from the *next* epoch (state already reflects everything at
+    /// `<= resume_epoch()`). 0 when not recovering.
+    pub fn resume_epoch(&self) -> u64 {
+        self.recovery.as_ref().map(|c| c.resume_epoch()).unwrap_or(0)
+    }
+
+    /// Simulates a process crash for fault-injection tests: the worker
+    /// stops participating in the orderly shutdown protocol (no final
+    /// flush on drop), exactly as if its process had been SIGKILLed
+    /// mid-step.
+    pub fn poison(&mut self) {
+        self.poisoned = true;
+    }
+
+    /// Simulates a hard crash of this worker's *process* for
+    /// fault-injection tests: severs the net fabric — outbound queues
+    /// die mid-frame with no drain and no goodbye, so peers observe the
+    /// abrupt end-of-stream a SIGKILL produces — and poisons this
+    /// worker. Other local workers keep running until they notice (their
+    /// sends return `Disconnected`); chaos schedules poison them at the
+    /// same injection point.
+    pub fn sever_net(&mut self) {
+        if let Some(net) = self.fabric.net() {
+            net.sever();
+        }
+        self.poison();
     }
 
     /// Creates a new dataflow input; returns the session used to feed and
@@ -330,6 +411,20 @@ impl<T: Timestamp> Worker<T> {
         // tracker, one atomic batch at a time.
         active |= self.apply_inbound();
 
+        // (5) Checkpoint hook: with a recovery context installed, drive
+        // its continuous sealing with the tracker's global frontier bound
+        // (a `u64` dataflow's only; other timestamp types skip). Sealing
+        // is incremental and allocation-free; captures fire only when the
+        // bound passes a checkpoint boundary.
+        if let Some(ctx) = &self.recovery {
+            let tracker = self.tracker.as_ref().expect("finalized");
+            if let Some(tracker) =
+                (tracker as &dyn std::any::Any).downcast_ref::<Tracker<u64>>()
+            {
+                ctx.on_frontier(tracker.min_frontier().copied());
+            }
+        }
+
         active
     }
 
@@ -400,7 +495,7 @@ impl<T: Timestamp> Worker<T> {
     /// so mutual backpressure between finishing workers always resolves;
     /// disconnected peers shed their traffic automatically.
     pub fn flush_now(&mut self) {
-        if self.tracker.is_none() {
+        if self.tracker.is_none() || self.poisoned {
             return;
         }
         self.stage_pending();
@@ -487,6 +582,9 @@ impl<T: Timestamp> Worker<T> {
 impl<T: Timestamp> Drop for Worker<T> {
     fn drop(&mut self) {
         // Covers custom driving loops that exit without `step_while`.
-        self.flush_now();
+        // A poisoned worker simulates a crash: no parting flush.
+        if !self.poisoned {
+            self.flush_now();
+        }
     }
 }

@@ -362,6 +362,55 @@ fn full_step_loop() {
     // Drain to completion outside the window (close allocates freely).
 }
 
+/// [`full_step_loop`] with checkpointing ENABLED: a recovery context logs
+/// every stateful update (a rolling wordcount over a bounded vocabulary)
+/// and the step loop drives continuous sealing against the frontier. The
+/// zero-allocation pin must hold BETWEEN checkpoint epochs: the pending
+/// log reuses its capacity across seals (retain-in-place), the counts hit
+/// existing map entries, and the boundary capture — the one allocating
+/// step — sits outside every measurement window (the boundary is beyond
+/// the epochs this loop feeds).
+fn checkpointed_step_loop() {
+    use timestamp_tokens::operators::wordcount::WordCountExt;
+    use timestamp_tokens::recovery::{CheckpointWriter, RecoveryContext};
+
+    let dir = std::env::temp_dir().join(format!("ttd-alloc-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    const INTERVAL: u64 = 1 << 20; // first boundary beyond any window
+    let writer =
+        CheckpointWriter::spawn(dir.clone(), 0, 1, vec![1], INTERVAL).expect("checkpoint writer");
+    let mut worker = Worker::<u64>::new(0, 1, Fabric::new(1));
+    worker.set_progress_flush(Duration::ZERO);
+    worker.set_send_batch(BATCH);
+    worker.set_recovery(Rc::new(RecoveryContext::new(
+        0,
+        INTERVAL,
+        Some(writer.sender()),
+        None,
+    )));
+    let (mut input, stream) = worker.new_input::<u64>();
+    let probe = stream.word_count().probe();
+    worker.finalize();
+
+    let mut t = 0u64;
+    assert_reaches_zero_alloc_steady_state("checkpoint-logged worker step", || {
+        for i in 0..BATCH as u64 {
+            input.send(i % 64); // bounded vocabulary: counts hit existing entries
+        }
+        t += 1;
+        input.advance_to(t);
+        while probe.less_than(&t) {
+            worker.step();
+        }
+    });
+    assert!(worker.steps() > 0);
+    drop(input);
+    drop(probe);
+    drop(worker); // drops the context's job sender so finish() can join
+    writer.finish().expect("checkpoint writer");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn steady_state_data_path_performs_zero_allocations() {
     point_to_point_loop();
@@ -376,4 +425,5 @@ fn steady_state_data_path_performs_zero_allocations() {
     );
     tracker_fold_loop();
     full_step_loop();
+    checkpointed_step_loop();
 }

@@ -593,3 +593,155 @@ fn large_volume_cluster_exchange_conserves_records() {
         assert!(*count > 0, "worker {i} received nothing");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Crash recovery: kill one process mid-run, recover the cluster from its
+// frontier-aligned checkpoints — into FEWER processes — and the output
+// digest must equal an unperturbed run's. The recovery-demo workloads
+// (rolling wordcount, and NEXMark Q4's token-held data-dependent windows)
+// use deterministic shape-independent feeds and XOR digests, so "identical
+// output" is one u64 equality per pin.
+// ---------------------------------------------------------------------------
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+use timestamp_tokens::harness::recovery_demo::{
+    run_q4_recovery_demo, run_recovery_demo, DemoOutcome, RecoveryDemoParams,
+};
+use timestamp_tokens::net::NetError;
+
+type DemoRunner = fn(Config, RecoveryDemoParams) -> Result<DemoOutcome, NetError>;
+
+fn recovery_temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ttd-recover-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Runs `demo` as a `shape`-shaped cluster (threads as processes, real
+/// loopback TCP) against `dir` with the given checkpoint interval,
+/// returning per-process outcomes in process order.
+fn run_demo_cluster(
+    demo: DemoRunner,
+    shape: Vec<usize>,
+    dir: &Path,
+    interval: u64,
+    recover: bool,
+    params: RecoveryDemoParams,
+) -> Vec<DemoOutcome> {
+    let processes = shape.len();
+    let addresses = free_addresses(processes);
+    let dir = dir.to_str().expect("utf-8 temp path").to_string();
+    let mut handles = Vec::new();
+    for p in 0..processes {
+        let addresses = addresses.clone();
+        let shape = shape.clone();
+        let dir = dir.clone();
+        handles.push(std::thread::spawn(move || {
+            let config = Config {
+                workers: shape[p],
+                cluster_shape: shape,
+                pin_workers: false,
+                processes,
+                process_index: p,
+                addresses,
+                checkpoint_dir: Some(dir),
+                checkpoint_interval: interval,
+                recover,
+                ..Config::default()
+            };
+            demo(config, params).expect("demo run")
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("demo process")).collect()
+}
+
+/// The single-process fault-free digest for `demo` under `params`.
+fn fault_free_digest(demo: DemoRunner, params: RecoveryDemoParams) -> u64 {
+    let config = Config { workers: 2, pin_workers: false, ..Config::default() };
+    match demo(config, params).expect("single-process run") {
+        DemoOutcome::Digest(d) => d,
+        other => panic!("fault-free run ended in {other:?}"),
+    }
+}
+
+/// The full pin: 3 processes checkpoint every 8 epochs; process 1 is
+/// killed (net fabric severed, no goodbyes) at feed epoch 40 of 60; the
+/// survivors quiesce with a TYPED peer-loss outcome — no hang, no panic.
+/// A 2-process cluster then recovers from the newest complete checkpoint,
+/// replays the tail, and its combined digest must equal the unperturbed
+/// single-process digest exactly.
+fn assert_kill_one_then_recover_reshaped(demo: DemoRunner, tag: &str) {
+    let params = RecoveryDemoParams {
+        epochs: 60,
+        words_per_epoch: 48,
+        vocab: 100,
+        pacing: Duration::ZERO,
+        crash_after: None,
+    };
+    let oracle = fault_free_digest(demo, params);
+    let dir = recovery_temp_dir(tag);
+
+    let crash = RecoveryDemoParams { crash_after: Some((1, 40)), ..params };
+    let outcomes = run_demo_cluster(demo, vec![1, 1, 1], &dir, 8, false, crash);
+    assert_eq!(outcomes[1], DemoOutcome::Crashed, "victim must report the injected crash");
+    for p in [0, 2] {
+        assert_eq!(
+            outcomes[p],
+            DemoOutcome::PeerLost(1),
+            "survivor {p} must quiesce with a typed loss of process 1"
+        );
+    }
+
+    // Recover into a DIFFERENT cluster shape: 3 processes checkpointed,
+    // 2 recover (state re-partitioned by each operator's exchange key).
+    let recovered = run_demo_cluster(demo, vec![1, 1], &dir, 8, true, params);
+    let digest = recovered.iter().fold(0u64, |acc, outcome| match outcome {
+        DemoOutcome::Digest(d) => acc ^ d,
+        other => panic!("recovered process ended in {other:?}"),
+    });
+    assert_eq!(
+        digest, oracle,
+        "kill-one + recover + reshape must reproduce the fault-free output"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wordcount_kill_one_recover_reshape_matches_fault_free() {
+    assert_kill_one_then_recover_reshaped(run_recovery_demo, "wordcount");
+}
+
+#[test]
+fn nexmark_q4_kill_one_recover_reshape_matches_fault_free() {
+    assert_kill_one_then_recover_reshaped(run_q4_recovery_demo, "q4");
+}
+
+/// Checkpointing must be output-transparent: the same cluster run with
+/// capture enabled produces the identical digest to one without.
+#[test]
+fn checkpointing_is_output_transparent() {
+    let params = RecoveryDemoParams {
+        epochs: 40,
+        words_per_epoch: 32,
+        vocab: 80,
+        pacing: Duration::ZERO,
+        crash_after: None,
+    };
+    let plain = fault_free_digest(run_recovery_demo, params);
+    let dir = recovery_temp_dir("transparent");
+    let outcomes = run_demo_cluster(run_recovery_demo, vec![1, 1], &dir, 4, false, params);
+    let digest = outcomes.iter().fold(0u64, |acc, outcome| match outcome {
+        DemoOutcome::Digest(d) => acc ^ d,
+        other => panic!("checkpointed run ended in {other:?}"),
+    });
+    assert_eq!(digest, plain, "checkpoint capture must not perturb output");
+    // And the run must actually have committed checkpoints to recover from.
+    let manifests = std::fs::read_dir(&dir)
+        .expect("checkpoint dir exists")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains("manifest"))
+        .count();
+    assert!(manifests > 0, "no manifests committed during a checkpointed run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
