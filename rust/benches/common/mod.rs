@@ -102,6 +102,16 @@ pub fn available_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Writes a `BENCH_*.json` payload next to the tables, reporting the
+/// outcome the way every bench binary does (a failed write must not fail
+/// the bench — the tables already printed).
+pub fn emit_bench_json(name: &str, json: &str) {
+    match std::fs::write(name, json) {
+        Ok(()) => println!("\nwrote {name}"),
+        Err(e) => eprintln!("\ncould not write {name}: {e}"),
+    }
+}
+
 /// Formats a tuples/s rate like the paper ("4M", "250K").
 pub fn fmt_rate(rate: u64) -> String {
     if rate >= 1_000_000 {

@@ -490,10 +490,7 @@ fn sweep_ring(args: &BenchArgs) {
         ));
     }
     json.push_str("  }\n}\n");
-    match std::fs::write("BENCH_exchange_ring.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_exchange_ring.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_exchange_ring.json: {e}"),
-    }
+    common::emit_bench_json("BENCH_exchange_ring.json", &json);
 }
 
 // ---------------------------------------------------------------------------
@@ -777,10 +774,7 @@ fn net_scenario(args: &BenchArgs) {
         ));
     }
     json.push_str("}\n");
-    match std::fs::write("BENCH_net.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_net.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_net.json: {e}"),
-    }
+    common::emit_bench_json("BENCH_net.json", &json);
 }
 
 // ---------------------------------------------------------------------------
@@ -945,8 +939,5 @@ fn main() {
     for line in &wins {
         println!("{line}");
     }
-    match std::fs::write("BENCH_exchange.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_exchange.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_exchange.json: {e}"),
-    }
+    common::emit_bench_json("BENCH_exchange.json", &json);
 }

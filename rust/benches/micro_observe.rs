@@ -1,0 +1,312 @@
+//! Observability-plane overhead microbenchmark: what does event tracing
+//! cost the measured system? Runs the forwarded-pipeline step loop (the
+//! same dataflow `alloc_steady_state.rs` pins) with tracing off, tracing
+//! on with no export sinks, and tracing on with Chrome-trace + metrics
+//! export, then a 2-process x 2-worker loopback cluster exchange with
+//! tracing off vs. on+export. Emits `BENCH_observe.json`.
+//!
+//! Run: `cargo bench --bench micro_observe -- [--quick]`.
+//!
+//! The headline claim being measured: tracing on (no export) costs <= 5%
+//! on the forwarded pipeline — events are `Copy` stamps into a
+//! pre-allocated SPSC ring, drained off the hot path by the writer
+//! thread, so the step loop pays a clock read and a ring slot per hook.
+//! The cluster scenario also exercises the bootstrap handshake: only
+//! "process" 0 is given `--trace`/`--metrics` paths, and the WELCOME
+//! frame propagates them to process 1, which writes its own `.p1.` files.
+
+mod common;
+
+use common::BenchArgs;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+use timestamp_tokens::config::Config;
+use timestamp_tokens::dataflow::probe::ProbeExt;
+use timestamp_tokens::observe::{per_process_path, TraceConfig, TracePlane};
+use timestamp_tokens::operators::map::MapExt;
+use timestamp_tokens::worker::allocator::Fabric;
+use timestamp_tokens::worker::execute::execute_cluster;
+use timestamp_tokens::worker::Worker;
+
+/// Records fed per epoch (matches the engine's send-batch size, so the
+/// data plane moves whole leases).
+const BATCH: usize = 1024;
+
+/// One mode's measurement.
+struct Rate {
+    records_per_sec: u64,
+    ns_per_record: f64,
+}
+
+impl Rate {
+    fn from_run(records: u64, secs: f64) -> Rate {
+        let secs = secs.max(1e-9);
+        Rate {
+            records_per_sec: (records as f64 / secs) as u64,
+            ns_per_record: secs * 1e9 / records.max(1) as f64,
+        }
+    }
+
+    /// Percent slower than `baseline` (negative = faster, i.e. noise).
+    fn overhead_pct(&self, baseline: &Rate) -> f64 {
+        (baseline.records_per_sec as f64 / self.records_per_sec.max(1) as f64 - 1.0) * 100.0
+    }
+}
+
+/// One forwarded-pipeline run: a single worker driving the
+/// map_in_place/filter chain for `epochs` epochs of `BATCH` records,
+/// optionally traced. Returns measured seconds (warmup excluded).
+fn pipeline_run(trace: Option<TraceConfig>, warmup: u64, epochs: u64) -> f64 {
+    let plane = trace.map(TracePlane::spawn);
+    let mut worker = Worker::<u64>::new(0, 1, Fabric::new(1));
+    worker.set_progress_flush(Duration::ZERO);
+    worker.set_send_batch(BATCH);
+    if let Some(plane) = &plane {
+        worker.set_tracer(plane.worker_tracer(0, 0));
+    }
+    let (mut input, stream) = worker.new_input::<u64>();
+    let probe = stream
+        .map_in_place(|x| *x = x.wrapping_mul(2547).wrapping_add(1))
+        .filter(|x| x % 2 == 0)
+        .probe();
+    worker.finalize();
+
+    let mut t = 0u64;
+    let secs;
+    {
+        let mut feed = |t: u64| {
+            for i in 0..BATCH as u64 {
+                input.send(i ^ t);
+            }
+            input.advance_to(t);
+            while probe.less_than(&t) {
+                worker.step();
+            }
+        };
+        for _ in 0..warmup {
+            t += 1;
+            feed(t);
+        }
+        let start = Instant::now();
+        for _ in 0..epochs {
+            t += 1;
+            feed(t);
+        }
+        secs = start.elapsed().as_secs_f64();
+    }
+    input.close();
+    worker.step_while(|| !probe.done());
+    if let Some(plane) = &plane {
+        plane.finish().expect("trace writer failed");
+    }
+    secs
+}
+
+/// Best-of-`reps` pipeline measurement for one tracing mode.
+fn pipeline_mode(
+    trace: impl Fn() -> Option<TraceConfig>,
+    warmup: u64,
+    epochs: u64,
+    reps: usize,
+) -> Rate {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        best = best.min(pipeline_run(trace(), warmup, epochs));
+    }
+    Rate::from_run(epochs * BATCH as u64, best)
+}
+
+/// The cluster worker driver: every worker feeds `per_epoch` records per
+/// epoch through an all-to-all exchange and rides the frontier.
+fn drive_exchange(worker: &mut Worker<u64>, epochs: u64, per_epoch: u64) -> (u64, f64) {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let index = worker.index() as u64;
+    let (mut input, stream) = worker.new_input::<u64>();
+    let count = Rc::new(RefCell::new(0u64));
+    let count2 = count.clone();
+    let probe = stream
+        .exchange(|v: &u64| v.wrapping_mul(0x9e3779b97f4a7c15))
+        .inspect(move |_t, _v| *count2.borrow_mut() += 1)
+        .probe();
+    worker.finalize();
+
+    let start = Instant::now();
+    for t in 1..=epochs {
+        for i in 0..per_epoch {
+            input.send(t.wrapping_mul(1_000_003) ^ (index << 32) ^ i);
+        }
+        input.advance_to(t);
+        while probe.less_equal(&(t - 1)) {
+            worker.step_or_park(Duration::from_micros(100));
+        }
+    }
+    input.close();
+    worker.step_while(|| !probe.done());
+    (*count.borrow(), start.elapsed().as_secs_f64())
+}
+
+/// One 2-process x 2-worker loopback cluster exchange run. When
+/// `observe` carries (trace, metrics) paths they are given to process 0
+/// ONLY — the handshake must carry them to process 1.
+fn cluster_run(observe: Option<(String, String)>, epochs: u64, per_epoch: u64) -> Rate {
+    const PROCESSES: usize = 2;
+    const WPP: usize = 2;
+    let addresses = timestamp_tokens::testing::free_loopback_addresses(PROCESSES);
+    let mut handles = Vec::new();
+    for p in 0..PROCESSES {
+        let addresses = addresses.clone();
+        let (trace_path, metrics_path) = match &observe {
+            Some((t, m)) if p == 0 => (Some(t.clone()), Some(m.clone())),
+            _ => (None, None),
+        };
+        handles.push(std::thread::spawn(move || {
+            let config = Config {
+                workers: WPP,
+                pin_workers: false,
+                processes: PROCESSES,
+                process_index: p,
+                addresses,
+                trace_path,
+                metrics_path,
+                ..Config::default()
+            };
+            execute_cluster::<u64, _, _>(config, move |w| drive_exchange(w, epochs, per_epoch))
+                .expect("cluster bootstrap")
+        }));
+    }
+    let results: Vec<(u64, f64)> =
+        handles.into_iter().flat_map(|h| h.join().expect("cluster process")).collect();
+    let records: u64 = results.iter().map(|(r, _)| r).sum();
+    let expected = (PROCESSES * WPP) as u64 * epochs * per_epoch;
+    assert_eq!(records, expected, "cluster exchange lost or duplicated records");
+    let secs = results.iter().map(|&(_, s)| s).fold(0.0f64, f64::max);
+    if let Some((trace, metrics)) = &observe {
+        // Every process must have produced its per-process files — the
+        // handshake propagated process 0's paths.
+        for p in 0..PROCESSES {
+            let outputs =
+                [per_process_path(trace, p, PROCESSES), per_process_path(metrics, p, PROCESSES)];
+            for path in outputs {
+                assert!(
+                    std::fs::metadata(&path).is_ok_and(|m| m.len() > 0),
+                    "traced cluster run left no output at {path}"
+                );
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+    Rate::from_run(records, secs)
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    println!("micro_observe: event-tracing overhead (quick={})", args.quick);
+
+    let tmp = std::env::temp_dir();
+    let tmp_file = |name: &str| -> String {
+        let p: PathBuf = tmp.join(format!("ttd-bench-observe-{}-{name}", std::process::id()));
+        p.display().to_string()
+    };
+
+    // -- 1. forwarded pipeline: off / on / on+export ---------------------
+    let (warmup, epochs, reps) = if args.quick { (32, 200, 2) } else { (64, 1000, 3) };
+    println!(
+        "\nforwarded pipeline (1 worker, {epochs} epochs x {BATCH} records, best of {reps})"
+    );
+    println!("{:>12} {:>14} {:>12} {:>10}", "tracing", "records/s", "ns/record", "overhead");
+
+    let off = pipeline_mode(|| None, warmup, epochs, reps);
+    let on = pipeline_mode(
+        || Some(TraceConfig { local_workers: 1, ..TraceConfig::default() }),
+        warmup,
+        epochs,
+        reps,
+    );
+    let trace_file = tmp_file("pipeline.trace.json");
+    let metrics_file = tmp_file("pipeline.metrics.jsonl");
+    let export = pipeline_mode(
+        || {
+            Some(TraceConfig {
+                trace_path: Some(trace_file.clone()),
+                metrics_path: Some(metrics_file.clone()),
+                local_workers: 1,
+                ..TraceConfig::default()
+            })
+        },
+        warmup,
+        epochs,
+        reps,
+    );
+    let _ = std::fs::remove_file(&trace_file);
+    let _ = std::fs::remove_file(&metrics_file);
+
+    let on_pct = on.overhead_pct(&off);
+    let export_pct = export.overhead_pct(&off);
+    let row = |label: &str, r: &Rate, pct: f64| {
+        println!(
+            "{:>12} {:>14} {:>12.1} {:>9.1}%",
+            label, r.records_per_sec, r.ns_per_record, pct
+        );
+    };
+    row("off", &off, 0.0);
+    row("on", &on, on_pct);
+    row("on+export", &export, export_pct);
+    if on_pct > 5.0 {
+        println!("  WARNING: tracing-on overhead {on_pct:.1}% exceeds the 5% budget");
+    }
+
+    // -- 2. cross-process exchange: off / on+export ----------------------
+    let (cepochs, per_epoch, creps) = if args.quick { (48, 2048, 1) } else { (192, 2048, 2) };
+    println!(
+        "\ncluster exchange (2 processes x 2 workers, {cepochs} epochs x {per_epoch} \
+         records/worker, best of {creps})"
+    );
+    println!("{:>12} {:>14} {:>12} {:>10}", "tracing", "records/s", "ns/record", "overhead");
+    let best = |observe: &dyn Fn() -> Option<(String, String)>| -> Rate {
+        let mut best: Option<Rate> = None;
+        for _ in 0..creps {
+            let r = cluster_run(observe(), cepochs, per_epoch);
+            if best.as_ref().map(|b| r.records_per_sec > b.records_per_sec).unwrap_or(true) {
+                best = Some(r);
+            }
+        }
+        best.expect("at least one rep")
+    };
+    let cluster_off = best(&|| None);
+    let ctrace = tmp_file("cluster.trace.json");
+    let cmetrics = tmp_file("cluster.metrics.jsonl");
+    let cluster_export = best(&|| Some((ctrace.clone(), cmetrics.clone())));
+    let cluster_pct = cluster_export.overhead_pct(&cluster_off);
+    row("off", &cluster_off, 0.0);
+    row("on+export", &cluster_export, cluster_pct);
+
+    // -- JSON ------------------------------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"micro_observe\",\n  \"pipeline\": {{\n    \"batch\": {BATCH}, \
+         \"epochs\": {epochs},\n    \"off\": {{\"records_per_sec\": {}, \"ns_per_record\": \
+         {:.1}}},\n    \"on\": {{\"records_per_sec\": {}, \"ns_per_record\": {:.1}}},\n    \
+         \"on_export\": {{\"records_per_sec\": {}, \"ns_per_record\": {:.1}}},\n    \
+         \"overhead_on_pct\": {:.2},\n    \"overhead_export_pct\": {:.2}\n  }},\n  \
+         \"cluster_exchange\": {{\n    \"processes\": 2, \"workers_per_process\": 2, \
+         \"epochs\": {cepochs}, \"per_epoch\": {per_epoch},\n    \"off\": \
+         {{\"records_per_sec\": {}, \"ns_per_record\": {:.1}}},\n    \"on_export\": \
+         {{\"records_per_sec\": {}, \"ns_per_record\": {:.1}}},\n    \
+         \"overhead_export_pct\": {:.2}\n  }}\n}}\n",
+        off.records_per_sec,
+        off.ns_per_record,
+        on.records_per_sec,
+        on.ns_per_record,
+        export.records_per_sec,
+        export.ns_per_record,
+        on_pct,
+        export_pct,
+        cluster_off.records_per_sec,
+        cluster_off.ns_per_record,
+        cluster_export.records_per_sec,
+        cluster_export.ns_per_record,
+        cluster_pct,
+    );
+    common::emit_bench_json("BENCH_observe.json", &json);
+}

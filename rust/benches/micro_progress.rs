@@ -140,10 +140,7 @@ fn write_json(steps: u64, results: &[(&str, Vec<LatencyStats>)]) {
         json.push_str(&format!("    }}{}\n", if pi + 1 < results.len() { "," } else { "" }));
     }
     json.push_str("  }\n}\n");
-    match std::fs::write("BENCH_progress.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_progress.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_progress.json: {e}"),
-    }
+    common::emit_bench_json("BENCH_progress.json", &json);
 }
 
 /// Sweeps the progress-flush cadence (`Config::progress_flush`) on a

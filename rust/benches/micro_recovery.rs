@@ -261,8 +261,5 @@ fn main() {
          \"epochs_replayed\": {replayed}, \"recover_ms\": {recover_ms}, \
          \"digest_matches\": true}}\n}}\n"
     ));
-    match std::fs::write("BENCH_recovery.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_recovery.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_recovery.json: {e}"),
-    }
+    common::emit_bench_json("BENCH_recovery.json", &json);
 }

@@ -452,8 +452,5 @@ fn main() {
     for line in &wins {
         println!("{line}");
     }
-    match std::fs::write("BENCH_tracker.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_tracker.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_tracker.json: {e}"),
-    }
+    common::emit_bench_json("BENCH_tracker.json", &json);
 }

@@ -177,6 +177,25 @@ impl NetOptions {
     }
 }
 
+/// The observability knobs an entry point threads through to [`Config`]
+/// (bundled like [`NetOptions`]; separate because paths are not `Copy`).
+/// Both default to off, which keeps the tracer to a single branch per
+/// hook.
+#[derive(Clone, Debug, Default)]
+pub struct ObserveOptions {
+    /// Chrome trace-event JSON output path (`--trace FILE`).
+    pub trace_path: Option<String>,
+    /// Telemetry-snapshot JSONL output path (`--metrics FILE`).
+    pub metrics_path: Option<String>,
+}
+
+impl ObserveOptions {
+    /// Whether either output was requested (the trace plane activates).
+    pub fn active(&self) -> bool {
+        self.trace_path.is_some() || self.metrics_path.is_some()
+    }
+}
+
 /// Top-level runtime configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -257,6 +276,16 @@ pub struct Config {
     /// the new workers. Inputs must replay from
     /// `resume_epoch + 1`; state already reflects everything sealed.
     pub recover: bool,
+    /// Chrome trace-event JSON output path (`--trace out.json`). `None` —
+    /// the default — disables event tracing entirely (one branch per hook
+    /// site). Propagated from process 0 over the handshake; each process
+    /// of a cluster writes `<stem>.p<I>.json` (see
+    /// `observe::per_process_path`).
+    pub trace_path: Option<String>,
+    /// Periodic telemetry snapshot JSONL output path (`--metrics
+    /// out.jsonl`). Same propagation and per-process naming as
+    /// `trace_path`; either flag alone activates the trace plane.
+    pub metrics_path: Option<String>,
 }
 
 impl Default for Config {
@@ -280,6 +309,8 @@ impl Default for Config {
             checkpoint_dir: None,
             checkpoint_interval: 0,
             recover: false,
+            trace_path: None,
+            metrics_path: None,
         }
     }
 }
@@ -333,6 +364,8 @@ mod tests {
         assert!(c.checkpoint_dir.is_none(), "checkpointing must be opt-in");
         assert_eq!(c.checkpoint_interval, 0);
         assert!(!c.recover);
+        assert!(c.trace_path.is_none(), "tracing must be opt-in");
+        assert!(c.metrics_path.is_none(), "metrics export must be opt-in");
     }
 
     #[test]

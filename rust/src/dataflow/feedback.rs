@@ -61,6 +61,9 @@ pub fn feedback<T: Timestamp, D: Data>(
         info.peers,
         scope.send_batch(),
     );
+    let tracer = scope.tracer();
+    input.set_tracer(tracer.clone());
+    output.set_tracer(tracer);
     builder.build(
         activation,
         Box::new(move || {

@@ -28,6 +28,8 @@ pub struct InputSession<T: Timestamp, D: Data> {
     /// Records per flush (the configured `SEND_BATCH`).
     send_batch: usize,
     time: T,
+    /// Event tracer: `advance_to` marks start each epoch's latency clock.
+    tracer: Option<std::rc::Rc<crate::observe::WorkerTracer>>,
 }
 
 impl<T: Timestamp, D: Data> InputSession<T, D> {
@@ -75,6 +77,7 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
                 buffer: Vec::new(),
                 send_batch,
                 time,
+                tracer: scope.tracer(),
             },
             stream,
         )
@@ -134,6 +137,20 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
         self.flush();
         self.token.as_mut().unwrap().downgrade(&time);
         self.time = time;
+        if let Some(tracer) = &self.tracer {
+            // The epoch's latency clock starts at its first advance
+            // (u64-timestamped dataflows; attribution needs a word).
+            if let Some(t) = (&self.time as &dyn std::any::Any).downcast_ref::<u64>() {
+                tracer.emit_at(
+                    crate::observe::EventKind::InputAdvance,
+                    tracer.now_ns(),
+                    0,
+                    *t,
+                    0,
+                    0,
+                );
+            }
+        }
     }
 
     /// Closes the input: flushes and drops the token. Idempotent.

@@ -72,6 +72,9 @@ pub struct InputHandle<T: Timestamp, D: Data> {
     /// ordinary operators; strictly advancing for feedback).
     retain_summary: T::Summary,
     bookkeeping: BookkeepingHandle<T>,
+    /// Event tracer for records-in accounting (`None` = tracing off; the
+    /// hook costs one branch).
+    tracer: Option<Rc<crate::observe::WorkerTracer>>,
 }
 
 impl<T: Timestamp, D: Data> InputHandle<T, D> {
@@ -84,7 +87,20 @@ impl<T: Timestamp, D: Data> InputHandle<T, D> {
         retain_summary: T::Summary,
         bookkeeping: BookkeepingHandle<T>,
     ) -> Self {
-        InputHandle { queue, frontier, target, retain_location, retain_summary, bookkeeping }
+        InputHandle {
+            queue,
+            frontier,
+            target,
+            retain_location,
+            retain_summary,
+            bookkeeping,
+            tracer: None,
+        }
+    }
+
+    /// Installs the worker's event tracer (construction time only).
+    pub(crate) fn set_tracer(&mut self, tracer: Option<Rc<crate::observe::WorkerTracer>>) {
+        self.tracer = tracer;
     }
 
     /// Pops the next message batch, recording its consumption with the
@@ -97,6 +113,9 @@ impl<T: Timestamp, D: Data> InputHandle<T, D> {
     pub fn next(&mut self) -> Option<(TimestampTokenRef<'_, T>, Batch<D>)> {
         let message = self.queue.borrow_mut().pop_front()?;
         let Message { time, data, .. } = message;
+        if let Some(tracer) = &self.tracer {
+            tracer.note_records_in(data.len() as u64);
+        }
         self.bookkeeping.update(self.target, time.clone(), -1);
         let cap_time = self
             .retain_summary
@@ -167,6 +186,8 @@ pub struct OutputHandle<T: Timestamp, D: Data> {
     buffers: Vec<ChannelBuffers<D>>,
     /// Pact snapshot aligned with `tee` (channels only ever append).
     pacts: Vec<Pact<D>>,
+    /// Event tracer for records-out accounting (`None` = tracing off).
+    tracer: Option<Rc<crate::observe::WorkerTracer>>,
 }
 
 impl<T: Timestamp, D: Data> OutputHandle<T, D> {
@@ -189,7 +210,13 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
             shared_pool: SharedPool::new(SHARED_POOL_WINDOW),
             buffers: Vec::new(),
             pacts: Vec::new(),
+            tracer: None,
         }
+    }
+
+    /// Installs the worker's event tracer (construction time only).
+    pub(crate) fn set_tracer(&mut self, tracer: Option<Rc<crate::observe::WorkerTracer>>) {
+        self.tracer = tracer;
     }
 
     /// Obtains a session that can send data at the timestamp associated with
@@ -290,6 +317,9 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
             self.buffers[ci].per_dest[dest] = Some(lease);
             return;
         }
+        if let Some(tracer) = &self.tracer {
+            tracer.note_records_out(lease.len() as u64);
+        }
         let tee = self.tee.borrow();
         let mut channel = tee[ci].borrow_mut();
         self.bookkeeping.update(channel.target, time.clone(), 1);
@@ -306,6 +336,10 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
         if arc.is_empty() {
             self.buffers[ci].all = Some(arc);
             return;
+        }
+        if let Some(tracer) = &self.tracer {
+            // Records *produced* once, however many peers receive them.
+            tracer.note_records_out(arc.len() as u64);
         }
         // Track for reclamation once every peer drops its clone.
         self.shared_pool.track(&arc);
@@ -345,6 +379,9 @@ impl<T: Timestamp, D: Data> OutputHandle<T, D> {
         // holds a broadcast buffer, so `per_dest` is the only case.)
         if self.buffers[0].per_dest[dest].is_some() {
             self.post(0, dest, time);
+        }
+        if let Some(tracer) = &self.tracer {
+            tracer.note_records_out(lease.len() as u64);
         }
         let tee = self.tee.borrow();
         let mut channel = tee[0].borrow_mut();
@@ -659,6 +696,9 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
             info.peers,
             batch_size,
         );
+        let tracer = scope.tracer();
+        input.set_tracer(tracer.clone());
+        output.set_tracer(tracer);
         builder.build(activation, Box::new(move || logic(&mut input, &mut output)));
         stream
     }
@@ -711,6 +751,10 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
             info.peers,
             batch_size,
         );
+        let tracer = scope.tracer();
+        input1.set_tracer(tracer.clone());
+        input2.set_tracer(tracer.clone());
+        output.set_tracer(tracer);
         builder.build(
             activation,
             Box::new(move || logic(&mut input1, &mut input2, &mut output)),
@@ -738,6 +782,7 @@ impl<T: Timestamp, D: Data> OperatorExt<T, D> for Stream<T, D> {
             T::Summary::default(),
             bookkeeping,
         );
+        input.set_tracer(scope.tracer());
         builder.build(activation, Box::new(move || logic(&mut input)));
     }
 }

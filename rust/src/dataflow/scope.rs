@@ -87,6 +87,10 @@ pub struct BuildState<T: Timestamp> {
     /// recovery is configured (u64-timestamped dataflows only). Stateful
     /// operators register their cells here at construction time.
     pub recovery: Option<Rc<crate::recovery::RecoveryContext>>,
+    /// The worker's event tracer, when observability is configured.
+    /// Operator handles clone it at construction time to stamp
+    /// records-in/out; `None` (the default) costs one branch per hook.
+    pub tracer: Option<Rc<crate::observe::WorkerTracer>>,
 }
 
 impl<T: Timestamp> BuildState<T> {
@@ -107,6 +111,7 @@ impl<T: Timestamp> BuildState<T> {
             finalized: false,
             remote_staged: Rc::new(Cell::new(false)),
             recovery: None,
+            tracer: None,
         }
     }
 
@@ -164,6 +169,13 @@ impl<T: Timestamp> Scope<T> {
     /// skip update logging.
     pub fn recovery(&self) -> Option<Rc<crate::recovery::RecoveryContext>> {
         self.state.borrow().recovery.clone()
+    }
+
+    /// The worker's event tracer, if observability is on. Handles and
+    /// input sessions clone this at construction time so the hot path
+    /// never goes back through the scope.
+    pub fn tracer(&self) -> Option<Rc<crate::observe::WorkerTracer>> {
+        self.state.borrow().tracer.clone()
     }
 }
 

@@ -231,4 +231,146 @@ mod tests {
         assert_eq!(fmt_ns(2_500), "2.5µs");
         assert_eq!(fmt_ns(3_000_000), "3.00ms");
     }
+
+    // -- seeded property tests vs. a sorted-Vec reference ----------------
+
+    /// splitmix64: deterministic, dependency-free pseudo-randomness.
+    fn next(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Nearest-rank quantile on a sorted slice — the exact definition
+    /// `LatencyHistogram::quantile` approximates.
+    fn reference_quantile(sorted: &[u64], q: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    /// One random value spanning many magnitudes; every fourth draw lands
+    /// on or next to an exact bucket boundary (the off-by-one hot spots).
+    fn draw(state: &mut u64) -> u64 {
+        let r = next(state);
+        if r % 4 == 0 {
+            let magnitude = SUB_BITS + (next(state) % 46) as u32;
+            let sub = next(state) % SUB_BUCKETS;
+            let boundary = (SUB_BUCKETS + sub) << (magnitude - SUB_BITS);
+            match next(state) % 3 {
+                0 => boundary - 1,
+                1 => boundary,
+                _ => boundary + 1,
+            }
+        } else {
+            next(state) % (1u64 << (4 + next(state) % 50))
+        }
+    }
+
+    const QS: [f64; 8] = [0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0];
+
+    #[test]
+    fn property_quantiles_track_sorted_reference() {
+        let mut state = 0x5eed_0b5e_u64 ^ 0xa5a5_a5a5_a5a5_a5a5;
+        for case in 0..48usize {
+            // Cases 0 and 1 pin the empty and single-value degeneracies.
+            let n = match case {
+                0 => 0,
+                1 => 1,
+                _ => (next(&mut state) % 500 + 2) as usize,
+            };
+            let mut h = LatencyHistogram::new();
+            let mut reference = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = draw(&mut state);
+                h.record(v);
+                reference.push(v);
+            }
+            reference.sort_unstable();
+            assert_eq!(h.count(), n as u64, "case {case}");
+            assert_eq!(h.min(), reference.first().copied().unwrap_or(0), "case {case}");
+            assert_eq!(h.max(), reference.last().copied().unwrap_or(0), "case {case}");
+            let exact_mean = if n == 0 {
+                0.0
+            } else {
+                reference.iter().map(|&v| v as u128).sum::<u128>() as f64 / n as f64
+            };
+            let tolerance = 1e-9 * exact_mean.max(1.0);
+            assert!((h.mean() - exact_mean).abs() <= tolerance, "case {case} mean");
+            for q in QS {
+                let exact = reference_quantile(&reference, q);
+                let got = h.quantile(q);
+                // The histogram reports the bucket's upper bound (clamped
+                // to the exact max): never below the true quantile, and
+                // within the 1/16-sub-bucket quantization envelope above.
+                assert!(got >= exact, "case {case} q={q}: {got} < exact {exact}");
+                assert!(
+                    got as f64 <= exact as f64 * (1.0 + 1.0 / 8.0) + 1.0,
+                    "case {case} q={q}: {got} too far above exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_merge_matches_combined_recording() {
+        let mut state = 0x00b5_e7_1e5d_u64;
+        for case in 0..24usize {
+            let parts = (next(&mut state) % 4 + 1) as usize;
+            let n = (next(&mut state) % 600) as usize;
+            let mut shards = vec![LatencyHistogram::new(); parts];
+            let mut combined = LatencyHistogram::new();
+            let mut reference = Vec::with_capacity(n);
+            for i in 0..n {
+                let v = draw(&mut state);
+                // Uneven round-robin so some shards stay empty sometimes.
+                shards[i % parts].record(v);
+                combined.record(v);
+                reference.push(v);
+            }
+            reference.sort_unstable();
+            // Fold the shards into one, starting from an empty histogram
+            // (merging into empty must not disturb min/max).
+            let mut merged = LatencyHistogram::new();
+            for shard in &shards {
+                merged.merge(shard);
+            }
+            assert_eq!(merged.count(), combined.count(), "case {case}");
+            assert_eq!(merged.min(), combined.min(), "case {case}");
+            assert_eq!(merged.max(), combined.max(), "case {case}");
+            let tolerance = 1e-9 * combined.mean().max(1.0);
+            assert!((merged.mean() - combined.mean()).abs() <= tolerance, "case {case}");
+            for q in QS {
+                assert_eq!(merged.quantile(q), combined.quantile(q), "case {case} q={q}");
+                let exact = reference_quantile(&reference, q);
+                assert!(merged.quantile(q) >= exact, "case {case} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_values_report_exactly_at_every_quantile() {
+        // A one-value histogram must return that value for every quantile
+        // (the upper-bound clamp to the exact max), including values that
+        // sit exactly on, just below, and just above bucket boundaries.
+        for magnitude in SUB_BITS..60 {
+            for sub in [0, 1, SUB_BUCKETS - 1] {
+                let boundary = (SUB_BUCKETS + sub) << (magnitude - SUB_BITS);
+                for v in [boundary - 1, boundary, boundary + 1] {
+                    let mut h = LatencyHistogram::new();
+                    h.record(v);
+                    assert_eq!(h.count(), 1);
+                    assert_eq!(h.min(), v);
+                    assert_eq!(h.max(), v);
+                    for q in QS {
+                        assert_eq!(h.quantile(q), v, "v={v} q={q}");
+                    }
+                }
+            }
+        }
+    }
 }

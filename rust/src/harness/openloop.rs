@@ -129,10 +129,18 @@ fn collect(results: Vec<WorkerOutcome>, duration: Duration) -> Outcome {
 
 /// Runs one open-loop experiment.
 pub fn run(params: Params) -> Outcome {
+    run_observed(params, crate::config::ObserveOptions::default())
+}
+
+/// [`run`] with event tracing / metrics export (`Params` is `Copy`, so
+/// the non-`Copy` output paths ride separately).
+pub fn run_observed(params: Params, observe: crate::config::ObserveOptions) -> Outcome {
     let epoch = Instant::now() + Duration::from_millis(50); // build headroom
     let config = Config {
         workers: params.workers,
         pin_workers: params.pin_workers,
+        trace_path: observe.trace_path,
+        metrics_path: observe.metrics_path,
         ..Config::default()
     };
     let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
@@ -155,6 +163,27 @@ pub fn run_cluster(
     addresses: Vec<String>,
     net: crate::config::NetOptions,
 ) -> Result<Outcome, NetError> {
+    run_cluster_observed(
+        params,
+        processes,
+        process_index,
+        addresses,
+        net,
+        crate::config::ObserveOptions::default(),
+    )
+}
+
+/// [`run_cluster`] with event tracing / metrics export. Only process 0's
+/// paths matter: the bootstrap handshake propagates them cluster-wide,
+/// and each process writes `<stem>.p<I>.<ext>`.
+pub fn run_cluster_observed(
+    params: Params,
+    processes: usize,
+    process_index: usize,
+    addresses: Vec<String>,
+    net: crate::config::NetOptions,
+    observe: crate::config::ObserveOptions,
+) -> Result<Outcome, NetError> {
     let config = Config {
         workers: params.workers,
         pin_workers: params.pin_workers,
@@ -165,6 +194,8 @@ pub fn run_cluster(
         reactor_backend: net.reactor,
         parking: net.parking,
         autotune: net.autotune,
+        trace_path: observe.trace_path,
+        metrics_path: observe.metrics_path,
         ..Config::default()
     };
     // The epoch must postdate the bootstrap handshake (which can take

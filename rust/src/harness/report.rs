@@ -45,10 +45,13 @@ pub fn latency_cells(outcome: &Outcome) -> [String; 3] {
 /// (socket buffer full), `net-shm-full` counts shm-ring-full stalls,
 /// and `ring-resizes` / `cadence-adj` count governor decisions applied
 /// (live shm-ring grows and progress-flush cadence changes).
-/// `peer-lost` counts peer processes whose stream ended without the
-/// orderly goodbye — abrupt deaths the recovery machinery restarts from
-/// a checkpoint for; zero on clean runs.
-pub const TELEMETRY_HEADER: [&str; 22] = [
+/// `gov-prog-frames` is the governor's conservation ledger (progress
+/// frames its sampling epochs observed; equals `prog-frames-tx` summed
+/// over the process after an orderly autotuned shutdown). `peer-lost`
+/// counts peer processes whose stream ended without the orderly
+/// goodbye — abrupt deaths the recovery machinery restarts from a
+/// checkpoint for; zero on clean runs.
+pub const TELEMETRY_HEADER: [&str; 23] = [
     "process",
     "worker",
     "parks",
@@ -70,34 +73,44 @@ pub const TELEMETRY_HEADER: [&str; 22] = [
     "net-shm-full",
     "ring-resizes",
     "cadence-adj",
+    "gov-prog-frames",
     "peer-lost",
 ];
 
-fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
-    vec![
-        process.to_string(),
-        worker.to_string(),
-        t.parks.to_string(),
-        t.unparks.to_string(),
-        t.ring_full_stalls.to_string(),
-        t.net.frames_sent.to_string(),
-        t.net.frames_recv.to_string(),
-        t.net.bytes_sent.to_string(),
-        t.net.bytes_recv.to_string(),
-        t.net.send_queue_stalls.to_string(),
-        t.net.progress_frames_sent.to_string(),
-        t.net.progress_frames_recv.to_string(),
-        t.net.progress_batches_recv.to_string(),
-        t.net.poll_wakeups.to_string(),
-        t.net.spurious_doorbell.to_string(),
-        t.net.spurious_waker.to_string(),
-        t.net.spurious_pollin_empty.to_string(),
-        t.net.partial_writes.to_string(),
-        t.net.shm_full_stalls.to_string(),
-        t.net.ring_resizes.to_string(),
-        t.net.cadence_adjusts.to_string(),
-        t.net.peer_lost.to_string(),
+/// The one structured view of a worker's counters that every rendering
+/// derives from: the human table rows below and the `--metrics` JSONL
+/// snapshots ([`crate::observe::metrics`]) both iterate this array, so
+/// a counter added here shows up everywhere under one name.
+pub fn telemetry_fields(t: &WorkerTelemetry) -> [(&'static str, u64); 21] {
+    [
+        ("parks", t.parks),
+        ("unparks", t.unparks),
+        ("ring-full", t.ring_full_stalls),
+        ("net-frames-tx", t.net.frames_sent),
+        ("net-frames-rx", t.net.frames_recv),
+        ("net-bytes-tx", t.net.bytes_sent),
+        ("net-bytes-rx", t.net.bytes_recv),
+        ("send-stalls", t.net.send_queue_stalls),
+        ("prog-frames-tx", t.net.progress_frames_sent),
+        ("prog-frames-rx", t.net.progress_frames_recv),
+        ("prog-fanout", t.net.progress_batches_recv),
+        ("net-polls", t.net.poll_wakeups),
+        ("spur-bell", t.net.spurious_doorbell),
+        ("spur-waker", t.net.spurious_waker),
+        ("spur-empty", t.net.spurious_pollin_empty),
+        ("net-partial-wr", t.net.partial_writes),
+        ("net-shm-full", t.net.shm_full_stalls),
+        ("ring-resizes", t.net.ring_resizes),
+        ("cadence-adj", t.net.cadence_adjusts),
+        ("gov-prog-frames", t.net.governor_progress_frames),
+        ("peer-lost", t.net.peer_lost),
     ]
+}
+
+fn telemetry_row(process: &str, worker: &str, t: &WorkerTelemetry) -> Vec<String> {
+    let mut row = vec![process.to_string(), worker.to_string()];
+    row.extend(telemetry_fields(t).iter().map(|(_, v)| v.to_string()));
+    row
 }
 
 /// Sums a group of workers' counters into one aggregate entry.
@@ -125,6 +138,7 @@ fn aggregate(workers: &[&WorkerTelemetry]) -> WorkerTelemetry {
         total.net.kernel_frame_bytes_tx += t.net.kernel_frame_bytes_tx;
         total.net.ring_resizes += t.net.ring_resizes;
         total.net.cadence_adjusts += t.net.cadence_adjusts;
+        total.net.governor_progress_frames += t.net.governor_progress_frames;
         total.net.peer_lost += t.net.peer_lost;
     }
     total
@@ -192,10 +206,91 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// Prints the per-epoch frontier-latency attribution of a traced run:
+/// per-worker lifetime totals (where each worker's epoch wall time
+/// went — operators, progress propagation, parking, checkpoints) and
+/// the slowest epochs by frontier latency (the run's critical path).
+/// No-op when the trace saw no closed epochs.
+pub fn print_epoch_attribution(report: &crate::observe::TraceReport) {
+    let totals: Vec<_> = report.totals.iter().filter(|t| t.epochs > 0).collect();
+    if totals.is_empty() {
+        return;
+    }
+    let pct = |part: u64, whole: u64| {
+        if whole == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", part as f64 * 100.0 / whole as f64)
+        }
+    };
+    let rows: Vec<Vec<String>> = totals
+        .iter()
+        .map(|t| {
+            vec![
+                t.worker.to_string(),
+                t.epochs.to_string(),
+                if t.measured > 0 { fmt_ms(t.latency_sum_ns / t.measured) } else { "-".into() },
+                if t.measured > 0 { fmt_ms(t.latency_max_ns) } else { "-".into() },
+                pct(t.op_ns, t.wall_ns),
+                pct(t.progress_ns, t.wall_ns),
+                pct(t.park_ns, t.wall_ns),
+                pct(t.checkpoint_ns, t.wall_ns),
+                t.records_in.to_string(),
+                t.records_out.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "frontier-latency attribution (per worker)",
+        &[
+            "worker", "epochs", "lat-avg", "lat-max", "op", "progress", "park", "ckpt", "in",
+            "out",
+        ],
+        &rows,
+    );
+    let worst: Vec<Vec<String>> = report
+        .worst
+        .iter()
+        .filter(|s| s.latency_ns.is_some())
+        .take(8)
+        .map(|s| {
+            vec![
+                s.worker.to_string(),
+                s.epoch.to_string(),
+                fmt_ms(s.latency_ns.unwrap_or(0)),
+                fmt_ms(s.wall_ns),
+                fmt_ms(s.op_ns),
+                fmt_ms(s.progress_ns),
+                fmt_ms(s.park_ns),
+                s.top_op.map_or("-".into(), |(op, ns)| format!("{op}:{}", fmt_ms(ns))),
+            ]
+        })
+        .collect();
+    if !worst.is_empty() {
+        print_table(
+            "slowest epochs (critical path, ms)",
+            &["worker", "epoch", "latency", "wall", "op", "progress", "park", "top-op"],
+            &worst,
+        );
+    }
+    if report.dropped > 0 {
+        println!("(trace rings dropped {} events under load)", report.dropped);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::harness::LatencyHistogram;
+
+    #[test]
+    fn telemetry_header_and_fields_stay_aligned() {
+        let fields = telemetry_fields(&WorkerTelemetry::default());
+        assert_eq!(TELEMETRY_HEADER.len(), 2 + fields.len());
+        for (i, (name, _)) in fields.iter().enumerate() {
+            assert_eq!(TELEMETRY_HEADER[2 + i], *name, "column {i} drifted");
+        }
+    }
 
     #[test]
     fn dnf_rows_say_dnf() {
@@ -228,7 +323,7 @@ mod tests {
         // One worker, one process: no aggregate row.
         let want: Vec<Vec<String>> = vec![[
             "0", "3", "10", "7", "2", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0", "0",
-            "0", "0", "0", "0", "0",
+            "0", "0", "0", "0", "0", "0",
         ]
         .iter()
         .map(|s| s.to_string())

@@ -89,6 +89,7 @@ pub mod dataflow;
 pub mod harness;
 pub mod net;
 pub mod nexmark;
+pub mod observe;
 pub mod operators;
 pub mod progress;
 pub mod recovery;

@@ -10,6 +10,8 @@
 //! ttd nexmark    [--query q4|q7] [--window-ms W] ...   the §7.4 queries
 //! ttd artifacts  [--dir PATH]                 verify the PJRT data plane
 //! ttd info                                    engine / environment info
+//! ttd trace-check --file out.json [--expect-workers N]
+//!                                 validate a --trace output file
 //! ttd recovery-demo [--workload wordcount|q4] [--epochs N]
 //!                [--checkpoint-dir D] [--checkpoint-interval E]
 //!                [--recover D] [--kill-process P --kill-after-ms M]
@@ -45,17 +47,31 @@
 //! telemetry-driven governor (live shm-ring grows + online
 //! progress-flush cadence) — the latter two propagate from process 0
 //! like the other tuning knobs.
+//!
+//! Any workload also takes `--trace out.json` (Chrome trace-event JSON:
+//! operator spans, progress/park/checkpoint spans, net instants, and
+//! per-epoch frontier-latency summaries — open in Perfetto) and
+//! `--metrics out.jsonl` (periodic telemetry snapshots). Both propagate
+//! from process 0 over the handshake; in multi-process runs each
+//! process writes `out.p<I>.json`. `ttd trace-check` validates a trace
+//! file's structure.
 
 use std::time::{Duration, Instant};
-use timestamp_tokens::config::{Config, NetOptions, NetTransport, Parking, ReactorBackend};
+use timestamp_tokens::config::{
+    Config, NetOptions, NetTransport, ObserveOptions, Parking, ReactorBackend,
+};
 use timestamp_tokens::coordination::Mechanism;
-use timestamp_tokens::harness::openloop::{run, run_cluster, Outcome, Params, Workload};
+use timestamp_tokens::harness::openloop::{
+    run_cluster_observed, run_observed, Outcome, Params, Workload,
+};
 use timestamp_tokens::harness::recovery_demo::{
     run_q4_recovery_demo, run_recovery_demo, DemoOutcome, RecoveryDemoParams,
 };
 use timestamp_tokens::net::NetError;
 use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
-use timestamp_tokens::nexmark::bench::{run_nexmark, run_nexmark_cluster, NexmarkParams, Query};
+use timestamp_tokens::nexmark::bench::{
+    run_nexmark_cluster_observed, run_nexmark_observed, NexmarkParams, Query,
+};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -85,6 +101,14 @@ impl Args {
             .get("mechanism")
             .map(|m| m.parse().expect("tokens|notifications|watermarks-x|watermarks-p"))
             .unwrap_or(Mechanism::Tokens)
+    }
+
+    /// The `--trace` / `--metrics` output paths (off by default).
+    fn observe(&self) -> ObserveOptions {
+        ObserveOptions {
+            trace_path: self.flags.get("trace").cloned(),
+            metrics_path: self.flags.get("metrics").cloned(),
+        }
     }
 
     /// The cluster topology requested on the command line.
@@ -319,12 +343,13 @@ fn main() {
                          workers, quantum {} ns, {:?}",
                         cluster.processes, params.quantum_ns, params.duration
                     );
-                    let outcome = run_cluster(
+                    let outcome = run_cluster_observed(
                         params,
                         cluster.processes,
                         process,
                         cluster.addresses,
                         cluster.net,
+                        args.observe(),
                     )
                     .unwrap_or_else(|e| {
                         eprintln!("{command}: cluster bootstrap failed: {e}");
@@ -337,7 +362,7 @@ fn main() {
                         "{command}: {mechanism:?}, {workers} workers, quantum {} ns, {:?}",
                         params.quantum_ns, params.duration
                     );
-                    (command.to_string(), run(params))
+                    (command.to_string(), run_observed(params, args.observe()))
                 }
             };
             print_outcome(&label, &outcome);
@@ -368,12 +393,13 @@ fn main() {
                         "nexmark {query:?}[p{process}]: {:?}, {} processes x {workers} workers",
                         params.mechanism, cluster.processes
                     );
-                    let outcome = run_nexmark_cluster(
+                    let outcome = run_nexmark_cluster_observed(
                         params,
                         cluster.processes,
                         process,
                         cluster.addresses,
                         cluster.net,
+                        args.observe(),
                     )
                     .unwrap_or_else(|e| {
                         eprintln!("nexmark: cluster bootstrap failed: {e}");
@@ -383,7 +409,7 @@ fn main() {
                 }
                 _ => {
                     println!("nexmark {query:?}: {:?}, {workers} workers", params.mechanism);
-                    ("nexmark".to_string(), run_nexmark(params))
+                    ("nexmark".to_string(), run_nexmark_observed(params, args.observe()))
                 }
             };
             print_outcome(&label, &outcome);
@@ -430,6 +456,8 @@ fn main() {
                 checkpoint_dir,
                 checkpoint_interval: args.get("checkpoint-interval", 0u64),
                 recover,
+                trace_path: args.flags.get("trace").cloned(),
+                metrics_path: args.flags.get("metrics").cloned(),
                 ..Config::default()
             };
             // Both demos share a signature; `--workload` picks the one the
@@ -464,6 +492,61 @@ fn main() {
                     std::process::exit(1);
                 }
             }
+        }
+        "trace-check" => {
+            // Structural validation of a `--trace` output file: parses
+            // the Chrome JSON, checks span nesting and per-epoch
+            // attribution, and (optionally) that every expected worker
+            // emitted at least one epoch summary. CI's trace-smoke job
+            // gates on this.
+            let path = args.flags.get("file").cloned().unwrap_or_else(|| {
+                eprintln!("usage: ttd trace-check --file out.json [--expect-workers N]");
+                std::process::exit(2);
+            });
+            let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                eprintln!("trace-check: cannot read {path}: {e}");
+                std::process::exit(1);
+            });
+            let stats = timestamp_tokens::observe::chrome::validate_trace(&text)
+                .unwrap_or_else(|e| {
+                    eprintln!("trace-check: {path}: {e}");
+                    std::process::exit(1);
+                });
+            println!(
+                "{path}: {} events, {} spans nested, worker tids {:?}, \
+                 epoch summaries {:?}",
+                stats.events, stats.spans, stats.worker_tids, stats.epoch_summaries
+            );
+            if stats.attribution_violations > 0 {
+                eprintln!(
+                    "trace-check: {} epoch summaries attribute more time than their \
+                     wall clock",
+                    stats.attribution_violations
+                );
+                std::process::exit(1);
+            }
+            let expect = args.get("expect-workers", 0usize);
+            if expect > 0 {
+                if stats.worker_tids.len() != expect {
+                    eprintln!(
+                        "trace-check: expected {expect} worker threads, saw {:?}",
+                        stats.worker_tids
+                    );
+                    std::process::exit(1);
+                }
+                for tid in &stats.worker_tids {
+                    let epochs = stats
+                        .epoch_summaries
+                        .iter()
+                        .find(|(t, _)| t == tid)
+                        .map_or(0, |(_, n)| *n);
+                    if epochs == 0 {
+                        eprintln!("trace-check: worker tid {tid} emitted no epoch summary");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            println!("trace-check OK");
         }
         "artifacts" => {
             let dir = args
@@ -510,10 +593,17 @@ fn main() {
                 "recovery: --checkpoint-dir D --checkpoint-interval E | --recover D \
                  [--workload wordcount|q4] (see `ttd recovery-demo`)"
             );
+            println!(
+                "observability: --trace out.json --metrics out.jsonl (any workload; \
+                 validate with `ttd trace-check --file out.json`)"
+            );
             println!("artifacts dir: artifacts/ (run `make artifacts`)");
         }
         _ => {
-            println!("usage: ttd <wordcount|noop|nexmark|recovery-demo|artifacts|info> [--flags]");
+            println!(
+                "usage: ttd <wordcount|noop|nexmark|recovery-demo|trace-check|artifacts|info> \
+                 [--flags]"
+            );
             println!("see `ttd info` and the module docs for details");
         }
     }

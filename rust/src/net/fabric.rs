@@ -152,11 +152,20 @@ pub struct FabricOptions {
     /// reactor thread (`--autotune`): live shm-ring grows and online
     /// progress-flush cadence adjustment driven by stall telemetry.
     pub tune: Option<Arc<TuneShared>>,
+    /// Reactor event tracer (`--trace`): wakeups, kernel/ring sends, ring
+    /// switches, and cadence adjustments become trace instants. `None`
+    /// (the default) costs one branch per emission site.
+    pub trace: Option<Arc<crate::observe::ReactorTracer>>,
 }
 
 impl Default for FabricOptions {
     fn default() -> Self {
-        FabricOptions { backend: ReadinessBackend::Poll, wake: None, tune: None }
+        FabricOptions {
+            backend: ReadinessBackend::Poll,
+            wake: None,
+            tune: None,
+            trace: None,
+        }
     }
 }
 
@@ -377,6 +386,12 @@ pub struct NetTelemetry {
     /// Online progress-flush cadence adjustments published by this
     /// process's governor (process-wide; slot 0).
     pub cadence_adjusts: u64,
+    /// Progress-frame deltas the governor consumed across its bookkeeping
+    /// epochs (process-wide; slot 0; zero without `--autotune`). The
+    /// reactor runs one final epoch at orderly exit, so after shutdown
+    /// this equals the process's `progress_frames_sent` sum — the
+    /// conservation invariant the cluster tests assert.
+    pub governor_progress_frames: u64,
     /// Peer processes observed to die abruptly — stream ended without the
     /// orderly goodbye frame (process-wide; slot 0). Nonzero only on
     /// faulted runs; the recovery pins assert survivors record exactly
@@ -405,6 +420,7 @@ impl NetStats {
             kernel_frame_bytes_tx: 0,
             ring_resizes: 0,
             cadence_adjusts: 0,
+            governor_progress_frames: 0,
             peer_lost: 0,
         }
     }
@@ -641,6 +657,8 @@ pub struct NetFabric {
     /// Shared tuning state; the governor runs on the reactor thread when
     /// present.
     tune: Option<Arc<TuneShared>>,
+    /// Reactor event tracer (see [`FabricOptions::trace`]).
+    trace: Option<Arc<crate::observe::ReactorTracer>>,
     /// Pending live ring-grow requests `(peer, new_capacity)` — pushed by
     /// [`NetFabric::request_ring_resize`], armed by the reactor.
     resize_requests: Mutex<Vec<(usize, usize)>>,
@@ -977,6 +995,7 @@ impl NetFabric {
             backend: options.backend,
             wake: options.wake,
             tune: options.tune,
+            trace: options.trace,
             resize_requests: Mutex::new(Vec::new()),
         });
         let waker = if reactor_links > 0 {
@@ -1151,6 +1170,8 @@ impl NetFabric {
             t.kernel_frame_bytes_tx = self.reactor.kernel_bytes_tx.load(Ordering::Relaxed);
             t.ring_resizes = self.reactor.ring_resizes.load(Ordering::Relaxed);
             t.cadence_adjusts = self.tune.as_ref().map_or(0, |tune| tune.cadence_adjusts());
+            t.governor_progress_frames =
+                self.tune.as_ref().map_or(0, |tune| tune.progress_frames_seen());
             t.peer_lost = self.reactor.peer_lost.load(Ordering::Relaxed);
         }
         t
@@ -1550,6 +1571,13 @@ impl NetFabric {
                     if let Some((capacity, applied)) = d.finished_switch.take() {
                         if applied {
                             self.reactor.ring_resizes.fetch_add(1, Ordering::Relaxed);
+                            if let Some(trace) = &self.trace {
+                                trace.instant(
+                                    crate::observe::EventKind::RingResize,
+                                    d.peer as u64,
+                                    capacity as u64,
+                                );
+                            }
                         }
                         if let Some(g) = governor.as_mut() {
                             g.resize_finished(d.peer, capacity, applied);
@@ -1561,6 +1589,8 @@ impl NetFabric {
                 woke = WakeCauses::default();
                 if governor.is_some() && epoch_at.elapsed() >= TUNE_EPOCH {
                     let g = governor.as_mut().expect("governor present");
+                    let adjusts0 =
+                        self.tune.as_ref().map_or(0, |tune| tune.cadence_adjusts());
                     self.run_tune_epoch(
                         g,
                         &mut drivers,
@@ -1568,6 +1598,15 @@ impl NetFabric {
                         &mut epoch_stalls,
                         &mut actions,
                     );
+                    if let (Some(trace), Some(tune)) = (&self.trace, &self.tune) {
+                        if tune.cadence_adjusts() != adjusts0 {
+                            trace.instant(
+                                crate::observe::EventKind::CadenceAdjust,
+                                tune.progress_flush().as_nanos() as u64,
+                                tune.cadence_adjusts(),
+                            );
+                        }
+                    }
                     epoch_at = Instant::now();
                 }
                 continue;
@@ -1625,6 +1664,9 @@ impl NetFabric {
                 match word.wait(expected, timeout) {
                     FutexWait::Woken => {
                         self.reactor.poll_wakeups.fetch_add(1, Ordering::Relaxed);
+                        if let Some(trace) = &self.trace {
+                            trace.instant(crate::observe::EventKind::ReactorWake, 1, 0);
+                        }
                         woke.waker = true;
                     }
                     // Timeout: bookkeeping, not a wake — fall through so
@@ -1654,6 +1696,13 @@ impl NetFabric {
                     Ok(ready) => {
                         if ready > 0 {
                             self.reactor.poll_wakeups.fetch_add(1, Ordering::Relaxed);
+                            if let Some(trace) = &self.trace {
+                                trace.instant(
+                                    crate::observe::EventKind::ReactorWake,
+                                    0,
+                                    ready as u64,
+                                );
+                            }
                             for event in readiness.ready() {
                                 if event.fd == waker_fd.fd() {
                                     woke.waker = true;
@@ -1669,6 +1718,23 @@ impl NetFabric {
                     Err(_) => std::thread::sleep(Duration::from_millis(1)),
                 }
                 waker_fd.drain();
+            }
+        }
+        // Orderly exit: run one final governor epoch so the counter
+        // deltas accumulated since the last 50ms boundary are consumed —
+        // without it, a run's final partial epoch simply vanished from
+        // the governor's ledger and `execute_cluster_telemetry`'s
+        // post-shutdown snapshot under-reported its inputs. (A severed
+        // fabric skips this: it is simulating a crash.)
+        if !self.abort.load(Ordering::Acquire) {
+            if let Some(g) = governor.as_mut() {
+                self.run_tune_epoch(
+                    g,
+                    &mut drivers,
+                    &mut epoch_book,
+                    &mut epoch_stalls,
+                    &mut actions,
+                );
             }
         }
         // Reactor exit: every link is finished (or abandoned past the
@@ -1750,6 +1816,13 @@ impl NetFabric {
                             self.reactor.partial_writes.fetch_add(1, Ordering::Relaxed);
                         }
                         if bytes > 0 {
+                            if let Some(trace) = &self.trace {
+                                trace.instant(
+                                    crate::observe::EventKind::NetSend,
+                                    bytes as u64,
+                                    d.peer as u64,
+                                );
+                            }
                             progress = true;
                         } else {
                             break; // interrupted; retry next pass
@@ -1865,6 +1938,13 @@ impl NetFabric {
                     let wrote = cursor.copy_to(|bytes| prod.write(bytes));
                     if wrote > 0 {
                         progress = true;
+                        if let Some(trace) = &self.trace {
+                            trace.instant(
+                                crate::observe::EventKind::NetSend,
+                                wrote as u64,
+                                d.peer as u64,
+                            );
+                        }
                         if d.prod.take_consumer_parked() {
                             d.wake_peer();
                         }

@@ -72,6 +72,12 @@ pub struct TuneShared {
     generation: AtomicU64,
     ring_resizes: AtomicU64,
     cadence_adjusts: AtomicU64,
+    /// Conservation ledger: every progress-frame delta the governor has
+    /// consumed across its epochs. The reactor runs one final epoch at
+    /// orderly exit, so at shutdown this equals the fabric's total
+    /// progress-frame count — asserted by the cluster integration tests
+    /// (a shortfall means an epoch's deltas were dropped).
+    progress_frames_seen: AtomicU64,
 }
 
 impl TuneShared {
@@ -83,6 +89,7 @@ impl TuneShared {
             generation: AtomicU64::new(0),
             ring_resizes: AtomicU64::new(0),
             cadence_adjusts: AtomicU64::new(0),
+            progress_frames_seen: AtomicU64::new(0),
         }
     }
 
@@ -112,6 +119,13 @@ impl TuneShared {
     /// Cadence adjustments made so far.
     pub fn cadence_adjusts(&self) -> u64 {
         self.cadence_adjusts.load(Ordering::Relaxed)
+    }
+
+    /// Total progress-frame deltas the governor has consumed (see the
+    /// field docs: equals the fabric's frame count after the reactor's
+    /// final epoch at orderly exit).
+    pub fn progress_frames_seen(&self) -> u64 {
+        self.progress_frames_seen.load(Ordering::Relaxed)
     }
 
     fn publish_flush(&self, ns: u64) {
@@ -215,6 +229,11 @@ impl Governor {
     /// `actions` (cleared by the caller; reused so the steady state
     /// allocates nothing).
     pub fn epoch(&mut self, stats: &EpochStats<'_>, actions: &mut Vec<Action>) {
+        // Conservation ledger first, unconditionally: even an epoch that
+        // changes nothing must account its deltas.
+        self.shared
+            .progress_frames_seen
+            .fetch_add(stats.progress_frames, Ordering::Relaxed);
         // Ring growth: sustained full-ring stalls mean the producer is
         // repeatedly parking on capacity, the one thing more bytes fix.
         for &(peer, stalls) in stats.per_peer_shm_stalls {

@@ -102,10 +102,20 @@ fn collect(results: Vec<WorkerOutcome>, duration: Duration) -> Outcome {
 
 /// Runs one NEXMark experiment.
 pub fn run_nexmark(params: NexmarkParams) -> Outcome {
+    run_nexmark_observed(params, crate::config::ObserveOptions::default())
+}
+
+/// [`run_nexmark`] with event tracing / metrics export.
+pub fn run_nexmark_observed(
+    params: NexmarkParams,
+    observe: crate::config::ObserveOptions,
+) -> Outcome {
     let epoch = Instant::now() + Duration::from_millis(50);
     let config = Config {
         workers: params.workers,
         pin_workers: params.pin_workers,
+        trace_path: observe.trace_path,
+        metrics_path: observe.metrics_path,
         ..Config::default()
     };
     let results = execute::<u64, _, _>(config, move |worker| drive(worker, params, epoch));
@@ -124,6 +134,26 @@ pub fn run_nexmark_cluster(
     addresses: Vec<String>,
     net: crate::config::NetOptions,
 ) -> Result<Outcome, NetError> {
+    run_nexmark_cluster_observed(
+        params,
+        processes,
+        process_index,
+        addresses,
+        net,
+        crate::config::ObserveOptions::default(),
+    )
+}
+
+/// [`run_nexmark_cluster`] with event tracing / metrics export (process
+/// 0's paths propagate cluster-wide over the handshake).
+pub fn run_nexmark_cluster_observed(
+    params: NexmarkParams,
+    processes: usize,
+    process_index: usize,
+    addresses: Vec<String>,
+    net: crate::config::NetOptions,
+    observe: crate::config::ObserveOptions,
+) -> Result<Outcome, NetError> {
     let config = Config {
         workers: params.workers,
         pin_workers: params.pin_workers,
@@ -134,6 +164,8 @@ pub fn run_nexmark_cluster(
         reactor_backend: net.reactor,
         parking: net.parking,
         autotune: net.autotune,
+        trace_path: observe.trace_path,
+        metrics_path: observe.metrics_path,
         ..Config::default()
     };
     let epoch_cell = std::sync::OnceLock::new();

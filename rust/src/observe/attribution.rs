@@ -1,0 +1,251 @@
+//! Frontier-latency attribution: folds one worker's event stream into
+//! per-epoch critical-path summaries.
+//!
+//! The invariant that makes this a streaming fold instead of a join:
+//! within one worker thread, the epoch stamp only changes at
+//! [`EventKind::EpochClose`](super::EventKind::EpochClose), and every
+//! span stamped `e` both starts and ends between the close of the
+//! previous epoch and the close of `e` (emission is sequential with the
+//! frontier check in the same step loop). So the spans charged to an
+//! epoch partition a slice of that worker's timeline, and their sum can
+//! never exceed the epoch's wall window — the property the integration
+//! tests assert on exported traces.
+//!
+//! Epochs here are frontier *values* (quantized timestamps), not dense
+//! indices: when the frontier moves `v → v'` exactly one window closes,
+//! attributed to `v`.
+
+use super::{unpack_io, Event, EventKind, NO_EPOCH};
+use std::collections::BTreeMap;
+
+/// Where one epoch's wall time went, for one worker.
+#[derive(Clone, Debug, Default)]
+pub struct EpochSummary {
+    /// Global worker index.
+    pub worker: usize,
+    /// The frontier value whose window closed.
+    pub epoch: u64,
+    /// Window open (previous close), ns since trace epoch.
+    pub open_ns: u64,
+    /// Window close, ns since trace epoch.
+    pub close_ns: u64,
+    /// `close_ns - open_ns`.
+    pub wall_ns: u64,
+    /// Close minus this worker's `advance_to(epoch)`, when observed —
+    /// the end-to-end frontier latency for the epoch.
+    pub latency_ns: Option<u64>,
+    /// Operator residency inside the window.
+    pub op_ns: u64,
+    /// Progress propagation (flush + apply) inside the window.
+    pub progress_ns: u64,
+    /// Parked time inside the window.
+    pub park_ns: u64,
+    /// Checkpoint seal/capture time inside the window.
+    pub checkpoint_ns: u64,
+    /// Records consumed by operators during the window.
+    pub records_in: u64,
+    /// Records produced by operators during the window.
+    pub records_out: u64,
+    /// The operator with the largest residency: `(node, ns)`.
+    pub top_op: Option<(u64, u64)>,
+    /// Events folded into this summary.
+    pub events: u64,
+}
+
+impl EpochSummary {
+    /// Total attributed ns (must be ≤ `wall_ns` up to clock slack).
+    pub fn attributed_ns(&self) -> u64 {
+        self.op_ns + self.progress_ns + self.park_ns + self.checkpoint_ns
+    }
+}
+
+#[derive(Default)]
+struct Acc {
+    // Per-operator residency; graphs are small, linear scan wins.
+    ops: Vec<(u64, u64)>,
+    progress_ns: u64,
+    park_ns: u64,
+    checkpoint_ns: u64,
+    records_in: u64,
+    records_out: u64,
+    events: u64,
+}
+
+impl Acc {
+    fn add_op(&mut self, node: u64, ns: u64) {
+        for (n, total) in self.ops.iter_mut() {
+            if *n == node {
+                *total += ns;
+                return;
+            }
+        }
+        self.ops.push((node, ns));
+    }
+}
+
+/// Hard cap on concurrently-open epoch accumulators per worker; only
+/// reachable if close events were dropped on a full ring, in which case
+/// attribution is best-effort anyway.
+const MAX_OPEN: usize = 1024;
+
+/// The per-worker fold state.
+pub struct WorkerAttribution {
+    worker: usize,
+    last_close_ns: u64,
+    advance: BTreeMap<u64, u64>,
+    open: BTreeMap<u64, Acc>,
+}
+
+impl WorkerAttribution {
+    /// A fresh fold for global worker `worker`.
+    pub fn new(worker: usize) -> WorkerAttribution {
+        WorkerAttribution {
+            worker,
+            last_close_ns: 0,
+            advance: BTreeMap::new(),
+            open: BTreeMap::new(),
+        }
+    }
+
+    /// Folds one event; pushes a summary onto `out` when a window
+    /// closes.
+    pub fn on_event(&mut self, e: &Event, out: &mut Vec<EpochSummary>) {
+        match e.kind {
+            EventKind::InputAdvance => {
+                // The latency clock for epoch `e.epoch` starts at the
+                // first advance past it.
+                self.advance.entry(e.epoch).or_insert(e.t_ns);
+            }
+            EventKind::EpochClose => {
+                if e.epoch != NO_EPOCH {
+                    self.close_epoch(e.epoch, e.t_ns, e.a, out);
+                }
+            }
+            _ => {
+                if e.epoch == NO_EPOCH {
+                    return; // Pre-frontier startup or teardown: unattributable.
+                }
+                if self.open.len() >= MAX_OPEN && !self.open.contains_key(&e.epoch) {
+                    return;
+                }
+                let acc = self.open.entry(e.epoch).or_default();
+                acc.events += 1;
+                match e.kind {
+                    EventKind::OpSpan => {
+                        acc.add_op(e.a, e.dur_ns);
+                        let (rin, rout) = unpack_io(e.b);
+                        acc.records_in += rin;
+                        acc.records_out += rout;
+                    }
+                    EventKind::ProgressFlush | EventKind::ProgressApply => {
+                        acc.progress_ns += e.dur_ns;
+                    }
+                    EventKind::Park => acc.park_ns += e.dur_ns,
+                    EventKind::CheckpointSeal | EventKind::CheckpointCapture => {
+                        acc.checkpoint_ns += e.dur_ns;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    fn close_epoch(
+        &mut self,
+        epoch: u64,
+        t_ns: u64,
+        new_frontier: u64,
+        out: &mut Vec<EpochSummary>,
+    ) {
+        let acc = self.open.remove(&epoch).unwrap_or_default();
+        let advance = self.advance.remove(&epoch);
+        let top_op = acc.ops.iter().copied().max_by_key(|(_, ns)| *ns);
+        out.push(EpochSummary {
+            worker: self.worker,
+            epoch,
+            open_ns: self.last_close_ns,
+            close_ns: t_ns,
+            wall_ns: t_ns.saturating_sub(self.last_close_ns),
+            latency_ns: advance.map(|a| t_ns.saturating_sub(a)),
+            op_ns: acc.ops.iter().map(|(_, ns)| ns).sum(),
+            progress_ns: acc.progress_ns,
+            park_ns: acc.park_ns,
+            checkpoint_ns: acc.checkpoint_ns,
+            records_in: acc.records_in,
+            records_out: acc.records_out,
+            top_op,
+            events: acc.events,
+        });
+        self.last_close_ns = t_ns;
+        // Drop state for epochs the frontier jumped over (and any
+        // stragglers that lost their close to a ring drop).
+        if new_frontier == NO_EPOCH {
+            self.advance.clear();
+            self.open.clear();
+        } else {
+            self.advance = self.advance.split_off(&new_frontier);
+            self.open = self.open.split_off(&new_frontier);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observe::pack_io;
+
+    fn ev(kind: EventKind, t_ns: u64, dur_ns: u64, epoch: u64, a: u64, b: u64) -> Event {
+        Event { kind, t_ns, dur_ns, epoch, a, b }
+    }
+
+    #[test]
+    fn windows_partition_the_timeline_and_components_fit() {
+        let mut fold = WorkerAttribution::new(3);
+        let mut out = Vec::new();
+        fold.on_event(&ev(EventKind::InputAdvance, 10, 0, 0, 0, 0), &mut out);
+        fold.on_event(&ev(EventKind::OpSpan, 100, 40, 0, 7, pack_io(16, 8)), &mut out);
+        fold.on_event(&ev(EventKind::Park, 150, 30, 0, 0, 0), &mut out);
+        fold.on_event(&ev(EventKind::ProgressFlush, 190, 5, 0, 4, 0), &mut out);
+        fold.on_event(&ev(EventKind::EpochClose, 200, 0, 0, 8192, 0), &mut out);
+        assert_eq!(out.len(), 1);
+        let s = &out[0];
+        assert_eq!((s.worker, s.epoch), (3, 0));
+        assert_eq!((s.open_ns, s.close_ns, s.wall_ns), (0, 200, 200));
+        assert_eq!(s.latency_ns, Some(190));
+        assert_eq!((s.op_ns, s.park_ns, s.progress_ns), (40, 30, 5));
+        assert_eq!((s.records_in, s.records_out), (16, 8));
+        assert_eq!(s.top_op, Some((7, 40)));
+        assert!(s.attributed_ns() <= s.wall_ns);
+
+        // Next window opens where the previous closed.
+        fold.on_event(&ev(EventKind::OpSpan, 210, 20, 8192, 7, 0), &mut out);
+        fold.on_event(&ev(EventKind::EpochClose, 300, 0, 8192, NO_EPOCH, 0), &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[1].open_ns, out[1].close_ns), (200, 300));
+        assert_eq!(out[1].op_ns, 20);
+    }
+
+    #[test]
+    fn frontier_jumps_discard_skipped_state() {
+        let mut fold = WorkerAttribution::new(0);
+        let mut out = Vec::new();
+        fold.on_event(&ev(EventKind::InputAdvance, 1, 0, 100, 0, 0), &mut out);
+        fold.on_event(&ev(EventKind::InputAdvance, 2, 0, 200, 0, 0), &mut out);
+        // Frontier jumps 0 -> 300: only epoch 0's window closes; the
+        // advance marks for 100/200 must not leak.
+        fold.on_event(&ev(EventKind::EpochClose, 50, 0, 0, 300, 0), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].epoch, 0);
+        assert!(fold.advance.is_empty());
+    }
+
+    #[test]
+    fn unknown_epoch_events_are_ignored() {
+        let mut fold = WorkerAttribution::new(0);
+        let mut out = Vec::new();
+        fold.on_event(&ev(EventKind::Park, 5, 100, NO_EPOCH, 0, 0), &mut out);
+        fold.on_event(&ev(EventKind::EpochClose, 50, 0, 0, 1, 0), &mut out);
+        assert_eq!(out[0].park_ns, 0);
+        assert_eq!(out[0].events, 0);
+    }
+}

@@ -1,0 +1,589 @@
+//! Chrome trace-event JSON: streaming writer, a minimal parser for our
+//! own output, and the structural validator behind `ttd trace-check`
+//! and the observability integration tests.
+//!
+//! The writer emits the JSON-object form (`{"traceEvents": [...]}`,
+//! `displayTimeUnit` ms) with exactly one event per line, so the files
+//! are both valid JSON for `chrome://tracing` / Perfetto and grep-able.
+//! Timestamps are microseconds with nanosecond-resolution fractions —
+//! integer-µs rounding would create 1 µs phantom overlaps between
+//! back-to-back spans and break nesting validation.
+
+use std::io::{self, BufWriter, Write};
+
+/// Streaming writer for one process's trace file.
+pub struct ChromeWriter {
+    out: BufWriter<std::fs::File>,
+    first: bool,
+    events: u64,
+}
+
+/// Formats ns as fractional µs (Chrome's `ts`/`dur` unit).
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+/// Escapes a string for a JSON literal (we only ever emit short ASCII
+/// names, but stay correct for anything).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn args_json(args: &[(&str, u64)]) -> String {
+    let mut s = String::from("{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\"{}\":{}", escape(k), v));
+    }
+    s.push('}');
+    s
+}
+
+impl ChromeWriter {
+    /// Creates `path` and writes the stream header.
+    pub fn create(path: &str) -> io::Result<ChromeWriter> {
+        let file = std::fs::File::create(path)?;
+        let mut out = BufWriter::new(file);
+        out.write_all(b"{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n")?;
+        Ok(ChromeWriter { out, first: true, events: 0 })
+    }
+
+    fn event_line(&mut self, body: &str) -> io::Result<()> {
+        if self.first {
+            self.first = false;
+        } else {
+            self.out.write_all(b",\n")?;
+        }
+        self.out.write_all(body.as_bytes())?;
+        self.events += 1;
+        Ok(())
+    }
+
+    /// Names the process track (`pid`).
+    pub fn process_name(&mut self, pid: usize, name: &str) -> io::Result<()> {
+        let line = format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(name)
+        );
+        self.event_line(&line)
+    }
+
+    /// Names a thread track (`tid`).
+    pub fn thread_name(&mut self, pid: usize, tid: u64, name: &str) -> io::Result<()> {
+        let line = format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(name)
+        );
+        self.event_line(&line)
+    }
+
+    /// A complete span (`ph:"X"`).
+    pub fn span(
+        &mut self,
+        pid: usize,
+        tid: u64,
+        t_ns: u64,
+        dur_ns: u64,
+        name: &str,
+        args: &[(&str, u64)],
+    ) -> io::Result<()> {
+        let line = format!(
+            "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{},\"dur\":{},\
+             \"name\":\"{}\",\"args\":{}}}",
+            us(t_ns),
+            us(dur_ns),
+            escape(name),
+            args_json(args)
+        );
+        self.event_line(&line)
+    }
+
+    /// A thread-scoped instant (`ph:"i"`).
+    pub fn instant(
+        &mut self,
+        pid: usize,
+        tid: u64,
+        t_ns: u64,
+        name: &str,
+        args: &[(&str, u64)],
+    ) -> io::Result<()> {
+        let line = format!(
+            "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\"ts\":{},\
+             \"name\":\"{}\",\"args\":{}}}",
+            us(t_ns),
+            escape(name),
+            args_json(args)
+        );
+        self.event_line(&line)
+    }
+
+    /// A counter sample (`ph:"C"`): each arg is one series on the track.
+    pub fn counter(
+        &mut self,
+        pid: usize,
+        t_ns: u64,
+        name: &str,
+        args: &[(&str, u64)],
+    ) -> io::Result<()> {
+        let line = format!(
+            "{{\"ph\":\"C\",\"pid\":{pid},\"tid\":0,\"ts\":{},\"name\":\"{}\",\"args\":{}}}",
+            us(t_ns),
+            escape(name),
+            args_json(args)
+        );
+        self.event_line(&line)
+    }
+
+    /// Events written so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Writes the trailer and flushes.
+    pub fn finish(mut self) -> io::Result<u64> {
+        self.out.write_all(b"\n]}\n")?;
+        self.out.flush()?;
+        Ok(self.events)
+    }
+}
+
+/// A parsed JSON value. Numbers are `f64` (every number we emit is
+/// exact below 2^53; trace ns fit for runs shorter than ~104 days).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer value, if a whole number.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// String value, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if an array.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("json parse error at byte {}: {msg}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (the input is a &str
+                    // upstream, so boundaries are valid).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || b == b'.' || b == b'e' || b == b'E' || b == b'+' || b == b'-' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+}
+
+/// Parses a complete JSON document.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+/// What structural validation of a trace file found.
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    /// Total events (including metadata).
+    pub events: usize,
+    /// `"X"` spans checked for nesting.
+    pub spans: usize,
+    /// Worker tids seen (tids below [`super::REACTOR_TID`] with at
+    /// least one non-metadata event), ascending.
+    pub worker_tids: Vec<u64>,
+    /// Per worker tid: how many `"epoch"` summary instants it emitted.
+    pub epoch_summaries: Vec<(u64, usize)>,
+    /// `"epoch"` instants whose attributed components exceeded the
+    /// epoch's wall time (beyond tolerance) — must be zero.
+    pub attribution_violations: usize,
+}
+
+/// Tolerance for span-overlap comparisons, in µs. We emit exact ns
+/// fractions; this only absorbs f64 parse rounding.
+const OVERLAP_EPS_US: f64 = 0.002;
+
+/// Parses `text` as Chrome trace JSON and validates the invariants our
+/// writer promises: spans on each thread nest (ours are sequential, so
+/// they must be disjoint or contained), and every `"epoch"` summary's
+/// attributed time fits inside its measured wall time.
+pub fn validate_trace(text: &str) -> Result<TraceStats, String> {
+    let root = parse(text)?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut stats = TraceStats { events: events.len(), ..TraceStats::default() };
+
+    // Collect spans per (pid, tid) and epoch instants per tid.
+    use std::collections::BTreeMap;
+    let mut spans: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut tids: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut summaries: BTreeMap<u64, usize> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|v| v.as_str()).unwrap_or("");
+        if ph == "M" {
+            continue;
+        }
+        let pid = e.get("pid").and_then(|v| v.as_u64()).unwrap_or(0);
+        let tid = e.get("tid").and_then(|v| v.as_u64()).unwrap_or(0);
+        if ph != "C" && tid < super::REACTOR_TID {
+            *tids.entry(tid).or_insert(0) += 1;
+        }
+        match ph {
+            "X" => {
+                let ts = e
+                    .get("ts")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| "span without ts".to_string())?;
+                let dur = e.get("dur").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                spans.entry((pid, tid)).or_default().push((ts, dur));
+            }
+            "i" => {
+                let name = e.get("name").and_then(|v| v.as_str()).unwrap_or("");
+                if name == "epoch" {
+                    *summaries.entry(tid).or_insert(0) += 1;
+                    let args = e.get("args").ok_or_else(|| "epoch without args".to_string())?;
+                    let field = |k: &str| args.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+                    let wall = field("wall_ns");
+                    let attributed = field("op_ns")
+                        + field("progress_ns")
+                        + field("park_ns")
+                        + field("ckpt_ns");
+                    // Components are measured strictly inside the
+                    // window; allow 1µs of clock-read slack.
+                    if attributed > wall + 1_000 {
+                        stats.attribution_violations += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Nesting: per thread, sorted by start, consecutive spans must be
+    // disjoint or contained — a partial overlap is a malformed trace.
+    for ((pid, tid), mut list) in spans {
+        list.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut open: Vec<(f64, f64)> = Vec::new(); // stack of (start, end)
+        for (ts, dur) in list {
+            let end = ts + dur;
+            while let Some(&(_, open_end)) = open.last() {
+                if ts >= open_end - OVERLAP_EPS_US {
+                    open.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, open_end)) = open.last() {
+                if end > open_end + OVERLAP_EPS_US {
+                    return Err(format!(
+                        "span overlap on pid {pid} tid {tid}: [{ts}, {end}] vs \
+                         enclosing end {open_end}"
+                    ));
+                }
+            }
+            open.push((ts, end));
+            stats.spans += 1;
+        }
+    }
+
+    stats.worker_tids = tids.keys().copied().collect();
+    stats.epoch_summaries = summaries.into_iter().collect();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_round_trips_scalars_and_structures() {
+        let v = parse(r#"{"a":[1,2.5,-3],"b":"x\ny","c":true,"d":null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().as_array().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(v.get("c"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("d"), Some(&Json::Null));
+        assert!(parse("{\"a\":1}garbage").is_err());
+        assert!(parse("[1,").is_err());
+    }
+
+    #[test]
+    fn writer_output_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("ttd-chrome-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let path = path.to_str().unwrap();
+        let mut w = ChromeWriter::create(path).unwrap();
+        w.process_name(0, "ttd p0").unwrap();
+        w.thread_name(0, 0, "worker 0").unwrap();
+        w.span(0, 0, 1_000, 500, "op:map", &[("epoch", 3), ("in", 8)]).unwrap();
+        w.span(0, 0, 2_000, 250, "park", &[]).unwrap();
+        w.instant(
+            0,
+            0,
+            2_500,
+            "epoch",
+            &[("epoch", 3), ("wall_ns", 1_000), ("op_ns", 500), ("progress_ns", 100)],
+        )
+        .unwrap();
+        w.counter(0, 2_500, "net", &[("frames_tx", 7)]).unwrap();
+        let n = w.finish().unwrap();
+        assert_eq!(n, 6);
+        let text = std::fs::read_to_string(path).unwrap();
+        let stats = validate_trace(&text).unwrap();
+        assert_eq!(stats.spans, 2);
+        assert_eq!(stats.worker_tids, vec![0]);
+        assert_eq!(stats.epoch_summaries, vec![(0, 1)]);
+        assert_eq!(stats.attribution_violations, 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn overlapping_spans_are_rejected_and_contained_ok() {
+        let trace = |spans: &str| {
+            format!("{{\"traceEvents\":[{spans}]}}")
+        };
+        // Contained spans nest.
+        let ok = trace(
+            "{\"ph\":\"X\",\"pid\":0,\"tid\":1,\"ts\":10.0,\"dur\":10.0,\"name\":\"a\"},\
+             {\"ph\":\"X\",\"pid\":0,\"tid\":1,\"ts\":12.0,\"dur\":2.0,\"name\":\"b\"}",
+        );
+        assert!(validate_trace(&ok).is_ok());
+        // Partial overlap must fail.
+        let bad = trace(
+            "{\"ph\":\"X\",\"pid\":0,\"tid\":1,\"ts\":10.0,\"dur\":10.0,\"name\":\"a\"},\
+             {\"ph\":\"X\",\"pid\":0,\"tid\":1,\"ts\":15.0,\"dur\":10.0,\"name\":\"b\"}",
+        );
+        assert!(validate_trace(&bad).is_err());
+    }
+
+    #[test]
+    fn attribution_violations_are_counted() {
+        let text = "{\"traceEvents\":[{\"ph\":\"i\",\"pid\":0,\"tid\":0,\"ts\":1.0,\
+                    \"name\":\"epoch\",\"args\":{\"wall_ns\":100,\"op_ns\":5000}}]}";
+        let stats = validate_trace(text).unwrap();
+        assert_eq!(stats.attribution_violations, 1);
+    }
+}

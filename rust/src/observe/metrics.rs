@@ -1,0 +1,98 @@
+//! JSONL metrics export: periodic machine-readable snapshots of the
+//! same telemetry counters the end-of-run human tables print
+//! (`WorkerTelemetry` / `NetTelemetry` / governor counters), one JSON
+//! object per line. Field names are shared with the table headers via
+//! [`crate::harness::report::telemetry_fields`], so the two renderings
+//! cannot drift apart.
+
+use crate::harness::report::telemetry_fields;
+use crate::worker::allocator::WorkerTelemetry;
+use std::io::{self, BufWriter, Write};
+
+/// Streaming writer for one process's `--metrics` file.
+pub struct MetricsWriter {
+    out: BufWriter<std::fs::File>,
+    lines: u64,
+}
+
+impl MetricsWriter {
+    /// Creates (truncates) `path`.
+    pub fn create(path: &str) -> io::Result<MetricsWriter> {
+        let file = std::fs::File::create(path)?;
+        Ok(MetricsWriter { out: BufWriter::new(file), lines: 0 })
+    }
+
+    /// Writes one snapshot line for this process's workers.
+    pub fn snapshot(
+        &mut self,
+        t_ns: u64,
+        process: usize,
+        telemetry: &[WorkerTelemetry],
+    ) -> io::Result<()> {
+        let mut line = format!("{{\"t_ns\":{t_ns},\"process\":{process},\"workers\":[");
+        for (i, t) in telemetry.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{{\"worker\":{}", t.worker));
+            for (name, value) in telemetry_fields(t) {
+                line.push_str(&format!(",\"{name}\":{value}"));
+            }
+            line.push('}');
+        }
+        line.push_str("]}\n");
+        self.out.write_all(line.as_bytes())?;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Writes the closing line (totals the harness can key on) and
+    /// flushes.
+    pub fn finish(
+        mut self,
+        t_ns: u64,
+        process: usize,
+        events: u64,
+        dropped: u64,
+    ) -> io::Result<u64> {
+        let line = format!(
+            "{{\"t_ns\":{t_ns},\"process\":{process},\"final\":true,\
+             \"trace_events\":{events},\"trace_dropped\":{dropped}}}\n"
+        );
+        self.out.write_all(line.as_bytes())?;
+        self.out.flush()?;
+        Ok(self.lines + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observe::chrome;
+
+    #[test]
+    fn snapshot_lines_are_valid_json_with_shared_field_names() {
+        let dir = std::env::temp_dir().join(format!("ttd-metrics-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.jsonl");
+        let path = path.to_str().unwrap();
+        let mut w = MetricsWriter::create(path).unwrap();
+        let t = WorkerTelemetry { worker: 2, parks: 5, ..WorkerTelemetry::default() };
+        w.snapshot(1_000, 0, &[t]).unwrap();
+        let lines = w.finish(2_000, 0, 10, 0).unwrap();
+        assert_eq!(lines, 2);
+        let text = std::fs::read_to_string(path).unwrap();
+        let mut parsed = 0;
+        for line in text.lines() {
+            let v = chrome::parse(line).expect("each metrics line is standalone JSON");
+            assert!(v.get("t_ns").is_some());
+            parsed += 1;
+        }
+        assert_eq!(parsed, 2);
+        let first = chrome::parse(text.lines().next().unwrap()).unwrap();
+        let workers = first.get("workers").unwrap().as_array().unwrap();
+        assert_eq!(workers[0].get("worker").unwrap().as_u64(), Some(2));
+        assert_eq!(workers[0].get("parks").unwrap().as_u64(), Some(5));
+        std::fs::remove_file(path).ok();
+    }
+}

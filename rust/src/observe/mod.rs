@@ -1,0 +1,577 @@
+//! Self-hosted observability plane: typed, dual-stamped event tracing
+//! with frontier-latency attribution and Chrome-trace / metrics export.
+//!
+//! Every worker (and the net reactor) records fixed-size [`Event`]s —
+//! stamped with both wall-clock nanoseconds since the process trace epoch
+//! AND the current input epoch — into a bounded pre-allocated SPSC ring
+//! ([`crate::worker::ring`], the same family the data plane rides). A
+//! per-process writer thread drains the rings off the hot path, streams
+//! Chrome trace-event JSON and JSONL metrics snapshots, and folds the
+//! event stream into per-epoch latency attribution
+//! ([`attribution`]).
+//!
+//! # Obligations of event hooks (read before adding one)
+//!
+//! * **No allocation.** Hooks run inside the engine's zero-allocation
+//!   steady state (`alloc_steady_state.rs` pins the traced step loop and
+//!   the traced cross-process progress path). An [`Event`] is `Copy` and
+//!   lands in a pre-allocated ring slot; emitting one may not touch the
+//!   heap. Anything that needs a `String` (operator names) must happen
+//!   at dataflow *build* time ([`WorkerTracer::register_op`]).
+//! * **No backpressure.** A full event ring DROPS the event and bumps a
+//!   counter — hooks never block, spill, or retry. Losing telemetry is
+//!   always preferable to perturbing the measured system; drops are
+//!   reported in the trace report so they are never silent.
+//! * **One branch when disabled.** The tracer rides in an
+//!   `Option<Rc<WorkerTracer>>`; a `None` tracer must cost exactly the
+//!   `Option` check. No clock reads, no counter math, nothing.
+//!
+//! # Stamps
+//!
+//! `t_ns` is nanoseconds since the per-process [`TracePlane`] epoch (one
+//! `Instant` shared by every local tracer, so spans from different local
+//! threads are directly comparable). `epoch` is the worker's current
+//! minimum input frontier — the epoch whose completion the worker is
+//! working toward — maintained by the step loop and `u64::MAX` while
+//! unknown. The dual stamp is what makes frontier-latency attribution a
+//! stream fold instead of a join.
+
+pub mod attribution;
+pub mod chrome;
+pub mod metrics;
+mod writer;
+
+pub use writer::{TraceReport, WorkerTotals};
+
+use crate::worker::allocator::Fabric;
+use crate::worker::ring::{self, RingSender};
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Slots per event ring (per worker, and one for the reactor). Power of
+/// two; at ~48 bytes per slot this is ~1.5 MiB per traced thread. A
+/// burst beyond it drops events (counted), never blocks.
+pub const EVENT_RING_CAPACITY: usize = 1 << 15;
+
+/// Sentinel epoch stamp: "no epoch known" (before the first frontier
+/// observation, after the dataflow completes, reactor events).
+pub const NO_EPOCH: u64 = u64::MAX;
+
+/// Chrome `tid` of the net reactor thread (workers use their global
+/// worker index; this keeps the reactor clear of any plausible worker).
+pub const REACTOR_TID: u64 = 1_000_000;
+
+/// What one traced moment was. Kept `u8`-sized; the meaning of the `a` /
+/// `b` payload words is per-kind (documented on each variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// One operator activation (span). `a` = operator node id, `b` packs
+    /// `(records_in << 32) | records_out` for this activation.
+    OpSpan,
+    /// The worker parked waiting for work (span).
+    Park,
+    /// One progress broadcast flush (span). `a` = pointstamp updates
+    /// flushed, `b` = 1 if a spill retry was pending.
+    ProgressFlush,
+    /// Applying inbound progress batches (span). `a` = batches applied.
+    ProgressApply,
+    /// An operator input frontier moved (instant). `a` = operator node.
+    FrontierAdvance,
+    /// The worker's minimum frontier left `epoch` (instant): the window
+    /// of `epoch` closes here. `a` = the new frontier value
+    /// ([`NO_EPOCH`] when the dataflow completed).
+    EpochClose,
+    /// `InputSession::advance_to(epoch)` ran (instant): the epoch's
+    /// latency clock starts here.
+    InputAdvance,
+    /// The worker woke its peers after publishing work (instant).
+    Unpark,
+    /// Continuous checkpoint sealing work (span).
+    CheckpointSeal,
+    /// A frontier-aligned checkpoint capture (span). `a` = captures.
+    CheckpointCapture,
+    /// The net reactor woke from a sleep (instant; reactor ring).
+    ReactorWake,
+    /// Frame bytes left for a peer (instant; reactor ring). `a` = bytes
+    /// written, `b` = peer process.
+    NetSend,
+    /// A live shm-ring grow was applied (instant; reactor ring). `a` =
+    /// peer process, `b` = new capacity in bytes.
+    RingResize,
+    /// The governor republished the progress-flush cadence (instant;
+    /// reactor ring). `a` = new cadence in ns.
+    CadenceAdjust,
+}
+
+impl EventKind {
+    /// The Chrome trace-event name (operator spans are renamed to the
+    /// operator's registered name by the writer).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::OpSpan => "op",
+            EventKind::Park => "park",
+            EventKind::ProgressFlush => "progress-flush",
+            EventKind::ProgressApply => "progress-apply",
+            EventKind::FrontierAdvance => "frontier-advance",
+            EventKind::EpochClose => "epoch-close",
+            EventKind::InputAdvance => "input-advance",
+            EventKind::Unpark => "unpark",
+            EventKind::CheckpointSeal => "ckpt-seal",
+            EventKind::CheckpointCapture => "ckpt-capture",
+            EventKind::ReactorWake => "reactor-wake",
+            EventKind::NetSend => "net-send",
+            EventKind::RingResize => "ring-resize",
+            EventKind::CadenceAdjust => "cadence-adjust",
+        }
+    }
+
+    /// True iff events of this kind carry a duration (Chrome `"X"`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::OpSpan
+                | EventKind::Park
+                | EventKind::ProgressFlush
+                | EventKind::ProgressApply
+                | EventKind::CheckpointSeal
+                | EventKind::CheckpointCapture
+        )
+    }
+}
+
+/// One traced moment: fixed-size, `Copy`, pooled in the ring slots.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// Start time, ns since the process trace epoch.
+    pub t_ns: u64,
+    /// Duration in ns (0 for instants).
+    pub dur_ns: u64,
+    /// The emitting worker's current epoch ([`NO_EPOCH`] = unknown).
+    pub epoch: u64,
+    /// Kind-specific payload word.
+    pub a: u64,
+    /// Kind-specific payload word.
+    pub b: u64,
+}
+
+/// Packs an op activation's record counts into [`Event::b`].
+#[inline]
+pub fn pack_io(records_in: u64, records_out: u64) -> u64 {
+    (records_in.min(u32::MAX as u64) << 32) | records_out.min(u32::MAX as u64)
+}
+
+/// Unpacks [`pack_io`].
+#[inline]
+pub fn unpack_io(b: u64) -> (u64, u64) {
+    (b >> 32, b & u32::MAX as u64)
+}
+
+/// The per-worker tracer handle: deliberately non-`Send`, `Rc`-shared
+/// between the worker step loop, its operator handles, and its
+/// `Progcaster` — exactly like
+/// [`RecoveryContext`](crate::recovery::RecoveryContext). All state is
+/// `Cell`s and one ring producer; every method is allocation-free.
+pub struct WorkerTracer {
+    worker: usize,
+    t0: Instant,
+    sender: RefCell<RingSender<Event>>,
+    epoch: Cell<u64>,
+    records_in: Cell<u64>,
+    records_out: Cell<u64>,
+    dropped: Arc<AtomicU64>,
+    op_names: Option<Arc<Mutex<BTreeMap<u64, String>>>>,
+}
+
+impl WorkerTracer {
+    /// A standalone tracer (tests / benches): events land in `sender`'s
+    /// ring; the caller owns the receiver half.
+    pub fn new(worker: usize, t0: Instant, sender: RingSender<Event>) -> WorkerTracer {
+        WorkerTracer {
+            worker,
+            t0,
+            sender: RefCell::new(sender),
+            epoch: Cell::new(NO_EPOCH),
+            records_in: Cell::new(0),
+            records_out: Cell::new(0),
+            dropped: Arc::new(AtomicU64::new(0)),
+            op_names: None,
+        }
+    }
+
+    fn with_shared(
+        worker: usize,
+        t0: Instant,
+        sender: RingSender<Event>,
+        dropped: Arc<AtomicU64>,
+        op_names: Arc<Mutex<BTreeMap<u64, String>>>,
+    ) -> WorkerTracer {
+        WorkerTracer {
+            worker,
+            t0,
+            sender: RefCell::new(sender),
+            epoch: Cell::new(NO_EPOCH),
+            records_in: Cell::new(0),
+            records_out: Cell::new(0),
+            dropped,
+            op_names: Some(op_names),
+        }
+    }
+
+    /// The global worker index this tracer stamps for.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Nanoseconds since the process trace epoch.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// The worker's current epoch stamp.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch.get()
+    }
+
+    /// Updates the epoch stamp (the step loop, on frontier movement).
+    #[inline]
+    pub fn set_epoch(&self, epoch: u64) {
+        self.epoch.set(epoch);
+    }
+
+    /// Credits records consumed by an input handle this activation.
+    #[inline]
+    pub fn note_records_in(&self, n: u64) {
+        self.records_in.set(self.records_in.get() + n);
+    }
+
+    /// Credits records produced by an output handle this activation.
+    #[inline]
+    pub fn note_records_out(&self, n: u64) {
+        self.records_out.set(self.records_out.get() + n);
+    }
+
+    /// The running record counters (sampled around an op activation to
+    /// delta its records-in/out).
+    #[inline]
+    pub fn io_marks(&self) -> (u64, u64) {
+        (self.records_in.get(), self.records_out.get())
+    }
+
+    /// Emits an event stamped with the current epoch. Never blocks: a
+    /// full ring drops the event and counts it.
+    #[inline]
+    pub fn emit(&self, kind: EventKind, t_ns: u64, dur_ns: u64, a: u64, b: u64) {
+        self.emit_at(kind, t_ns, dur_ns, self.epoch.get(), a, b);
+    }
+
+    /// Emits an event with an explicit epoch stamp (the epoch-close
+    /// event stamps the epoch being *left*, not the one being entered).
+    #[inline]
+    pub fn emit_at(&self, kind: EventKind, t_ns: u64, dur_ns: u64, epoch: u64, a: u64, b: u64) {
+        let event = Event { kind, t_ns, dur_ns, epoch, a, b };
+        if self.sender.borrow_mut().send(event).is_err() {
+            // Full or disconnected: drop, never block (see module docs).
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Emits a zero-duration event at "now".
+    #[inline]
+    pub fn instant(&self, kind: EventKind, a: u64, b: u64) {
+        self.emit(kind, self.now_ns(), 0, a, b);
+    }
+
+    /// Registers an operator's display name (build time only — this
+    /// allocates, which the hot-path methods must not).
+    pub fn register_op(&self, node: u64, name: &str) {
+        if let Some(names) = &self.op_names {
+            names.lock().unwrap().entry(node).or_insert_with(|| name.to_string());
+        }
+    }
+
+    /// Events dropped on a full ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// The net reactor's tracer: `Send + Sync` (the reactor is its own
+/// thread), one uncontended mutex around the ring producer. Reactor
+/// events carry no epoch — frontier state is a worker concern.
+pub struct ReactorTracer {
+    t0: Instant,
+    sender: Mutex<RingSender<Event>>,
+    dropped: AtomicU64,
+}
+
+impl ReactorTracer {
+    /// A reactor tracer emitting into `sender`'s ring.
+    pub fn new(t0: Instant, sender: RingSender<Event>) -> ReactorTracer {
+        ReactorTracer { t0, sender: Mutex::new(sender), dropped: AtomicU64::new(0) }
+    }
+
+    /// Nanoseconds since the process trace epoch.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Emits a zero-duration reactor event. Never blocks.
+    #[inline]
+    pub fn instant(&self, kind: EventKind, a: u64, b: u64) {
+        let event = Event { kind, t_ns: self.now_ns(), dur_ns: 0, epoch: NO_EPOCH, a, b };
+        if self.sender.lock().unwrap().send(event).is_err() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events dropped on a full ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// What a process should trace and where it should put it. Built from
+/// [`Config`](crate::config::Config) by the execute paths; the bench and
+/// test harnesses construct it directly.
+#[derive(Clone, Debug, Default)]
+pub struct TraceConfig {
+    /// Chrome trace-event JSON output (`--trace`). `None` = no file;
+    /// events still drain (attribution and the report stay available).
+    pub trace_path: Option<String>,
+    /// JSONL metrics snapshots (`--metrics`). `None` = no file.
+    pub metrics_path: Option<String>,
+    /// This process's index (the Chrome `pid`).
+    pub process: usize,
+    /// Global index of this process's first worker.
+    pub base_worker: usize,
+    /// Workers hosted by this process (one event ring each).
+    pub local_workers: usize,
+    /// Print the per-epoch critical-path summary on finish (the CLI
+    /// wants it; library callers usually do not).
+    pub print_summary: bool,
+}
+
+/// How often the writer thread snapshots telemetry into the metrics
+/// file (and the Chrome counter tracks).
+pub const METRICS_INTERVAL: std::time::Duration = std::time::Duration::from_millis(50);
+
+/// The per-process observability plane: owns the event rings, hands a
+/// producer to each worker thread (and the reactor), and runs the
+/// writer thread that drains them. Modeled on
+/// [`CheckpointWriter`](crate::recovery::CheckpointWriter).
+pub struct TracePlane {
+    t0: Instant,
+    producers: Mutex<Vec<Option<RingSender<Event>>>>,
+    dropped: Vec<Arc<AtomicU64>>,
+    op_names: Arc<Mutex<BTreeMap<u64, String>>>,
+    reactor: Arc<ReactorTracer>,
+    fabric: Arc<Mutex<Option<Arc<Fabric>>>>,
+    closing: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<std::io::Result<TraceReport>>>>,
+    print_summary: bool,
+}
+
+impl TracePlane {
+    /// Builds the rings and spawns the writer thread. Telemetry
+    /// snapshots start once a fabric is handed over via
+    /// [`attach_fabric`](Self::attach_fabric) — the plane must exist
+    /// before the fabric so the reactor tracer can ride in the fabric's
+    /// options.
+    pub fn spawn(config: TraceConfig) -> Arc<TracePlane> {
+        let t0 = Instant::now();
+        let workers = config.local_workers.max(1);
+        let mut producers = Vec::with_capacity(workers);
+        let mut receivers = Vec::with_capacity(workers);
+        let mut dropped = Vec::with_capacity(workers);
+        for local in 0..workers {
+            let (tx, rx) = ring::channel::<Event>(EVENT_RING_CAPACITY);
+            producers.push(Some(tx));
+            receivers.push((config.base_worker + local, rx));
+            dropped.push(Arc::new(AtomicU64::new(0)));
+        }
+        let (reactor_tx, reactor_rx) = ring::channel::<Event>(EVENT_RING_CAPACITY);
+        let reactor = Arc::new(ReactorTracer::new(t0, reactor_tx));
+        let op_names: Arc<Mutex<BTreeMap<u64, String>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let closing = Arc::new(AtomicBool::new(false));
+        let fabric: Arc<Mutex<Option<Arc<Fabric>>>> = Arc::new(Mutex::new(None));
+        let print_summary = config.print_summary;
+        let task = writer::WriterTask {
+            config,
+            t0,
+            rings: receivers,
+            reactor_ring: reactor_rx,
+            op_names: op_names.clone(),
+            closing: closing.clone(),
+            fabric: fabric.clone(),
+            dropped: dropped.clone(),
+            reactor: reactor.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("ttd-trace".to_string())
+            .spawn(move || task.run())
+            .expect("spawn trace writer thread");
+        Arc::new(TracePlane {
+            t0,
+            producers: Mutex::new(producers),
+            dropped,
+            op_names,
+            reactor,
+            fabric,
+            closing,
+            handle: Mutex::new(Some(handle)),
+            print_summary,
+        })
+    }
+
+    /// The shared trace epoch every local tracer stamps against.
+    pub fn epoch_instant(&self) -> Instant {
+        self.t0
+    }
+
+    /// Claims local worker `local`'s tracer (each slot once; the
+    /// producer half of the ring moves into it). Called on the worker's
+    /// own thread, before the dataflow is built.
+    pub fn worker_tracer(&self, local: usize, global: usize) -> std::rc::Rc<WorkerTracer> {
+        let sender = self.producers.lock().unwrap()[local]
+            .take()
+            .expect("worker tracer claimed twice");
+        std::rc::Rc::new(WorkerTracer::with_shared(
+            global,
+            self.t0,
+            sender,
+            self.dropped[local].clone(),
+            self.op_names.clone(),
+        ))
+    }
+
+    /// The reactor's tracer (sharable; the fabric holds one `Arc`).
+    pub fn reactor_tracer(&self) -> Arc<ReactorTracer> {
+        self.reactor.clone()
+    }
+
+    /// Hands the worker fabric to the writer so periodic metrics
+    /// snapshots can sample its telemetry. Safe to call any time after
+    /// `spawn`; snapshots taken before this are simply skipped.
+    pub fn attach_fabric(&self, fabric: Arc<Fabric>) {
+        *self.fabric.lock().unwrap() = Some(fabric);
+    }
+
+    /// Stops the writer after a final drain and returns the run's trace
+    /// report. Call after every traced thread has finished emitting
+    /// (workers joined, net fabric shut down); events still in the
+    /// rings are drained before the writer exits.
+    pub fn finish(&self) -> std::io::Result<TraceReport> {
+        let Some(handle) = self.handle.lock().unwrap().take() else {
+            return Ok(TraceReport::default());
+        };
+        self.closing.store(true, Ordering::Release);
+        let report = handle.join().expect("trace writer panicked")?;
+        if self.print_summary {
+            crate::harness::report::print_epoch_attribution(&report);
+        }
+        Ok(report)
+    }
+}
+
+impl Drop for TracePlane {
+    fn drop(&mut self) {
+        // A plane dropped without `finish` (panic unwind, early error)
+        // must not leak its writer thread.
+        if self.handle.lock().unwrap().is_some() {
+            let _ = self.finish();
+        }
+    }
+}
+
+/// The per-process output file for `path` when `processes` processes
+/// each write their own: `out.json` becomes `out.p2.json` for process 2
+/// (single-process runs keep the path as given).
+pub fn per_process_path(path: &str, process: usize, processes: usize) -> String {
+    if processes <= 1 {
+        return path.to_string();
+    }
+    match path.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() => format!("{stem}.p{process}.{ext}"),
+        _ => format!("{path}.p{process}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_small_and_copy() {
+        // The ring pre-allocates slots; a fat event would bloat every
+        // traced thread by EVENT_RING_CAPACITY times the excess.
+        assert!(std::mem::size_of::<Event>() <= 48);
+        let e = Event {
+            kind: EventKind::OpSpan,
+            t_ns: 1,
+            dur_ns: 2,
+            epoch: 3,
+            a: 4,
+            b: 5,
+        };
+        let f = e; // Copy
+        assert_eq!(f.t_ns, e.t_ns);
+    }
+
+    #[test]
+    fn io_packing_round_trips_and_saturates() {
+        assert_eq!(unpack_io(pack_io(7, 9)), (7, 9));
+        assert_eq!(unpack_io(pack_io(u64::MAX, 3)), (u32::MAX as u64, 3));
+    }
+
+    #[test]
+    fn tracer_stamps_epoch_and_drops_on_full_ring() {
+        let (tx, mut rx) = ring::channel::<Event>(4);
+        let tracer = WorkerTracer::new(0, Instant::now(), tx);
+        tracer.set_epoch(42);
+        for _ in 0..10 {
+            tracer.instant(EventKind::Unpark, 1, 2);
+        }
+        let mut seen = 0;
+        while let Ok(e) = rx.try_recv() {
+            assert_eq!(e.epoch, 42);
+            assert_eq!(e.kind, EventKind::Unpark);
+            seen += 1;
+        }
+        assert!(seen >= 3, "ring capacity should admit several events");
+        assert_eq!(seen as u64 + tracer.dropped(), 10, "overflow must be counted, not lost");
+        assert!(tracer.dropped() > 0, "a full ring must drop");
+    }
+
+    #[test]
+    fn per_process_paths_suffix_before_the_extension() {
+        assert_eq!(per_process_path("out.json", 0, 1), "out.json");
+        assert_eq!(per_process_path("out.json", 1, 2), "out.p1.json");
+        assert_eq!(per_process_path("trace", 2, 3), "trace.p2");
+        assert_eq!(per_process_path("a/b.c.jsonl", 0, 2), "a/b.c.p0.jsonl");
+    }
+
+    #[test]
+    fn plane_round_trips_events_into_a_report() {
+        let plane =
+            TracePlane::spawn(TraceConfig { local_workers: 1, ..TraceConfig::default() });
+        let tracer = plane.worker_tracer(0, 0);
+        tracer.set_epoch(0);
+        tracer.emit(EventKind::OpSpan, 100, 50, 3, pack_io(8, 8));
+        tracer.emit_at(EventKind::EpochClose, 200, 0, 0, 1, 0);
+        drop(tracer);
+        let report = plane.finish().expect("writer io");
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.totals.len(), 1);
+        assert_eq!(report.totals[0].epochs, 1);
+        assert_eq!(report.totals[0].op_ns, 50);
+    }
+}

@@ -1,0 +1,358 @@
+//! The per-process trace writer thread: drains every local event ring
+//! off the hot path, streams Chrome trace JSON and metrics JSONL, and
+//! folds the stream into frontier-latency attribution. Nothing here
+//! runs on a worker thread; the workers only ever touch their ring
+//! producer.
+
+use super::attribution::{EpochSummary, WorkerAttribution};
+use super::chrome::ChromeWriter;
+use super::metrics::MetricsWriter;
+use super::{Event, EventKind, ReactorTracer, TraceConfig, METRICS_INTERVAL, REACTOR_TID};
+use crate::worker::allocator::Fabric;
+use crate::worker::ring::RingReceiver;
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-worker lifetime totals (every epoch, even beyond the retained
+/// sample).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerTotals {
+    /// Global worker index.
+    pub worker: usize,
+    /// Epoch windows closed.
+    pub epochs: u64,
+    /// Σ wall ns over all windows.
+    pub wall_ns: u64,
+    /// Σ operator residency ns.
+    pub op_ns: u64,
+    /// Σ progress propagation ns.
+    pub progress_ns: u64,
+    /// Σ parked ns.
+    pub park_ns: u64,
+    /// Σ checkpoint ns.
+    pub checkpoint_ns: u64,
+    /// Σ records consumed / produced.
+    pub records_in: u64,
+    /// Σ records produced.
+    pub records_out: u64,
+    /// Epochs with an observed `advance_to` (latency defined).
+    pub measured: u64,
+    /// Σ frontier latency ns over `measured` epochs.
+    pub latency_sum_ns: u64,
+    /// Max frontier latency ns.
+    pub latency_max_ns: u64,
+}
+
+impl WorkerTotals {
+    fn fold(&mut self, s: &EpochSummary) {
+        self.epochs += 1;
+        self.wall_ns += s.wall_ns;
+        self.op_ns += s.op_ns;
+        self.progress_ns += s.progress_ns;
+        self.park_ns += s.park_ns;
+        self.checkpoint_ns += s.checkpoint_ns;
+        self.records_in += s.records_in;
+        self.records_out += s.records_out;
+        if let Some(lat) = s.latency_ns {
+            self.measured += 1;
+            self.latency_sum_ns += lat;
+            self.latency_max_ns = self.latency_max_ns.max(lat);
+        }
+    }
+}
+
+/// How many of the slowest epochs (by frontier latency) the report
+/// keeps for the critical-path table.
+const WORST_KEPT: usize = 16;
+
+/// What a finished trace run looked like.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Events drained from the rings.
+    pub events: u64,
+    /// Events dropped on full rings (filled in by `TracePlane::finish`).
+    pub dropped: u64,
+    /// Chrome events written (0 when `--trace` was off).
+    pub chrome_events: u64,
+    /// Metrics lines written (0 when `--metrics` was off).
+    pub metrics_lines: u64,
+    /// Per-worker lifetime totals, worker-index order.
+    pub totals: Vec<WorkerTotals>,
+    /// The slowest epochs by frontier latency (the critical path),
+    /// slowest first.
+    pub worst: Vec<EpochSummary>,
+}
+
+pub(super) struct WriterTask {
+    pub config: TraceConfig,
+    pub t0: Instant,
+    pub rings: Vec<(usize, RingReceiver<Event>)>,
+    pub reactor_ring: RingReceiver<Event>,
+    pub op_names: Arc<Mutex<BTreeMap<u64, String>>>,
+    pub closing: Arc<AtomicBool>,
+    /// Late-attached telemetry source. The cluster path must build the
+    /// plane before the fabric exists (the reactor tracer goes into the
+    /// fabric's options), so the fabric arrives through this slot once
+    /// constructed; metrics sampling is a no-op until then.
+    pub fabric: Arc<Mutex<Option<Arc<Fabric>>>>,
+    pub dropped: Vec<Arc<AtomicU64>>,
+    pub reactor: Arc<ReactorTracer>,
+}
+
+impl WriterTask {
+    /// Total ring-full drops across every local tracer. Exact once the
+    /// producers are quiescent (which is when it's read).
+    fn total_dropped(&self) -> u64 {
+        self.dropped.iter().map(|d| d.load(Ordering::Relaxed)).sum::<u64>()
+            + self.reactor.dropped()
+    }
+}
+
+struct Sinks {
+    chrome: Option<ChromeWriter>,
+    metrics: Option<MetricsWriter>,
+}
+
+impl WriterTask {
+    pub fn run(mut self) -> io::Result<TraceReport> {
+        let pid = self.config.process;
+        let mut chrome = match &self.config.trace_path {
+            Some(path) => Some(ChromeWriter::create(path)?),
+            None => None,
+        };
+        let metrics = match &self.config.metrics_path {
+            Some(path) => Some(MetricsWriter::create(path)?),
+            None => None,
+        };
+        if let Some(w) = chrome.as_mut() {
+            w.process_name(pid, &format!("ttd p{pid}"))?;
+            for (worker, _) in &self.rings {
+                w.thread_name(pid, *worker as u64, &format!("worker {worker}"))?;
+            }
+            w.thread_name(pid, REACTOR_TID, "net reactor")?;
+        }
+        let mut sinks = Sinks { chrome, metrics };
+
+        let mut report = TraceReport::default();
+        let mut attributions: Vec<WorkerAttribution> =
+            self.rings.iter().map(|(w, _)| WorkerAttribution::new(*w)).collect();
+        report.totals = self
+            .rings
+            .iter()
+            .map(|(w, _)| WorkerTotals { worker: *w, ..WorkerTotals::default() })
+            .collect();
+        let mut names: BTreeMap<u64, String> = BTreeMap::new();
+        let mut closed: Vec<EpochSummary> = Vec::new();
+        let mut next_metrics = METRICS_INTERVAL;
+
+        loop {
+            let mut moved = false;
+            for slot in 0..self.rings.len() {
+                let mut budget = 4096; // Fairness across rings on sustained load.
+                while budget > 0 {
+                    let (worker, ring) = &mut self.rings[slot];
+                    let Ok(event) = ring.try_recv() else { break };
+                    budget -= 1;
+                    moved = true;
+                    report.events += 1;
+                    let worker = *worker;
+                    closed.clear();
+                    attributions[slot].on_event(&event, &mut closed);
+                    for summary in &closed {
+                        report.totals[slot].fold(summary);
+                        keep_worst(&mut report.worst, summary);
+                    }
+                    Self::write_event(
+                        &mut sinks,
+                        pid,
+                        worker as u64,
+                        &event,
+                        &self.op_names,
+                        &mut names,
+                        &closed,
+                    )?;
+                }
+            }
+            while let Ok(event) = self.reactor_ring.try_recv() {
+                moved = true;
+                report.events += 1;
+                Self::write_event(
+                    &mut sinks,
+                    pid,
+                    REACTOR_TID,
+                    &event,
+                    &self.op_names,
+                    &mut names,
+                    &[],
+                )?;
+            }
+
+            if self.t0.elapsed() >= next_metrics {
+                next_metrics += METRICS_INTERVAL;
+                self.sample_metrics(&mut sinks, &mut report)?;
+            }
+
+            if !moved {
+                if self.closing.load(Ordering::Acquire) {
+                    // Producers are quiescent (workers joined, fabric
+                    // shut down) and the rings drained empty: done.
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+
+        self.sample_metrics(&mut sinks, &mut report)?;
+        report.dropped = self.total_dropped();
+        if let Some(w) = sinks.chrome.take() {
+            report.chrome_events = w.finish()?;
+        }
+        if let Some(w) = sinks.metrics.take() {
+            report.metrics_lines = w.finish(
+                self.t0.elapsed().as_nanos() as u64,
+                pid,
+                report.events,
+                report.dropped,
+            )?;
+        }
+        report.worst.sort_by_key(|s| std::cmp::Reverse(s.latency_ns.unwrap_or(0)));
+        Ok(report)
+    }
+
+    /// Streams one event (and any epoch summaries it closed) to the
+    /// Chrome sink.
+    fn write_event(
+        sinks: &mut Sinks,
+        pid: usize,
+        tid: u64,
+        event: &Event,
+        shared_names: &Arc<Mutex<BTreeMap<u64, String>>>,
+        names: &mut BTreeMap<u64, String>,
+        closed: &[EpochSummary],
+    ) -> io::Result<()> {
+        let Some(w) = sinks.chrome.as_mut() else {
+            // No trace file: attribution already folded; nothing to do.
+            return Ok(());
+        };
+        if event.kind.is_span() {
+            match event.kind {
+                EventKind::OpSpan => {
+                    if !names.contains_key(&event.a) {
+                        // Refresh the build-time registry on first sight
+                        // of a node (registration precedes stepping).
+                        names.clone_from(&shared_names.lock().unwrap());
+                        names.entry(event.a).or_insert_with(|| format!("op {}", event.a));
+                    }
+                    let name = &names[&event.a];
+                    let (rin, rout) = super::unpack_io(event.b);
+                    w.span(
+                        pid,
+                        tid,
+                        event.t_ns,
+                        event.dur_ns,
+                        name,
+                        &[("epoch", event.epoch), ("in", rin), ("out", rout)],
+                    )?;
+                }
+                _ => {
+                    w.span(
+                        pid,
+                        tid,
+                        event.t_ns,
+                        event.dur_ns,
+                        event.kind.name(),
+                        &[("epoch", event.epoch), ("a", event.a), ("b", event.b)],
+                    )?;
+                }
+            }
+        } else {
+            w.instant(
+                pid,
+                tid,
+                event.t_ns,
+                event.kind.name(),
+                &[("epoch", event.epoch), ("a", event.a), ("b", event.b)],
+            )?;
+        }
+        for s in closed {
+            w.instant(
+                pid,
+                tid,
+                s.close_ns,
+                "epoch",
+                &[
+                    ("epoch", s.epoch),
+                    ("wall_ns", s.wall_ns),
+                    ("latency_ns", s.latency_ns.unwrap_or(0)),
+                    ("op_ns", s.op_ns),
+                    ("progress_ns", s.progress_ns),
+                    ("park_ns", s.park_ns),
+                    ("ckpt_ns", s.checkpoint_ns),
+                    ("in", s.records_in),
+                    ("out", s.records_out),
+                ],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// One periodic telemetry sample: a metrics JSONL line plus Chrome
+    /// counter tracks.
+    fn sample_metrics(&mut self, sinks: &mut Sinks, _report: &mut TraceReport) -> io::Result<()> {
+        let Some(fabric) = self.fabric.lock().unwrap().clone() else { return Ok(()) };
+        if sinks.metrics.is_none() && sinks.chrome.is_none() {
+            return Ok(());
+        }
+        let t_ns = self.t0.elapsed().as_nanos() as u64;
+        let telemetry: Vec<_> =
+            self.rings.iter().map(|(worker, _)| fabric.telemetry(*worker)).collect();
+        if let Some(m) = sinks.metrics.as_mut() {
+            m.snapshot(t_ns, self.config.process, &telemetry)?;
+        }
+        if let Some(w) = sinks.chrome.as_mut() {
+            let pid = self.config.process;
+            let sum = |f: fn(&crate::worker::allocator::WorkerTelemetry) -> u64| {
+                telemetry.iter().map(f).sum::<u64>()
+            };
+            w.counter(
+                pid,
+                t_ns,
+                "workers",
+                &[("parks", sum(|t| t.parks)), ("unparks", sum(|t| t.unparks))],
+            )?;
+            w.counter(
+                pid,
+                t_ns,
+                "net",
+                &[
+                    ("frames_tx", sum(|t| t.net.frames_sent)),
+                    ("frames_rx", sum(|t| t.net.frames_recv)),
+                    ("prog_tx", sum(|t| t.net.progress_frames_sent)),
+                ],
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Maintains the top-`WORST_KEPT` epochs by frontier latency.
+fn keep_worst(worst: &mut Vec<EpochSummary>, s: &EpochSummary) {
+    let lat = s.latency_ns.unwrap_or(0);
+    if worst.len() < WORST_KEPT {
+        worst.push(s.clone());
+        return;
+    }
+    if let Some((idx, min)) = worst
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, w)| w.latency_ns.unwrap_or(0))
+        .map(|(i, w)| (i, w.latency_ns.unwrap_or(0)))
+    {
+        if lat > min {
+            worst[idx] = s.clone();
+        }
+    }
+}

@@ -165,6 +165,9 @@ impl<T: Timestamp, D: Data> MapExt<T, D> for Stream<T, D> {
             info.peers,
             scope.send_batch(),
         );
+        let tracer = scope.tracer();
+        input.set_tracer(tracer.clone());
+        output.set_tracer(tracer);
         builder.build(
             activation,
             Box::new(move || {

@@ -152,6 +152,9 @@ pub struct Progcaster<T: Timestamp> {
     pool: SharedPool<ProgressBatch<T>>,
     /// This worker's fabric counters (ring-full stalls).
     stats: Arc<WorkerStats>,
+    /// Event tracer: [`Progcaster::send`] emits a `ProgressFlush` span per
+    /// broadcast. `None` (the default) costs one branch per send.
+    tracer: Option<std::rc::Rc<crate::observe::WorkerTracer>>,
 }
 
 impl<T: Timestamp> Progcaster<T> {
@@ -175,7 +178,15 @@ impl<T: Timestamp> Progcaster<T> {
             net_spill: (0..processes).map(|_| VecDeque::new()).collect(),
             pool: SharedPool::new(BATCH_POOL_WINDOW),
             stats: fabric.stats(index),
+            tracer: None,
         }
+    }
+
+    /// Installs an event tracer (see [`crate::observe`]): every broadcast
+    /// is timed as a `ProgressFlush` span carrying the coalesced update
+    /// count.
+    pub fn set_tracer(&mut self, tracer: std::rc::Rc<crate::observe::WorkerTracer>) {
+        self.tracer = Some(tracer);
     }
 
     /// The owning worker's index.
@@ -231,6 +242,7 @@ impl<T: Timestamp> Progcaster<T> {
         if self.pending.is_empty() {
             return None;
         }
+        let flush_t0 = self.tracer.as_ref().map(|t| t.now_ns());
         let mut batch = self.pool.checkout();
         Arc::get_mut(&mut batch)
             .expect("checked-out batch is unique")
@@ -274,6 +286,16 @@ impl<T: Timestamp> Progcaster<T> {
             }
         }
         self.own.push_back(batch.clone());
+        if let (Some(tracer), Some(t0)) = (&self.tracer, flush_t0) {
+            let dur = tracer.now_ns().saturating_sub(t0);
+            tracer.emit(
+                crate::observe::EventKind::ProgressFlush,
+                t0,
+                dur,
+                batch.len() as u64,
+                self.has_spill() as u64,
+            );
+        }
         Some(batch)
     }
 

@@ -188,6 +188,10 @@ where
 {
     let peers = config.workers.max(1);
     let fabric = Fabric::with_ring_capacity(peers, config.ring_capacity);
+    let plane = trace_plane(&config, 0, 0, peers);
+    if let Some(plane) = &plane {
+        plane.attach_fabric(fabric.clone());
+    }
     let (writer, recovery) = recovery_plumbing::<T>(&config, 0, peers, &[peers]);
     let build = Arc::new(build);
     let pin = config.pin_workers;
@@ -199,6 +203,7 @@ where
         let fabric = fabric.clone();
         let build = build.clone();
         let recovery = recovery.clone();
+        let plane = plane.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("worker-{index}"))
@@ -209,6 +214,9 @@ where
                     let mut worker = Worker::new(index, peers, fabric);
                     worker.set_progress_flush(progress_flush);
                     worker.set_send_batch(send_batch);
+                    if let Some(plane) = &plane {
+                        worker.set_tracer(plane.worker_tracer(index, index));
+                    }
                     install_recovery(&mut worker, index, &recovery);
                     build(&mut worker)
                 })
@@ -222,7 +230,33 @@ where
     if let Some(writer) = writer {
         writer.finish().expect("checkpoint writer failed");
     }
+    if let Some(plane) = &plane {
+        plane.finish().expect("trace writer failed");
+    }
     (results, fabric)
+}
+
+/// Builds this process's [`TracePlane`](crate::observe::TracePlane) when
+/// `config` asks for tracing or metrics, with per-process output paths
+/// in multi-process runs.
+fn trace_plane(
+    config: &Config,
+    process: usize,
+    base_worker: usize,
+    local_workers: usize,
+) -> Option<Arc<crate::observe::TracePlane>> {
+    if config.trace_path.is_none() && config.metrics_path.is_none() {
+        return None;
+    }
+    let per = |p: &String| crate::observe::per_process_path(p, process, config.processes);
+    Some(crate::observe::TracePlane::spawn(crate::observe::TraceConfig {
+        trace_path: config.trace_path.as_ref().map(per),
+        metrics_path: config.metrics_path.as_ref().map(per),
+        process,
+        base_worker,
+        local_workers,
+        print_summary: true,
+    }))
 }
 
 /// Single-worker convenience wrapper: returns the sole worker's result.
@@ -245,14 +279,17 @@ where
 const HANDSHAKE_MAGIC: u64 = u64::from_le_bytes(*b"ttdnetv1");
 
 /// Bumped whenever the wire format or handshake layout changes.
-/// Version 4: WELCOME additionally carries process 0's parking mode and
-/// autotune flag (one byte each), and a shared-memory rendezvous
-/// exchanges optional futex wake-word paths alongside the ring paths.
-/// Version 3 added the transport byte so both sides pin the same
-/// per-link transport before any frame crosses; version 2 added the
-/// per-process broadcast progress frames (dedup fan-out) and the full
-/// per-process worker-count shape.
-const HANDSHAKE_VERSION: u32 = 4;
+/// Version 5: WELCOME additionally carries process 0's trace/metrics
+/// output paths (length-prefixed strings, empty = disabled), so one
+/// process's `--trace`/`--metrics` flags observe the whole cluster.
+/// Version 4 added process 0's parking mode and autotune flag (one byte
+/// each), and a shared-memory rendezvous exchanging optional futex
+/// wake-word paths alongside the ring paths; version 3 added the
+/// transport byte so both sides pin the same per-link transport before
+/// any frame crosses; version 2 added the per-process broadcast
+/// progress frames (dedup fan-out) and the full per-process
+/// worker-count shape.
+const HANDSHAKE_VERSION: u32 = 5;
 
 /// Per-link transport tags on the wire (the handshake's transport byte).
 const LINK_TCP: u8 = 0;
@@ -344,6 +381,33 @@ fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
     }
 }
 
+/// Appends an optional string as `u32` length + bytes (`None` is a zero
+/// length, indistinguishable from the empty string — both mean "off"
+/// for the paths this carries).
+fn push_lp_string(buf: &mut Vec<u8>, s: Option<&str>) {
+    let s = s.unwrap_or("");
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Reads a length-prefixed string written by [`push_lp_string`].
+fn read_lp_string(stream: &mut TcpStream) -> Result<Option<String>, NetError> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > 4096 {
+        return Err(NetError::Protocol(format!("absurd handshake string length {len}")));
+    }
+    if len == 0 {
+        return Ok(None);
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    let s = String::from_utf8(buf)
+        .map_err(|_| NetError::Protocol("handshake string is not utf-8".into()))?;
+    Ok(Some(s))
+}
+
 /// `HELLO` (connector → acceptor): magic, version, sender, process count,
 /// the proposed link transport, then the full per-process worker shape.
 /// All little-endian.
@@ -420,7 +484,7 @@ fn write_welcome(
     shape: &[usize],
     peer: usize,
 ) -> Result<(), NetError> {
-    let mut buf = Vec::with_capacity(47 + 4 * shape.len());
+    let mut buf = Vec::with_capacity(55 + 4 * shape.len());
     buf.extend_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
     buf.extend_from_slice(&HANDSHAKE_VERSION.to_le_bytes());
     buf.extend_from_slice(&(config.process_index as u32).to_le_bytes());
@@ -431,6 +495,8 @@ fn write_welcome(
     buf.push(link_transport(config, config.process_index, peer));
     buf.push(parking_tag(config.parking));
     buf.push(config.autotune as u8);
+    push_lp_string(&mut buf, config.trace_path.as_deref());
+    push_lp_string(&mut buf, config.metrics_path.as_deref());
     push_shape(&mut buf, shape);
     stream.write_all(&buf)?;
     stream.flush()?;
@@ -458,6 +524,10 @@ fn read_welcome(
             "connected to {peer} but process {process} answered (address list skew?)"
         )));
     }
+    // Every WELCOME carries the paths (framing), but only process 0's
+    // are adopted — its flags observe the whole cluster.
+    let trace_path = read_lp_string(stream)?;
+    let metrics_path = read_lp_string(stream)?;
     if peer == 0 {
         config.ring_capacity =
             u64::from_le_bytes(buf[20..28].try_into().expect("8 bytes")) as usize;
@@ -467,6 +537,8 @@ fn read_welcome(
         config.send_batch = u64::from_le_bytes(buf[36..44].try_into().expect("8 bytes")) as usize;
         config.parking = parking_from_tag(buf[45])?;
         config.autotune = buf[46] != 0;
+        config.trace_path = trace_path;
+        config.metrics_path = metrics_path;
     }
     let transport = buf[44];
     let expected = link_transport(config, config.process_index, peer);
@@ -780,13 +852,21 @@ where
     } else {
         None
     };
+    // The plane must exist before the net fabric: the reactor's tracer
+    // rides in the fabric's options. The worker fabric (the telemetry
+    // source) is late-attached below once built.
+    let plane = trace_plane(&config, process, shape[..process].iter().sum(), local_workers);
     let options = FabricOptions {
         backend: config.reactor_backend.resolve(),
         wake,
         tune: tune.clone(),
+        trace: plane.as_ref().map(|p| p.reactor_tracer()),
     };
     let net = NetFabric::new_with(process, shape.clone(), links, config.ring_capacity, options);
     let fabric = Fabric::cluster(&shape, process, config.ring_capacity, net.clone());
+    if let Some(plane) = &plane {
+        plane.attach_fabric(fabric.clone());
+    }
     let peers = fabric.peers();
     let base = fabric.local_base();
     let (writer, recovery) = recovery_plumbing::<T>(&config, process, local_workers, &shape);
@@ -801,6 +881,7 @@ where
         let build = build.clone();
         let tune = tune.clone();
         let recovery = recovery.clone();
+        let plane = plane.clone();
         let index = base + local;
         handles.push(
             std::thread::Builder::new()
@@ -813,6 +894,9 @@ where
                     worker.set_progress_flush(progress_flush);
                     worker.set_send_batch(send_batch);
                     worker.set_tune(tune);
+                    if let Some(plane) = &plane {
+                        worker.set_tracer(plane.worker_tracer(local, index));
+                    }
                     install_recovery(&mut worker, index, &recovery);
                     build(&mut worker)
                 })
@@ -831,6 +915,11 @@ where
     // Every local worker has completed (and flushed, via `Worker::drop`):
     // drain the outbound queues to the wire and close the links cleanly.
     net.shutdown();
+    // The reactor (the last trace producer) is quiescent only after
+    // shutdown, so the plane's final drain comes after it.
+    if let Some(plane) = &plane {
+        plane.finish().expect("trace writer failed");
+    }
     let telemetry = (base..base + local_workers).map(|w| fabric.telemetry(w)).collect();
     Ok((results, telemetry))
 }

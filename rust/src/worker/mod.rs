@@ -117,6 +117,11 @@ pub struct Worker<T: Timestamp> {
     /// step loop drives its continuous sealing with the tracker's global
     /// frontier bound. `None` (the default) costs the step loop nothing.
     recovery: Option<Rc<crate::recovery::RecoveryContext>>,
+    /// Event tracer (observability plane): the step loop emits operator
+    /// activation spans, frontier/epoch events, park spans, and progress
+    /// timing through it. `None` (the default) costs one branch per hook
+    /// (see `observe` module docs).
+    tracer: Option<Rc<crate::observe::WorkerTracer>>,
     /// Set by [`Worker::poison`]: simulates a process crash by skipping
     /// the orderly final flush on drop.
     poisoned: bool,
@@ -157,6 +162,7 @@ impl<T: Timestamp> Worker<T> {
             tune_generation: 0,
             stats,
             recovery: None,
+            tracer: None,
             poisoned: false,
         }
     }
@@ -280,6 +286,19 @@ impl<T: Timestamp> Worker<T> {
         self.recovery = Some(ctx);
     }
 
+    /// Installs an event tracer: operators built after this call count
+    /// records through it, and every step emits activation spans, epoch
+    /// transitions, progress timing, and park spans. Must be called before
+    /// graph construction. Epoch attribution is only meaningful for
+    /// `u64`-timestamped dataflows (the step hook reads the tracker's
+    /// frontier as `u64`); other timestamp types still get spans.
+    pub fn set_tracer(&mut self, tracer: Rc<crate::observe::WorkerTracer>) {
+        assert!(self.tracker.is_none(), "tracer must be installed before the dataflow starts");
+        self.scope.state.borrow_mut().tracer = Some(tracer.clone());
+        self.progcaster.set_tracer(tracer.clone());
+        self.tracer = Some(tracer);
+    }
+
     /// The epoch a recovered dataflow resumes from: inputs must replay
     /// from the *next* epoch (state already reflects everything at
     /// `<= resume_epoch()`). 0 when not recovering.
@@ -341,6 +360,13 @@ impl<T: Timestamp> Worker<T> {
         // Restore topology for diagnostics.
         self.scope.state.borrow_mut().topology = topology;
         self.tracker = Some(tracker);
+        // Register operator names with the trace plane (build time, off
+        // the hot path — this is the tracer's only allocating call).
+        if let Some(tracer) = &self.tracer {
+            for op in &self.ops {
+                tracer.register_op(op.node as u64, &op.name);
+            }
+        }
     }
 
     /// Runs one scheduling step; returns true iff any work happened.
@@ -366,15 +392,50 @@ impl<T: Timestamp> Worker<T> {
         // frontier change observed while an operator is skipped for other
         // reasons is never silently absorbed.
         for op in &mut self.ops {
-            let should_run = op.activation.get()
-                || op.frontiers.iter().any(|f| f.borrow().changed)
-                || (op.work_hint)();
+            let should_run = match &self.tracer {
+                // Traced: the frontier scan runs unconditionally so the
+                // trace records every frontier delivery, not only the
+                // ones that decided scheduling.
+                Some(tracer) => {
+                    let frontier_changed =
+                        op.frontiers.iter().any(|f| f.borrow().changed);
+                    if frontier_changed {
+                        tracer.instant(
+                            crate::observe::EventKind::FrontierAdvance,
+                            op.node as u64,
+                            0,
+                        );
+                    }
+                    op.activation.get() || frontier_changed || (op.work_hint)()
+                }
+                None => {
+                    op.activation.get()
+                        || op.frontiers.iter().any(|f| f.borrow().changed)
+                        || (op.work_hint)()
+                }
+            };
             if should_run {
                 op.activation.set(false);
                 for f in &op.frontiers {
                     f.borrow_mut().changed = false;
                 }
-                (op.logic)();
+                match &self.tracer {
+                    Some(tracer) => {
+                        let t0 = tracer.now_ns();
+                        let (in0, out0) = tracer.io_marks();
+                        (op.logic)();
+                        let dur = tracer.now_ns().saturating_sub(t0);
+                        let (in1, out1) = tracer.io_marks();
+                        tracer.emit(
+                            crate::observe::EventKind::OpSpan,
+                            t0,
+                            dur,
+                            op.node as u64,
+                            crate::observe::pack_io(in1 - in0, out1 - out0),
+                        );
+                    }
+                    None => (op.logic)(),
+                }
                 self.bookkeeping.drain_into(&mut self.scratch);
                 self.progcaster.extend(self.scratch.drain(..));
                 active = true;
@@ -409,19 +470,81 @@ impl<T: Timestamp> Worker<T> {
 
         // (4) Fold everything newly arrived (loopback included) into the
         // tracker, one atomic batch at a time.
-        active |= self.apply_inbound();
+        let apply_t0 = self.tracer.as_ref().map(|t| t.now_ns());
+        let applied = self.apply_inbound();
+        if applied {
+            if let (Some(tracer), Some(t0)) = (&self.tracer, apply_t0) {
+                let dur = tracer.now_ns().saturating_sub(t0);
+                tracer.emit(crate::observe::EventKind::ProgressApply, t0, dur, 0, 0);
+            }
+        }
+        active |= applied;
 
-        // (5) Checkpoint hook: with a recovery context installed, drive
-        // its continuous sealing with the tracker's global frontier bound
-        // (a `u64` dataflow's only; other timestamp types skip). Sealing
-        // is incremental and allocation-free; captures fire only when the
-        // bound passes a checkpoint boundary.
-        if let Some(ctx) = &self.recovery {
+        // (5) Frontier hooks (u64 dataflows only — both read the tracker's
+        // global bound as `u64`; other timestamp types skip).
+        if self.tracer.is_some() || self.recovery.is_some() {
             let tracker = self.tracker.as_ref().expect("finalized");
             if let Some(tracker) =
                 (tracker as &dyn std::any::Any).downcast_ref::<Tracker<u64>>()
             {
-                ctx.on_frontier(tracker.min_frontier().copied());
+                let bound = tracker.min_frontier().copied();
+                // (5a) Epoch transition: the tracer's current-epoch stamp
+                // follows the min frontier; each observed transition closes
+                // the outgoing epoch's attribution window.
+                if let Some(tracer) = &self.tracer {
+                    let next = bound.unwrap_or(crate::observe::NO_EPOCH);
+                    let prev = tracer.epoch();
+                    if next != prev {
+                        if prev != crate::observe::NO_EPOCH {
+                            tracer.emit_at(
+                                crate::observe::EventKind::EpochClose,
+                                tracer.now_ns(),
+                                0,
+                                prev,
+                                next,
+                                0,
+                            );
+                        }
+                        // First observation adopts the frontier silently
+                        // (nothing before it is attributable).
+                        tracer.set_epoch(next);
+                    }
+                }
+                // (5b) Checkpoint hook: with a recovery context installed,
+                // drive its continuous sealing. Sealing is incremental and
+                // allocation-free; captures fire only when the bound
+                // passes a checkpoint boundary.
+                if let Some(ctx) = &self.recovery {
+                    match &self.tracer {
+                        Some(tracer) => {
+                            let t0 = tracer.now_ns();
+                            let taken0 = ctx.checkpoints_taken();
+                            ctx.on_frontier(bound);
+                            let dur = tracer.now_ns().saturating_sub(t0);
+                            let taken = ctx.checkpoints_taken() - taken0;
+                            if taken > 0 {
+                                tracer.emit(
+                                    crate::observe::EventKind::CheckpointCapture,
+                                    t0,
+                                    dur,
+                                    taken,
+                                    0,
+                                );
+                            } else if dur >= 1_000 {
+                                // Sub-microsecond sealing bookkeeping is
+                                // noise; only notable seal work is traced.
+                                tracer.emit(
+                                    crate::observe::EventKind::CheckpointSeal,
+                                    t0,
+                                    dur,
+                                    0,
+                                    0,
+                                );
+                            }
+                        }
+                        None => ctx.on_frontier(bound),
+                    }
+                }
             }
         }
 
@@ -465,6 +588,13 @@ impl<T: Timestamp> Worker<T> {
         self.last_flush = Instant::now();
         if sent || spill_moved || released {
             self.fabric.unpark_peers(self.progcaster.index());
+            if let Some(tracer) = &self.tracer {
+                tracer.instant(
+                    crate::observe::EventKind::Unpark,
+                    released as u64,
+                    spill_moved as u64,
+                );
+            }
         }
         sent || released
     }
@@ -556,7 +686,15 @@ impl<T: Timestamp> Worker<T> {
         // mailbox drain in `step` left a token, making this return
         // immediately.
         self.stats.note_park();
-        std::thread::park_timeout(timeout);
+        match &self.tracer {
+            Some(tracer) => {
+                let t0 = tracer.now_ns();
+                std::thread::park_timeout(timeout);
+                let dur = tracer.now_ns().saturating_sub(t0);
+                tracer.emit(crate::observe::EventKind::Park, t0, dur, 0, 0);
+            }
+            None => std::thread::park_timeout(timeout),
+        }
         false
     }
 

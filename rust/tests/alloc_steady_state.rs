@@ -16,7 +16,11 @@
 //! projection, and a full single-worker engine step (input feed, operator
 //! chain with whole-batch forwarding, progress exchange, tracker fold,
 //! probe) — through a warmup until capacities stabilize, then asserts a
-//! measurement window with zero allocations.
+//! measurement window with zero allocations. The engine-step and
+//! cross-process progress loops are additionally pinned WITH event
+//! tracing enabled: observability hooks ride inside the steady state, so
+//! they are held to the same zero-allocation bar (see
+//! `observe`'s module docs for the hook obligations).
 //!
 //! Kept as a single `#[test]` so no sibling test can allocate concurrently
 //! inside a measurement window.
@@ -362,6 +366,143 @@ fn full_step_loop() {
     // Drain to completion outside the window (close allocates freely).
 }
 
+/// [`full_step_loop`] with event tracing ENABLED: every step emits
+/// operator activation spans, progress-flush spans, frontier instants,
+/// and epoch transitions into the tracer's pre-allocated ring — and the
+/// pin must still hold. Events are `Copy` stamps into fixed ring slots;
+/// the one allocating tracer call (operator name registration) happens at
+/// build time, before any window. The ring is drained inside the loop by
+/// this thread rather than by a writer thread: the counting allocator is
+/// global, so a concurrent drainer would charge its own bookkeeping to
+/// the measured window. Receiving must be allocation-free too.
+fn traced_full_step_loop() {
+    use timestamp_tokens::observe::{Event, WorkerTracer, EVENT_RING_CAPACITY};
+    use timestamp_tokens::worker::ring;
+
+    let (tx, mut rx) = ring::channel::<Event>(EVENT_RING_CAPACITY);
+    let mut worker = Worker::<u64>::new(0, 1, Fabric::new(1));
+    worker.set_progress_flush(Duration::ZERO);
+    worker.set_send_batch(BATCH);
+    let tracer = Rc::new(WorkerTracer::new(0, std::time::Instant::now(), tx));
+    worker.set_tracer(tracer.clone());
+    let (mut input, stream) = worker.new_input::<u64>();
+    let probe = stream
+        .map_in_place(|x| *x = x.wrapping_mul(2547).wrapping_add(1))
+        .filter(|x| x % 2 == 0)
+        .probe();
+    worker.finalize();
+
+    let mut t = 0u64;
+    let mut events = 0u64;
+    assert_reaches_zero_alloc_steady_state("traced worker step", || {
+        for i in 0..BATCH as u64 {
+            input.send(i);
+        }
+        t += 1;
+        input.advance_to(t);
+        while probe.less_than(&t) {
+            worker.step();
+        }
+        while rx.try_recv().is_ok() {
+            events += 1;
+        }
+    });
+    assert!(worker.steps() > 0);
+    assert!(events > 0, "a traced step loop must emit events");
+    assert_eq!(tracer.dropped(), 0, "a drained ring must never overflow");
+}
+
+/// [`net_progress_decode_loop`] with the reactor tracer ENABLED on both
+/// loopback fabrics: reactor wake and frame-send instants land in one
+/// shared event ring (the two reactor threads serialize on its mutex,
+/// exactly as a process's plane shares one reactor ring) while the
+/// cross-process progress path runs its zero-allocation steady state.
+/// Drained in-loop for the same global-allocator reason as
+/// [`traced_full_step_loop`].
+fn traced_net_progress_decode_loop() {
+    use timestamp_tokens::observe::{Event, ReactorTracer, EVENT_RING_CAPACITY};
+    use timestamp_tokens::worker::ring;
+
+    let ((a_tx, a_rx), (b_tx, b_rx)) = loopback();
+    let shape = vec![1usize, 2];
+    let (etx, mut erx) = ring::channel::<Event>(EVENT_RING_CAPACITY);
+    let tracer = Arc::new(ReactorTracer::new(std::time::Instant::now(), etx));
+    let options = || FabricOptions {
+        backend: ReadinessBackend::Poll,
+        trace: Some(tracer.clone()),
+        ..FabricOptions::default()
+    };
+    let a = NetFabric::new_with(
+        0,
+        shape.clone(),
+        vec![None, Some(NetLink::virtual_pair(a_tx, a_rx))],
+        64,
+        options(),
+    );
+    let b = NetFabric::new_with(
+        1,
+        shape,
+        vec![Some(NetLink::virtual_pair(b_tx, b_rx)), None],
+        64,
+        options(),
+    );
+    b.register_broadcast::<ProgressBroadcast<u64>>(PROGRESS_CHANNEL);
+    let mut tx = a.broadcast_sender::<u64>(PROGRESS_CHANNEL, 0, 1);
+    let mut rx1 = b.receiver::<Arc<ProgressUpdates<u64>>>(PROGRESS_CHANNEL, 0, 1);
+    let mut rx2 = b.receiver::<Arc<ProgressUpdates<u64>>>(PROGRESS_CHANNEL, 0, 2);
+    let mut pool = SharedPool::<ProgressUpdates<u64>>::new(8);
+
+    fn recv_spin(rx: &mut NetReceiver<Arc<ProgressUpdates<u64>>>) -> Arc<ProgressUpdates<u64>> {
+        loop {
+            match rx.try_recv() {
+                Ok(batch) => return batch,
+                Err(_) => std::thread::yield_now(),
+            }
+        }
+    }
+
+    let mut t = 0u64;
+    let mut reactor_events = 0u64;
+    assert_reaches_zero_alloc_steady_state("traced net progress decode", || {
+        let mut batch = pool.checkout();
+        {
+            let updates = Arc::get_mut(&mut batch).expect("checked-out batch is unique");
+            updates.push(((Location::source(0, 0), t + 1), 1));
+            updates.push(((Location::source(0, 0), t), -1));
+        }
+        pool.track(&batch);
+        let mut outbound = batch.clone();
+        drop(batch);
+        loop {
+            match tx.send(outbound) {
+                Ok(()) => break,
+                Err(RingSendError::Full(back)) => {
+                    outbound = back;
+                    std::thread::yield_now();
+                }
+                Err(RingSendError::Disconnected(_)) => panic!("loopback link dropped"),
+            }
+        }
+        let got1 = recv_spin(&mut rx1);
+        assert_eq!(got1.len(), 2);
+        let got2 = recv_spin(&mut rx2);
+        assert!(Arc::ptr_eq(&got1, &got2), "fan-out must share one decoded Arc");
+        drop(got1);
+        drop(got2);
+        while erx.try_recv().is_ok() {
+            reactor_events += 1;
+        }
+        t += 1;
+    });
+    a.shutdown();
+    b.shutdown();
+    while erx.try_recv().is_ok() {
+        reactor_events += 1;
+    }
+    assert!(reactor_events > 0, "a traced reactor must emit events");
+    assert_eq!(tracer.dropped(), 0, "a drained reactor ring must never overflow");
+}
+
 /// [`full_step_loop`] with checkpointing ENABLED: a recovery context logs
 /// every stateful update (a rolling wordcount over a bounded vocabulary)
 /// and the step loop drives continuous sealing against the frontier. The
@@ -425,5 +566,7 @@ fn steady_state_data_path_performs_zero_allocations() {
     );
     tracker_fold_loop();
     full_step_loop();
+    traced_full_step_loop();
+    traced_net_progress_decode_loop();
     checkpointed_step_loop();
 }

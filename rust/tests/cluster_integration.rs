@@ -561,6 +561,43 @@ fn progress_broadcast_dedup_holds_on_asymmetric_shapes() {
 }
 
 // ---------------------------------------------------------------------------
+// Governor conservation: the autotuner's ledger accounts every progress
+// frame, including the final sub-cadence epoch the reactor runs at
+// orderly exit (without it, deltas accrued since the last 50ms tick —
+// the entire run, for short runs — would vanish from the ledger).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn governor_ledger_conserves_progress_frames() {
+    let net = NetOptions {
+        transport: NetTransport::Shm,
+        reactor: ReactorBackend::Epoll,
+        parking: Parking::Futex,
+        autotune: true,
+    };
+    let shape = [2usize, 2];
+    let (results, telemetry) = run_cluster_shaped_net(shape.to_vec(), net, wordcount_run);
+    assert_eq!(results.len(), 4);
+    let mut base = 0;
+    for (p, &workers) in shape.iter().enumerate() {
+        let rows = &telemetry[base..base + workers];
+        let sent: u64 = rows.iter().map(|t| t.net.progress_frames_sent).sum();
+        assert!(sent > 0, "process {p} sent no progress frames");
+        assert_eq!(
+            rows[0].net.governor_progress_frames, sent,
+            "process {p}: governor ledger must equal the process's progress frames"
+        );
+        for row in &rows[1..] {
+            assert_eq!(
+                row.net.governor_progress_frames, 0,
+                "process {p}: the ledger is a process-wide slot-0 counter"
+            );
+        }
+        base += workers;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Records survive heavy cross-process exchange (conservation check).
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,153 @@
+//! End-to-end observability-plane pins: a traced run must produce Chrome
+//! trace-event JSON that parses, whose spans nest, in which every worker
+//! thread reports per-epoch summaries whose attributed components fit
+//! inside the measured wall time — on one process, and on a 2-process x
+//! 2-worker loopback cluster where ONLY process 0 is configured with
+//! output paths (the bootstrap handshake must propagate them, and each
+//! process writes its own `.pI.`-suffixed files).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Duration;
+use timestamp_tokens::config::Config;
+use timestamp_tokens::observe::chrome::validate_trace;
+use timestamp_tokens::observe::per_process_path;
+use timestamp_tokens::operators::map::MapExt;
+use timestamp_tokens::testing::free_loopback_addresses;
+use timestamp_tokens::worker::execute::{execute, execute_cluster};
+use timestamp_tokens::worker::Worker;
+
+const EPOCHS: u64 = 6;
+const PER_EPOCH: u64 = 256;
+
+/// An exchange dataflow stepped epoch by epoch (so every worker closes
+/// several epochs and the attribution fold has windows to account).
+/// Returns the records this worker's sink received.
+fn exchange_run(worker: &mut Worker<u64>) -> u64 {
+    let index = worker.index() as u64;
+    let (mut input, stream) = worker.new_input::<u64>();
+    let count = Rc::new(RefCell::new(0u64));
+    let count2 = count.clone();
+    let probe = stream
+        .exchange(|v: &u64| v.wrapping_mul(0x9e3779b97f4a7c15))
+        .inspect(move |_t, _v| *count2.borrow_mut() += 1)
+        .probe();
+    for t in 1..=EPOCHS {
+        for i in 0..PER_EPOCH {
+            input.send((index << 32) ^ (t << 16) ^ i);
+        }
+        input.advance_to(t);
+        while probe.less_equal(&(t - 1)) {
+            worker.step_or_park(Duration::from_micros(100));
+        }
+    }
+    input.close();
+    worker.step_while(|| !probe.done());
+    let got = *count.borrow();
+    got
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ttd-observe-it-{}-{tag}", std::process::id()))
+        .display()
+        .to_string()
+}
+
+/// Validates one process's trace file: parses, spans nest, attribution
+/// sums fit inside wall time, and each expected worker tid reported at
+/// least one epoch summary. Removes the file afterwards.
+fn assert_trace_file(path: &str, expect_tids: &[u64]) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("trace file {path} unreadable: {e}"));
+    let stats = validate_trace(&text)
+        .unwrap_or_else(|e| panic!("trace file {path} malformed: {e}"));
+    assert!(stats.events > 0, "{path}: empty trace");
+    assert!(stats.spans > 0, "{path}: no spans (operator activations missing)");
+    assert_eq!(stats.attribution_violations, 0, "{path}: attribution exceeds wall time");
+    assert_eq!(stats.worker_tids, expect_tids, "{path}: wrong worker threads");
+    for &tid in expect_tids {
+        let summaries = stats
+            .epoch_summaries
+            .iter()
+            .find(|(t, _)| *t == tid)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        assert!(summaries >= 1, "{path}: worker {tid} reported no epoch summaries");
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+/// Validates a metrics JSONL file: non-empty, every line a JSON object.
+/// Removes the file afterwards.
+fn assert_metrics_file(path: &str) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("metrics file {path} unreadable: {e}"));
+    let mut lines = 0;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = timestamp_tokens::observe::chrome::parse(line)
+            .unwrap_or_else(|e| panic!("metrics line in {path} malformed: {e}\n{line}"));
+        assert!(v.get("t_ns").is_some(), "{path}: metrics line without t_ns\n{line}");
+        lines += 1;
+    }
+    assert!(lines > 0, "{path}: no metrics snapshots (final sample missing)");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn traced_single_process_run_exports_valid_trace_and_metrics() {
+    let trace = temp_path("single.trace.json");
+    let metrics = temp_path("single.metrics.jsonl");
+    let config = Config {
+        workers: 2,
+        pin_workers: false,
+        trace_path: Some(trace.clone()),
+        metrics_path: Some(metrics.clone()),
+        ..Config::default()
+    };
+    let counts = execute::<u64, _, _>(config, exchange_run);
+    assert_eq!(counts.iter().sum::<u64>(), 2 * EPOCHS * PER_EPOCH);
+    assert_trace_file(&trace, &[0, 1]);
+    assert_metrics_file(&metrics);
+}
+
+#[test]
+fn traced_cluster_exports_per_process_traces_via_handshake() {
+    const PROCESSES: usize = 2;
+    const WPP: usize = 2;
+    let trace = temp_path("cluster.trace.json");
+    let metrics = temp_path("cluster.metrics.jsonl");
+    let addresses = free_loopback_addresses(PROCESSES);
+    let mut handles = Vec::new();
+    for p in 0..PROCESSES {
+        let addresses = addresses.clone();
+        // Only process 0 carries the flags; the v5 WELCOME propagates
+        // them so the whole cluster is observed.
+        let (trace_path, metrics_path) = if p == 0 {
+            (Some(trace.clone()), Some(metrics.clone()))
+        } else {
+            (None, None)
+        };
+        handles.push(std::thread::spawn(move || {
+            let config = Config {
+                workers: WPP,
+                pin_workers: false,
+                processes: PROCESSES,
+                process_index: p,
+                addresses,
+                trace_path,
+                metrics_path,
+                ..Config::default()
+            };
+            execute_cluster::<u64, _, _>(config, exchange_run).expect("cluster bootstrap")
+        }));
+    }
+    let counted: u64 =
+        handles.into_iter().flat_map(|h| h.join().expect("cluster process")).sum();
+    assert_eq!(counted, (PROCESSES * WPP) as u64 * EPOCHS * PER_EPOCH);
+    for p in 0..PROCESSES {
+        let tids: Vec<u64> = (p * WPP..(p + 1) * WPP).map(|w| w as u64).collect();
+        assert_trace_file(&per_process_path(&trace, p, PROCESSES), &tids);
+        assert_metrics_file(&per_process_path(&metrics, p, PROCESSES));
+    }
+}
