@@ -1,0 +1,221 @@
+//! Interactive serving microbenchmark: frontier-gated point-lookup
+//! latency against a paced upsert load. Emits `BENCH_serve.json`.
+//!
+//! Two clients drive a single-process serving plane while the workers
+//! run the canonical `serve_worker` loop:
+//!
+//! * an **updater** paced on an absolute 1ms epoch grid (`Pacer`, so a
+//!   stall never stretches the schedule) feeding `offered` upserts per
+//!   second and advancing the shared epoch every tick, with periodic
+//!   compaction keeping the trace bounded;
+//! * a **querier** issuing paced point lookups in two flavors — `read`
+//!   at the newest sealed time (answered on arrival) and `fresh` at the
+//!   yet-unsealed epoch (parked until the frontier passes it, so its
+//!   latency is the end-to-end freshness cost of the token frontier).
+//!
+//! Reported per offered rate: achieved update throughput and p50/p99
+//! lookup latency for both flavors.
+
+mod common;
+
+use common::{fmt_rate, percentile, BenchArgs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use timestamp_tokens::config::Config;
+use timestamp_tokens::harness::Pacer;
+use timestamp_tokens::serve::{key_route, serve_worker, QueryError, ServePlane};
+use timestamp_tokens::worker::execute::execute;
+
+/// Hot key space (uniform; large enough that batches stay non-trivial).
+const KEYS: u64 = 10_000;
+/// Epoch cadence: one input epoch per millisecond of scheduled time.
+const TICK: Duration = Duration::from_millis(1);
+/// Query pacing (per second, split across both flavors).
+const QUERY_RATE: u64 = 5_000;
+
+struct Row {
+    offered: u64,
+    achieved: u64,
+    updates: u64,
+    queries: u64,
+    parked: u64,
+    read_p50_us: f64,
+    read_p99_us: f64,
+    fresh_p50_us: f64,
+    fresh_p99_us: f64,
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1_000.0
+}
+
+fn run_point(offered: u64, duration: Duration, warmup: Duration, workers: usize) -> Row {
+    let plane = ServePlane::<u64, u64>::new_single(workers, key_route::<u64>);
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = warmup + duration;
+
+    // Updater: cumulative-target pacing against the absolute grid, so
+    // the offered rate is honored even across slow ticks (the deficit is
+    // worked off, never silently dropped).
+    let upd_plane = plane.clone();
+    let upd_stop = stop.clone();
+    let updater = std::thread::spawn(move || {
+        upd_plane.wait_ready();
+        let client = upd_plane.client();
+        let started = Instant::now();
+        let mut pacer = Pacer::new(started, TICK);
+        let mut sent = 0u64;
+        let mut tick = 0u64;
+        loop {
+            let scheduled = pacer.wait_next();
+            tick += 1;
+            let target =
+                (scheduled.as_nanos() as u128 * offered as u128 / 1_000_000_000) as u64;
+            while sent < target {
+                let key = sent.wrapping_mul(2654435761) % KEYS;
+                client.update(key, Some(sent)).expect("single-process keys are local");
+                sent += 1;
+            }
+            client.advance_to(tick);
+            if tick % 64 == 0 {
+                client.allow_compaction(tick.saturating_sub(32));
+            }
+            if scheduled >= total {
+                break;
+            }
+        }
+        let elapsed = started.elapsed();
+        upd_stop.store(true, Ordering::Release);
+        client.shutdown();
+        (sent, elapsed)
+    });
+
+    // Querier: latency is wall-clock from issue to answer; `fresh`
+    // lookups deliberately target the open epoch and ride the parked
+    // queue until the frontier seals it.
+    let q_plane = plane.clone();
+    let q_stop = stop.clone();
+    let querier = std::thread::spawn(move || {
+        q_plane.wait_ready();
+        let client = q_plane.client();
+        let mut pacer = Pacer::per_second(QUERY_RATE);
+        let mut read: Vec<u64> = Vec::new();
+        let mut fresh: Vec<u64> = Vec::new();
+        let mut n = 0u64;
+        while !q_stop.load(Ordering::Acquire) {
+            let scheduled = pacer.wait_next();
+            let upper = q_plane.min_upper();
+            if upper == 0 {
+                continue; // nothing sealed yet
+            }
+            let key = n.wrapping_mul(0x9E37_79B9_7F4A_7C15) % KEYS;
+            let time = if n % 2 == 0 { upper - 1 } else { upper };
+            n += 1;
+            let start = Instant::now();
+            match client.query(key, time) {
+                Ok(_) => {
+                    if scheduled >= warmup {
+                        let ns = start.elapsed().as_nanos() as u64;
+                        if time < upper {
+                            read.push(ns);
+                        } else {
+                            fresh.push(ns);
+                        }
+                    }
+                }
+                Err(QueryError::Shutdown) => break,
+                Err(e) => panic!("unexpected query error: {e}"),
+            }
+        }
+        read.sort_unstable();
+        fresh.sort_unstable();
+        (read, fresh)
+    });
+
+    let worker_plane = plane.clone();
+    let stats = execute::<u64, _, _>(
+        Config { workers, pin_workers: false, ..Config::default() },
+        move |worker| serve_worker::<u64, u64>(worker, &worker_plane),
+    );
+    let (sent, elapsed) = updater.join().expect("updater thread");
+    let (read, fresh) = querier.join().expect("querier thread");
+
+    Row {
+        offered,
+        achieved: (sent as f64 / elapsed.as_secs_f64().max(1e-9)) as u64,
+        updates: stats.iter().map(|s| s.upserts).sum(),
+        queries: stats.iter().map(|s| s.queries).sum(),
+        parked: stats.iter().map(|s| s.parked).sum(),
+        read_p50_us: us(percentile(&read, 50.0)),
+        read_p99_us: us(percentile(&read, 99.0)),
+        fresh_p50_us: us(percentile(&fresh, 50.0)),
+        fresh_p99_us: us(percentile(&fresh, 99.0)),
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let workers = args.workers.clamp(1, 4);
+    let rates: &[u64] =
+        if args.quick { &[20_000, 100_000] } else { &[50_000, 200_000, 800_000] };
+
+    println!("micro_serve: frontier-gated point lookups vs upsert load");
+    println!(
+        "  ({workers} workers, {KEYS} keys, {} queries/s, {:?} + {:?} warmup per point)\n",
+        QUERY_RATE, args.duration, args.warmup
+    );
+    println!(
+        "{:>10} {:>11} {:>9} {:>8} {:>12} {:>12} {:>13} {:>13}",
+        "offered/s",
+        "achieved/s",
+        "queries",
+        "parked",
+        "read p50 us",
+        "read p99 us",
+        "fresh p50 us",
+        "fresh p99 us"
+    );
+
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let row = run_point(args.rate(rate), args.duration, args.warmup, workers);
+        println!(
+            "{:>10} {:>11} {:>9} {:>8} {:>12.1} {:>12.1} {:>13.1} {:>13.1}",
+            fmt_rate(row.offered),
+            fmt_rate(row.achieved),
+            row.queries,
+            row.parked,
+            row.read_p50_us,
+            row.read_p99_us,
+            row.fresh_p50_us,
+            row.fresh_p99_us
+        );
+        assert!(row.queries > 0, "no queries answered at offered rate {}", row.offered);
+        assert!(row.updates > 0, "no upserts applied at offered rate {}", row.offered);
+        rows.push(row);
+    }
+
+    let mut json = format!(
+        "{{\n  \"bench\": \"micro_serve\",\n  \"workers\": {workers},\n  \"keys\": {KEYS},\n  \"query_rate\": {QUERY_RATE},\n  \"points\": [\n"
+    );
+    for (i, row) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"offered_rate\": {}, \"achieved_rate\": {}, \"updates\": {}, \
+             \"queries_answered\": {}, \"parked\": {}, \"read_p50_us\": {:.1}, \
+             \"read_p99_us\": {:.1}, \"fresh_p50_us\": {:.1}, \"fresh_p99_us\": {:.1}}}{}\n",
+            row.offered,
+            row.achieved,
+            row.updates,
+            row.queries,
+            row.parked,
+            row.read_p50_us,
+            row.read_p99_us,
+            row.fresh_p50_us,
+            row.fresh_p99_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    common::emit_bench_json("BENCH_serve.json", &json);
+}

@@ -16,6 +16,7 @@ use super::stream::Stream;
 use super::token::TimestampToken;
 use crate::progress::location::Location;
 use crate::progress::timestamp::{PartialOrder, Timestamp};
+use crate::runtime::RuntimeError;
 
 /// A handle for introducing timestamped records into a dataflow.
 pub struct InputSession<T: Timestamp, D: Data> {
@@ -89,52 +90,92 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
     }
 
     /// Buffers one record at the current epoch.
+    ///
+    /// Panics on a closed input; the serve command plane (and any other
+    /// path where "closed" is a runtime condition rather than a
+    /// programming error) uses [`try_send`](Self::try_send).
     pub fn send(&mut self, record: D) {
-        assert!(self.token.is_some(), "send on closed input");
-        self.buffer.push(record);
-        if self.buffer.len() >= self.send_batch {
-            self.flush();
-        }
+        self.try_send(record).expect("send on closed input");
     }
 
-    /// Buffers many records at the current epoch.
+    /// Fallible [`send`](Self::send): a closed input is reported as a
+    /// typed [`RuntimeError`] instead of a panic.
+    pub fn try_send(&mut self, record: D) -> Result<(), RuntimeError> {
+        if self.token.is_none() {
+            return Err(RuntimeError::msg("send on closed input"));
+        }
+        self.buffer.push(record);
+        if self.buffer.len() >= self.send_batch {
+            self.try_flush()?;
+        }
+        Ok(())
+    }
+
+    /// Buffers many records at the current epoch. Panics on a closed
+    /// input; see [`try_send_batch`](Self::try_send_batch).
     pub fn send_batch(&mut self, records: &mut Vec<D>) {
-        assert!(self.token.is_some(), "send on closed input");
+        self.try_send_batch(records).expect("send on closed input");
+    }
+
+    /// Fallible [`send_batch`](Self::send_batch); on a closed input the
+    /// records are left untouched and a typed error is returned.
+    pub fn try_send_batch(&mut self, records: &mut Vec<D>) -> Result<(), RuntimeError> {
+        if self.token.is_none() {
+            return Err(RuntimeError::msg("send on closed input"));
+        }
         if self.buffer.is_empty() {
             std::mem::swap(&mut self.buffer, records);
         } else {
             self.buffer.append(records);
         }
         if self.buffer.len() >= self.send_batch {
-            self.flush();
+            self.try_flush()?;
         }
+        Ok(())
     }
 
     /// Flushes buffered records as a message batch at the current epoch.
+    /// Panics on a closed input; see [`try_flush`](Self::try_flush).
     pub fn flush(&mut self) {
+        self.try_flush().expect("flush on closed input");
+    }
+
+    /// Fallible [`flush`](Self::flush).
+    pub fn try_flush(&mut self) -> Result<(), RuntimeError> {
         if !self.buffer.is_empty() {
-            let token = self.token.as_ref().expect("flush on closed input");
+            let token = match self.token.as_ref() {
+                Some(token) => token,
+                None => return Err(RuntimeError::msg("flush on closed input")),
+            };
             let mut session = self.output.session(token);
             // Drain in place: the buffer keeps its capacity for the next
             // epoch instead of handing it to the allocator every flush.
             session.give_iterator(self.buffer.drain(..));
         }
+        Ok(())
     }
 
     /// Advances the epoch to `time`, flushing buffered records and
     /// downgrading the input's token so the system can advance frontiers.
+    /// Panics on a closed input or a non-monotone epoch; see
+    /// [`try_advance_to`](Self::try_advance_to).
     pub fn advance_to(&mut self, time: T) {
-        assert!(
-            self.token.is_some(),
-            "advance_to on closed input"
-        );
-        assert!(
-            self.time.less_equal(&time),
-            "input epochs must advance: {:?} -> {:?}",
-            self.time,
-            time
-        );
-        self.flush();
+        self.try_advance_to(time).expect("advance_to failed");
+    }
+
+    /// Fallible [`advance_to`](Self::advance_to): a closed input or an
+    /// epoch regression is reported as a typed [`RuntimeError`].
+    pub fn try_advance_to(&mut self, time: T) -> Result<(), RuntimeError> {
+        if self.token.is_none() {
+            return Err(RuntimeError::msg("advance_to on closed input"));
+        }
+        if !self.time.less_equal(&time) {
+            return Err(RuntimeError::msg(format!(
+                "input epochs must advance: {:?} -> {:?}",
+                self.time, time
+            )));
+        }
+        self.try_flush()?;
         self.token.as_mut().unwrap().downgrade(&time);
         self.time = time;
         if let Some(tracer) = &self.tracer {
@@ -151,6 +192,7 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
                 );
             }
         }
+        Ok(())
     }
 
     /// Closes the input: flushes and drops the token. Idempotent.
@@ -170,5 +212,71 @@ impl<T: Timestamp, D: Data> InputSession<T, D> {
 impl<T: Timestamp, D: Data> Drop for InputSession<T, D> {
     fn drop(&mut self) {
         self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dataflow::probe::ProbeExt;
+    use crate::worker::execute::execute_single;
+
+    #[test]
+    fn closed_input_reports_typed_errors() {
+        execute_single::<u64, _, _>(|worker| {
+            let (mut input, stream) = worker.new_input::<u64>();
+            let probe = stream.probe();
+            input.advance_to(1);
+            input.send(7);
+            input.close();
+            assert!(input.is_closed());
+            // Every fallible entry point reports a typed error rather
+            // than panicking...
+            let err = input.try_send(8).unwrap_err();
+            assert!(format!("{err}").contains("closed input"), "{err}");
+            let mut batch = vec![1, 2, 3];
+            assert!(input.try_send_batch(&mut batch).is_err());
+            assert_eq!(batch, vec![1, 2, 3], "records must be left untouched on error");
+            assert!(input.try_advance_to(2).is_err());
+            // ...and closing again stays idempotent.
+            input.close();
+            worker.step_while(|| !probe.done());
+        });
+    }
+
+    #[test]
+    fn epoch_regression_is_a_typed_error() {
+        execute_single::<u64, _, _>(|worker| {
+            let (mut input, _stream) = worker.new_input::<u64>();
+            input.advance_to(5);
+            let err = input.try_advance_to(3).unwrap_err();
+            assert!(format!("{err}").contains("must advance"), "{err}");
+            input.close();
+            while !worker.is_complete() {
+                worker.step();
+            }
+        });
+    }
+
+    #[test]
+    fn panicking_wrappers_still_panic_with_the_typed_message() {
+        execute_single::<u64, _, _>(|worker| {
+            let (mut input, _stream) = worker.new_input::<u64>();
+            input.close();
+            // The infallible API keeps its contract: programming errors
+            // panic, and the message carries the typed error's text.
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                input.send(8);
+            }));
+            let payload = caught.unwrap_err();
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(msg.contains("send on closed input"), "{msg}");
+            while !worker.is_complete() {
+                worker.step();
+            }
+        });
     }
 }

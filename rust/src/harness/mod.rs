@@ -3,11 +3,13 @@
 
 pub mod histogram;
 pub mod openloop;
+pub mod pacer;
 pub mod recovery_demo;
 pub mod report;
 pub mod workloads;
 
 pub use histogram::LatencyHistogram;
 pub use openloop::{run, Outcome, Params, Workload};
+pub use pacer::Pacer;
 pub use recovery_demo::{run_q4_recovery_demo, run_recovery_demo, DemoOutcome, RecoveryDemoParams};
 pub use workloads::{CompletionProbe, WorkloadInput};

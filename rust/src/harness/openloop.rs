@@ -254,18 +254,41 @@ fn drive(worker: &mut Worker<u64>, params: Params, epoch: Instant) -> WorkerOutc
             break;
         }
 
-        // Advance the source to the current quantum and emit its due data.
-        let q = now / quantum * quantum;
-        if q > last_quantum {
+        // Walk EVERY quantum boundary up to `now` — never skip one. The
+        // old code jumped straight to `now / quantum * quantum`, so a
+        // stall in `worker.step()` collapsed all the boundaries it slept
+        // through into a single `pending` stamp: the skipped quanta were
+        // never measured and the stall vanished from the histogram
+        // (coordinated omission). Here each elapsed quantum first gets
+        // its due data backfilled at the quantum's own stamp, then enters
+        // `pending` with its absolute schedule time, so a stalled system
+        // is charged the full latency of every quantum it delayed.
+        loop {
+            let q = last_quantum.saturating_add(quantum);
+            if q > now {
+                break;
+            }
+            if data_rate > 0 {
+                let target = (q as u128 * data_rate as u128 / 1_000_000_000) as u64;
+                let due = target.saturating_sub(sent);
+                for _ in 0..due {
+                    input.send(last_quantum, next_word() % params.vocab);
+                }
+                sent += due;
+                if q >= warmup_ns {
+                    measured_sent += due;
+                }
+            }
             input.advance(q);
-            last_quantum = q;
             pending.push_back(q);
+            last_quantum = q;
         }
+        // Residual data due within the currently open quantum.
         if data_rate > 0 {
             let target = (now as u128 * data_rate as u128 / 1_000_000_000) as u64;
             let due = target.saturating_sub(sent);
             for _ in 0..due {
-                input.send(q, next_word() % params.vocab);
+                input.send(last_quantum, next_word() % params.vocab);
             }
             sent += due;
             if now >= warmup_ns {
@@ -355,6 +378,47 @@ mod tests {
                 assert_eq!(telemetry.len(), 2, "one telemetry row per worker");
             }
             Outcome::Dnf => panic!("DNF at trivial load"),
+        }
+    }
+
+    #[test]
+    fn open_loop_accounts_every_quantum_and_the_offered_rate() {
+        // Offered-rate accounting: the harness must (a) achieve the
+        // offered rate it reports against, and (b) enter EVERY quantum
+        // boundary into the pending queue — a harness that skips quanta
+        // under-counts the histogram and masks stalls (coordinated
+        // omission). The histogram count is the witness: each measured
+        // quantum records exactly one latency.
+        let mut params = Params::new(Mechanism::Tokens, Workload::WordCount);
+        params.workers = 2;
+        params.pin_workers = false;
+        params.rate_per_worker = 50_000;
+        params.quantum_ns = 1 << 17; // ~131 us
+        params.duration = Duration::from_millis(400);
+        params.warmup = Duration::from_millis(100);
+        match run(params) {
+            Outcome::Completed { histogram, achieved_rate, .. } => {
+                let offered = params.workers as f64 * params.rate_per_worker as f64;
+                let err = (achieved_rate - offered).abs() / offered;
+                assert!(err < 0.15, "achieved {achieved_rate} vs offered {offered}");
+                // One histogram entry per measured quantum per worker.
+                let per_worker =
+                    params.duration.as_nanos() as u64 / params.quantum_ns;
+                let expected = per_worker * params.workers as u64;
+                assert!(
+                    histogram.count() >= expected * 8 / 10,
+                    "quanta skipped: {} recorded, ~{} scheduled",
+                    histogram.count(),
+                    expected
+                );
+                assert!(
+                    histogram.count() <= expected + 8 * params.workers as u64,
+                    "over-counted: {} recorded, ~{} scheduled",
+                    histogram.count(),
+                    expected
+                );
+            }
+            Outcome::Dnf => panic!("DNF at modest load"),
         }
     }
 

@@ -1,0 +1,128 @@
+//! Absolute-deadline pacing for open-loop load generation.
+//!
+//! A [`Pacer`] schedules event `k` at `epoch + k * period` — the deadline
+//! grid is fixed at construction and never re-derived from "now", so
+//! neither sleep jitter nor a slow consumer shifts later deadlines
+//! (sleep-until, not sleep-for). When the caller falls behind, overdue
+//! deadlines are handed back immediately, one per call, so the backlog is
+//! worked off at full speed and each event still carries the stamp it was
+//! *scheduled* for. Measuring latency against those scheduled stamps is
+//! what keeps an open-loop harness honest under stall: the delay shows up
+//! in the recorded latencies instead of silently stretching the schedule
+//! (coordinated omission).
+
+use std::time::{Duration, Instant};
+
+/// Fixed-rate absolute-deadline scheduler.
+#[derive(Clone, Debug)]
+pub struct Pacer {
+    epoch: Instant,
+    period: Duration,
+    /// Index of the next deadline to hand out.
+    next: u64,
+}
+
+impl Pacer {
+    /// A pacer whose deadline `k` is `epoch + k * period`, starting at
+    /// `k = 1` (the epoch itself is the zeroth boundary, not an event).
+    pub fn new(epoch: Instant, period: Duration) -> Self {
+        assert!(period > Duration::ZERO, "pacer period must be positive");
+        Pacer { epoch, period, next: 1 }
+    }
+
+    /// A pacer for `rate` events per second starting now.
+    pub fn per_second(rate: u64) -> Self {
+        assert!(rate > 0, "pacer rate must be positive");
+        Pacer::new(Instant::now(), Duration::from_nanos(1_000_000_000 / rate.max(1)))
+    }
+
+    /// The experiment epoch (deadline zero).
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// The next deadline to be handed out.
+    pub fn next_deadline(&self) -> Instant {
+        self.epoch + Self::offset_of(self.period, self.next)
+    }
+
+    /// Scheduled offset of deadline `k` from the epoch (`k * period`,
+    /// saturating far beyond any experiment horizon).
+    fn offset_of(period: Duration, k: u64) -> Duration {
+        Duration::from_nanos((period.as_nanos() as u64).saturating_mul(k))
+    }
+
+    /// Blocks until the next deadline and returns its scheduled offset
+    /// from the epoch. Returns immediately when the deadline is already
+    /// past — the caller drains the backlog at full speed, and the
+    /// returned offset is still the *scheduled* time, never "now".
+    pub fn wait_next(&mut self) -> Duration {
+        let deadline = self.next_deadline();
+        let scheduled = Self::offset_of(self.period, self.next);
+        self.next += 1;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return scheduled;
+            }
+            // Sleep UNTIL the absolute deadline; a short final spin would
+            // buy precision at the cost of a busy core, which the harness
+            // deliberately avoids — quantization absorbs sub-quantum
+            // jitter.
+            std::thread::sleep(deadline - now);
+        }
+    }
+
+    /// How many deadlines are currently overdue (0 when on schedule).
+    pub fn backlog(&self) -> u64 {
+        let elapsed = self.epoch.elapsed();
+        let due = (elapsed.as_nanos() / self.period.as_nanos().max(1)) as u64;
+        due.saturating_sub(self.next.saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadlines_are_absolute_not_relative() {
+        // Miss several deadlines, then catch up: the pacer must hand back
+        // every overdue deadline immediately with its original scheduled
+        // offset — no re-anchoring to "now".
+        let period = Duration::from_millis(5);
+        let mut pacer = Pacer::new(Instant::now(), period);
+        std::thread::sleep(period * 4);
+        let mut offsets = Vec::new();
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            offsets.push(pacer.wait_next());
+        }
+        // All three were overdue: handed back without sleeping.
+        assert!(t0.elapsed() < period * 2, "overdue deadlines must not sleep");
+        assert_eq!(offsets, vec![period, period * 2, period * 3]);
+    }
+
+    #[test]
+    fn on_schedule_waits_for_the_grid() {
+        let period = Duration::from_millis(10);
+        let epoch = Instant::now();
+        let mut pacer = Pacer::new(epoch, period);
+        let first = pacer.wait_next();
+        assert_eq!(first, period);
+        // The wait ended at (or after) the absolute deadline.
+        assert!(epoch.elapsed() >= period);
+    }
+
+    #[test]
+    fn backlog_counts_overdue_deadlines() {
+        let period = Duration::from_millis(5);
+        let mut pacer = Pacer::new(Instant::now(), period);
+        std::thread::sleep(period * 3);
+        assert!(pacer.backlog() >= 2, "backlog {}", pacer.backlog());
+        while pacer.backlog() > 0 {
+            pacer.wait_next();
+        }
+        assert_eq!(pacer.backlog(), 0);
+    }
+}

@@ -94,6 +94,7 @@ pub mod operators;
 pub mod progress;
 pub mod recovery;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod worker;
 

@@ -8,6 +8,14 @@
 //!                [--duration-ms D]           the §7.2 microbenchmark
 //! ttd noop       [--chain N] [--ticks R] ...  the §7.3 idle pipeline
 //! ttd nexmark    [--query q4|q7] [--window-ms W] ...   the §7.4 queries
+//! ttd serve      [--workers N] [--epochs E] [--keys K]
+//!                                 interactive serving smoke: feeds a
+//!                                 deterministic upsert/delete script,
+//!                                 verifies every frontier-gated point
+//!                                 lookup against a sequential oracle
+//!                                 (before and after compaction), and
+//!                                 prints p50/p99 lookup latency;
+//!                                 nonzero exit on any mismatch
 //! ttd artifacts  [--dir PATH]                 verify the PJRT data plane
 //! ttd info                                    engine / environment info
 //! ttd trace-check --file out.json [--expect-workers N]
@@ -72,6 +80,8 @@ use timestamp_tokens::harness::report::{latency_cells, print_worker_telemetry};
 use timestamp_tokens::nexmark::bench::{
     run_nexmark_cluster_observed, run_nexmark_observed, NexmarkParams, Query,
 };
+use timestamp_tokens::serve::{serve_worker, ServePlane};
+use timestamp_tokens::worker::execute::{execute, execute_cluster};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -287,6 +297,88 @@ fn orchestrate_recovery_demo(processes: usize, kill: Option<usize>, kill_after_m
     std::process::exit(if failed { 1 } else { 0 });
 }
 
+/// The `ttd serve` update script for `(key, epoch)`: `None` = no update
+/// this epoch, `Some(None)` = delete, `Some(Some(v))` = upsert.
+fn serve_update(key: u64, epoch: u64) -> Option<Option<u64>> {
+    if (key + epoch) % 5 == 0 {
+        return None;
+    }
+    if (key + epoch) % 7 == 0 {
+        return Some(None);
+    }
+    Some(Some(key * 1_000 + epoch))
+}
+
+/// Sequential oracle for the serve script: the value visible for `key`
+/// as of `time` after `epochs` fed epochs.
+fn serve_oracle(key: u64, time: u64, epochs: u64) -> Option<u64> {
+    for epoch in (0..=time.min(epochs - 1)).rev() {
+        if let Some(value) = serve_update(key, epoch) {
+            return value;
+        }
+    }
+    None
+}
+
+/// The `ttd serve` driving client: feeds the script for this process's
+/// keys, then verifies every local key at sampled readable times against
+/// the oracle — once as fed, once after compacting history below the
+/// sampled times — timing each lookup. Returns the mismatch count and
+/// the sorted lookup latencies (ns).
+fn serve_client(
+    plane: std::sync::Arc<ServePlane<u64, u64>>,
+    epochs: u64,
+    keys: u64,
+) -> (u64, Vec<u64>) {
+    plane.wait_ready();
+    let client = plane.client();
+    let local: Vec<u64> = (0..keys).filter(|k| plane.is_local(plane.owner_of(k))).collect();
+    for epoch in 0..epochs {
+        for &key in &local {
+            if let Some(value) = serve_update(key, epoch) {
+                client.update(key, value).expect("local key");
+            }
+        }
+        client.advance_to(epoch + 1);
+    }
+    let times = [epochs / 2, epochs - 1];
+    let mut mismatches = 0u64;
+    let mut latencies = Vec::new();
+    for pass in 0..2 {
+        if pass == 1 {
+            // Compact below the sampled times: answers must not change.
+            client.allow_compaction(epochs / 2);
+        }
+        for &time in &times {
+            for &key in &local {
+                let start = Instant::now();
+                let got = client.query(key, time).expect("sampled time is readable");
+                latencies.push(start.elapsed().as_nanos() as u64);
+                if got != serve_oracle(key, time, epochs) {
+                    eprintln!(
+                        "serve: key {key} at time {time} (pass {pass}): got {got:?}, \
+                         oracle says {:?}",
+                        serve_oracle(key, time, epochs)
+                    );
+                    mismatches += 1;
+                }
+            }
+        }
+    }
+    client.shutdown();
+    latencies.sort_unstable();
+    (mismatches, latencies)
+}
+
+/// Nearest-rank percentile of a sorted ns slice, in microseconds.
+fn pctl_us(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx.min(sorted.len() - 1)] as f64 / 1_000.0
+}
+
 fn print_outcome(label: &str, outcome: &Outcome) {
     let lat = latency_cells(outcome);
     match outcome {
@@ -413,6 +505,69 @@ fn main() {
                 }
             };
             print_outcome(&label, &outcome);
+        }
+        "serve" => {
+            let cluster = args.cluster();
+            cluster.validate();
+            if cluster.processes > 1 && cluster.process.is_none() {
+                orchestrate(cluster.processes);
+            }
+            let workers = args.get("workers", 2usize).max(1);
+            let epochs = args.get("epochs", 32u64).max(4);
+            let keys = args.get("keys", 64u64).max(1);
+            let process_index = cluster.process.unwrap_or(0);
+            let peers = workers * cluster.processes;
+            // Identity route: key k lives on worker k % peers, so every
+            // process owns a verifiable share without hashing.
+            let plane =
+                ServePlane::<u64, u64>::new(peers, process_index * workers, workers, |k| *k);
+            let worker_plane = plane.clone();
+            let client = std::thread::spawn(move || serve_client(plane, epochs, keys));
+            let config = Config {
+                workers,
+                pin_workers: false,
+                processes: cluster.processes,
+                process_index,
+                addresses: cluster.addresses,
+                net_transport: cluster.net.transport,
+                reactor_backend: cluster.net.reactor,
+                parking: cluster.net.parking,
+                autotune: cluster.net.autotune,
+                ..Config::default()
+            };
+            let stats = if cluster.processes > 1 {
+                execute_cluster::<u64, _, _>(config, move |worker| {
+                    serve_worker::<u64, u64>(worker, &worker_plane)
+                })
+                .unwrap_or_else(|e| {
+                    eprintln!("serve: cluster bootstrap failed: {e}");
+                    std::process::exit(1);
+                })
+            } else {
+                execute::<u64, _, _>(config, move |worker| {
+                    serve_worker::<u64, u64>(worker, &worker_plane)
+                })
+            };
+            let (mismatches, latencies) = client.join().expect("serve client thread");
+            let answered: u64 = stats.iter().map(|s| s.queries).sum();
+            let parked: u64 = stats.iter().map(|s| s.parked).sum();
+            let tag = if cluster.processes > 1 {
+                format!("serve[p{process_index}]")
+            } else {
+                "serve".to_string()
+            };
+            println!(
+                "{tag}: {} oracle-verified lookups ({answered} answered, {parked} parked) \
+                 over {epochs} epochs x {keys} keys, {workers} workers: \
+                 p50 {:.1} us  p99 {:.1} us",
+                latencies.len(),
+                pctl_us(&latencies, 50.0),
+                pctl_us(&latencies, 99.0),
+            );
+            if mismatches > 0 {
+                eprintln!("{tag}: {mismatches} lookups disagreed with the sequential oracle");
+                std::process::exit(1);
+            }
         }
         "recovery-demo" => {
             let cluster = args.cluster();
@@ -594,6 +749,10 @@ fn main() {
                  [--workload wordcount|q4] (see `ttd recovery-demo`)"
             );
             println!(
+                "serving: ttd serve [--workers N] [--epochs E] [--keys K] \
+                 (oracle-verified frontier-gated lookups; also multi-process)"
+            );
+            println!(
                 "observability: --trace out.json --metrics out.jsonl (any workload; \
                  validate with `ttd trace-check --file out.json`)"
             );
@@ -601,8 +760,8 @@ fn main() {
         }
         _ => {
             println!(
-                "usage: ttd <wordcount|noop|nexmark|recovery-demo|trace-check|artifacts|info> \
-                 [--flags]"
+                "usage: ttd <wordcount|noop|nexmark|serve|recovery-demo|trace-check|artifacts\
+                 |info> [--flags]"
             );
             println!("see `ttd info` and the module docs for details");
         }

@@ -3258,6 +3258,69 @@ mod tests {
         });
     }
 
+    /// Seeded property: per-sender FIFO survives a *registration racing
+    /// in-flight frames*. The sender streams broadcast batches while the
+    /// receiving process has not yet registered the channel, so the demux
+    /// path parks an arbitrary prefix; registration then lands at a random
+    /// instant mid-stream, concurrently with the reactor thread parking /
+    /// delivering further frames over a chaos transport. The audit
+    /// obligation (module docs): the parked prefix replays before any
+    /// racing frame is delivered — both paths serialize under the
+    /// broadcast-table lock — so every destination mailbox still sees the
+    /// sender's batches in send order, none skipped, none duplicated.
+    #[test]
+    fn broadcast_registration_racing_in_flight_replay_keeps_fifo() {
+        crate::testing::property("broadcast_register_vs_replay_fifo", 10, |case, rng| {
+            let workers = 2 + (case % 2) as usize;
+            let config = ChaosConfig {
+                seed: rng.next_u64(),
+                max_read: if case % 3 == 0 { 1 } else { rng.range(1, 16) as usize },
+                delay_chance: rng.unit_f64() * 0.6,
+                cut_after: None,
+            };
+            let ((a_tx, a_rx), (b_tx, b_rx)) = chaos(config);
+            let shape = vec![1, workers];
+            let a = NetFabric::new(
+                0,
+                shape.clone(),
+                vec![None, Some(NetLink::virtual_pair(a_tx, a_rx))],
+                64,
+            );
+            let b = NetFabric::new(
+                1,
+                shape,
+                vec![Some(NetLink::virtual_pair(b_tx, b_rx)), None],
+                64,
+            );
+            let mut tx = a.broadcast_sender::<u64>(13, 0, 1);
+            let batches = rng.range(8, 40);
+            // Stream from another thread so frames are genuinely in
+            // flight — parked, mid-chaos-delay, or racing the demux —
+            // when the registration below lands.
+            let sender = std::thread::spawn(move || {
+                for t in 0..batches {
+                    send_retrying_broadcast(&mut tx, Arc::new(vec![update(t, 1)]));
+                }
+                tx
+            });
+            std::thread::sleep(Duration::from_micros(rng.range(0, 1500)));
+            b.register_broadcast::<ProgressBroadcast<u64>>(13);
+            let mut rxs: Vec<NetReceiver<Batch>> =
+                (1..=workers).map(|w| b.receiver::<Batch>(13, 0, w)).collect();
+            for rx in rxs.iter_mut() {
+                for t in 0..batches {
+                    assert_eq!(
+                        *recv_blocking(rx),
+                        vec![update(t, 1)],
+                        "register/replay race broke per-sender FIFO"
+                    );
+                }
+            }
+            drop(sender.join().unwrap());
+            shutdown_both(a, b);
+        });
+    }
+
     fn send_retrying_broadcast(tx: &mut NetBroadcastSender<u64>, mut batch: Batch) {
         let deadline = Instant::now() + Duration::from_secs(10);
         loop {

@@ -105,6 +105,11 @@ pub enum EventKind {
     /// The governor republished the progress-flush cadence (instant;
     /// reactor ring). `a` = new cadence in ns.
     CadenceAdjust,
+    /// The serve plane answered a point lookup (instant). `epoch` = the
+    /// queried time, `a` = nanoseconds the query spent parked awaiting
+    /// the frontier (0 = answered on arrival), `b` = queries still
+    /// parked after this one.
+    QueryAnswer,
 }
 
 impl EventKind {
@@ -126,6 +131,7 @@ impl EventKind {
             EventKind::NetSend => "net-send",
             EventKind::RingResize => "ring-resize",
             EventKind::CadenceAdjust => "cadence-adjust",
+            EventKind::QueryAnswer => "query-answer",
         }
     }
 

@@ -105,8 +105,11 @@ impl WindowBackend for NativeWindowBackend {
 
 /// Rounds `ts` up to the next multiple of `window_size` (the Ⓙ helper:
 /// the end-of-window timestamp of the window containing `ts`).
+/// Saturates at `u64::MAX` for timestamps near the top of the domain,
+/// so late-domain data lands in a final partial window instead of
+/// overflowing.
 pub fn round_up_to_multiple(ts: u64, window_size: u64) -> u64 {
-    (ts / window_size + 1) * window_size
+    (ts / window_size).saturating_add(1).saturating_mul(window_size)
 }
 
 /// Tumbling windowed averages.
@@ -197,11 +200,19 @@ impl WindowAverageExt for Stream<u64, u64> {
                             cell.update(epoch, WindowUpdate::Add { window: w, sum, count });
                         }
                     }
-                    // Ⓝ: the frontier tells us which windows can close.
+                    // Ⓝ: the frontier tells us which windows can close. An
+                    // *empty* frontier (end of stream) closes everything —
+                    // including a final partial window saturated at exactly
+                    // `u64::MAX`, which the exclusive `..target_ts` range
+                    // below can never reach. Without the inclusive case
+                    // that window's token is held forever and the dataflow
+                    // never drains.
+                    let frontier_empty = input.frontier().frontier().first().is_none();
                     let target_ts = singleton_frontier(&input.frontier());
+                    let closed = |w: &u64| *w < target_ts || frontier_empty;
                     // Ⓟ, Ⓠ, Ⓡ: retire all closed windows at once, using
                     // the stored tokens.
-                    for (w, tok) in tokens.range(0..target_ts) {
+                    for (w, tok) in tokens.iter().filter(|(w, _)| closed(w)) {
                         let window =
                             cell.state().get(w).copied().unwrap_or_default();
                         output
@@ -212,7 +223,7 @@ impl WindowAverageExt for Stream<u64, u64> {
                     // system automatically (and eagerly). The `Close` is
                     // tagged with the window end (see [`WindowUpdate`]).
                     let retired: Vec<u64> =
-                        tokens.range(0..target_ts).map(|(k, _)| *k).collect();
+                        tokens.keys().filter(|&w| closed(w)).copied().collect();
                     for k in retired {
                         tokens.remove(&k);
                         cell.update(k, WindowUpdate::Close { window: k });
@@ -304,5 +315,28 @@ mod tests {
         assert_eq!(round_up_to_multiple(0, 10), 10);
         assert_eq!(round_up_to_multiple(9, 10), 10);
         assert_eq!(round_up_to_multiple(10, 10), 20);
+        // Near the top of the domain the window end saturates instead of
+        // overflowing (a wrapped end would misfile the data at window 0).
+        assert_eq!(round_up_to_multiple(u64::MAX - 3, 10), u64::MAX);
+        assert_eq!(round_up_to_multiple(u64::MAX, 10), u64::MAX);
+    }
+
+    #[test]
+    fn end_of_stream_flushes_final_partial_window() {
+        // The stream closes while the last window is still partial: the
+        // now-empty frontier must retire it (and drop its token) rather
+        // than waiting for an advance that will never come.
+        let got = run_window(vec![(5, 6), (21, 4), (23, 8)], 10);
+        assert_eq!(got, vec![(10, 6.0), (30, 6.0)]);
+    }
+
+    #[test]
+    fn end_of_stream_retires_window_saturated_at_max() {
+        // Timestamps near u64::MAX saturate to a final window ending at
+        // exactly u64::MAX, which the exclusive `..target_ts` retirement
+        // range can never reach: only the empty-frontier end-of-stream
+        // path closes it. Regression test — this used to hang forever.
+        let got = run_window(vec![(5, 6), (u64::MAX - 3, 8)], 10);
+        assert_eq!(got, vec![(10, 6.0), (u64::MAX, 8.0)]);
     }
 }

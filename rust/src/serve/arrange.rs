@@ -1,0 +1,205 @@
+//! The `arrange` operator: from a stream of keyed updates to a
+//! compactable, concurrently-readable [`TraceHandle`].
+//!
+//! Updates are exchanged by key (so each worker owns a disjoint key
+//! range), staged per epoch in reused scratch buffers, and sealed into
+//! the trace exactly when the input frontier passes the epoch: the
+//! timestamp-token frontier is the *only* coordination between writers
+//! and readers. Within one `(key, epoch)` the last staged update wins
+//! (feed order is preserved by per-sender FIFO channels; a per-record
+//! sequence number breaks ties across the unstable sort). The steady
+//! state allocates nothing: staging scratch, the seq-sorted seal pass,
+//! and the trace's batch buffers all recycle.
+//!
+//! With a recovery context, the arranged state rides an [`EpochSealed`]
+//! cell (per-key latest `(epoch, value)`), so `--recover` restores the
+//! serving state: keys repartition by the same route function, and the
+//! trace resumes as a single snapshot batch with the compaction
+//! frontier at the resume epoch (per-epoch history below the snapshot
+//! is, by construction, compacted away).
+
+use super::trace::TraceHandle;
+use crate::dataflow::channels::{Data, Pact};
+use crate::dataflow::operator::OperatorExt;
+use crate::dataflow::stream::Stream;
+use crate::recovery::EpochSealed;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Recovery state: per key, the latest `(epoch, value)` observed
+/// (tombstones kept so later restores do not resurrect deletes).
+type ArrangedState<K, V> = BTreeMap<K, (u64, Option<V>)>;
+
+fn apply_arranged<K: Ord + Clone, V: Clone>(
+    state: &mut ArrangedState<K, V>,
+    update: &(K, u64, Option<V>),
+) {
+    let (key, epoch, value) = update;
+    let entry = state.entry(key.clone()).or_insert((*epoch, value.clone()));
+    if entry.0 <= *epoch {
+        *entry = (*epoch, value.clone());
+    }
+}
+
+/// An arranged stream: the readable trace plus a unit output stream
+/// whose frontier tracks the arrangement (probe it to observe seals).
+pub struct Arranged<K, V> {
+    /// The shared trace; clone freely, read from any thread.
+    pub trace: TraceHandle<K, V>,
+    /// Empty output carrying only frontier information.
+    pub stream: Stream<u64, ()>,
+}
+
+/// Arranges a stream of keyed updates into a shared trace.
+pub trait ArrangeExt<K: Data + Ord, V: Data> {
+    /// [`arrange_routed`](ArrangeExt::arrange_routed) with the default
+    /// key router ([`key_route`](crate::serve::key_route)).
+    fn arrange(&self, name: &str) -> Arranged<K, V>
+    where
+        K: std::hash::Hash;
+
+    /// Builds the arrangement, exchanging updates to worker
+    /// `route(key) % peers`. Queries for a key must use the same route
+    /// to find the owning worker's trace.
+    fn arrange_routed(&self, name: &str, route: fn(&K) -> u64) -> Arranged<K, V>;
+}
+
+impl<K: Data + Ord, V: Data> ArrangeExt<K, V> for Stream<u64, (K, Option<V>)> {
+    fn arrange(&self, name: &str) -> Arranged<K, V>
+    where
+        K: std::hash::Hash,
+    {
+        self.arrange_routed(name, super::key_route::<K>)
+    }
+
+    fn arrange_routed(&self, name: &str, route: fn(&K) -> u64) -> Arranged<K, V> {
+        let scope = self.scope();
+        let peers = scope.peers() as u64;
+        let my_index = scope.index();
+        let recovery = scope.recovery();
+        let trace = TraceHandle::<K, V>::new();
+        let trace_op = trace.clone();
+        let reg_name = format!("arrange:{name}");
+        let stream = self.unary_frontier(
+            Pact::exchange(move |x: &(K, Option<V>)| route(&x.0) % peers),
+            name,
+            move |tok, _info| {
+                // Recovery cell: per-key latest update. Only built when a
+                // recovery context exists — the serving hot path must not
+                // pay for durability it did not ask for.
+                let cell = recovery.as_ref().map(|ctx| {
+                    let logging = ctx.logging();
+                    Rc::new(RefCell::new(EpochSealed::new(
+                        ArrangedState::<K, V>::new(),
+                        apply_arranged::<K, V>,
+                        logging,
+                    )))
+                });
+                let mut sealed_upper = 0u64;
+                if let (Some(ctx), Some(cell)) = (&recovery, &cell) {
+                    let restored = ctx.register(&reg_name, cell.clone(), {
+                        move |into: &mut ArrangedState<K, V>, _old_worker, old| {
+                            // Keys repartition under the NEW shape: keep
+                            // only this worker's share, per-key max epoch
+                            // across the old workers' chunks.
+                            for (key, (epoch, value)) in old {
+                                if route(&key) % peers != my_index as u64 {
+                                    continue;
+                                }
+                                let entry =
+                                    into.entry(key).or_insert((epoch, value.clone()));
+                                if entry.0 <= epoch {
+                                    *entry = (epoch, value);
+                                }
+                            }
+                        }
+                    });
+                    if restored {
+                        let resume = ctx.resume_epoch();
+                        let mut entries = trace_op.checkout();
+                        entries.clear();
+                        // Snapshot: per-key latest value at its original
+                        // epoch; tombstoned keys are simply absent (the
+                        // snapshot is the oldest batch — nothing can
+                        // resurrect them). Reads below `resume` are
+                        // rejected via the compaction frontier.
+                        for (key, (epoch, value)) in cell.borrow().state() {
+                            if let Some(value) = value {
+                                entries.push((key.clone(), *epoch, Some(value.clone())));
+                            }
+                        }
+                        entries.sort_unstable_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
+                        trace_op.restore_snapshot(resume, entries);
+                        sealed_upper = resume + 1;
+                    }
+                }
+                // The arrangement produces no unprompted output and holds
+                // no capabilities: the trace's upper bound advances with
+                // the input frontier alone.
+                std::mem::drop(tok);
+                // Staged updates awaiting their epoch to complete:
+                // (epoch, seq, key, value), seq disambiguating feed order.
+                let mut staged: Vec<(u64, u64, K, Option<V>)> = Vec::new();
+                let mut seq = 0u64;
+                move |input: &mut _, _output: &mut _| {
+                    while let Some((tok_ref, data)) = input.next() {
+                        let epoch = *tok_ref.time();
+                        for (key, value) in data.iter() {
+                            staged.push((epoch, seq, key.clone(), value.clone()));
+                            seq += 1;
+                        }
+                    }
+                    // Seal every epoch the frontier has passed; an empty
+                    // frontier (end of stream) seals everything.
+                    let target = {
+                        let frontier = input.frontier();
+                        let first = frontier.frontier().first().cloned();
+                        first.unwrap_or(u64::MAX)
+                    };
+                    if target <= sealed_upper {
+                        return;
+                    }
+                    let ready = staged.iter().filter(|e| e.0 < target).count();
+                    if ready == 0 {
+                        trace_op.advance_upper(target);
+                        sealed_upper = target;
+                        return;
+                    }
+                    // Ready entries first, ordered (key, epoch, seq); the
+                    // unstable sort is total thanks to seq.
+                    staged.sort_unstable_by(|a, b| {
+                        (a.0 >= target)
+                            .cmp(&(b.0 >= target))
+                            .then_with(|| (&a.2, a.0, a.1).cmp(&(&b.2, b.0, b.1)))
+                    });
+                    let mut batch = trace_op.checkout();
+                    batch.clear();
+                    for i in 0..ready {
+                        let (epoch, _, key, value) = &staged[i];
+                        // Last write wins within (key, epoch): only the
+                        // final seq of each run survives the seal.
+                        let last_of_run = i + 1 == ready
+                            || staged[i + 1].2 != *key
+                            || staged[i + 1].0 != *epoch;
+                        if !last_of_run {
+                            continue;
+                        }
+                        if let Some(cell) = &cell {
+                            cell.borrow_mut().update(
+                                *epoch,
+                                (key.clone(), *epoch, value.clone()),
+                            );
+                        }
+                        batch.push((key.clone(), *epoch, value.clone()));
+                    }
+                    trace_op.append(sealed_upper, target, batch);
+                    sealed_upper = target;
+                    // Shift the still-open suffix down; capacity stays.
+                    staged.drain(..ready);
+                }
+            },
+        );
+        Arranged { trace, stream }
+    }
+}

@@ -1,0 +1,528 @@
+//! The per-worker command plane: how concurrent clients reach a
+//! serving dataflow.
+//!
+//! Clients push [`ServeCommand`]s onto the owning worker's
+//! [`CommandRing`] and unpark that worker through the fabric — the same
+//! unpark registry `step_or_park` uses for progress wakeups, so a query
+//! arriving at an idle cluster wakes exactly the worker that must
+//! answer it. The worker drains its ring between steps
+//! ([`ServeDriver::pump`]), applies upserts/advances to its input
+//! session, answers queries whose time the trace has sealed
+//! (`upper > time`), and parks the rest on a pending queue retired by
+//! the same frontier advances that seal the trace. Responses travel
+//! through reusable [`ResponseSlot`]s (mutex + condvar), so the whole
+//! command path — push, drain, park, retire, respond — allocates
+//! nothing in steady state.
+
+use super::trace::{QueryError, TraceHandle};
+use super::upsert::UpsertSession;
+use crate::dataflow::channels::Data;
+use crate::observe::{EventKind, WorkerTracer};
+use crate::worker::allocator::Fabric;
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A reusable single-response rendezvous: the worker fills it, the
+/// issuing client takes it. One slot serves any number of sequential
+/// queries without allocating.
+pub struct ResponseSlot<V> {
+    state: Mutex<Option<Result<Option<V>, QueryError>>>,
+    cond: Condvar,
+}
+
+impl<V> Default for ResponseSlot<V> {
+    fn default() -> Self {
+        ResponseSlot { state: Mutex::new(None), cond: Condvar::new() }
+    }
+}
+
+impl<V> ResponseSlot<V> {
+    /// A fresh, empty slot.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Fills the slot (worker side) and wakes the waiter.
+    pub fn fill(&self, result: Result<Option<V>, QueryError>) {
+        let mut state = self.state.lock().expect("slot poisoned");
+        *state = Some(result);
+        self.cond.notify_all();
+    }
+
+    /// Blocks until filled, then empties the slot for reuse.
+    pub fn wait(&self) -> Result<Option<V>, QueryError> {
+        let mut state = self.state.lock().expect("slot poisoned");
+        loop {
+            if let Some(result) = state.take() {
+                return result;
+            }
+            state = self.cond.wait(state).expect("slot poisoned");
+        }
+    }
+
+    /// Like [`wait`](Self::wait) with a bound; `None` on timeout (the
+    /// slot stays armed — the response can still be taken later).
+    pub fn wait_timeout(&self, bound: Duration) -> Option<Result<Option<V>, QueryError>> {
+        let deadline = Instant::now() + bound;
+        let mut state = self.state.lock().expect("slot poisoned");
+        loop {
+            if let Some(result) = state.take() {
+                return Some(result);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (next, _) = self
+                .cond
+                .wait_timeout(state, deadline - now)
+                .expect("slot poisoned");
+            state = next;
+        }
+    }
+
+    /// Non-blocking take (used by same-thread drivers in tests).
+    pub fn try_take(&self) -> Option<Result<Option<V>, QueryError>> {
+        self.state.lock().expect("slot poisoned").take()
+    }
+}
+
+/// A point lookup: answered when the owning worker's trace seals past
+/// `time`, parked until then.
+pub struct Query<K, V> {
+    /// The key to look up.
+    pub key: K,
+    /// The time to read as of.
+    pub time: u64,
+    /// Where the answer goes.
+    pub tx: Arc<ResponseSlot<V>>,
+}
+
+/// One client→worker command (the ddquery worker-command vocabulary).
+pub enum ServeCommand<K, V> {
+    /// Set (`Some`) or delete (`None`) a key at the input's epoch.
+    Upsert {
+        /// The key.
+        key: K,
+        /// `Some` upserts, `None` deletes.
+        value: Option<V>,
+    },
+    /// Advance this worker's upsert input to `time`.
+    AdvanceInput {
+        /// The new epoch (stale values are no-ops).
+        time: u64,
+    },
+    /// A frontier-gated point lookup.
+    Query(Query<K, V>),
+    /// Let the trace merge history below `frontier`.
+    AllowCompaction {
+        /// The compaction frontier.
+        frontier: u64,
+    },
+    /// Close the input and wind the serve loop down.
+    Shutdown,
+}
+
+/// An unbounded MPSC command queue for one worker. Drains by buffer
+/// swap, so both sides keep their capacities.
+pub struct CommandRing<K, V> {
+    queue: Mutex<VecDeque<ServeCommand<K, V>>>,
+    pushed: AtomicU64,
+}
+
+impl<K, V> Default for CommandRing<K, V> {
+    fn default() -> Self {
+        CommandRing { queue: Mutex::new(VecDeque::new()), pushed: AtomicU64::new(0) }
+    }
+}
+
+impl<K, V> CommandRing<K, V> {
+    /// Enqueues one command (any thread).
+    pub fn push(&self, command: ServeCommand<K, V>) {
+        self.queue.lock().expect("ring poisoned").push_back(command);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Moves every queued command into `into` (the owning worker).
+    /// Swaps buffers when `into` is empty so neither side reallocates.
+    pub fn drain_into(&self, into: &mut VecDeque<ServeCommand<K, V>>) {
+        let mut queue = self.queue.lock().expect("ring poisoned");
+        if queue.is_empty() {
+            return;
+        }
+        if into.is_empty() {
+            std::mem::swap(&mut *queue, into);
+        } else {
+            into.extend(queue.drain(..));
+        }
+    }
+
+    /// Total commands ever pushed (diagnostics).
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-local serving plane: one command ring per hosted
+/// worker, the workers' traces once built, and the fabric for unparks.
+/// Built before `execute`, shared with every worker closure and every
+/// client thread.
+pub struct ServePlane<K, V> {
+    rings: Vec<Arc<CommandRing<K, V>>>,
+    traces: Mutex<Vec<Option<TraceHandle<K, V>>>>,
+    fabric: OnceLock<Arc<Fabric>>,
+    route: fn(&K) -> u64,
+    /// Total workers across the cluster (the exchange modulus).
+    peers: usize,
+    /// Global index of this process's first worker.
+    base: usize,
+    /// Workers hosted by this process.
+    local: usize,
+}
+
+impl<K, V> ServePlane<K, V> {
+    /// A plane for a process hosting workers `base .. base + local` of
+    /// `peers` total, routing keys with `route` (which must match the
+    /// arrangement's).
+    pub fn new(peers: usize, base: usize, local: usize, route: fn(&K) -> u64) -> Arc<Self> {
+        Arc::new(ServePlane {
+            rings: (0..local).map(|_| Arc::new(CommandRing::default())).collect(),
+            traces: Mutex::new((0..local).map(|_| None).collect()),
+            fabric: OnceLock::new(),
+            route,
+            peers,
+            base,
+            local,
+        })
+    }
+
+    /// Single-process convenience: all `peers` workers are local.
+    pub fn new_single(peers: usize, route: fn(&K) -> u64) -> Arc<Self> {
+        Self::new(peers, 0, peers, route)
+    }
+
+    /// Called by each worker at build time: publishes its trace and
+    /// (first caller) the shared fabric.
+    pub fn attach(&self, worker_index: usize, trace: TraceHandle<K, V>, fabric: Arc<Fabric>) {
+        let local = worker_index - self.base;
+        self.traces.lock().expect("plane poisoned")[local] = Some(trace);
+        let _ = self.fabric.set(fabric);
+    }
+
+    /// The command ring of global worker `worker_index` (must be local).
+    pub fn ring(&self, worker_index: usize) -> Arc<CommandRing<K, V>> {
+        self.rings[worker_index - self.base].clone()
+    }
+
+    /// The global index of the worker owning `key`.
+    pub fn owner_of(&self, key: &K) -> usize {
+        ((self.route)(key) % self.peers as u64) as usize
+    }
+
+    /// True iff `worker_index` is hosted by this process.
+    pub fn is_local(&self, worker_index: usize) -> bool {
+        (self.base..self.base + self.local).contains(&worker_index)
+    }
+
+    /// This process's worker range and the cluster size.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.peers, self.base, self.local)
+    }
+
+    /// The key router shared by the arrangement and the clients.
+    pub fn route(&self) -> fn(&K) -> u64 {
+        self.route
+    }
+
+    /// The trace of global worker `worker_index`, once attached.
+    pub fn trace(&self, worker_index: usize) -> Option<TraceHandle<K, V>> {
+        self.traces.lock().expect("plane poisoned")[worker_index - self.base].clone()
+    }
+
+    /// Blocks until every local worker has attached its trace (clients
+    /// call this once before issuing commands).
+    pub fn wait_ready(&self) {
+        loop {
+            {
+                let traces = self.traces.lock().expect("plane poisoned");
+                if traces.iter().all(|t| t.is_some()) {
+                    return;
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Unparks a (local) worker so a just-pushed command is seen even
+    /// if the worker is idle in `step_or_park`.
+    pub fn unpark(&self, worker_index: usize) {
+        if let Some(fabric) = self.fabric.get() {
+            fabric.unpark_worker(worker_index);
+        }
+    }
+
+    /// The minimum sealed upper bound across local traces — the newest
+    /// time every local worker can already answer.
+    pub fn min_upper(&self) -> u64 {
+        let traces = self.traces.lock().expect("plane poisoned");
+        traces
+            .iter()
+            .map(|t| t.as_ref().map_or(0, |t| t.upper()))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// A client handle for issuing commands and queries.
+    pub fn client(self: &Arc<Self>) -> ServeClient<K, V> {
+        ServeClient { plane: self.clone(), slot: ResponseSlot::new() }
+    }
+}
+
+/// A client of the serving plane: routes commands to owning workers
+/// and waits on a private reusable response slot. One client per
+/// thread; clone-cost is one `Arc` bump plus a fresh slot.
+pub struct ServeClient<K, V> {
+    plane: Arc<ServePlane<K, V>>,
+    slot: Arc<ResponseSlot<V>>,
+}
+
+impl<K: Data, V: Data> ServeClient<K, V> {
+    /// The plane this client talks to.
+    pub fn plane(&self) -> &Arc<ServePlane<K, V>> {
+        &self.plane
+    }
+
+    /// Routes an upsert (`Some`) or delete (`None`) to the key's owner.
+    /// Errors if the owner is not hosted by this process.
+    pub fn update(&self, key: K, value: Option<V>) -> Result<(), QueryError> {
+        let owner = self.plane.owner_of(&key);
+        if !self.plane.is_local(owner) {
+            return Err(QueryError::NotLocal { owner });
+        }
+        self.plane.rings[owner - self.plane.base].push(ServeCommand::Upsert { key, value });
+        self.plane.unpark(owner);
+        Ok(())
+    }
+
+    /// Advances every local worker's input to `time` (the cluster-wide
+    /// frontier passes `time` once every process does the same).
+    pub fn advance_to(&self, time: u64) {
+        for (i, ring) in self.plane.rings.iter().enumerate() {
+            ring.push(ServeCommand::AdvanceInput { time });
+            self.plane.unpark(self.plane.base + i);
+        }
+    }
+
+    /// Lets every local trace compact history below `frontier`.
+    pub fn allow_compaction(&self, frontier: u64) {
+        for (i, ring) in self.plane.rings.iter().enumerate() {
+            ring.push(ServeCommand::AllowCompaction { frontier });
+            self.plane.unpark(self.plane.base + i);
+        }
+    }
+
+    /// Point lookup: blocks until the frontier passes `time` and the
+    /// owning worker answers. Errors typed: non-local key, compacted
+    /// time, or shutdown.
+    pub fn query(&self, key: K, time: u64) -> Result<Option<V>, QueryError> {
+        self.enqueue_query(key, time)?;
+        self.slot.wait()
+    }
+
+    /// [`query`](Self::query) with a timeout; `None` if unanswered in
+    /// `bound` (e.g. the frontier has not reached `time` yet).
+    pub fn query_timeout(
+        &self,
+        key: K,
+        time: u64,
+        bound: Duration,
+    ) -> Option<Result<Option<V>, QueryError>> {
+        if let Err(e) = self.enqueue_query(key, time) {
+            return Some(Err(e));
+        }
+        self.slot.wait_timeout(bound)
+    }
+
+    fn enqueue_query(&self, key: K, time: u64) -> Result<(), QueryError> {
+        let owner = self.plane.owner_of(&key);
+        if !self.plane.is_local(owner) {
+            return Err(QueryError::NotLocal { owner });
+        }
+        self.plane.rings[owner - self.plane.base].push(ServeCommand::Query(Query {
+            key,
+            time,
+            tx: self.slot.clone(),
+        }));
+        self.plane.unpark(owner);
+        Ok(())
+    }
+
+    /// Tells every local worker to close its input and wind down.
+    pub fn shutdown(&self) {
+        for (i, ring) in self.plane.rings.iter().enumerate() {
+            ring.push(ServeCommand::Shutdown);
+            self.plane.unpark(self.plane.base + i);
+        }
+    }
+}
+
+/// Counters a serve loop reports when it exits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Upserts applied to the input session.
+    pub upserts: u64,
+    /// Queries answered (including typed errors).
+    pub queries: u64,
+    /// Queries that had to park for the frontier.
+    pub parked: u64,
+}
+
+/// The worker-side command pump: drains the ring, applies commands,
+/// parks and retires frontier-gated queries. Owned by the worker
+/// thread, driven between steps.
+pub struct ServeDriver<K: Data, V: Data> {
+    ring: Arc<CommandRing<K, V>>,
+    session: UpsertSession<K, V>,
+    trace: TraceHandle<K, V>,
+    /// Drain buffer (swapped with the ring's).
+    local: VecDeque<ServeCommand<K, V>>,
+    /// Queries waiting for the frontier: (query, arrival instant).
+    pending: VecDeque<(Query<K, V>, Instant)>,
+    tracer: Option<Rc<WorkerTracer>>,
+    shutdown: bool,
+    stats: ServeStats,
+}
+
+impl<K: Data, V: Data> ServeDriver<K, V> {
+    /// A driver pumping `ring` into `session`, answering from `trace`.
+    pub fn new(
+        ring: Arc<CommandRing<K, V>>,
+        session: UpsertSession<K, V>,
+        trace: TraceHandle<K, V>,
+        tracer: Option<Rc<WorkerTracer>>,
+    ) -> Self {
+        ServeDriver {
+            ring,
+            session,
+            trace,
+            local: VecDeque::new(),
+            pending: VecDeque::new(),
+            tracer,
+            shutdown: false,
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// Drains and applies queued commands, then retires every parked
+    /// query whose time the trace has sealed. Returns true if any
+    /// command was processed or query answered (work happened).
+    pub fn pump(&mut self) -> bool {
+        let mut worked = false;
+        self.ring.drain_into(&mut self.local);
+        while let Some(command) = self.local.pop_front() {
+            worked = true;
+            match command {
+                ServeCommand::Upsert { key, value } => {
+                    // After shutdown the session is closed; late upserts
+                    // are dropped (typed, not a panic).
+                    if self.session.update(key, value).is_ok() {
+                        self.stats.upserts += 1;
+                    }
+                }
+                ServeCommand::AdvanceInput { time } => {
+                    let _ = self.session.advance_to(time);
+                }
+                ServeCommand::Query(query) => {
+                    if !self.try_answer_arrival(&query) {
+                        self.stats.parked += 1;
+                        self.pending.push_back((query, Instant::now()));
+                    }
+                }
+                ServeCommand::AllowCompaction { frontier } => {
+                    self.trace.allow_compaction(frontier);
+                }
+                ServeCommand::Shutdown => {
+                    self.session.close();
+                    self.shutdown = true;
+                }
+            }
+        }
+        worked |= self.retire();
+        worked
+    }
+
+    /// Answers a just-arrived query if its time is already sealed.
+    fn try_answer_arrival(&mut self, query: &Query<K, V>) -> bool {
+        if !self.trace.readable(query.time) {
+            return false;
+        }
+        let result = self.trace.lookup(&query.key, query.time);
+        query.tx.fill(result);
+        self.stats.queries += 1;
+        self.emit_latency(query.time, 0);
+        true
+    }
+
+    /// Retires parked queries the frontier has since passed. The queue
+    /// is scanned in place (rotate), so arrival order is preserved for
+    /// still-parked queries and nothing allocates.
+    fn retire(&mut self) -> bool {
+        let mut worked = false;
+        for _ in 0..self.pending.len() {
+            let (query, arrived) = self.pending.pop_front().expect("len checked");
+            if self.trace.readable(query.time) {
+                let result = self.trace.lookup(&query.key, query.time);
+                query.tx.fill(result);
+                self.stats.queries += 1;
+                self.emit_latency(query.time, arrived.elapsed().as_nanos() as u64);
+                worked = true;
+            } else {
+                self.pending.push_back((query, arrived));
+            }
+        }
+        worked
+    }
+
+    /// Emits a query-latency event: `a` carries the nanoseconds the
+    /// query spent parked awaiting the frontier (0 = answered on
+    /// arrival), `epoch` the queried time.
+    fn emit_latency(&self, time: u64, parked_ns: u64) {
+        if let Some(tracer) = &self.tracer {
+            tracer.emit_at(
+                EventKind::QueryAnswer,
+                tracer.now_ns(),
+                0,
+                time,
+                parked_ns,
+                self.pending.len() as u64,
+            );
+        }
+    }
+
+    /// True once a `Shutdown` command has been applied.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown
+    }
+
+    /// Parked queries still awaiting the frontier.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// Fails every still-parked query (loop teardown with the frontier
+    /// short of their times — e.g. the input closed early).
+    pub fn fail_pending(&mut self) {
+        while let Some((query, _)) = self.pending.pop_front() {
+            query.tx.fill(Err(QueryError::Shutdown));
+            self.stats.queries += 1;
+        }
+    }
+}

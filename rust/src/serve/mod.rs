@@ -1,0 +1,114 @@
+//! The interactive query serving plane: arrangements, upsert inputs,
+//! and frontier-gated point lookups (ROADMAP item 2).
+//!
+//! This is the paper's thesis turned into a read path. A timestamp
+//! token tells the host system *exactly* when a time is complete —
+//! nothing more — and that is precisely the contract an interactive
+//! lookup needs:
+//!
+//! **Frontier gating.** Each worker arranges its share of the keyed
+//! state into a [`TraceHandle`]: sealed per-epoch batches appended only
+//! when the worker's input frontier passes the batch's upper bound.
+//! Because the frontier is conservative (produce-before-data-release,
+//! per-sender FIFO — the PR 1 argument), `trace.upper() > t` proves
+//! every update at a time `<= t` is already in the trace and no more
+//! can arrive. A `Query { key, time }` is therefore answered the
+//! moment `upper > time` — from any thread, with no locks against
+//! operator logic — and parked on the worker's pending queue
+//! otherwise, retired by the same frontier advance that seals the
+//! trace. Queries can never observe a time the frontier has not
+//! passed: the gate *is* the frontier.
+//!
+//! **Compaction correctness.** `allow_compaction(c)` merges batches
+//! wholly below `c` into one per-key last-write snapshot and rejects
+//! reads below `c` with a typed error. A lookup at `t >= c` consults
+//! only each key's greatest epoch `<= t`; collapsing strictly-older
+//! history to exactly that per-key maximum cannot change any readable
+//! answer, so results at `t >= c` are identical before and after
+//! compaction (pinned by tests in `trace.rs` and
+//! `tests/serve_integration.rs`).
+//!
+//! The module splits along the ddquery worker-loop blueprint:
+//! [`trace`] (the compactable store), [`upsert`] (the
+//! last-write-wins input family), [`arrange`] (the operator), and
+//! [`command`] (rings, response slots, the [`ServeDriver`] pump and
+//! [`ServePlane`]/[`ServeClient`] used from outside the dataflow).
+//! Follow-ons tracked in ROADMAP: multi-key range scans and
+//! cross-process query routing (today a client reaches the workers of
+//! its own process; keys owned elsewhere return a typed
+//! `QueryError::NotLocal`).
+
+pub mod arrange;
+pub mod command;
+pub mod trace;
+pub mod upsert;
+
+pub use arrange::{Arranged, ArrangeExt};
+pub use command::{
+    CommandRing, Query, ResponseSlot, ServeClient, ServeCommand, ServeDriver, ServePlane,
+    ServeStats,
+};
+pub use trace::{QueryError, TraceHandle};
+pub use upsert::{upsert_source, UpsertSession};
+
+use crate::dataflow::channels::Data;
+use crate::worker::Worker;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The default key router: a deterministic hash (`DefaultHasher` with
+/// its fixed initial state), identical across workers and processes so
+/// clients and the exchange pact agree on every key's owner.
+pub fn key_route<K: std::hash::Hash>(key: &K) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut hasher = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut hasher);
+    hasher.finish()
+}
+
+/// How long a serve loop parks when idle (bounded so ring staleness
+/// stays small even without an unpark; matches the worker default).
+pub const SERVE_PARK: Duration = Duration::from_micros(500);
+
+/// The canonical per-worker serve loop: builds the upsert→arrange
+/// dataflow, attaches this worker's trace to `plane`, then pumps
+/// commands and steps until a `Shutdown` command arrives and the
+/// dataflow drains. Returns the driver's counters.
+///
+/// The loop shape is the ddquery blueprint: drain commands → step (or
+/// park, if truly idle — an arriving command unparks us through the
+/// fabric) → retire pending queries.
+pub fn serve_worker<K, V>(worker: &mut Worker<u64>, plane: &Arc<ServePlane<K, V>>) -> ServeStats
+where
+    K: Data + Ord,
+    V: Data,
+{
+    let (session, stream) = upsert_source::<K, V>(worker);
+    let arranged = stream.arrange_routed("serve", plane.route());
+    plane.attach(worker.index(), arranged.trace.clone(), worker.fabric().clone());
+    worker.finalize();
+    let tracer = worker.scope().tracer();
+    let mut driver =
+        ServeDriver::new(plane.ring(worker.index()), session, arranged.trace, tracer);
+    loop {
+        let worked = driver.pump();
+        if driver.is_shutdown() {
+            break;
+        }
+        if worked {
+            worker.step();
+        } else {
+            worker.step_or_park(SERVE_PARK);
+        }
+    }
+    // Teardown: the input is closed; keep stepping until every worker's
+    // frontier drains (the empty frontier seals the trace through
+    // `u64::MAX`, retiring every well-formed pending query).
+    while !worker.is_complete() {
+        worker.step();
+        driver.pump();
+    }
+    driver.pump();
+    driver.fail_pending();
+    driver.stats()
+}

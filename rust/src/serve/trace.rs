@@ -1,0 +1,366 @@
+//! The compactable shared trace behind an arrangement.
+//!
+//! A trace is operator state indexed by key and versioned by epoch, held
+//! in a sequence of sealed per-epoch-range **batches**. The arrange
+//! operator appends a batch covering `[lower, upper)` exactly when its
+//! input frontier passes `upper`, so the trace's `upper` bound is a
+//! *frontier-certified* claim: every update at an epoch `< upper` is
+//! already in the trace, and no further update below `upper` can ever
+//! arrive. That is the whole correctness argument for serving reads from
+//! outside the dataflow — a point lookup at time `t` is answerable the
+//! moment `upper > t`, with no locks against operator logic and no
+//! coordination beyond the timestamp-token frontier itself.
+//!
+//! **Compaction correctness.** `allow_compaction(c)` merges every batch
+//! wholly below `c` into a single per-key last-write snapshot and
+//! forbids reads below `c`. For any readable time `t >= c`, a lookup
+//! consults, per key, only the update with the greatest epoch `<= t`;
+//! merging strictly-older updates down to their per-key maximum (and
+//! dropping tombstoned keys entirely) preserves exactly that greatest
+//! visible update, so results at `t >= c` are identical before and
+//! after compaction. Reads below `c` are rejected with a typed error
+//! rather than answered wrongly.
+//!
+//! The trace is shared: the owning worker appends and compacts, any
+//! thread may read through a clone of [`TraceHandle`]. `upper` and
+//! `compacted` are atomics so the readability gate never takes the lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Why a point lookup could not be answered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueryError {
+    /// The requested time is below the compaction frontier: the
+    /// per-epoch history needed to answer it has been merged away.
+    Compacted {
+        /// The requested time.
+        time: u64,
+        /// The compaction frontier at rejection.
+        compacted: u64,
+    },
+    /// The frontier has not yet passed the requested time (returned by
+    /// the non-blocking probe; the command plane parks such queries
+    /// instead).
+    NotYetComplete {
+        /// The requested time.
+        time: u64,
+        /// The trace's sealed upper bound at rejection.
+        upper: u64,
+    },
+    /// The key routes to a worker not hosted by this process
+    /// (cross-process query routing is a documented follow-on).
+    NotLocal {
+        /// The global index of the owning worker.
+        owner: usize,
+    },
+    /// The serving plane shut down before the query could be answered.
+    Shutdown,
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::Compacted { time, compacted } => {
+                write!(f, "time {time} is below the compaction frontier {compacted}")
+            }
+            QueryError::NotYetComplete { time, upper } => {
+                write!(f, "time {time} is not yet complete (sealed upper {upper})")
+            }
+            QueryError::NotLocal { owner } => {
+                write!(f, "key routes to non-local worker {owner}")
+            }
+            QueryError::Shutdown => write!(f, "serving plane shut down"),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// One sealed batch of updates covering epochs `[lower, upper)`,
+/// entries sorted by `(key, epoch)` with at most one entry per
+/// `(key, epoch)` (last-write-wins applied at seal time). A `None`
+/// value is a tombstone: the key was deleted at that epoch.
+struct TraceBatch<K, V> {
+    lower: u64,
+    upper: u64,
+    entries: Vec<(K, u64, Option<V>)>,
+}
+
+/// Lock-protected interior: the batch sequence (ordered by `lower`)
+/// plus a free list recycling entry buffers so the steady state of
+/// seal → compact → seal allocates nothing.
+struct TraceInner<K, V> {
+    batches: Vec<TraceBatch<K, V>>,
+    free: Vec<Vec<(K, u64, Option<V>)>>,
+}
+
+struct TraceShared<K, V> {
+    /// Every update at an epoch `< upper` is present; nothing below
+    /// `upper` can still arrive (certified by the input frontier).
+    upper: AtomicU64,
+    /// Reads strictly below this are rejected (history merged away).
+    compacted: AtomicU64,
+    inner: RwLock<TraceInner<K, V>>,
+}
+
+/// A cloneable, thread-safe handle to an arranged trace. The arrange
+/// operator writes through it from the owning worker; any thread may
+/// read (`lookup`) concurrently.
+pub struct TraceHandle<K, V> {
+    shared: Arc<TraceShared<K, V>>,
+}
+
+impl<K, V> Clone for TraceHandle<K, V> {
+    fn clone(&self) -> Self {
+        TraceHandle { shared: self.shared.clone() }
+    }
+}
+
+impl<K: Ord + Clone, V: Clone> Default for TraceHandle<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord + Clone, V: Clone> TraceHandle<K, V> {
+    /// An empty trace: nothing sealed, nothing compacted.
+    pub fn new() -> Self {
+        TraceHandle {
+            shared: Arc::new(TraceShared {
+                upper: AtomicU64::new(0),
+                compacted: AtomicU64::new(0),
+                inner: RwLock::new(TraceInner { batches: Vec::new(), free: Vec::new() }),
+            }),
+        }
+    }
+
+    /// The sealed upper bound: all epochs `< upper` are complete.
+    pub fn upper(&self) -> u64 {
+        self.shared.upper.load(Ordering::Acquire)
+    }
+
+    /// The compaction frontier: reads strictly below are rejected.
+    pub fn compacted(&self) -> u64 {
+        self.shared.compacted.load(Ordering::Acquire)
+    }
+
+    /// True iff a lookup at `time` can be answered now (the frontier
+    /// has passed `time`). This is the query-parking gate.
+    pub fn readable(&self, time: u64) -> bool {
+        self.upper() > time
+    }
+
+    /// Point lookup: the value visible for `key` as of `time` — the
+    /// update with the greatest epoch `<= time`, or `Ok(None)` if the
+    /// key was never written (or last tombstoned) at or before `time`.
+    ///
+    /// Errors rather than guesses: [`QueryError::NotYetComplete`] if
+    /// the frontier has not passed `time`, [`QueryError::Compacted`]
+    /// if `time` predates the compaction frontier.
+    pub fn lookup(&self, key: &K, time: u64) -> Result<Option<V>, QueryError> {
+        let upper = self.upper();
+        if upper <= time {
+            return Err(QueryError::NotYetComplete { time, upper });
+        }
+        let compacted = self.compacted();
+        if time < compacted {
+            return Err(QueryError::Compacted { time, compacted });
+        }
+        let inner = self.shared.inner.read().expect("trace lock poisoned");
+        // Newest batch first: epoch ranges are disjoint, so the first
+        // batch holding an entry for `key` at an epoch `<= time` holds
+        // the greatest such epoch overall.
+        for batch in inner.batches.iter().rev() {
+            if batch.lower > time {
+                continue;
+            }
+            // Upper bound of (key, time) among (key, epoch)-sorted entries.
+            let idx = batch
+                .entries
+                .partition_point(|e| (&e.0, e.1) <= (key, time));
+            if idx > 0 && batch.entries[idx - 1].0 == *key {
+                return Ok(batch.entries[idx - 1].2.clone());
+            }
+        }
+        Ok(None)
+    }
+
+    /// Checks out a recycled entry buffer for the next batch (the
+    /// arrange operator fills it and hands it back via `append`).
+    pub(crate) fn checkout(&self) -> Vec<(K, u64, Option<V>)> {
+        let mut inner = self.shared.inner.write().expect("trace lock poisoned");
+        inner.free.pop().unwrap_or_default()
+    }
+
+    /// Appends a sealed batch covering `[lower, upper)` and publishes
+    /// the new upper bound. `entries` must be sorted by `(key, epoch)`
+    /// with last-write-wins already applied. Called only by the owning
+    /// worker, only when its input frontier has passed `upper`.
+    pub(crate) fn append(&self, lower: u64, upper: u64, entries: Vec<(K, u64, Option<V>)>) {
+        debug_assert!(lower <= upper);
+        {
+            let mut inner = self.shared.inner.write().expect("trace lock poisoned");
+            if entries.is_empty() {
+                // An empty epoch range still advances the frontier;
+                // recycle the buffer rather than recording a batch.
+                inner.free.push(entries);
+            } else {
+                inner.batches.push(TraceBatch { lower, upper, entries });
+            }
+        }
+        // Publish after the batch is visible: readers that observe the
+        // new upper must observe the data it certifies.
+        self.shared.upper.store(upper, Ordering::Release);
+    }
+
+    /// Raises the compaction frontier to `min(frontier, upper)` and
+    /// merges every batch wholly below it into one per-key last-write
+    /// snapshot (tombstoned keys dropped). See the module header for
+    /// why this preserves every readable time `>= frontier`.
+    pub fn allow_compaction(&self, frontier: u64) {
+        let frontier = frontier.min(self.upper());
+        if frontier <= self.compacted() {
+            return;
+        }
+        self.shared.compacted.store(frontier, Ordering::Release);
+        let mut inner = self.shared.inner.write().expect("trace lock poisoned");
+        // Count the prefix of batches wholly below the frontier.
+        let below = inner
+            .batches
+            .iter()
+            .take_while(|b| b.upper <= frontier)
+            .count();
+        if below < 2 {
+            return;
+        }
+        let merged_upper = inner.batches[below - 1].upper;
+        let TraceInner { batches, free } = &mut *inner;
+        let mut merged = free.pop().unwrap_or_default();
+        merged.clear();
+        for batch in batches.drain(..below) {
+            let mut entries = batch.entries;
+            merged.append(&mut entries);
+            free.push(entries);
+        }
+        // (key, epoch) pairs are unique across sealed batches, so an
+        // unstable sort is a total order here.
+        merged.sort_unstable_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
+        // Keep only each key's greatest epoch; drop tombstones — this
+        // is the oldest batch, so nothing older can resurrect them.
+        let mut write = 0;
+        for read in 0..merged.len() {
+            let last_of_key =
+                read + 1 == merged.len() || merged[read + 1].0 != merged[read].0;
+            if last_of_key && merged[read].2.is_some() {
+                merged.swap(write, read);
+                write += 1;
+            }
+        }
+        merged.truncate(write);
+        if merged.is_empty() {
+            free.push(merged);
+        } else {
+            batches.insert(0, TraceBatch { lower: 0, upper: merged_upper, entries: merged });
+        }
+    }
+
+    /// Publishes a new upper bound with no accompanying batch (an
+    /// epoch range that carried no updates still completes).
+    pub(crate) fn advance_upper(&self, upper: u64) {
+        self.shared.upper.store(upper, Ordering::Release);
+    }
+
+    /// Installs a restored snapshot: one batch of per-key latest values
+    /// as of `resume` (entries epoch-stamped `resume`), sealed through
+    /// `resume + 1`. Epoch-level history below the snapshot is gone, so
+    /// the compaction frontier starts at `resume`.
+    pub(crate) fn restore_snapshot(&self, resume: u64, entries: Vec<(K, u64, Option<V>)>) {
+        {
+            let mut inner = self.shared.inner.write().expect("trace lock poisoned");
+            inner.batches.clear();
+            if !entries.is_empty() {
+                inner.batches.push(TraceBatch { lower: 0, upper: resume + 1, entries });
+            }
+        }
+        self.shared.compacted.store(resume, Ordering::Release);
+        self.shared.upper.store(resume + 1, Ordering::Release);
+    }
+
+    /// Number of sealed batches currently held (diagnostics / tests).
+    pub fn batch_count(&self) -> usize {
+        self.shared.inner.read().expect("trace lock poisoned").batches.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seal(trace: &TraceHandle<u64, u64>, lower: u64, upper: u64, mut e: Vec<(u64, u64, Option<u64>)>) {
+        e.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        trace.append(lower, upper, e);
+    }
+
+    #[test]
+    fn lookup_sees_greatest_epoch_at_or_below_time() {
+        let trace = TraceHandle::new();
+        seal(&trace, 0, 2, vec![(7, 1, Some(10))]);
+        seal(&trace, 2, 4, vec![(7, 3, Some(30)), (8, 2, Some(99))]);
+        assert_eq!(trace.lookup(&7, 1), Ok(Some(10)));
+        assert_eq!(trace.lookup(&7, 2), Ok(Some(10)));
+        assert_eq!(trace.lookup(&7, 3), Ok(Some(30)));
+        assert_eq!(trace.lookup(&8, 1), Ok(None));
+        assert_eq!(trace.lookup(&9, 3), Ok(None));
+    }
+
+    #[test]
+    fn lookup_gates_on_upper() {
+        let trace = TraceHandle::<u64, u64>::new();
+        assert_eq!(
+            trace.lookup(&1, 0),
+            Err(QueryError::NotYetComplete { time: 0, upper: 0 })
+        );
+        seal(&trace, 0, 3, vec![(1, 1, Some(5))]);
+        assert!(trace.readable(2));
+        assert!(!trace.readable(3));
+        assert_eq!(
+            trace.lookup(&1, 3),
+            Err(QueryError::NotYetComplete { time: 3, upper: 3 })
+        );
+    }
+
+    #[test]
+    fn tombstones_hide_and_compaction_preserves_visible_values() {
+        let trace = TraceHandle::new();
+        seal(&trace, 0, 2, vec![(1, 1, Some(11)), (2, 1, Some(21))]);
+        seal(&trace, 2, 3, vec![(1, 2, None)]);
+        seal(&trace, 3, 5, vec![(2, 4, Some(24))]);
+        let before: Vec<_> = (2..5).map(|t| (trace.lookup(&1, t), trace.lookup(&2, t))).collect();
+        assert_eq!(trace.lookup(&1, 2), Ok(None)); // tombstoned
+        trace.allow_compaction(3);
+        assert_eq!(trace.compacted(), 3);
+        let after: Vec<_> = (2..5).map(|t| (trace.lookup(&1, t), trace.lookup(&2, t))).collect();
+        assert_eq!(before[0], after[0]);
+        assert_eq!(before, after);
+        // Below the compaction frontier: typed rejection.
+        assert_eq!(
+            trace.lookup(&1, 1),
+            Err(QueryError::Compacted { time: 1, compacted: 3 })
+        );
+        // The merged snapshot collapsed the two below-frontier batches.
+        assert!(trace.batch_count() <= 2);
+    }
+
+    #[test]
+    fn compaction_recycles_buffers() {
+        let trace = TraceHandle::new();
+        for e in 0..8u64 {
+            seal(&trace, e, e + 1, vec![(e % 2, e, Some(e))]);
+        }
+        trace.allow_compaction(8);
+        assert_eq!(trace.batch_count(), 1);
+        assert_eq!(trace.lookup(&0, 7), Ok(Some(6)));
+        assert_eq!(trace.lookup(&1, 7), Ok(Some(7)));
+    }
+}

@@ -1,0 +1,85 @@
+//! The upsert input family: keyed, last-write-wins updates.
+//!
+//! An [`UpsertSession`] layers over [`InputSession`], feeding
+//! `(key, Option<value>)` records — `Some` is an upsert, `None` a
+//! delete. Per key and per epoch the **last** write wins: the arrange
+//! operator seals each epoch by keeping, for every key, only the final
+//! update fed before the epoch closed (feed order is preserved end to
+//! end by the session buffer and the exchange channel's per-sender
+//! FIFO). Everything here is fallible rather than panicking — the serve
+//! command plane makes "input already closed" a runtime condition, not
+//! a programming error.
+
+use crate::dataflow::channels::Data;
+use crate::dataflow::input::InputSession;
+use crate::dataflow::stream::Stream;
+use crate::runtime::RuntimeError;
+use crate::worker::Worker;
+
+/// A keyed input session: upserts and deletes at the current epoch.
+pub struct UpsertSession<K: Data, V: Data> {
+    inner: InputSession<u64, (K, Option<V>)>,
+}
+
+/// Builds an upsert input on `worker`, returning the session and the
+/// stream of keyed updates (feed the stream to
+/// [`arrange`](crate::serve::ArrangeExt::arrange)).
+pub fn upsert_source<K: Data, V: Data>(
+    worker: &mut Worker<u64>,
+) -> (UpsertSession<K, V>, Stream<u64, (K, Option<V>)>) {
+    let (inner, stream) = worker.new_input::<(K, Option<V>)>();
+    (UpsertSession { inner }, stream)
+}
+
+impl<K: Data, V: Data> UpsertSession<K, V> {
+    /// Wraps an existing input session.
+    pub fn wrap(inner: InputSession<u64, (K, Option<V>)>) -> Self {
+        UpsertSession { inner }
+    }
+
+    /// The current epoch.
+    pub fn time(&self) -> u64 {
+        *self.inner.time()
+    }
+
+    /// Sets `key` to `value` at the current epoch.
+    pub fn upsert(&mut self, key: K, value: V) -> Result<(), RuntimeError> {
+        self.inner.try_send((key, Some(value)))
+    }
+
+    /// Deletes `key` at the current epoch.
+    pub fn remove(&mut self, key: K) -> Result<(), RuntimeError> {
+        self.inner.try_send((key, None))
+    }
+
+    /// Applies an update: `Some` upserts, `None` deletes.
+    pub fn update(&mut self, key: K, value: Option<V>) -> Result<(), RuntimeError> {
+        self.inner.try_send((key, value))
+    }
+
+    /// Advances the epoch to `time`, sealing every earlier epoch once
+    /// all peers have done the same. A stale `time` (at or below the
+    /// current epoch) is a no-op — command streams from concurrent
+    /// clients may legitimately repeat advances.
+    pub fn advance_to(&mut self, time: u64) -> Result<(), RuntimeError> {
+        if time <= self.time() {
+            return Ok(());
+        }
+        self.inner.try_advance_to(time)
+    }
+
+    /// Flushes buffered updates without advancing the epoch.
+    pub fn flush(&mut self) -> Result<(), RuntimeError> {
+        self.inner.try_flush()
+    }
+
+    /// Closes the input: flushes and drops the token. Idempotent.
+    pub fn close(&mut self) {
+        self.inner.close();
+    }
+
+    /// True iff the input has been closed.
+    pub fn is_closed(&self) -> bool {
+        self.inner.is_closed()
+    }
+}

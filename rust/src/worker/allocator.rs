@@ -388,6 +388,19 @@ impl Fabric {
         }
     }
 
+    /// Unparks one specific (local) worker thread. Used by the serve
+    /// command plane: a client pushing a command onto worker `index`'s
+    /// ring wakes exactly that worker, so a query arriving at an idle
+    /// cluster is answered without waiting out a park timeout. Safe
+    /// against lost wakeups for the same reason `unpark_peers` is — an
+    /// unpark of a running thread leaves a token its next park consumes.
+    pub fn unpark_worker(&self, index: usize) {
+        if let Some(thread) = self.threads[index].get() {
+            self.stats[index].note_unpark();
+            thread.unpark();
+        }
+    }
+
     /// Claims the send half of channel `(chan, from, to)`, routed by the
     /// destination's locality: an intra-process ring when `to` is hosted
     /// here, a serializing net endpoint otherwise. Called by (local)

@@ -167,6 +167,12 @@ impl<T: Timestamp> Worker<T> {
         }
     }
 
+    /// The shared fabric (peer wakeups, telemetry; the serve plane
+    /// grabs it here to route client unparks at build time).
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
     /// This worker's index.
     pub fn index(&self) -> usize {
         self.scope.index()

@@ -13,9 +13,11 @@
 //! loopback transport (per-process broadcast frames, pooled fan-out
 //! decode; run under the poll backend, the epoll backend, and with the
 //! autotuning governor live on the reactor thread), the tracker fold +
-//! projection, and a full single-worker engine step (input feed, operator
+//! projection, a full single-worker engine step (input feed, operator
 //! chain with whole-batch forwarding, progress exchange, tracker fold,
-//! probe) — through a warmup until capacities stabilize, then asserts a
+//! probe), and the serve command plane (ring-pushed upserts and queries
+//! drained into an upsert→arrange→frontier-gated-lookup dataflow) —
+//! through a warmup until capacities stabilize, then asserts a
 //! measurement window with zero allocations. The engine-step and
 //! cross-process progress loops are additionally pinned WITH event
 //! tracing enabled: observability hooks ride inside the steady state, so
@@ -503,6 +505,70 @@ fn traced_net_progress_decode_loop() {
     assert_eq!(tracer.dropped(), 0, "a drained reactor ring must never overflow");
 }
 
+/// The serving plane's steady state: upserts pushed through the command
+/// ring, swap-drained into the upsert input, exchanged and sealed into
+/// the arrangement's trace by the frontier, and answered back through a
+/// reused response slot — with compaction every epoch keeping the batch
+/// list bounded. The whole command path (push, drain, park, retire,
+/// respond) plus upsert -> arrange -> lookup must allocate nothing once
+/// the ring buffers, staging scratch, and trace free list are warm.
+fn serve_command_loop() {
+    use timestamp_tokens::serve::{
+        upsert_source, ArrangeExt, CommandRing, Query, ResponseSlot, ServeCommand, ServeDriver,
+    };
+
+    const LIVE_KEYS: u64 = 64;
+    let mut worker = Worker::<u64>::new(0, 1, Fabric::new(1));
+    worker.set_progress_flush(Duration::ZERO);
+    worker.set_send_batch(BATCH);
+    let (session, stream) = upsert_source::<u64, u64>(&mut worker);
+    let arranged = stream.arrange_routed("serve", |k: &u64| *k);
+    worker.finalize();
+    let ring = Arc::new(CommandRing::default());
+    let trace = arranged.trace.clone();
+    let mut driver = ServeDriver::new(ring.clone(), session, arranged.trace, None);
+    let slot = ResponseSlot::new();
+
+    let mut t = 0u64;
+    let mut answered = 0u64;
+    assert_reaches_zero_alloc_steady_state("serve command plane", || {
+        // One epoch per iteration: rewrite every live key, advance, query
+        // the just-closed epoch, compact everything below it.
+        for key in 0..LIVE_KEYS {
+            ring.push(ServeCommand::Upsert { key, value: Some(t) });
+        }
+        ring.push(ServeCommand::AdvanceInput { time: t + 1 });
+        // The query parks on arrival (epoch t is not sealed yet) and is
+        // retired by the same frontier advance that seals the batch.
+        ring.push(ServeCommand::Query(Query {
+            key: t % LIVE_KEYS,
+            time: t,
+            tx: slot.clone(),
+        }));
+        ring.push(ServeCommand::AllowCompaction { frontier: t });
+        loop {
+            driver.pump();
+            if let Some(result) = slot.try_take() {
+                assert_eq!(result.expect("sealed time must be readable"), Some(t));
+                answered += 1;
+                break;
+            }
+            worker.step();
+        }
+        t += 1;
+    });
+    assert!(answered > 0);
+    assert!(driver.stats().parked > 0, "queries must exercise the parked path");
+    assert_eq!(driver.pending(), 0);
+    assert!(trace.batch_count() <= 3, "compaction must bound the batch list");
+    // Teardown outside the window: shut down and drain to completion.
+    ring.push(ServeCommand::Shutdown);
+    while !worker.is_complete() {
+        driver.pump();
+        worker.step();
+    }
+}
+
 /// [`full_step_loop`] with checkpointing ENABLED: a recovery context logs
 /// every stateful update (a rolling wordcount over a bounded vocabulary)
 /// and the step loop drives continuous sealing against the frontier. The
@@ -569,4 +635,5 @@ fn steady_state_data_path_performs_zero_allocations() {
     traced_full_step_loop();
     traced_net_progress_decode_loop();
     checkpointed_step_loop();
+    serve_command_loop();
 }

@@ -131,3 +131,39 @@ fn windowed_average_dataflow_on_xla_backend() {
     });
     assert_eq!(got, vec![(10, 3.0), (20, 10.0)]);
 }
+
+#[test]
+fn end_of_stream_flushes_final_partial_window_on_xla_backend() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use timestamp_tokens::dataflow::probe::ProbeExt;
+    use timestamp_tokens::operators::window::WindowAverageExt;
+    use timestamp_tokens::worker::execute::execute_single;
+
+    // The stream closes while the last window is partial; the empty input
+    // frontier must retire it through the XLA data plane exactly as the
+    // native backend does (same scenario as the native end-of-stream unit
+    // test, results must agree).
+    let got = execute_single::<u64, _, _>(|worker| {
+        let (mut input, stream) = worker.new_input::<u64>();
+        let out = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let out2 = out.clone();
+        let backend = Box::new(XlaWindowBackend::new("artifacts").unwrap());
+        let probe = stream.window_average(10, backend).probe_with(move |t, data| {
+            for d in data {
+                out2.borrow_mut().push((*t, *d));
+            }
+        });
+        for (t, v) in [(5u64, 6u64), (21, 4), (23, 8)] {
+            input.advance_to(t);
+            input.send(v);
+        }
+        input.close();
+        worker.step_while(|| !probe.done());
+        let result = out.borrow().clone();
+        result
+    });
+    assert_eq!(got, vec![(10, 6.0), (30, 6.0)]);
+}

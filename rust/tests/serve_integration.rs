@@ -1,0 +1,307 @@
+//! Integration: the interactive serving plane end to end — concurrent
+//! clients upserting, advancing, and querying against live workers.
+//!
+//! Pins the three serving guarantees against a sequential oracle:
+//!
+//! * **Exactness** — every frontier-gated point lookup returns exactly
+//!   what a sequential map-with-history would (last write wins within an
+//!   epoch, tombstones delete, gaps fall back to the previous epoch),
+//!   single-process and as a 2 process × 2 worker cluster over BOTH the
+//!   reactor TCP and shared-memory transports.
+//! * **Gating** — a query for a time the frontier has not passed is
+//!   parked, never answered early (`query_timeout` returns `None`), and
+//!   a time below the compaction frontier is rejected typed.
+//! * **Compaction invariance** — answers at readable times are identical
+//!   before and after `allow_compaction` below the query time.
+//!
+//! Plus recovery: a checkpointed serve run restores its arranged state as
+//! a consistent epoch cut, readable at and above the resume epoch and
+//! typed-rejected below it.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use timestamp_tokens::config::{Config, NetOptions, NetTransport};
+use timestamp_tokens::serve::{serve_worker, QueryError, ServeClient, ServePlane, ServeStats};
+use timestamp_tokens::testing::free_loopback_addresses as free_addresses;
+use timestamp_tokens::worker::execute::{execute, execute_cluster};
+
+const KEYS: u64 = 48;
+const EPOCHS: u64 = 6;
+
+/// Identity route: key `k` lives on worker `k % peers`, so the test can
+/// reason about ownership without hashing.
+fn ident(key: &u64) -> u64 {
+    *key
+}
+
+/// The deterministic update script for `(key, epoch)`:
+/// `None` — no update this epoch (the oracle falls back to the previous
+/// one); `Some(None)` — delete; `Some(Some(v))` — upsert to `v`.
+fn update_at(key: u64, epoch: u64) -> Option<Option<u64>> {
+    if (key + epoch) % 5 == 0 {
+        return None;
+    }
+    if (key + epoch) % 7 == 0 {
+        return Some(None);
+    }
+    Some(Some(key * 1_000 + epoch))
+}
+
+/// The sequential oracle: the value visible for `key` as of `time`.
+fn oracle(key: u64, time: u64) -> Option<u64> {
+    for epoch in (0..=time.min(EPOCHS - 1)).rev() {
+        if let Some(value) = update_at(key, epoch) {
+            return value;
+        }
+    }
+    None
+}
+
+/// Feeds one `(key, epoch)` update through `client`, exercising
+/// last-write-wins within the epoch on a third of the keys: a garbage
+/// value is written first and MUST be overwritten by the real one.
+fn feed(client: &ServeClient<u64, u64>, key: u64, epoch: u64) {
+    let Some(value) = update_at(key, epoch) else {
+        return;
+    };
+    if (key + epoch) % 3 == 0 {
+        client.update(key, Some(u64::MAX)).expect("local key");
+    }
+    client.update(key, value).expect("local key");
+}
+
+#[test]
+fn serve_single_process_oracle_gating_and_compaction() {
+    const WORKERS: usize = 2;
+    let plane = ServePlane::<u64, u64>::new_single(WORKERS, ident);
+    let worker_plane = plane.clone();
+    let client_thread = std::thread::spawn(move || {
+        plane.wait_ready();
+        // Frontier gating: nothing has advanced, so a query at time 0
+        // must park rather than answer — the timeout elapses. (Its slot
+        // is private to this probe client and never reused.)
+        let probe = plane.client();
+        assert!(
+            probe.query_timeout(0, 0, Duration::from_millis(200)).is_none(),
+            "query answered before the frontier passed its time"
+        );
+        let client = plane.client();
+        for epoch in 0..EPOCHS {
+            for key in 0..KEYS {
+                feed(&client, key, epoch);
+            }
+            client.advance_to(epoch + 1);
+        }
+        // Exactness at sampled times, every key.
+        for time in [0, EPOCHS / 2, EPOCHS - 1] {
+            for key in 0..KEYS {
+                assert_eq!(
+                    client.query(key, time).unwrap(),
+                    oracle(key, time),
+                    "key {key} at time {time}"
+                );
+            }
+        }
+        // Compaction invariance: answers at t >= c are identical before
+        // and after allowing compaction below them.
+        let c = EPOCHS - 2;
+        let before: Vec<_> = (0..KEYS).map(|k| client.query(k, c).unwrap()).collect();
+        client.allow_compaction(c);
+        let after: Vec<_> = (0..KEYS).map(|k| client.query(k, c).unwrap()).collect();
+        assert_eq!(before, after, "compaction changed answers at t >= c");
+        // Below the compaction frontier: typed rejection once the worker
+        // has applied the compaction command (poll — it is asynchronous).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match client.query(0, c - 1) {
+                Err(QueryError::Compacted { .. }) => break,
+                Ok(_) if Instant::now() < deadline => std::thread::yield_now(),
+                other => panic!("expected Compacted below the frontier, got {other:?}"),
+            }
+        }
+        client.shutdown();
+    });
+    let stats = execute::<u64, _, _>(
+        Config { workers: WORKERS, pin_workers: false, ..Config::default() },
+        move |worker| serve_worker::<u64, u64>(worker, &worker_plane),
+    );
+    client_thread.join().expect("client thread");
+    let queries: u64 = stats.iter().map(|s| s.queries).sum();
+    let upserts: u64 = stats.iter().map(|s| s.upserts).sum();
+    assert!(queries > 0, "no queries answered");
+    assert!(upserts > 0, "no upserts applied");
+    // The gating probe parked at least one query.
+    assert!(stats.iter().map(|s| s.parked).sum::<u64>() > 0, "gating probe never parked");
+}
+
+/// A 2 process × 2 worker serving cluster (threads as processes, real
+/// transports): each process feeds and queries the keys its workers own;
+/// every answer must match the sequential oracle, compaction included.
+fn serve_cluster_matches_oracle(net: NetOptions) -> Vec<ServeStats> {
+    const PROCESSES: usize = 2;
+    const LOCAL: usize = 2;
+    let peers = PROCESSES * LOCAL;
+    let addresses = free_addresses(PROCESSES);
+    let mut handles = Vec::new();
+    for p in 0..PROCESSES {
+        let addresses = addresses.clone();
+        handles.push(std::thread::spawn(move || {
+            let plane = ServePlane::<u64, u64>::new(peers, p * LOCAL, LOCAL, ident);
+            let worker_plane = plane.clone();
+            let client_thread = std::thread::spawn(move || {
+                plane.wait_ready();
+                let client = plane.client();
+                let local = |k: &u64| plane.is_local(plane.owner_of(k));
+                for epoch in 0..EPOCHS {
+                    for key in (0..KEYS).filter(|k| local(k)) {
+                        feed(&client, key, epoch);
+                    }
+                    client.advance_to(epoch + 1);
+                }
+                for time in [1, EPOCHS - 1] {
+                    for key in (0..KEYS).filter(|k| local(k)) {
+                        assert_eq!(
+                            client.query(key, time).unwrap(),
+                            oracle(key, time),
+                            "key {key} at time {time} (process {p})"
+                        );
+                    }
+                }
+                // Keys owned by the other process: typed, not wrong.
+                let foreign = (0..KEYS).find(|k| !local(k)).expect("foreign key");
+                assert!(matches!(
+                    client.query(foreign, 0),
+                    Err(QueryError::NotLocal { .. })
+                ));
+                // Compaction below the query time changes nothing.
+                let before: Vec<_> = (0..KEYS)
+                    .filter(|k| local(k))
+                    .map(|k| client.query(k, EPOCHS - 1).unwrap())
+                    .collect();
+                client.allow_compaction(EPOCHS - 2);
+                let after: Vec<_> = (0..KEYS)
+                    .filter(|k| local(k))
+                    .map(|k| client.query(k, EPOCHS - 1).unwrap())
+                    .collect();
+                assert_eq!(before, after, "compaction changed answers (process {p})");
+                client.shutdown();
+            });
+            let config = Config {
+                workers: LOCAL,
+                pin_workers: false,
+                processes: PROCESSES,
+                process_index: p,
+                addresses,
+                net_transport: net.transport,
+                reactor_backend: net.reactor,
+                parking: net.parking,
+                autotune: net.autotune,
+                ..Config::default()
+            };
+            let stats =
+                execute_cluster::<u64, _, _>(config, move |worker| {
+                    serve_worker::<u64, u64>(worker, &worker_plane)
+                })
+                .expect("cluster bootstrap");
+            client_thread.join().expect("client thread");
+            stats
+        }));
+    }
+    let stats: Vec<ServeStats> =
+        handles.into_iter().flat_map(|h| h.join().expect("process")).collect();
+    assert_eq!(stats.len(), peers);
+    assert!(stats.iter().map(|s| s.queries).sum::<u64>() > 0, "no queries answered");
+    stats
+}
+
+#[test]
+fn serve_cluster_2x2_tcp_matches_oracle() {
+    serve_cluster_matches_oracle(NetOptions::with_transport(NetTransport::Tcp));
+}
+
+#[test]
+fn serve_cluster_2x2_shm_matches_oracle() {
+    serve_cluster_matches_oracle(NetOptions::with_transport(NetTransport::Shm));
+}
+
+/// Recovery: a checkpointed serve run restores its arranged state as one
+/// consistent epoch cut — every key readable at (and above) the resume
+/// epoch with the value it had at the cut, and history below the cut
+/// rejected typed (it was legitimately compacted into the snapshot).
+#[test]
+fn serve_recovery_restores_arranged_state() {
+    const WORKERS: usize = 2;
+    const FED: u64 = 8;
+    let dir = std::env::temp_dir().join(format!("ttd-serve-recover-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().expect("utf-8 temp path").to_string();
+
+    // Pass 1: feed every key every epoch (value encodes the epoch) with
+    // checkpointing on, then shut down cleanly.
+    {
+        let plane = ServePlane::<u64, u64>::new_single(WORKERS, ident);
+        let worker_plane = plane.clone();
+        let client_thread = std::thread::spawn(move || {
+            plane.wait_ready();
+            let client = plane.client();
+            for epoch in 0..FED {
+                for key in 0..KEYS {
+                    client.update(key, Some(key * 1_000 + epoch)).expect("local key");
+                }
+                client.advance_to(epoch + 1);
+            }
+            for key in 0..KEYS {
+                assert_eq!(client.query(key, FED - 1).unwrap(), Some(key * 1_000 + FED - 1));
+            }
+            client.shutdown();
+        });
+        let config = Config {
+            workers: WORKERS,
+            pin_workers: false,
+            checkpoint_dir: Some(dir_s.clone()),
+            checkpoint_interval: 2,
+            ..Config::default()
+        };
+        execute::<u64, _, _>(config, move |worker| serve_worker::<u64, u64>(worker, &worker_plane));
+        client_thread.join().expect("feeding client");
+    }
+
+    // Pass 2: recover. No replay source here, so the serving state IS the
+    // snapshot; advancing the (restored) input makes it readable.
+    {
+        let plane = ServePlane::<u64, u64>::new_single(WORKERS, ident);
+        let worker_plane = plane.clone();
+        let client_thread = std::thread::spawn(move || {
+            plane.wait_ready();
+            let client = plane.client();
+            client.advance_to(32);
+            let values: Vec<u64> = (0..KEYS)
+                .map(|k| client.query(k, 31).unwrap().expect("restored key missing"))
+                .collect();
+            // All keys were written every epoch, so the snapshot must be
+            // one consistent cut: the same epoch for every key.
+            let cut = values[0] % 1_000;
+            assert!(cut >= 1 && cut < FED, "implausible resume cut {cut}");
+            for (k, v) in values.iter().enumerate() {
+                assert_eq!(*v, k as u64 * 1_000 + cut, "snapshot is not a consistent cut");
+            }
+            // Epoch-level history below the snapshot is gone — typed.
+            match client.query(0, 0) {
+                Err(QueryError::Compacted { .. }) => {}
+                other => panic!("expected Compacted below the restored cut, got {other:?}"),
+            }
+            client.shutdown();
+        });
+        let config = Config {
+            workers: WORKERS,
+            pin_workers: false,
+            checkpoint_dir: Some(dir_s),
+            checkpoint_interval: 0,
+            recover: true,
+            ..Config::default()
+        };
+        execute::<u64, _, _>(config, move |worker| serve_worker::<u64, u64>(worker, &worker_plane));
+        client_thread.join().expect("recovery client");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
